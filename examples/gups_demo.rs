@@ -1,0 +1,55 @@
+//! GUPS on physically addressed trees (Figure 4 left, interactive).
+//!
+//! Runs real GUPS over a contiguous table and a tree table at a
+//! RAM-friendly size, then prints the paper-scale simulated ratios for
+//! the full 4–64 GB sweep.
+//!
+//! ```sh
+//! cargo run --release --example gups_demo
+//! ```
+
+use std::time::Instant;
+
+use nvm::coordinator::experiments::{fig4_gups, ExpConfig};
+use nvm::pmem::BlockAllocator;
+use nvm::trees::TreeArray;
+use nvm::workloads::gups;
+
+fn main() -> anyhow::Result<()> {
+    // Real execution at 256 MB.
+    let bytes = 256usize << 20;
+    let n = bytes / 8;
+    let ops = 4_000_000u64;
+    let alloc = BlockAllocator::with_capacity_bytes(bytes + (16 << 20))?;
+
+    let mut vec_table = vec![0u64; n];
+    let t0 = Instant::now();
+    let c1 = gups::gups_vec(&mut vec_table, ops, 11);
+    let vec_t = t0.elapsed();
+    drop(vec_table);
+
+    let mut tree_table: TreeArray<u64> = TreeArray::new(&alloc, n)?;
+    println!(
+        "tree table: {} entries, depth {}, {} leaves",
+        n,
+        tree_table.depth(),
+        tree_table.nleaves()
+    );
+    let t1 = Instant::now();
+    let c2 = gups::gups_tree_naive(&mut tree_table, ops, 11);
+    let tree_t = t1.elapsed();
+    anyhow::ensure!(c1 == c2, "checksum mismatch: layouts diverged");
+
+    println!(
+        "real 256MB GUPS: vec {:.1} ns/op, tree {:.1} ns/op ({:.2}x software walk cost)",
+        vec_t.as_nanos() as f64 / ops as f64,
+        tree_t.as_nanos() as f64 / ops as f64,
+        tree_t.as_secs_f64() / vec_t.as_secs_f64()
+    );
+
+    // Paper-scale simulation.
+    println!("\nsimulated paper-scale ratios (tree-physical / array-virtual):");
+    let t = fig4_gups(&ExpConfig::quick());
+    println!("{t}");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Split stacks in action (paper §3.1 / Figure 3, interactive).
+//!
+//! Shows the three costs the paper discusses: the per-call check (via
+//! the recursive-Fibonacci microbenchmark, real execution), the rare
+//! block-overflow slow path, and the per-benchmark overhead model.
+//!
+//! ```sh
+//! cargo run --release --example stack_splitting
+//! ```
+
+use std::time::Instant;
+
+use nvm::coordinator::experiments::{fig3, ExpConfig};
+use nvm::pmem::BlockAllocator;
+use nvm::stack::{CallTrace, SplitStack, TraceRunner};
+use nvm::testutil::Rng;
+use nvm::workloads::fib;
+
+fn main() -> anyhow::Result<()> {
+    let alloc = BlockAllocator::new(32 * 1024, 1 << 14)?;
+
+    // 1. Deep recursion across many stack blocks, frames intact.
+    let mut s = SplitStack::new(&alloc)?;
+    for d in 0..100_000u64 {
+        s.call(160, &d.to_le_bytes())?;
+    }
+    let st = s.stats();
+    println!(
+        "100k-deep recursion: {} blocks chained (max frame payload {} B)",
+        st.blocks_peak,
+        s.max_frame()
+    );
+    drop(s);
+
+    // 2. The pessimistic microbenchmark: fib(28), real wallclock.
+    let n = 28;
+    let t0 = Instant::now();
+    let native = fib::fib_native(n);
+    let native_t = t0.elapsed();
+    let t1 = Instant::now();
+    let (split, calls) = fib::fib_split_fresh(&alloc, n)?;
+    let split_t = t1.elapsed();
+    anyhow::ensure!(native == split, "fib mismatch");
+    println!(
+        "fib({n}) = {native}: native {:.1} ms, split-stack {:.1} ms ({} calls, {:.1} ns/call overhead)",
+        native_t.as_secs_f64() * 1e3,
+        split_t.as_secs_f64() * 1e3,
+        calls,
+        (split_t.as_secs_f64() - native_t.as_secs_f64()) * 1e9 / calls as f64
+    );
+
+    // 3. Overflow behaviour on a realistic call mix.
+    let mut rng = Rng::new(5);
+    let trace = CallTrace::generate(&mut rng, 100_000, 256, 0.5);
+    let stats = TraceRunner::run_split(&trace, &alloc)?;
+    println!(
+        "replayed {} calls: {} overflows ({:.4}% hit the slow path)",
+        stats.calls,
+        stats.overflows,
+        stats.overflows as f64 / stats.calls as f64 * 100.0
+    );
+
+    // 4. The Figure 3 model across the suites.
+    println!("\nFigure 3 overhead model:");
+    let t = fig3(&ExpConfig::quick());
+    println!("{t}");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! The paper's Table 1, live: all four virtual-memory functions
+//! provided **without address translation**.
+//!
+//! | VM function | replacement demonstrated here |
+//! |---|---|
+//! | Protection | per-block MPU-style [`ProtectionTable`] + domains |
+//! | Relocation / Migration | [`Relocator`] + tree-leaf migration |
+//! | Swapping | application-controlled [`SwapPool`] |
+//! | Contiguity | [`TreeArray`] + split stacks (see other examples) |
+//!
+//! ```sh
+//! cargo run --release --example table1_vm_functions
+//! ```
+
+use nvm::pmem::{
+    BlockAllocator, CheckedMem, Perms, ProtectionDomain, ProtectionTable, Relocator, SwapPool,
+};
+use nvm::trees::TreeArray;
+
+fn main() -> anyhow::Result<()> {
+    let alloc = BlockAllocator::with_capacity_bytes(16 << 20)?;
+    println!("pool: {} x {} KB blocks\n", alloc.capacity(), alloc.block_size() >> 10);
+
+    // --- Protection: domains cannot touch each other's blocks.
+    let table = ProtectionTable::new(alloc.capacity());
+    let alice = CheckedMem::new(&alloc, &table, ProtectionDomain(1));
+    let bob = CheckedMem::new(&alloc, &table, ProtectionDomain(2));
+    let secret = alice.alloc(Perms::RW)?;
+    alice.write(secret, 0, b"alice's data")?;
+    let mut buf = [0u8; 12];
+    let denied = bob.read(secret, 0, &mut buf).is_err();
+    println!("[protection] bob reading alice's block -> denied: {denied}");
+    assert!(denied);
+    alice.read(secret, 0, &mut buf)?;
+    println!("[protection] alice reads back: {:?}\n", std::str::from_utf8(&buf).unwrap());
+
+    // --- Relocation: move a block; stale ids resolve via forwarding.
+    let reloc = Relocator::new(&alloc);
+    let old_id = secret;
+    table.revoke(old_id)?; // kernel reclaims before moving
+    let new_id = reloc.migrate(old_id)?;
+    println!("[relocation] {old_id:?} migrated to {new_id:?}; resolve({old_id:?}) = {:?}", reloc.resolve(old_id));
+    let mut moved = [0u8; 12];
+    alloc.read(reloc.resolve(old_id), 0, &mut moved)?;
+    assert_eq!(&moved, b"alice's data");
+    println!("[relocation] contents intact after move\n");
+
+    // --- Relocation, tree-native: migrating a leaf patches one pointer.
+    let n = 100_000usize;
+    let mut arr: TreeArray<f32> = TreeArray::new(&alloc, n)?;
+    for i in (0..n).step_by(97) {
+        arr.set(i, i as f32)?;
+    }
+    let before = arr.to_vec();
+    for leaf in 0..arr.nleaves() {
+        arr.migrate_leaf(leaf)?;
+    }
+    assert_eq!(arr.to_vec(), before);
+    println!("[relocation] migrated all {} leaves of a {}-element tree; array unchanged\n", arr.nleaves(), n);
+
+    // --- Swapping: application-controlled evict/fault.
+    let swap = SwapPool::anonymous(&alloc)?;
+    let cold = alloc.alloc()?;
+    alloc.write(cold, 0, b"cold data")?;
+    let live_before = alloc.stats().allocated;
+    let slot = swap.evict(cold)?;
+    println!(
+        "[swapping] evicted block to disk: {} -> {} physical blocks live",
+        live_before,
+        alloc.stats().allocated
+    );
+    let back = swap.fault(slot)?;
+    let mut cold_buf = [0u8; 9];
+    alloc.read(back, 0, &mut cold_buf)?;
+    assert_eq!(&cold_buf, b"cold data");
+    println!("[swapping] faulted back into {back:?}: {:?}", std::str::from_utf8(&cold_buf).unwrap());
+    println!("[swapping] stats: {:?}\n", swap.stats());
+
+    // --- Contiguity: covered by TreeArray above and the quickstart /
+    //     stack_splitting examples.
+    println!("all four Table 1 functions demonstrated without address translation ✓");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT compile path: lower every L2 model variant to HLO *text*.
+
+Run once by `make artifacts`; the Rust runtime
+(`rust/src/runtime/pjrt.rs`) loads the text with
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes -- Python never runs on the request path.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Artifact registry: name -> (fn, example arg specs).
+# Shapes here are the compiled-executable shapes; the Rust coordinator
+# batches its workloads to these (padding tail blocks) and loops for
+# larger datasets. Names are parsed by rust/src/runtime/artifacts.rs --
+# keep the `<name>.hlo.txt` scheme in sync.
+BELE = model.BLOCK_ELEMS  # 8192 f32 = 32 KB, the paper's block size
+
+VARIANTS = {
+    # Figure 5 / E2E: Black-Scholes over both layouts, 256 blocks = 8 MB
+    # per executable invocation per operand.
+    "bs_blocked_256x8192": (
+        model.bs_blocked,
+        [spec((256, BELE))] * 3 + [spec(()), spec(())],
+    ),
+    "bs_contig_2097152": (
+        model.bs_contig,
+        [spec((256 * BELE,))] * 3 + [spec(()), spec(())],
+    ),
+    # Smaller variant for request-sized batches (1 block) used by the
+    # batcher's latency path and the quickstart example.
+    "bs_blocked_1x8192": (
+        model.bs_blocked,
+        [spec((1, BELE))] * 3 + [spec(()), spec(())],
+    ),
+    "bs_greeks_blocked_16x8192": (
+        model.bs_greeks_blocked,
+        [spec((16, BELE))] * 3 + [spec(()), spec(())],
+    ),
+    # Figure 4 compute path: one GUPS round, 1M-entry table, 4096 updates.
+    "gups_1048576_4096": (
+        model.gups_step,
+        [spec((1 << 20,), I32), spec((4096,), I32), spec((4096,), I32)],
+    ),
+    # Naive arrays-as-trees random access as an artifact.
+    "tree_gather_64x8192_4096": (
+        model.tree_gather,
+        [spec((64, BELE)), spec((4096,), I32)],
+    ),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, args) in sorted(VARIANTS.items()):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg_sig = ";".join(
+            f"{a.dtype}[{','.join(str(d) for d in a.shape)}]" for a in args
+        )
+        manifest.append(f"{name} {arg_sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", nargs="*", help="subset of variant names")
+    args = p.parse_args()
+    build(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

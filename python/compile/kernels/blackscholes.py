@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: tiled Black-Scholes pricing.
+
+The tile size is the paper's 32 KB physical block: 8192 f32 elements. One
+grid step prices one block, so the BlockSpec index map plays exactly the
+role of the arrays-as-trees indirection layer (DESIGN.md
+SS-Hardware-Adaptation): grid step `i` -> leaf block `i`, resident in VMEM
+for the whole step.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and numerics are validated through this path. On a real TPU
+the same kernel tiles HBM->VMEM at 32 KB per operand (5 operands in flight
+x 32 KB = 160 KB << 16 MB VMEM, leaving room for >16-deep double
+buffering); the math is pure VPU elementwise work, so the roofline is the
+HBM stream bandwidth, identical to the contiguous layout -- the paper's
+zero-overhead claim for block-tiled compute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import erf_approx
+
+# 32 KB block / 4-byte f32 = 8192 elements: the paper's allocation unit.
+BLOCK_ELEMS = 8192
+
+SQRT2 = 1.4142135623730951
+
+
+def _bs_kernel(rate_ref, vol_ref, spot_ref, strike_ref, tmat_ref,
+               call_ref, put_ref):
+    """Price one 32 KB block of options (elementwise, VPU-shaped)."""
+    spot = spot_ref[...]
+    strike = strike_ref[...]
+    tmat = tmat_ref[...]
+    rate = rate_ref[0]
+    vol = vol_ref[0]
+
+    sqrt_t = jnp.sqrt(tmat)
+    sig_t = vol * sqrt_t
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * tmat) / sig_t
+    d2 = d1 - sig_t
+    disc = jnp.exp(-rate * tmat)
+
+    def cdf(x):
+        # erf_approx, not jax.lax.erf: artifacts must avoid the `erf`
+        # HLO opcode (unknown to the pinned xla_extension 0.5.1 parser).
+        return 0.5 * (1.0 + erf_approx(x / SQRT2))
+
+    call_ref[...] = spot * cdf(d1) - strike * disc * cdf(d2)
+    put_ref[...] = strike * disc * cdf(-d2) - spot * cdf(-d1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems", "blocks_per_step"))
+def blackscholes_blocked(spot, strike, tmat, rate, vol,
+                         block_elems=BLOCK_ELEMS, blocks_per_step=1):
+    """Blocked (physically addressed) layout: inputs are [nblocks, bele].
+
+    Each leaf block of the arrays-as-trees structure is one grid step
+    (`blocks_per_step=1`, the TPU tiling); no contiguity is assumed
+    across blocks, mirroring the Rust-side `trees::TreeArray` leaf layout
+    byte-for-byte.
+
+    `blocks_per_step` widens the tile: `blocks_per_step=nblocks` lowers
+    to a single fused grid step, which is how the CPU artifacts are
+    compiled (EXPERIMENTS.md §Perf: interpret-mode grid loops pay a full
+    array dynamic-update-slice per step — 15x wall-clock at 256 steps —
+    while on TPU the per-block grid is what double-buffers HBM->VMEM).
+    """
+    nblocks, bele = spot.shape
+    assert bele == block_elems, (bele, block_elems)
+    assert nblocks % blocks_per_step == 0, (nblocks, blocks_per_step)
+    grid = (nblocks // blocks_per_step,)
+    data_spec = pl.BlockSpec((blocks_per_step, bele), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = jax.ShapeDtypeStruct((nblocks, bele), spot.dtype)
+    call, put = pl.pallas_call(
+        _bs_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, data_spec, data_spec, data_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(rate.reshape(1), vol.reshape(1), spot, strike, tmat)
+    return call, put
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems",))
+def blackscholes_contig(spot, strike, tmat, rate, vol,
+                        block_elems=BLOCK_ELEMS):
+    """Contiguous (virtual memory) layout: inputs are flat [n].
+
+    Same kernel, tiled over a flat array -- the traditional large-malloc
+    baseline the paper compares against. n must be a multiple of the block
+    size (the Rust coordinator pads the tail block).
+    """
+    (n,) = spot.shape
+    assert n % block_elems == 0, (n, block_elems)
+    grid = (n // block_elems,)
+    data_spec = pl.BlockSpec((block_elems,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = jax.ShapeDtypeStruct((n,), spot.dtype)
+    call, put = pl.pallas_call(
+        _bs_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, data_spec, data_spec, data_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(rate.reshape(1), vol.reshape(1), spot, strike, tmat)
+    return call, put

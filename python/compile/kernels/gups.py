@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: GUPS update-value computation.
+
+GUPS (giga-updates-per-second) performs `table[idx] ^= key` at random
+indices. The gather + xor half is the kernel (it is the part with data
+reuse to tile); the scatter half stays in the L2 jnp model
+(`model.gups_step`) where XLA lowers it to a native scatter in the same HLO
+module -- Pallas interpret-mode has no scatter primitive worth hand-rolling
+for an elementwise xor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gups_kernel(table_ref, idx_ref, keys_ref, out_ref):
+    idx = idx_ref[...]
+    table = table_ref[...]
+    out_ref[...] = table[idx] ^ keys_ref[...]
+
+
+@jax.jit
+def gups_update_vals(table, idx, keys):
+    """Compute the xor-updated values for one GUPS step.
+
+    Args:
+      table: int32[n] update table.
+      idx:   int32[m] indices into table.
+      keys:  int32[m] xor keys.
+
+    Returns:
+      int32[m] new values (table[idx] ^ keys).
+    """
+    (n,) = table.shape
+    (m,) = idx.shape
+    return pl.pallas_call(
+        _gups_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), table.dtype),
+        interpret=True,
+    )(table, idx, keys)

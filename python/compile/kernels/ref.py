@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` counterpart to float tolerance under pytest
+(`python/tests/`). They are also the "contiguous array" compute baseline for
+the blocked (physically addressed) layouts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+SQRT2 = 1.4142135623730951
+
+
+def erf_approx(x):
+    """erf via Abramowitz-Stegun 7.1.26 (|error| <= 1.5e-7).
+
+    Used instead of `jax.lax.erf` in every *exported* computation: the
+    pinned xla_extension 0.5.1 HLO parser predates the `erf` opcode, so
+    artifacts must lower to elementary ops only. The Rust scalar
+    reference (`workloads::blackscholes::erf`) uses the same polynomial,
+    keeping all three implementations bit-comparable to ~1e-7.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = (
+        ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+        + 0.254829592
+    ) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def norm_cdf(x):
+    """Standard normal CDF via erf (matches the kernel's formulation)."""
+    return 0.5 * (1.0 + erf_approx(x / SQRT2))
+
+
+def blackscholes_ref(spot, strike, tmat, rate, vol):
+    """Black-Scholes European call/put prices, elementwise.
+
+    Args:
+      spot, strike, tmat: arrays of identical shape (any rank).
+      rate, vol: scalars (python float or 0-d/1-d array broadcastable).
+
+    Returns:
+      (call, put) arrays with the same shape as `spot`.
+    """
+    rate = jnp.asarray(rate, dtype=spot.dtype).reshape(())
+    vol = jnp.asarray(vol, dtype=spot.dtype).reshape(())
+    sqrt_t = jnp.sqrt(tmat)
+    sig_t = vol * sqrt_t
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * tmat) / sig_t
+    d2 = d1 - sig_t
+    disc = jnp.exp(-rate * tmat)
+    call = spot * norm_cdf(d1) - strike * disc * norm_cdf(d2)
+    put = strike * disc * norm_cdf(-d2) - spot * norm_cdf(-d1)
+    return call, put
+
+
+def gups_ref(table, idx, keys):
+    """One GUPS step: table[idx] ^= keys (last write wins on duplicates).
+
+    Args:
+      table: int32[n] update table.
+      idx:   int32[m] random indices into `table` (in range).
+      keys:  int32[m] xor keys.
+
+    Returns:
+      updated int32[n] table.
+    """
+    vals = table[idx] ^ keys
+    return table.at[idx].set(vals)
+
+
+def tree_gather_ref(leaves, idx):
+    """Naive arrays-as-trees access: flat index -> (block, offset) -> leaf.
+
+    This is the software page-table walk of the paper's Figure 1: the leaf
+    table `leaves[nblocks, bele]` is the depth-1 indirection layer, and each
+    access splits a flat element index into (indirection slot, offset).
+
+    Args:
+      leaves: f32[nblocks, bele] leaf blocks.
+      idx:    int32[m] flat element indices (< nblocks*bele).
+
+    Returns:
+      f32[m] gathered elements.
+    """
+    bele = leaves.shape[1]
+    block = idx // bele
+    off = idx % bele
+    return leaves[block, off]

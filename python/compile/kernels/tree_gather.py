@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: arrays-as-trees gather (the software page-table walk).
+
+`tree_gather` is the naive tree access of the paper's Figure 1/2 expressed
+as a kernel: every flat element index is split into (indirection slot,
+offset) and resolved through the leaf table. This is the access pattern the
+paper's Iterator optimization amortizes away; the kernel exists so the
+GUPS-style random-access path can run through the AOT artifact with the
+*same* addressing logic the Rust `trees::TreeArray` uses.
+
+The whole leaf table is mapped into the grid step (the random gather has no
+exploitable block structure -- precisely the paper's "inherently
+unpredictable" case). On TPU this would want the leaf table HBM-resident
+with a gather custom lowering; interpret=True keeps it runnable on CPU
+PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_gather_kernel(leaves_ref, idx_ref, out_ref, *, bele):
+    idx = idx_ref[...]
+    block = idx // bele
+    off = idx % bele
+    leaves = leaves_ref[...]
+    out_ref[...] = leaves[block, off]
+
+
+@jax.jit
+def tree_gather(leaves, idx):
+    """Gather elements from depth-1 tree leaves by flat index.
+
+    Args:
+      leaves: f32[nblocks, bele] leaf blocks (bele = 8192 for 32 KB blocks).
+      idx:    int32[m] flat element indices.
+
+    Returns:
+      f32[m] gathered values.
+    """
+    nblocks, bele = leaves.shape
+    (m,) = idx.shape
+    kernel = functools.partial(_tree_gather_kernel, bele=bele)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((nblocks, bele), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), leaves.dtype),
+        interpret=True,
+    )(leaves, idx)

@@ -1,0 +1,92 @@
+"""L2: JAX compute graphs over the paper's two memory layouts.
+
+Each public function here is one AOT artifact (`aot.py` lowers them to HLO
+text). They call the L1 Pallas kernels so everything lowers into a single
+HLO module; Python never runs at serving time.
+
+Layouts:
+  contiguous  -- flat [n] arrays, the traditional virtual-memory layout.
+  blocked     -- [nblocks, 8192] f32 (= 32 KB) leaf blocks, the paper's
+                 physically addressed arrays-as-trees leaf layout. The Rust
+                 coordinator hands these straight out of its block
+                 allocator; no layout change is needed at the boundary.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import blackscholes as bs
+from compile.kernels import gups as gups_k
+from compile.kernels import tree_gather as tg
+
+BLOCK_ELEMS = bs.BLOCK_ELEMS
+
+
+# ---------------------------------------------------------------------------
+# Black-Scholes pricing (Figure 5 / E2E driver compute).
+# ---------------------------------------------------------------------------
+
+def bs_blocked(spot, strike, tmat, rate, vol):
+    """Price a batch of 32 KB blocks. Inputs [nblocks, 8192] f32.
+
+    CPU artifacts are lowered with one fused grid step covering the whole
+    batch (`blocks_per_step = nblocks`): interpret-mode grid loops pay a
+    full-array dynamic-update-slice per step, a pure artifact of CPU
+    execution (EXPERIMENTS.md SSPerf). The per-block tiling story for TPU
+    lives in the kernel's default `blocks_per_step=1`.
+    """
+    nblocks = spot.shape[0]
+    call, put = bs.blackscholes_blocked(
+        spot, strike, tmat, rate, vol, blocks_per_step=nblocks
+    )
+    return call, put
+
+
+def bs_contig(spot, strike, tmat, rate, vol):
+    """Price a flat contiguous array. Inputs [n] f32, n % 8192 == 0."""
+    (n,) = spot.shape
+    call, put = bs.blackscholes_contig(spot, strike, tmat, rate, vol, block_elems=n)
+    return call, put
+
+
+def bs_greeks_blocked(spot, strike, tmat, rate, vol):
+    """Per-element delta and book vega, blocked layout.
+
+    The "bwd" half of the model: jax.grad through the pricing graph
+    (the pure-jnp formulation, which is autodiff-able; the Pallas kernel
+    has no VJP rule). Tests cross-check against the closed forms
+    delta = N(d1), vega = spot*sqrt(t)*phi(d1).
+    """
+    from compile.kernels import ref
+
+    def book_value(spot_, vol_):
+        call, _ = ref.blackscholes_ref(spot_, strike, tmat, rate, vol_)
+        return jnp.sum(call)
+
+    delta = jax.grad(book_value, argnums=0)(spot, vol)
+    vega = jax.grad(book_value, argnums=1)(spot, vol)
+    return delta, vega.reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# GUPS (Figure 4 compute path).
+# ---------------------------------------------------------------------------
+
+def gups_step(table, idx, keys):
+    """One GUPS round: xor-update `table` at `idx` with `keys`.
+
+    Gather+xor runs in the Pallas kernel; the scatter lowers to a native
+    XLA scatter in the same module. Buffer `table` is donated by aot.py so
+    the update is in-place at the PJRT level.
+    """
+    vals = gups_k.gups_update_vals(table, idx, keys)
+    return (table.at[idx].set(vals),)
+
+
+# ---------------------------------------------------------------------------
+# Tree gather (naive arrays-as-trees access as an artifact).
+# ---------------------------------------------------------------------------
+
+def tree_gather(leaves, idx):
+    """Gather flat indices through the depth-1 leaf table."""
+    return (tg.tree_gather(leaves, idx),)

@@ -1,0 +1,133 @@
+"""Pallas Black-Scholes kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blackscholes as bs
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def market_blocks(nblocks, bele=bs.BLOCK_ELEMS, seed=0):
+    rng = np.random.default_rng(seed)
+    spot = rng.uniform(5.0, 200.0, (nblocks, bele)).astype(np.float32)
+    strike = rng.uniform(5.0, 200.0, (nblocks, bele)).astype(np.float32)
+    tmat = rng.uniform(0.05, 3.0, (nblocks, bele)).astype(np.float32)
+    return jnp.asarray(spot), jnp.asarray(strike), jnp.asarray(tmat)
+
+
+RATE = jnp.float32(0.03)
+VOL = jnp.float32(0.25)
+
+
+class TestBlockedKernel:
+    def test_matches_ref_single_block(self):
+        s, k, t = market_blocks(1)
+        call, put = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+        call_r, put_r = ref.blackscholes_ref(s, k, t, RATE, VOL)
+        np.testing.assert_allclose(call, call_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(put, put_r, rtol=1e-5, atol=1e-4)
+
+    def test_matches_ref_multi_block(self):
+        s, k, t = market_blocks(7, seed=3)
+        call, put = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+        call_r, put_r = ref.blackscholes_ref(s, k, t, RATE, VOL)
+        np.testing.assert_allclose(call, call_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(put, put_r, rtol=1e-5, atol=1e-4)
+
+    def test_put_call_parity(self):
+        # call - put == spot - strike * e^{-rt}, independent of vol.
+        s, k, t = market_blocks(2, seed=5)
+        call, put = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+        parity = s - k * jnp.exp(-RATE * t)
+        np.testing.assert_allclose(call - put, parity, rtol=1e-4, atol=1e-3)
+
+    def test_grid_step_independence(self):
+        # Block i's prices must not depend on other blocks (no cross-block
+        # contiguity assumption -- the property that makes the blocked
+        # layout correct for arrays-as-trees leaves).
+        s, k, t = market_blocks(4, seed=7)
+        call_all, _ = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+        call_one, _ = bs.blackscholes_blocked(
+            s[2:3], k[2:3], t[2:3], RATE, VOL
+        )
+        np.testing.assert_allclose(call_all[2:3], call_one, rtol=1e-6)
+
+    def test_small_block_elems(self):
+        # Kernel is parametric in block size (ablation uses 8..128 KB).
+        bele = 256
+        rng = np.random.default_rng(11)
+        s = jnp.asarray(rng.uniform(10, 100, (3, bele)).astype(np.float32))
+        k = jnp.asarray(rng.uniform(10, 100, (3, bele)).astype(np.float32))
+        t = jnp.asarray(rng.uniform(0.1, 2, (3, bele)).astype(np.float32))
+        call, put = bs.blackscholes_blocked(s, k, t, RATE, VOL,
+                                            block_elems=bele)
+        call_r, put_r = ref.blackscholes_ref(s, k, t, RATE, VOL)
+        np.testing.assert_allclose(call, call_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(put, put_r, rtol=1e-5, atol=1e-4)
+
+
+class TestContigKernel:
+    def test_matches_ref(self):
+        s2, k2, t2 = market_blocks(3, seed=9)
+        s, k, t = s2.reshape(-1), k2.reshape(-1), t2.reshape(-1)
+        call, put = bs.blackscholes_contig(s, k, t, RATE, VOL)
+        call_r, put_r = ref.blackscholes_ref(s, k, t, RATE, VOL)
+        np.testing.assert_allclose(call, call_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(put, put_r, rtol=1e-5, atol=1e-4)
+
+    def test_layouts_agree(self):
+        # blocked([nb, bele]) == contig([nb*bele]).reshape -- the two
+        # layouts must price identically, which is what lets Figure 5
+        # attribute any runtime delta purely to memory layout.
+        s2, k2, t2 = market_blocks(4, seed=13)
+        cb, pb = bs.blackscholes_blocked(s2, k2, t2, RATE, VOL)
+        cc, pc = bs.blackscholes_contig(
+            s2.reshape(-1), k2.reshape(-1), t2.reshape(-1), RATE, VOL
+        )
+        np.testing.assert_allclose(cb.reshape(-1), cc, rtol=1e-6)
+        np.testing.assert_allclose(pb.reshape(-1), pc, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 4),
+    bele=st.sampled_from([128, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+    rate=st.floats(0.0, 0.10),
+    vol=st.floats(0.05, 0.9),
+)
+def test_hypothesis_kernel_vs_ref(nblocks, bele, seed, rate, vol):
+    """Shape/parameter sweep: kernel == oracle everywhere."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.uniform(1.0, 500.0, (nblocks, bele)).astype(np.float32))
+    k = jnp.asarray(rng.uniform(1.0, 500.0, (nblocks, bele)).astype(np.float32))
+    t = jnp.asarray(rng.uniform(0.01, 5.0, (nblocks, bele)).astype(np.float32))
+    r = jnp.float32(rate)
+    v = jnp.float32(vol)
+    call, put = bs.blackscholes_blocked(s, k, t, r, v, block_elems=bele)
+    call_r, put_r = ref.blackscholes_ref(s, k, t, r, v)
+    np.testing.assert_allclose(call, call_r, rtol=2e-5, atol=2e-3)
+    np.testing.assert_allclose(put, put_r, rtol=2e-5, atol=2e-3)
+
+
+def test_prices_nonnegative():
+    s, k, t = market_blocks(2, seed=17)
+    call, put = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+    assert float(jnp.min(call)) >= -1e-3
+    assert float(jnp.min(put)) >= -1e-3
+
+
+def test_deep_itm_call_approaches_forward():
+    # spot >> strike: call ~= spot - strike*e^{-rt}.
+    bele = bs.BLOCK_ELEMS
+    s = jnp.full((1, bele), 1000.0, jnp.float32)
+    k = jnp.full((1, bele), 1.0, jnp.float32)
+    t = jnp.full((1, bele), 1.0, jnp.float32)
+    call, _ = bs.blackscholes_blocked(s, k, t, RATE, VOL)
+    expected = 1000.0 - 1.0 * np.exp(-float(RATE))
+    np.testing.assert_allclose(call, expected, rtol=1e-4)

@@ -1,0 +1,90 @@
+"""GUPS and tree-gather kernels vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gups as gups_k
+from compile.kernels import ref
+from compile.kernels import tree_gather as tg
+
+
+class TestGupsKernel:
+    def test_update_vals_match_ref(self):
+        rng = np.random.default_rng(0)
+        n, m = 1 << 12, 256
+        table = jnp.asarray(rng.integers(0, 1 << 30, n, dtype=np.int32))
+        idx = jnp.asarray(rng.integers(0, n, m, dtype=np.int32))
+        keys = jnp.asarray(rng.integers(0, 1 << 30, m, dtype=np.int32))
+        vals = gups_k.gups_update_vals(table, idx, keys)
+        np.testing.assert_array_equal(vals, np.asarray(table)[np.asarray(idx)] ^ np.asarray(keys))
+
+    def test_step_matches_ref(self):
+        rng = np.random.default_rng(1)
+        n, m = 1 << 10, 128
+        table = jnp.asarray(rng.integers(0, 1 << 30, n, dtype=np.int32))
+        # unique indices: xor-update semantics are order-free then
+        idx = jnp.asarray(rng.choice(n, m, replace=False).astype(np.int32))
+        keys = jnp.asarray(rng.integers(0, 1 << 30, m, dtype=np.int32))
+        (out,) = model.gups_step(table, idx, keys)
+        expect = ref.gups_ref(table, idx, keys)
+        np.testing.assert_array_equal(out, expect)
+
+    def test_step_is_involution_with_same_keys(self):
+        # xor twice with the same keys restores the table (unique idx).
+        rng = np.random.default_rng(2)
+        n, m = 1 << 10, 64
+        table = jnp.asarray(rng.integers(0, 1 << 30, n, dtype=np.int32))
+        idx = jnp.asarray(rng.choice(n, m, replace=False).astype(np.int32))
+        keys = jnp.asarray(rng.integers(0, 1 << 30, m, dtype=np.int32))
+        (once,) = model.gups_step(table, idx, keys)
+        (twice,) = model.gups_step(once, idx, keys)
+        np.testing.assert_array_equal(twice, table)
+
+    def test_untouched_entries_unchanged(self):
+        rng = np.random.default_rng(3)
+        n = 1 << 10
+        table = jnp.asarray(rng.integers(0, 1 << 30, n, dtype=np.int32))
+        idx = jnp.asarray(np.array([1, 2, 3], dtype=np.int32))
+        keys = jnp.asarray(np.array([7, 8, 9], dtype=np.int32))
+        (out,) = model.gups_step(table, idx, keys)
+        mask = np.ones(n, bool)
+        mask[[1, 2, 3]] = False
+        np.testing.assert_array_equal(np.asarray(out)[mask], np.asarray(table)[mask])
+
+
+class TestTreeGather:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(4)
+        nblocks, bele, m = 8, 512, 333
+        leaves = jnp.asarray(rng.standard_normal((nblocks, bele)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, nblocks * bele, m, dtype=np.int32))
+        out = tg.tree_gather(leaves, idx)
+        np.testing.assert_array_equal(out, ref.tree_gather_ref(leaves, idx))
+
+    def test_equiv_flat_indexing(self):
+        # Tree-of-blocks access == flat contiguous access: the correctness
+        # invariant of arrays-as-trees (paper SS3.2).
+        rng = np.random.default_rng(5)
+        nblocks, bele, m = 4, 256, 100
+        flat = rng.standard_normal(nblocks * bele).astype(np.float32)
+        leaves = jnp.asarray(flat.reshape(nblocks, bele))
+        idx = jnp.asarray(rng.integers(0, nblocks * bele, m, dtype=np.int32))
+        out = tg.tree_gather(leaves, idx)
+        np.testing.assert_array_equal(out, flat[np.asarray(idx)])
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nblocks=st.integers(1, 8),
+        bele=st.sampled_from([64, 128, 512]),
+        m=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_gather(self, nblocks, bele, m, seed):
+        rng = np.random.default_rng(seed)
+        leaves = jnp.asarray(rng.standard_normal((nblocks, bele)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, nblocks * bele, m, dtype=np.int32))
+        out = tg.tree_gather(leaves, idx)
+        np.testing.assert_array_equal(out, ref.tree_gather_ref(leaves, idx))

@@ -1,0 +1,91 @@
+"""L2 model shape/abstract-eval tests + greeks cross-check + AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_all_variants_abstract_eval():
+    """Every AOT variant must trace at its registered shapes."""
+    for name, (fn, args) in aot.VARIANTS.items():
+        out = jax.eval_shape(fn, *args)
+        assert out is not None, name
+
+
+def test_variant_output_shapes():
+    out = jax.eval_shape(*_variant("bs_blocked_256x8192"))
+    assert tuple(out[0].shape) == (256, model.BLOCK_ELEMS)
+    out = jax.eval_shape(*_variant("gups_1048576_4096"))
+    assert tuple(out[0].shape) == (1 << 20,)
+    out = jax.eval_shape(*_variant("tree_gather_64x8192_4096"))
+    assert tuple(out[0].shape) == (4096,)
+
+
+def _variant(name):
+    fn, args = aot.VARIANTS[name]
+    return (fn, *args)
+
+
+def test_greeks_match_closed_form():
+    """jax.grad delta/vega == closed-form N(d1) / s*sqrt(t)*phi(d1)."""
+    rng = np.random.default_rng(0)
+    shape = (2, 64)
+    s = jnp.asarray(rng.uniform(20, 180, shape).astype(np.float32))
+    k = jnp.asarray(rng.uniform(20, 180, shape).astype(np.float32))
+    t = jnp.asarray(rng.uniform(0.1, 2.0, shape).astype(np.float32))
+    rate, vol = jnp.float32(0.03), jnp.float32(0.25)
+    delta, vega = model.bs_greeks_blocked(s, k, t, rate, vol)
+
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (rate + 0.5 * vol * vol) * t) / (vol * sqrt_t)
+    delta_cf = ref.norm_cdf(d1)
+    phi = jnp.exp(-0.5 * d1 * d1) / np.sqrt(2 * np.pi)
+    vega_cf = jnp.sum(s * sqrt_t * phi)
+
+    np.testing.assert_allclose(delta, delta_cf, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(vega, vega_cf, rtol=1e-3)
+
+
+def test_hlo_text_lowering_roundtrip(tmp_path):
+    """The aot recipe emits parseable HLO text with an ENTRY computation."""
+    fn, _ = aot.VARIANTS["bs_blocked_1x8192"]
+    args = [
+        jax.ShapeDtypeStruct((1, model.BLOCK_ELEMS), jnp.float32)
+    ] * 3 + [jax.ShapeDtypeStruct((), jnp.float32)] * 2
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[1,8192]" in text
+
+
+def test_build_subset(tmp_path):
+    """aot.build writes the artifact file and manifest for a subset."""
+    aot.build(str(tmp_path), only=["tree_gather_64x8192_4096"])
+    files = {p.name for p in tmp_path.iterdir()}
+    assert "tree_gather_64x8192_4096.hlo.txt" in files
+    assert "manifest.txt" in files
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "tree_gather_64x8192_4096 float32[64,8192];int32[4096]" in manifest
+
+
+def test_erf_approx_matches_lax_erf():
+    """The exported polynomial erf tracks jax.lax.erf to ~1.5e-7."""
+    x = jnp.linspace(-4.0, 4.0, 2001, dtype=jnp.float32)
+    approx = ref.erf_approx(x)
+    exact = jax.lax.erf(x)
+    # A&S 7.1.26: |error| <= 1.5e-7 in exact arithmetic; f32 evaluation
+    # of the polynomial adds a few ulp.
+    np.testing.assert_allclose(approx, exact, atol=2e-6)
+
+
+def test_no_erf_opcode_in_artifacts():
+    """xla_extension 0.5.1 rejects the `erf` HLO opcode; artifacts must
+    lower to elementary ops only."""
+    fn, args = aot.VARIANTS["bs_blocked_1x8192"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    for line in text.splitlines():
+        assert " erf(" not in line, f"erf opcode leaked into HLO: {line}"

@@ -1,0 +1,36 @@
+//! Bench: the paper's §3 claim — "performance was mostly insensitive to
+//! the choice of block size and we report results based on 32 KB
+//! blocks." Sweeps 8–128 KB blocks at the 4 GB datapoint.
+//!
+//! `cargo bench --bench ablation_block_size`
+
+use nvm::bench_utils::section;
+use nvm::coordinator::experiments::{ablation_block_size, ExpConfig};
+
+fn main() {
+    let cfg = if std::env::var("NVM_QUICK").is_ok() {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    section("Ablation: block-size sensitivity");
+    let t = ablation_block_size(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    // The claim holds if iter rows vary by <15% across a 16x block-size
+    // range; print a verdict for EXPERIMENTS.md.
+    let iter_vals: Vec<f64> = (0..5)
+        .map(|c| t.cell("linear iter", c).unwrap())
+        .collect();
+    let spread = iter_vals.iter().cloned().fold(f64::MIN, f64::max)
+        / iter_vals.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "linear-iter spread across 8..128 KB blocks: {spread:.3}x  ({})",
+        if spread < 1.15 {
+            "insensitive — paper's claim holds"
+        } else {
+            "SENSITIVE — deviates from the paper"
+        }
+    );
+}

@@ -1,0 +1,131 @@
+//! Bench: the end-to-end headline — Black-Scholes through all three
+//! layers. Rust block allocator + tree arrays feed the batcher; the
+//! AOT-compiled Pallas kernel executes via PJRT; the contiguous artifact
+//! is the VM-layout baseline. Also measures the single-block latency
+//! path and the pure-Rust scalar implementation for reference.
+//!
+//! Requires `make artifacts`. `cargo bench --bench e2e_blackscholes`
+
+use nvm::bench_utils::{bench, section, Sample};
+use nvm::coordinator::{BlockBatcher, batcher::BATCH_BLOCKS};
+use nvm::pmem::BlockAllocator;
+use nvm::runtime::{Engine, Input};
+use nvm::trees::TreeArray;
+use nvm::workloads::blackscholes as bs;
+use nvm::BLOCK_ELEMS_F32 as BELE;
+
+const RATE: f32 = 0.03;
+const VOL: f32 = 0.25;
+
+fn main() {
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let engine = match Engine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP e2e bench: {e}");
+            return;
+        }
+    };
+    println!("platform: {}", engine.platform());
+    engine.warm("bs_blocked_256x8192").expect("warm blocked");
+    engine.warm("bs_contig_2097152").expect("warm contig");
+    engine.warm("bs_blocked_1x8192").expect("warm 1-block");
+
+    let n = if quick { BATCH_BLOCKS * BELE } else { 4 * BATCH_BLOCKS * BELE };
+    let alloc = BlockAllocator::with_capacity_bytes(n * 4 * 6 + (64 << 20)).expect("pool");
+    let (spot, strike, tmat) = bs::synth_portfolio(n, 42);
+    let mut ts: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tk: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tt: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    ts.copy_from_slice(&spot).unwrap();
+    tk.copy_from_slice(&strike).unwrap();
+    tt.copy_from_slice(&tmat).unwrap();
+    let mut tc: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tp: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+
+    let iters = if quick { 3 } else { 8 };
+
+    section("E2E throughput (AOT kernel via PJRT)");
+    let mut batcher = BlockBatcher::new(&engine);
+    let blocked = bench("blocked (tree leaves -> batcher)", 1, iters, || {
+        batcher
+            .price_trees(&ts, &tk, &tt, RATE, VOL, &mut tc, &mut tp)
+            .unwrap()
+    });
+    println!("{blocked}");
+
+    let chunk = BATCH_BLOCKS * BELE;
+    let contig = bench("contiguous artifact", 1, iters, || {
+        for c in 0..n / chunk {
+            let lo = c * chunk;
+            let out = engine
+                .run_f32(
+                    "bs_contig_2097152",
+                    &[
+                        Input::F32(&spot[lo..lo + chunk], vec![chunk as i64]),
+                        Input::F32(&strike[lo..lo + chunk], vec![chunk as i64]),
+                        Input::F32(&tmat[lo..lo + chunk], vec![chunk as i64]),
+                        Input::ScalarF32(RATE),
+                        Input::ScalarF32(VOL),
+                    ],
+                )
+                .unwrap();
+            std::hint::black_box(&out[0][0]);
+        }
+    });
+    println!("{contig}");
+
+    let scalar = bench("pure-Rust scalar reference", 1, iters.min(3), || {
+        let mut call = vec![0.0f32; n];
+        let mut put = vec![0.0f32; n];
+        bs::price_contig(&spot, &strike, &tmat, RATE, VOL, &mut call, &mut put);
+        call[0]
+    });
+    println!("{scalar}");
+
+    let mops = |s: &Sample| n as f64 / (s.mean_ns() * 1e-9) / 1e6;
+    println!(
+        "\nthroughput: blocked {:.2} Mopt/s | contig {:.2} Mopt/s | scalar {:.2} Mopt/s",
+        mops(&blocked),
+        mops(&contig),
+        mops(&scalar)
+    );
+    println!(
+        "blocked/contig layout overhead: {:.3}x (paper Fig 5: ~1.0 for iter-style blocked access)",
+        blocked.mean_ns() / contig.mean_ns()
+    );
+
+    section("E2E request latency (single 32 KB block)");
+    let spot1 = &spot[..BELE];
+    let strike1 = &strike[..BELE];
+    let tmat1 = &tmat[..BELE];
+    let lat = bench("1-block request", 2, if quick { 20 } else { 100 }, || {
+        batcher
+            .price_one_block(spot1, strike1, tmat1, RATE, VOL)
+            .unwrap()
+            .0[0]
+    });
+    println!("{lat}");
+    println!(
+        "p50-ish mean latency {:.3} ms for {} options -> {:.2} Mopt/s single-stream",
+        lat.mean_ns() / 1e6,
+        BELE,
+        BELE as f64 / lat.mean_ns() * 1e3
+    );
+
+    // Numerics guard: blocked output equals scalar reference.
+    let call_out = tc.to_vec();
+    for i in (0..n).step_by(1009) {
+        let (c_ref, _) = bs::price(
+            bs::Option1 { spot: spot[i], strike: strike[i], tmat: tmat[i] },
+            RATE,
+            VOL,
+        );
+        assert!(
+            (call_out[i] - c_ref).abs() < 1e-2,
+            "mismatch at {i}: {} vs {c_ref}",
+            call_out[i]
+        );
+    }
+    println!("\nnumerics: blocked PJRT output matches scalar reference ✓");
+}

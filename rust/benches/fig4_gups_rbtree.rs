@@ -1,0 +1,71 @@
+//! Bench: regenerates **Figure 4** — GUPS tree/array ratios at 4–64 GB
+//! (simulated; both the true-physical extrapolation and the paper's
+//! huge-page setup with its §4.3 artifact) and the red–black tree
+//! physical/virtual ratio. Plus a real-execution GUPS validation at RAM
+//! scale.
+//!
+//! `cargo bench --bench fig4_gups_rbtree`
+
+use nvm::bench_utils::{bench_for, section, Sample};
+use nvm::coordinator::experiments::{fig4_gups, fig4_rbtree, ExpConfig};
+use nvm::pmem::BlockAllocator;
+use nvm::trees::TreeArray;
+use nvm::workloads::gups;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let mut cfg = if quick {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+
+    section("Figure 4 left: GUPS (simulated, paper scale)");
+    let t = fig4_gups(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    section("Figure 4 right: red-black tree (simulated)");
+    if quick {
+        cfg.sample = cfg.sample.min(100_000);
+    }
+    let t = fig4_rbtree(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    section("GUPS real execution (RAM scale, layout cost only)");
+    let budget = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(1)
+    };
+    let ops = if quick { 200_000u64 } else { 2_000_000 };
+    let alloc = BlockAllocator::with_capacity_bytes(600 << 20).expect("pool");
+    println!(
+        "{:>8} | {:>12} {:>12} | {:>8}",
+        "table", "vec ns/op", "tree ns/op", "ratio"
+    );
+    for bytes in [8usize << 20, 128 << 20, 512 << 20] {
+        let n = bytes / 8;
+        let mut vec_table = vec![0u64; n];
+        let mut tree_table: TreeArray<u64> = TreeArray::new(&alloc, n).expect("tree");
+        let sv = bench_for("vec", budget, || gups::gups_vec(&mut vec_table, ops, 3));
+        let st = bench_for("tree", budget, || {
+            gups::gups_tree_naive(&mut tree_table, ops, 3)
+        });
+        let per = |s: &Sample| s.mean_ns() / ops as f64;
+        println!(
+            "{:>8} | {:>12.2} {:>12.2} | {:>8.2}",
+            format!("{}MB", bytes >> 20),
+            per(&sv),
+            per(&st),
+            per(&st) / per(&sv)
+        );
+    }
+    println!(
+        "\nnote: both real runs share this machine's VM; the ratio isolates the\n\
+         tree's software walk cost. The simulated table above adds the\n\
+         translation difference the paper measures."
+    );
+}

@@ -1,0 +1,93 @@
+//! Bench: regenerates **Figure 5** — overhead of software-based
+//! contiguous memory on blackscholes and deepsjeng(-like) workloads,
+//! simulated at paper scale and really executed at RAM scale (pure Rust
+//! pricing over Vec vs TreeArray layouts).
+//!
+//! `cargo bench --bench fig5_apps`
+
+use nvm::bench_utils::{bench_for, section, Sample};
+use nvm::coordinator::experiments::{fig5, ExpConfig};
+use nvm::pmem::BlockAllocator;
+use nvm::trees::TreeArray;
+use nvm::workloads::blackscholes as bs;
+use nvm::workloads::hashprobe;
+use std::time::Duration;
+
+const RATE: f32 = 0.03;
+const VOL: f32 = 0.25;
+
+fn main() {
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let cfg = if quick {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+
+    section("Figure 5 (simulated, paper scale)");
+    let t = fig5(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    section("blackscholes real execution (RAM scale)");
+    let budget = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let n = if quick { 1 << 20 } else { 1 << 23 }; // up to 8M options
+    let tbl_bytes = if quick { 64usize << 20 } else { 256 << 20 };
+    // Pool hosts 5 pricing arrays + the probe table simultaneously.
+    let alloc =
+        BlockAllocator::with_capacity_bytes(n * 4 * 6 + tbl_bytes + (64 << 20)).expect("pool");
+    let (spot, strike, tmat) = bs::synth_portfolio(n, 42);
+    let mut call = vec![0.0f32; n];
+    let mut put = vec![0.0f32; n];
+    let sv = bench_for("contig", budget, || {
+        bs::price_contig(&spot, &strike, &tmat, RATE, VOL, &mut call, &mut put)
+    });
+
+    let mut ts: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tk: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tt: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    ts.copy_from_slice(&spot).unwrap();
+    tk.copy_from_slice(&strike).unwrap();
+    tt.copy_from_slice(&tmat).unwrap();
+    let mut tc: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tp: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let sn = bench_for("tree naive", budget, || {
+        bs::price_tree_naive(&ts, &tk, &tt, RATE, VOL, &mut tc, &mut tp)
+    });
+    let si = bench_for("tree iter", budget, || {
+        bs::price_tree_iter(&ts, &tk, &tt, RATE, VOL, &mut tc, &mut tp)
+    });
+    let per = |s: &Sample| s.mean_ns() / n as f64;
+    println!("contiguous : {:.2} ns/option", per(&sv));
+    println!(
+        "tree naive : {:.2} ns/option  ({:.3}x)",
+        per(&sn),
+        per(&sn) / per(&sv)
+    );
+    println!(
+        "tree iter  : {:.2} ns/option  ({:.3}x)",
+        per(&si),
+        per(&si) / per(&sv)
+    );
+
+    section("deepsjeng-like hash probe real execution (RAM scale)");
+    let ops = if quick { 200_000u64 } else { 1_000_000 };
+    let tn = tbl_bytes / 8;
+    let mut vt = vec![0u64; tn];
+    let mut tt2: TreeArray<u64> = TreeArray::new(&alloc, tn).unwrap();
+    let pv = bench_for("probe vec", budget, || hashprobe::probe_vec(&mut vt, ops, 5));
+    let pt = bench_for("probe tree", budget, || {
+        hashprobe::probe_tree_naive(&mut tt2, ops, 5)
+    });
+    let perp = |s: &Sample| s.mean_ns() / ops as f64;
+    println!("contiguous : {:.2} ns/probe", perp(&pv));
+    println!(
+        "tree naive : {:.2} ns/probe  ({:.3}x)",
+        perp(&pt),
+        perp(&pt) / perp(&pv)
+    );
+}

@@ -1,0 +1,73 @@
+//! Bench: regenerates **Table 2** — tree vs array run-time ratios for
+//! linear and strided scans at 4 KB–64 GB, naive and iterator-optimized.
+//!
+//! Two parts:
+//! 1. The simulated table at paper scale (the substitution for the
+//!    authors' 128 GB huge-page testbed).
+//! 2. Real-execution wallclock ratios at RAM-friendly sizes (4 KB–64 MB)
+//!    validating the tree implementation and the Figure 2 iterator.
+//!
+//! `cargo bench --bench table2_scans`  (NVM_QUICK=1 for a fast pass)
+
+use nvm::bench_utils::{bench_for, section, Sample};
+use nvm::coordinator::experiments::{table2, ExpConfig};
+use nvm::pmem::BlockAllocator;
+use nvm::testutil::Rng;
+use nvm::workloads::{linear_scan, strided_scan};
+use std::time::Duration;
+
+fn quick() -> bool {
+    std::env::var("NVM_QUICK").is_ok()
+}
+
+fn main() {
+    let cfg = if quick() {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+
+    section("Table 2 (simulated, paper scale)");
+    let t = table2(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    section("Table 2 (real execution, RAM scale)");
+    let budget = if quick() {
+        Duration::from_millis(200)
+    } else {
+        Duration::from_secs(1)
+    };
+    let alloc = BlockAllocator::with_capacity_bytes(512 << 20).expect("pool");
+    let mut rng = Rng::new(7);
+    println!(
+        "{:>8} {:>6} | {:>12} {:>12} {:>12} | {:>8} {:>8}",
+        "size", "depth", "vec ns/el", "naive ns/el", "iter ns/el", "naive/x", "iter/x"
+    );
+    for bytes in [4usize << 10, 4 << 20, 64 << 20] {
+        let n = bytes / 4;
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_range(0.0, 1.0)).collect();
+        let tree = linear_scan::tree_from(&alloc, &data);
+        for (label, stride) in [("linear", 1usize), ("strided", 1024)] {
+            let sv = bench_for("vec", budget, || strided_scan::scan_vec(&data, stride));
+            let sn = bench_for("naive", budget, || {
+                strided_scan::scan_tree_naive(&tree, stride)
+            });
+            let si = bench_for("iter", budget, || {
+                strided_scan::scan_tree_iter(&tree, stride)
+            });
+            let elems = n.div_ceil(stride);
+            let per = |s: &Sample| s.mean_ns() / elems as f64;
+            println!(
+                "{:>8} {:>6} | {:>12.2} {:>12.2} {:>12.2} | {:>8.2} {:>8.2}  ({label})",
+                format!("{}KB", bytes >> 10),
+                tree.depth(),
+                per(&sv),
+                per(&sn),
+                per(&si),
+                per(&sn) / per(&sv),
+                per(&si) / per(&sv),
+            );
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Measurement harness for the `harness = false` benches (criterion is
+//! unavailable offline; this reimplements its core discipline: warmup,
+//! fixed-iteration sampling, mean/σ/min reporting).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Human label.
+    pub name: String,
+    /// Per-iteration mean.
+    pub mean: Duration,
+    /// Per-iteration sample standard deviation.
+    pub stddev: Duration,
+    /// Fastest iteration.
+    pub min: Duration,
+    /// Iterations measured (after warmup).
+    pub iters: u32,
+}
+
+impl Sample {
+    /// Mean in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} {:>12.3} ms  ±{:>8.3} ms  (min {:>10.3} ms, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Measure `f`, returning per-iteration stats.
+///
+/// Runs `warmup` unrecorded iterations, then `iters` timed ones. `f`
+/// should return something observable to stop the optimizer from deleting
+/// the work; its result is passed through `std::hint::black_box`.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Sample {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    summarize(name, &times)
+}
+
+/// Adaptive variant: keeps iterating until `budget` wall time is spent
+/// (at least 3 iterations), for workloads whose runtime is unknown.
+pub fn bench_for<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Sample {
+    std::hint::black_box(f()); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(name, &times)
+}
+
+fn summarize(name: &str, times: &[Duration]) -> Sample {
+    let n = times.len() as f64;
+    let mean_s = times.iter().map(|t| t.as_secs_f64()).sum::<f64>() / n;
+    let var = if times.len() > 1 {
+        times
+            .iter()
+            .map(|t| (t.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / (n - 1.0)
+    } else {
+        0.0
+    };
+    Sample {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *times.iter().min().unwrap(),
+        iters: times.len() as u32,
+    }
+}
+
+/// Print a bench-section header (keeps bench output grep-able).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a formatted ratio row: `label: num/den = ratio`.
+pub fn ratio_row(label: &str, num: f64, den: f64) {
+    println!("{label:40} {:>10.3} / {:>10.3} = {:>6.2}x", num, den, num / den);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_iters() {
+        let s = bench("noop", 1, 5, || 42u64);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean <= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn bench_measures_sleep() {
+        let s = bench("sleep", 0, 3, || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(s.mean >= Duration::from_millis(2));
+        assert!(s.min >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn bench_for_runs_at_least_three() {
+        let s = bench_for("fast", Duration::from_millis(1), || 1u8);
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parsing (clap is unreachable offline).
+//!
+//! Grammar: `nvm <command> [--flag value]...`
+//! Commands: `list`, `run <experiment>`, `serve`, `info`.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    /// Positional arguments (command first).
+    pub positional: Vec<String>,
+    /// `--key value` flags (`--key` alone = "true").
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::Config("empty flag '--'".into()));
+                }
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), val);
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    /// Command (first positional), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Typed flag lookup with default.
+    pub fn flag_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} wants an integer, got {v:?}"))),
+        }
+    }
+
+    /// Boolean flag (present = true).
+    pub fn flag_bool(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// String flag.
+    pub fn flag_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let c = parse("run table2 --sample 100000 --quick");
+        assert_eq!(c.command(), Some("run"));
+        assert_eq!(c.positional, vec!["run", "table2"]);
+        assert_eq!(c.flag_u64("sample", 1).unwrap(), 100000);
+        assert!(c.flag_bool("quick"));
+        assert!(!c.flag_bool("missing"));
+    }
+
+    #[test]
+    fn flag_without_value_is_true() {
+        let c = parse("serve --verbose");
+        assert_eq!(c.flag_str("verbose"), Some("true"));
+        assert_eq!(c.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn flag_greedily_takes_next_positional() {
+        // Documented limitation: a bare flag followed by a positional
+        // consumes it as the value. Callers put flags last.
+        let c = parse("serve --verbose run");
+        assert_eq!(c.flag_str("verbose"), Some("run"));
+    }
+
+    #[test]
+    fn bad_int_flag_errors() {
+        let c = parse("run --sample abc");
+        assert!(c.flag_u64("sample", 1).is_err());
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let c = Cli::parse(std::iter::empty()).unwrap();
+        assert_eq!(c.command(), None);
+    }
+}

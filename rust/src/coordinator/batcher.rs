@@ -1,0 +1,148 @@
+//! The block batcher: feeds 32 KB tree leaves to the AOT-compiled
+//! blocked kernels in fixed-size batches.
+//!
+//! The blocked Pallas kernel was compiled for `[256, 8192]` f32 inputs
+//! (8 MB per operand per dispatch) plus a `[1, 8192]` latency variant.
+//! The batcher gathers leaf slices from [`TreeArray`]s into the batch
+//! buffer (one memcpy per 32 KB leaf — the leaves themselves are already
+//! kernel-tile-shaped, which is the point of the blocked layout), pads
+//! the tail batch, executes, and scatters results back into tree leaves.
+
+use crate::error::Result;
+use crate::runtime::{Engine, Input};
+use crate::trees::TreeArray;
+use crate::{BLOCK_ELEMS_F32 as BELE};
+
+/// Batch size (blocks per dispatch) of the main blocked artifact.
+pub const BATCH_BLOCKS: usize = 256;
+
+/// Statistics from a batched run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Kernel dispatches issued.
+    pub dispatches: u64,
+    /// Leaf blocks processed (including padding).
+    pub blocks: u64,
+    /// Padded (wasted) blocks in the tail dispatch.
+    pub padded: u64,
+}
+
+/// Batches tree-array leaves through the blocked Black-Scholes artifact.
+pub struct BlockBatcher<'e> {
+    engine: &'e Engine,
+    /// Reusable staging buffers (perf: no allocation per dispatch).
+    stage: [Vec<f32>; 3],
+    stats: BatchStats,
+}
+
+impl<'e> BlockBatcher<'e> {
+    /// New batcher over `engine`.
+    pub fn new(engine: &'e Engine) -> Self {
+        BlockBatcher {
+            engine,
+            stage: [
+                vec![0.0; BATCH_BLOCKS * BELE],
+                vec![0.0; BATCH_BLOCKS * BELE],
+                vec![0.0; BATCH_BLOCKS * BELE],
+            ],
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// Price a whole tree-array portfolio through the blocked kernel,
+    /// writing call/put prices into the output trees.
+    ///
+    /// All five arrays must have identical length.
+    pub fn price_trees<'a>(
+        &mut self,
+        spot: &TreeArray<'_, f32>,
+        strike: &TreeArray<'_, f32>,
+        tmat: &TreeArray<'_, f32>,
+        rate: f32,
+        vol: f32,
+        call: &mut TreeArray<'a, f32>,
+        put: &mut TreeArray<'a, f32>,
+    ) -> Result<BatchStats> {
+        assert_eq!(spot.len(), strike.len());
+        assert_eq!(spot.len(), tmat.len());
+        assert_eq!(spot.len(), call.len());
+        assert_eq!(spot.len(), put.len());
+        let nleaves = spot.nleaves();
+        let mut leaf = 0usize;
+        while leaf < nleaves {
+            let batch = (nleaves - leaf).min(BATCH_BLOCKS);
+            // Gather leaves into the staging batch (pad tail with 1.0 to
+            // keep the kernel's log() finite).
+            for (src_idx, stage) in [spot, strike, tmat].into_iter().zip(self.stage.iter_mut()) {
+                for b in 0..BATCH_BLOCKS {
+                    let dst = &mut stage[b * BELE..(b + 1) * BELE];
+                    if b < batch {
+                        let s = src_idx.leaf_slice(leaf + b);
+                        dst[..s.len()].copy_from_slice(s);
+                        if s.len() < BELE {
+                            dst[s.len()..].fill(1.0);
+                        }
+                    } else {
+                        dst.fill(1.0);
+                    }
+                }
+            }
+            let shape = vec![BATCH_BLOCKS as i64, BELE as i64];
+            let out = self.engine.run_f32(
+                "bs_blocked_256x8192",
+                &[
+                    Input::F32(&self.stage[0], shape.clone()),
+                    Input::F32(&self.stage[1], shape.clone()),
+                    Input::F32(&self.stage[2], shape),
+                    Input::ScalarF32(rate),
+                    Input::ScalarF32(vol),
+                ],
+            )?;
+            // Scatter call/put back into tree leaves.
+            for (out_buf, tree) in out.iter().zip([&mut *call, &mut *put]) {
+                for b in 0..batch {
+                    let dst = tree.leaf_slice_mut(leaf + b);
+                    let n = dst.len();
+                    dst.copy_from_slice(&out_buf[b * BELE..b * BELE + n]);
+                }
+            }
+            self.stats.dispatches += 1;
+            self.stats.blocks += BATCH_BLOCKS as u64;
+            self.stats.padded += (BATCH_BLOCKS - batch) as u64;
+            leaf += batch;
+        }
+        Ok(self.stats)
+    }
+
+    /// Latency path: price a single 32 KB block through the `[1, 8192]`
+    /// variant (one "request" in serving terms).
+    pub fn price_one_block(
+        &mut self,
+        spot: &[f32],
+        strike: &[f32],
+        tmat: &[f32],
+        rate: f32,
+        vol: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(spot.len(), BELE);
+        let shape = vec![1i64, BELE as i64];
+        let mut out = self.engine.run_f32(
+            "bs_blocked_1x8192",
+            &[
+                Input::F32(spot, shape.clone()),
+                Input::F32(strike, shape.clone()),
+                Input::F32(tmat, shape),
+                Input::ScalarF32(rate),
+                Input::ScalarF32(vol),
+            ],
+        )?;
+        let put = out.pop().expect("put output");
+        let call = out.pop().expect("call output");
+        Ok((call, put))
+    }
+
+    /// Cumulative stats.
+    pub fn stats(&self) -> BatchStats {
+        self.stats
+    }
+}

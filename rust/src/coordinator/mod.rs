@@ -1,0 +1,17 @@
+//! The experiment coordinator: registry, runner, thread pool, paper-style
+//! report tables, and the block batcher feeding PJRT.
+//!
+//! This is the L3 "leader": the CLI (`nvm` binary) and every bench target
+//! drive experiments through this module, so paper tables are generated
+//! by exactly one code path.
+
+pub mod batcher;
+pub mod experiments;
+pub mod pool;
+pub mod report;
+pub mod runner;
+
+pub use batcher::BlockBatcher;
+pub use experiments::ExpConfig;
+pub use report::Table;
+pub use runner::{list_experiments, run_experiment};

@@ -1,0 +1,137 @@
+//! Paper-style result tables.
+
+/// A formatted results table (one per paper table/figure series).
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Title, e.g. "Table 2: tree/array runtime ratios".
+    pub title: String,
+    /// Column headers (first column is the row label).
+    pub columns: Vec<String>,
+    /// Rows: label + one value per column.
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Mark cells ≥10% away from 1.0 (the paper colors those).
+    pub highlight_ratios: bool,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: impl Into<String>, columns: Vec<String>) -> Self {
+        Table {
+            title: title.into(),
+            columns,
+            rows: Vec::new(),
+            highlight_ratios: false,
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
+        debug_assert_eq!(values.len(), self.columns.len());
+        self.rows.push((label.into(), values));
+        self
+    }
+
+    /// Fetch a cell by row label and column index (tests).
+    pub fn cell(&self, row: &str, col: usize) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(l, _)| l == row)
+            .and_then(|(_, v)| v.get(col).copied())
+    }
+
+    /// Render as GitHub-flavored markdown (EXPERIMENTS.md blocks).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str("| |");
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push_str("\n|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(&format!("| {label} |"));
+            for v in vals {
+                s.push_str(&format!(" {} |", fmt_cell(*v, self.highlight_ratios)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+fn fmt_cell(v: f64, highlight: bool) -> String {
+    let mark = if highlight && (v <= 0.90 || v >= 1.10) {
+        "*"
+    } else {
+        ""
+    };
+    if v.abs() >= 1000.0 {
+        format!("{v:.0}{mark}")
+    } else {
+        format!("{v:.2}{mark}")
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "\n{}", self.title)?;
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(4))
+            .max()
+            .unwrap();
+        write!(f, "{:label_w$}", "")?;
+        for c in &self.columns {
+            write!(f, " {c:>9}")?;
+        }
+        writeln!(f)?;
+        for (label, vals) in &self.rows {
+            write!(f, "{label:label_w$}")?;
+            for v in vals {
+                write!(f, " {:>9}", fmt_cell(*v, self.highlight_ratios))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("T", vec!["a".into(), "b".into()]);
+        t.highlight_ratios = true;
+        t.row("r1", vec![1.0, 3.37]);
+        t.row("r2", vec![0.57, 1.05]);
+        t
+    }
+
+    #[test]
+    fn cell_lookup() {
+        let t = sample();
+        assert_eq!(t.cell("r1", 1), Some(3.37));
+        assert_eq!(t.cell("nope", 0), None);
+    }
+
+    #[test]
+    fn markdown_marks_big_ratios() {
+        let md = sample().to_markdown();
+        assert!(md.contains("3.37*"));
+        assert!(md.contains("0.57*"));
+        assert!(md.contains("| 1.00 |"));
+        assert!(md.contains("1.05 |") && !md.contains("1.05*"));
+    }
+
+    #[test]
+    fn display_renders_all_rows() {
+        let s = format!("{}", sample());
+        assert!(s.contains("r1") && s.contains("r2"));
+    }
+}

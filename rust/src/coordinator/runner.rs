@@ -1,0 +1,108 @@
+//! Experiment registry and dispatch (shared by the CLI and benches).
+
+use crate::coordinator::experiments::{self, ExpConfig};
+use crate::coordinator::report::Table;
+use crate::error::{Error, Result};
+
+/// Descriptor of a runnable experiment.
+pub struct ExperimentInfo {
+    /// CLI name.
+    pub name: &'static str,
+    /// What it reproduces.
+    pub description: &'static str,
+}
+
+/// All registered experiments.
+pub fn list_experiments() -> Vec<ExperimentInfo> {
+    vec![
+        ExperimentInfo {
+            name: "table2",
+            description: "Table 2: linear/strided scan tree-vs-array ratios, 4KB-64GB",
+        },
+        ExperimentInfo {
+            name: "fig3",
+            description: "Figure 3: split-stack overhead on SPEC/PARSEC profiles + fib",
+        },
+        ExperimentInfo {
+            name: "fig4-gups",
+            description: "Figure 4 left: GUPS tree/array ratios, 4-64GB",
+        },
+        ExperimentInfo {
+            name: "fig4-rbtree",
+            description: "Figure 4 right: red-black tree physical/virtual ratio",
+        },
+        ExperimentInfo {
+            name: "fig5",
+            description: "Figure 5: blackscholes + deepsjeng software-contiguity overhead",
+        },
+        ExperimentInfo {
+            name: "ablation-block-size",
+            description: "Block-size sensitivity of Table 2 ratios (paper S3 claim)",
+        },
+        ExperimentInfo {
+            name: "ablation-ptw",
+            description: "S4.4 claim: iterator == software PTW cache",
+        },
+        ExperimentInfo {
+            name: "energy",
+            description: "S2 claim: translation's share of memory-system energy",
+        },
+    ]
+}
+
+/// Run one experiment by name.
+pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
+    let tables = match name {
+        "table2" => vec![experiments::table2(cfg)],
+        "fig3" => vec![experiments::fig3(cfg)],
+        "fig4-gups" => vec![experiments::fig4_gups(cfg)],
+        "fig4-rbtree" => vec![experiments::fig4_rbtree(cfg)],
+        "fig4" => vec![experiments::fig4_gups(cfg), experiments::fig4_rbtree(cfg)],
+        "fig5" => vec![experiments::fig5(cfg)],
+        "ablation-block-size" => vec![experiments::ablation_block_size(cfg)],
+        "ablation-ptw" => vec![experiments::ablation_ptw_cache(cfg)],
+        "energy" => vec![experiments::energy(cfg)],
+        "all" => {
+            let mut all = Vec::new();
+            for e in list_experiments() {
+                all.extend(run_experiment(e.name, cfg)?);
+            }
+            all
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment {other:?}; see `nvm list`"
+            )))
+        }
+    };
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("nope", &ExpConfig::quick()).is_err());
+    }
+
+    #[test]
+    fn registry_names_resolve() {
+        // Every listed experiment must dispatch (run with tiny samples).
+        let cfg = ExpConfig {
+            sample: 20_000,
+            threads: 4,
+            ..ExpConfig::default()
+        };
+        for e in list_experiments() {
+            // Skip the slowest (rbtree builds real trees) in unit tests;
+            // integration tests cover it.
+            if e.name == "fig4-rbtree" {
+                continue;
+            }
+            let tables = run_experiment(e.name, &cfg).unwrap();
+            assert!(!tables.is_empty(), "{} produced no tables", e.name);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the nvm library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// The physical block pool has no free blocks left.
+    #[error("out of physical memory: {requested} blocks requested, {free} free (capacity {capacity})")]
+    OutOfMemory {
+        /// Blocks requested by the failing call.
+        requested: usize,
+        /// Blocks currently free.
+        free: usize,
+        /// Total pool capacity in blocks.
+        capacity: usize,
+    },
+
+    /// A block handle was used after being freed, or double-freed.
+    #[error("invalid block handle {0:?} (freed or foreign)")]
+    InvalidBlock(crate::pmem::BlockId),
+
+    /// Element index out of bounds for a tree array.
+    #[error("index {index} out of bounds for tree array of length {len}")]
+    IndexOutOfBounds {
+        /// Offending index.
+        index: usize,
+        /// Array length.
+        len: usize,
+    },
+
+    /// Requested array cannot be represented at the given node geometry.
+    #[error("array of {len} elements exceeds max tree capacity {max} (depth {max_depth})")]
+    TooLarge {
+        /// Requested length.
+        len: usize,
+        /// Maximum representable length.
+        max: usize,
+        /// Maximum supported depth.
+        max_depth: u32,
+    },
+
+    /// A stack frame larger than the stack block size was requested.
+    #[error("frame of {frame} bytes exceeds stack block payload {payload} bytes")]
+    FrameTooLarge {
+        /// Requested frame size.
+        frame: usize,
+        /// Maximum frame payload per block.
+        payload: usize,
+    },
+
+    /// Split-stack machine popped an empty stack.
+    #[error("stack underflow")]
+    StackUnderflow,
+
+    /// A permission-checked access was denied by the protection table.
+    #[error("protection fault: domain {domain} {} {block:?}", if *exec { "executing" } else if *write { "writing" } else { "reading" })]
+    Protection {
+        /// The block whose check failed.
+        block: crate::pmem::BlockId,
+        /// Offending domain id.
+        domain: u16,
+        /// Was it a write?
+        write: bool,
+        /// Was it an instruction fetch?
+        exec: bool,
+    },
+
+    /// The block is swapped out and must be faulted in first.
+    #[error("block {0:?} is swapped out")]
+    SwappedOut(crate::pmem::BlockId),
+
+    /// An artifact file is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Invalid experiment / CLI configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// XLA / PJRT runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,58 @@
+//! # nvm — software-based memory management without virtual memory
+//!
+//! A reproduction of Zagieboylo, Suh & Myers, *"The Cost of Software-Based
+//! Memory Management Without Virtual Memory"* (2020), built as a
+//! three-layer Rust + JAX/Pallas stack (see `DESIGN.md`).
+//!
+//! The crate provides:
+//!
+//! * [`pmem`] — the paper's §3 OS memory manager: a physical block
+//!   allocator handing out fixed-size (default 32 KB) blocks.
+//! * [`trees`] — §3.2 "arrays as trees": discontiguous arrays built from
+//!   allocator blocks, with the Figure 2 iterator optimization.
+//! * [`stack`] — §3.1 split stacks: a segmented-stack frame machine plus
+//!   the per-benchmark call-profile overhead model behind Figure 3.
+//! * [`memsim`] — the virtual-memory-vs-physical cost model: a
+//!   cycle-approximate TLB / page-table-walk / cache / DRAM simulator
+//!   calibrated to the paper's i7-7700 testbed. This substitutes for the
+//!   paper's 1 GB-huge-page "physical addressing" hardware trick.
+//! * [`workloads`] — the evaluation workloads: linear/strided scans,
+//!   GUPS, red–black tree, Black-Scholes, a deepsjeng-like hash probe,
+//!   and the recursive-Fibonacci stack microbenchmark.
+//! * [`coordinator`] — experiment registry, runner, thread pool, block
+//!   batcher, and paper-style report formatting.
+//! * [`runtime`] — the PJRT execution path: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX/Pallas) and runs them from Rust; Python is never on
+//!   the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nvm::pmem::BlockAllocator;
+//! use nvm::trees::TreeArray;
+//!
+//! let alloc = BlockAllocator::with_capacity_bytes(1 << 24).unwrap();
+//! let mut arr: TreeArray<f32> = TreeArray::new(&alloc, 20_000).unwrap();
+//! arr.set(12_345, 1.5).unwrap();
+//! assert_eq!(arr.get(12_345).unwrap(), 1.5);
+//! ```
+
+pub mod bench_utils;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod memsim;
+pub mod pmem;
+pub mod runtime;
+pub mod stack;
+pub mod testutil;
+pub mod trees;
+pub mod workloads;
+
+pub use error::{Error, Result};
+
+/// The paper's block size: 32 KB, the fixed allocation unit of §3.
+pub const BLOCK_SIZE: usize = 32 * 1024;
+
+/// f32 elements per 32 KB block (= the Pallas kernel tile, 8192).
+pub const BLOCK_ELEMS_F32: usize = BLOCK_SIZE / 4;

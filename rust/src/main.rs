@@ -1,0 +1,165 @@
+//! `nvm` — the leader binary: runs the paper's experiments, serves
+//! batched pricing requests through the PJRT runtime, and prints
+//! environment info.
+
+use nvm::cli::Cli;
+use nvm::coordinator::{list_experiments, run_experiment, ExpConfig};
+use nvm::runtime::Engine;
+use nvm::workloads::CostModel;
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match cli.command() {
+        Some("list") => cmd_list(),
+        Some("run") => cmd_run(&cli),
+        Some("info") => cmd_info(),
+        Some("serve") => cmd_serve(&cli),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "nvm — software-based memory management without virtual memory\n\
+         \n\
+         USAGE:\n\
+           nvm list                          list experiments\n\
+           nvm run <experiment|all> [flags]  run and print paper tables\n\
+           nvm serve [--requests N]          serve blackscholes blocks via PJRT\n\
+           nvm info                          runtime/artifact info\n\
+         \n\
+         FLAGS (run):\n\
+           --sample N     simulated accesses per data point (default 2000000)\n\
+           --quick        200k samples (fast smoke run)\n\
+           --threads N    sweep parallelism\n\
+           --seed N       workload RNG seed\n\
+           --markdown     print tables as markdown"
+    );
+}
+
+fn cmd_list() -> i32 {
+    for e in list_experiments() {
+        println!("{:22} {}", e.name, e.description);
+    }
+    0
+}
+
+fn cmd_run(cli: &Cli) -> i32 {
+    let name = match cli.positional.get(1) {
+        Some(n) => n.clone(),
+        None => {
+            eprintln!("error: `nvm run <experiment>`; see `nvm list`");
+            return 2;
+        }
+    };
+    let mut cfg = if cli.flag_bool("quick") {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    cfg.sample = cli.flag_u64("sample", cfg.sample).unwrap_or(cfg.sample);
+    cfg.threads = cli.flag_u64("threads", cfg.threads as u64).unwrap_or(8) as usize;
+    cfg.seed = cli.flag_u64("seed", cfg.seed).unwrap_or(cfg.seed);
+    cfg.model = CostModel::default();
+    match run_experiment(&name, &cfg) {
+        Ok(tables) => {
+            for t in tables {
+                if cli.flag_bool("markdown") {
+                    println!("{}", t.to_markdown());
+                } else {
+                    println!("{t}");
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    match Engine::new() {
+        Ok(engine) => {
+            println!("platform: {}", engine.platform());
+            println!("artifacts:");
+            for n in engine.artifacts().names() {
+                println!("  {n}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e} (run `make artifacts` first)");
+            1
+        }
+    }
+}
+
+/// A tiny request loop: prices N random 32 KB blocks through the AOT
+/// latency artifact and reports throughput — the serving-shaped
+/// demonstration that Python is not on the request path.
+fn cmd_serve(cli: &Cli) -> i32 {
+    use nvm::coordinator::BlockBatcher;
+    use nvm::testutil::Rng;
+    use nvm::BLOCK_ELEMS_F32 as BELE;
+
+    let requests = cli.flag_u64("requests", 64).unwrap_or(64);
+    let engine = match Engine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = engine.warm("bs_blocked_1x8192") {
+        eprintln!("error compiling artifact: {e}");
+        return 1;
+    }
+    let mut batcher = BlockBatcher::new(&engine);
+    let mut rng = Rng::new(7);
+    let mut lat = Vec::with_capacity(requests as usize);
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        let spot: Vec<f32> = (0..BELE).map(|_| rng.f32_range(5.0, 200.0)).collect();
+        let strike: Vec<f32> = (0..BELE).map(|_| rng.f32_range(5.0, 200.0)).collect();
+        let tmat: Vec<f32> = (0..BELE).map(|_| rng.f32_range(0.05, 3.0)).collect();
+        let r0 = std::time::Instant::now();
+        match batcher.price_one_block(&spot, &strike, &tmat, 0.03, 0.25) {
+            Ok((call, _put)) => {
+                std::hint::black_box(call[0]);
+                lat.push(r0.elapsed());
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let total = t0.elapsed();
+    lat.sort_unstable();
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    println!(
+        "served {requests} block requests ({} options) in {:.3}s",
+        requests * BELE as u64,
+        total.as_secs_f64()
+    );
+    println!(
+        "throughput: {:.0} options/s   p50 {:.3}ms   p99 {:.3}ms",
+        requests as f64 * BELE as f64 / total.as_secs_f64(),
+        p50.as_secs_f64() * 1e3,
+        p99.as_secs_f64() * 1e3
+    );
+    0
+}

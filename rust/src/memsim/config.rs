@@ -1,0 +1,140 @@
+//! Hierarchy configuration, calibrated to the paper's i7-7700 testbed.
+
+use crate::memsim::{CacheConfig, TlbConfig};
+
+/// Hardware page sizes (x86-64; the paper's §2 flexibility discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PageSize {
+    /// 4 KB base pages.
+    P4K,
+    /// 2 MB huge pages.
+    P2M,
+    /// 1 GB huge pages (the paper's physical-addressing simulation).
+    P1G,
+}
+
+impl PageSize {
+    /// Page size in bytes.
+    #[inline]
+    pub fn bytes(self) -> u64 {
+        match self {
+            PageSize::P4K => 4 << 10,
+            PageSize::P2M => 2 << 20,
+            PageSize::P1G => 1 << 30,
+        }
+    }
+
+    /// log2(bytes).
+    #[inline]
+    pub fn shift(self) -> u32 {
+        match self {
+            PageSize::P4K => 12,
+            PageSize::P2M => 21,
+            PageSize::P1G => 30,
+        }
+    }
+
+    /// Page-table levels that must be walked on a TLB miss (x86-64:
+    /// 4 KB → 4, 2 MB → 3, 1 GB → 2).
+    #[inline]
+    pub fn walk_levels(self) -> u32 {
+        match self {
+            PageSize::P4K => 4,
+            PageSize::P2M => 3,
+            PageSize::P1G => 2,
+        }
+    }
+}
+
+/// Full hierarchy configuration.
+#[derive(Clone, Debug)]
+pub struct HierarchyConfig {
+    /// L1 data cache.
+    pub l1: CacheConfig,
+    /// L2 unified cache.
+    pub l2: CacheConfig,
+    /// L3 shared cache.
+    pub l3: CacheConfig,
+    /// DRAM access latency (cycles), paid on L3 miss.
+    pub dram_latency: u64,
+    /// First-level DTLB per page size.
+    pub dtlb_4k: TlbConfig,
+    /// DTLB for 2 MB pages.
+    pub dtlb_2m: TlbConfig,
+    /// DTLB for 1 GB pages.
+    pub dtlb_1g: TlbConfig,
+    /// Unified second-level TLB.
+    pub stlb: TlbConfig,
+    /// STLB hit penalty (cycles) added on a DTLB miss that hits STLB.
+    pub stlb_latency: u64,
+    /// Page-walk-cache entries per cached level.
+    pub pwc_entries: usize,
+    /// Stream prefetch degree (lines brought ahead); 0 disables.
+    pub prefetch_degree: u32,
+    /// Whether the STLB holds 1 GB entries (Kaby Lake's does not; this
+    /// matters for the paper's §4.3 huge-page artifact).
+    pub stlb_holds_1g: bool,
+}
+
+impl HierarchyConfig {
+    /// The paper's testbed: Intel i7-7700 (Kaby Lake), 3.6 GHz.
+    pub fn kaby_lake() -> Self {
+        HierarchyConfig {
+            l1: CacheConfig {
+                size: 32 << 10,
+                ways: 8,
+                line: 64,
+                latency: 4,
+            },
+            l2: CacheConfig {
+                size: 256 << 10,
+                ways: 4,
+                line: 64,
+                latency: 12,
+            },
+            l3: CacheConfig {
+                size: 8 << 20,
+                ways: 16,
+                line: 64,
+                latency: 42,
+            },
+            dram_latency: 250,
+            dtlb_4k: TlbConfig { entries: 64, ways: 4 },
+            dtlb_2m: TlbConfig { entries: 32, ways: 4 },
+            dtlb_1g: TlbConfig { entries: 4, ways: 4 },
+            stlb: TlbConfig {
+                entries: 1536,
+                ways: 12,
+            },
+            stlb_latency: 9,
+            pwc_entries: 32,
+            prefetch_degree: 2,
+            stlb_holds_1g: false,
+        }
+    }
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        Self::kaby_lake()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_size_arithmetic() {
+        assert_eq!(PageSize::P4K.bytes(), 4096);
+        assert_eq!(1u64 << PageSize::P2M.shift(), PageSize::P2M.bytes());
+        assert_eq!(PageSize::P1G.walk_levels(), 2);
+    }
+
+    #[test]
+    fn kaby_lake_sane() {
+        let c = HierarchyConfig::kaby_lake();
+        assert_eq!(c.l1.size / (c.l1.ways * c.l1.line), 64); // 64 sets
+        assert!(c.dram_latency > c.l3.latency);
+    }
+}

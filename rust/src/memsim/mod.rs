@@ -1,0 +1,43 @@
+//! Cycle-approximate memory-hierarchy simulator: the virtual-memory vs.
+//! physical-addressing cost model.
+//!
+//! The paper simulates physical addressing by running tree-based programs
+//! on 1 GB huge pages (≈ zero TLB misses) and compares against contiguous
+//! arrays on 4 KB pages. That trick needs the authors' 128 GB testbed and
+//! perf counters; here the same comparison is produced by an explicit
+//! model (DESIGN.md substitution table):
+//!
+//! * [`Tlb`] — set-associative TLBs per page size + a shared STLB.
+//! * [`PageTable`] — x86-64 4-level walker whose PTE loads go through the
+//!   data-cache hierarchy (that locality is why linear scans "suffered
+//!   almost no TLB [cost]" in the paper — 8 PTEs share a cache line).
+//! * [`PtwCache`] — page-walk caches (PML4/PDPT/PD), skipping upper walk
+//!   levels.
+//! * [`Cache`] — L1/L2/L3 set-associative write-allocate caches.
+//! * [`Prefetcher`] — a next-line stream prefetcher (the paper's "hardware
+//!   optimizations ... such as prefetchers").
+//! * [`Hierarchy`] — composes the above; `access(addr)` returns the
+//!   serialized cycle cost of one memory access in either
+//!   [`AddressMode::Physical`] or [`AddressMode::Virtual`].
+//!
+//! Latencies are calibrated to the paper's testbed (i7-7700 Kaby Lake,
+//! DESIGN.md §5); the quantities that matter are *ratios*, which are
+//! robust to absolute-latency error.
+
+mod cache;
+mod config;
+mod hierarchy;
+mod page_table;
+mod prefetch;
+mod ptw_cache;
+mod stats;
+mod tlb;
+
+pub use cache::{Cache, CacheConfig};
+pub use config::{HierarchyConfig, PageSize};
+pub use hierarchy::{AddressMode, Hierarchy};
+pub use page_table::PageTable;
+pub use prefetch::Prefetcher;
+pub use ptw_cache::PtwCache;
+pub use stats::{EnergyModel, SimStats};
+pub use tlb::{Tlb, TlbConfig};

@@ -1,0 +1,102 @@
+//! x86-64 four-level page-table walk model.
+//!
+//! The walker does not materialize page tables for 64 GB address spaces;
+//! it *synthesizes* the physical address of each PTE deterministically,
+//! which is all the cache hierarchy needs. The synthesis preserves the
+//! real structure's locality: consecutive virtual pages have consecutive
+//! PTE addresses, so 8 PTEs share a 64-byte line — the reason sequential
+//! scans walk almost for free (paper §4.2's "translation hardware is
+//! optimized to make this case fast").
+
+use crate::memsim::PageSize;
+
+/// Physical address region where simulated page tables live (above any
+/// simulated data; data address spaces in the experiments are < 2^40).
+pub const PT_REGION_BASE: u64 = 1 << 44;
+
+/// Per-level spacing between the synthesized tables of that level.
+const LEVEL_STRIDE: u64 = 1 << 40;
+
+/// Stateless PTE-address synthesizer for a 4-level x86-64 table.
+pub struct PageTable;
+
+impl PageTable {
+    /// Physical address of the level-`level` PTE consulted when walking
+    /// `vaddr` with leaf size `page`.
+    ///
+    /// `level` counts walked levels starting at 0 = PML4. For 4 KB pages
+    /// levels are PML4, PDPT, PD, PT; a 1 GB walk stops after PDPT.
+    #[inline]
+    pub fn pte_addr(level: u32, vaddr: u64, page: PageSize) -> u64 {
+        debug_assert!(level < page.walk_levels());
+        // Index of this PTE within a flattened per-level table: the
+        // virtual address truncated to the level's coverage, divided by
+        // the coverage of one entry at that level.
+        let entry_shift = Self::entry_shift(level, page);
+        let index = vaddr >> entry_shift;
+        PT_REGION_BASE + level as u64 * LEVEL_STRIDE + index * 8
+    }
+
+    /// log2(bytes covered by one entry) at walk `level`.
+    #[inline]
+    fn entry_shift(level: u32, page: PageSize) -> u32 {
+        // Leaf entries cover the page size; each level up covers 512x.
+        page.shift() + 9 * (page.walk_levels() - 1 - level)
+    }
+
+    /// Number of levels a walk of `page` visits when `skip` levels are
+    /// satisfied by the PTW cache.
+    #[inline]
+    pub fn levels_to_walk(page: PageSize, skip: u32) -> u32 {
+        page.walk_levels().saturating_sub(skip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_pages_share_pte_lines() {
+        // Leaf level of a 4 KB walk: PTEs of consecutive pages are 8 B
+        // apart -> 8 per 64 B line.
+        let a = PageTable::pte_addr(3, 0x0000, PageSize::P4K);
+        let b = PageTable::pte_addr(3, 0x1000, PageSize::P4K);
+        assert_eq!(b - a, 8);
+    }
+
+    #[test]
+    fn upper_levels_change_slowly() {
+        // PD entries (level 2 of 4 KB walk) cover 2 MB.
+        let a = PageTable::pte_addr(2, 0, PageSize::P4K);
+        let b = PageTable::pte_addr(2, (2 << 20) - 1, PageSize::P4K);
+        let c = PageTable::pte_addr(2, 2 << 20, PageSize::P4K);
+        assert_eq!(a, b);
+        assert_eq!(c - a, 8);
+    }
+
+    #[test]
+    fn levels_dont_collide() {
+        let l0 = PageTable::pte_addr(0, 0xABCD_E000, PageSize::P4K);
+        let l3 = PageTable::pte_addr(3, 0xABCD_E000, PageSize::P4K);
+        assert_ne!(l0, l3);
+        assert!(l0 >= PT_REGION_BASE && l3 >= PT_REGION_BASE);
+    }
+
+    #[test]
+    fn gigabyte_leaf_is_pdpte() {
+        // 1 GB walk: leaf level (1) entries cover 1 GB.
+        let a = PageTable::pte_addr(1, 0, PageSize::P1G);
+        let b = PageTable::pte_addr(1, (1 << 30) - 1, PageSize::P1G);
+        let c = PageTable::pte_addr(1, 1 << 30, PageSize::P1G);
+        assert_eq!(a, b);
+        assert_eq!(c - a, 8);
+    }
+
+    #[test]
+    fn walk_level_count() {
+        assert_eq!(PageTable::levels_to_walk(PageSize::P4K, 0), 4);
+        assert_eq!(PageTable::levels_to_walk(PageSize::P4K, 3), 1);
+        assert_eq!(PageTable::levels_to_walk(PageSize::P1G, 1), 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Stream prefetcher: detects ascending/descending line streams and
+//! fills ahead into L2 (models the paper's "prefetching also helps to
+//! hide TLB miss latency when access patterns are predictable").
+
+/// Tracked stream state.
+#[derive(Clone, Copy, Debug)]
+struct Stream {
+    last_line: u64,
+    dir: i64,
+    confidence: u8,
+}
+
+/// A simple multi-stream next-line prefetcher.
+///
+/// Stream table is a fixed ring (perf: `observe` runs on *every*
+/// simulated access — EXPERIMENTS.md §Perf iteration 2).
+pub struct Prefetcher {
+    streams: [Stream; 8],
+    n_streams: usize,
+    oldest: usize,
+    degree: u32,
+    issued: u64,
+}
+
+impl Prefetcher {
+    /// `degree` lines fetched ahead per confirmed stream access
+    /// (0 disables prefetching entirely).
+    pub fn new(degree: u32) -> Self {
+        Prefetcher {
+            streams: [Stream {
+                last_line: u64::MAX,
+                dir: 0,
+                confidence: 0,
+            }; 8],
+            n_streams: 0,
+            oldest: 0,
+            degree,
+            issued: 0,
+        }
+    }
+
+    /// Observe a demand access to `line`; returns the lines to fill
+    /// ahead into the cache (empty when no stream is confirmed). `out`
+    /// is cleared first.
+    pub fn observe(&mut self, line: u64, out: &mut Vec<u64>) {
+        out.clear();
+        if self.degree == 0 {
+            return;
+        }
+        // Match an existing stream (within 2 lines of its head).
+        for s in self.streams[..self.n_streams].iter_mut() {
+            let delta = line as i64 - s.last_line as i64;
+            if delta != 0 && delta.abs() <= 2 && (s.dir == 0 || delta.signum() == s.dir.signum()) {
+                s.dir = delta.signum();
+                s.last_line = line;
+                s.confidence = s.confidence.saturating_add(1);
+                if s.confidence >= 2 {
+                    for k in 1..=self.degree as i64 {
+                        let target = line as i64 + s.dir * k;
+                        if target >= 0 {
+                            out.push(target as u64);
+                        }
+                    }
+                    self.issued += out.len() as u64;
+                }
+                return;
+            }
+            if delta == 0 {
+                return; // same line, nothing to learn
+            }
+        }
+        // New stream (bounded table, FIFO replacement via ring index).
+        let slot = if self.n_streams < 8 {
+            let s = self.n_streams;
+            self.n_streams += 1;
+            s
+        } else {
+            let s = self.oldest;
+            self.oldest = (self.oldest + 1) % 8;
+            s
+        };
+        self.streams[slot] = Stream {
+            last_line: line,
+            dir: 0,
+            confidence: 0,
+        };
+    }
+
+    /// Prefetches issued so far.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Forget all streams.
+    pub fn reset(&mut self) {
+        self.n_streams = 0;
+        self.oldest = 0;
+        self.issued = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_confirmed() {
+        let mut p = Prefetcher::new(2);
+        let mut out = Vec::new();
+        p.observe(100, &mut out);
+        assert!(out.is_empty());
+        p.observe(101, &mut out);
+        assert!(out.is_empty()); // confidence building
+        p.observe(102, &mut out);
+        assert_eq!(out, vec![103, 104]);
+    }
+
+    #[test]
+    fn descending_stream() {
+        let mut p = Prefetcher::new(1);
+        let mut out = Vec::new();
+        for line in [50u64, 49, 48, 47] {
+            p.observe(line, &mut out);
+        }
+        assert_eq!(out, vec![46]);
+    }
+
+    #[test]
+    fn random_never_prefetches() {
+        let mut p = Prefetcher::new(2);
+        let mut out = Vec::new();
+        let mut total = 0;
+        for line in [5u64, 900, 13, 77777, 42, 123456, 7, 999] {
+            p.observe(line, &mut out);
+            total += out.len();
+        }
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn disabled_prefetcher_is_silent() {
+        let mut p = Prefetcher::new(0);
+        let mut out = Vec::new();
+        for line in 0..10u64 {
+            p.observe(line, &mut out);
+            assert!(out.is_empty());
+        }
+    }
+}

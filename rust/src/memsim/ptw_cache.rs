@@ -1,0 +1,136 @@
+//! Page-walk caches: small fully-associative caches of upper-level page
+//! table entries (PML4E/PDPTE/PDE), as in Intel's paging-structure
+//! caches. A hit at level L lets the walker skip levels 0..=L.
+
+use crate::memsim::PageSize;
+
+/// One paging-structure cache per skippable level.
+///
+/// Level numbering follows the walk: level 0 = PML4 (bits 47..39),
+/// level 1 = PDPT, level 2 = PD. The final level (PT) is never cached —
+/// its payload *is* the translation, which lives in the TLB.
+pub struct PtwCache {
+    /// Per level: tags of cached upper-bit prefixes (LRU by Vec order,
+    /// front = MRU). Tiny (≤32), linear scan is fastest.
+    levels: [Vec<u64>; 3],
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl PtwCache {
+    /// `capacity` entries per cached level; 0 disables the cache
+    /// entirely (every walk starts at the PML4).
+    pub fn new(capacity: usize) -> Self {
+        PtwCache {
+            levels: [Vec::new(), Vec::new(), Vec::new()],
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Prefix tag for `vaddr` covering walk levels 0..=level.
+    #[inline]
+    fn tag(level: usize, vaddr: u64) -> u64 {
+        // level 0 covers 512 GB regions (shift 39), level 1: 1 GB
+        // (shift 30), level 2: 2 MB (shift 21).
+        let shift = [39u32, 30, 21][level];
+        vaddr >> shift
+    }
+
+    /// Deepest walk level that can be *skipped to* for `vaddr`, given the
+    /// page size being walked. Returns the number of levels the walker
+    /// can skip (0 = start at PML4) and records hit/miss stats.
+    pub fn lookup(&mut self, vaddr: u64, page: PageSize) -> u32 {
+        if self.capacity == 0 {
+            self.misses += 1;
+            return 0;
+        }
+        // For a 4 KB walk (4 levels) the best hit is the PDE cache (skip
+        // 3); for 2 MB (3 levels) the PDPTE cache (skip 2); for 1 GB
+        // (2 levels) the PML4E cache (skip 1).
+        let deepest = (page.walk_levels() - 1).min(3) as usize;
+        for level in (0..deepest).rev() {
+            let tag = Self::tag(level, vaddr);
+            if let Some(pos) = self.levels[level].iter().position(|&t| t == tag) {
+                // Move to front (LRU).
+                let t = self.levels[level].remove(pos);
+                self.levels[level].insert(0, t);
+                self.hits += 1;
+                return (level + 1) as u32;
+            }
+        }
+        self.misses += 1;
+        0
+    }
+
+    /// Install entries for all skippable levels of this walk.
+    pub fn insert(&mut self, vaddr: u64, page: PageSize) {
+        if self.capacity == 0 {
+            return;
+        }
+        let deepest = (page.walk_levels() - 1).min(3) as usize;
+        for level in 0..deepest {
+            let tag = Self::tag(level, vaddr);
+            if !self.levels[level].contains(&tag) {
+                self.levels[level].insert(0, tag);
+                self.levels[level].truncate(self.capacity);
+            }
+        }
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Flush.
+    pub fn reset(&mut self) {
+        for l in &mut self.levels {
+            l.clear();
+        }
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_miss_then_deep_skip() {
+        let mut pwc = PtwCache::new(8);
+        assert_eq!(pwc.lookup(0x1234_5678, PageSize::P4K), 0);
+        pwc.insert(0x1234_5678, PageSize::P4K);
+        // Same 2 MB region: PDE hit lets the walker skip 3 levels.
+        assert_eq!(pwc.lookup(0x1234_0000, PageSize::P4K), 3);
+    }
+
+    #[test]
+    fn far_address_only_upper_hit() {
+        let mut pwc = PtwCache::new(8);
+        pwc.insert(0, PageSize::P4K);
+        // Same 1 GB region, different 2 MB region: PDPTE hit (skip 2).
+        assert_eq!(pwc.lookup(4 << 20, PageSize::P4K), 2);
+        // Different 512 GB region: full walk.
+        assert_eq!(pwc.lookup(1 << 40, PageSize::P4K), 0);
+    }
+
+    #[test]
+    fn gigabyte_walks_use_pml4e_only() {
+        let mut pwc = PtwCache::new(8);
+        pwc.insert(0, PageSize::P1G);
+        assert_eq!(pwc.lookup(512 << 20, PageSize::P1G), 1); // skip PML4
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let mut pwc = PtwCache::new(2);
+        pwc.insert(0 << 21, PageSize::P4K);
+        pwc.insert(1 << 21, PageSize::P4K);
+        pwc.insert(2 << 21, PageSize::P4K); // evicts tag of region 0 at PDE level
+        assert_eq!(pwc.lookup(0, PageSize::P4K), 2); // PDE gone, PDPTE still covers
+    }
+}

@@ -1,0 +1,231 @@
+//! Aggregated simulation statistics, plus the energy model behind the
+//! paper's §2 claim that *"current translation infrastructure uses as
+//! much space as an L1 cache and up to 15% of a chip's energy"*.
+
+/// Per-event energy constants in picojoules, order-of-magnitude values
+/// from published CACTI-style estimates for a ~14 nm core (the paper's
+/// i7-7700 generation). Only *relative* magnitudes matter for the
+/// translation-share experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// One DTLB lookup (CAM/SRAM probe, paid on every virtual access).
+    pub tlb_lookup_pj: f64,
+    /// One STLB probe.
+    pub stlb_lookup_pj: f64,
+    /// One page-walk PTE load issued by the walker (cache energy is
+    /// counted separately through the data-path constants).
+    pub walk_load_pj: f64,
+    /// L1 access.
+    pub l1_pj: f64,
+    /// L2 access.
+    pub l2_pj: f64,
+    /// L3 access.
+    pub l3_pj: f64,
+    /// DRAM line fetch.
+    pub dram_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            tlb_lookup_pj: 4.0,
+            stlb_lookup_pj: 12.0,
+            walk_load_pj: 8.0,
+            l1_pj: 10.0,
+            l2_pj: 25.0,
+            l3_pj: 100.0,
+            dram_pj: 2000.0,
+        }
+    }
+}
+
+/// Counters accumulated by [`crate::memsim::Hierarchy`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Demand data accesses simulated.
+    pub accesses: u64,
+    /// Total cycles charged (translation + data).
+    pub cycles: u64,
+    /// Cycles spent in translation only (TLB probes + walks).
+    pub translation_cycles: u64,
+    /// DTLB hits (any page size).
+    pub dtlb_hits: u64,
+    /// DTLB misses.
+    pub dtlb_misses: u64,
+    /// STLB hits after a DTLB miss.
+    pub stlb_hits: u64,
+    /// Full or partial page-table walks performed.
+    pub walks: u64,
+    /// Memory accesses issued by the walker for PTEs.
+    pub walk_loads: u64,
+    /// Walker PTE loads that missed all caches (DRAM energy dominates
+    /// translation energy when the PTE working set falls out of L3).
+    pub walk_dram_loads: u64,
+    /// L1 data hits.
+    pub l1_hits: u64,
+    /// L2 hits.
+    pub l2_hits: u64,
+    /// L3 hits.
+    pub l3_hits: u64,
+    /// DRAM accesses (L3 misses).
+    pub dram_accesses: u64,
+    /// Prefetch fills issued.
+    pub prefetches: u64,
+}
+
+impl SimStats {
+    /// Mean cycles per access.
+    pub fn cpa(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.accesses as f64
+        }
+    }
+
+    /// DTLB miss ratio.
+    pub fn tlb_miss_rate(&self) -> f64 {
+        let total = self.dtlb_hits + self.dtlb_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.dtlb_misses as f64 / total as f64
+        }
+    }
+
+    /// Share of cycles spent translating (the paper's headline cost).
+    pub fn translation_share(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.translation_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Total memory-system energy (pJ) under `m`, split into
+    /// `(translation, data)` — translation = every TLB probe plus the
+    /// walker's PTE loads; data = the cache/DRAM traffic of demand
+    /// accesses.
+    pub fn energy_pj(&self, m: &EnergyModel) -> (f64, f64) {
+        let translation = (self.dtlb_hits + self.dtlb_misses) as f64 * m.tlb_lookup_pj
+            + self.dtlb_misses as f64 * m.stlb_lookup_pj
+            // Each PTE load pays walker logic + a cache-path access; the
+            // ones that miss to DRAM pay the line fetch as well.
+            + self.walk_loads as f64 * (m.walk_load_pj + m.l1_pj + m.l2_pj)
+            + self.walk_dram_loads as f64 * (m.l3_pj + m.dram_pj);
+        let data = self.l1_hits as f64 * m.l1_pj
+            + self.l2_hits as f64 * (m.l1_pj + m.l2_pj)
+            + self.l3_hits as f64 * (m.l1_pj + m.l2_pj + m.l3_pj)
+            + self.dram_accesses as f64 * (m.l1_pj + m.l2_pj + m.l3_pj + m.dram_pj)
+            + self.prefetches as f64 * m.l2_pj;
+        (translation, data)
+    }
+
+    /// Fraction of memory-system energy spent on translation (the §2
+    /// "up to 15% of a chip's energy" quantity, restricted to the
+    /// memory system we model).
+    pub fn translation_energy_share(&self, m: &EnergyModel) -> f64 {
+        let (t, d) = self.energy_pj(m);
+        if t + d == 0.0 {
+            0.0
+        } else {
+            t / (t + d)
+        }
+    }
+}
+
+impl std::fmt::Display for SimStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "accesses={} cycles={} cpa={:.2} translation={:.1}%",
+            self.accesses,
+            self.cycles,
+            self.cpa(),
+            self.translation_share() * 100.0
+        )?;
+        writeln!(
+            f,
+            "  dtlb: {}/{} miss ({:.2}%)  stlb hits: {}  walks: {} ({} loads)",
+            self.dtlb_misses,
+            self.dtlb_hits + self.dtlb_misses,
+            self.tlb_miss_rate() * 100.0,
+            self.stlb_hits,
+            self.walks,
+            self.walk_loads
+        )?;
+        write!(
+            f,
+            "  data: L1 {}  L2 {}  L3 {}  DRAM {}  prefetches {}",
+            self.l1_hits, self.l2_hits, self.l3_hits, self.dram_accesses, self.prefetches
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_handle_zero() {
+        let s = SimStats::default();
+        assert_eq!(s.cpa(), 0.0);
+        assert_eq!(s.tlb_miss_rate(), 0.0);
+        assert_eq!(s.translation_share(), 0.0);
+    }
+
+    #[test]
+    fn cpa_division() {
+        let s = SimStats {
+            accesses: 4,
+            cycles: 40,
+            ..Default::default()
+        };
+        assert_eq!(s.cpa(), 10.0);
+    }
+
+    #[test]
+    fn energy_split_counts_translation_events() {
+        let m = EnergyModel::default();
+        let s = SimStats {
+            dtlb_hits: 90,
+            dtlb_misses: 10,
+            walk_loads: 40,
+            l1_hits: 100,
+            ..Default::default()
+        };
+        let (t, d) = s.energy_pj(&m);
+        assert_eq!(t, 100.0 * 4.0 + 10.0 * 12.0 + 40.0 * (8.0 + 10.0 + 25.0));
+        assert_eq!(d, 100.0 * 10.0);
+        assert!(s.translation_energy_share(&m) > 0.0);
+    }
+
+    #[test]
+    fn physical_mode_has_zero_translation_energy() {
+        let m = EnergyModel::default();
+        let s = SimStats {
+            l1_hits: 50,
+            dram_accesses: 5,
+            ..Default::default()
+        };
+        assert_eq!(s.translation_energy_share(&m), 0.0);
+    }
+
+    #[test]
+    fn paper_claim_translation_energy_significant_under_thrash() {
+        // §2: translation can reach ~15% of chip energy. Under a
+        // TLB-thrashing virtual workload our memory-system share should
+        // land in the same regime (5-40%).
+        use crate::memsim::{AddressMode, Hierarchy, PageSize};
+        let mut h = Hierarchy::kaby_lake(AddressMode::Virtual(PageSize::P4K));
+        let mut rng = crate::testutil::Rng::new(1);
+        for _ in 0..200_000 {
+            h.access(rng.below(4 << 30) & !3);
+        }
+        let share = h.stats().translation_energy_share(&EnergyModel::default());
+        assert!(
+            (0.05..=0.6).contains(&share),
+            "translation energy share {share:.3} out of plausible range"
+        );
+    }
+}

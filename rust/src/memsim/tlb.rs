@@ -1,0 +1,158 @@
+//! Set-associative TLB model.
+
+/// TLB geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct TlbConfig {
+    /// Total entries.
+    pub entries: usize,
+    /// Associativity (entries must be divisible by ways into a power of
+    /// two number of sets; fully associative when `ways == entries`).
+    pub ways: usize,
+}
+
+/// A set-associative, LRU TLB keyed by virtual page number.
+pub struct Tlb {
+    sets: usize,
+    ways: usize,
+    set_mask: u64,
+    vpns: Vec<u64>,
+    stamps: Vec<u32>,
+    clock: u32,
+    hits: u64,
+    misses: u64,
+}
+
+impl Tlb {
+    /// Build a TLB from its configuration.
+    pub fn new(cfg: TlbConfig) -> Self {
+        assert!(cfg.entries % cfg.ways == 0);
+        let sets = cfg.entries / cfg.ways;
+        assert!(sets.is_power_of_two());
+        Tlb {
+            sets,
+            ways: cfg.ways,
+            set_mask: (sets - 1) as u64,
+            vpns: vec![u64::MAX; cfg.entries],
+            stamps: vec![0; cfg.entries],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Look up `vpn`; true on hit (LRU refreshed).
+    #[inline]
+    pub fn lookup(&mut self, vpn: u64) -> bool {
+        let set = (vpn & self.set_mask) as usize;
+        let base = set * self.ways;
+        self.clock = self.clock.wrapping_add(1);
+        for w in 0..self.ways {
+            if self.vpns[base + w] == vpn {
+                self.stamps[base + w] = self.clock;
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Install a translation for `vpn` (LRU eviction).
+    #[inline]
+    pub fn insert(&mut self, vpn: u64) {
+        let set = (vpn & self.set_mask) as usize;
+        let base = set * self.ways;
+        let mut victim = 0usize;
+        let mut best = u32::MAX;
+        for w in 0..self.ways {
+            if self.vpns[base + w] == u64::MAX {
+                victim = w;
+                break;
+            }
+            if self.stamps[base + w] < best {
+                best = self.stamps[base + w];
+                victim = w;
+            }
+        }
+        self.vpns[base + victim] = vpn;
+        self.stamps[base + victim] = self.clock;
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Reach in pages (total entries).
+    pub fn entries(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    /// Flush all entries and counters.
+    pub fn reset(&mut self) {
+        self.vpns.fill(u64::MAX);
+        self.stamps.fill(0);
+        self.clock = 0;
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_insert_hit() {
+        let mut t = Tlb::new(TlbConfig { entries: 8, ways: 4 });
+        assert!(!t.lookup(42));
+        t.insert(42);
+        assert!(t.lookup(42));
+    }
+
+    #[test]
+    fn reach_limits_hits() {
+        // 64-entry 4-way TLB: sequential working set of 64 pages fits;
+        // 128 pages round-robin thrashes.
+        let mut t = Tlb::new(TlbConfig { entries: 64, ways: 4 });
+        for _ in 0..3 {
+            for vpn in 0..64u64 {
+                if !t.lookup(vpn) {
+                    t.insert(vpn);
+                }
+            }
+        }
+        let (h, m) = t.stats();
+        assert_eq!(m, 64);
+        assert_eq!(h, 128);
+
+        let mut t2 = Tlb::new(TlbConfig { entries: 64, ways: 4 });
+        let mut late_hits = 0;
+        for round in 0..3 {
+            for vpn in 0..128u64 {
+                let hit = t2.lookup(vpn);
+                if !hit {
+                    t2.insert(vpn);
+                }
+                if round == 2 && hit {
+                    late_hits += 1;
+                }
+            }
+        }
+        assert_eq!(late_hits, 0); // LRU + round robin = always miss
+    }
+
+    #[test]
+    fn fully_assoc_small() {
+        let mut t = Tlb::new(TlbConfig { entries: 4, ways: 4 });
+        for vpn in 0..4 {
+            t.insert(vpn);
+        }
+        for vpn in 0..4 {
+            assert!(t.lookup(vpn));
+        }
+        t.insert(99); // evicts LRU (vpn 0)
+        assert!(!t.lookup(0));
+        assert!(t.lookup(99));
+    }
+}

@@ -1,0 +1,429 @@
+//! The fixed-size block allocator (the paper's §3 OS memory manager).
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::pmem::BlockId;
+
+/// Allocation statistics (also the fragmentation story of §3: external
+/// fragmentation is impossible by construction — every free block can
+/// satisfy every request — so the only interesting numbers are counts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Blocks currently allocated.
+    pub allocated: usize,
+    /// High-water mark of simultaneously allocated blocks.
+    pub peak: usize,
+    /// Total successful `alloc` calls over the allocator's lifetime.
+    pub total_allocs: u64,
+    /// Total successful `free` calls.
+    pub total_frees: u64,
+    /// Failed allocations (pool exhausted).
+    pub failed_allocs: u64,
+}
+
+struct Inner {
+    /// LIFO free list (freshly freed blocks are reused first — warm in
+    /// cache, the policy a real block-grained OS allocator would use).
+    free: Vec<u32>,
+    /// One bit per block: currently allocated?
+    live: Vec<u64>,
+    stats: AllocStats,
+}
+
+impl Inner {
+    #[inline]
+    fn is_live(&self, id: u32) -> bool {
+        (self.live[(id / 64) as usize] >> (id % 64)) & 1 == 1
+    }
+    #[inline]
+    fn set_live(&mut self, id: u32, v: bool) {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        if v {
+            self.live[w] |= 1 << b;
+        } else {
+            self.live[w] &= !(1 << b);
+        }
+    }
+}
+
+/// Fixed-size physical block allocator over one stable arena.
+///
+/// Thread-safe: the free list is behind a mutex; block *data* access is
+/// lock-free because each live block is exclusively owned by its
+/// allocating data structure (the crate-internal raw APIs uphold this).
+pub struct BlockAllocator {
+    arena: *mut u8,
+    layout: Layout,
+    block_size: usize,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: the arena pointer is stable for the allocator's lifetime and
+// every block is exclusively owned by one holder at a time (alloc/free
+// are mutex-serialized; data access to distinct blocks never aliases).
+unsafe impl Send for BlockAllocator {}
+unsafe impl Sync for BlockAllocator {}
+
+impl BlockAllocator {
+    /// Create a pool of `capacity_blocks` blocks of `block_size` bytes.
+    ///
+    /// `block_size` must be a power of two ≥ 256 (the paper uses 32 KB;
+    /// the ablation sweeps 8–128 KB).
+    pub fn new(block_size: usize, capacity_blocks: usize) -> Result<Self> {
+        if !block_size.is_power_of_two() || block_size < 256 {
+            return Err(Error::Config(format!(
+                "block_size {block_size} must be a power of two >= 256"
+            )));
+        }
+        if capacity_blocks == 0 || capacity_blocks > u32::MAX as usize {
+            return Err(Error::Config(format!(
+                "capacity_blocks {capacity_blocks} out of range"
+            )));
+        }
+        let layout = Layout::from_size_align(block_size * capacity_blocks, block_size)
+            .map_err(|e| Error::Config(e.to_string()))?;
+        // SAFETY: layout is non-zero-sized and valid.
+        let arena = unsafe { alloc_zeroed(layout) };
+        if arena.is_null() {
+            return Err(Error::Config(format!(
+                "arena allocation of {} bytes failed",
+                block_size * capacity_blocks
+            )));
+        }
+        // Free list initialized high→low so allocation order is 0,1,2,…
+        let free: Vec<u32> = (0..capacity_blocks as u32).rev().collect();
+        Ok(BlockAllocator {
+            arena,
+            layout,
+            block_size,
+            capacity: capacity_blocks,
+            inner: Mutex::new(Inner {
+                free,
+                live: vec![0u64; capacity_blocks.div_ceil(64)],
+                stats: AllocStats::default(),
+            }),
+        })
+    }
+
+    /// Pool with the paper's 32 KB blocks covering `bytes` of memory.
+    pub fn with_capacity_bytes(bytes: usize) -> Result<Self> {
+        Self::new(crate::BLOCK_SIZE, bytes.div_ceil(crate::BLOCK_SIZE).max(1))
+    }
+
+    /// Allocate one (zero-initialized on first use) block.
+    pub fn alloc(&self) -> Result<BlockId> {
+        let mut g = self.inner.lock().unwrap();
+        match g.free.pop() {
+            Some(id) => {
+                g.set_live(id, true);
+                g.stats.allocated += 1;
+                g.stats.total_allocs += 1;
+                g.stats.peak = g.stats.peak.max(g.stats.allocated);
+                Ok(BlockId(id))
+            }
+            None => {
+                g.stats.failed_allocs += 1;
+                Err(Error::OutOfMemory {
+                    requested: 1,
+                    free: 0,
+                    capacity: self.capacity,
+                })
+            }
+        }
+    }
+
+    /// Allocate `n` blocks (all-or-nothing).
+    pub fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.free.len() < n {
+            g.stats.failed_allocs += 1;
+            return Err(Error::OutOfMemory {
+                requested: n,
+                free: g.free.len(),
+                capacity: self.capacity,
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = g.free.pop().unwrap();
+            g.set_live(id, true);
+            out.push(BlockId(id));
+        }
+        g.stats.allocated += n;
+        g.stats.total_allocs += n as u64;
+        g.stats.peak = g.stats.peak.max(g.stats.allocated);
+        Ok(out)
+    }
+
+    /// Allocate a block and zero its contents.
+    pub fn alloc_zeroed(&self) -> Result<BlockId> {
+        let id = self.alloc()?;
+        // SAFETY: id is live and exclusively ours until returned.
+        unsafe { std::ptr::write_bytes(self.block_ptr(id), 0, self.block_size) };
+        Ok(id)
+    }
+
+    /// Return a block to the pool. Double frees are rejected.
+    pub fn free(&self, id: BlockId) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if id.0 as usize >= self.capacity || !g.is_live(id.0) {
+            return Err(Error::InvalidBlock(id));
+        }
+        g.set_live(id.0, false);
+        g.free.push(id.0);
+        g.stats.allocated -= 1;
+        g.stats.total_frees += 1;
+        Ok(())
+    }
+
+    /// Block size in bytes.
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Pool capacity in blocks.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Free blocks remaining.
+    pub fn free_blocks(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+
+    /// Snapshot of allocation statistics.
+    pub fn stats(&self) -> AllocStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Is `id` currently allocated?
+    pub fn is_live(&self, id: BlockId) -> bool {
+        (id.0 as usize) < self.capacity && self.inner.lock().unwrap().is_live(id.0)
+    }
+
+    /// Raw pointer to the block's first byte.
+    ///
+    /// # Safety
+    /// `id` must be live and the caller must uphold exclusive ownership
+    /// of the block's data (no two holders of the same live block).
+    #[inline]
+    pub(crate) unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
+        debug_assert!((id.0 as usize) < self.capacity);
+        self.arena.add(id.0 as usize * self.block_size)
+    }
+
+    /// Copy bytes into a block (safe, bounds-checked API).
+    pub fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        self.check(id, offset, data.len())?;
+        // SAFETY: bounds checked; exclusive ownership per contract.
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), self.block_ptr(id).add(offset), data.len())
+        };
+        Ok(())
+    }
+
+    /// Copy bytes out of a block (safe, bounds-checked API).
+    pub fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.check(id, offset, out.len())?;
+        // SAFETY: bounds checked.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.block_ptr(id).add(offset), out.as_mut_ptr(), out.len())
+        };
+        Ok(())
+    }
+
+    fn check(&self, id: BlockId, offset: usize, len: usize) -> Result<()> {
+        if !self.is_live(id) {
+            return Err(Error::InvalidBlock(id));
+        }
+        if offset + len > self.block_size {
+            return Err(Error::IndexOutOfBounds {
+                index: offset + len,
+                len: self.block_size,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for BlockAllocator {
+    fn drop(&mut self) {
+        // SAFETY: arena was allocated with exactly this layout.
+        unsafe { dealloc(self.arena, self.layout) };
+    }
+}
+
+impl std::fmt::Debug for BlockAllocator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "BlockAllocator {{ block_size: {}, capacity: {}, allocated: {} }}",
+            self.block_size, self.capacity, s.allocated
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let a = BlockAllocator::new(4096, 8).unwrap();
+        let b = a.alloc().unwrap();
+        assert!(a.is_live(b));
+        a.free(b).unwrap();
+        assert!(!a.is_live(b));
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        let _b1 = a.alloc().unwrap();
+        let _b2 = a.alloc().unwrap();
+        assert!(matches!(a.alloc(), Err(Error::OutOfMemory { .. })));
+        assert_eq!(a.stats().failed_allocs, 1);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        let b = a.alloc().unwrap();
+        a.free(b).unwrap();
+        assert!(matches!(a.free(b), Err(Error::InvalidBlock(_))));
+    }
+
+    #[test]
+    fn foreign_block_rejected() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        assert!(matches!(a.free(BlockId(99)), Err(Error::InvalidBlock(_))));
+    }
+
+    #[test]
+    fn alloc_many_all_or_nothing() {
+        let a = BlockAllocator::new(4096, 4).unwrap();
+        let _one = a.alloc().unwrap();
+        assert!(a.alloc_many(4).is_err());
+        assert_eq!(a.free_blocks(), 3); // nothing leaked by the failure
+        let three = a.alloc_many(3).unwrap();
+        assert_eq!(three.len(), 3);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 100, &[1, 2, 3, 4]).unwrap();
+        let mut out = [0u8; 4];
+        a.read(b, 100, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn write_oob_rejected() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        let b = a.alloc().unwrap();
+        assert!(a.write(b, 4093, &[1, 2, 3, 4]).is_err());
+    }
+
+    #[test]
+    fn invalid_block_size_rejected() {
+        assert!(BlockAllocator::new(3000, 4).is_err());
+        assert!(BlockAllocator::new(128, 4).is_err());
+        assert!(BlockAllocator::new(4096, 0).is_err());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let a = BlockAllocator::new(4096, 8).unwrap();
+        let bs = a.alloc_many(5).unwrap();
+        for b in &bs[..3] {
+            a.free(*b).unwrap();
+        }
+        let _x = a.alloc().unwrap();
+        assert_eq!(a.stats().peak, 5);
+        assert_eq!(a.stats().allocated, 3);
+    }
+
+    #[test]
+    fn blocks_are_zeroed_initially() {
+        let a = BlockAllocator::new(4096, 2).unwrap();
+        let b = a.alloc().unwrap();
+        let mut out = [0xFFu8; 16];
+        a.read(b, 0, &mut out).unwrap();
+        assert_eq!(out, [0u8; 16]);
+    }
+
+    #[test]
+    fn prop_alloc_free_conservation() {
+        forall(50, |g| {
+            let cap = g.usize_in(1, 64);
+            let a = BlockAllocator::new(4096, cap).unwrap();
+            let mut live = Vec::new();
+            for _ in 0..g.usize_in(0, 200) {
+                if g.bool(0.5) && !live.is_empty() {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let b: BlockId = live.swap_remove(i);
+                    a.free(b).unwrap();
+                } else if let Ok(b) = a.alloc() {
+                    live.push(b);
+                }
+                // Invariant: allocated + free == capacity, always.
+                assert_eq!(a.stats().allocated + a.free_blocks(), cap);
+                assert_eq!(a.stats().allocated, live.len());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_distinct_blocks_never_alias() {
+        forall(25, |g| {
+            let cap = g.usize_in(2, 32);
+            let a = BlockAllocator::new(4096, cap).unwrap();
+            let blocks = a.alloc_many(cap).unwrap();
+            // Write a distinct pattern to each block; verify no bleed.
+            for (i, b) in blocks.iter().enumerate() {
+                a.write(*b, 0, &[i as u8; 64]).unwrap();
+            }
+            for (i, b) in blocks.iter().enumerate() {
+                let mut out = [0u8; 64];
+                a.read(*b, 0, &mut out).unwrap();
+                assert_eq!(out, [i as u8; 64]);
+            }
+        });
+    }
+
+    #[test]
+    fn concurrent_alloc_free() {
+        let a = std::sync::Arc::new(BlockAllocator::new(4096, 1024).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut mine = Vec::new();
+                for i in 0..200 {
+                    if (i + t) % 3 == 0 && !mine.is_empty() {
+                        a.free(mine.pop().unwrap()).unwrap();
+                    } else if let Ok(b) = a.alloc() {
+                        mine.push(b);
+                    }
+                }
+                for b in mine {
+                    a.free(b).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.stats().allocated, 0);
+        assert_eq!(a.free_blocks(), 1024);
+    }
+}

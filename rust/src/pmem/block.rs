@@ -1,0 +1,33 @@
+//! Block identifiers.
+
+/// Identifier of one fixed-size physical block.
+///
+/// The block's simulated physical address is
+/// `id.0 as u64 * block_size as u64`; block 0 starts at physical 0.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+impl BlockId {
+    /// Simulated physical byte address of the block's first byte.
+    #[inline]
+    pub fn phys_addr(self, block_size: usize) -> u64 {
+        self.0 as u64 * block_size as u64
+    }
+}
+
+impl std::fmt::Debug for BlockId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Block#{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phys_addr_is_linear() {
+        assert_eq!(BlockId(0).phys_addr(32 * 1024), 0);
+        assert_eq!(BlockId(3).phys_addr(32 * 1024), 3 * 32 * 1024);
+    }
+}

@@ -1,0 +1,26 @@
+//! Physical memory management without virtual memory (paper §3).
+//!
+//! The OS model of the paper: memory is segmented into fixed-size blocks
+//! (32 KB in all experiments) which are the *minimum and maximum*
+//! allocation unit — there is no abstraction of large contiguous regions,
+//! and nothing is translated. "Physical addresses" here are offsets into a
+//! single fixed arena, so a block's address never changes and arithmetic
+//! on addresses is meaningful, exactly as on a machine without paging.
+//!
+//! * [`BlockAllocator`] — the fixed-block pool with a LIFO free list.
+//! * [`Region`] — a convenience view over a *logical* sequence of blocks
+//!   (what a large `malloc` becomes in this world).
+
+mod allocator;
+mod block;
+pub mod migrate;
+pub mod protect;
+mod region;
+pub mod swap;
+
+pub use allocator::{AllocStats, BlockAllocator};
+pub use block::BlockId;
+pub use migrate::Relocator;
+pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
+pub use region::Region;
+pub use swap::SwapPool;

@@ -1,0 +1,308 @@
+//! Physical memory protection without address translation (paper §2,
+//! Table 1 "Protection": *"hardware support for physical memory
+//! protection and OS support for using these features"*).
+//!
+//! Models an MPU/PMP-style per-block permission table, the hardware the
+//! paper expects to replace page-table permission bits (cf. RISC-V PMP
+//! and tagged-memory schemes like Hyperflow [5] / CHERI [4], which the
+//! paper cites as evidence that protection can be divorced from
+//! translation). Granularity is the allocation block, so the table is
+//! one word per 32 KB — far smaller than a page table, with no reach
+//! limit and no walker.
+//!
+//! [`ProtectionDomain`]s play the role of address-space IDs: each block
+//! is owned by one domain with per-domain R/W/X bits, and a
+//! [`CheckedMem`] view enforces them on every access.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAllocator, BlockId};
+
+/// Access permissions on a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Perms {
+    /// Loads allowed.
+    pub read: bool,
+    /// Stores allowed.
+    pub write: bool,
+    /// Instruction fetch allowed.
+    pub exec: bool,
+}
+
+impl Perms {
+    /// Read-only.
+    pub const R: Perms = Perms { read: true, write: false, exec: false };
+    /// Read-write (the default data permission).
+    pub const RW: Perms = Perms { read: true, write: true, exec: false };
+    /// Read-execute (code).
+    pub const RX: Perms = Perms { read: true, write: false, exec: true };
+    /// No access.
+    pub const NONE: Perms = Perms { read: false, write: false, exec: false };
+
+    #[inline]
+    fn bits(self) -> u64 {
+        (self.read as u64) | (self.write as u64) << 1 | (self.exec as u64) << 2
+    }
+
+    #[inline]
+    fn from_bits(b: u64) -> Perms {
+        Perms {
+            read: b & 1 != 0,
+            write: b & 2 != 0,
+            exec: b & 4 != 0,
+        }
+    }
+}
+
+/// A protection domain (process/compartment id). Domain 0 is the
+/// "kernel" and passes every check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProtectionDomain(pub u16);
+
+/// Kernel domain: bypasses checks (it programs the table).
+pub const KERNEL: ProtectionDomain = ProtectionDomain(0);
+
+/// The per-block protection table.
+///
+/// One packed word per block: `[owner:16 | perms:3]`, atomically
+/// updated so concurrent domains can be checked lock-free — matching
+/// the hardware the paper envisions (a flat SRAM/CAM consulted in
+/// parallel with the cache access, no walk, no TLB).
+pub struct ProtectionTable {
+    entries: Vec<AtomicU64>,
+}
+
+const OWNER_SHIFT: u32 = 3;
+
+impl ProtectionTable {
+    /// A table for `blocks` blocks; everything starts owned by KERNEL
+    /// with no user access.
+    pub fn new(blocks: usize) -> Self {
+        ProtectionTable {
+            entries: (0..blocks).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Grant `domain` the given permissions on `block` (kernel op).
+    pub fn grant(&self, block: BlockId, domain: ProtectionDomain, perms: Perms) -> Result<()> {
+        let e = self
+            .entries
+            .get(block.0 as usize)
+            .ok_or(Error::InvalidBlock(block))?;
+        e.store((domain.0 as u64) << OWNER_SHIFT | perms.bits(), Ordering::Release);
+        Ok(())
+    }
+
+    /// Revoke all access to `block` (returns it to KERNEL/none).
+    pub fn revoke(&self, block: BlockId) -> Result<()> {
+        self.grant(block, KERNEL, Perms::NONE)
+    }
+
+    /// Owner and permissions of `block`.
+    pub fn lookup(&self, block: BlockId) -> Result<(ProtectionDomain, Perms)> {
+        let e = self
+            .entries
+            .get(block.0 as usize)
+            .ok_or(Error::InvalidBlock(block))?;
+        let v = e.load(Ordering::Acquire);
+        Ok((
+            ProtectionDomain((v >> OWNER_SHIFT) as u16),
+            Perms::from_bits(v),
+        ))
+    }
+
+    /// Check an access by `domain`. Kernel always passes. Returns the
+    /// denied permission on failure.
+    #[inline]
+    pub fn check(
+        &self,
+        block: BlockId,
+        domain: ProtectionDomain,
+        write: bool,
+        exec: bool,
+    ) -> Result<()> {
+        if domain == KERNEL {
+            return Ok(());
+        }
+        let (owner, perms) = self.lookup(block)?;
+        let ok = owner == domain
+            && ((!write && !exec && perms.read)
+                || (write && perms.write)
+                || (exec && perms.exec));
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::Protection {
+                block,
+                domain: domain.0,
+                write,
+                exec,
+            })
+        }
+    }
+}
+
+/// A domain-scoped memory view: every read/write is permission-checked
+/// against the table before touching the allocator (the software
+/// equivalent of the PMP check the paper's hardware would do in the
+/// load/store pipeline).
+pub struct CheckedMem<'a> {
+    alloc: &'a BlockAllocator,
+    table: &'a ProtectionTable,
+    domain: ProtectionDomain,
+}
+
+impl<'a> CheckedMem<'a> {
+    /// A view for `domain`.
+    pub fn new(
+        alloc: &'a BlockAllocator,
+        table: &'a ProtectionTable,
+        domain: ProtectionDomain,
+    ) -> Self {
+        CheckedMem { alloc, table, domain }
+    }
+
+    /// Checked write.
+    pub fn write(&self, block: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        self.table.check(block, self.domain, true, false)?;
+        self.alloc.write(block, offset, data)
+    }
+
+    /// Checked read.
+    pub fn read(&self, block: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.table.check(block, self.domain, false, false)?;
+        self.alloc.read(block, offset, out)
+    }
+
+    /// Allocate a block owned by this domain with `perms`.
+    pub fn alloc(&self, perms: Perms) -> Result<BlockId> {
+        let b = self.alloc.alloc()?;
+        self.table.grant(b, self.domain, perms)?;
+        Ok(b)
+    }
+
+    /// Free a block (must be owned by this domain).
+    pub fn free(&self, block: BlockId) -> Result<()> {
+        let (owner, _) = self.table.lookup(block)?;
+        if owner != self.domain && self.domain != KERNEL {
+            return Err(Error::Protection {
+                block,
+                domain: self.domain.0,
+                write: true,
+                exec: false,
+            });
+        }
+        self.table.revoke(block)?;
+        self.alloc.free(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn setup() -> (BlockAllocator, ProtectionTable) {
+        let a = BlockAllocator::new(4096, 64).unwrap();
+        let t = ProtectionTable::new(64);
+        (a, t)
+    }
+
+    #[test]
+    fn owner_can_rw_others_cannot() {
+        let (a, t) = setup();
+        let alice = CheckedMem::new(&a, &t, ProtectionDomain(1));
+        let bob = CheckedMem::new(&a, &t, ProtectionDomain(2));
+        let b = alice.alloc(Perms::RW).unwrap();
+        alice.write(b, 0, &[1, 2, 3]).unwrap();
+        let mut out = [0u8; 3];
+        alice.read(b, 0, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+        assert!(matches!(
+            bob.read(b, 0, &mut out),
+            Err(Error::Protection { .. })
+        ));
+        assert!(matches!(
+            bob.write(b, 0, &[9]),
+            Err(Error::Protection { .. })
+        ));
+    }
+
+    #[test]
+    fn read_only_blocks_reject_writes() {
+        let (a, t) = setup();
+        let d = CheckedMem::new(&a, &t, ProtectionDomain(3));
+        let b = d.alloc(Perms::R).unwrap();
+        let mut out = [0u8; 1];
+        d.read(b, 0, &mut out).unwrap();
+        assert!(matches!(d.write(b, 0, &[1]), Err(Error::Protection { .. })));
+    }
+
+    #[test]
+    fn exec_permission_checked() {
+        let (a, t) = setup();
+        let b = a.alloc().unwrap();
+        t.grant(b, ProtectionDomain(4), Perms::RX).unwrap();
+        t.check(b, ProtectionDomain(4), false, true).unwrap();
+        t.grant(b, ProtectionDomain(4), Perms::RW).unwrap();
+        assert!(t.check(b, ProtectionDomain(4), false, true).is_err());
+    }
+
+    #[test]
+    fn kernel_bypasses() {
+        let (a, t) = setup();
+        let d = CheckedMem::new(&a, &t, ProtectionDomain(5));
+        let b = d.alloc(Perms::NONE).unwrap();
+        let k = CheckedMem::new(&a, &t, KERNEL);
+        k.write(b, 0, &[7]).unwrap();
+        let mut out = [0u8; 1];
+        k.read(b, 0, &mut out).unwrap();
+        assert_eq!(out, [7]);
+    }
+
+    #[test]
+    fn revoke_cuts_access() {
+        let (a, t) = setup();
+        let d = CheckedMem::new(&a, &t, ProtectionDomain(6));
+        let b = d.alloc(Perms::RW).unwrap();
+        t.revoke(b).unwrap();
+        let mut out = [0u8; 1];
+        assert!(d.read(b, 0, &mut out).is_err());
+    }
+
+    #[test]
+    fn cannot_free_foreign_block() {
+        let (a, t) = setup();
+        let alice = CheckedMem::new(&a, &t, ProtectionDomain(1));
+        let bob = CheckedMem::new(&a, &t, ProtectionDomain(2));
+        let b = alice.alloc(Perms::RW).unwrap();
+        assert!(bob.free(b).is_err());
+        alice.free(b).unwrap();
+    }
+
+    #[test]
+    fn prop_isolation_between_random_domains() {
+        forall(30, |g| {
+            let (a, t) = setup();
+            let n_domains = g.usize_in(2, 6) as u16;
+            let mut owned: Vec<(BlockId, u16)> = Vec::new();
+            for _ in 0..g.usize_in(1, 40) {
+                let dom = 1 + g.usize_in(0, (n_domains - 2) as usize) as u16;
+                let view = CheckedMem::new(&a, &t, ProtectionDomain(dom));
+                if let Ok(b) = view.alloc(Perms::RW) {
+                    owned.push((b, dom));
+                }
+            }
+            // Every block is accessible to its owner and nobody else.
+            for &(b, dom) in &owned {
+                let mut buf = [0u8; 1];
+                for d in 1..=n_domains {
+                    let view = CheckedMem::new(&a, &t, ProtectionDomain(d));
+                    let r = view.read(b, 0, &mut buf);
+                    assert_eq!(r.is_ok(), d == dom, "block {b:?} domain {d} owner {dom}");
+                }
+            }
+        });
+    }
+}

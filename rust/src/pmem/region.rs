@@ -1,0 +1,147 @@
+//! Logical multi-block regions: what a large `malloc` becomes when the OS
+//! only hands out fixed blocks. A [`Region`] is a *logical* byte range
+//! spread over physically unrelated blocks — the degenerate "depth-1 list"
+//! flavor of discontiguous allocation, used by the split stack and the
+//! batcher. (Indexed access at scale wants [`crate::trees::TreeArray`].)
+
+use crate::error::Result;
+use crate::pmem::{BlockAllocator, BlockId};
+
+/// A logical byte range backed by a sequence of blocks.
+pub struct Region<'a> {
+    alloc: &'a BlockAllocator,
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+impl<'a> Region<'a> {
+    /// Allocate a region of at least `len` bytes.
+    pub fn new(alloc: &'a BlockAllocator, len: usize) -> Result<Self> {
+        let bs = alloc.block_size();
+        let nblocks = len.div_ceil(bs).max(1);
+        let blocks = alloc.alloc_many(nblocks)?;
+        Ok(Region { alloc, blocks, len })
+    }
+
+    /// Logical length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the region has zero logical bytes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Backing blocks, in logical order.
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Write `data` at logical `offset`, spanning blocks as needed.
+    pub fn write(&self, offset: usize, data: &[u8]) -> Result<()> {
+        self.bounds(offset, data.len())?;
+        let bs = self.alloc.block_size();
+        let mut off = offset;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let (blk, in_off) = (off / bs, off % bs);
+            let take = rest.len().min(bs - in_off);
+            self.alloc.write(self.blocks[blk], in_off, &rest[..take])?;
+            off += take;
+            rest = &rest[take..];
+        }
+        Ok(())
+    }
+
+    /// Read `out.len()` bytes from logical `offset`.
+    pub fn read(&self, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.bounds(offset, out.len())?;
+        let bs = self.alloc.block_size();
+        let mut off = offset;
+        let mut rest = &mut out[..];
+        while !rest.is_empty() {
+            let (blk, in_off) = (off / bs, off % bs);
+            let take = rest.len().min(bs - in_off);
+            let (head, tail) = rest.split_at_mut(take);
+            self.alloc.read(self.blocks[blk], in_off, head)?;
+            off += take;
+            rest = tail;
+        }
+        Ok(())
+    }
+
+    fn bounds(&self, offset: usize, len: usize) -> Result<()> {
+        if offset + len > self.len {
+            return Err(crate::Error::IndexOutOfBounds {
+                index: offset + len,
+                len: self.len,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Region<'_> {
+    fn drop(&mut self) {
+        for b in &self.blocks {
+            let _ = self.alloc.free(*b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn spans_block_boundaries() {
+        let a = BlockAllocator::new(4096, 8).unwrap();
+        let r = Region::new(&a, 3 * 4096).unwrap();
+        let data: Vec<u8> = (0..255).collect();
+        r.write(4096 - 100, &data).unwrap(); // crosses block 0 -> 1
+        let mut out = vec![0u8; 255];
+        r.read(4096 - 100, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn frees_blocks_on_drop() {
+        let a = BlockAllocator::new(4096, 8).unwrap();
+        {
+            let _r = Region::new(&a, 4 * 4096).unwrap();
+            assert_eq!(a.stats().allocated, 4);
+        }
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let a = BlockAllocator::new(4096, 8).unwrap();
+        let r = Region::new(&a, 100).unwrap();
+        assert!(r.write(90, &[0u8; 20]).is_err());
+    }
+
+    #[test]
+    fn prop_region_rw_matches_vec() {
+        forall(40, |g| {
+            let a = BlockAllocator::new(1024, 64).unwrap();
+            let len = g.usize_in(1, 16 * 1024);
+            let r = Region::new(&a, len).unwrap();
+            let mut model = vec![0u8; len];
+            for _ in 0..g.usize_in(0, 20) {
+                let off = g.usize_in(0, len - 1);
+                let n = g.usize_in(0, len - off);
+                let data: Vec<u8> = g.vec(n, |g| g.usize_in(0, 255) as u8);
+                r.write(off, &data).unwrap();
+                model[off..off + n].copy_from_slice(&data);
+            }
+            let mut out = vec![0u8; len];
+            r.read(0, &mut out).unwrap();
+            assert_eq!(out, model);
+        });
+    }
+}

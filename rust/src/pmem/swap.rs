@@ -1,0 +1,228 @@
+//! Swapping under application control (paper §2, Table 1 "Swapping":
+//! *"machinery for migrating objects between memory pages can also move
+//! objects between memory and disk, under application control"*).
+//!
+//! Block-granular swap: [`SwapPool`] evicts a block's 32 KB payload to a
+//! backing file and frees the physical block; faulting it back allocates
+//! a fresh block (not necessarily the same one — physical addresses are
+//! not stable across swap, which is fine because the tree/pointer
+//! patching machinery from [`crate::pmem::migrate`] already handles
+//! moves). There is no page fault handler: the *application* decides
+//! what to evict and when to fault, which is the paper's whole point.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAllocator, BlockId};
+
+/// A stable handle for swapped-out contents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SwapSlot(u64);
+
+/// Swap statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    /// Blocks evicted to disk.
+    pub evictions: u64,
+    /// Blocks faulted back in.
+    pub faults: u64,
+    /// Slots currently on disk.
+    pub resident_slots: usize,
+}
+
+struct Inner {
+    file: File,
+    /// Free slot indices in the file (reused before extending).
+    free_slots: Vec<u64>,
+    next_slot: u64,
+    live: HashMap<u64, ()>,
+    stats: SwapStats,
+}
+
+/// Block-granular swap file over a [`BlockAllocator`].
+pub struct SwapPool<'a> {
+    alloc: &'a BlockAllocator,
+    inner: Mutex<Inner>,
+}
+
+impl<'a> SwapPool<'a> {
+    /// Create a swap pool backed by a file at `path` (truncated).
+    pub fn new(alloc: &'a BlockAllocator, path: &std::path::Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(SwapPool {
+            alloc,
+            inner: Mutex::new(Inner {
+                file,
+                free_slots: Vec::new(),
+                next_slot: 0,
+                live: HashMap::new(),
+                stats: SwapStats::default(),
+            }),
+        })
+    }
+
+    /// Swap pool backed by an anonymous temp file.
+    pub fn anonymous(alloc: &'a BlockAllocator) -> Result<Self> {
+        let path = std::env::temp_dir().join(format!(
+            "nvm-swap-{}-{:x}",
+            std::process::id(),
+            alloc as *const _ as usize
+        ));
+        let pool = Self::new(alloc, &path)?;
+        // Unlink immediately; the fd keeps it alive (unix).
+        let _ = std::fs::remove_file(&path);
+        Ok(pool)
+    }
+
+    /// Evict `block`: write its payload to disk, free the physical
+    /// block, return the slot handle.
+    pub fn evict(&self, block: BlockId) -> Result<SwapSlot> {
+        if !self.alloc.is_live(block) {
+            return Err(Error::InvalidBlock(block));
+        }
+        let bs = self.alloc.block_size();
+        let mut buf = vec![0u8; bs];
+        self.alloc.read(block, 0, &mut buf)?;
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.free_slots.pop().unwrap_or_else(|| {
+            let s = g.next_slot;
+            g.next_slot += 1;
+            s
+        });
+        g.file.seek(SeekFrom::Start(slot * bs as u64))?;
+        g.file.write_all(&buf)?;
+        g.live.insert(slot, ());
+        g.stats.evictions += 1;
+        g.stats.resident_slots = g.live.len();
+        drop(g);
+        self.alloc.free(block)?;
+        Ok(SwapSlot(slot))
+    }
+
+    /// Fault `slot` back in: allocate a fresh block, read the payload,
+    /// release the slot. Returns the (new) physical block.
+    pub fn fault(&self, slot: SwapSlot) -> Result<BlockId> {
+        let bs = self.alloc.block_size();
+        let mut buf = vec![0u8; bs];
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.live.remove(&slot.0).is_none() {
+                return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
+            }
+            g.file.seek(SeekFrom::Start(slot.0 * bs as u64))?;
+            g.file.read_exact(&mut buf)?;
+            g.free_slots.push(slot.0);
+            g.stats.faults += 1;
+            g.stats.resident_slots = g.live.len();
+        }
+        let fresh = self.alloc.alloc()?;
+        self.alloc.write(fresh, 0, &buf)?;
+        Ok(fresh)
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> SwapStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn evict_fault_roundtrip() {
+        let a = BlockAllocator::new(4096, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 10, b"hello swap").unwrap();
+        let before = a.stats().allocated;
+        let slot = swap.evict(b).unwrap();
+        assert_eq!(a.stats().allocated, before - 1, "physical block freed");
+        let nb = swap.fault(slot).unwrap();
+        let mut out = [0u8; 10];
+        a.read(nb, 10, &mut out).unwrap();
+        assert_eq!(&out, b"hello swap");
+    }
+
+    #[test]
+    fn double_fault_rejected() {
+        let a = BlockAllocator::new(4096, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        let slot = swap.evict(b).unwrap();
+        swap.fault(slot).unwrap();
+        assert!(swap.fault(slot).is_err());
+    }
+
+    #[test]
+    fn eviction_extends_memory_capacity() {
+        // A 4-block pool hosts 16 blocks' worth of data via swap — the
+        // paper's "application-controlled" overcommit.
+        let a = BlockAllocator::new(1024, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut slots = Vec::new();
+        for i in 0..16u32 {
+            let b = a.alloc().unwrap();
+            a.write(b, 0, &i.to_le_bytes()).unwrap();
+            slots.push(swap.evict(b).unwrap());
+        }
+        assert_eq!(a.stats().allocated, 0);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let b = swap.fault(slot).unwrap();
+            let mut out = [0u8; 4];
+            a.read(b, 0, &mut out).unwrap();
+            assert_eq!(u32::from_le_bytes(out), i as u32);
+            a.free(b).unwrap();
+        }
+        assert_eq!(swap.stats().faults, 16);
+        assert_eq!(swap.stats().resident_slots, 0);
+    }
+
+    #[test]
+    fn slots_are_reused() {
+        let a = BlockAllocator::new(1024, 2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        for _ in 0..10 {
+            let b = a.alloc().unwrap();
+            let s = swap.evict(b).unwrap();
+            let b2 = swap.fault(s).unwrap();
+            a.free(b2).unwrap();
+        }
+        let g = swap.inner.lock().unwrap();
+        assert!(g.next_slot <= 2, "slots must be recycled, used {}", g.next_slot);
+    }
+
+    #[test]
+    fn prop_swap_preserves_random_contents() {
+        forall(15, |g| {
+            let a = BlockAllocator::new(1024, 8).unwrap();
+            let swap = SwapPool::anonymous(&a).unwrap();
+            let n = g.usize_in(1, 8);
+            let mut pairs = Vec::new();
+            for _ in 0..n {
+                let data: Vec<u8> = g.vec(1024, |g| g.usize_in(0, 255) as u8);
+                let b = a.alloc().unwrap();
+                a.write(b, 0, &data).unwrap();
+                pairs.push((swap.evict(b).unwrap(), data));
+            }
+            g.rng().shuffle(&mut pairs);
+            for (slot, data) in pairs {
+                let b = swap.fault(slot).unwrap();
+                let mut out = vec![0u8; 1024];
+                a.read(b, 0, &mut out).unwrap();
+                assert_eq!(out, data);
+                a.free(b).unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! Artifact discovery: locate `artifacts/` and parse `manifest.txt`
+//! (written by `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact's signature: argument dtypes and shapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Variant name (file stem).
+    pub name: String,
+    /// Per-argument `(dtype, shape)` as recorded in the manifest, e.g.
+    /// `("float32", vec![256, 8192])`.
+    pub args: Vec<(String, Vec<usize>)>,
+}
+
+/// The artifact directory + parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+impl Artifacts {
+    /// Discover artifacts: `$NVM_ARTIFACTS` if set, else `./artifacts`,
+    /// else `../artifacts` (for tests running under `target/`).
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("NVM_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            if Path::new(cand).join("manifest.txt").exists() {
+                return Self::open(cand);
+            }
+        }
+        Err(Error::Artifact(
+            "artifacts/manifest.txt not found; run `make artifacts` (or set NVM_ARTIFACTS)".into(),
+        ))
+    }
+
+    /// Open a specific artifact directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", manifest.display())))?;
+        let mut specs = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let spec = Self::parse_line(line)?;
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Artifacts { dir, specs })
+    }
+
+    /// Parse one manifest line: `name dtype[d0,d1];dtype[d0]` …
+    fn parse_line(line: &str) -> Result<ArtifactSpec> {
+        let bad = |m: &str| Error::Artifact(format!("manifest line {line:?}: {m}"));
+        let (name, sig) = line
+            .split_once(' ')
+            .ok_or_else(|| bad("missing signature"))?;
+        let mut args = Vec::new();
+        for part in sig.split(';') {
+            let (dtype, rest) = part
+                .split_once('[')
+                .ok_or_else(|| bad("missing '[' in arg"))?;
+            let dims = rest.trim_end_matches(']');
+            let shape: Vec<usize> = if dims.is_empty() {
+                vec![]
+            } else {
+                dims.split(',')
+                    .map(|d| d.parse().map_err(|_| bad("bad dim")))
+                    .collect::<Result<_>>()?
+            };
+            args.push((dtype.to_string(), shape));
+        }
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            args,
+        })
+    }
+
+    /// Path of the HLO text file for `name`.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        if !self.specs.contains_key(name) {
+            return Err(Error::Artifact(format!(
+                "unknown artifact {name:?} (have: {:?})",
+                self.names()
+            )));
+        }
+        let p = self.dir.join(format!("{name}.hlo.txt"));
+        if !p.exists() {
+            return Err(Error::Artifact(format!("{} missing on disk", p.display())));
+        }
+        Ok(p)
+    }
+
+    /// Spec for `name`.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// All artifact names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_line() {
+        let s = Artifacts::parse_line("bs_blocked_1x8192 float32[1,8192];float32[]").unwrap();
+        assert_eq!(s.name, "bs_blocked_1x8192");
+        assert_eq!(s.args[0], ("float32".into(), vec![1, 8192]));
+        assert_eq!(s.args[1], ("float32".into(), vec![]));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Artifacts::parse_line("no_signature_here").is_err());
+        assert!(Artifacts::parse_line("x float32 8192").is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_fails() {
+        assert!(Artifacts::open("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT execution path: load AOT artifacts, compile once, execute
+//! from the Rust hot path. Python only ever ran at build time
+//! (`make artifacts`).
+
+mod artifacts;
+mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Artifacts};
+pub use pjrt::{Engine, Input};

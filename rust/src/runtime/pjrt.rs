@@ -1,0 +1,142 @@
+//! PJRT engine: compile-once, execute-many over the CPU client.
+//!
+//! Follows the /opt/xla-example pattern: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are cached per artifact
+//! name; compilation happens at most once per variant per process.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::runtime::Artifacts;
+
+/// A typed input literal for execution.
+pub enum Input<'a> {
+    /// f32 buffer reshaped to `shape`.
+    F32(&'a [f32], Vec<i64>),
+    /// i32 buffer reshaped to `shape`.
+    I32(&'a [i32], Vec<i64>),
+    /// f32 scalar.
+    ScalarF32(f32),
+}
+
+impl Input<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(data, shape) => {
+                if shape.len() == 1 {
+                    xla::Literal::vec1(data)
+                } else {
+                    xla::Literal::vec1(data).reshape(shape)?
+                }
+            }
+            Input::I32(data, shape) => {
+                if shape.len() == 1 {
+                    xla::Literal::vec1(data)
+                } else {
+                    xla::Literal::vec1(data).reshape(shape)?
+                }
+            }
+            Input::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// The compile-once / run-many engine around a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    compiles: Mutex<u64>,
+}
+
+impl Engine {
+    /// Create an engine over discovered artifacts.
+    pub fn new() -> Result<Self> {
+        Self::with_artifacts(Artifacts::discover()?)
+    }
+
+    /// Create an engine over a specific artifact set.
+    pub fn with_artifacts(artifacts: Artifacts) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+            compiles: Mutex::new(0),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact registry.
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    /// Number of compilations performed (tests assert compile-once).
+    pub fn compile_count(&self) -> u64 {
+        *self.compiles.lock().unwrap()
+    }
+
+    /// Ensure `name` is compiled (warm the cache ahead of timing runs).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.with_executable(name, |_| Ok(()))
+    }
+
+    fn with_executable<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let path = self.artifacts.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            *self.compiles.lock().unwrap() += 1;
+            cache.insert(name.to_string(), exe);
+        }
+        f(cache.get(name).unwrap())
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the flattened
+    /// output tuple as f32 vectors.
+    pub fn run_f32(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let outs = self.run_raw(name, inputs)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Error::from))
+            .collect()
+    }
+
+    /// Execute artifact `name`; returns the output tuple as i32 vectors.
+    pub fn run_i32(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<i32>>> {
+        let outs = self.run_raw(name, inputs)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(Error::from))
+            .collect()
+    }
+
+    fn run_raw(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()?;
+        self.with_executable(name, |exe| {
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            Ok(result.to_tuple()?)
+        })
+    }
+}
+
+// The engine is used from the coordinator's worker threads.
+// SAFETY: the xla crate's client/executable wrap thread-safe PJRT
+// objects; the cache is mutex-guarded.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}

@@ -1,0 +1,196 @@
+//! Synthetic call traces: generation and replay.
+//!
+//! A trace is a balanced sequence of call/return events with frame sizes
+//! drawn from a profile. Replaying it against [`SplitStack`] measures the
+//! *real* per-call check cost; replaying against a plain contiguous
+//! buffer gives the baseline. The Figure 3 bench uses both plus the
+//! analytic model in [`crate::stack::profiles`].
+
+use crate::error::Result;
+use crate::pmem::BlockAllocator;
+use crate::stack::{SplitStack, StackStats};
+use crate::testutil::Rng;
+
+/// One event in a call trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallEvent {
+    /// Push a frame of the given payload size with `args` argument bytes.
+    Call {
+        /// Frame payload bytes.
+        size: u16,
+        /// Argument bytes copied on call.
+        args: u8,
+    },
+    /// Pop the top frame.
+    Ret,
+}
+
+/// A balanced call/return sequence.
+#[derive(Clone, Debug)]
+pub struct CallTrace {
+    /// Events in program order (calls ≥ rets at every prefix; balanced
+    /// overall).
+    pub events: Vec<CallEvent>,
+    /// Maximum depth reached.
+    pub max_depth: usize,
+}
+
+impl CallTrace {
+    /// Generate a random trace of ~`n_calls` calls.
+    ///
+    /// `mean_frame` controls frame sizes (uniform in [mean/2, 3*mean/2],
+    /// clamped to the stack's max); `recursion_bias` ∈ [0,1] skews toward
+    /// deep chains (1.0 ≈ fib-like recursion, 0.0 ≈ flat call fan-out).
+    pub fn generate(rng: &mut Rng, n_calls: usize, mean_frame: usize, recursion_bias: f64) -> Self {
+        let mut events = Vec::with_capacity(2 * n_calls);
+        let mut depth = 0usize;
+        let mut max_depth = 0usize;
+        let mut calls = 0usize;
+        let lo = (mean_frame / 2).max(8);
+        let hi = (mean_frame * 3 / 2).max(lo + 1);
+        while calls < n_calls || depth > 0 {
+            let push = calls < n_calls
+                && (depth == 0 || {
+                    // Deeper stacks keep pushing with prob ~ bias.
+                    let p = 0.35 + 0.6 * recursion_bias;
+                    rng.chance(p)
+                });
+            if push {
+                let size = rng.range(lo, hi).min(u16::MAX as usize) as u16;
+                let args = rng.range(0, 32.min(size as usize)) as u8;
+                events.push(CallEvent::Call { size, args });
+                depth += 1;
+                calls += 1;
+                max_depth = max_depth.max(depth);
+            } else {
+                events.push(CallEvent::Ret);
+                depth -= 1;
+            }
+        }
+        CallTrace { events, max_depth }
+    }
+
+    /// Number of call events.
+    pub fn n_calls(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, CallEvent::Call { .. }))
+            .count()
+    }
+}
+
+/// Replays traces against split and contiguous stacks.
+pub struct TraceRunner;
+
+/// A dummy args buffer (contents don't matter for timing; size ≤ 32).
+const ARGS: [u8; 32] = [0xA5; 32];
+
+impl TraceRunner {
+    /// Replay on a [`SplitStack`]; returns final stats.
+    pub fn run_split(trace: &CallTrace, alloc: &BlockAllocator) -> Result<StackStats> {
+        let mut s = SplitStack::new(alloc)?;
+        for ev in &trace.events {
+            match *ev {
+                CallEvent::Call { size, args } => {
+                    s.call(size as usize, &ARGS[..args as usize])?;
+                }
+                CallEvent::Ret => s.ret()?,
+            }
+        }
+        Ok(s.stats())
+    }
+
+    /// Replay on a contiguous stack (one big buffer, classic bump): the
+    /// virtual-memory baseline. Returns bytes touched (to keep the work
+    /// comparable and the optimizer honest).
+    pub fn run_contiguous(trace: &CallTrace, buf: &mut Vec<u8>) -> u64 {
+        let mut sp = 0usize;
+        let mut bases: Vec<usize> = Vec::with_capacity(trace.max_depth);
+        let mut touched = 0u64;
+        for ev in &trace.events {
+            match *ev {
+                CallEvent::Call { size, args } => {
+                    let size = size as usize;
+                    if sp + size > buf.len() {
+                        buf.resize((sp + size).next_power_of_two(), 0);
+                    }
+                    buf[sp..sp + args as usize].copy_from_slice(&ARGS[..args as usize]);
+                    bases.push(sp);
+                    sp += size;
+                    touched += args as u64;
+                }
+                CallEvent::Ret => {
+                    sp = bases.pop().expect("balanced trace");
+                }
+            }
+        }
+        touched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn generated_trace_is_balanced() {
+        let mut rng = Rng::new(1);
+        let t = CallTrace::generate(&mut rng, 500, 128, 0.5);
+        let mut depth = 0i64;
+        for ev in &t.events {
+            match ev {
+                CallEvent::Call { .. } => depth += 1,
+                CallEvent::Ret => depth -= 1,
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0);
+        assert_eq!(t.n_calls(), 500);
+    }
+
+    #[test]
+    fn recursion_bias_deepens() {
+        let mut rng = Rng::new(2);
+        let flat = CallTrace::generate(&mut rng, 2000, 64, 0.0);
+        let deep = CallTrace::generate(&mut rng, 2000, 64, 1.0);
+        assert!(
+            deep.max_depth > flat.max_depth * 2,
+            "deep {} vs flat {}",
+            deep.max_depth,
+            flat.max_depth
+        );
+    }
+
+    #[test]
+    fn split_replay_matches_call_count() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let mut rng = Rng::new(3);
+        let t = CallTrace::generate(&mut rng, 1000, 200, 0.7);
+        let stats = TraceRunner::run_split(&t, &a).unwrap();
+        assert_eq!(stats.calls, 1000);
+        assert_eq!(a.stats().allocated, 0); // stack dropped clean
+    }
+
+    #[test]
+    fn contiguous_replay_runs() {
+        let mut rng = Rng::new(4);
+        let t = CallTrace::generate(&mut rng, 1000, 200, 0.7);
+        let mut buf = Vec::new();
+        TraceRunner::run_contiguous(&t, &mut buf);
+        assert!(buf.len() >= 200);
+    }
+
+    #[test]
+    fn prop_replay_never_leaks_blocks() {
+        forall(15, |g| {
+            let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+            let n = g.usize_in(1, 2000);
+            let frame = g.usize_in(16, 400);
+            let bias = g.rng().f64();
+            let t = CallTrace::generate(g.rng(), n, frame, bias);
+            TraceRunner::run_split(&t, &a).unwrap();
+            assert_eq!(a.stats().allocated, 0);
+        });
+    }
+}

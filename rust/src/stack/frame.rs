@@ -1,0 +1,15 @@
+//! Frame handles.
+
+/// A handle to a live stack frame (index into the frame metadata stack).
+///
+/// Frames obey LIFO discipline: only the most recent frame may be
+/// returned from, and handles to popped frames are rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameRef(pub(crate) usize);
+
+impl FrameRef {
+    /// Depth of this frame (0 = first call).
+    pub fn depth(self) -> usize {
+        self.0
+    }
+}

@@ -1,0 +1,27 @@
+//! Split stacks (paper §3.1).
+//!
+//! Without large contiguous regions the program stack becomes a chain of
+//! fixed-size blocks. Every function call checks whether the current
+//! block has room for its frame (≈3 x86 instructions); in the rare
+//! overflow case a new block is allocated, non-register arguments are
+//! copied over, and the stack pointer is adjusted — all undone at return.
+//! This is gcc's `-fsplit-stack` with allocation requests pinned to the
+//! OS block size, exactly the configuration the paper measured.
+//!
+//! * [`SplitStack`] — the executable frame machine over
+//!   [`crate::pmem::BlockAllocator`] blocks (correctness + measured
+//!   check cost).
+//! * [`CallTrace`] / [`TraceRunner`] — synthetic call-tree generation
+//!   and replay against both the split stack and a contiguous reference.
+//! * [`profiles`] — the per-benchmark call-density model behind
+//!   Figure 3.
+
+mod call_trace;
+mod frame;
+pub mod profiles;
+mod split_stack;
+
+pub use call_trace::{CallEvent, CallTrace, TraceRunner};
+pub use frame::FrameRef;
+pub use profiles::{BenchmarkProfile, SPLIT_STACK_CHECK_INSNS};
+pub use split_stack::{SplitStack, StackStats};

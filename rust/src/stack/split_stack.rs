@@ -1,0 +1,337 @@
+//! The split-stack frame machine.
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAllocator, BlockId};
+use crate::stack::FrameRef;
+
+/// Per-block header: link to the previous block and the stack offset to
+/// restore when this block is released.
+const HEADER_BYTES: usize = 16;
+
+/// Split-stack statistics — the quantities Figure 3's model consumes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StackStats {
+    /// Function calls executed (each pays the ~3-instruction check).
+    pub calls: u64,
+    /// Calls that overflowed into a fresh block (paid the slow path).
+    pub overflows: u64,
+    /// Argument bytes copied across block boundaries on overflow.
+    pub args_copied: u64,
+    /// Blocks currently in the chain.
+    pub blocks_live: usize,
+    /// High-water mark of chained blocks.
+    pub blocks_peak: usize,
+}
+
+struct FrameMeta {
+    block: BlockId,
+    /// Offset of the frame base within its block.
+    base: usize,
+    /// Frame payload size.
+    size: usize,
+    /// True if this frame opened a fresh block (return frees it).
+    opened_block: bool,
+}
+
+/// A segmented program stack over fixed-size allocator blocks.
+///
+/// `call` = function prologue (space check, possible block switch, arg
+/// copy); `ret` = epilogue (possible block release). Frame locals are
+/// accessed through [`FrameRef`] with bounds checks.
+pub struct SplitStack<'a> {
+    alloc: &'a BlockAllocator,
+    /// Current (top) block and bump offset within it.
+    top: BlockId,
+    sp: usize,
+    frames: Vec<FrameMeta>,
+    stats: StackStats,
+}
+
+impl<'a> SplitStack<'a> {
+    /// Create a stack with one initial block.
+    pub fn new(alloc: &'a BlockAllocator) -> Result<Self> {
+        let top = alloc.alloc()?;
+        Ok(SplitStack {
+            alloc,
+            top,
+            sp: HEADER_BYTES,
+            frames: Vec::new(),
+            stats: StackStats {
+                blocks_live: 1,
+                blocks_peak: 1,
+                ..Default::default()
+            },
+        })
+    }
+
+    /// Maximum frame payload a single block can hold.
+    pub fn max_frame(&self) -> usize {
+        self.alloc.block_size() - HEADER_BYTES
+    }
+
+    /// Function prologue: push a frame of `size` bytes, copying `args`
+    /// into its base (the "non-register arguments").
+    ///
+    /// The fast path is the paper's 3-instruction check: compare
+    /// `sp + size` against the block limit and bump. The slow path
+    /// allocates a block, links it, and copies `args`.
+    pub fn call(&mut self, size: usize, args: &[u8]) -> Result<FrameRef> {
+        if size > self.max_frame() {
+            return Err(Error::FrameTooLarge {
+                frame: size,
+                payload: self.max_frame(),
+            });
+        }
+        debug_assert!(args.len() <= size);
+        self.stats.calls += 1;
+        let mut opened_block = false;
+        if self.sp + size > self.alloc.block_size() {
+            // Slow path: chain a new block.
+            let fresh = self.alloc.alloc()?;
+            let mut header = [0u8; HEADER_BYTES];
+            header[..8].copy_from_slice(&(self.top.0 as u64).to_le_bytes());
+            header[8..].copy_from_slice(&(self.sp as u64).to_le_bytes());
+            self.alloc.write(fresh, 0, &header)?;
+            self.top = fresh;
+            self.sp = HEADER_BYTES;
+            self.stats.overflows += 1;
+            self.stats.args_copied += args.len() as u64;
+            self.stats.blocks_live += 1;
+            self.stats.blocks_peak = self.stats.blocks_peak.max(self.stats.blocks_live);
+            opened_block = true;
+        }
+        let base = self.sp;
+        if !args.is_empty() {
+            self.alloc.write(self.top, base, args)?;
+        }
+        self.sp += size;
+        self.frames.push(FrameMeta {
+            block: self.top,
+            base,
+            size,
+            opened_block,
+        });
+        Ok(FrameRef(self.frames.len() - 1))
+    }
+
+    /// Function epilogue: pop the top frame, releasing its block if the
+    /// frame opened one.
+    pub fn ret(&mut self) -> Result<()> {
+        let f = self.frames.pop().ok_or(Error::StackUnderflow)?;
+        debug_assert_eq!(f.block, self.top);
+        if f.opened_block {
+            // Restore the previous block from the header.
+            let mut header = [0u8; HEADER_BYTES];
+            self.alloc.read(self.top, 0, &mut header)?;
+            let prev = BlockId(u64::from_le_bytes(header[..8].try_into().unwrap()) as u32);
+            let prev_sp = u64::from_le_bytes(header[8..].try_into().unwrap()) as usize;
+            self.alloc.free(self.top)?;
+            self.top = prev;
+            self.sp = prev_sp;
+            self.stats.blocks_live -= 1;
+        } else {
+            self.sp = f.base;
+        }
+        Ok(())
+    }
+
+    /// Write into the top-most validity-checked frame's locals.
+    pub fn write_local(&mut self, frame: FrameRef, offset: usize, data: &[u8]) -> Result<()> {
+        let f = self.frame(frame)?;
+        if offset + data.len() > f.size {
+            return Err(Error::IndexOutOfBounds {
+                index: offset + data.len(),
+                len: f.size,
+            });
+        }
+        self.alloc.write(f.block, f.base + offset, data)
+    }
+
+    /// Read from a live frame's locals.
+    pub fn read_local(&self, frame: FrameRef, offset: usize, out: &mut [u8]) -> Result<()> {
+        let f = self.frame(frame)?;
+        if offset + out.len() > f.size {
+            return Err(Error::IndexOutOfBounds {
+                index: offset + out.len(),
+                len: f.size,
+            });
+        }
+        self.alloc.read(f.block, f.base + offset, out)
+    }
+
+    fn frame(&self, frame: FrameRef) -> Result<&FrameMeta> {
+        self.frames.get(frame.0).ok_or(Error::StackUnderflow)
+    }
+
+    /// Current call depth.
+    pub fn depth(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> StackStats {
+        self.stats
+    }
+}
+
+impl Drop for SplitStack<'_> {
+    fn drop(&mut self) {
+        // Unwind any live frames, then release the initial block.
+        while self.ret().is_ok() {}
+        let _ = self.alloc.free(self.top);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn alloc() -> BlockAllocator {
+        BlockAllocator::new(1024, 512).unwrap()
+    }
+
+    #[test]
+    fn push_pop_single_frame() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        let f = s.call(64, b"args").unwrap();
+        let mut out = [0u8; 4];
+        s.read_local(f, 0, &mut out).unwrap();
+        assert_eq!(&out, b"args");
+        s.ret().unwrap();
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn overflow_allocates_and_frees_blocks() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        // 1008-byte payload per 1024-byte block; 300-byte frames: 3 per
+        // block.
+        for _ in 0..10 {
+            s.call(300, &[]).unwrap();
+        }
+        assert!(s.stats().overflows > 0);
+        let peak = s.stats().blocks_peak;
+        assert!(peak >= 3, "peak {peak}");
+        for _ in 0..10 {
+            s.ret().unwrap();
+        }
+        assert_eq!(s.stats().blocks_live, 1);
+        drop(s);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn args_survive_block_switch() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        // Fill the first block almost exactly.
+        s.call(900, &[]).unwrap();
+        // Next call must overflow; its args must be intact in the new
+        // block (the copy the paper describes).
+        let args: Vec<u8> = (0..200u8).collect();
+        let f = s.call(256, &args).unwrap();
+        let mut out = vec![0u8; 200];
+        s.read_local(f, 0, &mut out).unwrap();
+        assert_eq!(out, args);
+        assert_eq!(s.stats().overflows, 1);
+        assert_eq!(s.stats().args_copied, 200);
+    }
+
+    #[test]
+    fn frame_too_large_rejected() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        assert!(matches!(
+            s.call(2000, &[]),
+            Err(Error::FrameTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn underflow_rejected() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        assert!(matches!(s.ret(), Err(Error::StackUnderflow)));
+    }
+
+    #[test]
+    fn locals_bounds_checked() {
+        let a = alloc();
+        let mut s = SplitStack::new(&a).unwrap();
+        let f = s.call(32, &[]).unwrap();
+        assert!(s.write_local(f, 30, &[0u8; 4]).is_err());
+        let mut buf = [0u8; 4];
+        assert!(s.read_local(f, 30, &mut buf).is_err());
+    }
+
+    #[test]
+    fn deep_recursion_many_blocks() {
+        let a = BlockAllocator::new(1024, 512).unwrap();
+        let mut s = SplitStack::new(&a).unwrap();
+        let depth = 1000usize;
+        for i in 0..depth {
+            let f = s.call(128, &(i as u64).to_le_bytes()).unwrap();
+            assert_eq!(f.depth(), i);
+        }
+        // Unwind verifying each frame's argument on the way down.
+        for i in (0..depth).rev() {
+            let f = FrameRef(i);
+            let mut out = [0u8; 8];
+            s.read_local(f, 0, &mut out).unwrap();
+            assert_eq!(u64::from_le_bytes(out), i as u64);
+            s.ret().unwrap();
+        }
+        assert_eq!(s.stats().blocks_live, 1);
+    }
+
+    #[test]
+    fn prop_lifo_discipline_preserves_locals() {
+        forall(30, |g| {
+            let a = BlockAllocator::new(1024, 1024).unwrap();
+            let mut s = SplitStack::new(&a).unwrap();
+            let mut model: Vec<(usize, u64)> = Vec::new(); // (size, tag)
+            for step in 0..g.usize_in(1, 300) {
+                if g.bool(0.6) || model.is_empty() {
+                    let size = g.usize_in(16, 800);
+                    let tag = (step as u64) << 16 | size as u64;
+                    let f = s.call(size, &tag.to_le_bytes()).unwrap();
+                    assert_eq!(f.depth(), model.len());
+                    model.push((size, tag));
+                } else {
+                    model.pop();
+                    s.ret().unwrap();
+                }
+                // Every live frame's tag must still be readable.
+                for (i, (_, tag)) in model.iter().enumerate() {
+                    let mut out = [0u8; 8];
+                    s.read_local(FrameRef(i), 0, &mut out).unwrap();
+                    assert_eq!(u64::from_le_bytes(out), *tag, "frame {i}");
+                }
+            }
+            assert_eq!(s.depth(), model.len());
+        });
+    }
+
+    #[test]
+    fn prop_block_conservation() {
+        forall(20, |g| {
+            let a = BlockAllocator::new(1024, 1024).unwrap();
+            {
+                let mut s = SplitStack::new(&a).unwrap();
+                for _ in 0..g.usize_in(0, 500) {
+                    if g.bool(0.55) {
+                        let _ = s.call(g.usize_in(8, 900), &[]);
+                    } else {
+                        let _ = s.ret();
+                    }
+                    // blocks_live tracks reality.
+                    assert_eq!(a.stats().allocated, s.stats().blocks_live);
+                }
+            }
+            assert_eq!(a.stats().allocated, 0); // drop unwound everything
+        });
+    }
+}

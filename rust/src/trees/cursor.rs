@@ -1,0 +1,208 @@
+//! The Figure 2 iterator optimization: a cursor caching the most
+//! recently used leaf.
+//!
+//! Sequential `next()` is a bounds check + pointer bump; the full tree
+//! walk happens only when iterating past a leaf's last element. Random
+//! `seek()` probes the cached leaf first — the software analogue of a
+//! page-table-walk cache (paper §4.4).
+
+use crate::trees::tree_array::{Pod, TreeArray};
+
+/// Cursor over a [`TreeArray`] with a cached leaf pointer.
+pub struct Cursor<'t, 'a, T: Pod> {
+    tree: &'t TreeArray<'a, T>,
+    /// Cached leaf data pointer (null when unpositioned).
+    leaf: *const T,
+    /// First element index covered by the cached leaf.
+    leaf_base: usize,
+    /// One past the last element covered by the cached leaf.
+    leaf_end: usize,
+    /// Next element index for sequential iteration.
+    pos: usize,
+    /// Leaf-cache statistics (hits = accesses served without a walk).
+    hits: u64,
+    walks: u64,
+}
+
+impl<'t, 'a, T: Pod> Cursor<'t, 'a, T> {
+    pub(crate) fn new(tree: &'t TreeArray<'a, T>) -> Self {
+        Cursor {
+            tree,
+            leaf: std::ptr::null(),
+            leaf_base: 0,
+            leaf_end: 0,
+            pos: 0,
+            hits: 0,
+            walks: 0,
+        }
+    }
+
+    /// Refill the leaf cache for the leaf containing `i` (a full walk).
+    #[cold]
+    fn refill(&mut self, i: usize) {
+        let leaf_idx = i / self.tree.geo.leaf_cap;
+        let (p, span) = self.tree.leaf_ptr(leaf_idx);
+        self.leaf = p as *const T;
+        self.leaf_base = leaf_idx * self.tree.geo.leaf_cap;
+        self.leaf_end = self.leaf_base + span;
+        self.walks += 1;
+    }
+
+    /// Read element `i`, probing the cached leaf first.
+    #[inline]
+    pub fn seek(&mut self, i: usize) -> T {
+        debug_assert!(i < self.tree.len());
+        if i < self.leaf_base || i >= self.leaf_end {
+            self.refill(i);
+        } else {
+            self.hits += 1;
+        }
+        // SAFETY: leaf covers [leaf_base, leaf_end) and i is inside.
+        unsafe { self.leaf.add(i - self.leaf_base).read() }
+    }
+
+    /// (hits, walks) since creation — the leaf-cache effectiveness, the
+    /// quantity Table 2's "Iter" rows hinge on.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.walks)
+    }
+
+    /// Reset sequential position to `i` (next `next()` returns elem `i`).
+    pub fn rewind(&mut self, i: usize) {
+        self.pos = i;
+    }
+}
+
+impl<T: Pod> Iterator for Cursor<'_, '_, T> {
+    type Item = T;
+
+    /// The paper's Figure 2 `next()`: bump within the cached leaf; walk
+    /// only across leaf boundaries.
+    #[inline]
+    fn next(&mut self) -> Option<T> {
+        if self.pos >= self.tree.len() {
+            return None;
+        }
+        let i = self.pos;
+        self.pos += 1;
+        if i >= self.leaf_end || i < self.leaf_base {
+            self.refill(i);
+        } else {
+            self.hits += 1;
+        }
+        // SAFETY: cached leaf covers i after refill.
+        Some(unsafe { self.leaf.add(i - self.leaf_base).read() })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.tree.len() - self.pos.min(self.tree.len());
+        (rem, Some(rem))
+    }
+}
+
+impl<T: Pod> ExactSizeIterator for Cursor<'_, '_, T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+    use crate::testutil::forall;
+
+    fn tree_with(n: usize) -> (BlockAllocator, Vec<u32>) {
+        let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        (a, data)
+    }
+
+    #[test]
+    fn sequential_iteration_matches() {
+        let (a, data) = tree_with(256 * 30 + 11);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let collected: Vec<u32> = t.iter().collect();
+        assert_eq!(collected, data);
+    }
+
+    #[test]
+    fn walks_once_per_leaf() {
+        let (a, data) = tree_with(256 * 8);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.iter();
+        while c.next().is_some() {}
+        let (hits, walks) = c.cache_stats();
+        assert_eq!(walks, 8); // exactly one walk per leaf
+        assert_eq!(hits, 256 * 8 - 8);
+    }
+
+    #[test]
+    fn seek_same_leaf_hits_cache() {
+        let (a, data) = tree_with(256 * 4);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.cursor();
+        assert_eq!(c.seek(10), data[10]); // walk
+        assert_eq!(c.seek(20), data[20]); // same leaf: hit
+        assert_eq!(c.seek(300), data[300]); // new leaf: walk
+        let (hits, walks) = c.cache_stats();
+        assert_eq!((hits, walks), (1, 2));
+    }
+
+    #[test]
+    fn rewind_restarts() {
+        let (a, data) = tree_with(600);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.iter();
+        for _ in 0..500 {
+            c.next();
+        }
+        c.rewind(0);
+        assert_eq!(c.next(), Some(data[0]));
+    }
+
+    #[test]
+    fn size_hint_exact() {
+        let (a, data) = tree_with(100);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 100).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.iter();
+        assert_eq!(c.size_hint(), (100, Some(100)));
+        c.next();
+        assert_eq!(c.size_hint(), (99, Some(99)));
+    }
+
+    #[test]
+    fn prop_seek_equals_get() {
+        forall(30, |g| {
+            let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+            let n = g.usize_in(1, 256 * 100);
+            let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+            let data: Vec<u32> = (0..n).map(|_| g.rng().next_u32()).collect();
+            t.copy_from_slice(&data).unwrap();
+            let mut c = t.cursor();
+            for _ in 0..100 {
+                let i = g.usize_in(0, n - 1);
+                assert_eq!(c.seek(i), t.get(i).unwrap());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_strided_iteration_matches() {
+        forall(20, |g| {
+            let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+            let n = g.usize_in(2, 256 * 64);
+            let stride = g.usize_in(1, 1024);
+            let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+            let data: Vec<u32> = (0..n).map(|_| g.rng().next_u32()).collect();
+            t.copy_from_slice(&data).unwrap();
+            let mut c = t.cursor();
+            let mut i = 0usize;
+            while i < n {
+                assert_eq!(c.seek(i), data[i]);
+                i += stride;
+            }
+        });
+    }
+}

@@ -1,0 +1,291 @@
+//! Tree geometry and the address-trace model.
+//!
+//! All arithmetic for mapping a flat element index to the chain of
+//! physical addresses a tree access touches. [`TreeArray`] uses
+//! [`TreeGeometry`] for its real walks; the memsim experiments use
+//! [`TreeTraceModel`] to generate the *addresses* a given tree access
+//! would touch without materializing the tree (Table 2 goes to 64 GB).
+
+use crate::error::{Error, Result};
+
+/// Maximum supported tree depth (32 KB nodes: depth 4 ≈ 2 PB).
+pub const MAX_DEPTH: u32 = 4;
+
+/// Pure geometry of an arrays-as-trees structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeGeometry {
+    /// Node/block size in bytes (32 KB in the paper).
+    pub block_size: usize,
+    /// Element size in bytes.
+    pub elem_size: usize,
+    /// Elements per leaf block.
+    pub leaf_cap: usize,
+    /// Children per interior node (block_size / 8-byte pointers).
+    pub fanout: usize,
+    /// Tree depth (1 = single leaf, no indirection).
+    pub depth: u32,
+    /// Element count.
+    pub len: usize,
+}
+
+impl TreeGeometry {
+    /// Geometry for `len` elements of `elem_size` bytes in `block_size`
+    /// nodes. Errors if the array exceeds depth-4 capacity.
+    pub fn new(block_size: usize, elem_size: usize, len: usize) -> Result<Self> {
+        assert!(block_size.is_power_of_two() && elem_size.is_power_of_two());
+        assert!(elem_size <= block_size);
+        let leaf_cap = block_size / elem_size;
+        let fanout = block_size / 8;
+        let mut depth = 1u32;
+        let mut cap = leaf_cap;
+        while cap < len {
+            depth += 1;
+            if depth > MAX_DEPTH {
+                return Err(Error::TooLarge {
+                    len,
+                    max: cap,
+                    max_depth: MAX_DEPTH,
+                });
+            }
+            cap = cap.saturating_mul(fanout);
+        }
+        Ok(TreeGeometry {
+            block_size,
+            elem_size,
+            leaf_cap,
+            fanout,
+            depth,
+            len: len.max(1),
+        })
+    }
+
+    /// Max elements addressable at `depth` with this node geometry.
+    pub fn capacity_at_depth(&self, depth: u32) -> usize {
+        let mut cap = self.leaf_cap;
+        for _ in 1..depth {
+            cap = cap.saturating_mul(self.fanout);
+        }
+        cap
+    }
+
+    /// Number of leaf blocks.
+    #[inline]
+    pub fn nleaves(&self) -> usize {
+        self.len.div_ceil(self.leaf_cap)
+    }
+
+    /// Elements covered by one subtree hanging off a node at `level`
+    /// (level 0 = root; level depth-1 = leaf, covering `leaf_cap`).
+    #[inline]
+    pub fn subtree_elems(&self, level: u32) -> usize {
+        let mut cap = self.leaf_cap;
+        for _ in level..self.depth - 1 {
+            cap = cap.saturating_mul(self.fanout);
+        }
+        cap
+    }
+
+    /// Leaf index of element `i`.
+    #[inline]
+    pub fn leaf_of(&self, i: usize) -> usize {
+        i / self.leaf_cap
+    }
+
+    /// Nodes at interior `level` (root = level 0). Leaves are level
+    /// `depth-1`.
+    pub fn nodes_at_level(&self, level: u32) -> usize {
+        debug_assert!(level < self.depth);
+        // Walk up from the leaf count.
+        let mut n = self.nleaves();
+        for _ in level..self.depth - 1 {
+            n = n.div_ceil(self.fanout);
+        }
+        n
+    }
+
+    /// Total blocks (interior + leaf) the tree occupies.
+    pub fn total_blocks(&self) -> usize {
+        (0..self.depth).map(|l| self.nodes_at_level(l)).sum()
+    }
+
+    /// Child slot taken at `level` on the path to element `i`.
+    #[inline]
+    pub fn child_slot(&self, level: u32, i: usize) -> usize {
+        (i / self.subtree_elems(level + 1)) % self.fanout
+    }
+}
+
+/// Address-trace model: the physical addresses an access touches, without
+/// any memory backing. Blocks are numbered root-first, level by level,
+/// then placed at `base_addr + block_index * block_size` — matching how
+/// `TreeArray` would lay out in a fresh allocator pool.
+#[derive(Clone, Debug)]
+pub struct TreeTraceModel {
+    /// Geometry underneath.
+    pub geo: TreeGeometry,
+    /// Physical base address of block 0 (the root).
+    pub base_addr: u64,
+    /// Block-index offset of each level's first node.
+    level_base: [u64; MAX_DEPTH as usize],
+}
+
+impl TreeTraceModel {
+    /// Model a tree of `len` elements at physical `base_addr`.
+    pub fn new(geo: TreeGeometry, base_addr: u64) -> Self {
+        let mut level_base = [0u64; MAX_DEPTH as usize];
+        let mut acc = 0u64;
+        for l in 0..geo.depth {
+            level_base[l as usize] = acc;
+            acc += geo.nodes_at_level(l) as u64;
+        }
+        TreeTraceModel {
+            geo,
+            base_addr,
+            level_base,
+        }
+    }
+
+    /// Physical address of the `slot`-th 8-byte pointer in the
+    /// `node`-th interior node of `level`.
+    #[inline]
+    pub fn interior_addr(&self, level: u32, node: usize, slot: usize) -> u64 {
+        self.base_addr
+            + (self.level_base[level as usize] + node as u64) * self.geo.block_size as u64
+            + (slot as u64) * 8
+    }
+
+    /// Physical address of element `i`'s data byte(s) in its leaf.
+    #[inline]
+    pub fn leaf_elem_addr(&self, i: usize) -> u64 {
+        let leaf = self.geo.leaf_of(i);
+        let off = (i % self.geo.leaf_cap) * self.geo.elem_size;
+        self.base_addr
+            + (self.level_base[(self.geo.depth - 1) as usize] + leaf as u64)
+                * self.geo.block_size as u64
+            + off as u64
+    }
+
+    /// The naive access path for element `i` (Figure 1): one pointer
+    /// load per interior level, then the data load. Returns addresses in
+    /// access order into `out` (cleared first); `out.len() == depth`.
+    pub fn access_path(&self, i: usize, out: &mut Vec<u64>) {
+        out.clear();
+        let mut node = 0usize;
+        for level in 0..self.geo.depth - 1 {
+            let slot = self.geo.child_slot(level, i);
+            out.push(self.interior_addr(level, node, slot));
+            node = node * self.geo.fanout + slot;
+        }
+        out.push(self.leaf_elem_addr(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    const BS: usize = 32 * 1024;
+
+    #[test]
+    fn depth_matches_paper_footnote() {
+        // 32 KB nodes: depth-3 addresses ~536 GB, depth-4 ~2 PB (f64).
+        let g = TreeGeometry::new(BS, 8, 1).unwrap();
+        let d3_bytes = g.capacity_at_depth(3) as u128 * 8;
+        let d4_bytes = g.capacity_at_depth(4) as u128 * 8;
+        assert_eq!(d3_bytes, 512u128 << 30); // 512 GiB ≈ "about 536 GB"
+        assert_eq!(d4_bytes, 2u128 << 50); // 2 PiB ≈ "2 PB"
+    }
+
+    #[test]
+    fn table2_depths() {
+        // Table 2 caption: 4 KB arrays fit depth-1 trees, 4 MB depth-2,
+        // all larger (4–64 GB) depth-3. Elements are 4-byte (f32/i32).
+        for (bytes, want) in [
+            (4usize << 10, 1u32),
+            (4 << 20, 2),
+            (4usize << 30, 3),
+            (64usize << 30, 3),
+        ] {
+            let g = TreeGeometry::new(BS, 4, bytes / 4).unwrap();
+            assert_eq!(g.depth, want, "{} bytes", bytes);
+        }
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        // > depth-4 capacity must error, not misbehave.
+        let g = TreeGeometry::new(256, 8, 1).unwrap();
+        let max = g.capacity_at_depth(4);
+        assert!(TreeGeometry::new(256, 8, max + 1).is_err());
+    }
+
+    #[test]
+    fn nodes_at_level_root_is_one() {
+        let g = TreeGeometry::new(BS, 4, 1 << 30).unwrap(); // 4 GB, depth 3
+        assert_eq!(g.nodes_at_level(0), 1);
+        assert_eq!(g.nodes_at_level(g.depth - 1), g.nleaves());
+    }
+
+    #[test]
+    fn access_path_depth1_is_single_load() {
+        let g = TreeGeometry::new(BS, 4, 100).unwrap();
+        assert_eq!(g.depth, 1);
+        let m = TreeTraceModel::new(g, 0x1000);
+        let mut path = Vec::new();
+        m.access_path(7, &mut path);
+        assert_eq!(path.len(), 1);
+        assert_eq!(path[0], 0x1000 + 7 * 4);
+    }
+
+    #[test]
+    fn access_path_lengths_equal_depth() {
+        for len in [100usize, 1 << 20, 1 << 28] {
+            let g = TreeGeometry::new(BS, 4, len).unwrap();
+            let m = TreeTraceModel::new(g, 0);
+            let mut path = Vec::new();
+            m.access_path(len - 1, &mut path);
+            assert_eq!(path.len(), g.depth as usize);
+        }
+    }
+
+    #[test]
+    fn prop_distinct_elements_distinct_leaf_addrs() {
+        forall(40, |gen| {
+            let len = gen.usize_in(2, 1 << 20);
+            let g = TreeGeometry::new(BS, 4, len).unwrap();
+            let m = TreeTraceModel::new(g, 0);
+            let i = gen.usize_in(0, len - 1);
+            let j = gen.usize_in(0, len - 1);
+            if i != j {
+                assert_ne!(m.leaf_elem_addr(i), m.leaf_elem_addr(j));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_leaf_addrs_within_tree_extent() {
+        forall(40, |gen| {
+            let len = gen.usize_in(1, 1 << 22);
+            let g = TreeGeometry::new(BS, 4, len).unwrap();
+            let m = TreeTraceModel::new(g, 4096);
+            let extent = g.total_blocks() as u64 * BS as u64;
+            let i = gen.usize_in(0, len - 1);
+            let a = m.leaf_elem_addr(i);
+            assert!(a >= 4096 && a < 4096 + extent);
+        });
+    }
+
+    #[test]
+    fn prop_sequential_elems_same_leaf_share_block() {
+        forall(40, |gen| {
+            let len = gen.usize_in(2, 1 << 20);
+            let g = TreeGeometry::new(BS, 4, len).unwrap();
+            let m = TreeTraceModel::new(g, 0);
+            let i = gen.usize_in(0, len - 2);
+            if g.leaf_of(i) == g.leaf_of(i + 1) {
+                assert_eq!(m.leaf_elem_addr(i) + 4, m.leaf_elem_addr(i + 1));
+            }
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! "Arrays as trees" (paper §3.2, after Siebert [11]).
+//!
+//! Large arrays cannot be one contiguous allocation when the OS only
+//! hands out fixed 32 KB blocks, so they become shallow trees: interior
+//! nodes hold child block pointers, leaves hold data (Figure 1). With
+//! 32 KB nodes and 8-byte child pointers the fanout is 4096, so depth-3
+//! trees address ~536 GB and depth-4 ~2 PB (the paper's footnote 1).
+//!
+//! * [`TreeArray`] — the real data structure, backed by
+//!   [`crate::pmem::BlockAllocator`] blocks.
+//! * [`Cursor`] — the Figure 2 iterator optimization: a cached leaf
+//!   pointer that turns sequential access into a pointer bump and random
+//!   access into a leaf-cache probe (a software PTW cache, §4.4).
+//! * [`TreeGeometry`] / [`TreeTraceModel`] — pure address arithmetic for
+//!   the memsim experiments, so 64 GB arrays can be *modeled* without
+//!   being materialized (§4.3's scales).
+
+mod cursor;
+mod layout;
+mod tree_array;
+
+pub use cursor::Cursor;
+pub use layout::{TreeGeometry, TreeTraceModel};
+pub use tree_array::{Pod, TreeArray};

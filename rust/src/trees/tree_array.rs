@@ -1,0 +1,468 @@
+//! The arrays-as-trees data structure over allocator blocks.
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAllocator, BlockId};
+use crate::trees::layout::TreeGeometry;
+use crate::trees::Cursor;
+
+/// Plain-old-data element types storable in tree leaves.
+///
+/// # Safety
+/// Implementors must be valid for any bit pattern and contain no padding
+/// (they are memcpy'd in and out of raw blocks).
+pub unsafe trait Pod: Copy + Default + PartialEq + std::fmt::Debug + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+unsafe impl Pod for usize {}
+
+/// A fixed-length array of `T` stored as a tree of fixed-size blocks
+/// (paper §3.2 / Figure 1). Interior nodes hold 8-byte child block ids;
+/// leaves hold element data. Depth is 1–4 and recorded as metadata, per
+/// the paper ("a tree stores meta-data about its depth").
+pub struct TreeArray<'a, T: Pod> {
+    pub(crate) alloc: &'a BlockAllocator,
+    pub(crate) geo: TreeGeometry,
+    root: BlockId,
+    blocks: Vec<BlockId>, // all blocks, for Drop
+    _t: std::marker::PhantomData<T>,
+}
+
+impl<'a, T: Pod> TreeArray<'a, T> {
+    /// Allocate a zeroed tree array of `len` elements using the paper's
+    /// geometry (node size = allocator block size, 8-byte child ids).
+    pub fn new(alloc: &'a BlockAllocator, len: usize) -> Result<Self> {
+        let geo = TreeGeometry::new(alloc.block_size(), std::mem::size_of::<T>(), len)?;
+        // Build bottom-up: leaves first, then interior levels.
+        let nleaves = geo.nleaves();
+        let mut all = Vec::with_capacity(geo.total_blocks());
+        let mut level: Vec<BlockId> = alloc.alloc_many(nleaves)?;
+        all.extend_from_slice(&level);
+        let mut depth_built = 1;
+        while level.len() > 1 || depth_built < geo.depth {
+            let nparents = level.len().div_ceil(geo.fanout);
+            let parents = match alloc.alloc_many(nparents) {
+                Ok(p) => p,
+                Err(e) => {
+                    for b in &all {
+                        let _ = alloc.free(*b);
+                    }
+                    return Err(e);
+                }
+            };
+            for (pi, parent) in parents.iter().enumerate() {
+                let lo = pi * geo.fanout;
+                let hi = ((pi + 1) * geo.fanout).min(level.len());
+                for (slot, child) in level[lo..hi].iter().enumerate() {
+                    let id64 = child.0 as u64;
+                    alloc.write(*parent, slot * 8, &id64.to_le_bytes())?;
+                }
+            }
+            all.extend_from_slice(&parents);
+            level = parents;
+            depth_built += 1;
+        }
+        debug_assert_eq!(depth_built, geo.depth);
+        Ok(TreeArray {
+            alloc,
+            geo,
+            root: level[0],
+            blocks: all,
+            _t: std::marker::PhantomData,
+        })
+    }
+
+    /// Element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.geo.len
+    }
+
+    /// True when the array holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.geo.len == 0
+    }
+
+    /// Tree depth (1 = single leaf).
+    #[inline]
+    pub fn depth(&self) -> u32 {
+        self.geo.depth
+    }
+
+    /// Geometry metadata.
+    #[inline]
+    pub fn geometry(&self) -> TreeGeometry {
+        self.geo
+    }
+
+    /// Walk from the root to the leaf holding element `i`.
+    /// This is the *naive* access of Table 2: `depth` dependent loads.
+    #[inline]
+    fn walk_to_leaf(&self, i: usize) -> BlockId {
+        let mut node = self.root;
+        for level in 0..self.geo.depth - 1 {
+            let slot = self.geo.child_slot(level, i);
+            let mut buf = [0u8; 8];
+            // SAFETY: node is one of our live blocks; slot < fanout.
+            unsafe {
+                let p = self.alloc.block_ptr(node).add(slot * 8);
+                std::ptr::copy_nonoverlapping(p, buf.as_mut_ptr(), 8);
+            }
+            node = BlockId(u64::from_le_bytes(buf) as u32);
+        }
+        node
+    }
+
+    /// Read element `i` (naive tree walk, bounds-checked).
+    pub fn get(&self, i: usize) -> Result<T> {
+        if i >= self.geo.len {
+            return Err(Error::IndexOutOfBounds {
+                index: i,
+                len: self.geo.len,
+            });
+        }
+        Ok(unsafe { self.get_unchecked(i) })
+    }
+
+    /// Read element `i` without bounds checking.
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    pub unsafe fn get_unchecked(&self, i: usize) -> T {
+        let leaf = self.walk_to_leaf(i);
+        let off = (i % self.geo.leaf_cap) * std::mem::size_of::<T>();
+        let p = self.alloc.block_ptr(leaf).add(off) as *const T;
+        p.read_unaligned()
+    }
+
+    /// Write element `i` (naive tree walk, bounds-checked).
+    pub fn set(&mut self, i: usize, v: T) -> Result<()> {
+        if i >= self.geo.len {
+            return Err(Error::IndexOutOfBounds {
+                index: i,
+                len: self.geo.len,
+            });
+        }
+        unsafe { self.set_unchecked(i, v) };
+        Ok(())
+    }
+
+    /// Write element `i` without bounds checking.
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    pub unsafe fn set_unchecked(&mut self, i: usize, v: T) {
+        let leaf = self.walk_to_leaf(i);
+        let off = (i % self.geo.leaf_cap) * std::mem::size_of::<T>();
+        let p = self.alloc.block_ptr(leaf).add(off) as *mut T;
+        p.write_unaligned(v);
+    }
+
+    /// Raw leaf pointer + element span for leaf `leaf_idx`
+    /// (crate-internal: powers [`Cursor`] and the leaf slices).
+    #[inline]
+    pub(crate) fn leaf_ptr(&self, leaf_idx: usize) -> (*mut T, usize) {
+        let first_elem = leaf_idx * self.geo.leaf_cap;
+        let leaf = self.walk_to_leaf(first_elem);
+        let span = self.geo.leaf_cap.min(self.geo.len - first_elem);
+        // SAFETY: leaf is live; pointer valid for leaf_cap elements.
+        (unsafe { self.alloc.block_ptr(leaf) as *mut T }, span)
+    }
+
+    /// Borrow leaf `leaf_idx`'s elements as a slice (zero-copy: this is
+    /// the exact 32 KB buffer the Pallas blocked kernel consumes).
+    pub fn leaf_slice(&self, leaf_idx: usize) -> &[T] {
+        assert!(leaf_idx < self.geo.nleaves());
+        let (p, span) = self.leaf_ptr(leaf_idx);
+        // SAFETY: p valid for span elements; &self borrow prevents writes
+        // through the safe API for the slice's lifetime.
+        unsafe { std::slice::from_raw_parts(p, span) }
+    }
+
+    /// Mutably borrow leaf `leaf_idx`'s elements.
+    pub fn leaf_slice_mut(&mut self, leaf_idx: usize) -> &mut [T] {
+        assert!(leaf_idx < self.geo.nleaves());
+        let (p, span) = self.leaf_ptr(leaf_idx);
+        // SAFETY: as above, with exclusive borrow.
+        unsafe { std::slice::from_raw_parts_mut(p, span) }
+    }
+
+    /// Number of leaf blocks.
+    #[inline]
+    pub fn nleaves(&self) -> usize {
+        self.geo.nleaves()
+    }
+
+    /// Bulk-load from a slice (leaf-at-a-time memcpy).
+    pub fn copy_from_slice(&mut self, src: &[T]) -> Result<()> {
+        if src.len() != self.geo.len {
+            return Err(Error::IndexOutOfBounds {
+                index: src.len(),
+                len: self.geo.len,
+            });
+        }
+        let cap = self.geo.leaf_cap;
+        for leaf in 0..self.nleaves() {
+            let lo = leaf * cap;
+            let hi = (lo + cap).min(src.len());
+            self.leaf_slice_mut(leaf)[..hi - lo].copy_from_slice(&src[lo..hi]);
+        }
+        Ok(())
+    }
+
+    /// Copy out to a `Vec` (for verification against contiguous baselines).
+    pub fn to_vec(&self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.geo.len);
+        for leaf in 0..self.nleaves() {
+            out.extend_from_slice(self.leaf_slice(leaf));
+        }
+        out
+    }
+
+    /// Relocate one leaf to a fresh block, patching the single parent
+    /// pointer (or the root). See `pmem::migrate` for the public API
+    /// and the paper-§2 relocation story.
+    pub(crate) fn relocate_leaf_impl(&mut self, leaf_idx: usize) -> Result<BlockId> {
+        let first_elem = leaf_idx * self.geo.leaf_cap;
+        // Walk down recording the parent slot that names the leaf.
+        let mut node = self.root;
+        let mut parent: Option<(BlockId, usize)> = None;
+        for level in 0..self.geo.depth - 1 {
+            let slot = self.geo.child_slot(level, first_elem);
+            let mut buf = [0u8; 8];
+            // SAFETY: node is one of our live blocks; slot < fanout.
+            unsafe {
+                let p = self.alloc.block_ptr(node).add(slot * 8);
+                std::ptr::copy_nonoverlapping(p, buf.as_mut_ptr(), 8);
+            }
+            parent = Some((node, slot));
+            node = BlockId(u64::from_le_bytes(buf) as u32);
+        }
+        let old = node;
+        let fresh = self.alloc.alloc()?;
+        let bs = self.alloc.block_size();
+        // SAFETY: both blocks live and distinct; full-block copy.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.alloc.block_ptr(old), self.alloc.block_ptr(fresh), bs);
+        }
+        match parent {
+            Some((p, slot)) => {
+                self.alloc
+                    .write(p, slot * 8, &(fresh.0 as u64).to_le_bytes())?;
+            }
+            None => self.root = fresh, // depth-1: the leaf is the root
+        }
+        self.alloc.free(old)?;
+        if let Some(pos) = self.blocks.iter().position(|b| *b == old) {
+            self.blocks[pos] = fresh;
+        }
+        Ok(fresh)
+    }
+
+    /// Sequential iterator using the Figure 2 cached-leaf optimization.
+    pub fn iter(&self) -> Cursor<'_, 'a, T> {
+        Cursor::new(self)
+    }
+
+    /// A random-access cursor starting unpositioned (leaf cache empty).
+    pub fn cursor(&self) -> Cursor<'_, 'a, T> {
+        Cursor::new(self)
+    }
+}
+
+impl<T: Pod> Drop for TreeArray<'_, T> {
+    fn drop(&mut self) {
+        for b in &self.blocks {
+            let _ = self.alloc.free(*b);
+        }
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for TreeArray<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TreeArray {{ len: {}, depth: {}, leaves: {} }}",
+            self.geo.len,
+            self.geo.depth,
+            self.nleaves()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Rng};
+
+    fn small_alloc() -> BlockAllocator {
+        // 1 KB blocks keep trees deep at tiny sizes: leaf_cap(f32)=256,
+        // fanout=128.
+        BlockAllocator::new(1024, 4096).unwrap()
+    }
+
+    #[test]
+    fn depth1_roundtrip() {
+        let a = small_alloc();
+        let mut t: TreeArray<f32> = TreeArray::new(&a, 100).unwrap();
+        assert_eq!(t.depth(), 1);
+        for i in 0..100 {
+            t.set(i, i as f32).unwrap();
+        }
+        for i in 0..100 {
+            assert_eq!(t.get(i).unwrap(), i as f32);
+        }
+    }
+
+    #[test]
+    fn depth2_roundtrip() {
+        let a = small_alloc();
+        let n = 256 * 60; // 60 leaves -> depth 2
+        let mut t: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        assert_eq!(t.depth(), 2);
+        for i in (0..n).step_by(7) {
+            t.set(i, (i * 3) as f32).unwrap();
+        }
+        for i in (0..n).step_by(7) {
+            assert_eq!(t.get(i).unwrap(), (i * 3) as f32);
+        }
+    }
+
+    #[test]
+    fn depth3_roundtrip() {
+        let a = BlockAllocator::new(1024, 1 << 16).unwrap();
+        let n = 256 * 128 * 3 + 17; // > fanout leaves -> depth 3
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        assert_eq!(t.depth(), 3);
+        let idxs = [0usize, 1, 255, 256, 32767, 32768, n - 1];
+        for &i in &idxs {
+            t.set(i, i as u32 ^ 0xDEAD).unwrap();
+        }
+        for &i in &idxs {
+            assert_eq!(t.get(i).unwrap(), i as u32 ^ 0xDEAD);
+        }
+    }
+
+    #[test]
+    fn oob_get_set_rejected() {
+        let a = small_alloc();
+        let mut t: TreeArray<u8> = TreeArray::new(&a, 10).unwrap();
+        assert!(t.get(10).is_err());
+        assert!(t.set(10, 0).is_err());
+    }
+
+    #[test]
+    fn zero_initialized() {
+        let a = small_alloc();
+        let t: TreeArray<u64> = TreeArray::new(&a, 1000).unwrap();
+        assert!(t.iter().all(|v| v == 0));
+    }
+
+    #[test]
+    fn blocks_freed_on_drop() {
+        let a = small_alloc();
+        {
+            let _t: TreeArray<f32> = TreeArray::new(&a, 256 * 60).unwrap();
+            assert!(a.stats().allocated > 60); // leaves + root
+        }
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn alloc_failure_leaks_nothing() {
+        let a = BlockAllocator::new(1024, 32).unwrap();
+        // 60 leaves needed but only 32 blocks available.
+        assert!(TreeArray::<f32>::new(&a, 256 * 60).is_err());
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn copy_from_slice_to_vec_roundtrip() {
+        let a = small_alloc();
+        let n = 256 * 10 + 13;
+        let mut t: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        let src: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        t.copy_from_slice(&src).unwrap();
+        assert_eq!(t.to_vec(), src);
+    }
+
+    #[test]
+    fn leaf_slice_matches_elements() {
+        let a = small_alloc();
+        let n = 256 * 3 + 40; // 4 leaves, last partial
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        for i in 0..n {
+            t.set(i, i as u32).unwrap();
+        }
+        assert_eq!(t.leaf_slice(0).len(), 256);
+        assert_eq!(t.leaf_slice(3).len(), 40);
+        assert_eq!(t.leaf_slice(1)[5], 256 + 5);
+    }
+
+    #[test]
+    fn prop_tree_matches_vec_model() {
+        forall(30, |g| {
+            let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+            let n = g.usize_in(1, 256 * 200);
+            let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+            let mut model = vec![0u32; n];
+            for _ in 0..g.usize_in(1, 300) {
+                let i = g.usize_in(0, n - 1);
+                let v = g.rng().next_u32();
+                t.set(i, v).unwrap();
+                model[i] = v;
+            }
+            // Spot-check random reads + full to_vec.
+            for _ in 0..50 {
+                let i = g.usize_in(0, n - 1);
+                assert_eq!(t.get(i).unwrap(), model[i]);
+            }
+            assert_eq!(t.to_vec(), model);
+        });
+    }
+
+    #[test]
+    fn prop_paper_block_size_geometry() {
+        // With real 32 KB blocks: 4 KB fits depth 1, 4 MB depth 2.
+        let a = BlockAllocator::new(32 * 1024, 512).unwrap();
+        let t1: TreeArray<f32> = TreeArray::new(&a, 1024).unwrap(); // 4 KB
+        assert_eq!(t1.depth(), 1);
+        let t2: TreeArray<f32> = TreeArray::new(&a, 1 << 20).unwrap(); // 4 MB
+        assert_eq!(t2.depth(), 2);
+    }
+
+    #[test]
+    fn large_u8_tree() {
+        let a = small_alloc();
+        let n = 1024 * 130; // u8: leaf_cap 1024, fanout 128 -> depth 3
+        let mut t: TreeArray<u8> = TreeArray::new(&a, n).unwrap();
+        assert_eq!(t.depth(), 3);
+        let mut rng = Rng::new(5);
+        let mut pairs = Vec::new();
+        for _ in 0..200 {
+            let i = rng.range(0, n);
+            let v = rng.next_u32() as u8;
+            t.set(i, v).unwrap();
+            pairs.push((i, v));
+        }
+        // last write wins per index
+        let mut expect = std::collections::HashMap::new();
+        for (i, v) in pairs {
+            expect.insert(i, v);
+        }
+        for (i, v) in expect {
+            assert_eq!(t.get(i).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Black-Scholes pricing (PARSEC's `blackscholes`, Figure 5).
+//!
+//! Pure-Rust scalar pricing for the CPU baselines (contiguous vs tree
+//! layouts), numerically cross-checked in `rust/tests/` against the
+//! AOT-compiled Pallas kernel executed through PJRT — proving the
+//! L3↔L1 boundary agrees end to end.
+
+use crate::trees::TreeArray;
+
+/// One option's market parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Option1 {
+    /// Spot price.
+    pub spot: f32,
+    /// Strike price.
+    pub strike: f32,
+    /// Time to maturity (years).
+    pub tmat: f32,
+}
+
+/// erf via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|error| ≤ 1.5e-7, well inside f32 tolerance; matches
+/// `jax.lax.erf` to ~1e-6 on the pricing range).
+#[inline]
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Price one European option; returns (call, put).
+#[inline]
+pub fn price(o: Option1, rate: f32, vol: f32) -> (f32, f32) {
+    let (s, k, t) = (o.spot as f64, o.strike as f64, o.tmat as f64);
+    let (r, v) = (rate as f64, vol as f64);
+    let sqrt_t = t.sqrt();
+    let sig_t = v * sqrt_t;
+    let d1 = ((s / k).ln() + (r + 0.5 * v * v) * t) / sig_t;
+    let d2 = d1 - sig_t;
+    let disc = (-r * t).exp();
+    let call = s * norm_cdf(d1) - k * disc * norm_cdf(d2);
+    let put = k * disc * norm_cdf(-d2) - s * norm_cdf(-d1);
+    (call as f32, put as f32)
+}
+
+/// Price a contiguous portfolio (spot/strike/tmat parallel slices) into
+/// `call`/`put`. The Figure 5 VM baseline.
+pub fn price_contig(
+    spot: &[f32],
+    strike: &[f32],
+    tmat: &[f32],
+    rate: f32,
+    vol: f32,
+    call: &mut [f32],
+    put: &mut [f32],
+) {
+    for i in 0..spot.len() {
+        let (c, p) = price(
+            Option1 {
+                spot: spot[i],
+                strike: strike[i],
+                tmat: tmat[i],
+            },
+            rate,
+            vol,
+        );
+        call[i] = c;
+        put[i] = p;
+    }
+}
+
+/// Price tree-layout arrays via naive per-element walks.
+pub fn price_tree_naive(
+    spot: &TreeArray<'_, f32>,
+    strike: &TreeArray<'_, f32>,
+    tmat: &TreeArray<'_, f32>,
+    rate: f32,
+    vol: f32,
+    call: &mut TreeArray<'_, f32>,
+    put: &mut TreeArray<'_, f32>,
+) {
+    for i in 0..spot.len() {
+        // SAFETY: all arrays share len (asserted by callers/tests).
+        let (c, p) = unsafe {
+            price(
+                Option1 {
+                    spot: spot.get_unchecked(i),
+                    strike: strike.get_unchecked(i),
+                    tmat: tmat.get_unchecked(i),
+                },
+                rate,
+                vol,
+            )
+        };
+        unsafe {
+            call.set_unchecked(i, c);
+            put.set_unchecked(i, p);
+        }
+    }
+}
+
+/// Price tree-layout arrays leaf-at-a-time (the Iterator-style
+/// optimization: one walk per 32 KB leaf, then contiguous slices).
+pub fn price_tree_iter(
+    spot: &TreeArray<'_, f32>,
+    strike: &TreeArray<'_, f32>,
+    tmat: &TreeArray<'_, f32>,
+    rate: f32,
+    vol: f32,
+    call: &mut TreeArray<'_, f32>,
+    put: &mut TreeArray<'_, f32>,
+) {
+    for leaf in 0..spot.nleaves() {
+        let s = spot.leaf_slice(leaf);
+        let k = strike.leaf_slice(leaf);
+        let t = tmat.leaf_slice(leaf);
+        // Price into temporaries then copy into the output leaves (the
+        // borrow checker forbids holding two &mut leaves of one array).
+        let mut cbuf = vec![0.0f32; s.len()];
+        let mut pbuf = vec![0.0f32; s.len()];
+        price_contig(s, k, t, rate, vol, &mut cbuf, &mut pbuf);
+        call.leaf_slice_mut(leaf).copy_from_slice(&cbuf);
+        put.leaf_slice_mut(leaf).copy_from_slice(&pbuf);
+    }
+}
+
+/// Deterministic synthetic portfolio (matches the Python tests' ranges).
+pub fn synth_portfolio(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = crate::testutil::Rng::new(seed);
+    let spot = (0..n).map(|_| rng.f32_range(5.0, 200.0)).collect();
+    let strike = (0..n).map(|_| rng.f32_range(5.0, 200.0)).collect();
+    let tmat = (0..n).map(|_| rng.f32_range(0.05, 3.0)).collect();
+    (spot, strike, tmat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+    use crate::workloads::linear_scan::tree_from;
+
+    const RATE: f32 = 0.03;
+    const VOL: f32 = 0.25;
+
+    #[test]
+    fn erf_reference_points() {
+        // A&S 7.1.26 has |error| <= 1.5e-7 (the polynomial does not
+        // vanish exactly at 0).
+        assert!((erf(0.0)).abs() < 1e-8);
+        assert!((erf(1.0) - 0.8427007929).abs() < 2e-7);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 2e-7);
+        assert!((erf(3.0) - 0.9999779095).abs() < 2e-7);
+    }
+
+    #[test]
+    fn put_call_parity() {
+        let (s, k, t) = (100.0f32, 90.0f32, 1.5f32);
+        let (c, p) = price(Option1 { spot: s, strike: k, tmat: t }, RATE, VOL);
+        let parity = s - k * (-RATE * t).exp();
+        assert!((c - p - parity).abs() < 1e-3, "parity violated: {}", c - p - parity);
+    }
+
+    #[test]
+    fn deep_itm_call() {
+        let (c, _) = price(
+            Option1 { spot: 1000.0, strike: 1.0, tmat: 1.0 },
+            RATE,
+            VOL,
+        );
+        let expect = 1000.0 - 1.0 * (-RATE).exp();
+        assert!((c - expect).abs() / expect < 1e-4);
+    }
+
+    #[test]
+    fn layouts_price_identically() {
+        let a = BlockAllocator::new(4096, 1 << 12).unwrap();
+        let n = 4096 / 4 * 5 + 33;
+        let (s, k, t) = synth_portfolio(n, 3);
+        let mut call_c = vec![0.0f32; n];
+        let mut put_c = vec![0.0f32; n];
+        price_contig(&s, &k, &t, RATE, VOL, &mut call_c, &mut put_c);
+
+        let ts = tree_from(&a, &s);
+        let tk = tree_from(&a, &k);
+        let tt = tree_from(&a, &t);
+        let mut tc: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        let mut tp: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        price_tree_naive(&ts, &tk, &tt, RATE, VOL, &mut tc, &mut tp);
+        assert_eq!(tc.to_vec(), call_c);
+        assert_eq!(tp.to_vec(), put_c);
+
+        let mut tc2: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        let mut tp2: TreeArray<f32> = TreeArray::new(&a, n).unwrap();
+        price_tree_iter(&ts, &tk, &tt, RATE, VOL, &mut tc2, &mut tp2);
+        assert_eq!(tc2.to_vec(), call_c);
+        assert_eq!(tp2.to_vec(), put_c);
+    }
+}

@@ -1,0 +1,90 @@
+//! Recursive Fibonacci — the paper's pessimistic split-stack
+//! microbenchmark ("amplify the performance cost of stack splitting
+//! beyond what would be seen in most programs"; measured 15%).
+//!
+//! Two real implementations: native Rust recursion (the contiguous-stack
+//! baseline) and recursion through [`SplitStack`] frames, where every
+//! call pays the space check and locals live in stack blocks. Their
+//! wallclock ratio is this repo's measured fib datapoint for Figure 3.
+
+use crate::error::Result;
+use crate::pmem::BlockAllocator;
+use crate::stack::SplitStack;
+
+/// Native recursion baseline.
+pub fn fib_native(n: u32) -> u64 {
+    if n < 2 {
+        n as u64
+    } else {
+        fib_native(n - 1) + fib_native(n - 2)
+    }
+}
+
+/// Iterative closed-loop reference (for correctness checks).
+pub fn fib_reference(n: u32) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let t = a + b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Recursion where every call pushes a real frame on a [`SplitStack`]
+/// (8-byte local holding `n`). This exercises the check on every call
+/// exactly as gcc's `-fsplit-stack` prologue does.
+pub fn fib_split(s: &mut SplitStack<'_>, n: u32) -> Result<u64> {
+    let frame = s.call(16, &(n as u64).to_le_bytes())?;
+    let result = if n < 2 {
+        n as u64
+    } else {
+        let a = fib_split(s, n - 1)?;
+        let b = fib_split(s, n - 2)?;
+        // Touch the local to keep the frame live and honest.
+        let mut buf = [0u8; 8];
+        s.read_local(frame, 0, &mut buf)?;
+        debug_assert_eq!(u64::from_le_bytes(buf), n as u64);
+        a + b
+    };
+    s.ret()?;
+    Ok(result)
+}
+
+/// Convenience: run `fib_split` with a fresh stack over `alloc`.
+pub fn fib_split_fresh(alloc: &BlockAllocator, n: u32) -> Result<(u64, u64)> {
+    let mut s = SplitStack::new(alloc)?;
+    let v = fib_split(&mut s, n)?;
+    let calls = s.stats().calls;
+    Ok((v, calls))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matches_reference() {
+        for n in 0..20 {
+            assert_eq!(fib_native(n), fib_reference(n));
+        }
+    }
+
+    #[test]
+    fn split_matches_reference() {
+        let a = BlockAllocator::new(4096, 256).unwrap();
+        for n in [0u32, 1, 2, 10, 18] {
+            let (v, _) = fib_split_fresh(&a, n).unwrap();
+            assert_eq!(v, fib_reference(n), "fib({n})");
+        }
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn call_count_is_fib_tree_size() {
+        // Recursive fib(n) makes 2*fib(n+1)-1 calls.
+        let a = BlockAllocator::new(4096, 256).unwrap();
+        let (_, calls) = fib_split_fresh(&a, 12).unwrap();
+        assert_eq!(calls, 2 * fib_reference(13) - 1);
+    }
+}

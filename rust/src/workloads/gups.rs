@@ -1,0 +1,136 @@
+//! GUPS — giga-updates per second (Figure 4), real + simulated.
+//!
+//! The HPC RandomAccess kernel: `table[idx] ^= key` at pseudorandom
+//! indices. The paper uses it as the worst case for both translation
+//! (random pages) and tree walks (random leaves, no leaf-cache reuse).
+
+use crate::memsim::Hierarchy;
+use crate::testutil::Rng;
+use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
+use crate::workloads::trace::CostModel;
+use crate::workloads::SimResult;
+
+/// Real GUPS over a contiguous table. Returns a checksum.
+pub fn gups_vec(table: &mut [u64], ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = table.len() as u64;
+    for _ in 0..ops {
+        let r = rng.next_u64();
+        let i = (r % n) as usize;
+        table[i] ^= r;
+    }
+    table.iter().fold(0u64, |a, &v| a ^ v)
+}
+
+/// Real GUPS over a tree table using naive walks.
+pub fn gups_tree_naive(t: &mut TreeArray<'_, u64>, ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = t.len() as u64;
+    for _ in 0..ops {
+        let r = rng.next_u64();
+        let i = (r % n) as usize;
+        // SAFETY: i < len by construction.
+        unsafe {
+            let v = t.get_unchecked(i);
+            t.set_unchecked(i, v ^ r);
+        }
+    }
+    let mut acc = 0u64;
+    for v in t.iter() {
+        acc ^= v;
+    }
+    acc
+}
+
+/// Simulated GUPS at paper scale (4–64 GB tables).
+///
+/// Each update = one table access (read-modify-write counted once — the
+/// write hits the same line). Random updates have limited but nonzero
+/// MLP (the kernel issues several independent updates ahead); walks are
+/// dependent. Array mode charges the access; tree mode charges the
+/// dependent pointer chain + data access.
+pub fn sim_gups(
+    h: &mut Hierarchy,
+    model: &CostModel,
+    table_bytes: u64,
+    tree: bool,
+    ops: u64,
+    seed: u64,
+) -> SimResult {
+    let elem = 8u64; // u64 table entries
+    let len = (table_bytes / elem) as usize;
+    let mut rng = Rng::new(seed);
+    let mut cycles = 0.0f64;
+    if tree {
+        let geo = TreeGeometry::new(32 * 1024, 8, len).expect("geometry");
+        let tm = TreeTraceModel::new(geo, 0x10_0000);
+        let mut path = Vec::with_capacity(4);
+        for _ in 0..ops {
+            let i = rng.below(len as u64) as usize;
+            tm.access_path(i, &mut path);
+            // Per-element chain: interior pointers then the update; the
+            // chains of different updates overlap in the OoO window.
+            let mut chain = model.depth_check;
+            for &a in &path {
+                chain += h.access(a) as f64;
+            }
+            cycles += model.random_chain(chain) + model.compute;
+        }
+    } else {
+        let base = 0x10_0000u64;
+        for _ in 0..ops {
+            let i = rng.below(len as u64);
+            let (t, d) = h.access_split(base + i * elem);
+            cycles += model.random_chain((t + d) as f64) + model.compute;
+        }
+    }
+    SimResult {
+        cycles_per_elem: cycles / ops as f64,
+        elems: ops,
+        tlb_miss_rate: h.stats().tlb_miss_rate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{AddressMode, PageSize};
+    use crate::pmem::BlockAllocator;
+
+    #[test]
+    fn real_gups_vec_and_tree_agree() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let n = 1 << 14;
+        let mut vec_table = vec![0u64; n];
+        let mut tree_table: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let c1 = gups_vec(&mut vec_table, 50_000, 9);
+        let c2 = gups_tree_naive(&mut tree_table, 50_000, 9);
+        assert_eq!(c1, c2, "same seed must produce identical tables");
+        // And the actual contents match.
+        assert_eq!(tree_table.to_vec(), vec_table);
+    }
+
+    fn gups_ratio(bytes: u64) -> f64 {
+        let m = CostModel::default();
+        let mut hv = Hierarchy::kaby_lake(AddressMode::Virtual(PageSize::P4K));
+        let mut hp = Hierarchy::kaby_lake(AddressMode::Physical);
+        let a = sim_gups(&mut hv, &m, bytes, false, 200_000, 5);
+        let t = sim_gups(&mut hp, &m, bytes, true, 200_000, 5);
+        t.cycles_per_elem / a.cycles_per_elem
+    }
+
+    #[test]
+    fn sim_gups_trees_win_at_16gb_and_beyond() {
+        // Figure 4's headline: "trees even outperform arrays for the
+        // 16 GB GUPS dataset, so physical addressing should perform
+        // better at that size or larger." (Known model deviation,
+        // EXPERIMENTS.md: our simulator already favors trees at 4-8 GB,
+        // where the paper measured a small tree penalty.)
+        let r16 = gups_ratio(16 << 30);
+        let r64 = gups_ratio(64 << 30);
+        assert!(r16 < 1.0, "16 GB GUPS tree/array = {r16:.3}, want < 1.0");
+        assert!(r64 < 1.1, "64 GB GUPS tree/array = {r64:.3}, want < 1.1");
+        // And the win is not absurd (sanity against broken baselines).
+        assert!(r16 > 0.3, "16 GB ratio {r16:.3} suspiciously low");
+    }
+}

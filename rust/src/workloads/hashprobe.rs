@@ -1,0 +1,148 @@
+//! deepsjeng-like hash-table probe (Figure 5's bad-locality benchmark).
+//!
+//! SPECInt2017's deepsjeng allocates one large transposition table (the
+//! `_r` input uses ~700 MB, `_s` ~7 GB) and probes it at
+//! Zobrist-hash-random slots. The memory behaviour the paper relies on
+//! is exactly that: a single huge array accessed unpredictably. This
+//! module reproduces it with an open-addressing probe loop over
+//! contiguous and tree layouts plus a simulated variant for the 7 GB
+//! point.
+
+use crate::memsim::Hierarchy;
+use crate::testutil::Rng;
+use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
+use crate::workloads::trace::CostModel;
+use crate::workloads::SimResult;
+
+/// One transposition-table entry: packed key+score (8 bytes, like
+/// deepsjeng's packed hash entries).
+pub type Entry = u64;
+
+/// Mix a position id into a table slot (splitmix-style Zobrist stand-in).
+#[inline]
+fn slot_of(pos: u64, len: usize) -> usize {
+    let mut z = pos.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    (z % len as u64) as usize
+}
+
+/// Probe/store loop over a contiguous table: for each simulated search
+/// node, read the entry, and with probability ~1/2 store back. Returns a
+/// checksum.
+pub fn probe_vec(table: &mut [Entry], ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = table.len();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let pos = rng.next_u64();
+        let s = slot_of(pos, n);
+        let e = table[s];
+        acc = acc.wrapping_add(e);
+        if pos & 1 == 0 {
+            table[s] = e ^ pos;
+        }
+    }
+    acc
+}
+
+/// The same loop over a tree-layout table via naive walks.
+pub fn probe_tree_naive(table: &mut TreeArray<'_, Entry>, ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = table.len();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let pos = rng.next_u64();
+        let s = slot_of(pos, n);
+        // SAFETY: s < n by construction.
+        let e = unsafe { table.get_unchecked(s) };
+        acc = acc.wrapping_add(e);
+        if pos & 1 == 0 {
+            unsafe { table.set_unchecked(s, e ^ pos) };
+        }
+    }
+    acc
+}
+
+/// Simulated probe loop at paper scale (700 MB / 7 GB tables).
+pub fn sim_probe(
+    h: &mut Hierarchy,
+    model: &CostModel,
+    table_bytes: u64,
+    tree: bool,
+    ops: u64,
+    seed: u64,
+) -> SimResult {
+    let len = (table_bytes / 8) as usize;
+    let mut rng = Rng::new(seed);
+    let mut cycles = 0.0f64;
+    if tree {
+        let geo = TreeGeometry::new(32 * 1024, 8, len).expect("geometry");
+        let tm = TreeTraceModel::new(geo, 0x10_0000);
+        let mut path = Vec::with_capacity(4);
+        for _ in 0..ops {
+            let s = slot_of(rng.next_u64(), len);
+            tm.access_path(s, &mut path);
+            // Independent probe chains overlap across probes.
+            let mut chain = model.depth_check;
+            for &a in &path {
+                chain += h.access(a) as f64;
+            }
+            cycles += model.random_chain(chain) + model.compute;
+        }
+    } else {
+        let base = 0x10_0000u64;
+        for _ in 0..ops {
+            let s = slot_of(rng.next_u64(), len) as u64;
+            let (t, d) = h.access_split(base + s * 8);
+            cycles += model.random_chain((t + d) as f64) + model.compute;
+        }
+    }
+    SimResult {
+        cycles_per_elem: cycles / ops as f64,
+        elems: ops,
+        tlb_miss_rate: h.stats().tlb_miss_rate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{AddressMode, PageSize};
+    use crate::pmem::BlockAllocator;
+
+    #[test]
+    fn vec_and_tree_probe_agree() {
+        let a = BlockAllocator::new(4096, 1 << 12).unwrap();
+        let n = 1 << 14;
+        let mut v = vec![0u64; n];
+        let mut t: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let c1 = probe_vec(&mut v, 100_000, 5);
+        let c2 = probe_tree_naive(&mut t, 100_000, 5);
+        assert_eq!(c1, c2);
+        assert_eq!(t.to_vec(), v);
+    }
+
+    #[test]
+    fn slots_cover_table() {
+        let n = 1000;
+        let mut seen = vec![false; n];
+        for pos in 0..50_000u64 {
+            seen[slot_of(pos, n)] = true;
+        }
+        let covered = seen.iter().filter(|&&b| b).count();
+        assert!(covered > 990, "hash covers only {covered}/1000 slots");
+    }
+
+    #[test]
+    fn sim_7gb_tree_physical_vs_array_virtual() {
+        // Figure 5 deepsjeng_s: 7 GB table; overhead of trees must stay
+        // small (paper: < 3%) because the TLB savings offset the walks.
+        let m = CostModel { mlp: 2.0, ..Default::default() };
+        let mut hv = Hierarchy::kaby_lake(AddressMode::Virtual(PageSize::P4K));
+        let mut hp = Hierarchy::kaby_lake(AddressMode::Physical);
+        let a = sim_probe(&mut hv, &m, 7 << 30, false, 200_000, 6);
+        let t = sim_probe(&mut hp, &m, 7 << 30, true, 200_000, 6);
+        let ratio = t.cycles_per_elem / a.cycles_per_elem;
+        assert!(ratio < 1.15, "7 GB probe tree/array = {ratio:.3}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Linear scan microbenchmark (Table 2 rows 1–2), real execution.
+
+use crate::pmem::BlockAllocator;
+use crate::trees::TreeArray;
+
+/// Sum every element of a contiguous `Vec` (the VM baseline).
+pub fn scan_vec(data: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in data {
+        acc += v as f64;
+    }
+    acc
+}
+
+/// Sum every element through naive tree `get` (full walk per element).
+pub fn scan_tree_naive(t: &TreeArray<'_, f32>) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..t.len() {
+        // SAFETY: i < len by loop bound.
+        acc += unsafe { t.get_unchecked(i) } as f64;
+    }
+    acc
+}
+
+/// Sum every element through the Figure 2 iterator.
+pub fn scan_tree_iter(t: &TreeArray<'_, f32>) -> f64 {
+    let mut acc = 0.0f64;
+    for v in t.iter() {
+        acc += v as f64;
+    }
+    acc
+}
+
+/// Build a tree array mirroring `data` (helper shared by benches).
+pub fn tree_from<'a>(alloc: &'a BlockAllocator, data: &[f32]) -> TreeArray<'a, f32> {
+    let mut t = TreeArray::new(alloc, data.len()).expect("tree alloc");
+    t.copy_from_slice(data).expect("tree fill");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn data(n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(42);
+        (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn all_three_scans_agree() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let d = data(4096 * 3 + 17);
+        let t = tree_from(&a, &d);
+        let v = scan_vec(&d);
+        let n = scan_tree_naive(&t);
+        let i = scan_tree_iter(&t);
+        assert!((v - n).abs() < 1e-6, "{v} vs naive {n}");
+        assert!((v - i).abs() < 1e-6, "{v} vs iter {i}");
+    }
+
+    #[test]
+    fn depth1_tree_scan() {
+        let a = BlockAllocator::new(4096, 64).unwrap();
+        let d = data(100);
+        let t = tree_from(&a, &d);
+        assert_eq!(t.depth(), 1);
+        assert!((scan_vec(&d) - scan_tree_iter(&t)).abs() < 1e-9);
+    }
+}

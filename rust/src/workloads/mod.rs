@@ -1,0 +1,26 @@
+//! The paper's evaluation workloads.
+//!
+//! Each microbenchmark exists in two forms:
+//!
+//! 1. **Real execution** — actual data structures ([`crate::trees`],
+//!    `Vec`) exercised for wallclock ratios at sizes that fit in RAM.
+//!    These validate the implementation and the iterator optimization.
+//! 2. **Simulated execution** — address traces fed to
+//!    [`crate::memsim::Hierarchy`] under `Physical` vs `Virtual` modes,
+//!    producing cycles-per-element at the paper's full 4 KB–64 GB range
+//!    (64 GB arrays are modeled, not materialized; paper §4.3 had the
+//!    same problem and solved it less faithfully with huge pages).
+//!
+//! [`trace`] holds the shared cost model; the remaining modules are the
+//! individual workloads of §4.
+
+pub mod blackscholes;
+pub mod fib;
+pub mod gups;
+pub mod hashprobe;
+pub mod linear_scan;
+pub mod rbtree;
+pub mod strided_scan;
+pub mod trace;
+
+pub use trace::{CostModel, ScanKind, SimResult};

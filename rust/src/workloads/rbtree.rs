@@ -1,0 +1,427 @@
+//! Red–black tree benchmark (Figure 4, right).
+//!
+//! The paper's point: pointer-based structures use *no* contiguous
+//! memory, so they run identically on physical and virtual memory — and
+//! removing translation is pure profit (up to 50% runtime reduction).
+//! The same implementation runs in both modes; for the simulated
+//! comparison the traversal's node addresses are recorded and replayed
+//! through the hierarchy.
+
+use crate::error::Result;
+use crate::memsim::Hierarchy;
+use crate::pmem::{BlockAllocator, BlockId};
+use crate::testutil::Rng;
+use crate::workloads::trace::CostModel;
+use crate::workloads::SimResult;
+
+const RED: u8 = 0;
+const BLACK: u8 = 1;
+const NIL: u32 = u32::MAX;
+
+/// One tree node (pool index links, not host pointers, so the node pool
+/// can live in allocator blocks and addresses are stable + simulable).
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    key: u64,
+    left: u32,
+    right: u32,
+    parent: u32,
+    color: u8,
+}
+
+/// A red–black tree whose nodes live in a pool carved from
+/// physically-addressed blocks.
+pub struct RbTree<'a> {
+    #[allow(dead_code)]
+    alloc: &'a BlockAllocator,
+    /// Node pool; node i lives at simulated physical address
+    /// `pool_blocks[i / per_block] * bs + (i % per_block) * NODE_BYTES`.
+    nodes: Vec<Node>,
+    pool_blocks: Vec<BlockId>,
+    per_block: usize,
+    root: u32,
+    len: usize,
+}
+
+/// Simulated size of one node (key + 3 links + color, padded): 32 bytes.
+pub const NODE_BYTES: usize = 32;
+
+impl<'a> RbTree<'a> {
+    /// Create an empty tree with capacity for `cap` nodes.
+    pub fn new(alloc: &'a BlockAllocator, cap: usize) -> Result<Self> {
+        let per_block = alloc.block_size() / NODE_BYTES;
+        let nblocks = cap.div_ceil(per_block).max(1);
+        let pool_blocks = alloc.alloc_many(nblocks)?;
+        Ok(RbTree {
+            alloc,
+            nodes: Vec::with_capacity(cap),
+            pool_blocks,
+            per_block,
+            root: NIL,
+            len: 0,
+        })
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Simulated physical address of node `i`.
+    #[inline]
+    pub fn node_addr(&self, i: u32) -> u64 {
+        let (b, o) = (i as usize / self.per_block, i as usize % self.per_block);
+        self.pool_blocks[b].phys_addr(self.alloc.block_size()) + (o * NODE_BYTES) as u64
+    }
+
+    /// Insert `key` (duplicates allowed; they go right).
+    pub fn insert(&mut self, key: u64) {
+        let idx = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            key,
+            left: NIL,
+            right: NIL,
+            parent: NIL,
+            color: RED,
+        });
+        self.len += 1;
+        // BST insert.
+        let mut parent = NIL;
+        let mut cur = self.root;
+        while cur != NIL {
+            parent = cur;
+            cur = if key < self.nodes[cur as usize].key {
+                self.nodes[cur as usize].left
+            } else {
+                self.nodes[cur as usize].right
+            };
+        }
+        self.nodes[idx as usize].parent = parent;
+        if parent == NIL {
+            self.root = idx;
+        } else if key < self.nodes[parent as usize].key {
+            self.nodes[parent as usize].left = idx;
+        } else {
+            self.nodes[parent as usize].right = idx;
+        }
+        self.fix_insert(idx);
+    }
+
+    fn rotate_left(&mut self, x: u32) {
+        let y = self.nodes[x as usize].right;
+        let yl = self.nodes[y as usize].left;
+        self.nodes[x as usize].right = yl;
+        if yl != NIL {
+            self.nodes[yl as usize].parent = x;
+        }
+        let xp = self.nodes[x as usize].parent;
+        self.nodes[y as usize].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp as usize].left == x {
+            self.nodes[xp as usize].left = y;
+        } else {
+            self.nodes[xp as usize].right = y;
+        }
+        self.nodes[y as usize].left = x;
+        self.nodes[x as usize].parent = y;
+    }
+
+    fn rotate_right(&mut self, x: u32) {
+        let y = self.nodes[x as usize].left;
+        let yr = self.nodes[y as usize].right;
+        self.nodes[x as usize].left = yr;
+        if yr != NIL {
+            self.nodes[yr as usize].parent = x;
+        }
+        let xp = self.nodes[x as usize].parent;
+        self.nodes[y as usize].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp as usize].right == x {
+            self.nodes[xp as usize].right = y;
+        } else {
+            self.nodes[xp as usize].left = y;
+        }
+        self.nodes[y as usize].right = x;
+        self.nodes[x as usize].parent = y;
+    }
+
+    fn fix_insert(&mut self, mut z: u32) {
+        while z != self.root && self.color_of(self.parent_of(z)) == RED {
+            let p = self.parent_of(z);
+            let g = self.parent_of(p);
+            if p == self.nodes[g as usize].left {
+                let u = self.nodes[g as usize].right;
+                if self.color_of(u) == RED {
+                    self.set_color(p, BLACK);
+                    self.set_color(u, BLACK);
+                    self.set_color(g, RED);
+                    z = g;
+                } else {
+                    if z == self.nodes[p as usize].right {
+                        z = p;
+                        self.rotate_left(z);
+                    }
+                    let p = self.parent_of(z);
+                    let g = self.parent_of(p);
+                    self.set_color(p, BLACK);
+                    self.set_color(g, RED);
+                    self.rotate_right(g);
+                }
+            } else {
+                let u = self.nodes[g as usize].left;
+                if self.color_of(u) == RED {
+                    self.set_color(p, BLACK);
+                    self.set_color(u, BLACK);
+                    self.set_color(g, RED);
+                    z = g;
+                } else {
+                    if z == self.nodes[p as usize].left {
+                        z = p;
+                        self.rotate_right(z);
+                    }
+                    let p = self.parent_of(z);
+                    let g = self.parent_of(p);
+                    self.set_color(p, BLACK);
+                    self.set_color(g, RED);
+                    self.rotate_left(g);
+                }
+            }
+        }
+        let r = self.root;
+        self.set_color(r, BLACK);
+    }
+
+    #[inline]
+    fn color_of(&self, i: u32) -> u8 {
+        if i == NIL {
+            BLACK
+        } else {
+            self.nodes[i as usize].color
+        }
+    }
+    #[inline]
+    fn set_color(&mut self, i: u32, c: u8) {
+        if i != NIL {
+            self.nodes[i as usize].color = c;
+        }
+    }
+    #[inline]
+    fn parent_of(&self, i: u32) -> u32 {
+        if i == NIL {
+            NIL
+        } else {
+            self.nodes[i as usize].parent
+        }
+    }
+
+    /// Look up `key`; true if present.
+    pub fn contains(&self, key: u64) -> bool {
+        let mut cur = self.root;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            if key == n.key {
+                return true;
+            }
+            cur = if key < n.key { n.left } else { n.right };
+        }
+        false
+    }
+
+    /// In-order traversal summing keys; `visit` (if given) receives the
+    /// physical address of every node touched, in order — the trace the
+    /// simulation replays.
+    pub fn inorder_sum(&self, mut visit: Option<&mut Vec<u64>>) -> u64 {
+        let mut sum = 0u64;
+        // Explicit stack (recursion would blow real stacks at 10^7 nodes).
+        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        let mut cur = self.root;
+        while cur != NIL || !stack.is_empty() {
+            while cur != NIL {
+                if let Some(v) = visit.as_deref_mut() {
+                    v.push(self.node_addr(cur));
+                }
+                stack.push(cur);
+                cur = self.nodes[cur as usize].left;
+            }
+            cur = stack.pop().unwrap();
+            sum = sum.wrapping_add(self.nodes[cur as usize].key);
+            cur = self.nodes[cur as usize].right;
+        }
+        sum
+    }
+
+    /// Validate red–black invariants (tests / property checks).
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        if self.root != NIL && self.nodes[self.root as usize].color != BLACK {
+            return Err("root not black".into());
+        }
+        // No red node has a red child; equal black height on all paths.
+        fn walk(t: &RbTree<'_>, i: u32) -> std::result::Result<u32, String> {
+            if i == NIL {
+                return Ok(1);
+            }
+            let n = &t.nodes[i as usize];
+            if n.color == RED {
+                if t.color_of(n.left) == RED || t.color_of(n.right) == RED {
+                    return Err(format!("red-red violation at key {}", n.key));
+                }
+            }
+            if n.left != NIL && t.nodes[n.left as usize].key > n.key {
+                return Err("BST order violated (left)".into());
+            }
+            if n.right != NIL && t.nodes[n.right as usize].key < n.key {
+                return Err("BST order violated (right)".into());
+            }
+            let lh = walk(t, n.left)?;
+            let rh = walk(t, n.right)?;
+            if lh != rh {
+                return Err(format!("black height mismatch at key {}", n.key));
+            }
+            Ok(lh + (n.color == BLACK) as u32)
+        }
+        walk(self, self.root).map(|_| ())
+    }
+}
+
+impl Drop for RbTree<'_> {
+    fn drop(&mut self) {
+        for b in &self.pool_blocks {
+            let _ = self.alloc.free(*b);
+        }
+    }
+}
+
+/// Build a tree of `n` random keys, record the in-order traversal trace,
+/// and replay it through `h` — the Figure 4 (right) measurement for one
+/// address mode. Returns cycles per node visit.
+pub fn sim_rbtree_traversal(
+    h: &mut Hierarchy,
+    model: &CostModel,
+    alloc: &BlockAllocator,
+    n: usize,
+    seed: u64,
+) -> SimResult {
+    let mut rng = Rng::new(seed);
+    let mut t = RbTree::new(alloc, n).expect("rbtree pool");
+    for _ in 0..n {
+        t.insert(rng.next_u64());
+    }
+    let mut trace = Vec::with_capacity(n * 2);
+    let _sum = t.inorder_sum(Some(&mut trace));
+    // Tree traversal is a dependent pointer chase: full latencies.
+    let mut cycles = 0.0f64;
+    for &addr in &trace {
+        cycles += h.access(addr) as f64 + model.compute;
+    }
+    SimResult {
+        cycles_per_elem: cycles / trace.len() as f64,
+        elems: trace.len() as u64,
+        tlb_miss_rate: h.stats().tlb_miss_rate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{AddressMode, PageSize};
+    use crate::testutil::forall;
+
+    fn alloc() -> BlockAllocator {
+        BlockAllocator::new(32 * 1024, 1 << 14).unwrap()
+    }
+
+    #[test]
+    fn insert_and_contains() {
+        let a = alloc();
+        let mut t = RbTree::new(&a, 100).unwrap();
+        for k in [5u64, 3, 8, 1, 4, 9, 7] {
+            t.insert(k);
+        }
+        assert!(t.contains(4));
+        assert!(!t.contains(6));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn inorder_is_sorted_sum() {
+        let a = alloc();
+        let mut t = RbTree::new(&a, 1000).unwrap();
+        let mut expect = 0u64;
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let k = rng.next_u64() >> 32;
+            expect = expect.wrapping_add(k);
+            t.insert(k);
+        }
+        assert_eq!(t.inorder_sum(None), expect);
+    }
+
+    #[test]
+    fn sequential_inserts_stay_balanced() {
+        let a = alloc();
+        let mut t = RbTree::new(&a, 4096).unwrap();
+        for k in 0..4096u64 {
+            t.insert(k); // adversarial (sorted) insert order
+        }
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_invariants_hold_under_random_inserts() {
+        forall(20, |g| {
+            let a = BlockAllocator::new(4096, 1 << 12).unwrap();
+            let n = g.usize_in(1, 2000);
+            let mut t = RbTree::new(&a, n).unwrap();
+            for _ in 0..n {
+                t.insert(g.rng().next_u64());
+            }
+            assert_eq!(t.len(), n);
+            t.check_invariants().unwrap();
+        });
+    }
+
+    #[test]
+    fn traversal_trace_has_low_locality() {
+        let a = alloc();
+        let mut t = RbTree::new(&a, 10_000).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            t.insert(rng.next_u64());
+        }
+        let mut trace = Vec::new();
+        t.inorder_sum(Some(&mut trace));
+        // Consecutive visits should mostly land on different blocks —
+        // that's why this benchmark hurts the TLB.
+        let bs = 32 * 1024;
+        let jumps = trace
+            .windows(2)
+            .filter(|w| w[0] / bs != w[1] / bs)
+            .count();
+        assert!(
+            jumps as f64 / trace.len() as f64 > 0.5,
+            "trace too local: {jumps}/{}",
+            trace.len()
+        );
+    }
+
+    #[test]
+    fn physical_traversal_faster_than_virtual() {
+        // Figure 4 right: same structure, no translation -> faster.
+        let m = CostModel::default();
+        let a1 = alloc();
+        let a2 = alloc();
+        let mut hv = Hierarchy::kaby_lake(AddressMode::Virtual(PageSize::P4K));
+        let mut hp = Hierarchy::kaby_lake(AddressMode::Physical);
+        let rv = sim_rbtree_traversal(&mut hv, &m, &a1, 200_000, 11);
+        let rp = sim_rbtree_traversal(&mut hp, &m, &a2, 200_000, 11);
+        let ratio = rp.cycles_per_elem / rv.cycles_per_elem;
+        assert!(ratio < 0.95, "physical/virtual = {ratio:.3}, expected clear win");
+    }
+}

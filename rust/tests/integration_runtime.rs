@@ -1,0 +1,228 @@
+//! Integration: the AOT artifact → PJRT → Rust path (requires
+//! `make artifacts`; tests are skipped with a message if missing).
+
+use nvm::coordinator::BlockBatcher;
+use nvm::pmem::BlockAllocator;
+use nvm::runtime::{Artifacts, Engine, Input};
+use nvm::testutil::Rng;
+use nvm::trees::TreeArray;
+use nvm::workloads::blackscholes as bs;
+use nvm::BLOCK_ELEMS_F32 as BELE;
+
+fn engine() -> Option<Engine> {
+    match Engine::new() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP runtime integration: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_manifest_complete() {
+    let Ok(a) = Artifacts::discover() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    for name in [
+        "bs_blocked_256x8192",
+        "bs_blocked_1x8192",
+        "bs_contig_2097152",
+        "bs_greeks_blocked_16x8192",
+        "gups_1048576_4096",
+        "tree_gather_64x8192_4096",
+    ] {
+        assert!(a.spec(name).is_some(), "missing artifact {name}");
+        assert!(a.hlo_path(name).is_ok(), "missing HLO file for {name}");
+    }
+}
+
+#[test]
+fn blocked_kernel_matches_rust_scalar() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let spot: Vec<f32> = (0..BELE).map(|_| rng.f32_range(5.0, 200.0)).collect();
+    let strike: Vec<f32> = (0..BELE).map(|_| rng.f32_range(5.0, 200.0)).collect();
+    let tmat: Vec<f32> = (0..BELE).map(|_| rng.f32_range(0.05, 3.0)).collect();
+    let shape = vec![1i64, BELE as i64];
+    let out = engine
+        .run_f32(
+            "bs_blocked_1x8192",
+            &[
+                Input::F32(&spot, shape.clone()),
+                Input::F32(&strike, shape.clone()),
+                Input::F32(&tmat, shape),
+                Input::ScalarF32(0.03),
+                Input::ScalarF32(0.25),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 2, "call + put outputs");
+    for i in (0..BELE).step_by(101) {
+        let (c, p) = bs::price(
+            bs::Option1 { spot: spot[i], strike: strike[i], tmat: tmat[i] },
+            0.03,
+            0.25,
+        );
+        assert!((out[0][i] - c).abs() < 1e-2, "call[{i}]: {} vs {c}", out[0][i]);
+        assert!((out[1][i] - p).abs() < 1e-2, "put[{i}]: {} vs {p}", out[1][i]);
+    }
+}
+
+#[test]
+fn executables_compile_once() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let spot: Vec<f32> = (0..BELE).map(|_| rng.f32_range(5.0, 200.0)).collect();
+    let shape = vec![1i64, BELE as i64];
+    for _ in 0..3 {
+        engine
+            .run_f32(
+                "bs_blocked_1x8192",
+                &[
+                    Input::F32(&spot, shape.clone()),
+                    Input::F32(&spot, shape.clone()),
+                    Input::F32(&spot, shape.clone()),
+                    Input::ScalarF32(0.03),
+                    Input::ScalarF32(0.25),
+                ],
+            )
+            .expect("execute");
+    }
+    assert_eq!(engine.compile_count(), 1, "must compile once, run many");
+}
+
+#[test]
+fn batcher_prices_trees_end_to_end() {
+    let Some(engine) = engine() else { return };
+    // Non-multiple of the batch to exercise tail padding, and more than
+    // one leaf to exercise gather/scatter.
+    let n = 3 * BELE + 1234;
+    let alloc = BlockAllocator::with_capacity_bytes(n * 4 * 6 + (8 << 20)).unwrap();
+    let (spot_v, strike_v, tmat_v) = bs::synth_portfolio(n, 9);
+    let mut spot: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut strike: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tmat: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    spot.copy_from_slice(&spot_v).unwrap();
+    strike.copy_from_slice(&strike_v).unwrap();
+    tmat.copy_from_slice(&tmat_v).unwrap();
+    let mut call: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut put: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+
+    let mut batcher = BlockBatcher::new(&engine);
+    let stats = batcher
+        .price_trees(&spot, &strike, &tmat, 0.03, 0.25, &mut call, &mut put)
+        .expect("batch");
+    assert_eq!(stats.dispatches, 1);
+    assert!(stats.padded > 0, "tail batch must be padded");
+
+    let call_v = call.to_vec();
+    let put_v = put.to_vec();
+    for i in (0..n).step_by(503) {
+        let (c, p) = bs::price(
+            bs::Option1 { spot: spot_v[i], strike: strike_v[i], tmat: tmat_v[i] },
+            0.03,
+            0.25,
+        );
+        assert!((call_v[i] - c).abs() < 1e-2, "call[{i}]");
+        assert!((put_v[i] - p).abs() < 1e-2, "put[{i}]");
+    }
+}
+
+#[test]
+fn gups_artifact_matches_rust() {
+    let Some(engine) = engine() else { return };
+    let n = 1usize << 20;
+    let m = 4096usize;
+    let mut rng = Rng::new(4);
+    let table: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32).collect();
+    let idx: Vec<i32> = rng
+        .distinct(m, n)
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let keys: Vec<i32> = (0..m).map(|_| rng.next_u32() as i32).collect();
+    let out = engine
+        .run_i32(
+            "gups_1048576_4096",
+            &[
+                Input::I32(&table, vec![n as i64]),
+                Input::I32(&idx, vec![m as i64]),
+                Input::I32(&keys, vec![m as i64]),
+            ],
+        )
+        .expect("execute gups");
+    let mut expect = table.clone();
+    for (j, &i) in idx.iter().enumerate() {
+        expect[i as usize] ^= keys[j];
+    }
+    assert_eq!(out[0], expect, "GUPS artifact must equal Rust xor-scatter");
+}
+
+#[test]
+fn tree_gather_artifact_matches_tree_array() {
+    let Some(engine) = engine() else { return };
+    // The artifact implements the same indirection the Rust TreeArray
+    // uses: flat index -> (leaf, offset). Cross-validate them.
+    let nblocks = 64usize;
+    let n = nblocks * BELE;
+    let m = 4096usize;
+    let alloc = BlockAllocator::with_capacity_bytes(n * 4 + (8 << 20)).unwrap();
+    let mut rng = Rng::new(5);
+    let data: Vec<f32> = (0..n).map(|_| rng.f32_range(-10.0, 10.0)).collect();
+    let mut tree: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    tree.copy_from_slice(&data).unwrap();
+    let idx: Vec<i32> = (0..m).map(|_| rng.range(0, n) as i32).collect();
+
+    let out = engine
+        .run_f32(
+            "tree_gather_64x8192_4096",
+            &[
+                Input::F32(&data, vec![nblocks as i64, BELE as i64]),
+                Input::I32(&idx, vec![m as i64]),
+            ],
+        )
+        .expect("execute tree_gather");
+    for (j, &i) in idx.iter().enumerate() {
+        let via_tree = tree.get(i as usize).unwrap();
+        assert_eq!(out[0][j], via_tree, "gather[{j}] (idx {i})");
+        assert_eq!(out[0][j], data[i as usize]);
+    }
+}
+
+#[test]
+fn greeks_artifact_sane() {
+    let Some(engine) = engine() else { return };
+    let nblocks = 16usize;
+    let n = nblocks * BELE;
+    let mut rng = Rng::new(6);
+    let spot: Vec<f32> = (0..n).map(|_| rng.f32_range(20.0, 180.0)).collect();
+    let strike: Vec<f32> = (0..n).map(|_| rng.f32_range(20.0, 180.0)).collect();
+    let tmat: Vec<f32> = (0..n).map(|_| rng.f32_range(0.1, 2.0)).collect();
+    let shape = vec![nblocks as i64, BELE as i64];
+    let out = engine
+        .run_f32(
+            "bs_greeks_blocked_16x8192",
+            &[
+                Input::F32(&spot, shape.clone()),
+                Input::F32(&strike, shape.clone()),
+                Input::F32(&tmat, shape),
+                Input::ScalarF32(0.03),
+                Input::ScalarF32(0.25),
+            ],
+        )
+        .expect("execute greeks");
+    // Delta of a call is in (0, 1); vega is positive.
+    let delta = &out[0];
+    assert_eq!(delta.len(), n);
+    for i in (0..n).step_by(811) {
+        assert!(
+            (-1e-3..=1.001).contains(&delta[i]),
+            "delta[{i}] = {} out of range",
+            delta[i]
+        );
+    }
+    let vega = out[1][0];
+    assert!(vega > 0.0, "book vega {vega} must be positive");
+}

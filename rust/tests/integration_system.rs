@@ -1,0 +1,148 @@
+//! Integration: cross-module system behaviour without the PJRT runtime
+//! (allocator ↔ trees ↔ stack ↔ workloads ↔ experiments).
+
+use nvm::coordinator::experiments::{self, ExpConfig};
+use nvm::coordinator::run_experiment;
+use nvm::memsim::{AddressMode, Hierarchy, PageSize};
+use nvm::pmem::BlockAllocator;
+use nvm::stack::SplitStack;
+use nvm::testutil::Rng;
+use nvm::trees::TreeArray;
+use nvm::workloads::{blackscholes as bs, gups, hashprobe, linear_scan};
+
+fn tiny_cfg() -> ExpConfig {
+    ExpConfig {
+        sample: 30_000,
+        threads: 4,
+        ..ExpConfig::default()
+    }
+}
+
+#[test]
+fn all_experiments_dispatch_and_produce_tables() {
+    for name in [
+        "table2",
+        "fig3",
+        "fig4-gups",
+        "fig5",
+        "ablation-block-size",
+        "ablation-ptw",
+    ] {
+        let tables = run_experiment(name, &tiny_cfg()).unwrap_or_else(|e| {
+            panic!("{name} failed: {e}");
+        });
+        assert!(!tables.is_empty());
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{name}: empty table");
+            let md = t.to_markdown();
+            assert!(md.starts_with("###"), "{name}: bad markdown");
+        }
+    }
+}
+
+#[test]
+fn fig4_rbtree_small() {
+    // The rbtree experiment with a reduced size set (full sizes run in
+    // the bench).
+    let cfg = tiny_cfg();
+    let t = experiments::fig4_rbtree(&cfg);
+    for c in 0..2 {
+        let v = t.cell("rbtree insert+traverse", c).unwrap();
+        assert!(
+            (0.2..1.0).contains(&v),
+            "physical/virtual rbtree ratio {v} out of the paper's winning range"
+        );
+    }
+}
+
+#[test]
+fn shared_allocator_hosts_everything_at_once() {
+    // One pool backing arrays, a stack, and workload tables concurrently
+    // — the "general-purpose OS allocator" story of §3.
+    let alloc = BlockAllocator::with_capacity_bytes(96 << 20).unwrap();
+    let mut rng = Rng::new(8);
+
+    let data: Vec<f32> = (0..1 << 20).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    let arr = linear_scan::tree_from(&alloc, &data);
+
+    let mut stack = SplitStack::new(&alloc).unwrap();
+    for d in 0..10_000u64 {
+        stack.call(200, &d.to_le_bytes()).unwrap();
+    }
+
+    let mut table: TreeArray<u64> = TreeArray::new(&alloc, 1 << 18).unwrap();
+    let checksum = gups::gups_tree_naive(&mut table, 100_000, 9);
+
+    // Everything still correct while coexisting.
+    assert_eq!(linear_scan::scan_tree_iter(&arr), linear_scan::scan_vec(&data));
+    assert!(checksum != 0);
+    assert!(alloc.stats().allocated > 0);
+
+    while stack.depth() > 0 {
+        stack.ret().unwrap();
+    }
+    drop(stack);
+    drop(arr);
+    drop(table);
+    assert_eq!(alloc.stats().allocated, 0, "all subsystems must release blocks");
+}
+
+#[test]
+fn allocator_exhaustion_surfaces_cleanly_through_trees() {
+    let alloc = BlockAllocator::new(32 * 1024, 8).unwrap();
+    // 8 blocks cannot host a 1M-element tree; error, not panic/leak.
+    let r: Result<TreeArray<f32>, _> = TreeArray::new(&alloc, 1 << 20);
+    assert!(r.is_err());
+    assert_eq!(alloc.stats().allocated, 0);
+    // And the pool is still fully usable afterwards.
+    let ok: TreeArray<f32> = TreeArray::new(&alloc, 1000).unwrap();
+    assert_eq!(ok.depth(), 1);
+}
+
+#[test]
+fn real_blackscholes_layouts_agree_at_scale() {
+    let n = (1 << 20) + 77;
+    let alloc = BlockAllocator::with_capacity_bytes(n * 4 * 6 + (16 << 20)).unwrap();
+    let (s, k, t) = bs::synth_portfolio(n, 12);
+    let mut call_c = vec![0.0f32; n];
+    let mut put_c = vec![0.0f32; n];
+    bs::price_contig(&s, &k, &t, 0.03, 0.25, &mut call_c, &mut put_c);
+
+    let mut ts: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tk: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tt: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    ts.copy_from_slice(&s).unwrap();
+    tk.copy_from_slice(&k).unwrap();
+    tt.copy_from_slice(&t).unwrap();
+    let mut tc: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    let mut tp: TreeArray<f32> = TreeArray::new(&alloc, n).unwrap();
+    bs::price_tree_iter(&ts, &tk, &tt, 0.03, 0.25, &mut tc, &mut tp);
+    assert_eq!(tc.to_vec(), call_c);
+    assert_eq!(tp.to_vec(), put_c);
+}
+
+#[test]
+fn hugepage_artifact_mechanism() {
+    // §4.3: beyond ~16 GB, 1 GB-page simulation stops being faithful
+    // because 1 GB TLB entries run out. Verify the mechanism end to end
+    // through the probe workload.
+    let model = nvm::workloads::CostModel::default();
+    let mut h_phys = Hierarchy::kaby_lake(AddressMode::Physical);
+    let mut h_huge = Hierarchy::kaby_lake(AddressMode::Virtual(PageSize::P1G));
+    let bytes = 32u64 << 30;
+    let p = hashprobe::sim_probe(&mut h_phys, &model, bytes, true, 100_000, 3);
+    let g = hashprobe::sim_probe(&mut h_huge, &model, bytes, true, 100_000, 3);
+    assert!(
+        g.cycles_per_elem > p.cycles_per_elem,
+        "huge-page sim ({:.1}) must cost more than true physical ({:.1}) at 32 GB",
+        g.cycles_per_elem,
+        p.cycles_per_elem
+    );
+    // Each tree access = 3 loads (root, interior, leaf); root/interior
+    // pages stay TLB-resident, so only the leaf load misses: ~1/3.
+    assert!(
+        g.tlb_miss_rate > 0.25,
+        "1G TLB should thrash on leaf loads at 32 GB (got {:.3})",
+        g.tlb_miss_rate
+    );
+}
