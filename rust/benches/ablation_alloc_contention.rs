@@ -1,0 +1,37 @@
+//! Bench: allocator contention — alloc/free throughput of the mutex
+//! baseline vs the sharded lock-free allocator at 1/2/4/8 threads.
+//!
+//! This is the acceptance bench for the allocator refactor: the sharded
+//! design must beat the single mutex once threads contend (≥4 threads
+//! on real hardware; at 1 thread the mutex's uncontended fast path is
+//! competitive and may win).
+//!
+//! `cargo bench --bench ablation_alloc_contention`  (NVM_QUICK=1 for a
+//! fast pass)
+
+use nvm::bench_utils::section;
+use nvm::coordinator::experiments::{ablation_alloc_contention, ExpConfig};
+
+fn main() {
+    let cfg = if std::env::var("NVM_QUICK").is_ok() {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    section("Ablation: allocator contention (mutex vs sharded)");
+    let t = ablation_alloc_contention(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    // Verdict for CHANGES.md: sharded must exceed mutex at >= 4 threads.
+    let speed4 = t.cell("sharded/mutex", 2).unwrap();
+    let speed8 = t.cell("sharded/mutex", 3).unwrap();
+    println!(
+        "sharded/mutex at 4T: {speed4:.2}x, at 8T: {speed8:.2}x  ({})",
+        if speed4 > 1.0 && speed8 > 1.0 {
+            "sharded wins under contention — refactor goal met"
+        } else {
+            "SHARDED NOT FASTER — investigate (core count? shard config?)"
+        }
+    );
+}

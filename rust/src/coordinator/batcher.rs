@@ -9,6 +9,7 @@
 //! the tail batch, executes, and scatters results back into tree leaves.
 
 use crate::error::Result;
+use crate::pmem::BlockAlloc;
 use crate::runtime::{Engine, Input};
 use crate::trees::TreeArray;
 use crate::{BLOCK_ELEMS_F32 as BELE};
@@ -53,15 +54,15 @@ impl<'e> BlockBatcher<'e> {
     /// writing call/put prices into the output trees.
     ///
     /// All five arrays must have identical length.
-    pub fn price_trees<'a>(
+    pub fn price_trees<'a, A: BlockAlloc>(
         &mut self,
-        spot: &TreeArray<'_, f32>,
-        strike: &TreeArray<'_, f32>,
-        tmat: &TreeArray<'_, f32>,
+        spot: &TreeArray<'_, f32, A>,
+        strike: &TreeArray<'_, f32, A>,
+        tmat: &TreeArray<'_, f32, A>,
         rate: f32,
         vol: f32,
-        call: &mut TreeArray<'a, f32>,
-        put: &mut TreeArray<'a, f32>,
+        call: &mut TreeArray<'a, f32, A>,
+        put: &mut TreeArray<'a, f32, A>,
     ) -> Result<BatchStats> {
         assert_eq!(spot.len(), strike.len());
         assert_eq!(spot.len(), tmat.len());

@@ -42,8 +42,14 @@ where
         .collect()
 }
 
-/// Default parallelism: available cores capped at 8 (experiments are
-/// memory-bandwidth-bound; more threads add noise, not speed).
+/// Default sweep parallelism.
+///
+/// Exactly what the code does: `available_parallelism()`, falling back
+/// to 4 when the core count cannot be determined, then capped at 8
+/// (the experiments are memory-bandwidth-bound; more sweep threads add
+/// noise, not speed). Experiments surface the value actually chosen in
+/// their run output (`nvm run` prints it and tables carry a
+/// `threads=N` note), so a capped or fallback count is visible.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())

@@ -11,6 +11,9 @@ pub struct Table {
     pub rows: Vec<(String, Vec<f64>)>,
     /// Mark cells ≥10% away from 1.0 (the paper colors those).
     pub highlight_ratios: bool,
+    /// Free-form footnotes rendered under the table (run configuration:
+    /// chosen thread count, allocator contention summaries, …).
+    pub notes: Vec<String>,
 }
 
 impl Table {
@@ -21,6 +24,7 @@ impl Table {
             columns,
             rows: Vec::new(),
             highlight_ratios: false,
+            notes: Vec::new(),
         }
     }
 
@@ -28,6 +32,12 @@ impl Table {
     pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
         debug_assert_eq!(values.len(), self.columns.len());
         self.rows.push((label.into(), values));
+        self
+    }
+
+    /// Append a footnote (e.g. `threads=8`).
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
         self
     }
 
@@ -57,6 +67,9 @@ impl Table {
                 s.push_str(&format!(" {} |", fmt_cell(*v, self.highlight_ratios)));
             }
             s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("\n_{n}_\n"));
         }
         s
     }
@@ -97,6 +110,9 @@ impl std::fmt::Display for Table {
             }
             writeln!(f)?;
         }
+        for n in &self.notes {
+            writeln!(f, "  [{n}]")?;
+        }
         Ok(())
     }
 }
@@ -133,5 +149,13 @@ mod tests {
     fn display_renders_all_rows() {
         let s = format!("{}", sample());
         assert!(s.contains("r1") && s.contains("r2"));
+    }
+
+    #[test]
+    fn notes_render_in_both_formats() {
+        let mut t = sample();
+        t.note("threads=8");
+        assert!(format!("{t}").contains("threads=8"));
+        assert!(t.to_markdown().contains("_threads=8_"));
     }
 }

@@ -36,6 +36,18 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "Figure 5: blackscholes + deepsjeng software-contiguity overhead",
         },
         ExperimentInfo {
+            name: "concurrent-gups",
+            description: "Concurrent GUPS: threads sharing one sharded allocator (real execution)",
+        },
+        ExperimentInfo {
+            name: "parallel-blackscholes",
+            description: "Partitioned parallel Black-Scholes over one sharded allocator",
+        },
+        ExperimentInfo {
+            name: "ablation-alloc",
+            description: "Alloc/free throughput at 1-8 threads: mutex vs sharded allocator",
+        },
+        ExperimentInfo {
             name: "ablation-block-size",
             description: "Block-size sensitivity of Table 2 ratios (paper S3 claim)",
         },
@@ -59,6 +71,13 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "fig4-rbtree" => vec![experiments::fig4_rbtree(cfg)],
         "fig4" => vec![experiments::fig4_gups(cfg), experiments::fig4_rbtree(cfg)],
         "fig5" => vec![experiments::fig5(cfg)],
+        "concurrent-gups" | "concurrent_gups" => vec![experiments::concurrent_gups(cfg)],
+        "parallel-blackscholes" | "parallel_blackscholes" => {
+            vec![experiments::parallel_blackscholes(cfg)]
+        }
+        "ablation-alloc" | "ablation_alloc_contention" => {
+            vec![experiments::ablation_alloc_contention(cfg)]
+        }
         "ablation-block-size" => vec![experiments::ablation_block_size(cfg)],
         "ablation-ptw" => vec![experiments::ablation_ptw_cache(cfg)],
         "energy" => vec![experiments::energy(cfg)],

@@ -1,10 +1,10 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls: the offline
+//! build has no `thiserror`).
 
 /// Errors surfaced by the nvm library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// The physical block pool has no free blocks left.
-    #[error("out of physical memory: {requested} blocks requested, {free} free (capacity {capacity})")]
     OutOfMemory {
         /// Blocks requested by the failing call.
         requested: usize,
@@ -15,11 +15,9 @@ pub enum Error {
     },
 
     /// A block handle was used after being freed, or double-freed.
-    #[error("invalid block handle {0:?} (freed or foreign)")]
     InvalidBlock(crate::pmem::BlockId),
 
     /// Element index out of bounds for a tree array.
-    #[error("index {index} out of bounds for tree array of length {len}")]
     IndexOutOfBounds {
         /// Offending index.
         index: usize,
@@ -28,7 +26,6 @@ pub enum Error {
     },
 
     /// Requested array cannot be represented at the given node geometry.
-    #[error("array of {len} elements exceeds max tree capacity {max} (depth {max_depth})")]
     TooLarge {
         /// Requested length.
         len: usize,
@@ -39,7 +36,6 @@ pub enum Error {
     },
 
     /// A stack frame larger than the stack block size was requested.
-    #[error("frame of {frame} bytes exceeds stack block payload {payload} bytes")]
     FrameTooLarge {
         /// Requested frame size.
         frame: usize,
@@ -48,11 +44,9 @@ pub enum Error {
     },
 
     /// Split-stack machine popped an empty stack.
-    #[error("stack underflow")]
     StackUnderflow,
 
     /// A permission-checked access was denied by the protection table.
-    #[error("protection fault: domain {domain} {} {block:?}", if *exec { "executing" } else if *write { "writing" } else { "reading" })]
     Protection {
         /// The block whose check failed.
         block: crate::pmem::BlockId,
@@ -65,24 +59,82 @@ pub enum Error {
     },
 
     /// The block is swapped out and must be faulted in first.
-    #[error("block {0:?} is swapped out")]
     SwappedOut(crate::pmem::BlockId),
 
     /// An artifact file is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Invalid experiment / CLI configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// XLA / PJRT runtime failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::OutOfMemory {
+                requested,
+                free,
+                capacity,
+            } => write!(
+                f,
+                "out of physical memory: {requested} blocks requested, {free} free (capacity {capacity})"
+            ),
+            Error::InvalidBlock(b) => write!(f, "invalid block handle {b:?} (freed or foreign)"),
+            Error::IndexOutOfBounds { index, len } => {
+                write!(f, "index {index} out of bounds for tree array of length {len}")
+            }
+            Error::TooLarge { len, max, max_depth } => write!(
+                f,
+                "array of {len} elements exceeds max tree capacity {max} (depth {max_depth})"
+            ),
+            Error::FrameTooLarge { frame, payload } => write!(
+                f,
+                "frame of {frame} bytes exceeds stack block payload {payload} bytes"
+            ),
+            Error::StackUnderflow => write!(f, "stack underflow"),
+            Error::Protection {
+                block,
+                domain,
+                write,
+                exec,
+            } => {
+                let verb = if *exec {
+                    "executing"
+                } else if *write {
+                    "writing"
+                } else {
+                    "reading"
+                };
+                write!(f, "protection fault: domain {domain} {verb} {block:?}")
+            }
+            Error::SwappedOut(b) => write!(f, "block {b:?} is swapped out"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -93,3 +145,39 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_informative() {
+        let e = Error::OutOfMemory {
+            requested: 3,
+            free: 1,
+            capacity: 8,
+        };
+        let s = e.to_string();
+        assert!(s.contains('3') && s.contains("capacity 8"), "{s}");
+        assert!(Error::StackUnderflow.to_string().contains("underflow"));
+    }
+
+    #[test]
+    fn protection_verbs() {
+        let mk = |write, exec| Error::Protection {
+            block: crate::pmem::BlockId(1),
+            domain: 2,
+            write,
+            exec,
+        };
+        assert!(mk(false, false).to_string().contains("reading"));
+        assert!(mk(true, false).to_string().contains("writing"));
+        assert!(mk(false, true).to_string().contains("executing"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

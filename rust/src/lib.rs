@@ -6,8 +6,14 @@
 //!
 //! The crate provides:
 //!
-//! * [`pmem`] — the paper's §3 OS memory manager: a physical block
-//!   allocator handing out fixed-size (default 32 KB) blocks.
+//! * [`pmem`] — the paper's §3 OS memory manager behind the
+//!   [`pmem::BlockAlloc`] trait: every consumer (trees, stacks, regions,
+//!   workloads, the coordinator) is generic over the allocator policy.
+//!   Two policies ship: [`pmem::BlockAllocator`], the single-mutex LIFO
+//!   baseline, and [`pmem::ShardedAllocator`], per-shard atomic free
+//!   bitmaps with thread-affine shards and cross-shard stealing for
+//!   multi-threaded workloads (fixed-size blocks, default 32 KB, in
+//!   both).
 //! * [`trees`] — §3.2 "arrays as trees": discontiguous arrays built from
 //!   allocator blocks, with the Figure 2 iterator optimization.
 //! * [`stack`] — §3.1 split stacks: a segmented-stack frame machine plus
@@ -18,23 +24,56 @@
 //!   paper's 1 GB-huge-page "physical addressing" hardware trick.
 //! * [`workloads`] — the evaluation workloads: linear/strided scans,
 //!   GUPS, red–black tree, Black-Scholes, a deepsjeng-like hash probe,
-//!   and the recursive-Fibonacci stack microbenchmark.
+//!   and the recursive-Fibonacci stack microbenchmark. All tree-layout
+//!   variants accept any [`pmem::BlockAlloc`] implementation.
 //! * [`coordinator`] — experiment registry, runner, thread pool, block
-//!   batcher, and paper-style report formatting.
+//!   batcher, and paper-style report formatting. Includes the
+//!   multi-threaded experiments the sharded allocator enables
+//!   (`concurrent-gups`, `parallel-blackscholes`, `ablation-alloc`).
 //! * [`runtime`] — the PJRT execution path: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX/Pallas) and runs them from Rust; Python is never on
 //!   the request path.
 //!
 //! ## Quickstart
 //!
+//! Data structures take any allocator implementing
+//! [`pmem::BlockAlloc`]; pick the mutex baseline for simplicity or the
+//! sharded allocator when threads share the pool:
+//!
 //! ```no_run
-//! use nvm::pmem::BlockAllocator;
+//! use nvm::pmem::{BlockAlloc, BlockAllocator, ShardedAllocator};
 //! use nvm::trees::TreeArray;
 //!
+//! // Single-threaded: the mutex baseline.
 //! let alloc = BlockAllocator::with_capacity_bytes(1 << 24).unwrap();
 //! let mut arr: TreeArray<f32> = TreeArray::new(&alloc, 20_000).unwrap();
 //! arr.set(12_345, 1.5).unwrap();
 //! assert_eq!(arr.get(12_345).unwrap(), 1.5);
+//!
+//! // Thread-shared: the sharded lock-free pool, same consumer code.
+//! let shared = ShardedAllocator::with_capacity_bytes(1 << 24).unwrap();
+//! std::thread::scope(|s| {
+//!     for t in 0..4 {
+//!         let shared = &shared;
+//!         s.spawn(move || {
+//!             let mut local: TreeArray<u64, ShardedAllocator> =
+//!                 TreeArray::new(shared, 100_000).unwrap();
+//!             local.set(t, t as u64).unwrap();
+//!         });
+//!     }
+//! });
+//! assert_eq!(shared.stats().allocated, 0); // trees released their blocks
+//! ```
+//!
+//! Generic code states one bound and runs on either policy:
+//!
+//! ```no_run
+//! use nvm::pmem::BlockAlloc;
+//! use nvm::trees::TreeArray;
+//!
+//! fn sum<A: BlockAlloc>(t: &TreeArray<'_, f32, A>) -> f64 {
+//!     t.iter().map(|v| v as f64).sum()
+//! }
 //! ```
 
 pub mod bench_utils;

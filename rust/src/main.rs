@@ -71,6 +71,11 @@ fn cmd_run(cli: &Cli) -> i32 {
     cfg.threads = cli.flag_u64("threads", cfg.threads as u64).unwrap_or(8) as usize;
     cfg.seed = cli.flag_u64("seed", cfg.seed).unwrap_or(cfg.seed);
     cfg.model = CostModel::default();
+    println!(
+        "threads: {} (default would be {}: available cores, fallback 4, capped at 8)",
+        cfg.threads,
+        nvm::coordinator::pool::default_threads()
+    );
     match run_experiment(&name, &cfg) {
         Ok(tables) => {
             for t in tables {

@@ -1,0 +1,104 @@
+//! The allocator abstraction: every consumer of physical blocks (trees,
+//! stacks, regions, workloads, the coordinator) is generic over
+//! [`BlockAlloc`], so the paper's "OS memory manager" is a pluggable
+//! policy. Two implementations ship:
+//!
+//! * [`crate::pmem::BlockAllocator`] — the original single-mutex LIFO
+//!   free list (simple, strictly ordered, the §3 baseline).
+//! * [`crate::pmem::ShardedAllocator`] — per-shard atomic free bitmaps
+//!   with cross-shard stealing (llfree-style), for multi-threaded
+//!   workloads where one lock would serialize the hot path.
+
+use crate::error::Result;
+use crate::pmem::BlockId;
+
+/// Allocation statistics (also the fragmentation story of §3: external
+/// fragmentation is impossible by construction — every free block can
+/// satisfy every request — so the only interesting numbers are counts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Blocks currently allocated.
+    pub allocated: usize,
+    /// High-water mark of simultaneously allocated blocks.
+    pub peak: usize,
+    /// Total successful `alloc` calls over the allocator's lifetime.
+    pub total_allocs: u64,
+    /// Total successful `free` calls.
+    pub total_frees: u64,
+    /// Failed allocations (pool exhausted).
+    pub failed_allocs: u64,
+}
+
+/// Contention counters for concurrent allocators. The mutex baseline
+/// reports zeros; [`crate::pmem::ShardedAllocator`] counts the events
+/// its scaling story hinges on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ContentionStats {
+    /// Allocations served from a non-home shard (the local shard was
+    /// dry and the block was stolen from a neighbor).
+    pub steals: u64,
+    /// Cursor refills: full rescans of a shard's bitmap after the
+    /// forward scan from the cursor hint found nothing.
+    pub refills: u64,
+    /// Compare-and-swap attempts that lost a race and retried.
+    pub cas_retries: u64,
+}
+
+/// A fixed-size physical block allocator over one stable arena
+/// (the paper's §3 OS memory manager).
+///
+/// # Contract
+///
+/// * Blocks are `block_size()` bytes, zero-initialized on first use.
+/// * `alloc`/`alloc_many`/`free` are safe to call from many threads.
+/// * A live block is exclusively owned by its allocating holder; the
+///   allocator never hands one block to two owners.
+/// * `free` rejects double frees and foreign ids.
+/// * `alloc_many` is all-or-nothing: on failure nothing is leaked.
+pub trait BlockAlloc: Send + Sync {
+    /// Allocate one block.
+    fn alloc(&self) -> Result<BlockId>;
+
+    /// Allocate `n` blocks (all-or-nothing).
+    fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>>;
+
+    /// Allocate a block and zero its contents (freed blocks may hold
+    /// stale data; fresh arena blocks are already zero).
+    fn alloc_zeroed(&self) -> Result<BlockId>;
+
+    /// Return a block to the pool. Double frees are rejected.
+    fn free(&self, id: BlockId) -> Result<()>;
+
+    /// Block size in bytes.
+    fn block_size(&self) -> usize;
+
+    /// Pool capacity in blocks.
+    fn capacity(&self) -> usize;
+
+    /// Free blocks remaining.
+    fn free_blocks(&self) -> usize;
+
+    /// Is `id` currently allocated?
+    fn is_live(&self, id: BlockId) -> bool;
+
+    /// Snapshot of allocation statistics.
+    fn stats(&self) -> AllocStats;
+
+    /// Snapshot of contention counters (zeros for uncontended designs).
+    fn contention(&self) -> ContentionStats {
+        ContentionStats::default()
+    }
+
+    /// Raw pointer to the block's first byte.
+    ///
+    /// # Safety
+    /// `id` must be live and the caller must uphold exclusive ownership
+    /// of the block's data (no two holders of the same live block).
+    unsafe fn block_ptr(&self, id: BlockId) -> *mut u8;
+
+    /// Copy bytes into a block (safe, bounds-checked API).
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()>;
+
+    /// Copy bytes out of a block (safe, bounds-checked API).
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()>;
+}

@@ -1,27 +1,11 @@
 //! The fixed-size block allocator (the paper's §3 OS memory manager).
 
-use std::alloc::{alloc_zeroed, dealloc, Layout};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
+use crate::pmem::alloc_trait::{AllocStats, BlockAlloc};
+use crate::pmem::arena::Arena;
 use crate::pmem::BlockId;
-
-/// Allocation statistics (also the fragmentation story of §3: external
-/// fragmentation is impossible by construction — every free block can
-/// satisfy every request — so the only interesting numbers are counts).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct AllocStats {
-    /// Blocks currently allocated.
-    pub allocated: usize,
-    /// High-water mark of simultaneously allocated blocks.
-    pub peak: usize,
-    /// Total successful `alloc` calls over the allocator's lifetime.
-    pub total_allocs: u64,
-    /// Total successful `free` calls.
-    pub total_frees: u64,
-    /// Failed allocations (pool exhausted).
-    pub failed_allocs: u64,
-}
 
 struct Inner {
     /// LIFO free list (freshly freed blocks are reused first — warm in
@@ -54,18 +38,9 @@ impl Inner {
 /// lock-free because each live block is exclusively owned by its
 /// allocating data structure (the crate-internal raw APIs uphold this).
 pub struct BlockAllocator {
-    arena: *mut u8,
-    layout: Layout,
-    block_size: usize,
-    capacity: usize,
+    arena: Arena,
     inner: Mutex<Inner>,
 }
-
-// SAFETY: the arena pointer is stable for the allocator's lifetime and
-// every block is exclusively owned by one holder at a time (alloc/free
-// are mutex-serialized; data access to distinct blocks never aliases).
-unsafe impl Send for BlockAllocator {}
-unsafe impl Sync for BlockAllocator {}
 
 impl BlockAllocator {
     /// Create a pool of `capacity_blocks` blocks of `block_size` bytes.
@@ -73,33 +48,11 @@ impl BlockAllocator {
     /// `block_size` must be a power of two ≥ 256 (the paper uses 32 KB;
     /// the ablation sweeps 8–128 KB).
     pub fn new(block_size: usize, capacity_blocks: usize) -> Result<Self> {
-        if !block_size.is_power_of_two() || block_size < 256 {
-            return Err(Error::Config(format!(
-                "block_size {block_size} must be a power of two >= 256"
-            )));
-        }
-        if capacity_blocks == 0 || capacity_blocks > u32::MAX as usize {
-            return Err(Error::Config(format!(
-                "capacity_blocks {capacity_blocks} out of range"
-            )));
-        }
-        let layout = Layout::from_size_align(block_size * capacity_blocks, block_size)
-            .map_err(|e| Error::Config(e.to_string()))?;
-        // SAFETY: layout is non-zero-sized and valid.
-        let arena = unsafe { alloc_zeroed(layout) };
-        if arena.is_null() {
-            return Err(Error::Config(format!(
-                "arena allocation of {} bytes failed",
-                block_size * capacity_blocks
-            )));
-        }
+        let arena = Arena::new(block_size, capacity_blocks)?;
         // Free list initialized high→low so allocation order is 0,1,2,…
         let free: Vec<u32> = (0..capacity_blocks as u32).rev().collect();
         Ok(BlockAllocator {
             arena,
-            layout,
-            block_size,
-            capacity: capacity_blocks,
             inner: Mutex::new(Inner {
                 free,
                 live: vec![0u64; capacity_blocks.div_ceil(64)],
@@ -129,7 +82,7 @@ impl BlockAllocator {
                 Err(Error::OutOfMemory {
                     requested: 1,
                     free: 0,
-                    capacity: self.capacity,
+                    capacity: self.arena.capacity(),
                 })
             }
         }
@@ -143,7 +96,7 @@ impl BlockAllocator {
             return Err(Error::OutOfMemory {
                 requested: n,
                 free: g.free.len(),
-                capacity: self.capacity,
+                capacity: self.arena.capacity(),
             });
         }
         let mut out = Vec::with_capacity(n);
@@ -162,14 +115,14 @@ impl BlockAllocator {
     pub fn alloc_zeroed(&self) -> Result<BlockId> {
         let id = self.alloc()?;
         // SAFETY: id is live and exclusively ours until returned.
-        unsafe { std::ptr::write_bytes(self.block_ptr(id), 0, self.block_size) };
+        unsafe { self.arena.zero_block(id) };
         Ok(id)
     }
 
     /// Return a block to the pool. Double frees are rejected.
     pub fn free(&self, id: BlockId) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        if id.0 as usize >= self.capacity || !g.is_live(id.0) {
+        if id.0 as usize >= self.arena.capacity() || !g.is_live(id.0) {
             return Err(Error::InvalidBlock(id));
         }
         g.set_live(id.0, false);
@@ -182,13 +135,13 @@ impl BlockAllocator {
     /// Block size in bytes.
     #[inline]
     pub fn block_size(&self) -> usize {
-        self.block_size
+        self.arena.block_size()
     }
 
     /// Pool capacity in blocks.
     #[inline]
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.arena.capacity()
     }
 
     /// Free blocks remaining.
@@ -203,7 +156,7 @@ impl BlockAllocator {
 
     /// Is `id` currently allocated?
     pub fn is_live(&self, id: BlockId) -> bool {
-        (id.0 as usize) < self.capacity && self.inner.lock().unwrap().is_live(id.0)
+        (id.0 as usize) < self.arena.capacity() && self.inner.lock().unwrap().is_live(id.0)
     }
 
     /// Raw pointer to the block's first byte.
@@ -213,27 +166,22 @@ impl BlockAllocator {
     /// of the block's data (no two holders of the same live block).
     #[inline]
     pub(crate) unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
-        debug_assert!((id.0 as usize) < self.capacity);
-        self.arena.add(id.0 as usize * self.block_size)
+        self.arena.block_ptr(id)
     }
 
     /// Copy bytes into a block (safe, bounds-checked API).
     pub fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
         self.check(id, offset, data.len())?;
-        // SAFETY: bounds checked; exclusive ownership per contract.
-        unsafe {
-            std::ptr::copy_nonoverlapping(data.as_ptr(), self.block_ptr(id).add(offset), data.len())
-        };
+        // SAFETY: span checked; exclusive ownership per contract.
+        unsafe { self.arena.copy_in(id, offset, data) };
         Ok(())
     }
 
     /// Copy bytes out of a block (safe, bounds-checked API).
     pub fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
         self.check(id, offset, out.len())?;
-        // SAFETY: bounds checked.
-        unsafe {
-            std::ptr::copy_nonoverlapping(self.block_ptr(id).add(offset), out.as_mut_ptr(), out.len())
-        };
+        // SAFETY: span checked.
+        unsafe { self.arena.copy_out(id, offset, out) };
         Ok(())
     }
 
@@ -241,20 +189,60 @@ impl BlockAllocator {
         if !self.is_live(id) {
             return Err(Error::InvalidBlock(id));
         }
-        if offset + len > self.block_size {
-            return Err(Error::IndexOutOfBounds {
-                index: offset + len,
-                len: self.block_size,
-            });
-        }
-        Ok(())
+        self.arena.check_span(offset, len)
     }
 }
 
-impl Drop for BlockAllocator {
-    fn drop(&mut self) {
-        // SAFETY: arena was allocated with exactly this layout.
-        unsafe { dealloc(self.arena, self.layout) };
+/// The trait impl delegates to the inherent methods, so concrete users
+/// keep their API and generic users (`TreeArray<T, A>`, `SplitStack<A>`,
+/// the workloads) see the same behaviour through [`BlockAlloc`].
+impl BlockAlloc for BlockAllocator {
+    fn alloc(&self) -> Result<BlockId> {
+        BlockAllocator::alloc(self)
+    }
+
+    fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>> {
+        BlockAllocator::alloc_many(self, n)
+    }
+
+    fn alloc_zeroed(&self) -> Result<BlockId> {
+        BlockAllocator::alloc_zeroed(self)
+    }
+
+    fn free(&self, id: BlockId) -> Result<()> {
+        BlockAllocator::free(self, id)
+    }
+
+    fn block_size(&self) -> usize {
+        BlockAllocator::block_size(self)
+    }
+
+    fn capacity(&self) -> usize {
+        BlockAllocator::capacity(self)
+    }
+
+    fn free_blocks(&self) -> usize {
+        BlockAllocator::free_blocks(self)
+    }
+
+    fn is_live(&self, id: BlockId) -> bool {
+        BlockAllocator::is_live(self, id)
+    }
+
+    fn stats(&self) -> AllocStats {
+        BlockAllocator::stats(self)
+    }
+
+    unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
+        BlockAllocator::block_ptr(self, id)
+    }
+
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        BlockAllocator::write(self, id, offset, data)
+    }
+
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        BlockAllocator::read(self, id, offset, out)
     }
 }
 
@@ -264,7 +252,9 @@ impl std::fmt::Debug for BlockAllocator {
         write!(
             f,
             "BlockAllocator {{ block_size: {}, capacity: {}, allocated: {} }}",
-            self.block_size, self.capacity, s.allocated
+            self.arena.block_size(),
+            self.arena.capacity(),
+            s.allocated
         )
     }
 }
@@ -331,6 +321,11 @@ mod tests {
         let a = BlockAllocator::new(4096, 2).unwrap();
         let b = a.alloc().unwrap();
         assert!(a.write(b, 4093, &[1, 2, 3, 4]).is_err());
+        // Offsets that would wrap the address computation are rejected
+        // by the overflow-safe span check, not UB.
+        assert!(a.write(b, usize::MAX - 2, &[1, 2, 3, 4]).is_err());
+        let mut out = [0u8; 4];
+        assert!(a.read(b, usize::MAX - 2, &mut out).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::{Pod, TreeArray};
 
 /// Statistics of migration activity.
@@ -29,16 +29,16 @@ pub struct MigrateStats {
 }
 
 /// Block migrator with a forwarding table.
-pub struct Relocator<'a> {
-    alloc: &'a BlockAllocator,
+pub struct Relocator<'a, A: BlockAlloc = BlockAllocator> {
+    alloc: &'a A,
     /// old block -> new block, for pointer-patching passes.
     forwards: Mutex<HashMap<BlockId, BlockId>>,
     stats: Mutex<MigrateStats>,
 }
 
-impl<'a> Relocator<'a> {
+impl<'a, A: BlockAlloc> Relocator<'a, A> {
     /// New relocator over `alloc`.
-    pub fn new(alloc: &'a BlockAllocator) -> Self {
+    pub fn new(alloc: &'a A) -> Self {
         Relocator {
             alloc,
             forwards: Mutex::new(HashMap::new()),
@@ -100,7 +100,7 @@ impl<'a> Relocator<'a> {
     }
 }
 
-impl<'a, T: Pod> TreeArray<'a, T> {
+impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// Migrate leaf `leaf_idx` to a fresh block, patching the parent
     /// pointer — the tree-native relocation the paper describes (only
     /// one pointer names a leaf, so no global patching pass is needed).

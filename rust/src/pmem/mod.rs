@@ -7,20 +7,30 @@
 //! single fixed arena, so a block's address never changes and arithmetic
 //! on addresses is meaningful, exactly as on a machine without paging.
 //!
-//! * [`BlockAllocator`] — the fixed-block pool with a LIFO free list.
+//! * [`BlockAlloc`] — the allocator abstraction every consumer (trees,
+//!   stacks, regions, workloads, coordinator) is generic over.
+//! * [`BlockAllocator`] — the baseline fixed-block pool: one mutex, one
+//!   LIFO free list.
+//! * [`ShardedAllocator`] — the scalable pool: per-shard atomic free
+//!   bitmaps with cross-shard stealing (lock-free hot path).
 //! * [`Region`] — a convenience view over a *logical* sequence of blocks
 //!   (what a large `malloc` becomes in this world).
 
+pub mod alloc_trait;
 mod allocator;
+mod arena;
 mod block;
 pub mod migrate;
 pub mod protect;
 mod region;
+mod sharded;
 pub mod swap;
 
-pub use allocator::{AllocStats, BlockAllocator};
+pub use alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
+pub use allocator::BlockAllocator;
 pub use block::BlockId;
 pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;
+pub use sharded::ShardedAllocator;
 pub use swap::SwapPool;

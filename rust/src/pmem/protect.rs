@@ -17,7 +17,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 
 /// Access permissions on a block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -147,19 +147,15 @@ impl ProtectionTable {
 /// against the table before touching the allocator (the software
 /// equivalent of the PMP check the paper's hardware would do in the
 /// load/store pipeline).
-pub struct CheckedMem<'a> {
-    alloc: &'a BlockAllocator,
+pub struct CheckedMem<'a, A: BlockAlloc = BlockAllocator> {
+    alloc: &'a A,
     table: &'a ProtectionTable,
     domain: ProtectionDomain,
 }
 
-impl<'a> CheckedMem<'a> {
+impl<'a, A: BlockAlloc> CheckedMem<'a, A> {
     /// A view for `domain`.
-    pub fn new(
-        alloc: &'a BlockAllocator,
-        table: &'a ProtectionTable,
-        domain: ProtectionDomain,
-    ) -> Self {
+    pub fn new(alloc: &'a A, table: &'a ProtectionTable, domain: ProtectionDomain) -> Self {
         CheckedMem { alloc, table, domain }
     }
 

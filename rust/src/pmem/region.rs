@@ -5,18 +5,18 @@
 //! batcher. (Indexed access at scale wants [`crate::trees::TreeArray`].)
 
 use crate::error::Result;
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 
 /// A logical byte range backed by a sequence of blocks.
-pub struct Region<'a> {
-    alloc: &'a BlockAllocator,
+pub struct Region<'a, A: BlockAlloc = BlockAllocator> {
+    alloc: &'a A,
     blocks: Vec<BlockId>,
     len: usize,
 }
 
-impl<'a> Region<'a> {
+impl<'a, A: BlockAlloc> Region<'a, A> {
     /// Allocate a region of at least `len` bytes.
-    pub fn new(alloc: &'a BlockAllocator, len: usize) -> Result<Self> {
+    pub fn new(alloc: &'a A, len: usize) -> Result<Self> {
         let bs = alloc.block_size();
         let nblocks = len.div_ceil(bs).max(1);
         let blocks = alloc.alloc_many(nblocks)?;
@@ -84,7 +84,7 @@ impl<'a> Region<'a> {
     }
 }
 
-impl Drop for Region<'_> {
+impl<A: BlockAlloc> Drop for Region<'_, A> {
     fn drop(&mut self) {
         for b in &self.blocks {
             let _ = self.alloc.free(*b);

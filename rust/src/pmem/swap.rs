@@ -16,7 +16,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 
 /// A stable handle for swapped-out contents.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -42,15 +42,15 @@ struct Inner {
     stats: SwapStats,
 }
 
-/// Block-granular swap file over a [`BlockAllocator`].
-pub struct SwapPool<'a> {
-    alloc: &'a BlockAllocator,
+/// Block-granular swap file over any [`BlockAlloc`] pool.
+pub struct SwapPool<'a, A: BlockAlloc = BlockAllocator> {
+    alloc: &'a A,
     inner: Mutex<Inner>,
 }
 
-impl<'a> SwapPool<'a> {
+impl<'a, A: BlockAlloc> SwapPool<'a, A> {
     /// Create a swap pool backed by a file at `path` (truncated).
-    pub fn new(alloc: &'a BlockAllocator, path: &std::path::Path) -> Result<Self> {
+    pub fn new(alloc: &'a A, path: &std::path::Path) -> Result<Self> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -70,7 +70,7 @@ impl<'a> SwapPool<'a> {
     }
 
     /// Swap pool backed by an anonymous temp file.
-    pub fn anonymous(alloc: &'a BlockAllocator) -> Result<Self> {
+    pub fn anonymous(alloc: &'a A) -> Result<Self> {
         let path = std::env::temp_dir().join(format!(
             "nvm-swap-{}-{:x}",
             std::process::id(),

@@ -7,7 +7,7 @@
 //! analytic model in [`crate::stack::profiles`].
 
 use crate::error::Result;
-use crate::pmem::BlockAllocator;
+use crate::pmem::BlockAlloc;
 use crate::stack::{SplitStack, StackStats};
 use crate::testutil::Rng;
 
@@ -87,7 +87,7 @@ const ARGS: [u8; 32] = [0xA5; 32];
 
 impl TraceRunner {
     /// Replay on a [`SplitStack`]; returns final stats.
-    pub fn run_split(trace: &CallTrace, alloc: &BlockAllocator) -> Result<StackStats> {
+    pub fn run_split<A: BlockAlloc>(trace: &CallTrace, alloc: &A) -> Result<StackStats> {
         let mut s = SplitStack::new(alloc)?;
         for ev in &trace.events {
             match *ev {
@@ -131,6 +131,7 @@ impl TraceRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pmem::BlockAllocator;
     use crate::testutil::forall;
 
     #[test]

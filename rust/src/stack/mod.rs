@@ -8,8 +8,8 @@
 //! This is gcc's `-fsplit-stack` with allocation requests pinned to the
 //! OS block size, exactly the configuration the paper measured.
 //!
-//! * [`SplitStack`] — the executable frame machine over
-//!   [`crate::pmem::BlockAllocator`] blocks (correctness + measured
+//! * [`SplitStack`] — the executable frame machine over any
+//!   [`crate::pmem::BlockAlloc`] pool (correctness + measured
 //!   check cost).
 //! * [`CallTrace`] / [`TraceRunner`] — synthetic call-tree generation
 //!   and replay against both the split stack and a contiguous reference.

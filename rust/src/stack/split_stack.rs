@@ -1,7 +1,7 @@
 //! The split-stack frame machine.
 
 use crate::error::{Error, Result};
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::stack::FrameRef;
 
 /// Per-block header: link to the previous block and the stack offset to
@@ -38,8 +38,8 @@ struct FrameMeta {
 /// `call` = function prologue (space check, possible block switch, arg
 /// copy); `ret` = epilogue (possible block release). Frame locals are
 /// accessed through [`FrameRef`] with bounds checks.
-pub struct SplitStack<'a> {
-    alloc: &'a BlockAllocator,
+pub struct SplitStack<'a, A: BlockAlloc = BlockAllocator> {
+    alloc: &'a A,
     /// Current (top) block and bump offset within it.
     top: BlockId,
     sp: usize,
@@ -47,9 +47,9 @@ pub struct SplitStack<'a> {
     stats: StackStats,
 }
 
-impl<'a> SplitStack<'a> {
+impl<'a, A: BlockAlloc> SplitStack<'a, A> {
     /// Create a stack with one initial block.
-    pub fn new(alloc: &'a BlockAllocator) -> Result<Self> {
+    pub fn new(alloc: &'a A) -> Result<Self> {
         let top = alloc.alloc()?;
         Ok(SplitStack {
             alloc,
@@ -174,7 +174,7 @@ impl<'a> SplitStack<'a> {
     }
 }
 
-impl Drop for SplitStack<'_> {
+impl<A: BlockAlloc> Drop for SplitStack<'_, A> {
     fn drop(&mut self) {
         // Unwind any live frames, then release the initial block.
         while self.ret().is_ok() {}

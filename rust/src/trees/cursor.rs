@@ -6,11 +6,12 @@
 //! `seek()` probes the cached leaf first — the software analogue of a
 //! page-table-walk cache (paper §4.4).
 
+use crate::pmem::{BlockAlloc, BlockAllocator};
 use crate::trees::tree_array::{Pod, TreeArray};
 
 /// Cursor over a [`TreeArray`] with a cached leaf pointer.
-pub struct Cursor<'t, 'a, T: Pod> {
-    tree: &'t TreeArray<'a, T>,
+pub struct Cursor<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
+    tree: &'t TreeArray<'a, T, A>,
     /// Cached leaf data pointer (null when unpositioned).
     leaf: *const T,
     /// First element index covered by the cached leaf.
@@ -24,8 +25,8 @@ pub struct Cursor<'t, 'a, T: Pod> {
     walks: u64,
 }
 
-impl<'t, 'a, T: Pod> Cursor<'t, 'a, T> {
-    pub(crate) fn new(tree: &'t TreeArray<'a, T>) -> Self {
+impl<'t, 'a, T: Pod, A: BlockAlloc> Cursor<'t, 'a, T, A> {
+    pub(crate) fn new(tree: &'t TreeArray<'a, T, A>) -> Self {
         Cursor {
             tree,
             leaf: std::ptr::null(),
@@ -73,7 +74,7 @@ impl<'t, 'a, T: Pod> Cursor<'t, 'a, T> {
     }
 }
 
-impl<T: Pod> Iterator for Cursor<'_, '_, T> {
+impl<T: Pod, A: BlockAlloc> Iterator for Cursor<'_, '_, T, A> {
     type Item = T;
 
     /// The paper's Figure 2 `next()`: bump within the cached leaf; walk
@@ -100,7 +101,7 @@ impl<T: Pod> Iterator for Cursor<'_, '_, T> {
     }
 }
 
-impl<T: Pod> ExactSizeIterator for Cursor<'_, '_, T> {}
+impl<T: Pod, A: BlockAlloc> ExactSizeIterator for Cursor<'_, '_, T, A> {}
 
 #[cfg(test)]
 mod tests {

@@ -6,8 +6,9 @@
 //! 32 KB nodes and 8-byte child pointers the fanout is 4096, so depth-3
 //! trees address ~536 GB and depth-4 ~2 PB (the paper's footnote 1).
 //!
-//! * [`TreeArray`] — the real data structure, backed by
-//!   [`crate::pmem::BlockAllocator`] blocks.
+//! * [`TreeArray`] — the real data structure, generic over any
+//!   [`crate::pmem::BlockAlloc`] pool (mutex baseline or the sharded
+//!   lock-free allocator).
 //! * [`Cursor`] — the Figure 2 iterator optimization: a cached leaf
 //!   pointer that turns sequential access into a pointer bump and random
 //!   access into a leaf-cache probe (a software PTW cache, §4.4).

@@ -1,7 +1,7 @@
 //! The arrays-as-trees data structure over allocator blocks.
 
 use crate::error::{Error, Result};
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::layout::TreeGeometry;
 use crate::trees::Cursor;
 
@@ -28,23 +28,34 @@ unsafe impl Pod for usize {}
 /// (paper §3.2 / Figure 1). Interior nodes hold 8-byte child block ids;
 /// leaves hold element data. Depth is 1–4 and recorded as metadata, per
 /// the paper ("a tree stores meta-data about its depth").
-pub struct TreeArray<'a, T: Pod> {
-    pub(crate) alloc: &'a BlockAllocator,
+///
+/// Generic over the allocator policy `A` (defaulting to the mutex
+/// baseline), so the same tree runs over [`BlockAllocator`] and
+/// [`crate::pmem::ShardedAllocator`] unchanged.
+pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
+    pub(crate) alloc: &'a A,
     pub(crate) geo: TreeGeometry,
     root: BlockId,
     blocks: Vec<BlockId>, // all blocks, for Drop
     _t: std::marker::PhantomData<T>,
 }
 
-impl<'a, T: Pod> TreeArray<'a, T> {
+impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// Allocate a zeroed tree array of `len` elements using the paper's
     /// geometry (node size = allocator block size, 8-byte child ids).
-    pub fn new(alloc: &'a BlockAllocator, len: usize) -> Result<Self> {
+    pub fn new(alloc: &'a A, len: usize) -> Result<Self> {
         let geo = TreeGeometry::new(alloc.block_size(), std::mem::size_of::<T>(), len)?;
         // Build bottom-up: leaves first, then interior levels.
         let nleaves = geo.nleaves();
         let mut all = Vec::with_capacity(geo.total_blocks());
         let mut level: Vec<BlockId> = alloc.alloc_many(nleaves)?;
+        // The allocator only guarantees zero contents on a block's FIRST
+        // use; recycled blocks carry stale data. The constructor promises
+        // a zeroed array, so scrub the leaves explicitly.
+        for leaf in &level {
+            // SAFETY: leaf is live and exclusively ours.
+            unsafe { std::ptr::write_bytes(alloc.block_ptr(*leaf), 0, alloc.block_size()) };
+        }
         all.extend_from_slice(&level);
         let mut depth_built = 1;
         while level.len() > 1 || depth_built < geo.depth {
@@ -271,17 +282,17 @@ impl<'a, T: Pod> TreeArray<'a, T> {
     }
 
     /// Sequential iterator using the Figure 2 cached-leaf optimization.
-    pub fn iter(&self) -> Cursor<'_, 'a, T> {
+    pub fn iter(&self) -> Cursor<'_, 'a, T, A> {
         Cursor::new(self)
     }
 
     /// A random-access cursor starting unpositioned (leaf cache empty).
-    pub fn cursor(&self) -> Cursor<'_, 'a, T> {
+    pub fn cursor(&self) -> Cursor<'_, 'a, T, A> {
         Cursor::new(self)
     }
 }
 
-impl<T: Pod> Drop for TreeArray<'_, T> {
+impl<T: Pod, A: BlockAlloc> Drop for TreeArray<'_, T, A> {
     fn drop(&mut self) {
         for b in &self.blocks {
             let _ = self.alloc.free(*b);
@@ -289,7 +300,7 @@ impl<T: Pod> Drop for TreeArray<'_, T> {
     }
 }
 
-impl<T: Pod> std::fmt::Debug for TreeArray<'_, T> {
+impl<T: Pod, A: BlockAlloc> std::fmt::Debug for TreeArray<'_, T, A> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
@@ -367,6 +378,21 @@ mod tests {
         let a = small_alloc();
         let t: TreeArray<u64> = TreeArray::new(&a, 1000).unwrap();
         assert!(t.iter().all(|v| v == 0));
+    }
+
+    #[test]
+    fn zero_initialized_even_on_recycled_blocks() {
+        // Blocks freed by a dropped tree carry stale data; a new tree
+        // over the same pool must still read all-zero.
+        let a = small_alloc();
+        {
+            let mut t: TreeArray<u64> = TreeArray::new(&a, 1000).unwrap();
+            for i in 0..1000 {
+                t.set(i, 0xDEAD_BEEF).unwrap();
+            }
+        }
+        let t2: TreeArray<u64> = TreeArray::new(&a, 1000).unwrap();
+        assert!(t2.iter().all(|v| v == 0), "recycled leaves not scrubbed");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! AOT-compiled Pallas kernel executed through PJRT — proving the
 //! L3↔L1 boundary agrees end to end.
 
+use crate::pmem::BlockAlloc;
 use crate::trees::TreeArray;
 
 /// One option's market parameters.
@@ -82,14 +83,14 @@ pub fn price_contig(
 }
 
 /// Price tree-layout arrays via naive per-element walks.
-pub fn price_tree_naive(
-    spot: &TreeArray<'_, f32>,
-    strike: &TreeArray<'_, f32>,
-    tmat: &TreeArray<'_, f32>,
+pub fn price_tree_naive<A: BlockAlloc>(
+    spot: &TreeArray<'_, f32, A>,
+    strike: &TreeArray<'_, f32, A>,
+    tmat: &TreeArray<'_, f32, A>,
     rate: f32,
     vol: f32,
-    call: &mut TreeArray<'_, f32>,
-    put: &mut TreeArray<'_, f32>,
+    call: &mut TreeArray<'_, f32, A>,
+    put: &mut TreeArray<'_, f32, A>,
 ) {
     for i in 0..spot.len() {
         // SAFETY: all arrays share len (asserted by callers/tests).
@@ -113,14 +114,14 @@ pub fn price_tree_naive(
 
 /// Price tree-layout arrays leaf-at-a-time (the Iterator-style
 /// optimization: one walk per 32 KB leaf, then contiguous slices).
-pub fn price_tree_iter(
-    spot: &TreeArray<'_, f32>,
-    strike: &TreeArray<'_, f32>,
-    tmat: &TreeArray<'_, f32>,
+pub fn price_tree_iter<A: BlockAlloc>(
+    spot: &TreeArray<'_, f32, A>,
+    strike: &TreeArray<'_, f32, A>,
+    tmat: &TreeArray<'_, f32, A>,
     rate: f32,
     vol: f32,
-    call: &mut TreeArray<'_, f32>,
-    put: &mut TreeArray<'_, f32>,
+    call: &mut TreeArray<'_, f32, A>,
+    put: &mut TreeArray<'_, f32, A>,
 ) {
     for leaf in 0..spot.nleaves() {
         let s = spot.leaf_slice(leaf);

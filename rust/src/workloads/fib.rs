@@ -8,7 +8,7 @@
 //! wallclock ratio is this repo's measured fib datapoint for Figure 3.
 
 use crate::error::Result;
-use crate::pmem::BlockAllocator;
+use crate::pmem::BlockAlloc;
 use crate::stack::SplitStack;
 
 /// Native recursion baseline.
@@ -34,7 +34,7 @@ pub fn fib_reference(n: u32) -> u64 {
 /// Recursion where every call pushes a real frame on a [`SplitStack`]
 /// (8-byte local holding `n`). This exercises the check on every call
 /// exactly as gcc's `-fsplit-stack` prologue does.
-pub fn fib_split(s: &mut SplitStack<'_>, n: u32) -> Result<u64> {
+pub fn fib_split<A: BlockAlloc>(s: &mut SplitStack<'_, A>, n: u32) -> Result<u64> {
     let frame = s.call(16, &(n as u64).to_le_bytes())?;
     let result = if n < 2 {
         n as u64
@@ -52,7 +52,7 @@ pub fn fib_split(s: &mut SplitStack<'_>, n: u32) -> Result<u64> {
 }
 
 /// Convenience: run `fib_split` with a fresh stack over `alloc`.
-pub fn fib_split_fresh(alloc: &BlockAllocator, n: u32) -> Result<(u64, u64)> {
+pub fn fib_split_fresh<A: BlockAlloc>(alloc: &A, n: u32) -> Result<(u64, u64)> {
     let mut s = SplitStack::new(alloc)?;
     let v = fib_split(&mut s, n)?;
     let calls = s.stats().calls;
@@ -62,6 +62,7 @@ pub fn fib_split_fresh(alloc: &BlockAllocator, n: u32) -> Result<(u64, u64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pmem::BlockAllocator;
 
     #[test]
     fn native_matches_reference() {

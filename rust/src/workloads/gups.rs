@@ -5,6 +5,7 @@
 //! (random pages) and tree walks (random leaves, no leaf-cache reuse).
 
 use crate::memsim::Hierarchy;
+use crate::pmem::BlockAlloc;
 use crate::testutil::Rng;
 use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
 use crate::workloads::trace::CostModel;
@@ -23,7 +24,7 @@ pub fn gups_vec(table: &mut [u64], ops: u64, seed: u64) -> u64 {
 }
 
 /// Real GUPS over a tree table using naive walks.
-pub fn gups_tree_naive(t: &mut TreeArray<'_, u64>, ops: u64, seed: u64) -> u64 {
+pub fn gups_tree_naive<A: BlockAlloc>(t: &mut TreeArray<'_, u64, A>, ops: u64, seed: u64) -> u64 {
     let mut rng = Rng::new(seed);
     let n = t.len() as u64;
     for _ in 0..ops {

@@ -9,6 +9,7 @@
 //! point.
 
 use crate::memsim::Hierarchy;
+use crate::pmem::BlockAlloc;
 use crate::testutil::Rng;
 use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
 use crate::workloads::trace::CostModel;
@@ -46,7 +47,11 @@ pub fn probe_vec(table: &mut [Entry], ops: u64, seed: u64) -> u64 {
 }
 
 /// The same loop over a tree-layout table via naive walks.
-pub fn probe_tree_naive(table: &mut TreeArray<'_, Entry>, ops: u64, seed: u64) -> u64 {
+pub fn probe_tree_naive<A: BlockAlloc>(
+    table: &mut TreeArray<'_, Entry, A>,
+    ops: u64,
+    seed: u64,
+) -> u64 {
     let mut rng = Rng::new(seed);
     let n = table.len();
     let mut acc = 0u64;

@@ -1,6 +1,6 @@
 //! Linear scan microbenchmark (Table 2 rows 1–2), real execution.
 
-use crate::pmem::BlockAllocator;
+use crate::pmem::BlockAlloc;
 use crate::trees::TreeArray;
 
 /// Sum every element of a contiguous `Vec` (the VM baseline).
@@ -13,7 +13,7 @@ pub fn scan_vec(data: &[f32]) -> f64 {
 }
 
 /// Sum every element through naive tree `get` (full walk per element).
-pub fn scan_tree_naive(t: &TreeArray<'_, f32>) -> f64 {
+pub fn scan_tree_naive<A: BlockAlloc>(t: &TreeArray<'_, f32, A>) -> f64 {
     let mut acc = 0.0f64;
     for i in 0..t.len() {
         // SAFETY: i < len by loop bound.
@@ -23,7 +23,7 @@ pub fn scan_tree_naive(t: &TreeArray<'_, f32>) -> f64 {
 }
 
 /// Sum every element through the Figure 2 iterator.
-pub fn scan_tree_iter(t: &TreeArray<'_, f32>) -> f64 {
+pub fn scan_tree_iter<A: BlockAlloc>(t: &TreeArray<'_, f32, A>) -> f64 {
     let mut acc = 0.0f64;
     for v in t.iter() {
         acc += v as f64;
@@ -32,7 +32,7 @@ pub fn scan_tree_iter(t: &TreeArray<'_, f32>) -> f64 {
 }
 
 /// Build a tree array mirroring `data` (helper shared by benches).
-pub fn tree_from<'a>(alloc: &'a BlockAllocator, data: &[f32]) -> TreeArray<'a, f32> {
+pub fn tree_from<'a, A: BlockAlloc>(alloc: &'a A, data: &[f32]) -> TreeArray<'a, f32, A> {
     let mut t = TreeArray::new(alloc, data.len()).expect("tree alloc");
     t.copy_from_slice(data).expect("tree fill");
     t
@@ -41,6 +41,7 @@ pub fn tree_from<'a>(alloc: &'a BlockAllocator, data: &[f32]) -> TreeArray<'a, f
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pmem::BlockAllocator;
     use crate::testutil::Rng;
 
     fn data(n: usize) -> Vec<f32> {

@@ -9,7 +9,7 @@
 
 use crate::error::Result;
 use crate::memsim::Hierarchy;
-use crate::pmem::{BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::testutil::Rng;
 use crate::workloads::trace::CostModel;
 use crate::workloads::SimResult;
@@ -31,9 +31,9 @@ struct Node {
 
 /// A red–black tree whose nodes live in a pool carved from
 /// physically-addressed blocks.
-pub struct RbTree<'a> {
+pub struct RbTree<'a, A: BlockAlloc = BlockAllocator> {
     #[allow(dead_code)]
-    alloc: &'a BlockAllocator,
+    alloc: &'a A,
     /// Node pool; node i lives at simulated physical address
     /// `pool_blocks[i / per_block] * bs + (i % per_block) * NODE_BYTES`.
     nodes: Vec<Node>,
@@ -46,9 +46,9 @@ pub struct RbTree<'a> {
 /// Simulated size of one node (key + 3 links + color, padded): 32 bytes.
 pub const NODE_BYTES: usize = 32;
 
-impl<'a> RbTree<'a> {
+impl<'a, A: BlockAlloc> RbTree<'a, A> {
     /// Create an empty tree with capacity for `cap` nodes.
-    pub fn new(alloc: &'a BlockAllocator, cap: usize) -> Result<Self> {
+    pub fn new(alloc: &'a A, cap: usize) -> Result<Self> {
         let per_block = alloc.block_size() / NODE_BYTES;
         let nblocks = cap.div_ceil(per_block).max(1);
         let pool_blocks = alloc.alloc_many(nblocks)?;
@@ -263,7 +263,7 @@ impl<'a> RbTree<'a> {
             return Err("root not black".into());
         }
         // No red node has a red child; equal black height on all paths.
-        fn walk(t: &RbTree<'_>, i: u32) -> std::result::Result<u32, String> {
+        fn walk<A: BlockAlloc>(t: &RbTree<'_, A>, i: u32) -> std::result::Result<u32, String> {
             if i == NIL {
                 return Ok(1);
             }
@@ -290,7 +290,7 @@ impl<'a> RbTree<'a> {
     }
 }
 
-impl Drop for RbTree<'_> {
+impl<A: BlockAlloc> Drop for RbTree<'_, A> {
     fn drop(&mut self) {
         for b in &self.pool_blocks {
             let _ = self.alloc.free(*b);
@@ -301,10 +301,10 @@ impl Drop for RbTree<'_> {
 /// Build a tree of `n` random keys, record the in-order traversal trace,
 /// and replay it through `h` — the Figure 4 (right) measurement for one
 /// address mode. Returns cycles per node visit.
-pub fn sim_rbtree_traversal(
+pub fn sim_rbtree_traversal<A: BlockAlloc>(
     h: &mut Hierarchy,
     model: &CostModel,
-    alloc: &BlockAllocator,
+    alloc: &A,
     n: usize,
     seed: u64,
 ) -> SimResult {

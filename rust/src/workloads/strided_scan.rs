@@ -2,6 +2,7 @@
 //! The paper strides 1024 elements (= 4 KB with f32), touching one
 //! element per page on the VM baseline.
 
+use crate::pmem::BlockAlloc;
 use crate::trees::TreeArray;
 
 /// Paper's stride: every 1024th element (4 KB apart).
@@ -19,7 +20,7 @@ pub fn scan_vec(data: &[f32], stride: usize) -> f64 {
 }
 
 /// Strided sum via naive tree walks.
-pub fn scan_tree_naive(t: &TreeArray<'_, f32>, stride: usize) -> f64 {
+pub fn scan_tree_naive<A: BlockAlloc>(t: &TreeArray<'_, f32, A>, stride: usize) -> f64 {
     let mut acc = 0.0f64;
     let mut i = 0usize;
     while i < t.len() {
@@ -31,7 +32,7 @@ pub fn scan_tree_naive(t: &TreeArray<'_, f32>, stride: usize) -> f64 {
 }
 
 /// Strided sum via the cursor (leaf cache catches within-leaf strides).
-pub fn scan_tree_iter(t: &TreeArray<'_, f32>, stride: usize) -> f64 {
+pub fn scan_tree_iter<A: BlockAlloc>(t: &TreeArray<'_, f32, A>, stride: usize) -> f64 {
     let mut acc = 0.0f64;
     let mut c = t.cursor();
     let mut i = 0usize;

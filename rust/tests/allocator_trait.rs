@@ -1,0 +1,246 @@
+//! Allocator-trait conformance: the same invariant suite runs against
+//! every [`BlockAlloc`] implementation (the mutex baseline and the
+//! sharded lock-free allocator), plus a multi-thread ownership stress
+//! test asserting no block is ever handed to two owners.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use nvm::pmem::{BlockAlloc, BlockAllocator, BlockId, ShardedAllocator};
+use nvm::testutil::forall;
+
+/// Run `f` against both allocator implementations at the same geometry.
+fn with_both_allocators(block_size: usize, capacity: usize, f: impl Fn(&dyn Named)) {
+    let mutex = MutexImpl(BlockAllocator::new(block_size, capacity).unwrap());
+    f(&mutex);
+    let sharded = ShardedImpl(ShardedAllocator::with_shards(block_size, capacity, 4).unwrap());
+    f(&sharded);
+}
+
+/// Object-safe shim: the invariant suite only needs the safe subset of
+/// the trait, so it can run through a `&dyn` without monomorphizing the
+/// whole suite twice.
+trait Named {
+    fn name(&self) -> &'static str;
+    fn alloc(&self) -> nvm::Result<BlockId>;
+    fn alloc_many(&self, n: usize) -> nvm::Result<Vec<BlockId>>;
+    fn free(&self, id: BlockId) -> nvm::Result<()>;
+    fn free_blocks(&self) -> usize;
+    fn allocated(&self) -> usize;
+    fn capacity(&self) -> usize;
+    fn is_live(&self, id: BlockId) -> bool;
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> nvm::Result<()>;
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> nvm::Result<()>;
+}
+
+struct MutexImpl(BlockAllocator);
+struct ShardedImpl(ShardedAllocator);
+
+macro_rules! forward {
+    ($ty:ty, $label:literal) => {
+        impl Named for $ty {
+            fn name(&self) -> &'static str {
+                $label
+            }
+            fn alloc(&self) -> nvm::Result<BlockId> {
+                BlockAlloc::alloc(&self.0)
+            }
+            fn alloc_many(&self, n: usize) -> nvm::Result<Vec<BlockId>> {
+                BlockAlloc::alloc_many(&self.0, n)
+            }
+            fn free(&self, id: BlockId) -> nvm::Result<()> {
+                BlockAlloc::free(&self.0, id)
+            }
+            fn free_blocks(&self) -> usize {
+                BlockAlloc::free_blocks(&self.0)
+            }
+            fn allocated(&self) -> usize {
+                BlockAlloc::stats(&self.0).allocated
+            }
+            fn capacity(&self) -> usize {
+                BlockAlloc::capacity(&self.0)
+            }
+            fn is_live(&self, id: BlockId) -> bool {
+                BlockAlloc::is_live(&self.0, id)
+            }
+            fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> nvm::Result<()> {
+                BlockAlloc::write(&self.0, id, offset, data)
+            }
+            fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> nvm::Result<()> {
+                BlockAlloc::read(&self.0, id, offset, out)
+            }
+        }
+    };
+}
+
+forward!(MutexImpl, "mutex");
+forward!(ShardedImpl, "sharded");
+
+#[test]
+fn prop_alloc_free_roundtrip_and_conservation() {
+    forall(30, |g| {
+        let cap = g.usize_in(1, 96);
+        with_both_allocators(1024, cap, |a| {
+            let mut g = nvm::testutil::Rng::new(cap as u64 ^ 0xA110C);
+            let mut live: Vec<BlockId> = Vec::new();
+            for _ in 0..200 {
+                if g.chance(0.45) && !live.is_empty() {
+                    let i = g.range(0, live.len());
+                    let b = live.swap_remove(i);
+                    a.free(b).unwrap_or_else(|e| panic!("{}: free: {e}", a.name()));
+                    assert!(!a.is_live(b), "{}: freed block still live", a.name());
+                } else if let Ok(b) = a.alloc() {
+                    assert!(a.is_live(b), "{}: fresh block not live", a.name());
+                    live.push(b);
+                }
+                // Conservation: allocated + free == capacity, always.
+                assert_eq!(
+                    a.allocated() + a.free_blocks(),
+                    a.capacity(),
+                    "{}: conservation violated",
+                    a.name()
+                );
+                assert_eq!(a.allocated(), live.len(), "{}: live count drift", a.name());
+            }
+        });
+    });
+}
+
+#[test]
+fn prop_double_free_rejected() {
+    forall(20, |g| {
+        let cap = g.usize_in(2, 64);
+        with_both_allocators(1024, cap, |a| {
+            let b = a.alloc().unwrap();
+            a.free(b).unwrap();
+            assert!(a.free(b).is_err(), "{}: double free accepted", a.name());
+            // The failed free must not corrupt the pool.
+            assert_eq!(a.allocated(), 0, "{}", a.name());
+            assert_eq!(a.free_blocks(), a.capacity(), "{}", a.name());
+        });
+    });
+}
+
+#[test]
+fn prop_alloc_many_rollback_leaks_nothing() {
+    forall(25, |g| {
+        let cap = g.usize_in(2, 80);
+        let held = g.usize_in(1, cap);
+        with_both_allocators(1024, cap, |a| {
+            let keep = a.alloc_many(held).unwrap();
+            // More than remains: must fail AND leak nothing.
+            let want = cap - held + 1;
+            assert!(a.alloc_many(want).is_err(), "{}", a.name());
+            assert_eq!(
+                a.free_blocks(),
+                cap - held,
+                "{}: rollback leaked blocks",
+                a.name()
+            );
+            // The remainder is still fully allocatable.
+            let rest = a.alloc_many(cap - held).unwrap();
+            assert_eq!(rest.len(), cap - held, "{}", a.name());
+            for b in keep.into_iter().chain(rest) {
+                a.free(b).unwrap();
+            }
+            assert_eq!(a.free_blocks(), cap, "{}", a.name());
+        });
+    });
+}
+
+#[test]
+fn prop_distinct_blocks_never_alias() {
+    forall(15, |g| {
+        let cap = g.usize_in(2, 48);
+        with_both_allocators(1024, cap, |a| {
+            let blocks = a.alloc_many(cap).unwrap();
+            for (i, b) in blocks.iter().enumerate() {
+                a.write(*b, 0, &[i as u8; 64]).unwrap();
+            }
+            for (i, b) in blocks.iter().enumerate() {
+                let mut out = [0u8; 64];
+                a.read(*b, 0, &mut out).unwrap();
+                assert_eq!(out, [i as u8; 64], "{}: block data bled", a.name());
+            }
+        });
+    });
+}
+
+/// The central concurrency guarantee: under 8 threads of churn on a
+/// deliberately small pool (forcing contention, shard exhaustion, and
+/// steals), no block is ever owned by two threads at once. Ownership is
+/// tracked in an external claim table that every alloc/free transition
+/// must pass through atomically.
+fn two_owner_stress<A: BlockAlloc + 'static>(alloc: A, label: &str) {
+    const THREADS: u32 = 8;
+    const ITERS: usize = 3_000;
+    let capacity = alloc.capacity();
+    let alloc = Arc::new(alloc);
+    let claims: Arc<Vec<AtomicU32>> = Arc::new((0..capacity).map(|_| AtomicU32::new(0)).collect());
+    let mut handles = Vec::new();
+    for tid in 1..=THREADS {
+        let alloc = alloc.clone();
+        let claims = claims.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut held: Vec<BlockId> = Vec::new();
+            for i in 0..ITERS {
+                if (i + tid as usize) % 3 != 0 || held.is_empty() {
+                    if let Ok(b) = alloc.alloc() {
+                        // Claim must have been unowned: two owners would
+                        // mean the allocator double-handed the block.
+                        let prev = claims[b.0 as usize].swap(tid, Ordering::AcqRel);
+                        assert_eq!(prev, 0, "block {} handed to two owners", b.0);
+                        held.push(b);
+                    }
+                } else {
+                    let b = held.pop().unwrap();
+                    let prev = claims[b.0 as usize].swap(0, Ordering::AcqRel);
+                    assert_eq!(prev, tid, "claim table corrupted for block {}", b.0);
+                    alloc.free(b).unwrap();
+                }
+            }
+            for b in held {
+                let prev = claims[b.0 as usize].swap(0, Ordering::AcqRel);
+                assert_eq!(prev, tid);
+                alloc.free(b).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap_or_else(|_| panic!("{label}: stress thread panicked"));
+    }
+    assert_eq!(alloc.stats().allocated, 0, "{label}: blocks leaked");
+    assert_eq!(alloc.free_blocks(), capacity, "{label}");
+    assert!(
+        claims.iter().all(|c| c.load(Ordering::Acquire) == 0),
+        "{label}: claim table not drained"
+    );
+}
+
+#[test]
+fn stress_no_block_has_two_owners_mutex() {
+    // Pool far smaller than peak demand: allocation failures and reuse
+    // are constant, which is exactly what the test wants.
+    two_owner_stress(BlockAllocator::new(1024, 96).unwrap(), "mutex");
+}
+
+#[test]
+fn stress_no_block_has_two_owners_sharded() {
+    two_owner_stress(
+        ShardedAllocator::with_shards(1024, 96, 4).unwrap(),
+        "sharded",
+    );
+}
+
+#[test]
+fn sharded_steals_surface_in_contention_stats() {
+    // One thread draining a multi-shard pool must cross shards.
+    let a = ShardedAllocator::with_shards(1024, 256, 4).unwrap();
+    let all = a.alloc_many(256).unwrap();
+    assert!(a.contention().steals > 0, "draining 4 shards implies steals");
+    for b in all {
+        a.free(b).unwrap();
+    }
+    // No cas_retries assertion: compare_exchange_weak may fail
+    // spuriously on LL/SC architectures even without contention.
+}

@@ -4,7 +4,7 @@
 use nvm::coordinator::experiments::{self, ExpConfig};
 use nvm::coordinator::run_experiment;
 use nvm::memsim::{AddressMode, Hierarchy, PageSize};
-use nvm::pmem::BlockAllocator;
+use nvm::pmem::{BlockAlloc, BlockAllocator, ShardedAllocator};
 use nvm::stack::SplitStack;
 use nvm::testutil::Rng;
 use nvm::trees::TreeArray;
@@ -25,6 +25,9 @@ fn all_experiments_dispatch_and_produce_tables() {
         "fig3",
         "fig4-gups",
         "fig5",
+        "concurrent-gups",
+        "parallel-blackscholes",
+        "ablation-alloc",
         "ablation-block-size",
         "ablation-ptw",
     ] {
@@ -85,6 +88,50 @@ fn shared_allocator_hosts_everything_at_once() {
     drop(arr);
     drop(table);
     assert_eq!(alloc.stats().allocated, 0, "all subsystems must release blocks");
+}
+
+#[test]
+fn sharded_allocator_hosts_everything_at_once() {
+    // The same §3 "one pool backs everything" story, through the trait:
+    // arrays, a split stack, and a GUPS table share one sharded pool.
+    let alloc = ShardedAllocator::with_capacity_bytes(96 << 20).unwrap();
+    let mut rng = Rng::new(8);
+
+    let data: Vec<f32> = (0..1 << 18).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    let arr = linear_scan::tree_from(&alloc, &data);
+
+    let mut stack = SplitStack::new(&alloc).unwrap();
+    for d in 0..5_000u64 {
+        stack.call(200, &d.to_le_bytes()).unwrap();
+    }
+
+    let mut table: TreeArray<u64, ShardedAllocator> = TreeArray::new(&alloc, 1 << 16).unwrap();
+    let checksum = gups::gups_tree_naive(&mut table, 50_000, 9);
+
+    assert_eq!(linear_scan::scan_tree_iter(&arr), linear_scan::scan_vec(&data));
+    assert!(checksum != 0);
+    assert!(alloc.stats().allocated > 0);
+
+    while stack.depth() > 0 {
+        stack.ret().unwrap();
+    }
+    drop(stack);
+    drop(arr);
+    drop(table);
+    assert_eq!(alloc.stats().allocated, 0, "all subsystems must release blocks");
+}
+
+#[test]
+fn mixed_allocators_coexist() {
+    // Generic consumers accept either policy in the same process; data
+    // round-trips identically.
+    let mutex = BlockAllocator::new(4096, 512).unwrap();
+    let sharded = ShardedAllocator::with_shards(4096, 512, 4).unwrap();
+    let data: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+    let t1 = linear_scan::tree_from(&mutex, &data);
+    let t2 = linear_scan::tree_from(&sharded, &data);
+    assert_eq!(linear_scan::scan_tree_iter(&t1), linear_scan::scan_tree_iter(&t2));
+    assert_eq!(t1.to_vec(), t2.to_vec());
 }
 
 #[test]

@@ -1,0 +1,91 @@
+//! Offline stub of `anyhow`: just the surface the repo's examples use
+//! (`Result`, `Error`, `Error::msg`, `ensure!`). Like the real crate,
+//! [`Error`] deliberately does **not** implement `std::error::Error`,
+//! which is what lets the blanket `From<E: std::error::Error>` impl
+//! coexist with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// Type-erased error (stub: stores the formatted message).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result`, defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> super::Result<()> {
+            let _ = std::str::from_utf8(&[0xFF])?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn ensure_fires_on_false() {
+        fn inner(ok: bool) -> super::Result<u8> {
+            crate::ensure!(ok, "wanted {}", ok);
+            Ok(1)
+        }
+        assert!(inner(true).is_ok());
+        let e = inner(false).unwrap_err();
+        assert_eq!(format!("{e}"), "wanted false");
+    }
+}
