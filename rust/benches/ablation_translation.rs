@@ -1,0 +1,157 @@
+//! Bench: the software-translation ablation (paper §4.4).
+//!
+//! Every way this repo can turn an element index into data, side by
+//! side: naive tree walk (Table 2's `depth` dependent loads), the bare
+//! Figure 2 single-leaf cursor, the set-associative leaf-TLB cursor,
+//! the flat leaf-table mode (one indexed load), and a contiguous `Vec`
+//! as the hardware floor — across depths 1–3 and sequential / strided /
+//! random access. A second section compares per-op vs batched
+//! (sort-and-run) GUPS on the tree backend.
+//!
+//! Acceptance (printed as a verdict): flat-table random access must be
+//! ≥ 3x the naive walk at depth ≥ 2, and batched GUPS must beat per-op
+//! GUPS.
+//!
+//! `cargo bench --bench ablation_translation`  (NVM_QUICK=1 for a fast
+//! pass)
+
+use nvm::bench_utils::{bench, section};
+use nvm::pmem::BlockAllocator;
+use nvm::testutil::Rng;
+use nvm::trees::TreeArray;
+use nvm::workloads::gups;
+
+/// 1 KB blocks keep trees deep at bench-friendly sizes
+/// (u32: leaf_cap 256, fanout 128).
+const BLOCK: usize = 1024;
+
+fn access_patterns(n: usize, accesses: usize, seed: u64) -> Vec<(&'static str, Vec<usize>)> {
+    let seq: Vec<usize> = (0..accesses).map(|k| k % n).collect();
+    // Prime stride just past the 256-element leaf: every access changes
+    // leaf, with periodic revisits — the TLB's home turf.
+    let strided: Vec<usize> = (0..accesses).map(|k| (k * 263) % n).collect();
+    let mut rng = Rng::new(seed);
+    let random: Vec<usize> = (0..accesses).map(|_| rng.range(0, n)).collect();
+    vec![("sequential", seq), ("strided", strided), ("random", random)]
+}
+
+fn xor_all(vals: impl Iterator<Item = u32>) -> u32 {
+    vals.fold(0, |a, v| a ^ v)
+}
+
+fn main() {
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let (warmup, iters, accesses) = if quick { (1, 3, 40_000) } else { (2, 7, 200_000) };
+    let mut verdicts: Vec<(String, bool)> = Vec::new();
+
+    for (depth, n) in [(1u32, 256usize), (2, 256 * 64), (3, 256 * 128 * 4)] {
+        let a = BlockAllocator::new(BLOCK, 2048).expect("bench pool");
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut tree: TreeArray<u32> = TreeArray::new(&a, n).expect("walk tree");
+        tree.copy_from_slice(&data).expect("fill");
+        let mut flat_tree: TreeArray<u32> = TreeArray::new(&a, n).expect("flat tree");
+        flat_tree.copy_from_slice(&data).expect("fill");
+        flat_tree.enable_flat_table();
+        assert_eq!(tree.depth(), depth);
+
+        section(&format!("translation modes, depth {depth} ({n} u32 elems)"));
+        println!(
+            "{:<12} {:>10} {:>10} {:>10} {:>10} {:>10}   (ns/access)",
+            "pattern", "naive", "cursor1", "tlb64x4", "flat", "vec"
+        );
+        for (pname, idxs) in access_patterns(n, accesses, 42) {
+            // Correctness cross-check before timing: every mode must
+            // produce the same checksum as the Vec baseline.
+            let want = xor_all(idxs.iter().map(|&i| data[i]));
+            {
+                let mut c1 = tree.cursor_with_tlb(0, 1);
+                let mut ct = tree.cursor_with_tlb(64, 4);
+                assert_eq!(xor_all(idxs.iter().map(|&i| unsafe { tree.get_unchecked(i) })), want);
+                assert_eq!(xor_all(idxs.iter().map(|&i| c1.seek(i))), want);
+                assert_eq!(xor_all(idxs.iter().map(|&i| ct.seek(i))), want);
+                assert_eq!(xor_all(idxs.iter().map(|&i| unsafe { flat_tree.get_unchecked(i) })), want);
+            }
+
+            let s_naive = bench("naive", warmup, iters, || {
+                xor_all(idxs.iter().map(|&i| unsafe { tree.get_unchecked(i) }))
+            });
+            let mut c1 = tree.cursor_with_tlb(0, 1);
+            let s_c1 = bench("cursor1", warmup, iters, || {
+                xor_all(idxs.iter().map(|&i| c1.seek(i)))
+            });
+            let mut ct = tree.cursor_with_tlb(64, 4);
+            let s_tlb = bench("tlb", warmup, iters, || {
+                xor_all(idxs.iter().map(|&i| ct.seek(i)))
+            });
+            let s_flat = bench("flat", warmup, iters, || {
+                xor_all(idxs.iter().map(|&i| unsafe { flat_tree.get_unchecked(i) }))
+            });
+            let s_vec = bench("vec", warmup, iters, || {
+                xor_all(idxs.iter().map(|&i| data[i]))
+            });
+
+            let per = |s: &nvm::bench_utils::Sample| s.mean_ns() / accesses as f64;
+            println!(
+                "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+                pname,
+                per(&s_naive),
+                per(&s_c1),
+                per(&s_tlb),
+                per(&s_flat),
+                per(&s_vec)
+            );
+
+            if pname == "random" && depth >= 2 {
+                let speedup = s_naive.mean_ns() / s_flat.mean_ns();
+                verdicts.push((
+                    format!("flat vs naive, random, depth {depth}: {speedup:.2}x (need >= 3x)"),
+                    speedup >= 3.0,
+                ));
+            }
+        }
+    }
+
+    // Batched GUPS vs per-op GUPS on the tree backend (paper-size 32 KB
+    // blocks: 1 Mi u64 elems -> 256 leaves, depth 2).
+    section("batched vs per-op GUPS (tree backend, 32 KB blocks)");
+    let ops: u64 = if quick { 200_000 } else { 2_000_000 };
+    let a = BlockAllocator::new(32 * 1024, 512).expect("gups pool");
+    let n = 1usize << 20;
+    let mut per_op_tree: TreeArray<u64> = TreeArray::new(&a, n).expect("gups table");
+    let s_per_op = bench("gups per-op", 1, 3, || {
+        gups::gups_tree_naive(&mut per_op_tree, ops, 7)
+    });
+    drop(per_op_tree);
+    let mut batched_tree: TreeArray<u64> = TreeArray::new(&a, n).expect("gups table");
+    let s_batched = bench("gups batched", 1, 3, || {
+        gups::gups_tree_batched(&mut batched_tree, ops, 7, gups::GUPS_BATCH)
+    });
+    let mups = |s: &nvm::bench_utils::Sample| ops as f64 / (s.mean_ns() / 1e9) / 1e6;
+    println!(
+        "per-op {:.2} Mupd/s   batched {:.2} Mupd/s  ({} updates, batch {})",
+        mups(&s_per_op),
+        mups(&s_batched),
+        ops,
+        gups::GUPS_BATCH
+    );
+    let g_speed = s_per_op.mean_ns() / s_batched.mean_ns();
+    verdicts.push((
+        format!("batched vs per-op GUPS: {g_speed:.2}x (need > 1x)"),
+        g_speed > 1.0,
+    ));
+
+    section("verdict");
+    let mut all = true;
+    for (what, ok) in &verdicts {
+        println!("{} {}", if *ok { "PASS" } else { "FAIL" }, what);
+        all &= *ok;
+    }
+    println!(
+        "{}",
+        if all {
+            "translation-cache goals met: flat table >= 3x naive on random access, batching wins"
+        } else {
+            "TRANSLATION GOALS NOT MET — investigate (debug build? tiny machine?)"
+        }
+    );
+}

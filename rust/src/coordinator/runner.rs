@@ -44,6 +44,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "Partitioned parallel Black-Scholes over one sharded allocator",
         },
         ExperimentInfo {
+            name: "batched-workloads",
+            description: "Batched GUPS/hashprobe vs per-op naive walks (sort-and-run + flat table)",
+        },
+        ExperimentInfo {
             name: "ablation-alloc",
             description: "Alloc/free throughput at 1-8 threads: mutex vs sharded allocator",
         },
@@ -75,6 +79,7 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "parallel-blackscholes" | "parallel_blackscholes" => {
             vec![experiments::parallel_blackscholes(cfg)]
         }
+        "batched-workloads" | "batched_workloads" => vec![experiments::batched_workloads(cfg)],
         "ablation-alloc" | "ablation_alloc_contention" => {
             vec![experiments::ablation_alloc_contention(cfg)]
         }

@@ -15,7 +15,11 @@
 //!   multi-threaded workloads (fixed-size blocks, default 32 KB, in
 //!   both).
 //! * [`trees`] — §3.2 "arrays as trees": discontiguous arrays built from
-//!   allocator blocks, with the Figure 2 iterator optimization.
+//!   allocator blocks, with a full software translation-cache stack
+//!   (§4.4): the Figure 2 iterator optimization generalized to a
+//!   set-associative leaf-TLB ([`trees::LeafTlb`]), an O(1) flat
+//!   leaf-table mode, generation-based shootdown so relocated leaves
+//!   are never read stale, and batched sort-and-run accessors.
 //! * [`stack`] — §3.1 split stacks: a segmented-stack frame machine plus
 //!   the per-benchmark call-profile overhead model behind Figure 3.
 //! * [`memsim`] — the virtual-memory-vs-physical cost model: a
@@ -29,7 +33,8 @@
 //! * [`coordinator`] — experiment registry, runner, thread pool, block
 //!   batcher, and paper-style report formatting. Includes the
 //!   multi-threaded experiments the sharded allocator enables
-//!   (`concurrent-gups`, `parallel-blackscholes`, `ablation-alloc`).
+//!   (`concurrent-gups`, `parallel-blackscholes`, `ablation-alloc`) and
+//!   the translation-amortization comparison (`batched-workloads`).
 //! * [`runtime`] — the PJRT execution path: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX/Pallas) and runs them from Rust; Python is never on
 //!   the request path.

@@ -12,6 +12,13 @@ use crate::pmem::BlockId;
 /// `block_size` bytes each. The arena validates geometry, owns the
 /// memory, and provides the raw block accessors; *which* blocks are
 /// live is the embedding allocator's business.
+///
+/// Alignment guarantee (load-bearing, see [`crate::trees::Pod`]): the
+/// backing allocation is aligned to `block_size`, so every block starts
+/// at a `block_size`-aligned address and any power-of-two-sized element
+/// placed at a multiple of its size within a block is naturally aligned
+/// — consumers may use aligned `read`/`write`, not the `_unaligned`
+/// variants.
 pub(crate) struct Arena {
     ptr: *mut u8,
     layout: Layout,

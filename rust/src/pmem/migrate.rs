@@ -104,7 +104,17 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// Migrate leaf `leaf_idx` to a fresh block, patching the parent
     /// pointer — the tree-native relocation the paper describes (only
     /// one pointer names a leaf, so no global patching pass is needed).
-    pub fn migrate_leaf(&mut self, leaf_idx: usize) -> Result<BlockId> {
+    ///
+    /// Takes `&self`: location metadata is interior-mutable so leaves
+    /// can move *under live cursors*; the tree's generation counter is
+    /// bumped and cursors/TLBs revalidate on their next access (see
+    /// [`TreeArray`]'s relocation docs). Callers must still ensure no
+    /// *other thread* is accessing the tree during the move, and must
+    /// not hold a [`TreeArray::leaf_slice`] of the moving leaf across
+    /// the call — slices pin a location and cannot revalidate (the same
+    /// logical-liveness contract as [`crate::pmem::BlockAlloc::free`],
+    /// which is also safe to call on a block others still point at).
+    pub fn migrate_leaf(&self, leaf_idx: usize) -> Result<BlockId> {
         if leaf_idx >= self.nleaves() {
             return Err(Error::IndexOutOfBounds {
                 index: leaf_idx,

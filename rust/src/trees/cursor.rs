@@ -1,15 +1,24 @@
-//! The Figure 2 iterator optimization: a cursor caching the most
-//! recently used leaf.
+//! The Figure 2 iterator optimization, generalized: a cursor caching the
+//! most recently used leaf *plus* a software leaf-TLB.
 //!
 //! Sequential `next()` is a bounds check + pointer bump; the full tree
 //! walk happens only when iterating past a leaf's last element. Random
-//! `seek()` probes the cached leaf first — the software analogue of a
-//! page-table-walk cache (paper §4.4).
+//! `seek()` probes the cached leaf first, then the [`LeafTlb`] — the
+//! software analogue of a data TLB backed by a page-table-walk cache
+//! (paper §4.4). Strided and random patterns that revisit leaves (GUPS,
+//! hash probes, stencil sweeps) hit in the TLB where the bare Figure 2
+//! cursor would re-walk on every access.
+//!
+//! The cursor snapshots the tree's relocation generation; every access
+//! compares it and drops stale state on mismatch, so leaves migrated by
+//! [`crate::pmem::Relocator`]-style relocation are re-resolved instead
+//! of silently read at their freed location.
 
 use crate::pmem::{BlockAlloc, BlockAllocator};
+use crate::trees::tlb::{LeafTlb, TlbStats};
 use crate::trees::tree_array::{Pod, TreeArray};
 
-/// Cursor over a [`TreeArray`] with a cached leaf pointer.
+/// Cursor over a [`TreeArray`] with a cached leaf pointer and leaf-TLB.
 pub struct Cursor<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     tree: &'t TreeArray<'a, T, A>,
     /// Cached leaf data pointer (null when unpositioned).
@@ -20,41 +29,83 @@ pub struct Cursor<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     leaf_end: usize,
     /// Next element index for sequential iteration.
     pos: usize,
-    /// Leaf-cache statistics (hits = accesses served without a walk).
+    /// Tree generation the cached state is valid for.
+    gen: u64,
+    /// Second-level leaf cache (misses fall through to a full walk).
+    tlb: LeafTlb,
+    /// Leaf-cache statistics (hits = accesses served without a walk,
+    /// from either the current leaf or the TLB).
     hits: u64,
     walks: u64,
 }
 
 impl<'t, 'a, T: Pod, A: BlockAlloc> Cursor<'t, 'a, T, A> {
     pub(crate) fn new(tree: &'t TreeArray<'a, T, A>) -> Self {
+        Cursor::with_tlb(tree, LeafTlb::default_for_cursor())
+    }
+
+    pub(crate) fn with_tlb(tree: &'t TreeArray<'a, T, A>, tlb: LeafTlb) -> Self {
         Cursor {
             tree,
             leaf: std::ptr::null(),
             leaf_base: 0,
             leaf_end: 0,
             pos: 0,
+            gen: tree.generation(),
+            tlb,
             hits: 0,
             walks: 0,
         }
     }
 
-    /// Refill the leaf cache for the leaf containing `i` (a full walk).
-    #[cold]
-    fn refill(&mut self, i: usize) {
+    /// Drop cached state when the tree's generation moved (a leaf was
+    /// relocated since we filled it) — the shootdown check. TLB entries
+    /// carry their own generation stamps and self-invalidate on lookup.
+    #[inline]
+    fn revalidate(&mut self) {
+        let g = self.tree.generation();
+        if g != self.gen {
+            self.gen = g;
+            self.leaf = std::ptr::null();
+            self.leaf_base = 0;
+            self.leaf_end = 0;
+        }
+    }
+
+    /// Make the cached leaf cover element `i`: TLB probe first (stays
+    /// inline — leaf-bouncing patterns live here), full walk on miss.
+    #[inline]
+    fn repoint(&mut self, i: usize) {
         let leaf_idx = i / self.tree.geo.leaf_cap;
+        if let Some((p, span)) = self.tlb.lookup(leaf_idx, self.gen) {
+            self.leaf = p as *const T;
+            self.leaf_base = leaf_idx * self.tree.geo.leaf_cap;
+            self.leaf_end = self.leaf_base + span;
+            self.hits += 1;
+            return;
+        }
+        self.walk_fill(leaf_idx);
+    }
+
+    /// The rare full-walk path: translate `leaf_idx` through the tree
+    /// and install the result in the cache levels.
+    #[cold]
+    fn walk_fill(&mut self, leaf_idx: usize) {
         let (p, span) = self.tree.leaf_ptr(leaf_idx);
         self.leaf = p as *const T;
         self.leaf_base = leaf_idx * self.tree.geo.leaf_cap;
         self.leaf_end = self.leaf_base + span;
         self.walks += 1;
+        self.tlb.insert(leaf_idx, self.gen, p as *mut u8, span);
     }
 
-    /// Read element `i`, probing the cached leaf first.
+    /// Read element `i`, probing the cached leaf, then the TLB.
     #[inline]
     pub fn seek(&mut self, i: usize) -> T {
         debug_assert!(i < self.tree.len());
+        self.revalidate();
         if i < self.leaf_base || i >= self.leaf_end {
-            self.refill(i);
+            self.repoint(i);
         } else {
             self.hits += 1;
         }
@@ -63,9 +114,15 @@ impl<'t, 'a, T: Pod, A: BlockAlloc> Cursor<'t, 'a, T, A> {
     }
 
     /// (hits, walks) since creation — the leaf-cache effectiveness, the
-    /// quantity Table 2's "Iter" rows hinge on.
+    /// quantity Table 2's "Iter" rows hinge on. Hits count accesses
+    /// served without a tree walk (current leaf *or* TLB).
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits, self.walks)
+    }
+
+    /// Leaf-TLB counters (hits/misses/evictions/invalidations).
+    pub fn tlb_stats(&self) -> TlbStats {
+        self.tlb.stats()
     }
 
     /// Reset sequential position to `i` (next `next()` returns elem `i`).
@@ -86,12 +143,13 @@ impl<T: Pod, A: BlockAlloc> Iterator for Cursor<'_, '_, T, A> {
         }
         let i = self.pos;
         self.pos += 1;
+        self.revalidate();
         if i >= self.leaf_end || i < self.leaf_base {
-            self.refill(i);
+            self.repoint(i);
         } else {
             self.hits += 1;
         }
-        // SAFETY: cached leaf covers i after refill.
+        // SAFETY: cached leaf covers i after repoint.
         Some(unsafe { self.leaf.add(i - self.leaf_base).read() })
     }
 
@@ -150,6 +208,50 @@ mod tests {
     }
 
     #[test]
+    fn revisited_leaf_hits_tlb_not_walk() {
+        // The headline TLB win: leaf 0 -> leaf 1 -> leaf 0 again. The
+        // bare Figure 2 cursor walks 3 times; the TLB-backed cursor
+        // serves the revisit from the TLB.
+        let (a, data) = tree_with(256 * 4);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.cursor();
+        assert_eq!(c.seek(10), data[10]); // walk leaf 0
+        assert_eq!(c.seek(300), data[300]); // walk leaf 1
+        assert_eq!(c.seek(20), data[20]); // leaf 0 again: TLB hit
+        let (hits, walks) = c.cache_stats();
+        assert_eq!((hits, walks), (1, 2), "revisit must not re-walk");
+        assert_eq!(c.tlb_stats().hits, 1);
+
+        // And with the TLB disabled, the same pattern re-walks.
+        let mut c0 = t.cursor_with_tlb(0, 1);
+        c0.seek(10);
+        c0.seek(300);
+        c0.seek(20);
+        assert_eq!(c0.cache_stats(), (0, 3), "bare cursor re-walks");
+    }
+
+    #[test]
+    fn strided_leaf_bouncing_mostly_tlb_hits() {
+        // Stride exactly one leaf: every access is a new leaf the first
+        // lap, then laps 2..k are pure TLB hits.
+        let (a, data) = tree_with(256 * 8);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.cursor();
+        for lap in 0..4 {
+            let mut i = lap; // offset shifts to defeat the current-leaf cache
+            while i < data.len() {
+                assert_eq!(c.seek(i), data[i]);
+                i += 256;
+            }
+        }
+        let (_, walks) = c.cache_stats();
+        assert_eq!(walks, 8, "only the first lap may walk");
+        assert_eq!(c.tlb_stats().hits, 3 * 8);
+    }
+
+    #[test]
     fn rewind_restarts() {
         let (a, data) = tree_with(600);
         let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
@@ -205,5 +307,25 @@ mod tests {
                 i += stride;
             }
         });
+    }
+
+    #[test]
+    fn seek_revalidates_after_relocation() {
+        // Unit-level shootdown check (the allocator-reuse scenario lives
+        // in tests/translation.rs): cursor caches a leaf, the leaf
+        // migrates, the next seek must re-resolve, not reuse the stale
+        // pointer.
+        let (a, data) = tree_with(256 * 4);
+        let mut t: TreeArray<u32> = TreeArray::new(&a, data.len()).unwrap();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.cursor();
+        assert_eq!(c.seek(10), data[10]);
+        let gen0 = t.generation();
+        t.migrate_leaf(0).unwrap();
+        assert_eq!(t.generation(), gen0 + 1);
+        assert_eq!(c.seek(10), data[10], "stale read after relocate");
+        let (_, walks) = c.cache_stats();
+        assert_eq!(walks, 2, "revalidation must force a fresh walk");
+        assert!(c.tlb_stats().invalidations >= 1, "TLB entry must self-invalidate");
     }
 }

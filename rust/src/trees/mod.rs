@@ -8,18 +8,26 @@
 //!
 //! * [`TreeArray`] — the real data structure, generic over any
 //!   [`crate::pmem::BlockAlloc`] pool (mutex baseline or the sharded
-//!   lock-free allocator).
-//! * [`Cursor`] — the Figure 2 iterator optimization: a cached leaf
-//!   pointer that turns sequential access into a pointer bump and random
-//!   access into a leaf-cache probe (a software PTW cache, §4.4).
+//!   lock-free allocator). Offers three translation modes — naive walk,
+//!   TLB-backed cursor, flat leaf table — plus batched accessors that
+//!   amortize translation over sorted index runs.
+//! * [`Cursor`] — the Figure 2 iterator optimization generalized: a
+//!   cached leaf pointer backed by a [`LeafTlb`], turning sequential
+//!   access into a pointer bump and *revisiting* random access into an
+//!   O(1) TLB probe (a software PTW cache, §4.4).
+//! * [`LeafTlb`] — the set-associative, LRU software leaf-TLB with
+//!   generation-based shootdown (this is the *real* software TLB; the
+//!   simulator's hardware-TLB model lives in [`crate::memsim`]).
 //! * [`TreeGeometry`] / [`TreeTraceModel`] — pure address arithmetic for
 //!   the memsim experiments, so 64 GB arrays can be *modeled* without
 //!   being materialized (§4.3's scales).
 
 mod cursor;
 mod layout;
+mod tlb;
 mod tree_array;
 
 pub use cursor::Cursor;
 pub use layout::{TreeGeometry, TreeTraceModel};
+pub use tlb::{LeafTlb, TlbStats};
 pub use tree_array::{Pod, TreeArray};

@@ -1,0 +1,339 @@
+//! The software leaf-TLB (paper §4.4).
+//!
+//! The paper argues that once hardware translation is gone, its job —
+//! turning a flat index into a physical location in O(1) — can be done
+//! by software caches over the tree's translation metadata: "the
+//! Iterator optimization is a software page-table-walk cache". The
+//! Figure 2 cursor caches exactly *one* leaf, which collapses for
+//! strided and random access patterns (GUPS, hash probes) that bounce
+//! between leaves. [`LeafTlb`] generalizes it to a set-associative,
+//! LRU-evicting cache of leaf translations — the software analogue of a
+//! data TLB, with the tree's leaves playing the role of pages.
+//!
+//! Unlike a hardware TLB there is no shootdown interrupt: relocation
+//! safety comes from *generation numbers*. Every entry is stamped with
+//! the owning tree's generation at fill time; `TreeArray` bumps its
+//! generation whenever a leaf moves (see
+//! `TreeArray::relocate_leaf_impl`), so a lookup with a newer
+//! generation treats the entry as stale, drops it, and counts an
+//! invalidation. This is the scheme Cichlid-style explicit physical
+//! memory managers and the Virtual Block Interface rely on: translation
+//! metadata is tiny relative to data, so caching (or fully flattening)
+//! it is cheap, and a single counter makes invalidation O(1).
+//!
+//! This module is the *real* software TLB used on the hot path; it is
+//! distinct from [`crate::memsim::Tlb`], which merely *models* a
+//! hardware TLB's hit/miss behaviour for the simulator.
+
+/// Statistics of one [`LeafTlb`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TlbStats {
+    /// Lookups served from the TLB (no tree walk needed).
+    pub hits: u64,
+    /// Lookups that found no usable entry.
+    pub misses: u64,
+    /// Valid entries displaced by LRU replacement.
+    pub evictions: u64,
+    /// Entries dropped because their generation was stale
+    /// (the software shootdown path).
+    pub invalidations: u64,
+}
+
+impl TlbStats {
+    /// Hit fraction of all lookups (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One cached leaf translation: leaf index -> data pointer.
+#[derive(Clone, Copy)]
+struct TlbEntry {
+    /// Leaf index this entry translates (the "virtual page number").
+    tag: usize,
+    /// Leaf data pointer (the "physical frame").
+    ptr: *mut u8,
+    /// Elements covered by the leaf (partial last leaf is shorter).
+    span: usize,
+    /// Tree generation at fill time.
+    gen: u64,
+    /// LRU stamp (global tick at last touch).
+    stamp: u64,
+    valid: bool,
+}
+
+const EMPTY: TlbEntry = TlbEntry {
+    tag: 0,
+    ptr: std::ptr::null_mut(),
+    span: 0,
+    gen: 0,
+    stamp: 0,
+    valid: false,
+};
+
+/// A set-associative, LRU software TLB over tree-leaf translations.
+///
+/// Configured with a total entry count and an associativity; the set
+/// count is `entries / ways` rounded up to a power of two so the set
+/// index is a mask of the leaf index. `entries == 0` builds a disabled
+/// TLB whose lookups always miss (used to reproduce the bare Figure 2
+/// single-leaf cursor for ablations).
+pub struct LeafTlb {
+    entries: Box<[TlbEntry]>,
+    /// Set count minus one (sets are a power of two). Meaningless (0)
+    /// when disabled — every path guards on `entries.is_empty()` first.
+    set_mask: usize,
+    ways: usize,
+    tick: u64,
+    stats: TlbStats,
+}
+
+impl LeafTlb {
+    /// Default total entries for cursors ([`crate::trees::TreeArray::cursor`]).
+    pub const DEFAULT_ENTRIES: usize = 64;
+    /// Default associativity.
+    pub const DEFAULT_WAYS: usize = 4;
+
+    /// A TLB with `entries` total entries, `ways`-associative.
+    pub fn new(entries: usize, ways: usize) -> Self {
+        if entries == 0 {
+            return LeafTlb {
+                entries: Box::new([]),
+                set_mask: 0,
+                ways: 0,
+                tick: 0,
+                stats: TlbStats::default(),
+            };
+        }
+        let ways = ways.clamp(1, entries);
+        let sets = entries.div_ceil(ways).next_power_of_two();
+        LeafTlb {
+            entries: vec![EMPTY; sets * ways].into_boxed_slice(),
+            set_mask: sets - 1,
+            ways,
+            tick: 0,
+            stats: TlbStats::default(),
+        }
+    }
+
+    /// The cursor-default configuration (64 entries, 4-way).
+    pub fn default_for_cursor() -> Self {
+        LeafTlb::new(Self::DEFAULT_ENTRIES, Self::DEFAULT_WAYS)
+    }
+
+    /// True when built with zero entries.
+    #[inline]
+    pub fn is_disabled(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total entry slots.
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Look up leaf `leaf` under the current tree generation `gen`.
+    ///
+    /// Returns the cached `(data pointer, element span)` on a hit.
+    /// An entry whose generation is older than `gen` is stale — it is
+    /// invalidated (counted) and the lookup misses, forcing the caller
+    /// to re-walk and re-insert (the revalidation protocol).
+    #[inline]
+    pub fn lookup(&mut self, leaf: usize, gen: u64) -> Option<(*mut u8, usize)> {
+        if self.entries.is_empty() {
+            self.stats.misses += 1;
+            return None;
+        }
+        let set = (leaf & self.set_mask) * self.ways;
+        for e in &mut self.entries[set..set + self.ways] {
+            if e.valid && e.tag == leaf {
+                if e.gen != gen {
+                    e.valid = false;
+                    self.stats.invalidations += 1;
+                    break;
+                }
+                self.tick += 1;
+                e.stamp = self.tick;
+                self.stats.hits += 1;
+                return Some((e.ptr, e.span));
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Install the translation for `leaf` (after a tree walk), evicting
+    /// the set's LRU entry if the set is full.
+    pub fn insert(&mut self, leaf: usize, gen: u64, ptr: *mut u8, span: usize) {
+        if self.entries.is_empty() {
+            return;
+        }
+        let set = (leaf & self.set_mask) * self.ways;
+        self.tick += 1;
+        let tick = self.tick;
+        // Reuse the slot already holding this tag, else an invalid slot,
+        // else the LRU victim.
+        let mut victim = set;
+        let mut victim_stamp = u64::MAX;
+        for (w, e) in self.entries[set..set + self.ways].iter().enumerate() {
+            if e.valid && e.tag == leaf {
+                victim = set + w;
+                break;
+            }
+            let stamp = if e.valid { e.stamp } else { 0 };
+            if stamp < victim_stamp {
+                victim_stamp = stamp;
+                victim = set + w;
+            }
+        }
+        let e = &mut self.entries[victim];
+        if e.valid && e.tag != leaf {
+            self.stats.evictions += 1;
+        }
+        *e = TlbEntry {
+            tag: leaf,
+            ptr,
+            span,
+            gen,
+            stamp: tick,
+            valid: true,
+        };
+    }
+
+    /// Drop the entry for `leaf` if present (targeted shootdown).
+    pub fn invalidate(&mut self, leaf: usize) {
+        if self.entries.is_empty() {
+            return;
+        }
+        let set = (leaf & self.set_mask) * self.ways;
+        for e in &mut self.entries[set..set + self.ways] {
+            if e.valid && e.tag == leaf {
+                e.valid = false;
+                self.stats.invalidations += 1;
+            }
+        }
+    }
+
+    /// Drop every entry (full shootdown).
+    pub fn flush(&mut self) {
+        for e in self.entries.iter_mut() {
+            if e.valid {
+                e.valid = false;
+                self.stats.invalidations += 1;
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> TlbStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(x: usize) -> *mut u8 {
+        x as *mut u8
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut t = LeafTlb::new(8, 2);
+        assert_eq!(t.lookup(3, 0), None);
+        t.insert(3, 0, p(0x30), 256);
+        assert_eq!(t.lookup(3, 0), Some((p(0x30), 256)));
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn stale_generation_invalidates() {
+        let mut t = LeafTlb::new(8, 2);
+        t.insert(5, 1, p(0x50), 10);
+        // Generation moved on (a leaf was relocated): the entry is dead.
+        assert_eq!(t.lookup(5, 2), None);
+        assert_eq!(t.stats().invalidations, 1);
+        // And it's really gone, not resurrected at the old generation.
+        assert_eq!(t.lookup(5, 1), None);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_in_set() {
+        // 1 set, 2 ways: fill A, B; touch A; insert C -> B evicted.
+        let mut t = LeafTlb::new(2, 2);
+        t.insert(0, 0, p(0xA0), 1);
+        t.insert(1, 0, p(0xB0), 1);
+        assert!(t.lookup(0, 0).is_some()); // A freshened
+        t.insert(2, 0, p(0xC0), 1);
+        assert_eq!(t.stats().evictions, 1);
+        assert!(t.lookup(0, 0).is_some(), "recently used survives");
+        assert!(t.lookup(1, 0).is_none(), "LRU victim gone");
+        assert!(t.lookup(2, 0).is_some());
+    }
+
+    #[test]
+    fn set_indexing_isolates_sets() {
+        // 4 sets, 1 way: leaves 0..4 land in distinct sets; 4 aliases 0.
+        let mut t = LeafTlb::new(4, 1);
+        for l in 0..4 {
+            t.insert(l, 0, p(l * 16 + 16), 1);
+        }
+        for l in 0..4 {
+            assert_eq!(t.lookup(l, 0), Some((p(l * 16 + 16), 1)));
+        }
+        t.insert(4, 0, p(0x99), 1);
+        assert!(t.lookup(0, 0).is_none(), "conflict-evicted by alias");
+        assert!(t.lookup(4, 0).is_some());
+        assert_eq!(t.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_same_tag_updates_in_place() {
+        let mut t = LeafTlb::new(2, 2);
+        t.insert(7, 0, p(0x70), 1);
+        t.insert(7, 1, p(0x71), 2);
+        assert_eq!(t.stats().evictions, 0, "same tag must not evict");
+        assert_eq!(t.lookup(7, 1), Some((p(0x71), 2)));
+    }
+
+    #[test]
+    fn disabled_tlb_always_misses() {
+        let mut t = LeafTlb::new(0, 4);
+        assert!(t.is_disabled());
+        t.insert(0, 0, p(0x10), 1);
+        assert_eq!(t.lookup(0, 0), None);
+        assert_eq!(t.stats().hits, 0);
+    }
+
+    #[test]
+    fn flush_and_targeted_invalidate() {
+        let mut t = LeafTlb::new(8, 2);
+        t.insert(1, 0, p(0x10), 1);
+        t.insert(2, 0, p(0x20), 1);
+        t.invalidate(1);
+        assert!(t.lookup(1, 0).is_none());
+        assert!(t.lookup(2, 0).is_some());
+        t.flush();
+        assert!(t.lookup(2, 0).is_none());
+        assert_eq!(t.stats().invalidations, 2);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut t = LeafTlb::new(4, 4);
+        t.insert(0, 0, p(0x10), 1);
+        for _ in 0..3 {
+            t.lookup(0, 0);
+        }
+        t.lookup(9, 0);
+        let s = t.stats();
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,15 +1,27 @@
 //! The arrays-as-trees data structure over allocator blocks.
 
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
 use crate::error::{Error, Result};
 use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::layout::TreeGeometry;
+use crate::trees::tlb::LeafTlb;
 use crate::trees::Cursor;
 
 /// Plain-old-data element types storable in tree leaves.
 ///
 /// # Safety
 /// Implementors must be valid for any bit pattern and contain no padding
-/// (they are memcpy'd in and out of raw blocks).
+/// (they are memcpy'd in and out of raw blocks). The element size must be
+/// a power of two ([`TreeGeometry`] enforces this at construction), which
+/// together with the arena's block alignment guarantees *aligned* element
+/// access: blocks start at addresses aligned to `block_size` (the arena
+/// allocates with `Layout::from_size_align(_, block_size)`), every element
+/// sits at a multiple of `size_of::<T>()` inside its block, and Rust
+/// guarantees `size_of::<T>()` is a multiple of `align_of::<T>()` — so all
+/// element pointers are aligned and plain `read`/`write` (not the
+/// `_unaligned` variants) are sound everywhere in this module.
 pub unsafe trait Pod: Copy + Default + PartialEq + std::fmt::Debug + 'static {}
 
 unsafe impl Pod for u8 {}
@@ -32,11 +44,49 @@ unsafe impl Pod for usize {}
 /// Generic over the allocator policy `A` (defaulting to the mutex
 /// baseline), so the same tree runs over [`BlockAllocator`] and
 /// [`crate::pmem::ShardedAllocator`] unchanged.
+///
+/// # Translation (paper §4.4)
+///
+/// Three ways to turn an element index into a leaf location, in
+/// increasing order of software-TLB sophistication:
+///
+/// 1. **Naive walk** — `depth` dependent loads (Table 2's baseline).
+/// 2. **Cursor** ([`TreeArray::cursor`]) — a single cached leaf plus a
+///    set-associative [`LeafTlb`]; random re-visits hit in O(1).
+/// 3. **Flat leaf table** ([`TreeArray::enable_flat_table`]) — one
+///    pointer per leaf, built lazily at first translated access; every
+///    translation becomes a single indexed load. Translation metadata is
+///    tiny relative to data (one 8-byte pointer per 32 KB leaf ≈ 0.02%),
+///    which is why flattening it wholesale is affordable.
+///
+/// # Relocation and the generation counter
+///
+/// [`TreeArray::migrate_leaf`] moves a leaf to a fresh block through
+/// `&self`: the root/leaf bookkeeping is interior-mutable (atomics) so a
+/// leaf can move *while cursors are live*. Every relocation bumps the
+/// tree's generation; cursors and TLB entries are stamped with the
+/// generation at fill time and revalidate on mismatch (the software
+/// shootdown protocol — without it a cursor would silently read the
+/// freed block). Relocation requires external synchronization with
+/// respect to accessors in *other threads* (same single-writer contract
+/// as [`BlockAlloc::block_ptr`]); the generation protocol makes
+/// same-thread interleavings of relocate and cached reads safe.
 pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     pub(crate) alloc: &'a A,
     pub(crate) geo: TreeGeometry,
-    root: BlockId,
-    blocks: Vec<BlockId>, // all blocks, for Drop
+    /// Root block id (atomic: depth-1 relocation replaces the root).
+    root: AtomicU32,
+    /// All blocks for Drop, *leaves first in leaf order*: `blocks[l]` is
+    /// leaf `l`'s current block for `l < nleaves()` (the invariant that
+    /// makes relocation bookkeeping and the flat table O(1)).
+    blocks: Box<[AtomicU32]>,
+    /// Bumped on every leaf relocation; translation caches revalidate on
+    /// mismatch. See the type-level docs.
+    generation: AtomicU64,
+    /// Flat leaf-table mode switch.
+    flat_on: AtomicBool,
+    /// Lazily built leaf-pointer table (one `*mut u8` per leaf).
+    flat: OnceLock<Box<[AtomicPtr<u8>]>>,
     _t: std::marker::PhantomData<T>,
 }
 
@@ -45,7 +95,9 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// geometry (node size = allocator block size, 8-byte child ids).
     pub fn new(alloc: &'a A, len: usize) -> Result<Self> {
         let geo = TreeGeometry::new(alloc.block_size(), std::mem::size_of::<T>(), len)?;
-        // Build bottom-up: leaves first, then interior levels.
+        // Build bottom-up: leaves first, then interior levels. The
+        // leaves-first order of `all` is a struct invariant (see the
+        // `blocks` field docs).
         let nleaves = geo.nleaves();
         let mut all = Vec::with_capacity(geo.total_blocks());
         let mut level: Vec<BlockId> = alloc.alloc_many(nleaves)?;
@@ -69,15 +121,23 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
                     return Err(e);
                 }
             };
+            // Record the parents *before* wiring children so a write
+            // failure frees every block allocated so far (all-or-nothing,
+            // like the alloc_many path above).
+            all.extend_from_slice(&parents);
             for (pi, parent) in parents.iter().enumerate() {
                 let lo = pi * geo.fanout;
                 let hi = ((pi + 1) * geo.fanout).min(level.len());
                 for (slot, child) in level[lo..hi].iter().enumerate() {
                     let id64 = child.0 as u64;
-                    alloc.write(*parent, slot * 8, &id64.to_le_bytes())?;
+                    if let Err(e) = alloc.write(*parent, slot * 8, &id64.to_le_bytes()) {
+                        for b in &all {
+                            let _ = alloc.free(*b);
+                        }
+                        return Err(e);
+                    }
                 }
             }
-            all.extend_from_slice(&parents);
             level = parents;
             depth_built += 1;
         }
@@ -85,8 +145,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         Ok(TreeArray {
             alloc,
             geo,
-            root: level[0],
-            blocks: all,
+            root: AtomicU32::new(level[0].0),
+            blocks: all.iter().map(|b| AtomicU32::new(b.0)).collect(),
+            generation: AtomicU64::new(0),
+            flat_on: AtomicBool::new(false),
+            flat: OnceLock::new(),
             _t: std::marker::PhantomData,
         })
     }
@@ -115,11 +178,24 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         self.geo
     }
 
+    /// Current root block.
+    #[inline]
+    fn root_block(&self) -> BlockId {
+        BlockId(self.root.load(Ordering::Acquire))
+    }
+
+    /// Relocation generation. Translation caches snapshot this and
+    /// revalidate when it moves (see the type-level docs).
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
     /// Walk from the root to the leaf holding element `i`.
     /// This is the *naive* access of Table 2: `depth` dependent loads.
     #[inline]
     fn walk_to_leaf(&self, i: usize) -> BlockId {
-        let mut node = self.root;
+        let mut node = self.root_block();
         for level in 0..self.geo.depth - 1 {
             let slot = self.geo.child_slot(level, i);
             let mut buf = [0u8; 8];
@@ -133,7 +209,62 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         node
     }
 
-    /// Read element `i` (naive tree walk, bounds-checked).
+    /// Switch on the flat leaf-table translation mode: one pointer per
+    /// leaf, built lazily at the first translated access, collapsing
+    /// `walk_to_leaf` to a single indexed load. Relocation keeps the
+    /// table patched in O(1), so the mode stays valid across
+    /// [`TreeArray::migrate_leaf`].
+    pub fn enable_flat_table(&self) {
+        self.flat_on.store(true, Ordering::Release);
+    }
+
+    /// Is the flat leaf-table mode on?
+    pub fn flat_table_enabled(&self) -> bool {
+        self.flat_on.load(Ordering::Relaxed)
+    }
+
+    /// Build the flat table: thanks to the leaves-first `blocks`
+    /// invariant this is `nleaves` plain loads, no tree walks.
+    fn build_flat_table(&self) -> Box<[AtomicPtr<u8>]> {
+        (0..self.geo.nleaves())
+            .map(|l| {
+                let id = BlockId(self.blocks[l].load(Ordering::Acquire));
+                // SAFETY: `id` is one of our live leaves.
+                AtomicPtr::new(unsafe { self.alloc.block_ptr(id) })
+            })
+            .collect()
+    }
+
+    /// Base data pointer of leaf `leaf_idx` under the active translation
+    /// mode: one indexed load (flat table) or a naive walk.
+    #[inline]
+    pub(crate) fn leaf_base_ptr(&self, leaf_idx: usize) -> *mut u8 {
+        if self.flat_on.load(Ordering::Relaxed) {
+            let tbl = self.flat.get_or_init(|| self.build_flat_table());
+            tbl[leaf_idx].load(Ordering::Acquire)
+        } else {
+            let leaf = self.walk_to_leaf(leaf_idx * self.geo.leaf_cap);
+            // SAFETY: leaf is live; pointer valid for the whole block.
+            unsafe { self.alloc.block_ptr(leaf) }
+        }
+    }
+
+    /// Pointer to element `i` (crate-internal; `i < len`).
+    #[inline]
+    pub(crate) fn elem_ptr(&self, i: usize) -> *mut T {
+        let shift = self.geo.leaf_cap.trailing_zeros();
+        let base = self.leaf_base_ptr(i >> shift) as *mut T;
+        let p = unsafe { base.add(i & (self.geo.leaf_cap - 1)) };
+        debug_assert_eq!(
+            p as usize % std::mem::align_of::<T>(),
+            0,
+            "block alignment must imply element alignment (see Pod docs)"
+        );
+        p
+    }
+
+    /// Read element `i` (bounds-checked; naive tree walk unless the flat
+    /// table is enabled).
     pub fn get(&self, i: usize) -> Result<T> {
         if i >= self.geo.len {
             return Err(Error::IndexOutOfBounds {
@@ -150,13 +281,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// `i < self.len()`.
     #[inline]
     pub unsafe fn get_unchecked(&self, i: usize) -> T {
-        let leaf = self.walk_to_leaf(i);
-        let off = (i % self.geo.leaf_cap) * std::mem::size_of::<T>();
-        let p = self.alloc.block_ptr(leaf).add(off) as *const T;
-        p.read_unaligned()
+        // Aligned read: see the Pod alignment contract.
+        (self.elem_ptr(i) as *const T).read()
     }
 
-    /// Write element `i` (naive tree walk, bounds-checked).
+    /// Write element `i` (bounds-checked).
     pub fn set(&mut self, i: usize, v: T) -> Result<()> {
         if i >= self.geo.len {
             return Err(Error::IndexOutOfBounds {
@@ -174,10 +303,8 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// `i < self.len()`.
     #[inline]
     pub unsafe fn set_unchecked(&mut self, i: usize, v: T) {
-        let leaf = self.walk_to_leaf(i);
-        let off = (i % self.geo.leaf_cap) * std::mem::size_of::<T>();
-        let p = self.alloc.block_ptr(leaf).add(off) as *mut T;
-        p.write_unaligned(v);
+        // Aligned write: see the Pod alignment contract.
+        self.elem_ptr(i).write(v);
     }
 
     /// Raw leaf pointer + element span for leaf `leaf_idx`
@@ -185,19 +312,30 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     #[inline]
     pub(crate) fn leaf_ptr(&self, leaf_idx: usize) -> (*mut T, usize) {
         let first_elem = leaf_idx * self.geo.leaf_cap;
-        let leaf = self.walk_to_leaf(first_elem);
         let span = self.geo.leaf_cap.min(self.geo.len - first_elem);
-        // SAFETY: leaf is live; pointer valid for leaf_cap elements.
-        (unsafe { self.alloc.block_ptr(leaf) as *mut T }, span)
+        (self.leaf_base_ptr(leaf_idx) as *mut T, span)
     }
 
     /// Borrow leaf `leaf_idx`'s elements as a slice (zero-copy: this is
     /// the exact 32 KB buffer the Pallas blocked kernel consumes).
+    ///
+    /// Relocation caveat: [`TreeArray::migrate_leaf`] takes `&self` (so
+    /// cursors can revalidate across moves), which means the borrow
+    /// checker cannot tie this slice to the leaf's *location*. Do not
+    /// relocate a leaf while holding a slice of it — the slice would
+    /// keep pointing at the freed (arena-backed, never unmapped) block,
+    /// reading stale or recycled bytes. This mirrors the
+    /// [`BlockAlloc::free`] contract, which is likewise safe to call on
+    /// any live id: block liveness is a logical protocol here, not a
+    /// borrow-checked one. Cursors and the batch APIs revalidate via the
+    /// generation counter; raw slices cannot.
     pub fn leaf_slice(&self, leaf_idx: usize) -> &[T] {
         assert!(leaf_idx < self.geo.nleaves());
         let (p, span) = self.leaf_ptr(leaf_idx);
-        // SAFETY: p valid for span elements; &self borrow prevents writes
-        // through the safe API for the slice's lifetime.
+        // SAFETY: p valid for span elements; &self prevents writes
+        // through the safe mutation API for the slice's lifetime, and
+        // the caller upholds the no-relocation-while-borrowed contract
+        // documented above.
         unsafe { std::slice::from_raw_parts(p, span) }
     }
 
@@ -241,13 +379,159 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         out
     }
 
+    // ---- Batched access (sort-and-run translation amortization) ----
+    //
+    // Random single-element access pays one translation per element; the
+    // batched APIs group a whole batch of indices by leaf (stable
+    // counting sort over leaf numbers — O(batch + nleaves)) and
+    // translate each distinct leaf once per run. This is the software
+    // counterpart of hardware TLB-reach batching, and what the batched
+    // GUPS/hashprobe variants are built on.
+
+    /// Bounds-check a batch of indices up front (all-or-nothing).
+    fn check_batch(&self, idxs: &[usize]) -> Result<()> {
+        for &i in idxs {
+            if i >= self.geo.len {
+                return Err(Error::IndexOutOfBounds {
+                    index: i,
+                    len: self.geo.len,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Positions of `idxs` stably grouped by leaf: counting sort when the
+    /// leaf count is comparable to the batch, comparison sort otherwise.
+    /// Stability preserves per-index program order, so read-modify-write
+    /// batches keep per-slot semantics.
+    fn leaf_order(&self, idxs: &[usize]) -> Vec<u32> {
+        let shift = self.geo.leaf_cap.trailing_zeros();
+        let nl = self.nleaves();
+        let mut order = vec![0u32; idxs.len()];
+        if nl <= idxs.len().saturating_mul(4).saturating_add(64) {
+            let mut counts = vec![0u32; nl + 1];
+            for &i in idxs {
+                counts[(i >> shift) + 1] += 1;
+            }
+            for l in 1..=nl {
+                counts[l] += counts[l - 1];
+            }
+            for (pos, &i) in idxs.iter().enumerate() {
+                let l = i >> shift;
+                order[counts[l] as usize] = pos as u32;
+                counts[l] += 1;
+            }
+        } else {
+            for (pos, slot) in order.iter_mut().enumerate() {
+                *slot = pos as u32;
+            }
+            order.sort_by_key(|&p| idxs[p as usize] >> shift);
+        }
+        order
+    }
+
+    /// Read many elements; `out[k]` is element `idxs[k]`. One translation
+    /// per *distinct leaf run*, not per element.
+    pub fn get_batch(&self, idxs: &[usize]) -> Result<Vec<T>> {
+        self.check_batch(idxs)?;
+        let mut out = vec![T::default(); idxs.len()];
+        let order = self.leaf_order(idxs);
+        let shift = self.geo.leaf_cap.trailing_zeros();
+        let mask = self.geo.leaf_cap - 1;
+        let mut k = 0;
+        while k < order.len() {
+            let leaf = idxs[order[k] as usize] >> shift;
+            let base = self.leaf_base_ptr(leaf) as *const T;
+            while k < order.len() && idxs[order[k] as usize] >> shift == leaf {
+                let pos = order[k] as usize;
+                // SAFETY: bounds checked above; offset < leaf span.
+                out[pos] = unsafe { base.add(idxs[pos] & mask).read() };
+                k += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Write many elements: element `idxs[k] = vals[k]`. Duplicate
+    /// indices keep last-write-wins semantics (stable grouping).
+    pub fn set_batch(&mut self, idxs: &[usize], vals: &[T]) -> Result<()> {
+        if vals.len() != idxs.len() {
+            return Err(Error::Config(format!(
+                "set_batch: {} indices but {} values",
+                idxs.len(),
+                vals.len()
+            )));
+        }
+        self.update_batch(idxs, |pos, slot| *slot = vals[pos])
+    }
+
+    /// Read-modify-write many elements: `f(k, &mut element(idxs[k]))` for
+    /// every `k`, grouped by leaf. Calls for the *same index* (and, more
+    /// broadly, the same leaf) happen in batch order; calls across
+    /// different leaves are reordered — per-element updates must commute
+    /// across distinct indices (GUPS xor, hash-probe accumulate do).
+    pub fn update_batch<F: FnMut(usize, &mut T)>(&mut self, idxs: &[usize], mut f: F) -> Result<()> {
+        self.check_batch(idxs)?;
+        let order = self.leaf_order(idxs);
+        let shift = self.geo.leaf_cap.trailing_zeros();
+        let mask = self.geo.leaf_cap - 1;
+        let mut k = 0;
+        while k < order.len() {
+            let leaf = idxs[order[k] as usize] >> shift;
+            let base = self.leaf_base_ptr(leaf) as *mut T;
+            while k < order.len() && idxs[order[k] as usize] >> shift == leaf {
+                let pos = order[k] as usize;
+                // SAFETY: bounds checked; &mut self gives exclusivity.
+                f(pos, unsafe { &mut *base.add(idxs[pos] & mask) });
+                k += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Visit `idxs` grouped into per-leaf runs: `visit(leaf_idx,
+    /// leaf_elems, positions)` once per distinct leaf, where `positions`
+    /// index into `idxs` (element `idxs[p]` is
+    /// `leaf_elems[idxs[p] % leaf_cap]`). The traversal primitive the
+    /// batch APIs are specializations of, public for workloads that want
+    /// leaf-granular processing (e.g. handing whole leaves to a kernel).
+    pub fn for_each_leaf_run<F>(&self, idxs: &[usize], mut visit: F) -> Result<()>
+    where
+        F: FnMut(usize, &[T], &[u32]),
+    {
+        self.check_batch(idxs)?;
+        let order = self.leaf_order(idxs);
+        let shift = self.geo.leaf_cap.trailing_zeros();
+        let mut k = 0;
+        while k < order.len() {
+            let leaf = idxs[order[k] as usize] >> shift;
+            let mut e = k + 1;
+            while e < order.len() && idxs[order[e] as usize] >> shift == leaf {
+                e += 1;
+            }
+            let (p, span) = self.leaf_ptr(leaf);
+            // SAFETY: p valid for span elements under the &self borrow.
+            let elems = unsafe { std::slice::from_raw_parts(p as *const T, span) };
+            visit(leaf, elems, &order[k..e]);
+            k = e;
+        }
+        Ok(())
+    }
+
     /// Relocate one leaf to a fresh block, patching the single parent
     /// pointer (or the root). See `pmem::migrate` for the public API
     /// and the paper-§2 relocation story.
-    pub(crate) fn relocate_leaf_impl(&mut self, leaf_idx: usize) -> Result<BlockId> {
+    ///
+    /// Takes `&self`: the tree's location metadata is interior-mutable
+    /// precisely so a leaf can move under live cursors — they revalidate
+    /// through the generation bump (bumped *after* all pointers are
+    /// patched, so a reader observing the new generation observes a
+    /// consistent tree).
+    pub(crate) fn relocate_leaf_impl(&self, leaf_idx: usize) -> Result<BlockId> {
         let first_elem = leaf_idx * self.geo.leaf_cap;
         // Walk down recording the parent slot that names the leaf.
-        let mut node = self.root;
+        let mut node = self.root_block();
         let mut parent: Option<(BlockId, usize)> = None;
         for level in 0..self.geo.depth - 1 {
             let slot = self.geo.child_slot(level, first_elem);
@@ -261,6 +545,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             node = BlockId(u64::from_le_bytes(buf) as u32);
         }
         let old = node;
+        debug_assert_eq!(
+            self.blocks[leaf_idx].load(Ordering::Relaxed),
+            old.0,
+            "leaves-first blocks invariant violated"
+        );
         let fresh = self.alloc.alloc()?;
         let bs = self.alloc.block_size();
         // SAFETY: both blocks live and distinct; full-block copy.
@@ -272,30 +561,47 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
                 self.alloc
                     .write(p, slot * 8, &(fresh.0 as u64).to_le_bytes())?;
             }
-            None => self.root = fresh, // depth-1: the leaf is the root
+            None => self.root.store(fresh.0, Ordering::Release), // depth-1: the leaf is the root
         }
+        // Leaves-first invariant: leaf `leaf_idx` lives at blocks[leaf_idx],
+        // so the bookkeeping patch is one store (the old code scanned the
+        // whole block list).
+        self.blocks[leaf_idx].store(fresh.0, Ordering::Release);
+        // Keep the flat table (if built) precise — O(1) shootdown.
+        if let Some(tbl) = self.flat.get() {
+            // SAFETY: fresh is live and ours.
+            tbl[leaf_idx].store(unsafe { self.alloc.block_ptr(fresh) }, Ordering::Release);
+        }
+        // Publish the move: caches revalidate when they see the bump.
+        self.generation.fetch_add(1, Ordering::Release);
         self.alloc.free(old)?;
-        if let Some(pos) = self.blocks.iter().position(|b| *b == old) {
-            self.blocks[pos] = fresh;
-        }
         Ok(fresh)
     }
 
-    /// Sequential iterator using the Figure 2 cached-leaf optimization.
+    /// Sequential iterator using the Figure 2 cached-leaf optimization
+    /// (plus the leaf-TLB for revisits).
     pub fn iter(&self) -> Cursor<'_, 'a, T, A> {
         Cursor::new(self)
     }
 
-    /// A random-access cursor starting unpositioned (leaf cache empty).
+    /// A random-access cursor starting unpositioned, with the default
+    /// leaf-TLB configuration ([`LeafTlb::DEFAULT_ENTRIES`] entries,
+    /// [`LeafTlb::DEFAULT_WAYS`]-way).
     pub fn cursor(&self) -> Cursor<'_, 'a, T, A> {
         Cursor::new(self)
+    }
+
+    /// A cursor with an explicit TLB geometry. `entries == 0` disables
+    /// the TLB, reproducing the bare single-leaf Figure 2 cursor.
+    pub fn cursor_with_tlb(&self, entries: usize, ways: usize) -> Cursor<'_, 'a, T, A> {
+        Cursor::with_tlb(self, LeafTlb::new(entries, ways))
     }
 }
 
 impl<T: Pod, A: BlockAlloc> Drop for TreeArray<'_, T, A> {
     fn drop(&mut self) {
-        for b in &self.blocks {
-            let _ = self.alloc.free(*b);
+        for b in self.blocks.iter() {
+            let _ = self.alloc.free(BlockId(b.load(Ordering::Relaxed)));
         }
     }
 }
@@ -304,10 +610,11 @@ impl<T: Pod, A: BlockAlloc> std::fmt::Debug for TreeArray<'_, T, A> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "TreeArray {{ len: {}, depth: {}, leaves: {} }}",
+            "TreeArray {{ len: {}, depth: {}, leaves: {}, gen: {} }}",
             self.geo.len,
             self.geo.depth,
-            self.nleaves()
+            self.nleaves(),
+            self.generation()
         )
     }
 }
@@ -490,5 +797,195 @@ mod tests {
         for (i, v) in expect {
             assert_eq!(t.get(i).unwrap(), v);
         }
+    }
+
+    // ---- translation-cache / flat-table / batch tests ----
+
+    #[test]
+    fn flat_table_matches_walks() {
+        let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+        let n = 256 * 70 + 9; // depth 2, partial last leaf
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2246822519)).collect();
+        t.copy_from_slice(&data).unwrap();
+        assert!(!t.flat_table_enabled());
+        t.enable_flat_table();
+        assert!(t.flat_table_enabled());
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let i = rng.range(0, n);
+            assert_eq!(t.get(i).unwrap(), data[i]);
+        }
+        assert_eq!(t.to_vec(), data);
+    }
+
+    #[test]
+    fn flat_table_survives_relocation() {
+        let a = BlockAllocator::new(1024, 1 << 12).unwrap();
+        let n = 256 * 6 + 3;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        t.enable_flat_table();
+        assert_eq!(t.get(300).unwrap(), 300); // builds the table
+        let g0 = t.generation();
+        for leaf in 0..t.nleaves() {
+            t.migrate_leaf(leaf).unwrap();
+        }
+        assert_eq!(t.generation(), g0 + t.nleaves() as u64);
+        assert_eq!(t.to_vec(), data, "flat table stale after relocation");
+        // Writes through the flat path land in the fresh blocks too.
+        t.set(300, 77).unwrap();
+        assert_eq!(t.get(300).unwrap(), 77);
+    }
+
+    #[test]
+    fn relocate_bumps_generation_and_keeps_bookkeeping() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 256 * 3).unwrap();
+        let data: Vec<u32> = (0..256 * 3).map(|i| i as u32 ^ 0xBEEF).collect();
+        t.copy_from_slice(&data).unwrap();
+        let live = a.stats().allocated;
+        assert_eq!(t.generation(), 0);
+        let fresh = t.migrate_leaf(1).unwrap();
+        assert_eq!(t.generation(), 1);
+        assert!(a.is_live(fresh));
+        assert_eq!(a.stats().allocated, live, "relocation must not leak");
+        assert_eq!(t.to_vec(), data);
+        // Dropping the tree must free the *fresh* block (bookkeeping
+        // patched, not stale).
+        drop(t);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn get_batch_matches_pointwise() {
+        let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+        let n = 256 * 33 + 100;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        t.copy_from_slice(&data).unwrap();
+        let mut rng = Rng::new(11);
+        let idxs: Vec<usize> = (0..3000).map(|_| rng.range(0, n)).collect();
+        let got = t.get_batch(&idxs).unwrap();
+        for (k, &i) in idxs.iter().enumerate() {
+            assert_eq!(got[k], data[i], "batch[{k}] (elem {i})");
+        }
+    }
+
+    #[test]
+    fn set_batch_last_write_wins() {
+        let a = small_alloc();
+        let n = 256 * 4;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        // Duplicate index 700: the later value must stick.
+        let idxs = [700usize, 3, 700, 1000, 700];
+        let vals = [1u32, 2, 3, 4, 5];
+        t.set_batch(&idxs, &vals).unwrap();
+        assert_eq!(t.get(700).unwrap(), 5);
+        assert_eq!(t.get(3).unwrap(), 2);
+        assert_eq!(t.get(1000).unwrap(), 4);
+    }
+
+    #[test]
+    fn update_batch_equals_per_op_loop() {
+        let a = BlockAllocator::new(1024, 1 << 14).unwrap();
+        let n = 256 * 20;
+        let mut t: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let mut model = vec![0u64; n];
+        let mut rng = Rng::new(77);
+        let pairs: Vec<(usize, u64)> =
+            (0..5000).map(|_| (rng.range(0, n), rng.next_u64())).collect();
+        for &(i, k) in &pairs {
+            model[i] ^= k; // per-op reference
+        }
+        let idxs: Vec<usize> = pairs.iter().map(|p| p.0).collect();
+        t.update_batch(&idxs, |pos, v| *v ^= pairs[pos].1).unwrap();
+        assert_eq!(t.to_vec(), model);
+    }
+
+    #[test]
+    fn batch_oob_rejected_before_any_write() {
+        let a = small_alloc();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 100).unwrap();
+        assert!(t.get_batch(&[5, 100]).is_err());
+        assert!(t.set_batch(&[5, 100], &[1, 2]).is_err());
+        assert!(t.set_batch(&[5], &[1, 2]).is_err(), "length mismatch");
+        assert_eq!(t.get(5).unwrap(), 0, "failed batch must not write");
+    }
+
+    #[test]
+    fn for_each_leaf_run_groups_by_leaf() {
+        let a = small_alloc();
+        let n = 256 * 5;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        // Indices hitting leaves 4, 0, 4, 1 -> runs for leaves {0, 1, 4}.
+        let idxs = [1100usize, 5, 1150, 300];
+        let mut seen = Vec::new();
+        t.for_each_leaf_run(&idxs, |leaf, elems, positions| {
+            for &p in positions {
+                let off = idxs[p as usize] % 256;
+                assert_eq!(elems[off], data[idxs[p as usize]]);
+            }
+            seen.push((leaf, positions.len()));
+        })
+        .unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(0, 1), (1, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn prop_get_batch_matches_model_all_allocators() {
+        use crate::pmem::ShardedAllocator;
+        forall(15, |g| {
+            let n = g.usize_in(1, 256 * 60);
+            let nb = g.usize_in(0, 400);
+            let a = BlockAllocator::new(1024, 1 << 12).unwrap();
+            let s = ShardedAllocator::with_shards(1024, 1 << 12, 4).unwrap();
+            let data: Vec<u32> = (0..n).map(|_| g.rng().next_u32()).collect();
+            let idxs: Vec<usize> = (0..nb).map(|_| g.usize_in(0, n - 1)).collect();
+            let mut t1: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+            let mut t2: TreeArray<u32, ShardedAllocator> = TreeArray::new(&s, n).unwrap();
+            t1.copy_from_slice(&data).unwrap();
+            t2.copy_from_slice(&data).unwrap();
+            t2.enable_flat_table();
+            let want: Vec<u32> = idxs.iter().map(|&i| data[i]).collect();
+            assert_eq!(t1.get_batch(&idxs).unwrap(), want);
+            assert_eq!(t2.get_batch(&idxs).unwrap(), want);
+        });
+    }
+
+    // A multi-field #[repr(C)] Pod exercising the alignment contract:
+    // size 8 (power of two), align 4 — element offsets are multiples of
+    // 8, so the aligned read/write path is sound.
+    #[repr(C)]
+    #[derive(Clone, Copy, Default, PartialEq, Debug)]
+    struct Pair {
+        lo: u32,
+        hi: u32,
+    }
+    unsafe impl Pod for Pair {}
+
+    #[test]
+    fn repr_c_pod_roundtrips_aligned() {
+        assert!(std::mem::size_of::<Pair>().is_power_of_two());
+        assert_eq!(std::mem::size_of::<Pair>() % std::mem::align_of::<Pair>(), 0);
+        let a = small_alloc();
+        let n = 128 * 6 + 10; // 1 KB blocks, 8-byte elems: leaf_cap 128
+        let mut t: TreeArray<Pair> = TreeArray::new(&a, n).unwrap();
+        assert_eq!(t.geometry().leaf_cap, 128);
+        for i in 0..n {
+            t.set(i, Pair { lo: i as u32, hi: !(i as u32) }).unwrap();
+        }
+        for i in 0..n {
+            assert_eq!(t.get(i).unwrap(), Pair { lo: i as u32, hi: !(i as u32) });
+        }
+        // Cursor and batch paths share the alignment story.
+        let collected: Vec<Pair> = t.iter().collect();
+        assert_eq!(collected[200], Pair { lo: 200, hi: !200u32 });
+        let got = t.get_batch(&[0, 500, 129]).unwrap();
+        assert_eq!(got[1], Pair { lo: 500, hi: !500u32 });
     }
 }

@@ -43,6 +43,48 @@ pub fn gups_tree_naive<A: BlockAlloc>(t: &mut TreeArray<'_, u64, A>, ops: u64, s
     acc
 }
 
+/// Default batch size for [`gups_tree_batched`].
+pub const GUPS_BATCH: usize = 1024;
+
+/// Real GUPS over a tree table with *batched* updates: indices are
+/// generated `batch` at a time and applied through
+/// [`TreeArray::update_batch`], which groups them by leaf so each
+/// distinct leaf is translated once per batch instead of once per
+/// update. Bit-identical to [`gups_vec`]/[`gups_tree_naive`] for the
+/// same seed (xor updates commute across distinct slots; same-slot
+/// updates keep batch order).
+pub fn gups_tree_batched<A: BlockAlloc>(
+    t: &mut TreeArray<'_, u64, A>,
+    ops: u64,
+    seed: u64,
+    batch: usize,
+) -> u64 {
+    let batch = batch.max(1);
+    let mut rng = Rng::new(seed);
+    let n = t.len() as u64;
+    let mut idxs = Vec::with_capacity(batch);
+    let mut keys = Vec::with_capacity(batch);
+    let mut done = 0u64;
+    while done < ops {
+        let b = batch.min((ops - done) as usize);
+        idxs.clear();
+        keys.clear();
+        for _ in 0..b {
+            let r = rng.next_u64();
+            idxs.push((r % n) as usize);
+            keys.push(r);
+        }
+        t.update_batch(&idxs, |pos, v| *v ^= keys[pos])
+            .expect("indices in range by construction");
+        done += b as u64;
+    }
+    let mut acc = 0u64;
+    for v in t.iter() {
+        acc ^= v;
+    }
+    acc
+}
+
 /// Simulated GUPS at paper scale (4–64 GB tables).
 ///
 /// Each update = one table access (read-modify-write counted once — the
@@ -109,6 +151,32 @@ mod tests {
         assert_eq!(c1, c2, "same seed must produce identical tables");
         // And the actual contents match.
         assert_eq!(tree_table.to_vec(), vec_table);
+    }
+
+    #[test]
+    fn batched_gups_bit_identical_to_per_op() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let n = 1 << 14;
+        let mut vec_table = vec![0u64; n];
+        let c1 = gups_vec(&mut vec_table, 30_000, 13);
+        for batch in [1usize, 7, 256, GUPS_BATCH] {
+            let mut tree_table: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+            let c2 = gups_tree_batched(&mut tree_table, 30_000, 13, batch);
+            assert_eq!(c1, c2, "batch={batch}: checksum diverged");
+            assert_eq!(tree_table.to_vec(), vec_table, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn batched_gups_on_flat_table_tree() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let n = 1 << 14;
+        let mut vec_table = vec![0u64; n];
+        let c1 = gups_vec(&mut vec_table, 20_000, 21);
+        let mut tree_table: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        tree_table.enable_flat_table();
+        let c2 = gups_tree_batched(&mut tree_table, 20_000, 21, 512);
+        assert_eq!(c1, c2);
     }
 
     fn gups_ratio(bytes: u64) -> f64 {

@@ -27,6 +27,7 @@ fn all_experiments_dispatch_and_produce_tables() {
         "fig5",
         "concurrent-gups",
         "parallel-blackscholes",
+        "batched-workloads",
         "ablation-alloc",
         "ablation-block-size",
         "ablation-ptw",
