@@ -105,23 +105,43 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// pointer — the tree-native relocation the paper describes (only
     /// one pointer names a leaf, so no global patching pass is needed).
     ///
-    /// Takes `&self`: location metadata is interior-mutable so leaves
-    /// can move *under live cursors*; the tree's generation counter is
-    /// bumped and cursors/TLBs revalidate on their next access (see
-    /// [`TreeArray`]'s relocation docs). Callers must still ensure no
-    /// *other thread* is accessing the tree during the move, and must
-    /// not hold a [`TreeArray::leaf_slice`] of the moving leaf across
-    /// the call — slices pin a location and cannot revalidate (the same
-    /// logical-liveness contract as [`crate::pmem::BlockAlloc::free`],
-    /// which is also safe to call on a block others still point at).
-    pub fn migrate_leaf(&self, leaf_idx: usize) -> Result<BlockId> {
+    /// Takes `&mut self`, so the borrow checker rules out outstanding
+    /// [`TreeArray::leaf_slice`] borrows (which pin a leaf's *location*
+    /// and would dangle into the freed block). To move a leaf under a
+    /// live [`Cursor`](crate::trees::Cursor) — which revalidates via the
+    /// generation counter and is safe to coexist with — use
+    /// [`TreeArray::migrate_leaf_shared`].
+    pub fn migrate_leaf(&mut self, leaf_idx: usize) -> Result<BlockId> {
+        // SAFETY: `&mut self` proves no leaf slice (or any other borrow
+        // of the tree) is live across the move.
+        unsafe { self.migrate_leaf_shared(leaf_idx) }
+    }
+
+    /// [`TreeArray::migrate_leaf`] through `&self`: location metadata is
+    /// interior-mutable so leaves can move *under live cursors* — the
+    /// tree's generation counter is bumped and cursors/TLBs revalidate
+    /// on their next access (see [`TreeArray`]'s relocation docs).
+    ///
+    /// # Safety
+    /// Raw leaf slices cannot revalidate, so the caller must ensure no
+    /// [`TreeArray::leaf_slice`] / [`TreeArray::leaf_slice_mut`] borrow
+    /// of the tree (including the `&[T]` handed to
+    /// [`TreeArray::for_each_leaf_run`]'s callback) is live across the
+    /// call — the moving leaf's block is freed and may be recycled and
+    /// rewritten while such a slice still points at it. The caller must
+    /// also ensure no *other thread* accesses the tree during the move
+    /// (the same single-writer contract as
+    /// [`crate::pmem::BlockAlloc::block_ptr`]).
+    pub unsafe fn migrate_leaf_shared(&self, leaf_idx: usize) -> Result<BlockId> {
         if leaf_idx >= self.nleaves() {
             return Err(Error::IndexOutOfBounds {
                 index: leaf_idx,
                 len: self.nleaves(),
             });
         }
-        self.relocate_leaf_impl(leaf_idx)
+        // SAFETY: forwarded verbatim — the caller upholds this fn's
+        // identical contract.
+        unsafe { self.relocate_leaf_impl(leaf_idx) }
     }
 }
 

@@ -321,7 +321,8 @@ mod tests {
         let mut c = t.cursor();
         assert_eq!(c.seek(10), data[10]);
         let gen0 = t.generation();
-        t.migrate_leaf(0).unwrap();
+        // SAFETY: only the revalidating cursor observes the tree.
+        unsafe { t.migrate_leaf_shared(0) }.unwrap();
         assert_eq!(t.generation(), gen0 + 1);
         assert_eq!(c.seek(10), data[10], "stale read after relocate");
         let (_, walks) = c.cache_stats();

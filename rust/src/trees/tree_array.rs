@@ -61,16 +61,20 @@ unsafe impl Pod for usize {}
 ///
 /// # Relocation and the generation counter
 ///
-/// [`TreeArray::migrate_leaf`] moves a leaf to a fresh block through
-/// `&self`: the root/leaf bookkeeping is interior-mutable (atomics) so a
-/// leaf can move *while cursors are live*. Every relocation bumps the
-/// tree's generation; cursors and TLB entries are stamped with the
-/// generation at fill time and revalidate on mismatch (the software
-/// shootdown protocol — without it a cursor would silently read the
-/// freed block). Relocation requires external synchronization with
-/// respect to accessors in *other threads* (same single-writer contract
-/// as [`BlockAlloc::block_ptr`]); the generation protocol makes
-/// same-thread interleavings of relocate and cached reads safe.
+/// [`TreeArray::migrate_leaf`] moves a leaf to a fresh block. The
+/// root/leaf bookkeeping is interior-mutable (atomics) so a leaf can
+/// move *while cursors are live* — that shared-access form is the
+/// `unsafe` [`TreeArray::migrate_leaf_shared`] (`&self`), whose caller
+/// vouches that no raw leaf slice pins the moving leaf's old location;
+/// the safe `migrate_leaf` takes `&mut self` so the borrow checker
+/// proves it. Every relocation bumps the tree's generation; cursors and
+/// TLB entries are stamped with the generation at fill time and
+/// revalidate on mismatch (the software shootdown protocol — without it
+/// a cursor would silently read the freed block). Relocation requires
+/// external synchronization with respect to accessors in *other
+/// threads* (same single-writer contract as [`BlockAlloc::block_ptr`]);
+/// the generation protocol makes same-thread interleavings of relocate
+/// and cached reads safe.
 pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     pub(crate) alloc: &'a A,
     pub(crate) geo: TreeGeometry,
@@ -319,16 +323,15 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// Borrow leaf `leaf_idx`'s elements as a slice (zero-copy: this is
     /// the exact 32 KB buffer the Pallas blocked kernel consumes).
     ///
-    /// Relocation caveat: [`TreeArray::migrate_leaf`] takes `&self` (so
-    /// cursors can revalidate across moves), which means the borrow
-    /// checker cannot tie this slice to the leaf's *location*. Do not
-    /// relocate a leaf while holding a slice of it — the slice would
-    /// keep pointing at the freed (arena-backed, never unmapped) block,
-    /// reading stale or recycled bytes. This mirrors the
-    /// [`BlockAlloc::free`] contract, which is likewise safe to call on
-    /// any live id: block liveness is a logical protocol here, not a
-    /// borrow-checked one. Cursors and the batch APIs revalidate via the
-    /// generation counter; raw slices cannot.
+    /// Relocation caveat: this slice borrows the tree, so the safe
+    /// [`TreeArray::migrate_leaf`] (`&mut self`) cannot run while it is
+    /// live — the borrow checker ties the slice to the leaf's
+    /// *location*. The `unsafe` [`TreeArray::migrate_leaf_shared`]
+    /// (`&self`) deliberately escapes that tie so cursors can coexist
+    /// with moves; its safety contract forbids calling it while a slice
+    /// of the moving leaf is held (the slice would keep pointing at the
+    /// freed, possibly recycled block). Cursors and the batch APIs
+    /// revalidate via the generation counter; raw slices cannot.
     pub fn leaf_slice(&self, leaf_idx: usize) -> &[T] {
         assert!(leaf_idx < self.geo.nleaves());
         let (p, span) = self.leaf_ptr(leaf_idx);
@@ -527,8 +530,15 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// precisely so a leaf can move under live cursors — they revalidate
     /// through the generation bump (bumped *after* all pointers are
     /// patched, so a reader observing the new generation observes a
-    /// consistent tree).
-    pub(crate) fn relocate_leaf_impl(&self, leaf_idx: usize) -> Result<BlockId> {
+    /// consistent tree). Public callers reach this through the safe
+    /// `&mut self` [`TreeArray::migrate_leaf`] or the `unsafe`
+    /// [`TreeArray::migrate_leaf_shared`].
+    ///
+    /// # Safety
+    /// Same contract as [`TreeArray::migrate_leaf_shared`]: no live leaf
+    /// slice of the tree across the call, and no concurrent access from
+    /// other threads.
+    pub(crate) unsafe fn relocate_leaf_impl(&self, leaf_idx: usize) -> Result<BlockId> {
         let first_elem = leaf_idx * self.geo.leaf_cap;
         // Walk down recording the parent slot that names the leaf.
         let mut node = self.root_block();
@@ -558,8 +568,12 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         }
         match parent {
             Some((p, slot)) => {
-                self.alloc
-                    .write(p, slot * 8, &(fresh.0 as u64).to_le_bytes())?;
+                if let Err(e) = self.alloc.write(p, slot * 8, &(fresh.0 as u64).to_le_bytes()) {
+                    // Nothing observed `fresh` yet: free it so a failed
+                    // relocation is a no-op (all-or-nothing, like `new`).
+                    let _ = self.alloc.free(fresh);
+                    return Err(e);
+                }
             }
             None => self.root.store(fresh.0, Ordering::Release), // depth-1: the leaf is the root
         }
@@ -574,7 +588,12 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         }
         // Publish the move: caches revalidate when they see the bump.
         self.generation.fetch_add(1, Ordering::Release);
-        self.alloc.free(old)?;
+        // The move is committed (pointers patched, generation bumped);
+        // surfacing a free failure now would make a *completed*
+        // migration look like a no-op. `old` is live by construction,
+        // so free cannot fail for either shipped allocator anyway.
+        let freed = self.alloc.free(old);
+        debug_assert!(freed.is_ok(), "freeing the displaced leaf failed: {freed:?}");
         Ok(fresh)
     }
 

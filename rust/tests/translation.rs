@@ -33,7 +33,9 @@ fn stale_cursor_case<A: BlockAlloc>(a: &A) {
     let (_, walks_before) = c.cache_stats();
 
     let gen0 = t.generation();
-    let fresh = t.migrate_leaf(0).expect("migrate");
+    // SAFETY: only the cursor (which revalidates) observes the tree; no
+    // leaf slices are live.
+    let fresh = unsafe { t.migrate_leaf_shared(0) }.expect("migrate");
     assert_eq!(t.generation(), gen0 + 1, "relocation must bump the generation");
 
     // The freed block goes back to the pool; hand it to a "new owner"
@@ -84,7 +86,8 @@ fn tlb_shootdown_case<A: BlockAlloc>(a: &A) {
     assert_eq!(c.tlb_stats().hits, 1);
     assert_eq!(c.tlb_stats().invalidations, 0);
 
-    t.migrate_leaf(0).expect("migrate");
+    // SAFETY: only the revalidating cursor observes the tree.
+    unsafe { t.migrate_leaf_shared(0) }.expect("migrate");
     let recycled = a.alloc().expect("recycle");
     a.write(recycled, 0, &[0x5Au8; BLOCK]).expect("scribble");
 
@@ -123,8 +126,9 @@ fn iteration_straddling_migration_stays_correct() {
         got.push(c.next().unwrap());
     }
     // Move both a visited and a not-yet-visited leaf mid-iteration.
-    t.migrate_leaf(0).expect("migrate visited");
-    t.migrate_leaf(5).expect("migrate upcoming");
+    // SAFETY: only the revalidating iterator observes the tree.
+    unsafe { t.migrate_leaf_shared(0) }.expect("migrate visited");
+    unsafe { t.migrate_leaf_shared(5) }.expect("migrate upcoming");
     for v in c {
         got.push(v);
     }
@@ -134,7 +138,7 @@ fn iteration_straddling_migration_stays_correct() {
 /// Flat-table mode over both allocators, across relocation.
 fn flat_mode_case<A: BlockAlloc>(a: &A) {
     let n = 256 * 8 + 17;
-    let (t, data) = filled_tree(a, n);
+    let (mut t, data) = filled_tree(a, n);
     t.enable_flat_table();
     let mut rng = Rng::new(9);
     for _ in 0..400 {
@@ -190,7 +194,8 @@ fn no_leaks_after_heavy_relocation_with_live_cursor() {
         let mut rng = Rng::new(31);
         for round in 0..50 {
             let leaf = rng.range(0, t.nleaves());
-            t.migrate_leaf(leaf).expect("migrate");
+            // SAFETY: only the revalidating cursor observes the tree.
+            unsafe { t.migrate_leaf_shared(leaf) }.expect("migrate");
             let i = rng.range(0, n);
             assert_eq!(c.seek(i), data[i], "round {round}, elem {i}");
         }
