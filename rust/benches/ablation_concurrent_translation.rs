@@ -1,0 +1,194 @@
+//! Bench: concurrent read-side translation (the PR 3 tentpole).
+//!
+//! N threads hammer one shared tree with random reads under three
+//! translation regimes:
+//!
+//! * **re-walk** — every access walks the tree (the natural "share the
+//!   tree, share nothing else" baseline: correct, but pays Table 2's
+//!   depth-dependent loads per access on every thread).
+//! * **shared locked TLB** — one `Mutex<LeafTlb>` all threads share:
+//!   the obvious-but-wrong design this PR exists to beat — the cache
+//!   helps, the lock serializes.
+//! * **per-thread TLB views** — one [`TreeView`] per thread over the
+//!   flat leaf table: private hot set, no lock on the lookup path, two
+//!   uncontended atomics per access for the epoch pin.
+//!
+//! Acceptance (printed as a verdict): per-thread-TLB throughput at 4
+//! threads must be >= 2x its own single-thread throughput (it scales),
+//! and >= 1.5x the shared-locked-TLB strawman at 4 threads (locking the
+//! hot path is the wrong design).
+//!
+//! `cargo bench --bench ablation_concurrent_translation` (NVM_QUICK=1
+//! for a fast pass)
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use nvm::bench_utils::section;
+use nvm::pmem::BlockAllocator;
+use nvm::testutil::Rng;
+use nvm::trees::{LeafTlb, TreeArray};
+
+/// 1 KB blocks keep the tree deep at bench-friendly sizes
+/// (u32: leaf_cap 256, fanout 128).
+const BLOCK: usize = 1024;
+/// 256 leaves (> fanout 128 -> depth 3: two dependent pointer loads
+/// per re-walk); the 64-entry TLBs cover 1/4 of the leaves.
+const N: usize = 256 * 256;
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Run `f(tid)` on `threads` scoped threads, `reps` times; returns the
+/// best wall-clock seconds and the xor of all workers' checksums.
+fn run_threads<F>(threads: usize, reps: usize, f: &F) -> (f64, u64)
+where
+    F: Fn(usize) -> u64 + Sync,
+{
+    let mut best = f64::INFINITY;
+    let mut checksum = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let cs = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads).map(|tid| s.spawn(move || f(tid))).collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .fold(0u64, |a, v| a ^ v)
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+        checksum = cs;
+    }
+    (best, checksum)
+}
+
+fn main() {
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let (ops, reps) = if quick { (100_000usize, 2usize) } else { (1_000_000, 3) };
+
+    let a = BlockAllocator::new(BLOCK, 2048).expect("bench pool");
+    let data: Vec<u32> = (0..N as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    let mut walk_tree: TreeArray<u32> = TreeArray::new(&a, N).expect("walk tree");
+    walk_tree.copy_from_slice(&data).expect("fill");
+    let mut flat_tree: TreeArray<u32> = TreeArray::new(&a, N).expect("flat tree");
+    flat_tree.copy_from_slice(&data).expect("fill");
+    flat_tree.enable_flat_table();
+    let _ = flat_tree.get(0); // build the table before sharing
+
+    // Per-thread random index streams, identical across modes so the
+    // checksums must agree.
+    let streams: Vec<Vec<usize>> = (0..THREADS[THREADS.len() - 1])
+        .map(|tid| {
+            let mut rng = Rng::new(0xC0DE + tid as u64);
+            (0..ops).map(|_| rng.range(0, N)).collect()
+        })
+        .collect();
+
+    let walk_tree = &walk_tree;
+    let flat_tree = &flat_tree;
+    let streams = &streams;
+
+    section(&format!(
+        "concurrent read translation: {N} u32 elems (depth {}), {ops} reads/thread, {} cores",
+        walk_tree.depth(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    ));
+    println!(
+        "{:<10} {:>12} {:>14} {:>16}   (Mreads/s, all threads)",
+        "threads", "re-walk", "locked-TLB", "per-thread-TLB"
+    );
+
+    let mut per_thread_mops = [0.0f64; THREADS.len()];
+    let mut strawman_mops = [0.0f64; THREADS.len()];
+    for (ti, &threads) in THREADS.iter().enumerate() {
+        // Mode 1: naive re-walk per access.
+        let rewalk = |tid: usize| -> u64 {
+            let mut acc = 0u64;
+            for &i in &streams[tid] {
+                // SAFETY: i < N by construction.
+                acc ^= unsafe { walk_tree.get_unchecked(i) } as u64;
+            }
+            acc
+        };
+        let (s_walk, cs_walk) = run_threads(threads, reps, &rewalk);
+
+        // Mode 2: one shared, locked TLB (the strawman).
+        let shared_tlb = Mutex::new(LeafTlb::new(64, 4));
+        let gen = walk_tree.generation();
+        let strawman = |tid: usize| -> u64 {
+            let mut acc = 0u64;
+            for &i in &streams[tid] {
+                let leaf = i >> 8; // leaf_cap = 256
+                let ptr = {
+                    let mut tlb = shared_tlb.lock().unwrap();
+                    match tlb.lookup(leaf, gen) {
+                        Some((p, _)) => p,
+                        None => {
+                            let s = walk_tree.leaf_slice(leaf);
+                            let p = s.as_ptr() as *mut u8;
+                            tlb.insert(leaf, gen, p, s.len());
+                            p
+                        }
+                    }
+                };
+                // SAFETY: cached pointer covers the whole leaf; no
+                // relocation runs during the bench.
+                acc ^= unsafe { *(ptr as *const u32).add(i & 255) } as u64;
+            }
+            acc
+        };
+        let (s_straw, cs_straw) = run_threads(threads, reps, &strawman);
+
+        // Mode 3: per-thread TLB views over the flat leaf table.
+        let per_thread = |tid: usize| -> u64 {
+            let mut view = flat_tree.view_with_tlb(64, 4);
+            let mut acc = 0u64;
+            for &i in &streams[tid] {
+                // SAFETY: i < N by construction.
+                acc ^= unsafe { view.get_unchecked(i) } as u64;
+            }
+            acc
+        };
+        let (s_view, cs_view) = run_threads(threads, reps, &per_thread);
+
+        assert_eq!(cs_walk, cs_straw, "strawman checksum diverged at {threads}T");
+        assert_eq!(cs_walk, cs_view, "view checksum diverged at {threads}T");
+
+        let total = (threads * ops) as f64 / 1e6;
+        strawman_mops[ti] = total / s_straw;
+        per_thread_mops[ti] = total / s_view;
+        println!(
+            "{:<10} {:>12.2} {:>14.2} {:>16.2}",
+            threads,
+            total / s_walk,
+            strawman_mops[ti],
+            per_thread_mops[ti]
+        );
+    }
+
+    section("verdict");
+    let i4 = THREADS.iter().position(|&t| t == 4).unwrap();
+    let scale = per_thread_mops[i4] / per_thread_mops[0];
+    let vs_straw = per_thread_mops[i4] / strawman_mops[i4];
+    let verdicts = [
+        (
+            format!("per-thread-TLB 4T vs 1T: {scale:.2}x (need >= 2x)"),
+            scale >= 2.0,
+        ),
+        (
+            format!("per-thread-TLB vs shared-locked-TLB at 4T: {vs_straw:.2}x (need >= 1.5x)"),
+            vs_straw >= 1.5,
+        ),
+    ];
+    let mut all = true;
+    for (what, ok) in &verdicts {
+        println!("{} {}", if *ok { "PASS" } else { "FAIL" }, what);
+        all &= *ok;
+    }
+    println!(
+        "{}",
+        if all {
+            "concurrent-translation goals met: private TLBs scale, the shared lock does not"
+        } else {
+            "CONCURRENT TRANSLATION GOALS NOT MET — investigate (debug build? < 4 cores?)"
+        }
+    );
+}

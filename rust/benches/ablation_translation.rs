@@ -4,9 +4,11 @@
 //! side: naive tree walk (Table 2's `depth` dependent loads), the bare
 //! Figure 2 single-leaf cursor, the set-associative leaf-TLB cursor,
 //! the flat leaf-table mode (one indexed load), and a contiguous `Vec`
-//! as the hardware floor — across depths 1–3 and sequential / strided /
-//! random access. A second section compares per-op vs batched
-//! (sort-and-run) GUPS on the tree backend.
+//! as the hardware floor — across depths 1–4 and sequential / strided /
+//! random access (depth 4 is the PB-scale shape whose flat-vs-walk
+//! crossover the interior-node-cache ROADMAP item cares about). A
+//! second section compares per-op vs batched (sort-and-run) GUPS on the
+//! tree backend.
 //!
 //! Acceptance (printed as a verdict): flat-table random access must be
 //! ≥ 3x the naive walk at depth ≥ 2, and batched GUPS must beat per-op
@@ -44,8 +46,21 @@ fn main() {
     let (warmup, iters, accesses) = if quick { (1, 3, 40_000) } else { (2, 7, 200_000) };
     let mut verdicts: Vec<(String, bool)> = Vec::new();
 
-    for (depth, n) in [(1u32, 256usize), (2, 256 * 64), (3, 256 * 128 * 4)] {
-        let a = BlockAllocator::new(BLOCK, 2048).expect("bench pool");
+    // Depth 4 (ROADMAP: the PB-scale shape) makes the flat-vs-walk gap
+    // — and any future interior-node-cache crossover — visible in the
+    // same table: > fanout^2 leaves forces a 4-deep walk while the flat
+    // table stays one indexed load (at the cost of a 16 Ki-entry
+    // pointer table, still ~0.05% of the data).
+    for (depth, n) in [
+        (1u32, 256usize),
+        (2, 256 * 64),
+        (3, 256 * 128 * 4),
+        (4, 256 * 128 * 128 + 256),
+    ] {
+        // Pool sized for two trees of this shape (walk + flat) plus
+        // interior slack.
+        let geo_blocks = n / 256 + n / (256 * 128) + 64;
+        let a = BlockAllocator::new(BLOCK, (geo_blocks * 2 + 64).max(2048)).expect("bench pool");
         let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
         let mut tree: TreeArray<u32> = TreeArray::new(&a, n).expect("walk tree");
         tree.copy_from_slice(&data).expect("fill");

@@ -40,6 +40,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "Concurrent GUPS: threads sharing one sharded allocator (real execution)",
         },
         ExperimentInfo {
+            name: "concurrent-probe",
+            description: "N per-thread-TLB reader views over one shared tree, with live relocation",
+        },
+        ExperimentInfo {
             name: "parallel-blackscholes",
             description: "Partitioned parallel Black-Scholes over one sharded allocator",
         },
@@ -76,6 +80,7 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "fig4" => vec![experiments::fig4_gups(cfg), experiments::fig4_rbtree(cfg)],
         "fig5" => vec![experiments::fig5(cfg)],
         "concurrent-gups" | "concurrent_gups" => vec![experiments::concurrent_gups(cfg)],
+        "concurrent-probe" | "concurrent_probe" => vec![experiments::concurrent_probe(cfg)],
         "parallel-blackscholes" | "parallel_blackscholes" => {
             vec![experiments::parallel_blackscholes(cfg)]
         }

@@ -19,7 +19,10 @@
 //!   (§4.4): the Figure 2 iterator optimization generalized to a
 //!   set-associative leaf-TLB ([`trees::LeafTlb`]), an O(1) flat
 //!   leaf-table mode, generation-based shootdown so relocated leaves
-//!   are never read stale, and batched sort-and-run accessors.
+//!   are never read stale, batched sort-and-run accessors, and
+//!   [`trees::TreeView`] — `Send` shared read views with *per-thread*
+//!   TLBs plus arena-epoch quiescence ([`pmem::ArenaEpoch`]), so many
+//!   threads read one tree lock-free while leaves relocate under them.
 //! * [`stack`] — §3.1 split stacks: a segmented-stack frame machine plus
 //!   the per-benchmark call-profile overhead model behind Figure 3.
 //! * [`memsim`] — the virtual-memory-vs-physical cost model: a

@@ -10,6 +10,7 @@
 //!   workloads where one lock would serialize the hot path.
 
 use crate::error::Result;
+use crate::pmem::epoch::ArenaEpoch;
 use crate::pmem::BlockId;
 
 /// Allocation statistics (also the fragmentation story of §3: external
@@ -88,6 +89,14 @@ pub trait BlockAlloc: Send + Sync {
     fn contention(&self) -> ContentionStats {
         ContentionStats::default()
     }
+
+    /// The pool's shared relocation epoch: bumped on *every* block move
+    /// in this pool (tree leaf migration, [`crate::pmem::Relocator`],
+    /// [`crate::pmem::SwapPool`]), so translation caches over any
+    /// structure in the arena can revalidate with one load, and
+    /// concurrent readers can coordinate deferred reclamation. See
+    /// [`crate::pmem::epoch`].
+    fn epoch(&self) -> &ArenaEpoch;
 
     /// Raw pointer to the block's first byte.
     ///

@@ -5,6 +5,7 @@ use std::sync::Mutex;
 use crate::error::{Error, Result};
 use crate::pmem::alloc_trait::{AllocStats, BlockAlloc};
 use crate::pmem::arena::Arena;
+use crate::pmem::epoch::ArenaEpoch;
 use crate::pmem::BlockId;
 
 struct Inner {
@@ -40,6 +41,7 @@ impl Inner {
 pub struct BlockAllocator {
     arena: Arena,
     inner: Mutex<Inner>,
+    epoch: ArenaEpoch,
 }
 
 impl BlockAllocator {
@@ -58,6 +60,7 @@ impl BlockAllocator {
                 live: vec![0u64; capacity_blocks.div_ceil(64)],
                 stats: AllocStats::default(),
             }),
+            epoch: ArenaEpoch::new(),
         })
     }
 
@@ -185,6 +188,12 @@ impl BlockAllocator {
         Ok(())
     }
 
+    /// The pool's shared relocation epoch (see [`crate::pmem::epoch`]).
+    #[inline]
+    pub fn epoch(&self) -> &ArenaEpoch {
+        &self.epoch
+    }
+
     fn check(&self, id: BlockId, offset: usize, len: usize) -> Result<()> {
         if !self.is_live(id) {
             return Err(Error::InvalidBlock(id));
@@ -231,6 +240,10 @@ impl BlockAlloc for BlockAllocator {
 
     fn stats(&self) -> AllocStats {
         BlockAllocator::stats(self)
+    }
+
+    fn epoch(&self) -> &ArenaEpoch {
+        BlockAllocator::epoch(self)
     }
 
     unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {

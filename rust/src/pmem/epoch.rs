@@ -1,0 +1,383 @@
+//! The arena-wide relocation epoch: cross-tree translation shootdown
+//! plus quiescent-state block reclamation.
+//!
+//! PR 2's generation counters are *per tree*: a cursor over tree A
+//! revalidates when A's own leaves move, but a [`crate::pmem::Relocator`]
+//! or [`crate::pmem::SwapPool`] moving blocks elsewhere in the same pool
+//! leaves A's counter untouched while still recycling physical blocks a
+//! cached translation may point at. The epoch generalizes the scheme to
+//! the whole arena, the way the Virtual Block Interface argues
+//! translation state should work: per-client caches over shared
+//! metadata, invalidated by one cheap counter instead of an IPI storm.
+//!
+//! Every [`crate::pmem::BlockAlloc`] pool owns one [`ArenaEpoch`]. Two
+//! protocols run over it:
+//!
+//! 1. **Shootdown** — *any* relocation in the pool
+//!    ([`crate::trees::TreeArray::migrate_leaf`] and friends,
+//!    `Relocator::migrate`, `SwapPool::evict`/`fault`) bumps the epoch.
+//!    Translation caches ([`crate::trees::Cursor`],
+//!    [`crate::trees::TreeView`]) snapshot the epoch and flush wholesale
+//!    on mismatch — conservative (a move in tree B flushes views of
+//!    tree A) but O(1) to publish and impossible to forget, exactly the
+//!    trade hardware TLB shootdown makes in the other direction.
+//!
+//! 2. **Quiescent-state reclamation** — concurrent readers cannot use
+//!    "check a counter on the next access" alone: a block freed *while a
+//!    read is in flight* may be recycled and scribbled under the
+//!    reader's feet. So readers **register** a slot and **pin** the
+//!    current epoch before every translation; a concurrent relocation
+//!    ([`crate::trees::TreeArray::migrate_leaf_concurrent`]) does not
+//!    free the displaced block but **retires** it into a limbo list
+//!    tagged with the post-move epoch. [`ArenaEpoch::try_reclaim`] frees
+//!    a retired block only once every registered reader has pinned an
+//!    epoch at or past the retirement point (or gone offline) — by then
+//!    no reader can hold a pre-move translation, because pinning a newer
+//!    epoch flushes its caches before any further dereference. This is
+//!    QSBR (RCU's userspace cousin, the llfree-rs idiom applied to
+//!    translation instead of allocation): readers pay two uncontended
+//!    atomic ops per pin, writers pay the wait.
+//!
+//! The scheme is cooperative: a registered reader that stops pinning
+//! (without dropping its slot) stalls reclamation — limbo grows but
+//! nothing is unsafe. [`crate::trees::TreeView`] pins on every access
+//! and deregisters on drop, so view-based readers always make progress.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::pmem::alloc_trait::BlockAlloc;
+use crate::pmem::BlockId;
+
+/// Slot value of a reader that is not currently reading: reclamation
+/// never waits on an offline reader.
+pub const OFFLINE: u64 = u64::MAX;
+
+/// Counter snapshot of one [`ArenaEpoch`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EpochStats {
+    /// Current epoch value (total relocations in the pool's lifetime).
+    pub epoch: u64,
+    /// Registered reader slots.
+    pub readers: usize,
+    /// Blocks retired into limbo over the pool's lifetime.
+    pub retired: u64,
+    /// Retired blocks returned to the pool so far.
+    pub reclaimed: u64,
+    /// Blocks currently in limbo (retired, not yet reclaimable).
+    pub limbo: usize,
+}
+
+/// The shared relocation epoch of one block pool. See the module docs
+/// for the shootdown and reclamation protocols.
+pub struct ArenaEpoch {
+    /// Bumped once per relocation, after all pointers are patched.
+    global: AtomicU64,
+    /// Registered reader slots. Each holds the epoch its reader last
+    /// pinned, or [`OFFLINE`].
+    readers: Mutex<Vec<Arc<AtomicU64>>>,
+    /// Retired blocks awaiting quiescence: `(block, retire_epoch)`.
+    limbo: Mutex<Vec<(BlockId, u64)>>,
+    retired_total: AtomicU64,
+    reclaimed_total: AtomicU64,
+}
+
+impl ArenaEpoch {
+    /// A fresh epoch at 0 with no readers and an empty limbo list.
+    pub fn new() -> Self {
+        ArenaEpoch {
+            global: AtomicU64::new(0),
+            readers: Mutex::new(Vec::new()),
+            limbo: Mutex::new(Vec::new()),
+            retired_total: AtomicU64::new(0),
+            reclaimed_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Current epoch. Caches compare this against their snapshot and
+    /// flush on mismatch (the shootdown check).
+    #[inline]
+    pub fn current(&self) -> u64 {
+        self.global.load(Ordering::Acquire)
+    }
+
+    /// Publish one relocation: bump the epoch *after* every pointer is
+    /// patched, so a reader observing the new value observes a
+    /// consistent translation structure. Returns the new epoch.
+    ///
+    /// `SeqCst`: the reclamation argument (see [`ReaderSlot::pin`])
+    /// needs bumps, slot stores, and slot samples to sit in one total
+    /// order.
+    #[inline]
+    pub fn bump(&self) -> u64 {
+        self.global.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Register a reader slot (initially [`OFFLINE`]). The slot
+    /// deregisters itself on drop.
+    pub fn register(&self) -> ReaderSlot<'_> {
+        let slot = Arc::new(AtomicU64::new(OFFLINE));
+        self.readers.lock().unwrap().push(slot.clone());
+        ReaderSlot { epoch: self, slot }
+    }
+
+    /// Retire a displaced block: it stays allocated (so it cannot be
+    /// recycled) until [`ArenaEpoch::try_reclaim`] proves no reader can
+    /// still hold a translation into it.
+    pub fn retire(&self, block: BlockId, retire_epoch: u64) {
+        self.limbo.lock().unwrap().push((block, retire_epoch));
+        self.retired_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Oldest epoch any registered reader may still be reading at
+    /// ([`OFFLINE`] when every reader is offline or none exist).
+    fn min_reader_epoch(&self) -> u64 {
+        self.readers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.load(Ordering::SeqCst))
+            .min()
+            .unwrap_or(OFFLINE)
+    }
+
+    /// Free every retired block all readers have quiesced past,
+    /// returning how many went back to the pool. Non-blocking: blocks
+    /// some reader may still reference stay in limbo.
+    ///
+    /// `alloc` must be the pool this epoch belongs to (the one whose
+    /// relocations retired the blocks).
+    pub fn try_reclaim<A: BlockAlloc + ?Sized>(&self, alloc: &A) -> usize {
+        // Take the limbo lock BEFORE sampling reader slots: a retirement
+        // is visible in limbo only after its epoch bump (retire() runs
+        // after bump()), so sampling second guarantees that for every
+        // entry `r` considered here, a reader racing its online
+        // transition either confirmed a pin >= r (it synchronized with
+        // the bump and sees the patched pointers — cannot reach the
+        // retired block) or its slot store < r was already visible to
+        // this sample (we keep the block). Sampling before reading
+        // limbo would let a just-pinned reader at `e < r` be missed.
+        let mut limbo = self.limbo.lock().unwrap();
+        if limbo.is_empty() {
+            return 0;
+        }
+        let safe = self.min_reader_epoch();
+        let before = limbo.len();
+        limbo.retain(|&(block, retire_epoch)| {
+            if retire_epoch <= safe {
+                let freed = alloc.free(block);
+                debug_assert!(freed.is_ok(), "reclaiming retired block failed: {freed:?}");
+                false
+            } else {
+                true
+            }
+        });
+        let freed = before - limbo.len();
+        self.reclaimed_total.fetch_add(freed as u64, Ordering::Relaxed);
+        freed
+    }
+
+    /// Block until the limbo list drains (readers keep pinning, so each
+    /// pass frees what has quiesced). Returns the number reclaimed.
+    ///
+    /// Livelock caveat: a registered reader that never pins again and is
+    /// never dropped stalls this forever — the cooperative contract in
+    /// the module docs.
+    pub fn synchronize<A: BlockAlloc + ?Sized>(&self, alloc: &A) -> usize {
+        let mut total = 0;
+        loop {
+            total += self.try_reclaim(alloc);
+            if self.limbo.lock().unwrap().is_empty() {
+                return total;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Blocks currently in limbo.
+    pub fn limbo_len(&self) -> usize {
+        self.limbo.lock().unwrap().len()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> EpochStats {
+        EpochStats {
+            epoch: self.current(),
+            readers: self.readers.lock().unwrap().len(),
+            retired: self.retired_total.load(Ordering::Relaxed),
+            reclaimed: self.reclaimed_total.load(Ordering::Relaxed),
+            limbo: self.limbo_len(),
+        }
+    }
+}
+
+impl Default for ArenaEpoch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for ArenaEpoch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "ArenaEpoch {{ epoch: {}, readers: {}, limbo: {} }}",
+            s.epoch, s.readers, s.limbo
+        )
+    }
+}
+
+/// One reader's registration with an [`ArenaEpoch`].
+///
+/// The slot holds the epoch its owner last pinned. Reclamation treats
+/// the owner as potentially holding translations obtained at that epoch
+/// until a newer one is pinned (or the slot goes [`OFFLINE`] /
+/// drops). Owned by [`crate::trees::TreeView`]; usable directly by any
+/// custom reader that wants the same guarantee.
+pub struct ReaderSlot<'e> {
+    epoch: &'e ArenaEpoch,
+    slot: Arc<AtomicU64>,
+}
+
+impl ReaderSlot<'_> {
+    /// Pin the current epoch: publish "I may hold translations obtained
+    /// at epoch `e`" *before* performing them. Returns `e` so the caller
+    /// can flush its caches when the value moved since its last pin —
+    /// the flush must happen before the caller dereferences anything,
+    /// which is what makes a slot value of `e` proof of quiescence for
+    /// blocks retired before `e`.
+    ///
+    /// Store-confirm loop: publishing `e` and then re-reading the
+    /// global closes the online-transition race. Without the confirm, a
+    /// reader coming back from [`OFFLINE`] could load epoch `e`, a
+    /// relocation could retire a block at `e+1` and a reclaimer sample
+    /// the slot while it still reads `OFFLINE` (the store not yet
+    /// visible) — freeing a block this reader is about to dereference
+    /// through a still-cached translation. With the confirm, a
+    /// successful pin at `e` means the store was in place before any
+    /// bump past `e`, so a reclaimer deciding the fate of a block
+    /// retired at `r > e` (it samples slots only after `r` is visible
+    /// in limbo, i.e. after `bump() -> r`) must observe this slot at
+    /// `e < r` and keep the block; and for `r <= e` the confirming
+    /// read synchronized with `bump() -> r`, so the caller sees the
+    /// patched pointers (and flushes stale cache state first).
+    #[inline]
+    pub fn pin(&self) -> u64 {
+        loop {
+            let e = self.epoch.global.load(Ordering::SeqCst);
+            self.slot.store(e, Ordering::SeqCst);
+            if self.epoch.global.load(Ordering::SeqCst) == e {
+                return e;
+            }
+        }
+    }
+
+    /// Go offline: reclamation stops waiting on this reader until its
+    /// next [`ReaderSlot::pin`]. Call between bursts of reads when the
+    /// reader idles with translations it promises not to use.
+    #[inline]
+    pub fn unpin(&self) {
+        self.slot.store(OFFLINE, Ordering::SeqCst);
+    }
+
+    /// The epoch this slot is registered with.
+    pub fn arena_epoch(&self) -> &ArenaEpoch {
+        self.epoch
+    }
+}
+
+impl Drop for ReaderSlot<'_> {
+    fn drop(&mut self) {
+        let mut readers = self.epoch.readers.lock().unwrap();
+        if let Some(i) = readers.iter().position(|s| Arc::ptr_eq(s, &self.slot)) {
+            readers.swap_remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+
+    #[test]
+    fn bump_and_current() {
+        let e = ArenaEpoch::new();
+        assert_eq!(e.current(), 0);
+        assert_eq!(e.bump(), 1);
+        assert_eq!(e.bump(), 2);
+        assert_eq!(e.current(), 2);
+    }
+
+    #[test]
+    fn reclaim_without_readers_is_immediate() {
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let b = a.alloc().unwrap();
+        let e = a.epoch();
+        let re = e.bump();
+        e.retire(b, re);
+        assert!(a.is_live(b), "retired blocks stay allocated");
+        assert_eq!(e.limbo_len(), 1);
+        assert_eq!(e.try_reclaim(&a), 1);
+        assert!(!a.is_live(b));
+        assert_eq!(e.stats().reclaimed, 1);
+    }
+
+    #[test]
+    fn pinned_reader_blocks_reclaim_until_it_advances() {
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let e = a.epoch();
+        let reader = e.register();
+        reader.pin(); // reading at epoch 0
+        let b = a.alloc().unwrap();
+        let re = e.bump(); // relocation happens at epoch 1
+        e.retire(b, re);
+        // The reader pinned epoch 0 < 1: it may still hold a translation
+        // into `b`, so nothing can be freed.
+        assert_eq!(e.try_reclaim(&a), 0);
+        assert!(a.is_live(b));
+        // Reader quiesces (pins the new epoch, flushing its caches
+        // first per the contract) -> the block is reclaimable.
+        reader.pin();
+        assert_eq!(e.try_reclaim(&a), 1);
+        assert!(!a.is_live(b));
+    }
+
+    #[test]
+    fn offline_and_dropped_readers_never_stall_reclaim() {
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let e = a.epoch();
+        let r1 = e.register();
+        r1.pin();
+        let r2 = e.register();
+        r2.pin();
+        let b = a.alloc().unwrap();
+        let re = e.bump();
+        e.retire(b, re);
+        assert_eq!(e.try_reclaim(&a), 0, "two stale readers");
+        r1.unpin(); // offline: ignored
+        assert_eq!(e.try_reclaim(&a), 0, "r2 still stale");
+        drop(r2); // deregistered
+        assert_eq!(e.try_reclaim(&a), 1);
+        assert_eq!(e.stats().readers, 1, "r1 still registered");
+    }
+
+    #[test]
+    fn reclaim_is_per_retire_epoch() {
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let e = a.epoch();
+        let r = e.register();
+        let b1 = a.alloc().unwrap();
+        e.retire(b1, e.bump());
+        r.pin(); // quiesced past b1's retirement...
+        let b2 = a.alloc().unwrap();
+        e.retire(b2, e.bump()); // ...but not b2's
+        assert_eq!(e.try_reclaim(&a), 1, "only b1 reclaimable");
+        assert!(!a.is_live(b1));
+        assert!(a.is_live(b2));
+        r.pin();
+        assert_eq!(e.synchronize(&a), 1);
+        assert_eq!(e.limbo_len(), 0);
+    }
+}

@@ -58,6 +58,10 @@ impl<'a, A: BlockAlloc> Relocator<'a, A> {
         self.alloc.read(block, 0, &mut buf)?;
         self.alloc.write(fresh, 0, &buf)?;
         self.alloc.free(block)?;
+        // Arena-wide shootdown: the freed block may back someone's
+        // cached translation (e.g. a cursor over a tree in this pool);
+        // bumping the pool epoch makes every cache revalidate.
+        self.alloc.epoch().bump();
         let mut fwd = self.forwards.lock().unwrap();
         // `fresh` is a live block again: any stale forwarding entry
         // keyed by its (recycled) id is dead — removing it keeps the
@@ -117,6 +121,44 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         unsafe { self.migrate_leaf_shared(leaf_idx) }
     }
 
+    /// [`TreeArray::migrate_leaf`] under **live concurrent readers**:
+    /// the displaced block is not freed but *retired* into the arena
+    /// epoch's limbo list ([`crate::pmem::ArenaEpoch`]), and returns to
+    /// the pool only after every registered reader has pinned the
+    /// post-move epoch — so a read in flight on another thread can
+    /// still dereference the old location safely (it holds the same
+    /// bytes, and cannot be recycled underneath the reader). Every
+    /// pointer patch is atomic, so concurrent walks never tear.
+    ///
+    /// The caller (or anyone) must eventually run
+    /// [`crate::pmem::ArenaEpoch::try_reclaim`] /
+    /// [`crate::pmem::ArenaEpoch::synchronize`] on the pool to drain
+    /// limbo, or displaced blocks accumulate until the allocator drops.
+    ///
+    /// # Safety
+    /// * No [`TreeArray::leaf_slice`]-style raw slice of the tree may be
+    ///   live across the call (slices cannot revalidate), on any thread.
+    /// * Concurrent access from other threads is allowed **only**
+    ///   through epoch-registered revalidating readers
+    ///   ([`crate::trees::TreeView`], or a custom reader following the
+    ///   [`crate::pmem::ReaderSlot`] pin protocol). Cursors and the
+    ///   direct `get`/`set` paths do not pin the epoch and must stay on
+    ///   this thread.
+    /// * Writers: at most one migration of this tree in flight, and no
+    ///   data writes to the tree during the move (readers would race
+    ///   them; the relocation copy would tear them).
+    pub unsafe fn migrate_leaf_concurrent(&self, leaf_idx: usize) -> Result<BlockId> {
+        if leaf_idx >= self.nleaves() {
+            return Err(Error::IndexOutOfBounds {
+                index: leaf_idx,
+                len: self.nleaves(),
+            });
+        }
+        // SAFETY: forwarded — the caller upholds the contract above,
+        // which is this fn's contract with `defer_free == true`.
+        unsafe { self.relocate_leaf_impl(leaf_idx, true) }
+    }
+
     /// [`TreeArray::migrate_leaf`] through `&self`: location metadata is
     /// interior-mutable so leaves can move *under live cursors* — the
     /// tree's generation counter is bumped and cursors/TLBs revalidate
@@ -140,8 +182,8 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             });
         }
         // SAFETY: forwarded verbatim — the caller upholds this fn's
-        // identical contract.
-        unsafe { self.relocate_leaf_impl(leaf_idx) }
+        // identical contract (immediate free: no concurrent readers).
+        unsafe { self.relocate_leaf_impl(leaf_idx, false) }
     }
 }
 
@@ -201,6 +243,59 @@ mod tests {
         // Naive and iterator paths both see the new locations.
         assert_eq!(t.get(300).unwrap(), 300);
         assert_eq!(t.iter().last().unwrap(), n as u32 - 1);
+    }
+
+    #[test]
+    fn relocator_bumps_arena_epoch_and_flushes_foreign_caches() {
+        // Cross-structure shootdown: a Relocator moving a block the
+        // tree does not own must still flush the tree's cursor caches
+        // (the cursor cannot know the moved block wasn't one of its
+        // translations). Generation counters alone would miss this —
+        // this is exactly what the arena epoch generalizes.
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let n = 256 * 4;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        let mut c = t.cursor();
+        assert_eq!(c.seek(10), data[10]); // leaf 0 cached + in TLB
+        let e0 = a.epoch().current();
+        let r = Relocator::new(&a);
+        let foreign = a.alloc().unwrap();
+        let moved = r.migrate(foreign).unwrap();
+        assert_eq!(a.epoch().current(), e0 + 1, "Relocator must bump the epoch");
+        assert_eq!(c.seek(10), data[10]);
+        assert!(
+            c.tlb_stats().invalidations >= 1,
+            "foreign move must flush the cursor TLB: {:?}",
+            c.tlb_stats()
+        );
+        a.free(moved).unwrap();
+    }
+
+    #[test]
+    fn migrate_leaf_concurrent_defers_the_free() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let n = 256 * 3;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i ^ 0xABCD).collect();
+        t.copy_from_slice(&data).unwrap();
+        let live = a.stats().allocated;
+        let g0 = t.generation();
+        let e0 = a.epoch().current();
+        // SAFETY: no raw slices, no concurrent access at all here.
+        let fresh = unsafe { t.migrate_leaf_concurrent(1) }.unwrap();
+        assert!(a.is_live(fresh));
+        assert_eq!(t.generation(), g0 + 1);
+        assert_eq!(a.epoch().current(), e0 + 1);
+        // Old block parked in limbo, still counted allocated.
+        assert_eq!(a.stats().allocated, live + 1, "displaced block must not be freed yet");
+        assert_eq!(a.epoch().limbo_len(), 1);
+        assert_eq!(t.to_vec(), data);
+        // No readers registered: reclaim drains immediately.
+        assert_eq!(a.epoch().synchronize(&a), 1);
+        assert_eq!(a.stats().allocated, live);
+        assert!(unsafe { t.migrate_leaf_concurrent(99) }.is_err(), "oob leaf");
     }
 
     #[test]

@@ -15,11 +15,17 @@
 //!   bitmaps with cross-shard stealing (lock-free hot path).
 //! * [`Region`] — a convenience view over a *logical* sequence of blocks
 //!   (what a large `malloc` becomes in this world).
+//! * [`ArenaEpoch`] — the pool's shared relocation epoch: one counter
+//!   bumped by every block move (tree migration, [`Relocator`],
+//!   [`SwapPool`]) that translation caches revalidate against, plus the
+//!   quiescent-state deferred reclamation concurrent readers need (see
+//!   [`epoch`]).
 
 pub mod alloc_trait;
 mod allocator;
 mod arena;
 mod block;
+pub mod epoch;
 pub mod migrate;
 pub mod protect;
 mod region;
@@ -29,6 +35,7 @@ pub mod swap;
 pub use alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
 pub use allocator::BlockAllocator;
 pub use block::BlockId;
+pub use epoch::{ArenaEpoch, EpochStats, ReaderSlot};
 pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;

@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::error::{Error, Result};
 use crate::pmem::alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
 use crate::pmem::arena::Arena;
+use crate::pmem::epoch::ArenaEpoch;
 use crate::pmem::BlockId;
 
 /// Monotonic thread token source for shard affinity.
@@ -92,6 +93,7 @@ pub struct ShardedAllocator {
     total_allocs: AtomicU64,
     total_frees: AtomicU64,
     failed_allocs: AtomicU64,
+    epoch: ArenaEpoch,
 }
 
 impl ShardedAllocator {
@@ -140,6 +142,7 @@ impl ShardedAllocator {
             total_allocs: AtomicU64::new(0),
             total_frees: AtomicU64::new(0),
             failed_allocs: AtomicU64::new(0),
+            epoch: ArenaEpoch::new(),
         })
     }
 
@@ -403,6 +406,10 @@ impl BlockAlloc for ShardedAllocator {
             c.cas_retries += s.cas_retries.load(Ordering::Relaxed);
         }
         c
+    }
+
+    fn epoch(&self) -> &ArenaEpoch {
+        &self.epoch
     }
 
     unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {

@@ -104,6 +104,9 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
         g.stats.resident_slots = g.live.len();
         drop(g);
         self.alloc.free(block)?;
+        // Eviction is a relocation (memory -> disk): any cached
+        // translation to `block` is dead, so shoot down arena-wide.
+        self.alloc.epoch().bump();
         Ok(SwapSlot(slot))
     }
 
@@ -125,6 +128,10 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
         }
         let fresh = self.alloc.alloc()?;
         self.alloc.write(fresh, 0, &buf)?;
+        // No epoch bump here: the relocation's shootdown happened at
+        // evict() (that is when the old translation died); `fresh` is a
+        // brand-new block no cache has ever seen, so faulting in cannot
+        // invalidate anything.
         Ok(fresh)
     }
 
@@ -152,6 +159,23 @@ mod tests {
         let mut out = [0u8; 10];
         a.read(nb, 10, &mut out).unwrap();
         assert_eq!(&out, b"hello swap");
+    }
+
+    #[test]
+    fn evict_bumps_the_arena_epoch_fault_does_not() {
+        let a = BlockAllocator::new(4096, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        let e0 = a.epoch().current();
+        let slot = swap.evict(b).unwrap();
+        assert_eq!(a.epoch().current(), e0 + 1, "evict must shoot down");
+        let nb = swap.fault(slot).unwrap();
+        assert_eq!(
+            a.epoch().current(),
+            e0 + 1,
+            "fault allocates a never-cached block; bumping would only cause spurious flushes"
+        );
+        a.free(nb).unwrap();
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct Cursor<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     pos: usize,
     /// Tree generation the cached state is valid for.
     gen: u64,
+    /// Arena epoch last observed: moves *anywhere in the pool*
+    /// ([`crate::pmem::Relocator`], [`crate::pmem::SwapPool`], foreign
+    /// trees) flush the whole cache, not just this tree's generation.
+    epoch_seen: u64,
     /// Second-level leaf cache (misses fall through to a full walk).
     tlb: LeafTlb,
     /// Leaf-cache statistics (hits = accesses served without a walk,
@@ -52,17 +56,40 @@ impl<'t, 'a, T: Pod, A: BlockAlloc> Cursor<'t, 'a, T, A> {
             leaf_end: 0,
             pos: 0,
             gen: tree.generation(),
+            epoch_seen: tree.alloc.epoch().current(),
             tlb,
             hits: 0,
             walks: 0,
         }
     }
 
-    /// Drop cached state when the tree's generation moved (a leaf was
-    /// relocated since we filled it) — the shootdown check. TLB entries
-    /// carry their own generation stamps and self-invalidate on lookup.
+    /// Drop cached state when translation state moved under us — the
+    /// shootdown check, two tiers:
+    ///
+    /// * **Arena epoch** (any relocation in the pool, including other
+    ///   trees and raw [`crate::pmem::Relocator`] /
+    ///   [`crate::pmem::SwapPool`] moves): flush everything — the
+    ///   cursor cannot tell whether the moved block backs one of its
+    ///   entries, so it assumes the worst, like a hardware TLB taking a
+    ///   broadcast shootdown.
+    /// * **Tree generation** (this tree's own leaves moved): drop the
+    ///   current leaf; TLB entries carry their own generation stamps
+    ///   and self-invalidate on lookup.
+    ///
+    /// Unlike [`crate::trees::TreeView`], a cursor does not register
+    /// with the epoch: it is a same-thread companion, safe only under
+    /// the immediate-free relocation contract
+    /// ([`crate::trees::TreeArray::migrate_leaf_shared`]).
     #[inline]
     fn revalidate(&mut self) {
+        let e = self.tree.alloc.epoch().current();
+        if e != self.epoch_seen {
+            self.epoch_seen = e;
+            self.tlb.flush();
+            self.leaf = std::ptr::null();
+            self.leaf_base = 0;
+            self.leaf_end = 0;
+        }
         let g = self.tree.generation();
         if g != self.gen {
             self.gen = g;

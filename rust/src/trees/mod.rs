@@ -18,6 +18,11 @@
 //! * [`LeafTlb`] — the set-associative, LRU software leaf-TLB with
 //!   generation-based shootdown (this is the *real* software TLB; the
 //!   simulator's hardware-TLB model lives in [`crate::memsim`]).
+//! * [`TreeView`] — the concurrent read side: a `Send` shared view with
+//!   a *per-thread* leaf-TLB and arena-epoch registration, so N worker
+//!   threads read one tree with no lock on the lookup path, safely
+//!   coexisting with [`TreeArray::migrate_leaf_concurrent`]'s
+//!   epoch-deferred relocation.
 //! * [`TreeGeometry`] / [`TreeTraceModel`] — pure address arithmetic for
 //!   the memsim experiments, so 64 GB arrays can be *modeled* without
 //!   being materialized (§4.3's scales).
@@ -26,8 +31,10 @@ mod cursor;
 mod layout;
 mod tlb;
 mod tree_array;
+mod view;
 
 pub use cursor::Cursor;
 pub use layout::{TreeGeometry, TreeTraceModel};
 pub use tlb::{LeafTlb, TlbStats};
 pub use tree_array::{Pod, TreeArray};
+pub use view::TreeView;

@@ -93,6 +93,15 @@ pub struct LeafTlb {
     stats: TlbStats,
 }
 
+// SAFETY: a LeafTlb is plain data — cached `(leaf, pointer, span, gen)`
+// tuples and counters. Moving it between threads moves bytes;
+// *dereferencing* a cached pointer is already unsafe and governed by
+// the owner's protocol ([`crate::trees::Cursor`] same-thread,
+// [`crate::trees::TreeView`] epoch-pinned). Without this, per-thread
+// TLBs could not ride inside `Send` views or sit behind a `Mutex` for
+// the shared-TLB ablation strawman.
+unsafe impl Send for LeafTlb {}
+
 impl LeafTlb {
     /// Default total entries for cursors ([`crate::trees::TreeArray::cursor`]).
     pub const DEFAULT_ENTRIES: usize = 64;
@@ -135,6 +144,12 @@ impl LeafTlb {
     /// Total entry slots.
     pub fn capacity(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Associativity (0 when disabled). `(capacity, ways)` reproduces
+    /// this TLB's geometry through [`LeafTlb::new`].
+    pub fn ways(&self) -> usize {
+        self.ways
     }
 
     /// Look up leaf `leaf` under the current tree generation `gen`.

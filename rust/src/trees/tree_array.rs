@@ -7,6 +7,7 @@ use crate::error::{Error, Result};
 use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::layout::TreeGeometry;
 use crate::trees::tlb::LeafTlb;
+use crate::trees::view::TreeView;
 use crate::trees::Cursor;
 
 /// Plain-old-data element types storable in tree leaves.
@@ -133,8 +134,10 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
                 let lo = pi * geo.fanout;
                 let hi = ((pi + 1) * geo.fanout).min(level.len());
                 for (slot, child) in level[lo..hi].iter().enumerate() {
+                    // Native-endian: child slots are later read/patched
+                    // as `AtomicU64`s (see `child_at`).
                     let id64 = child.0 as u64;
-                    if let Err(e) = alloc.write(*parent, slot * 8, &id64.to_le_bytes()) {
+                    if let Err(e) = alloc.write(*parent, slot * 8, &id64.to_ne_bytes()) {
                         for b in &all {
                             let _ = alloc.free(*b);
                         }
@@ -195,20 +198,31 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         self.generation.load(Ordering::Acquire)
     }
 
+    /// Read the 8-byte child pointer at `slot` of interior node `node`.
+    ///
+    /// Child slots are read and written as `AtomicU64`s (blocks are
+    /// block-size-aligned and slots are 8-byte offsets, so the cast is
+    /// aligned): relocation patches a slot with a `Release` store while
+    /// concurrent readers walk with `Acquire` loads, making the walk
+    /// data-race-free under [`TreeArray::migrate_leaf_concurrent`].
+    #[inline]
+    fn child_at(&self, node: BlockId, slot: usize) -> BlockId {
+        // SAFETY: node is one of our live blocks; slot < fanout; the
+        // slot address is 8-aligned per above.
+        let id = unsafe {
+            let p = self.alloc.block_ptr(node).add(slot * 8) as *const AtomicU64;
+            (*p).load(Ordering::Acquire)
+        };
+        BlockId(id as u32)
+    }
+
     /// Walk from the root to the leaf holding element `i`.
     /// This is the *naive* access of Table 2: `depth` dependent loads.
     #[inline]
     fn walk_to_leaf(&self, i: usize) -> BlockId {
         let mut node = self.root_block();
         for level in 0..self.geo.depth - 1 {
-            let slot = self.geo.child_slot(level, i);
-            let mut buf = [0u8; 8];
-            // SAFETY: node is one of our live blocks; slot < fanout.
-            unsafe {
-                let p = self.alloc.block_ptr(node).add(slot * 8);
-                std::ptr::copy_nonoverlapping(p, buf.as_mut_ptr(), 8);
-            }
-            node = BlockId(u64::from_le_bytes(buf) as u32);
+            node = self.child_at(node, self.geo.child_slot(level, i));
         }
         node
     }
@@ -356,7 +370,23 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         self.geo.nleaves()
     }
 
-    /// Bulk-load from a slice (leaf-at-a-time memcpy).
+    /// Visit every leaf in order as one contiguous slice: `visit(leaf_idx,
+    /// elems)`. One translation and one slice per leaf — the bulk-access
+    /// primitive `to_vec`, `copy_from_slice`, and the workloads' checksum
+    /// drains are built on, so whole-array traffic never pays a
+    /// translation (or a bounds check) per element.
+    ///
+    /// The slice borrows the tree: the [`TreeArray::leaf_slice`]
+    /// relocation caveat applies for the duration of each callback.
+    pub fn for_each_leaf<F: FnMut(usize, &[T])>(&self, mut visit: F) {
+        for leaf in 0..self.nleaves() {
+            let (p, span) = self.leaf_ptr(leaf);
+            // SAFETY: p valid for span elements under the &self borrow.
+            visit(leaf, unsafe { std::slice::from_raw_parts(p as *const T, span) });
+        }
+    }
+
+    /// Bulk-load from a slice: one translation + one memcpy per leaf.
     pub fn copy_from_slice(&mut self, src: &[T]) -> Result<()> {
         if src.len() != self.geo.len {
             return Err(Error::IndexOutOfBounds {
@@ -366,19 +396,20 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         }
         let cap = self.geo.leaf_cap;
         for leaf in 0..self.nleaves() {
-            let lo = leaf * cap;
-            let hi = (lo + cap).min(src.len());
-            self.leaf_slice_mut(leaf)[..hi - lo].copy_from_slice(&src[lo..hi]);
+            let (p, span) = self.leaf_ptr(leaf);
+            // SAFETY: p valid for span elements (&mut self: exclusive);
+            // src covers [leaf*cap, leaf*cap+span) by the length check.
+            unsafe { std::ptr::copy_nonoverlapping(src.as_ptr().add(leaf * cap), p, span) };
         }
         Ok(())
     }
 
-    /// Copy out to a `Vec` (for verification against contiguous baselines).
+    /// Copy out to a `Vec` (for verification against contiguous
+    /// baselines): one translation + one memcpy per leaf via
+    /// [`TreeArray::for_each_leaf`].
     pub fn to_vec(&self) -> Vec<T> {
         let mut out = Vec::with_capacity(self.geo.len);
-        for leaf in 0..self.nleaves() {
-            out.extend_from_slice(self.leaf_slice(leaf));
-        }
+        self.for_each_leaf(|_, elems| out.extend_from_slice(elems));
         out
     }
 
@@ -392,7 +423,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     // GUPS/hashprobe variants are built on.
 
     /// Bounds-check a batch of indices up front (all-or-nothing).
-    fn check_batch(&self, idxs: &[usize]) -> Result<()> {
+    pub(crate) fn check_batch(&self, idxs: &[usize]) -> Result<()> {
         for &i in idxs {
             if i >= self.geo.len {
                 return Err(Error::IndexOutOfBounds {
@@ -408,7 +439,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// leaf count is comparable to the batch, comparison sort otherwise.
     /// Stability preserves per-index program order, so read-modify-write
     /// batches keep per-slot semantics.
-    fn leaf_order(&self, idxs: &[usize]) -> Vec<u32> {
+    pub(crate) fn leaf_order(&self, idxs: &[usize]) -> Vec<u32> {
         let shift = self.geo.leaf_cap.trailing_zeros();
         let nl = self.nleaves();
         let mut order = vec![0u32; idxs.len()];
@@ -530,29 +561,43 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// precisely so a leaf can move under live cursors — they revalidate
     /// through the generation bump (bumped *after* all pointers are
     /// patched, so a reader observing the new generation observes a
-    /// consistent tree). Public callers reach this through the safe
-    /// `&mut self` [`TreeArray::migrate_leaf`] or the `unsafe`
-    /// [`TreeArray::migrate_leaf_shared`].
+    /// consistent tree). Every pointer involved is patched atomically
+    /// (parent slot `AtomicU64`, root/blocks/flat-table atomics), so a
+    /// concurrent reader observes either the old or the new location,
+    /// never a torn one. The arena epoch is bumped after the generation
+    /// so caches over *other* trees in the pool revalidate too.
+    ///
+    /// Disposal of the displaced block:
+    /// * `defer_free == false` — freed immediately. Requires that no
+    ///   other thread accesses the tree during the move (the
+    ///   [`TreeArray::migrate_leaf_shared`] contract): an in-flight
+    ///   reader could otherwise still dereference the freed, possibly
+    ///   recycled block.
+    /// * `defer_free == true` — retired into the arena epoch's limbo
+    ///   list; the pool recycles it only after every registered reader
+    ///   has pinned the post-move epoch
+    ///   ([`crate::pmem::ArenaEpoch::try_reclaim`]). This is what makes
+    ///   [`TreeArray::migrate_leaf_concurrent`] safe under live
+    ///   [`crate::trees::TreeView`] readers.
+    ///
+    /// Public callers reach this through the safe `&mut self`
+    /// [`TreeArray::migrate_leaf`] or the `unsafe`
+    /// [`TreeArray::migrate_leaf_shared`] /
+    /// [`TreeArray::migrate_leaf_concurrent`].
     ///
     /// # Safety
-    /// Same contract as [`TreeArray::migrate_leaf_shared`]: no live leaf
-    /// slice of the tree across the call, and no concurrent access from
-    /// other threads.
-    pub(crate) unsafe fn relocate_leaf_impl(&self, leaf_idx: usize) -> Result<BlockId> {
+    /// No live leaf slice of the tree across the call; concurrent access
+    /// from other threads only as permitted by the chosen disposal mode
+    /// above; at most one relocation of this tree in flight at a time.
+    pub(crate) unsafe fn relocate_leaf_impl(&self, leaf_idx: usize, defer_free: bool) -> Result<BlockId> {
         let first_elem = leaf_idx * self.geo.leaf_cap;
         // Walk down recording the parent slot that names the leaf.
         let mut node = self.root_block();
         let mut parent: Option<(BlockId, usize)> = None;
         for level in 0..self.geo.depth - 1 {
             let slot = self.geo.child_slot(level, first_elem);
-            let mut buf = [0u8; 8];
-            // SAFETY: node is one of our live blocks; slot < fanout.
-            unsafe {
-                let p = self.alloc.block_ptr(node).add(slot * 8);
-                std::ptr::copy_nonoverlapping(p, buf.as_mut_ptr(), 8);
-            }
             parent = Some((node, slot));
-            node = BlockId(u64::from_le_bytes(buf) as u32);
+            node = self.child_at(node, slot);
         }
         let old = node;
         debug_assert_eq!(
@@ -562,38 +607,56 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         );
         let fresh = self.alloc.alloc()?;
         let bs = self.alloc.block_size();
-        // SAFETY: both blocks live and distinct; full-block copy.
+        // SAFETY: both blocks live and distinct; full-block copy. A
+        // concurrent reader may read `old` at the same time (read/read),
+        // and `fresh` is unpublished until the pointer patches below.
         unsafe {
             std::ptr::copy_nonoverlapping(self.alloc.block_ptr(old), self.alloc.block_ptr(fresh), bs);
         }
         match parent {
-            Some((p, slot)) => {
-                if let Err(e) = self.alloc.write(p, slot * 8, &(fresh.0 as u64).to_le_bytes()) {
-                    // Nothing observed `fresh` yet: free it so a failed
-                    // relocation is a no-op (all-or-nothing, like `new`).
-                    let _ = self.alloc.free(fresh);
-                    return Err(e);
-                }
-            }
+            // SAFETY: p is a live interior block, slot < fanout, and the
+            // slot address is 8-aligned (see `child_at`).
+            Some((p, slot)) => unsafe {
+                let sp = self.alloc.block_ptr(p).add(slot * 8) as *const AtomicU64;
+                (*sp).store(fresh.0 as u64, Ordering::Release);
+            },
             None => self.root.store(fresh.0, Ordering::Release), // depth-1: the leaf is the root
         }
         // Leaves-first invariant: leaf `leaf_idx` lives at blocks[leaf_idx],
         // so the bookkeeping patch is one store (the old code scanned the
         // whole block list).
         self.blocks[leaf_idx].store(fresh.0, Ordering::Release);
-        // Keep the flat table (if built) precise — O(1) shootdown.
-        if let Some(tbl) = self.flat.get() {
+        // Keep the flat table precise — O(1) shootdown. `get_or_init`
+        // (not `get`) closes the build/patch race: if a reader is
+        // concurrently building the table from pre-patch `blocks`
+        // values, either its build wins and this store overwrites the
+        // stale entry, or this thread's build wins (already patched —
+        // `blocks[leaf_idx]` was stored above). Either way the table
+        // ends precise.
+        if self.flat_on.load(Ordering::Relaxed) {
+            let tbl = self.flat.get_or_init(|| self.build_flat_table());
             // SAFETY: fresh is live and ours.
             tbl[leaf_idx].store(unsafe { self.alloc.block_ptr(fresh) }, Ordering::Release);
         }
-        // Publish the move: caches revalidate when they see the bump.
+        // Publish the move: same-tree caches revalidate on the
+        // generation, then every cache in the arena revalidates on the
+        // epoch (bumped second, so observing the new epoch implies
+        // observing the new generation).
         self.generation.fetch_add(1, Ordering::Release);
-        // The move is committed (pointers patched, generation bumped);
-        // surfacing a free failure now would make a *completed*
-        // migration look like a no-op. `old` is live by construction,
-        // so free cannot fail for either shipped allocator anyway.
-        let freed = self.alloc.free(old);
-        debug_assert!(freed.is_ok(), "freeing the displaced leaf failed: {freed:?}");
+        let retire_epoch = self.alloc.epoch().bump();
+        if defer_free {
+            // Concurrent readers may still hold the old translation:
+            // park the block in limbo until they quiesce.
+            self.alloc.epoch().retire(old, retire_epoch);
+        } else {
+            // The move is committed (pointers patched, counters bumped);
+            // surfacing a free failure now would make a *completed*
+            // migration look like a no-op. `old` is live by
+            // construction, so free cannot fail for either shipped
+            // allocator anyway.
+            let freed = self.alloc.free(old);
+            debug_assert!(freed.is_ok(), "freeing the displaced leaf failed: {freed:?}");
+        }
         Ok(fresh)
     }
 
@@ -614,6 +677,28 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// the TLB, reproducing the bare single-leaf Figure 2 cursor.
     pub fn cursor_with_tlb(&self, entries: usize, ways: usize) -> Cursor<'_, 'a, T, A> {
         Cursor::with_tlb(self, LeafTlb::new(entries, ways))
+    }
+
+    /// A shared read view with its own leaf-TLB and epoch registration
+    /// (default TLB geometry). Views are `Send` and independent: spawn
+    /// one per worker thread for concurrent reads over one tree — no
+    /// shared mutable TLB, no lock on the lookup path. See
+    /// [`crate::trees::TreeView`].
+    pub fn view(&self) -> TreeView<'_, 'a, T, A>
+    where
+        T: Sync,
+    {
+        TreeView::new(self, LeafTlb::default_for_cursor())
+    }
+
+    /// A shared read view with an explicit TLB geometry (`entries == 0`
+    /// disables the TLB: every access re-translates, the re-walk
+    /// baseline of the concurrency ablation).
+    pub fn view_with_tlb(&self, entries: usize, ways: usize) -> TreeView<'_, 'a, T, A>
+    where
+        T: Sync,
+    {
+        TreeView::new(self, LeafTlb::new(entries, ways))
     }
 }
 

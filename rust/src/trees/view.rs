@@ -1,0 +1,423 @@
+//! Concurrent read-side translation: shared tree views with per-thread
+//! leaf-TLBs.
+//!
+//! PR 2 made *one* cursor fast; this module makes the whole machine
+//! fast. A [`TreeView`] is a `Send` read handle over a shared
+//! [`TreeArray`]: many views — one per worker thread — read one tree
+//! concurrently, and each keeps its **own** [`LeafTlb`] hot set
+//! (llfree-rs's CPU-local-state-over-shared-atomics idiom applied to
+//! translation). There is no shared mutable TLB and no lock anywhere on
+//! the lookup path; the only shared state a lookup touches is the
+//! tree's atomic translation metadata (root / flat leaf table /
+//! generation) and the arena epoch, all read-only in steady state.
+//!
+//! # Safety protocol (why concurrent reads + relocation are sound)
+//!
+//! Three layers, each handling one hazard:
+//!
+//! 1. **Torn translation** — every pointer relocation patches (interior
+//!    child slots, the root, the flat leaf table) is an atomic 8-byte
+//!    store; views walk with `Acquire` loads. A reader sees the old or
+//!    the new location, never a mix, and the copy into the new block
+//!    happens-before its publication.
+//! 2. **Stale cached translation** — views stamp TLB entries with the
+//!    tree generation and snapshot the arena epoch
+//!    ([`crate::pmem::ArenaEpoch`]); every access pins the epoch first
+//!    and flushes the TLB when it moved (arena-wide shootdown: a move
+//!    in *any* structure of the pool invalidates every view's cache).
+//! 3. **Use-after-free of the displaced block** — checking counters "on
+//!    the next access" cannot protect a read already in flight, so the
+//!    view is a registered epoch reader: the pin also publishes "I may
+//!    hold translations from epoch `e`", and
+//!    [`TreeArray::migrate_leaf_concurrent`] retires displaced blocks
+//!    into limbo instead of freeing them until every registered reader
+//!    has pinned past the move. A view's translation therefore always
+//!    points at a block that is either current or retired-but-unfreed —
+//!    and both hold identical bytes (the copy precedes publication).
+//!
+//! What stays on the caller: views are **read-only** — data writes
+//! require `&mut TreeArray`, which the borrow checker rules out while
+//! any view is alive. Relocation under live views must go through
+//! [`TreeArray::migrate_leaf_concurrent`]; the immediate-free forms
+//! ([`TreeArray::migrate_leaf`] / [`TreeArray::migrate_leaf_shared`])
+//! keep their no-concurrent-access contract.
+
+use crate::error::{Error, Result};
+use crate::pmem::epoch::ReaderSlot;
+use crate::pmem::{BlockAlloc, BlockAllocator};
+use crate::trees::tlb::{LeafTlb, TlbStats};
+use crate::trees::tree_array::{Pod, TreeArray};
+
+/// A `Send` shared read view over a [`TreeArray`], with a private
+/// leaf-TLB and an arena-epoch registration. Create one per worker via
+/// [`TreeArray::view`] (or `clone` an existing one); see the module
+/// docs for the concurrency contract.
+pub struct TreeView<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
+    tree: &'t TreeArray<'a, T, A>,
+    /// This view's private translation cache — never shared, never
+    /// locked.
+    tlb: LeafTlb,
+    /// Tree generation TLB entries are stamped against.
+    gen: u64,
+    /// Arena epoch last observed; the TLB flushes when it moves.
+    epoch_seen: u64,
+    /// Registration with the arena epoch (pinned on every access).
+    slot: ReaderSlot<'a>,
+    /// Full translations performed (TLB misses that walked/indexed).
+    walks: u64,
+}
+
+// SAFETY: a TreeView is a read-only handle. Its raw pointers (inside
+// the LeafTlb) point into the allocator's arena, which outlives 'a and
+// is never unmapped while the allocator exists; dereferences happen
+// only on the owning thread after the epoch pin + generation check
+// described in the module docs, and blocks those pointers name are kept
+// allocated (limbo) until this view quiesces. The remaining fields are
+// `&TreeArray` (Sync for T: Sync — all interior mutability is atomic),
+// a ReaderSlot (Arc + &ArenaEpoch, both thread-safe), and counters.
+unsafe impl<T: Pod + Sync, A: BlockAlloc> Send for TreeView<'_, '_, T, A> {}
+
+impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
+    pub(crate) fn new(tree: &'t TreeArray<'a, T, A>, tlb: LeafTlb) -> Self {
+        let slot = tree.alloc.epoch().register();
+        let epoch_seen = slot.pin();
+        TreeView {
+            tree,
+            tlb,
+            gen: tree.generation(),
+            epoch_seen,
+            slot,
+            walks: 0,
+        }
+    }
+
+    /// Element count of the underlying tree.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    /// True when the underlying tree holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    /// Leaf blocks of the underlying tree.
+    #[inline]
+    pub fn nleaves(&self) -> usize {
+        self.tree.nleaves()
+    }
+
+    /// Pin the arena epoch for the accesses that follow (hazard 3 in
+    /// the module docs) and run the shootdown checks (hazard 2): flush
+    /// the TLB wholesale when the epoch moved, refresh the generation
+    /// stamp entries validate against.
+    ///
+    /// Must run before every translation batch; everything dereferenced
+    /// until the next pin is covered by this pin's epoch.
+    #[inline]
+    fn pin(&mut self) {
+        let e = self.slot.pin();
+        if e != self.epoch_seen {
+            self.epoch_seen = e;
+            self.tlb.flush();
+        }
+        // Entries self-invalidate on generation mismatch; track the
+        // current value for lookups/inserts. (Relocation bumps the
+        // generation before the epoch, so a fresh epoch implies a fresh
+        // generation here.)
+        self.gen = self.tree.generation();
+    }
+
+    /// Translate `leaf_idx` through this view's TLB; miss falls through
+    /// to the tree's active translation mode (flat table or walk).
+    #[inline]
+    fn leaf_translate(&mut self, leaf_idx: usize) -> (*const T, usize) {
+        if let Some((p, span)) = self.tlb.lookup(leaf_idx, self.gen) {
+            return (p as *const T, span);
+        }
+        let (p, span) = self.tree.leaf_ptr(leaf_idx);
+        self.walks += 1;
+        self.tlb.insert(leaf_idx, self.gen, p as *mut u8, span);
+        (p as *const T, span)
+    }
+
+    /// Read element `i` under the current pin.
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    unsafe fn read_pinned(&mut self, i: usize) -> T {
+        let shift = self.tree.geo.leaf_cap.trailing_zeros();
+        let (p, _) = self.leaf_translate(i >> shift);
+        // SAFETY: aligned per the Pod contract; in-bounds per caller.
+        unsafe { p.add(i & (self.tree.geo.leaf_cap - 1)).read() }
+    }
+
+    /// Read element `i` (bounds-checked).
+    pub fn get(&mut self, i: usize) -> Result<T> {
+        if i >= self.len() {
+            return Err(Error::IndexOutOfBounds {
+                index: i,
+                len: self.len(),
+            });
+        }
+        // SAFETY: bounds checked.
+        Ok(unsafe { self.get_unchecked(i) })
+    }
+
+    /// Read element `i` without bounds checking.
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    pub unsafe fn get_unchecked(&mut self, i: usize) -> T {
+        self.pin();
+        // SAFETY: caller guarantees i < len.
+        unsafe { self.read_pinned(i) }
+    }
+
+    /// Read many elements (`out[k]` = element `idxs[k]`), pinned once
+    /// and grouped by leaf so each distinct leaf run costs one TLB
+    /// probe, exactly like [`TreeArray::get_batch`].
+    pub fn get_batch(&mut self, idxs: &[usize]) -> Result<Vec<T>> {
+        self.tree.check_batch(idxs)?;
+        self.pin();
+        let mut out = vec![T::default(); idxs.len()];
+        let order = self.tree.leaf_order(idxs);
+        let shift = self.tree.geo.leaf_cap.trailing_zeros();
+        let mask = self.tree.geo.leaf_cap - 1;
+        let mut k = 0;
+        while k < order.len() {
+            let leaf = idxs[order[k] as usize] >> shift;
+            let (base, _) = self.leaf_translate(leaf);
+            while k < order.len() && idxs[order[k] as usize] >> shift == leaf {
+                let pos = order[k] as usize;
+                // SAFETY: bounds checked above; offset < leaf span.
+                out[pos] = unsafe { base.add(idxs[pos] & mask).read() };
+                k += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Visit `idxs` grouped into per-leaf runs (the read-side analogue
+    /// of [`TreeArray::for_each_leaf_run`]), translated through this
+    /// view's TLB under one pin. The leaf slice is valid only inside
+    /// the callback — do not stash it.
+    pub fn for_each_leaf_run<F>(&mut self, idxs: &[usize], mut visit: F) -> Result<()>
+    where
+        F: FnMut(usize, &[T], &[u32]),
+    {
+        self.tree.check_batch(idxs)?;
+        self.pin();
+        let order = self.tree.leaf_order(idxs);
+        let shift = self.tree.geo.leaf_cap.trailing_zeros();
+        let mut k = 0;
+        while k < order.len() {
+            let leaf = idxs[order[k] as usize] >> shift;
+            let mut e = k + 1;
+            while e < order.len() && idxs[order[e] as usize] >> shift == leaf {
+                e += 1;
+            }
+            let (p, span) = self.leaf_translate(leaf);
+            // SAFETY: p valid for span elements; the block stays
+            // allocated for this pin (module docs, hazard 3).
+            let elems = unsafe { std::slice::from_raw_parts(p, span) };
+            visit(leaf, elems, &order[k..e]);
+            k = e;
+        }
+        Ok(())
+    }
+
+    /// Copy the whole array out, one translation + memcpy per leaf.
+    pub fn to_vec(&mut self) -> Vec<T> {
+        self.pin();
+        let mut out = Vec::with_capacity(self.len());
+        for leaf in 0..self.nleaves() {
+            let (p, span) = self.leaf_translate(leaf);
+            // SAFETY: p valid for span elements under this pin.
+            out.extend_from_slice(unsafe { std::slice::from_raw_parts(p, span) });
+        }
+        out
+    }
+
+    /// Go offline: reclamation stops waiting on this view until its
+    /// next access. Call when a worker idles between read bursts.
+    pub fn park(&self) {
+        self.slot.unpin();
+    }
+
+    /// This view's private TLB counters.
+    pub fn tlb_stats(&self) -> TlbStats {
+        self.tlb.stats()
+    }
+
+    /// Full translations (TLB misses) this view performed.
+    pub fn walks(&self) -> u64 {
+        self.walks
+    }
+}
+
+/// Cloning spawns a *fresh* view of the same tree: same TLB geometry
+/// but an empty cache, zeroed counters, and its own epoch registration
+/// — the way to fan one view out across scoped worker threads.
+impl<T: Pod + Sync, A: BlockAlloc> Clone for TreeView<'_, '_, T, A> {
+    fn clone(&self) -> Self {
+        TreeView::new(self.tree, LeafTlb::new(self.tlb.capacity(), self.tlb.ways()))
+    }
+}
+
+impl<T: Pod, A: BlockAlloc> std::fmt::Debug for TreeView<'_, '_, T, A> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TreeView {{ len: {}, gen: {}, epoch: {}, walks: {}, tlb: {:?} }}",
+            self.tree.len(),
+            self.gen,
+            self.epoch_seen,
+            self.walks,
+            self.tlb.stats()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{BlockAllocator, ShardedAllocator};
+    use crate::testutil::Rng;
+
+    fn filled<A: BlockAlloc>(a: &A, n: usize) -> (TreeArray<'_, u32, A>, Vec<u32>) {
+        let mut t: TreeArray<u32, A> = TreeArray::new(a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        t.copy_from_slice(&data).unwrap();
+        (t, data)
+    }
+
+    #[test]
+    fn view_reads_match_gets() {
+        let a = BlockAllocator::new(1024, 1 << 12).unwrap();
+        let (t, data) = filled(&a, 256 * 10 + 7);
+        let mut v = t.view();
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let i = rng.range(0, data.len());
+            assert_eq!(v.get(i).unwrap(), data[i]);
+        }
+        assert_eq!(v.to_vec(), data);
+        assert!(v.get(data.len()).is_err());
+    }
+
+    #[test]
+    fn view_tlb_serves_revisits() {
+        let a = BlockAllocator::new(1024, 1 << 12).unwrap();
+        let (t, data) = filled(&a, 256 * 4);
+        let mut v = t.view();
+        assert_eq!(v.get(10).unwrap(), data[10]); // walk leaf 0
+        assert_eq!(v.get(300).unwrap(), data[300]); // walk leaf 1
+        assert_eq!(v.get(20).unwrap(), data[20]); // leaf 0: TLB hit
+        assert_eq!(v.walks(), 2, "revisit must not re-translate");
+        assert_eq!(v.tlb_stats().hits, 1);
+    }
+
+    #[test]
+    fn view_get_batch_matches_tree_batch() {
+        let a = ShardedAllocator::with_shards(1024, 1 << 12, 4).unwrap();
+        let (t, data) = filled(&a, 256 * 20 + 3);
+        let mut rng = Rng::new(9);
+        let idxs: Vec<usize> = (0..2000).map(|_| rng.range(0, data.len())).collect();
+        let mut v = t.view();
+        let got = v.get_batch(&idxs).unwrap();
+        for (k, &i) in idxs.iter().enumerate() {
+            assert_eq!(got[k], data[i]);
+        }
+        assert!(v.get_batch(&[0, data.len()]).is_err());
+    }
+
+    #[test]
+    fn view_revalidates_after_concurrent_migration() {
+        // Single-threaded shape of the shootdown: view caches leaf 0,
+        // the leaf migrates (deferred free), the next read must flush
+        // and re-translate — and the displaced block must stay in limbo
+        // until this view quiesces.
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 4);
+        let mut v = t.view();
+        assert_eq!(v.get(10).unwrap(), data[10]);
+        let walks0 = v.walks();
+        // SAFETY: readers are epoch-registered views; no raw slices.
+        unsafe { t.migrate_leaf_concurrent(0) }.unwrap();
+        assert_eq!(a.epoch().limbo_len(), 1, "displaced block must be in limbo");
+        assert_eq!(a.epoch().try_reclaim(&a), 0, "view has not quiesced yet");
+        assert_eq!(v.get(10).unwrap(), data[10], "stale read after migration");
+        assert!(v.walks() > walks0, "flush must force a fresh translation");
+        assert!(v.tlb_stats().invalidations >= 1);
+        // The read pinned the post-move epoch: now the block reclaims.
+        assert_eq!(a.epoch().try_reclaim(&a), 1);
+    }
+
+    #[test]
+    fn dropping_views_unblocks_reclaim() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 2);
+        let v2 = {
+            let mut v1 = t.view();
+            let mut v2 = v1.clone();
+            assert_eq!(v1.get(1).unwrap(), data[1]);
+            assert_eq!(v2.get(1).unwrap(), data[1]);
+            // SAFETY: readers are epoch-registered views.
+            unsafe { t.migrate_leaf_concurrent(0) }.unwrap();
+            assert_eq!(a.epoch().try_reclaim(&a), 0, "both views stale");
+            v2
+        }; // v1 dropped (deregistered)
+        assert_eq!(a.epoch().try_reclaim(&a), 0, "v2 still stale");
+        drop(v2);
+        assert_eq!(a.epoch().try_reclaim(&a), 1, "no readers left");
+        assert_eq!(t.to_vec(), data);
+    }
+
+    #[test]
+    fn parked_view_does_not_stall_reclaim() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 2);
+        let mut v = t.view();
+        assert_eq!(v.get(0).unwrap(), data[0]);
+        v.park();
+        // SAFETY: readers are epoch-registered views.
+        unsafe { t.migrate_leaf_concurrent(0) }.unwrap();
+        assert_eq!(a.epoch().try_reclaim(&a), 1, "parked view is offline");
+        // Waking up revalidates as usual.
+        assert_eq!(v.get(0).unwrap(), data[0]);
+    }
+
+    #[test]
+    fn scoped_threads_share_one_tree() {
+        // The north-star shape: N threads, one tree, per-thread TLBs.
+        let a = ShardedAllocator::with_shards(1024, 1 << 12, 4).unwrap();
+        let (t, data) = filled(&a, 256 * 16);
+        t.enable_flat_table();
+        let data = &data;
+        let t = &t;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|tid| {
+                    s.spawn(move || {
+                        let mut v = t.view();
+                        let mut rng = Rng::new(tid as u64 + 1);
+                        for _ in 0..2000 {
+                            let i = rng.range(0, data.len());
+                            assert_eq!(v.get(i).unwrap(), data[i]);
+                        }
+                        v.tlb_stats()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let stats = h.join().unwrap();
+                assert!(stats.hits > 0, "per-thread TLB never hit: {stats:?}");
+            }
+        });
+    }
+}

@@ -7,9 +7,22 @@
 use crate::memsim::Hierarchy;
 use crate::pmem::BlockAlloc;
 use crate::testutil::Rng;
-use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
+use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel, TreeView};
 use crate::workloads::trace::CostModel;
 use crate::workloads::SimResult;
+
+/// Xor-fold a whole tree, one translation per leaf
+/// ([`TreeArray::for_each_leaf`]) instead of one cursor step per
+/// element — the bulk-drain path every gups checksum uses.
+fn checksum_tree<A: BlockAlloc>(t: &TreeArray<'_, u64, A>) -> u64 {
+    let mut acc = 0u64;
+    t.for_each_leaf(|_, elems| {
+        for &v in elems {
+            acc ^= v;
+        }
+    });
+    acc
+}
 
 /// Real GUPS over a contiguous table. Returns a checksum.
 pub fn gups_vec(table: &mut [u64], ops: u64, seed: u64) -> u64 {
@@ -36,11 +49,7 @@ pub fn gups_tree_naive<A: BlockAlloc>(t: &mut TreeArray<'_, u64, A>, ops: u64, s
             t.set_unchecked(i, v ^ r);
         }
     }
-    let mut acc = 0u64;
-    for v in t.iter() {
-        acc ^= v;
-    }
-    acc
+    checksum_tree(t)
 }
 
 /// Default batch size for [`gups_tree_batched`].
@@ -78,9 +87,42 @@ pub fn gups_tree_batched<A: BlockAlloc>(
             .expect("indices in range by construction");
         done += b as u64;
     }
+    checksum_tree(t)
+}
+
+/// The read side of GUPS through a shared [`TreeView`]: `ops` random
+/// dependent-mixed reads, order-sensitively folded so any stale or torn
+/// read changes the result. Run one view per worker thread over one
+/// shared table; checksums are reproducible from the table's contents
+/// with [`gups_read_reference`].
+pub fn gups_view_read<A: BlockAlloc>(
+    view: &mut TreeView<'_, '_, u64, A>,
+    ops: u64,
+    seed: u64,
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = view.len() as u64;
     let mut acc = 0u64;
-    for v in t.iter() {
-        acc ^= v;
+    for _ in 0..ops {
+        let r = rng.next_u64();
+        let i = (r % n) as usize;
+        // SAFETY: i < len by construction.
+        let v = unsafe { view.get_unchecked(i) };
+        acc = acc.rotate_left(7) ^ v ^ r;
+    }
+    acc
+}
+
+/// Reference checksum for [`gups_view_read`] over the table's contents
+/// (what every worker must produce regardless of thread count or
+/// concurrent relocation — relocation moves bytes, never changes them).
+pub fn gups_read_reference(table: &[u64], ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = table.len() as u64;
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let r = rng.next_u64();
+        acc = acc.rotate_left(7) ^ table[(r % n) as usize] ^ r;
     }
     acc
 }
@@ -177,6 +219,25 @@ mod tests {
         tree_table.enable_flat_table();
         let c2 = gups_tree_batched(&mut tree_table, 20_000, 21, 512);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn view_read_matches_reference_and_survives_migration() {
+        let a = BlockAllocator::new(4096, 4096).unwrap();
+        let n = 1 << 13;
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let mut vec_table = vec![0u64; n];
+        gups_vec(&mut vec_table, 20_000, 3);
+        tree.copy_from_slice(&vec_table).unwrap();
+        let want = gups_read_reference(&vec_table, 10_000, 8);
+        let mut view = tree.view();
+        assert_eq!(gups_view_read(&mut view, 10_000, 8), want);
+        // Relocate under the live view; the checksum must not move.
+        // SAFETY: only epoch-registered views read the tree.
+        unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
+        assert_eq!(gups_view_read(&mut view, 10_000, 8), want);
+        drop(view);
+        a.epoch().synchronize(&a);
     }
 
     fn gups_ratio(bytes: u64) -> f64 {

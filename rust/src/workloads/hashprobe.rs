@@ -11,7 +11,7 @@
 use crate::memsim::Hierarchy;
 use crate::pmem::BlockAlloc;
 use crate::testutil::Rng;
-use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel};
+use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel, TreeView};
 use crate::workloads::trace::CostModel;
 use crate::workloads::SimResult;
 
@@ -109,6 +109,40 @@ pub fn probe_tree_batched<A: BlockAlloc>(
     acc
 }
 
+/// The read side of the transposition-table probe through a shared
+/// [`TreeView`]: `ops` hashed lookups, no stores — the concurrent-read
+/// serving scenario (N worker threads, one table). Checksums reproduce
+/// from the table's contents via [`probe_read_reference`].
+pub fn probe_view<A: BlockAlloc>(
+    view: &mut TreeView<'_, '_, Entry, A>,
+    ops: u64,
+    seed: u64,
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = view.len();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let pos = rng.next_u64();
+        let s = slot_of(pos, n);
+        // SAFETY: s < n by construction.
+        let e = unsafe { view.get_unchecked(s) };
+        acc = acc.rotate_left(9) ^ e.wrapping_add(pos);
+    }
+    acc
+}
+
+/// Reference checksum for [`probe_view`] over the table's contents.
+pub fn probe_read_reference(table: &[Entry], ops: u64, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = table.len();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let pos = rng.next_u64();
+        acc = acc.rotate_left(9) ^ table[slot_of(pos, n)].wrapping_add(pos);
+    }
+    acc
+}
+
 /// Simulated probe loop at paper scale (700 MB / 7 GB tables).
 pub fn sim_probe(
     h: &mut Hierarchy,
@@ -180,6 +214,21 @@ mod tests {
             assert_eq!(c1, c2, "batch={batch}: checksum diverged");
             assert_eq!(t.to_vec(), v, "batch={batch}: table diverged");
         }
+    }
+
+    #[test]
+    fn probe_view_matches_reference() {
+        let a = BlockAllocator::new(4096, 1 << 10).unwrap();
+        let n = 1 << 13;
+        let mut v = vec![0u64; n];
+        probe_vec(&mut v, 30_000, 4); // scatter nonzero entries
+        let mut t: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        t.copy_from_slice(&v).unwrap();
+        t.enable_flat_table();
+        let want = probe_read_reference(&v, 15_000, 11);
+        let mut view = t.view();
+        assert_eq!(probe_view(&mut view, 15_000, 11), want);
+        assert!(view.tlb_stats().hits > 0);
     }
 
     #[test]

@@ -24,3 +24,40 @@ pub mod strided_scan;
 pub mod trace;
 
 pub use trace::{CostModel, ScanKind, SimResult};
+
+/// Pick an [`crate::trees::TreeArray::update_batch`] batch size from
+/// the table's leaf count and an *observed* leaf-TLB hit rate (ROADMAP
+/// open item: adaptive batch sizing).
+///
+/// Rationale: sort-and-run amortization pays off when each distinct
+/// leaf a batch touches appears several times, so the batch scales with
+/// the number of leaves random indices will scatter over (~4 expected
+/// hits per touched leaf). But when a TLB already serves most
+/// translations (hit rate near 1), grouping buys little — only the
+/// *miss* fraction benefits — so the batch shrinks toward the floor and
+/// stops paying sort latency for nothing. Clamped to [64, 16384] and
+/// rounded to a power of two (the sort buffers like it).
+pub fn adaptive_batch_size(nleaves: usize, tlb_hit_rate: f64) -> usize {
+    let miss = (1.0 - tlb_hit_rate).clamp(0.05, 1.0);
+    (((nleaves as f64) * 4.0 * miss) as usize)
+        .clamp(64, 16 * 1024)
+        .next_power_of_two()
+}
+
+#[cfg(test)]
+mod adaptive_tests {
+    use super::adaptive_batch_size;
+
+    #[test]
+    fn scales_with_leaves_and_shrinks_with_hit_rate() {
+        assert!(adaptive_batch_size(4096, 0.0) > adaptive_batch_size(128, 0.0));
+        assert!(adaptive_batch_size(4096, 0.95) < adaptive_batch_size(4096, 0.0));
+        // Clamps: tiny tables hit the floor, huge ones the ceiling.
+        assert_eq!(adaptive_batch_size(1, 0.0), 64);
+        assert_eq!(adaptive_batch_size(1 << 30, 0.0), 16 * 1024);
+        // Power of two for the sort buffers.
+        for &(nl, hr) in &[(100usize, 0.3f64), (1000, 0.7), (50_000, 0.5)] {
+            assert!(adaptive_batch_size(nl, hr).is_power_of_two());
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Stress tests for the concurrent read-side translation subsystem:
+//! reader threads with per-thread leaf-TLB views verify checksums while
+//! a migrator thread relocates leaves out from under them with
+//! [`TreeArray::migrate_leaf_concurrent`] and recycles the displaced
+//! blocks through the arena epoch — under both allocator policies.
+//!
+//! The hazard being stressed is the concurrent cousin of
+//! `tests/translation.rs`'s scenario: a view holds a cached leaf
+//! translation, the leaf migrates, the displaced block is freed,
+//! recycled to a new owner, and scribbled — all while reads are in
+//! flight. The epoch protocol must make the scribble unobservable: the
+//! block may not leave limbo until every registered reader has pinned
+//! past the move, and a reader pinning past the move flushes its TLB
+//! before dereferencing anything. Any stale read shows up as a checksum
+//! mismatch against immutable reference data.
+//!
+//! Run in `--release` too (CI does): the interesting interleavings
+//! rarely open up at debug-build speeds.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use nvm::pmem::{BlockAlloc, BlockAllocator, ShardedAllocator};
+use nvm::testutil::Rng;
+use nvm::trees::TreeArray;
+
+const BLOCK: usize = 1024; // u64: leaf_cap 128, fanout 128
+
+/// One thread relocates + recycles + scribbles; `readers` threads read
+/// through per-thread TLB views and compare every value against the
+/// reference. Exercises single reads and batch reads.
+fn shootdown_stress<A: BlockAlloc>(a: &A, readers: usize, migrations: usize) {
+    let n = 128 * 24 + 17; // 25 leaves, partial tail
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).unwrap();
+    let data: Vec<u64> = (0..n as u64)
+        .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+        .collect();
+    tree.copy_from_slice(&data).unwrap();
+    tree.enable_flat_table();
+    let _ = tree.get(0); // build the flat table before sharing
+    let live_before = a.stats().allocated;
+
+    let tree = &tree;
+    let data = &data;
+    let stop = AtomicBool::new(false);
+    let stop = &stop;
+    let total_invalidations = AtomicU64::new(0);
+    let total_invalidations = &total_invalidations;
+
+    std::thread::scope(|s| {
+        for tid in 0..readers {
+            s.spawn(move || {
+                let mut view = tree.view();
+                let mut rng = Rng::new(0xABCD + tid as u64);
+                let mut idxs = vec![0usize; 64];
+                while !stop.load(Ordering::Relaxed) {
+                    // Point reads.
+                    for _ in 0..256 {
+                        let i = rng.range(0, n);
+                        // SAFETY: i < n.
+                        let v = unsafe { view.get_unchecked(i) };
+                        assert_eq!(v, data[i], "stale read of element {i} through a view TLB");
+                    }
+                    // Batch reads (one pin, grouped translation).
+                    for slot in idxs.iter_mut() {
+                        *slot = rng.range(0, n);
+                    }
+                    let got = view.get_batch(&idxs).unwrap();
+                    for (k, &i) in idxs.iter().enumerate() {
+                        assert_eq!(got[k], data[i], "stale batch read of element {i}");
+                    }
+                }
+                total_invalidations.fetch_add(view.tlb_stats().invalidations, Ordering::Relaxed);
+            });
+        }
+
+        // Migrator: relocate, reclaim, and recycle-and-scribble — the
+        // pattern from tests/translation.rs, now against live readers.
+        let mut rng = Rng::new(0x517E);
+        let mut done = 0usize;
+        while done < migrations {
+            let leaf = rng.range(0, tree.nleaves());
+            // SAFETY: concurrent access is only through epoch-registered
+            // views; no raw leaf slices; this is the only migrator.
+            if unsafe { tree.migrate_leaf_concurrent(leaf) }.is_err() {
+                // Pool pressure: limbo holds the free blocks until the
+                // readers quiesce. Reclaim and give them a timeslice.
+                a.epoch().try_reclaim(a);
+                std::thread::yield_now();
+                continue;
+            }
+            done += 1;
+            // Return quiesced blocks to the pool, then grab a block and
+            // scribble it: under a LIFO free list this is frequently the
+            // just-reclaimed block — exactly the recycled memory a stale
+            // TLB entry would be pointing at.
+            a.epoch().try_reclaim(a);
+            if let Ok(b) = a.alloc() {
+                a.write(b, 0, &[0xA5u8; BLOCK]).unwrap();
+                a.free(b).unwrap();
+            }
+            if done % 16 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Views are gone: limbo must drain fully and nothing may leak.
+    a.epoch().synchronize(a);
+    assert_eq!(a.epoch().limbo_len(), 0);
+    assert_eq!(
+        a.stats().allocated,
+        live_before,
+        "relocation churn leaked or double-freed blocks"
+    );
+    assert_eq!(tree.to_vec(), data, "tree contents corrupted by the churn");
+    assert!(
+        total_invalidations.load(Ordering::Relaxed) > 0,
+        "readers never observed a shootdown — the stress ran vacuously"
+    );
+}
+
+#[test]
+fn epoch_shootdown_stress_mutex_allocator() {
+    let a = BlockAllocator::new(BLOCK, 256).unwrap();
+    shootdown_stress(&a, 3, 400);
+}
+
+#[test]
+fn epoch_shootdown_stress_sharded_allocator() {
+    let a = ShardedAllocator::with_shards(BLOCK, 256, 4).unwrap();
+    shootdown_stress(&a, 3, 400);
+}
+
+/// The deterministic core of the protocol, step by step (no timing
+/// dependence): a view's cached translation pins the displaced block in
+/// limbo; recycling cannot happen until the view quiesces; the view's
+/// next access flushes and re-translates.
+fn deterministic_quiescence<A: BlockAlloc>(a: &A) {
+    let n = 128 * 4;
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).unwrap();
+    let data: Vec<u64> = (0..n as u64).map(|i| i ^ 0xFACE).collect();
+    tree.copy_from_slice(&data).unwrap();
+
+    let mut view = tree.view();
+    assert_eq!(view.get(5).unwrap(), data[5]); // leaf 0 cached + pinned
+    // SAFETY: the only other accessor is the epoch-registered view.
+    unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
+    // The displaced block must NOT be reusable yet: the view could
+    // still be mid-read at its old pin.
+    assert_eq!(a.epoch().try_reclaim(a), 0);
+    assert_eq!(a.epoch().limbo_len(), 1);
+    // Next read pins the new epoch, flushes, re-translates — correct
+    // value, and the old block becomes reclaimable.
+    assert_eq!(view.get(5).unwrap(), data[5]);
+    assert!(view.tlb_stats().invalidations >= 1, "flush must be counted");
+    assert_eq!(a.epoch().try_reclaim(a), 1);
+    // Recycle-and-scribble now; the view must be unaffected.
+    let b = a.alloc().unwrap();
+    a.write(b, 0, &[0x5Au8; BLOCK]).unwrap();
+    assert_eq!(view.get(5).unwrap(), data[5]);
+    assert_eq!(view.get(200).unwrap(), data[200]);
+    a.free(b).unwrap();
+}
+
+#[test]
+fn deterministic_quiescence_mutex_allocator() {
+    let a = BlockAllocator::new(BLOCK, 64).unwrap();
+    deterministic_quiescence(&a);
+}
+
+#[test]
+fn deterministic_quiescence_sharded_allocator() {
+    let a = ShardedAllocator::with_shards(BLOCK, 64, 2).unwrap();
+    deterministic_quiescence(&a);
+}

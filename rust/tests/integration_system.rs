@@ -26,6 +26,7 @@ fn all_experiments_dispatch_and_produce_tables() {
         "fig4-gups",
         "fig5",
         "concurrent-gups",
+        "concurrent-probe",
         "parallel-blackscholes",
         "batched-workloads",
         "ablation-alloc",
