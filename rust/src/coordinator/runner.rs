@@ -44,6 +44,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "N per-thread-TLB reader views over one shared tree, with live relocation",
         },
         ExperimentInfo {
+            name: "fragmentation-churn",
+            description: "mmd daemon: reader throughput + frag score under churn, off vs on",
+        },
+        ExperimentInfo {
             name: "parallel-blackscholes",
             description: "Partitioned parallel Black-Scholes over one sharded allocator",
         },
@@ -81,6 +85,9 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "fig5" => vec![experiments::fig5(cfg)],
         "concurrent-gups" | "concurrent_gups" => vec![experiments::concurrent_gups(cfg)],
         "concurrent-probe" | "concurrent_probe" => vec![experiments::concurrent_probe(cfg)],
+        "fragmentation-churn" | "fragmentation_churn" => {
+            vec![experiments::fragmentation_churn(cfg)]
+        }
         "parallel-blackscholes" | "parallel_blackscholes" => {
             vec![experiments::parallel_blackscholes(cfg)]
         }
@@ -125,9 +132,11 @@ mod tests {
             ..ExpConfig::default()
         };
         for e in list_experiments() {
-            // Skip the slowest (rbtree builds real trees) in unit tests;
-            // integration tests cover it.
-            if e.name == "fig4-rbtree" {
+            // Skip the slowest in unit tests: rbtree builds real trees;
+            // fragmentation-churn runs 6 full daemon sub-runs (covered
+            // by its own experiment test, the integration sweep, and
+            // the release-mode mmd_stress tier).
+            if e.name == "fig4-rbtree" || e.name == "fragmentation-churn" {
                 continue;
             }
             let tables = run_experiment(e.name, &cfg).unwrap();

@@ -23,6 +23,12 @@
 //!   [`trees::TreeView`] — `Send` shared read views with *per-thread*
 //!   TLBs plus arena-epoch quiescence ([`pmem::ArenaEpoch`]), so many
 //!   threads read one tree lock-free while leaves relocate under them.
+//! * [`mmd`] — the background memory-management daemon: fragmentation
+//!   telemetry over any [`pmem::BlockAlloc`] pool, a pluggable policy
+//!   loop, and a compactor that relocates/evicts/restores leaves of
+//!   registered live trees ([`trees::TreeRegistry`]) through the
+//!   epoch-deferred relocation machinery — keeping the arena healthy
+//!   while [`trees::TreeView`] readers keep reading.
 //! * [`stack`] — §3.1 split stacks: a segmented-stack frame machine plus
 //!   the per-benchmark call-profile overhead model behind Figure 3.
 //! * [`memsim`] — the virtual-memory-vs-physical cost model: a
@@ -89,6 +95,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod error;
 pub mod memsim;
+pub mod mmd;
 pub mod pmem;
 pub mod runtime;
 pub mod stack;

@@ -1,0 +1,388 @@
+//! The compaction engine: walks the [`TreeRegistry`] and relocates /
+//! evicts / restores leaves of live trees through the forwarding
+//! machinery, throttled by a per-call token budget.
+//!
+//! Mechanism, not policy: callers (the [`crate::mmd`] daemon, tests)
+//! decide *when* and *how much*; the compactor only executes.
+//!
+//! # How compaction actually reduces fragmentation
+//!
+//! Plain `alloc` picks blocks for speed (LIFO reuse, shard affinity),
+//! so relocating a leaf through it merely shuffles fragmentation. The
+//! compactor instead allocates every destination with
+//! [`BlockAlloc::alloc_in_span`] — the **lowest** free block below the
+//! leaf's current one — so each move strictly sinks the leaf toward the
+//! bottom of its span and free space consolidates on top (the classic
+//! two-finger compaction shape, expressed through the allocator). A
+//! leaf with no free block below it is already packed and is skipped;
+//! total block-id order strictly decreases per move, so repeated passes
+//! converge.
+//!
+//! # Safety inheritance
+//!
+//! Every relocation is [`TreeArray::migrate_leaf_concurrent_to`]
+//! underneath: displaced blocks are *retired* into the pool's epoch
+//! limbo and reclaimed only after all registered readers quiesce, so
+//! registered [`crate::trees::TreeView`] readers never stall and never
+//! see recycled memory. The registry's registration contracts carry the
+//! proof obligations; the compactor holds the registry lock for the
+//! duration of a pass, so deregistration synchronizes with it.
+//!
+//! [`TreeRegistry`]: crate::trees::TreeRegistry
+//! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span
+//! [`TreeArray::migrate_leaf_concurrent_to`]: crate::trees::TreeArray::migrate_leaf_concurrent_to
+
+use crate::pmem::{BlockAlloc, SwapPool};
+use crate::trees::TreeRegistry;
+
+/// Work counters for one [`Compactor`] (cumulative).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompactStats {
+    /// Leaves relocated (compaction + rebalancing).
+    pub leaves_moved: u64,
+    /// Bytes copied by those relocations.
+    pub bytes_compacted: u64,
+    /// Leaves evicted to swap.
+    pub evictions: u64,
+    /// Leaves faulted back and re-adopted.
+    pub restores: u64,
+    /// Relocations abandoned (destination allocation failed or the
+    /// move errored; the destination block was returned).
+    pub skipped: u64,
+}
+
+/// The engine. Borrows one pool and one registry for its lifetime.
+pub struct Compactor<'e, A: BlockAlloc> {
+    alloc: &'e A,
+    registry: &'e TreeRegistry<'e>,
+    stats: CompactStats,
+}
+
+impl<'e, A: BlockAlloc> Compactor<'e, A> {
+    /// A compactor over `alloc` driving the trees in `registry`.
+    pub fn new(alloc: &'e A, registry: &'e TreeRegistry<'e>) -> Self {
+        Compactor {
+            alloc,
+            registry,
+            stats: CompactStats::default(),
+        }
+    }
+
+    /// Cumulative work counters.
+    pub fn stats(&self) -> CompactStats {
+        self.stats
+    }
+
+    /// The shared relocation pass under compaction and rebalancing:
+    /// walk every registered tree, and for each resident leaf whose
+    /// current block satisfies `candidate`, allocate a destination from
+    /// `dest_span(cur)` and move the leaf there — up to `budget` moves.
+    /// `stop_on_alloc_fail` distinguishes the two shapes: compaction
+    /// treats an empty destination span as "this leaf is packed, try
+    /// the next" (per-leaf spans), rebalancing as "the target shard is
+    /// full, the pass is over" (one fixed span). Ends with a
+    /// non-blocking reclaim so displaced blocks return to the pool as
+    /// soon as readers quiesce.
+    fn relocate_pass(
+        &mut self,
+        budget: usize,
+        candidate: impl Fn(usize) -> bool,
+        dest_span: impl Fn(usize) -> (usize, usize),
+        stop_on_alloc_fail: bool,
+    ) -> usize {
+        let bs = self.alloc.block_size() as u64;
+        let mut moved = 0usize;
+        let entries = self.registry.lock();
+        'outer: for e in entries.iter() {
+            for leaf in 0..e.tree.nleaves() {
+                if moved >= budget {
+                    break 'outer;
+                }
+                if e.swapped.iter().any(|&(l, _)| l == leaf) {
+                    continue; // no live backing to copy from
+                }
+                let cur = e.tree.leaf_block(leaf).0 as usize;
+                if !candidate(cur) {
+                    continue;
+                }
+                let (dlo, dhi) = dest_span(cur);
+                let dest = match self.alloc.alloc_in_span(dlo, dhi) {
+                    Ok(d) => d,
+                    Err(_) if stop_on_alloc_fail => break 'outer,
+                    Err(_) => continue,
+                };
+                // SAFETY: the registry's registration contract — readers
+                // only through epoch-registered views, no raw slices,
+                // this pass is the only migrator — plus dest freshly
+                // allocated and exclusively ours.
+                match unsafe { e.tree.relocate_leaf_to(leaf, dest) } {
+                    Ok(()) => {
+                        moved += 1;
+                        self.stats.leaves_moved += 1;
+                        self.stats.bytes_compacted += bs;
+                    }
+                    Err(_) => {
+                        let _ = self.alloc.free(dest);
+                        self.stats.skipped += 1;
+                    }
+                }
+            }
+        }
+        drop(entries);
+        self.alloc.epoch().try_reclaim(self.alloc);
+        moved
+    }
+
+    /// One compaction pass over block-id span `[lo, hi)`: sink up to
+    /// `budget` leaves currently in the span into the **lowest** free
+    /// blocks below them (same span). Returns leaves moved; 0 means the
+    /// span is packed (convergence signal).
+    pub fn compact_span(&mut self, budget: usize, lo: usize, hi: usize) -> usize {
+        // Destination strictly below the leaf: a leaf with no free
+        // block under it is already packed and is skipped.
+        self.relocate_pass(budget, move |cur| cur > lo && cur < hi, move |cur| (lo, cur), false)
+    }
+
+    /// Migrate up to `budget` leaves whose blocks sit in `from`'s span
+    /// into blocks allocated from `to`'s span (stealing-aware
+    /// rebalancing: emptying the hot shard's range gives threads homed
+    /// there free local blocks again instead of cross-shard steals).
+    pub fn rebalance(&mut self, budget: usize, from: (usize, usize), to: (usize, usize)) -> usize {
+        self.relocate_pass(
+            budget,
+            move |cur| cur >= from.0 && cur < from.1,
+            move |_| to,
+            true, // destination shard full: the pass is over
+        )
+    }
+
+    /// Evict up to `budget` leaves of evictable registrations into
+    /// `swap` (which must be a pool over the same allocator). Cold
+    /// proxy: highest-indexed resident leaves first — the registry
+    /// keeps no access timestamps (ROADMAP open item), and tail leaves
+    /// are the coldest for the scan-heavy workloads shipped. The
+    /// physical blocks are retired through the epoch
+    /// ([`SwapPool::evict_deferred`]), not freed, so readers elsewhere
+    /// in the pool stay safe.
+    pub fn evict(&mut self, budget: usize, swap: &SwapPool<'_, A>) -> usize {
+        let mut entries = self.registry.lock();
+        let mut done = 0usize;
+        for e in entries.iter_mut() {
+            if !e.evictable {
+                continue;
+            }
+            for leaf in (0..e.tree.nleaves()).rev() {
+                if done >= budget {
+                    return done;
+                }
+                if e.swapped.iter().any(|&(l, _)| l == leaf) {
+                    continue;
+                }
+                let block = e.tree.leaf_block(leaf);
+                match swap.evict_deferred(block) {
+                    Ok(slot) => {
+                        e.swapped.push((leaf, slot));
+                        done += 1;
+                        self.stats.evictions += 1;
+                    }
+                    Err(_) => return done, // swap I/O trouble: stop
+                }
+            }
+        }
+        done
+    }
+
+    /// Fault up to `budget` swapped-out leaves back in and re-adopt
+    /// them. Stops early if the pool cannot supply blocks (the slot
+    /// stays resident — [`SwapPool::fault`] is failure-atomic).
+    pub fn restore(&mut self, budget: usize, swap: &SwapPool<'_, A>) -> usize {
+        let mut entries = self.registry.lock();
+        let mut done = 0usize;
+        'outer: for e in entries.iter_mut() {
+            while let Some(&(leaf, slot)) = e.swapped.last() {
+                if done >= budget {
+                    break 'outer;
+                }
+                let fresh = match swap.fault(slot) {
+                    Ok(b) => b,
+                    Err(_) => break 'outer, // OOM: retry after reclaim
+                };
+                // SAFETY: the evictable registration contract (no
+                // accessors at all while registered); `fresh` holds the
+                // leaf's bytes and is exclusively ours.
+                unsafe { e.tree.adopt_leaf_block(leaf, fresh) };
+                e.swapped.pop();
+                done += 1;
+                self.stats.restores += 1;
+            }
+        }
+        done
+    }
+
+    /// Restore *everything*, reclaiming limbo between attempts so
+    /// restores never starve on deferred frees. Used by daemon
+    /// shutdown; loops until the registry has no swapped-out leaves or
+    /// no progress can be made.
+    pub fn restore_all(&mut self, swap: &SwapPool<'_, A>) -> usize {
+        let mut total = 0usize;
+        loop {
+            let n = self.restore(usize::MAX, swap);
+            total += n;
+            if self.registry.swapped_out() == 0 {
+                return total;
+            }
+            let reclaimed = self.alloc.epoch().try_reclaim(self.alloc);
+            if n == 0 && reclaimed == 0 {
+                // Wedged: pool exhausted and nothing reclaimable. The
+                // remaining ledger stays; deregistration will refuse.
+                return total;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mmd::stats::FragSampler;
+    use crate::pmem::{BlockAllocator, ShardedAllocator};
+    use crate::testutil::fragmented_tree;
+    use crate::trees::TreeArray;
+
+    fn compaction_halves_score<A: BlockAlloc>(a: &A) {
+        let (tree, mirror) = fragmented_tree(a, 40, |i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+        let mut sampler = FragSampler::new();
+        let s0 = sampler.sample(a);
+        assert!(s0.score > 0.5, "setup must fragment the pool: {}", s0.score);
+        let registry = TreeRegistry::new();
+        // SAFETY: nothing accesses the tree until deregistration.
+        let id = unsafe { registry.register(&tree) };
+        let mut c = Compactor::new(a, &registry);
+        // Budgeted passes converge: each pass's moves strictly sink.
+        let mut passes = 0;
+        while c.compact_span(8, 0, a.capacity()) > 0 {
+            passes += 1;
+            assert!(passes < 1000, "compaction failed to converge");
+        }
+        // Every strided leaf with free space below it sinks at least
+        // once (a leaf that started at block 0 has nowhere to go).
+        assert!(c.stats().leaves_moved >= 30, "strided leaves must sink");
+        let s1 = sampler.sample(a);
+        assert!(
+            s1.score * 2.0 <= s0.score,
+            "compaction must at least halve the score: {} -> {}",
+            s0.score,
+            s1.score
+        );
+        // Leaves really are packed low now (only the unmoved root may
+        // sit above them).
+        for leaf in 0..tree.nleaves() {
+            assert!(
+                (tree.leaf_block(leaf).0 as usize) <= 41,
+                "leaf {leaf} left at {:?}",
+                tree.leaf_block(leaf)
+            );
+        }
+        assert_eq!(tree.to_vec(), mirror, "compaction corrupted the tree");
+        registry.deregister(id);
+        drop(registry);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0, "compaction leaked blocks");
+        assert_eq!(a.epoch().limbo_len(), 0);
+    }
+
+    #[test]
+    fn compaction_halves_score_mutex_allocator() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        compaction_halves_score(&a);
+    }
+
+    #[test]
+    fn compaction_halves_score_sharded_allocator() {
+        let a = ShardedAllocator::with_shards(1024, 256, 2).unwrap();
+        compaction_halves_score(&a);
+    }
+
+    #[test]
+    fn rebalance_moves_leaves_between_spans() {
+        let a = ShardedAllocator::with_shards(1024, 128, 2).unwrap();
+        // Land the whole tree in shard 1's range [64, 128).
+        let mut held = Vec::new();
+        for _ in 0..64 {
+            held.push(a.alloc_in_span(0, 64).unwrap());
+        }
+        let mut tree: TreeArray<u64, ShardedAllocator> = TreeArray::new(&a, 128 * 6).unwrap();
+        let data: Vec<u64> = (0..128 * 6).map(|i| i as u64 ^ 0xAA).collect();
+        tree.copy_from_slice(&data).unwrap();
+        for leaf in 0..tree.nleaves() {
+            assert!(tree.leaf_block(leaf).0 >= 64, "setup: tree must start in shard 1");
+        }
+        for b in held {
+            a.free(b).unwrap();
+        }
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors until deregistration.
+        let id = unsafe { registry.register(&tree) };
+        let mut c = Compactor::new(&a, &registry);
+        let moved = c.rebalance(usize::MAX, (64, 128), (0, 64));
+        assert_eq!(moved, 6, "all six leaves migrate to shard 0's range");
+        for leaf in 0..tree.nleaves() {
+            assert!(tree.leaf_block(leaf).0 < 64, "leaf {leaf} not rebalanced");
+        }
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
+        drop(registry);
+        a.epoch().synchronize(&a);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn evict_restore_roundtrip_preserves_contents_and_frees_memory() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, 128 * 8).unwrap();
+        let data: Vec<u64> = (0..128 * 8).map(|i| i as u64 ^ 0xF00D).collect();
+        tree.copy_from_slice(&data).unwrap();
+        tree.enable_flat_table();
+        let _ = tree.get(0);
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors at all between eviction and restore.
+        let id = unsafe { registry.register_evictable(&tree) };
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut c = Compactor::new(&a, &registry);
+        let live0 = a.stats().allocated;
+        let n = c.evict(4, &swap);
+        assert_eq!(n, 4);
+        assert_eq!(registry.swapped_out(), 4);
+        // No readers registered: the retired blocks reclaim immediately.
+        a.epoch().synchronize(&a);
+        assert_eq!(a.stats().allocated, live0 - 4, "eviction must free memory");
+        assert_eq!(swap.stats().resident_slots, 4);
+        // Compaction skips swapped leaves rather than copying dead blocks.
+        c.compact_span(usize::MAX, 0, a.capacity());
+        let r = c.restore_all(&swap);
+        assert_eq!(r, 4);
+        assert_eq!(registry.swapped_out(), 0);
+        assert_eq!(swap.stats().resident_slots, 0);
+        assert_eq!(tree.to_vec(), data, "evict/restore corrupted the tree");
+        registry.deregister(id);
+        drop(registry);
+        a.epoch().synchronize(&a);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn non_evictable_trees_are_never_evicted() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let tree: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors during the call below.
+        let id = unsafe { registry.register(&tree) };
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut c = Compactor::new(&a, &registry);
+        assert_eq!(c.evict(8, &swap), 0, "compaction-only registration");
+        assert_eq!(registry.swapped_out(), 0);
+        registry.deregister(id);
+    }
+}

@@ -1,0 +1,487 @@
+//! Daemon lifecycle: a background thread that samples, decides, and
+//! acts once per tick, controlled through a channel.
+//!
+//! ```text
+//! spawn -> [tick: sample -> policy.decide -> compactor.<act> -> reclaim]*
+//!       -> pause / resume / quiesce (control channel, any time)
+//!       -> shutdown: restore evicted leaves, drain limbo, report
+//! ```
+//!
+//! The handle is scoped ([`MmdHandle::spawn`] takes a
+//! [`std::thread::Scope`]) so the daemon can serve allocator pools and
+//! trees that live on the caller's stack — the same pattern the
+//! concurrent experiments already use for reader threads. Dropping the
+//! scope without calling [`MmdHandle::shutdown`] still terminates the
+//! daemon (the control channel disconnects), but the report is lost and
+//! evicted leaves are restored on the disconnect path all the same.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::Duration;
+
+use crate::mmd::compactor::{CompactStats, Compactor};
+use crate::mmd::policy::{Action, Policy, PolicyCtx};
+use crate::mmd::stats::FragSampler;
+use crate::pmem::{BlockAlloc, SwapPool};
+use crate::trees::TreeRegistry;
+
+/// Daemon pacing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct MmdConfig {
+    /// Tick cadence: how often the daemon samples and acts.
+    pub interval: Duration,
+    /// Token budget: max leaves moved/evicted/restored per tick. This
+    /// is the reader-throttling contract's lever — every relocation
+    /// costs each registered view one TLB flush (arena epoch bump), so
+    /// the budget bounds the flush rate the daemon can impose.
+    pub tokens_per_tick: usize,
+    /// Record the fragmentation score into [`MmdReport::score_trace`]
+    /// every this many ticks (0 disables the trace).
+    pub trace_every: u64,
+    /// Start in the paused state (act only after [`MmdHandle::resume`]).
+    pub start_paused: bool,
+}
+
+impl Default for MmdConfig {
+    fn default() -> Self {
+        MmdConfig {
+            interval: Duration::from_micros(500),
+            tokens_per_tick: 16,
+            trace_every: 64,
+            start_paused: false,
+        }
+    }
+}
+
+/// How many ticks chose each action.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActionCounts {
+    /// Ticks with nothing to do.
+    pub idle: u64,
+    /// Pool-wide compaction ticks.
+    pub compact_pool: u64,
+    /// Shard-local compaction ticks.
+    pub compact_shard: u64,
+    /// Rebalance ticks.
+    pub rebalance: u64,
+    /// Eviction ticks.
+    pub evict: u64,
+    /// Restore ticks.
+    pub restore: u64,
+}
+
+/// What the daemon did over its lifetime (returned by
+/// [`MmdHandle::shutdown`]).
+#[derive(Clone, Debug, Default)]
+pub struct MmdReport {
+    /// Ticks executed.
+    pub ticks: u64,
+    /// Per-action tick counts.
+    pub actions: ActionCounts,
+    /// Compactor work counters (leaves moved, bytes, evictions, …).
+    pub compact: CompactStats,
+    /// Highest limbo depth observed at a tick boundary.
+    pub limbo_high_water: usize,
+    /// Pool fragmentation score at the first tick.
+    pub initial_score: f64,
+    /// Pool fragmentation score after shutdown drained limbo.
+    pub final_score: f64,
+    /// Blocks the pool's epoch reclaimed over the daemon's lifetime
+    /// window (cumulative pool counter at shutdown).
+    pub reclaimed: u64,
+    /// Fragmentation score sampled every `trace_every` ticks.
+    pub score_trace: Vec<f64>,
+    /// Blocks still in limbo at shutdown (non-zero only if a registered
+    /// reader never quiesced).
+    pub limbo_remaining: usize,
+    /// The swap backing could not be created when eviction first fired:
+    /// every Evict/Restore tick after that was a forced no-op. (False
+    /// when eviction never fired — the backing is created lazily.)
+    pub swap_unavailable: bool,
+}
+
+impl MmdReport {
+    /// One-line summary for experiment table notes.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "mmd: {} ticks, moved {} leaves ({} KB), evicted {} / restored {}, \
+             score {:.3} -> {:.3}, limbo high-water {}, actions \
+             idle={} pool={} shard={} rebal={} evict={} restore={}",
+            self.ticks,
+            self.compact.leaves_moved,
+            self.compact.bytes_compacted / 1024,
+            self.compact.evictions,
+            self.compact.restores,
+            self.initial_score,
+            self.final_score,
+            self.limbo_high_water,
+            self.actions.idle,
+            self.actions.compact_pool,
+            self.actions.compact_shard,
+            self.actions.rebalance,
+            self.actions.evict,
+            self.actions.restore,
+        );
+        if self.swap_unavailable {
+            s.push_str(" [SWAP UNAVAILABLE: eviction was a no-op]");
+        }
+        s
+    }
+}
+
+enum Ctl {
+    Pause,
+    Resume,
+    Quiesce(Sender<usize>),
+    Shutdown,
+}
+
+/// Handle to a running daemon. See [`MmdHandle::spawn`].
+pub struct MmdHandle<'scope> {
+    tx: Sender<Ctl>,
+    join: ScopedJoinHandle<'scope, MmdReport>,
+}
+
+impl<'scope> MmdHandle<'scope> {
+    /// Spawn the daemon on `scope` over one allocator pool and one
+    /// registry. The policy decides, [`MmdConfig`] paces; everything
+    /// heavy (sampling, relocation, swap I/O, reclamation) runs on the
+    /// daemon thread — the only inline cost imposed on workload threads
+    /// is the usual epoch-pin revalidation they already pay.
+    pub fn spawn<'env, A, P>(
+        scope: &'scope Scope<'scope, 'env>,
+        alloc: &'env A,
+        registry: &'env TreeRegistry<'env>,
+        policy: P,
+        cfg: MmdConfig,
+    ) -> MmdHandle<'scope>
+    where
+        A: BlockAlloc,
+        P: Policy + 'env,
+    {
+        let (tx, rx) = channel();
+        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, rx));
+        MmdHandle { tx, join }
+    }
+
+    /// Stop acting (ticks become no-ops) until [`MmdHandle::resume`].
+    pub fn pause(&self) {
+        let _ = self.tx.send(Ctl::Pause);
+    }
+
+    /// Resume after [`MmdHandle::pause`].
+    pub fn resume(&self) {
+        let _ = self.tx.send(Ctl::Resume);
+    }
+
+    /// Ask the daemon to drain the pool's limbo list and wait for the
+    /// answer. Returns the blocks still in limbo afterwards (non-zero
+    /// when a registered reader has not quiesced — the drain is bounded,
+    /// never a hang).
+    pub fn quiesce(&self) -> usize {
+        let (ack_tx, ack_rx) = channel();
+        if self.tx.send(Ctl::Quiesce(ack_tx)).is_err() {
+            return 0;
+        }
+        ack_rx.recv().unwrap_or(0)
+    }
+
+    /// Stop the daemon and collect its report. Shutdown restores every
+    /// evicted leaf (so registered trees are whole again) and drains
+    /// limbo before returning.
+    pub fn shutdown(self) -> MmdReport {
+        let _ = self.tx.send(Ctl::Shutdown);
+        self.join.join().expect("mmd daemon panicked")
+    }
+}
+
+/// Bounded limbo drain: with no registered readers one `try_reclaim`
+/// empties the list (every retired block is immediately past the
+/// OFFLINE minimum); with stale readers we retry a bounded number of
+/// times rather than hang the daemon on an idle reader.
+fn drain_limbo<A: BlockAlloc>(alloc: &A) -> usize {
+    let epoch = alloc.epoch();
+    for _ in 0..4096 {
+        if epoch.limbo_len() == 0 {
+            break;
+        }
+        epoch.try_reclaim(alloc);
+        if epoch.stats().readers > 0 {
+            std::thread::yield_now();
+        }
+    }
+    epoch.limbo_len()
+}
+
+fn daemon_run<'e, A, P>(
+    alloc: &'e A,
+    registry: &'e TreeRegistry<'e>,
+    mut policy: P,
+    cfg: MmdConfig,
+    rx: Receiver<Ctl>,
+) -> MmdReport
+where
+    A: BlockAlloc,
+    P: Policy,
+{
+    // Swap backing for the eviction path, created lazily on the first
+    // Evict tick (a compaction-only daemon never touches the
+    // filesystem). If the environment cannot give us a temp file,
+    // `swap_unavailable` is reported and the policy stops being fed
+    // evictable capacity, so pressure falls through to compaction
+    // instead of demanding no-op evictions forever.
+    let mut swap: Option<SwapPool<'e, A>> = None;
+    let mut swap_failed = false;
+    let mut compactor = Compactor::new(alloc, registry);
+    let mut sampler = FragSampler::new();
+    // Initial score sampled at spawn (not the first unpaused tick): a
+    // paused-then-shut-down daemon must still report where the pool
+    // started.
+    let mut report = MmdReport {
+        initial_score: sampler.sample(alloc).score,
+        ..MmdReport::default()
+    };
+    let mut paused = cfg.start_paused;
+    loop {
+        match rx.recv_timeout(cfg.interval) {
+            Ok(Ctl::Pause) => {
+                paused = true;
+                continue;
+            }
+            Ok(Ctl::Resume) => {
+                paused = false;
+                continue;
+            }
+            Ok(Ctl::Quiesce(ack)) => {
+                let _ = ack.send(drain_limbo(alloc));
+                continue;
+            }
+            Ok(Ctl::Shutdown) | Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        if paused {
+            continue;
+        }
+        let snap = sampler.sample(alloc);
+        report.limbo_high_water = report.limbo_high_water.max(snap.epoch.limbo);
+        if cfg.trace_every > 0 && report.ticks % cfg.trace_every == 0 {
+            report.score_trace.push(snap.score);
+        }
+        let (swapped_out, evictable_resident) = registry.eviction_counts();
+        let ctx = PolicyCtx {
+            swapped_out,
+            evictable_resident: if swap_failed { 0 } else { evictable_resident },
+        };
+        match policy.decide(&snap, &ctx) {
+            Action::Idle => report.actions.idle += 1,
+            Action::CompactPool => {
+                compactor.compact_span(cfg.tokens_per_tick, 0, alloc.capacity());
+                report.actions.compact_pool += 1;
+            }
+            Action::CompactShard(s) => {
+                let (lo, hi) = snap
+                    .shard_spans
+                    .get(s)
+                    .copied()
+                    .unwrap_or((0, alloc.capacity()));
+                compactor.compact_span(cfg.tokens_per_tick, lo, hi);
+                report.actions.compact_shard += 1;
+            }
+            Action::Rebalance { from, to } => {
+                let spans = &snap.shard_spans;
+                if let (Some(&f), Some(&t)) = (spans.get(from), spans.get(to)) {
+                    compactor.rebalance(cfg.tokens_per_tick, f, t);
+                }
+                report.actions.rebalance += 1;
+            }
+            Action::Evict { leaves } => {
+                if swap.is_none() && !swap_failed {
+                    match SwapPool::anonymous(alloc) {
+                        Ok(s) => swap = Some(s),
+                        Err(_) => {
+                            swap_failed = true;
+                            report.swap_unavailable = true;
+                        }
+                    }
+                }
+                if let Some(sw) = swap.as_ref() {
+                    compactor.evict(leaves.min(cfg.tokens_per_tick), sw);
+                }
+                report.actions.evict += 1;
+            }
+            Action::Restore { leaves } => {
+                if let Some(sw) = swap.as_ref() {
+                    compactor.restore(leaves.min(cfg.tokens_per_tick), sw);
+                }
+                report.actions.restore += 1;
+            }
+        }
+        alloc.epoch().try_reclaim(alloc);
+        report.ticks += 1;
+    }
+    // Shutdown: make registered trees whole (fault every evicted leaf
+    // back — the satellite teardown contract), then drain limbo.
+    if let Some(sw) = swap.as_ref() {
+        compactor.restore_all(sw);
+    }
+    report.limbo_remaining = drain_limbo(alloc);
+    report.compact = compactor.stats();
+    let snap = sampler.sample(alloc);
+    report.final_score = snap.score;
+    report.reclaimed = snap.epoch.reclaimed;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mmd::policy::ThresholdPolicy;
+    use crate::pmem::{BlockAllocator, ShardedAllocator};
+    use crate::testutil::fragmented_tree;
+    use crate::trees::TreeArray;
+    use std::time::Instant;
+
+    fn cfg_fast() -> MmdConfig {
+        MmdConfig {
+            interval: Duration::from_micros(100),
+            tokens_per_tick: 16,
+            trace_every: 8,
+            ..MmdConfig::default()
+        }
+    }
+
+    /// Poll until `done()` or a generous deadline — the assertions
+    /// after the poll say what actually went wrong; the deadline only
+    /// bounds how long a genuinely broken daemon can hang the test.
+    fn wait_for(mut done: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !done() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn lifecycle_with_empty_registry() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let registry = TreeRegistry::new();
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn(s, &a, &registry, ThresholdPolicy::default(), cfg_fast());
+            d.pause();
+            d.resume();
+            assert_eq!(d.quiesce(), 0, "nothing in limbo");
+            std::thread::sleep(Duration::from_millis(50));
+            d.shutdown()
+        });
+        assert!(report.ticks > 0, "daemon must tick while idle");
+        assert_eq!(report.actions.idle, report.ticks, "empty pool: all idle");
+        assert_eq!(report.compact.leaves_moved, 0);
+        assert_eq!(report.limbo_remaining, 0);
+    }
+
+    #[test]
+    fn daemon_compacts_a_fragmented_pool() {
+        let a = ShardedAllocator::with_shards(1024, 256, 2).unwrap();
+        let (tree, data) = fragmented_tree(&a, 40, |i| i ^ 0xBEEF);
+        let s0 = FragSampler::new().sample(&a).score;
+        assert!(s0 > 0.5, "setup must fragment the pool: {s0}");
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors while the daemon owns relocation.
+        let id = unsafe { registry.register(&tree) };
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn(s, &a, &registry, ThresholdPolicy::default(), cfg_fast());
+            // Converge (no fixed sleep: CI machines stall arbitrarily).
+            // Target = the policy's idle threshold: below it the daemon
+            // stops compacting, so a lower target would never be met.
+            let target = ThresholdPolicy::default().score_hi;
+            let mut poll = FragSampler::new();
+            wait_for(|| poll.sample(&a).score <= target);
+            d.shutdown()
+        });
+        assert!(report.compact.leaves_moved >= 30, "{}", report.summary());
+        assert!(
+            report.final_score * 2.0 <= report.initial_score,
+            "daemon must at least halve the score: {}",
+            report.summary()
+        );
+        assert!(report.actions.compact_pool > 0);
+        assert!(!report.score_trace.is_empty(), "trace must record the trajectory");
+        assert_eq!(report.limbo_remaining, 0);
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
+        drop(registry);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn daemon_evicts_under_pressure_and_restores_on_shutdown() {
+        let a = BlockAllocator::new(1024, 32).unwrap();
+        // Tree of 8 leaves + root, then scratch fills the pool to ~97%:
+        // free ratio < 8% trips the eviction trigger.
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, 128 * 8).unwrap();
+        let data: Vec<u64> = (0..128 * 8).map(|i| i as u64 | 1).collect();
+        tree.copy_from_slice(&data).unwrap();
+        let scratch = a.alloc_many(22).unwrap(); // 31/32 live
+        let registry = TreeRegistry::new();
+        // SAFETY: nothing touches the tree while registered.
+        let id = unsafe { registry.register_evictable(&tree) };
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn(s, &a, &registry, ThresholdPolicy::default(), cfg_fast());
+            // Wait until pressure has demonstrably triggered eviction
+            // (retired blocks prove evict_deferred ran), not a timer.
+            wait_for(|| a.stats().retired > 0);
+            d.shutdown()
+        });
+        assert!(report.actions.evict > 0, "pressure must trigger eviction: {}", report.summary());
+        assert!(report.compact.evictions > 0);
+        assert_eq!(
+            report.compact.restores, report.compact.evictions,
+            "shutdown must restore every evicted leaf: {}",
+            report.summary()
+        );
+        assert_eq!(registry.swapped_out(), 0);
+        assert_eq!(tree.to_vec(), data, "evict/restore corrupted the tree");
+        registry.deregister(id);
+        drop(registry);
+        for b in scratch {
+            a.free(b).unwrap();
+        }
+        a.epoch().synchronize(&a);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn paused_daemon_does_not_act() {
+        let a = BlockAllocator::new(1024, 128).unwrap();
+        // Fragment enough that an unpaused daemon would certainly act.
+        let all = a.alloc_many(128).unwrap();
+        for (i, b) in all.iter().enumerate() {
+            if i % 4 == 0 {
+                a.free(*b).unwrap();
+            }
+        }
+        let tree: TreeArray<u64> = TreeArray::new(&a, 128 * 20).unwrap();
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors while registered.
+        let id = unsafe { registry.register(&tree) };
+        let cfg = MmdConfig {
+            start_paused: true,
+            ..cfg_fast()
+        };
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn(s, &a, &registry, ThresholdPolicy::default(), cfg);
+            d.pause(); // idempotent; exercises the control channel
+            std::thread::sleep(Duration::from_millis(10));
+            d.shutdown()
+        });
+        assert_eq!(report.compact.leaves_moved, 0, "paused daemon must not move leaves");
+        registry.deregister(id);
+        drop(registry);
+        drop(tree);
+        for b in all.iter().filter(|b| a.is_live(**b)) {
+            a.free(*b).unwrap();
+        }
+        assert_eq!(a.stats().allocated, 0);
+    }
+}

@@ -1,0 +1,81 @@
+//! `mmd` — the background memory-management daemon.
+//!
+//! Without virtual memory there is no contiguous-segment illusion to
+//! hide fragmentation behind: the paper (§3) argues software must take
+//! over the OS's physical-memory duties, and this module is that duty
+//! cycle made explicit — a dedicated service with its own policy loop
+//! (the Cichlid shape), running in userspace next to the data
+//! structures it serves (the user-mode page-management argument). PR 3
+//! built the *mechanism* — `migrate_leaf_concurrent` + [`ArenaEpoch`]
+//! limbo reclamation — and this subsystem is the thing that *drives*
+//! it: fragmentation telemetry, concurrent compaction, and
+//! pressure-driven eviction over live trees.
+//!
+//! # Pieces
+//!
+//! * [`stats`] — [`FragSampler`]/[`FragSnapshot`]: free-run histogram,
+//!   fragmentation score, per-shard occupancy, limbo depth, reclaim
+//!   latency, free→realloc recency. One
+//!   [`BlockAlloc::live_snapshot`] per tick; allocation never stops.
+//! * [`policy`] — [`Policy`]/[`ThresholdPolicy`]: maps a snapshot to
+//!   one [`Action`] (compact pool/shard, rebalance shards, evict,
+//!   restore, idle). Pluggable; the daemon is generic over it.
+//! * [`compactor`] — [`Compactor`]: walks the
+//!   [`TreeRegistry`](crate::trees::TreeRegistry) and executes actions
+//!   through the forwarding machinery
+//!   ([`TreeArray::migrate_leaf_concurrent_to`],
+//!   [`SwapPool::evict_deferred`], adopt-on-restore), with
+//!   [`BlockAlloc::alloc_in_span`] supplying *placement-directed*
+//!   destinations — which is what makes relocation reduce
+//!   fragmentation instead of reshuffling it.
+//! * [`daemon`] — [`MmdHandle`]: lifecycle (spawn/pause/quiesce/
+//!   shutdown), the control channel, pacing ([`MmdConfig`]), and the
+//!   [`MmdReport`] of actions taken.
+//!
+//! # What runs where
+//!
+//! Everything heavy runs **on the daemon thread**: telemetry scans,
+//! policy decisions, leaf copies, swap I/O, and epoch reclamation
+//! (`try_reclaim` each tick, full drain at shutdown). Workload threads
+//! pay only what PR 3 already charged them **inline**: an epoch pin per
+//! access batch, and a TLB flush when the epoch moved.
+//!
+//! # The reader-throttling contract
+//!
+//! The daemon never blocks readers — every pointer patch is an atomic
+//! store and displaced/evicted blocks are retired into epoch limbo, so
+//! a registered [`TreeView`](crate::trees::TreeView) mid-read keeps
+//! dereferencing stable bytes and revalidates on its next pin. The cost
+//! it *does* impose is cache pressure: each relocation bumps the arena
+//! epoch, i.e. one wholesale TLB flush per registered view.
+//! [`MmdConfig::tokens_per_tick`] × tick rate bounds that flush rate;
+//! the `ablation_compaction` bench holds the daemon to ≥ 0.9× reader
+//! throughput under adversarial churn. Reclamation waits, in turn, land
+//! on the daemon (QSBR: readers pay two uncontended atomics, the
+//! reclaimer waits), and the waits are bounded — a registered reader
+//! that never quiesces stalls limbo, not the daemon loop.
+//!
+//! # Safety obligations
+//!
+//! Registration is the unsafe boundary: `TreeRegistry::register`
+//! (readers only through epoch-registered views, no raw slices, no
+//! writes, daemon is the sole migrator) and `register_evictable`
+//! (additionally no accessors at all). See
+//! [`crate::trees::TreeRegistry`] for the full contracts; everything
+//! downstream in this module inherits them through those two calls.
+//!
+//! [`ArenaEpoch`]: crate::pmem::ArenaEpoch
+//! [`BlockAlloc::live_snapshot`]: crate::pmem::BlockAlloc::live_snapshot
+//! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span
+//! [`TreeArray::migrate_leaf_concurrent_to`]: crate::trees::TreeArray::migrate_leaf_concurrent_to
+//! [`SwapPool::evict_deferred`]: crate::pmem::SwapPool::evict_deferred
+
+pub mod compactor;
+pub mod daemon;
+pub mod policy;
+pub mod stats;
+
+pub use compactor::{CompactStats, Compactor};
+pub use daemon::{ActionCounts, MmdConfig, MmdHandle, MmdReport};
+pub use policy::{Action, Policy, PolicyCtx, ThresholdPolicy};
+pub use stats::{FragSampler, FragSnapshot};

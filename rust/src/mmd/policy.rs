@@ -1,0 +1,306 @@
+//! Pluggable daemon policy: *what* to do about a telemetry sample.
+//!
+//! The mechanism lives in [`crate::mmd::Compactor`]; the policy only
+//! maps a [`FragSnapshot`] (plus the current swapped-out count) to one
+//! [`Action`] per tick. This is the Cichlid-style split — a dedicated
+//! service with its own policy loop — kept narrow so experiments can
+//! substitute policies without touching the engine.
+//!
+//! [`ThresholdPolicy`] is the shipped implementation, priority-ordered:
+//!
+//! 1. **Swap pressure** — free ratio below the low watermark: evict
+//!    cold leaves of evictable registrations to disk.
+//! 2. **Pressure cleared** — leaves parked in swap and free ratio above
+//!    the high watermark: restore them.
+//! 3. **Pool fragmentation** — score above threshold: compact the pool
+//!    (sink leaves into the lowest free blocks).
+//! 4. **Shard-local fragmentation** — the pool looks fine but one
+//!    shard's free space is shredded: compact inside that shard.
+//! 5. **Shard imbalance** — occupancy spread above threshold: migrate
+//!    leaves from the fullest shard's range into the emptiest's, so
+//!    thread-affine allocation stops degenerating into cross-shard
+//!    stealing.
+//! 6. Otherwise **idle**.
+
+use crate::mmd::stats::FragSnapshot;
+
+/// One daemon decision. Budgets (how many leaves per tick) come from
+/// [`crate::mmd::MmdConfig`], not the policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Nothing to do this tick.
+    Idle,
+    /// Sink leaves into the lowest free blocks of the whole pool.
+    CompactPool,
+    /// Sink leaves into the lowest free blocks of one shard's range.
+    CompactShard(usize),
+    /// Migrate leaves out of shard `from`'s range into shard `to`'s.
+    Rebalance {
+        /// Source shard (overloaded).
+        from: usize,
+        /// Destination shard (underloaded).
+        to: usize,
+    },
+    /// Evict up to `leaves` cold leaves to swap.
+    Evict {
+        /// Eviction budget for this tick.
+        leaves: usize,
+    },
+    /// Fault up to `leaves` swapped-out leaves back in.
+    Restore {
+        /// Restore budget for this tick — bounded by the policy so
+        /// restoring cannot push the pool straight back into its own
+        /// eviction band (watermark hysteresis).
+        leaves: usize,
+    },
+}
+
+/// What the daemon knows beyond the telemetry sample: the registry's
+/// eviction state. Keeps `decide` honest — a policy that cannot see
+/// that nothing is evictable would demand eviction forever under
+/// sustained pressure and starve compaction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyCtx {
+    /// Leaves currently parked in swap across the registry.
+    pub swapped_out: usize,
+    /// Resident leaves of evictable registrations that eviction could
+    /// still take (0 when nothing is evictable or swap is unavailable).
+    pub evictable_resident: usize,
+}
+
+/// A daemon policy. `Send` so it can move onto the daemon thread;
+/// stateful policies (hysteresis, EWMA smoothing) are expected — the
+/// daemon calls `decide` once per tick from its own thread only.
+pub trait Policy: Send {
+    /// Map one telemetry sample (+ eviction context) to one action.
+    fn decide(&mut self, snap: &FragSnapshot, ctx: &PolicyCtx) -> Action;
+}
+
+/// Threshold-triggered policy (see the module docs for the ordering).
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdPolicy {
+    /// Compact the pool when its score exceeds this.
+    pub score_hi: f64,
+    /// Compact a single shard when its local score exceeds this (and
+    /// the pool score did not trip).
+    pub shard_score_hi: f64,
+    /// Rebalance when the occupancy spread exceeds this.
+    pub imbalance_hi: f64,
+    /// Evict when the free ratio falls below this (swap pressure).
+    pub evict_below_free: f64,
+    /// Restore swapped leaves when the free ratio rises above this.
+    pub restore_above_free: f64,
+    /// Leaves to evict per pressure tick.
+    pub evict_leaves: usize,
+}
+
+impl Default for ThresholdPolicy {
+    fn default() -> Self {
+        ThresholdPolicy {
+            score_hi: 0.35,
+            shard_score_hi: 0.6,
+            imbalance_hi: 0.5,
+            evict_below_free: 0.08,
+            restore_above_free: 0.25,
+            evict_leaves: 8,
+        }
+    }
+}
+
+impl Policy for ThresholdPolicy {
+    fn decide(&mut self, s: &FragSnapshot, ctx: &PolicyCtx) -> Action {
+        let free = s.free_ratio();
+        // Evict only when eviction can actually make progress —
+        // otherwise sustained pressure must fall through to compaction
+        // instead of demanding the impossible every tick. Progress
+        // needs (a) evictable resident leaves and (b) limbo that is
+        // draining: evicted blocks are *retired*, not freed, so while a
+        // stalled reader pins a backlog of at least one evict budget,
+        // more eviction only burns swap I/O and TLB shootdowns without
+        // freeing anything.
+        if free < self.evict_below_free
+            && ctx.evictable_resident > 0
+            && s.epoch.limbo < self.evict_leaves
+        {
+            return Action::Evict {
+                leaves: self.evict_leaves,
+            };
+        }
+        if ctx.swapped_out > 0 && free > self.restore_above_free {
+            // Restore only what keeps the pool clear of the eviction
+            // band, with one evict budget of margin: without the cap, a
+            // single restore tick can cross both watermarks and the
+            // evict/restore pair oscillates deterministically (each
+            // cycle costing swap I/O and arena-wide TLB shootdowns).
+            let evict_floor =
+                (self.evict_below_free * s.capacity as f64).ceil() as usize + self.evict_leaves;
+            let headroom = s.free.saturating_sub(evict_floor);
+            let leaves = headroom.min(ctx.swapped_out);
+            if leaves > 0 {
+                return Action::Restore { leaves };
+            }
+        }
+        if s.score > self.score_hi {
+            return Action::CompactPool;
+        }
+        if let Some((worst, &sc)) = s
+            .shard_scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+        {
+            if sc > self.shard_score_hi {
+                return Action::CompactShard(worst);
+            }
+        }
+        if s.imbalance > self.imbalance_hi && s.shard_blocks.len() > 1 {
+            let occ = |i: usize| s.occupancy(i);
+            let mut from = 0;
+            let mut to = 0;
+            for i in 1..s.shard_blocks.len() {
+                if occ(i) > occ(from) {
+                    from = i;
+                }
+                if occ(i) < occ(to) {
+                    to = i;
+                }
+            }
+            if from != to {
+                return Action::Rebalance { from, to };
+            }
+        }
+        Action::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> FragSnapshot {
+        FragSnapshot {
+            capacity: 100,
+            live: 40,
+            free: 60,
+            shard_live: vec![20, 20],
+            shard_blocks: vec![50, 50],
+            shard_scores: vec![0.0, 0.0],
+            ..FragSnapshot::default()
+        }
+    }
+
+    fn ctx(swapped_out: usize, evictable_resident: usize) -> PolicyCtx {
+        PolicyCtx {
+            swapped_out,
+            evictable_resident,
+        }
+    }
+
+    #[test]
+    fn healthy_pool_idles() {
+        let mut p = ThresholdPolicy::default();
+        assert_eq!(p.decide(&snap(), &ctx(0, 0)), Action::Idle);
+    }
+
+    #[test]
+    fn swap_pressure_outranks_everything() {
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.free = 4;
+        s.live = 96;
+        s.score = 0.9; // fragmented too — eviction still wins
+        assert_eq!(p.decide(&s, &ctx(0, 40)), Action::Evict { leaves: 8 });
+    }
+
+    #[test]
+    fn evict_waits_for_limbo_to_drain() {
+        // A stalled reader pins a backlog of retired blocks: evicting
+        // more cannot free memory, so pressure falls through to
+        // compaction until the limbo drains below one evict budget.
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.free = 4;
+        s.live = 96;
+        s.score = 0.9;
+        s.epoch.limbo = 8; // >= evict_leaves
+        assert_eq!(p.decide(&s, &ctx(0, 40)), Action::CompactPool);
+        s.epoch.limbo = 3; // draining again
+        assert_eq!(p.decide(&s, &ctx(0, 40)), Action::Evict { leaves: 8 });
+    }
+
+    #[test]
+    fn pressure_without_evictable_leaves_falls_through_to_compaction() {
+        // Nothing registered evictable (or swap unavailable): demanding
+        // eviction forever would starve compaction — the score trigger
+        // must still fire.
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.free = 4;
+        s.live = 96;
+        s.score = 0.9;
+        assert_eq!(p.decide(&s, &ctx(0, 0)), Action::CompactPool);
+    }
+
+    #[test]
+    fn restore_once_pressure_clears() {
+        let mut p = ThresholdPolicy::default();
+        let s = snap(); // 60% free, well above the watermark
+        // 60 free − (ceil(8) + 8 margin) = 44 of headroom, but only 3
+        // leaves are out.
+        assert_eq!(p.decide(&s, &ctx(3, 37)), Action::Restore { leaves: 3 });
+        // Nothing swapped: no restore, fall through to idle.
+        assert_eq!(p.decide(&s, &ctx(0, 40)), Action::Idle);
+    }
+
+    #[test]
+    fn restore_is_hysteresis_bounded() {
+        // The oscillation trap: free barely above the restore watermark
+        // with many leaves out. Restoring them all would land free back
+        // under the evict watermark; the budget must stop short.
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.capacity = 32;
+        s.free = 9; // 28% > restore_above_free (25%)
+        s.live = 23;
+        // evict_floor = ceil(0.08*32)=3 + margin 8 = 11 > 9 free: no
+        // safe restore headroom -> do NOT restore (idle), rather than
+        // restore 8 and immediately re-trigger eviction.
+        assert_eq!(p.decide(&s, &ctx(8, 0)), Action::Idle);
+        // With real headroom the budget is the headroom, not everything.
+        s.capacity = 100;
+        s.free = 30;
+        s.live = 70;
+        match p.decide(&s, &ctx(50, 0)) {
+            Action::Restore { leaves } => {
+                assert_eq!(leaves, 30 - (8 + 8), "headroom-bounded restore");
+            }
+            other => panic!("expected a bounded restore, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn score_triggers_pool_compaction() {
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.score = 0.8;
+        assert_eq!(p.decide(&s, &ctx(0, 0)), Action::CompactPool);
+    }
+
+    #[test]
+    fn shard_local_score_triggers_shard_compaction() {
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.score = 0.1; // pool looks fine
+        s.shard_scores = vec![0.1, 0.9];
+        assert_eq!(p.decide(&s, &ctx(0, 0)), Action::CompactShard(1));
+    }
+
+    #[test]
+    fn imbalance_triggers_rebalance_fullest_to_emptiest() {
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.shard_live = vec![45, 2];
+        s.imbalance = 0.86;
+        assert_eq!(p.decide(&s, &ctx(0, 0)), Action::Rebalance { from: 0, to: 1 });
+    }
+}

@@ -15,7 +15,11 @@ use crate::pmem::BlockId;
 
 /// Allocation statistics (also the fragmentation story of §3: external
 /// fragmentation is impossible by construction — every free block can
-/// satisfy every request — so the only interesting numbers are counts).
+/// satisfy every request — so the classical numbers are counts; the
+/// *placement* fragmentation a compactor cares about lives in
+/// [`crate::mmd::FragSampler`]). The reclamation fields mirror the
+/// pool's [`crate::pmem::ArenaEpoch`] so `stats()` alone shows
+/// reclamation health without constructing a daemon.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct AllocStats {
     /// Blocks currently allocated.
@@ -28,6 +32,45 @@ pub struct AllocStats {
     pub total_frees: u64,
     /// Failed allocations (pool exhausted).
     pub failed_allocs: u64,
+    /// Blocks currently parked in the epoch's limbo list (retired by a
+    /// concurrent relocation/eviction, waiting for readers to quiesce).
+    pub limbo: usize,
+    /// Blocks retired into limbo over the pool's lifetime.
+    pub retired: u64,
+    /// Retired blocks returned to the pool so far.
+    pub reclaimed: u64,
+    /// Cumulative epochs reclaimed blocks waited in limbo (divide by
+    /// `reclaimed` for the mean reclaim latency in epochs).
+    pub reclaim_lag: u64,
+}
+
+impl AllocStats {
+    /// Mean epochs a reclaimed block waited in limbo (0 when nothing
+    /// has been reclaimed yet).
+    pub fn mean_reclaim_lag(&self) -> f64 {
+        if self.reclaimed == 0 {
+            0.0
+        } else {
+            self.reclaim_lag as f64 / self.reclaimed as f64
+        }
+    }
+}
+
+/// Mask of the bits of bitmap word `w` (block ids `w*64 .. w*64+64`)
+/// that fall inside the block-id span `[lo, hi)`. The one copy of the
+/// boundary arithmetic both allocators' `alloc_in_span` scans share;
+/// callers iterate `w` over `lo / 64 .. hi.div_ceil(64)` (so
+/// `w * 64 < hi` always holds here).
+pub(crate) fn span_word_mask(w: usize, lo: usize, hi: usize) -> u64 {
+    let first = w * 64;
+    let mut mask = !0u64;
+    if lo > first {
+        mask &= !0u64 << (lo - first);
+    }
+    if hi - first < 64 {
+        mask &= (1u64 << (hi - first)) - 1;
+    }
+    mask
 }
 
 /// Contention counters for concurrent allocators. The mutex baseline
@@ -66,6 +109,34 @@ pub trait BlockAlloc: Send + Sync {
     /// Allocate a block and zero its contents (freed blocks may hold
     /// stale data; fresh arena blocks are already zero).
     fn alloc_zeroed(&self) -> Result<BlockId>;
+
+    /// Allocate the **lowest-id** free block whose id lies in
+    /// `[lo, hi)` (`hi` is clamped to the capacity). This is the
+    /// placement hook compaction and rebalancing policies use
+    /// ([`crate::mmd`]): ordinary `alloc` optimizes for speed and
+    /// thread affinity, `alloc_in_span` for *where* the block lands —
+    /// sinking relocated leaves toward the bottom of the pool (or into
+    /// a chosen shard's range) so free space consolidates. Slower than
+    /// `alloc` (a bitmap scan); meant for the daemon's paced moves, not
+    /// the hot path.
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId>;
+
+    /// The block-id span `[lo, hi)` of each allocation shard.
+    /// Single-shard designs (the mutex baseline) report one span
+    /// covering the pool; [`crate::pmem::ShardedAllocator`] reports its
+    /// per-shard bitmap ranges so fragmentation telemetry and
+    /// rebalancing can reason per shard.
+    fn shard_spans(&self) -> Vec<(usize, usize)> {
+        vec![(0, self.capacity())]
+    }
+
+    /// Snapshot the pool's live bitmap into `out` (bit set = block
+    /// allocated; one `u64` per 64 blocks, `capacity.div_ceil(64)`
+    /// words, bits past the capacity zero). The fragmentation-telemetry
+    /// primitive: cheap (atomic word loads, or one short lock for the
+    /// mutex baseline) and safe to call while allocation proceeds — the
+    /// snapshot is a consistent-enough sample, not a fence.
+    fn live_snapshot(&self, out: &mut Vec<u64>);
 
     /// Return a block to the pool. Double frees are rejected.
     fn free(&self, id: BlockId) -> Result<()>;
@@ -110,4 +181,25 @@ pub trait BlockAlloc: Send + Sync {
 
     /// Copy bytes out of a block (safe, bounds-checked API).
     fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::span_word_mask;
+
+    #[test]
+    fn span_word_mask_edges() {
+        // Full word strictly inside the span.
+        assert_eq!(span_word_mask(1, 0, 256), !0u64);
+        // lo inside the word: bits below lo cleared.
+        assert_eq!(span_word_mask(0, 3, 256), !0u64 << 3);
+        // hi inside the word: bits at/above hi cleared.
+        assert_eq!(span_word_mask(0, 0, 5), (1u64 << 5) - 1);
+        // lo and hi inside the SAME word: both masks apply.
+        assert_eq!(span_word_mask(0, 3, 5), 0b11000);
+        // hi exactly at the word boundary keeps the full word.
+        assert_eq!(span_word_mask(0, 0, 64), !0u64);
+        // Degenerate span within one word: no bits.
+        assert_eq!(span_word_mask(0, 5, 5), 0);
+    }
 }

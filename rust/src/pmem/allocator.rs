@@ -122,6 +122,58 @@ impl BlockAllocator {
         Ok(id)
     }
 
+    /// Allocate the lowest-id free block in `[lo, hi)` — the placement
+    /// hook background compaction uses (see [`BlockAlloc::alloc_in_span`]).
+    /// Unlike the LIFO `alloc`, this scans the live bitmap, so it pays
+    /// O(capacity/64) under the lock plus an O(free) free-list patch;
+    /// fine for the daemon's paced moves.
+    pub fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        let hi = hi.min(self.arena.capacity());
+        let mut g = self.inner.lock().unwrap();
+        let mut found = None;
+        for w in lo / 64..hi.div_ceil(64) {
+            // Free bits of this word, masked to [lo, hi). Bits past the
+            // capacity are never set in `live`, but hi <= capacity masks
+            // them out of `!live` anyway.
+            let free_bits = !g.live[w] & crate::pmem::alloc_trait::span_word_mask(w, lo, hi);
+            if free_bits != 0 {
+                found = Some(w * 64 + free_bits.trailing_zeros() as usize);
+                break;
+            }
+        }
+        match found {
+            Some(id) => {
+                let pos = g
+                    .free
+                    .iter()
+                    .position(|&x| x as usize == id)
+                    .expect("free list and live bitmap must agree");
+                g.free.swap_remove(pos);
+                g.set_live(id as u32, true);
+                g.stats.allocated += 1;
+                g.stats.total_allocs += 1;
+                g.stats.peak = g.stats.peak.max(g.stats.allocated);
+                Ok(BlockId(id as u32))
+            }
+            None => Err(Error::OutOfMemory {
+                // A full span is an *expected* probe miss for the
+                // compactor ("is there a free block below this leaf?"),
+                // not pool exhaustion — don't count a failed alloc.
+                requested: 1,
+                free: 0,
+                capacity: self.arena.capacity(),
+            }),
+        }
+    }
+
+    /// Snapshot the live bitmap (bit set = allocated); see
+    /// [`BlockAlloc::live_snapshot`].
+    pub fn live_snapshot(&self, out: &mut Vec<u64>) {
+        let g = self.inner.lock().unwrap();
+        out.clear();
+        out.extend_from_slice(&g.live);
+    }
+
     /// Return a block to the pool. Double frees are rejected.
     pub fn free(&self, id: BlockId) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
@@ -152,9 +204,12 @@ impl BlockAllocator {
         self.inner.lock().unwrap().free.len()
     }
 
-    /// Snapshot of allocation statistics.
+    /// Snapshot of allocation statistics (reclamation health — limbo
+    /// depth, reclaim latency — mirrored from the pool's epoch).
     pub fn stats(&self) -> AllocStats {
-        self.inner.lock().unwrap().stats
+        let mut s = self.inner.lock().unwrap().stats;
+        self.epoch.fill_alloc_stats(&mut s);
+        s
     }
 
     /// Is `id` currently allocated?
@@ -216,6 +271,14 @@ impl BlockAlloc for BlockAllocator {
 
     fn alloc_zeroed(&self) -> Result<BlockId> {
         BlockAllocator::alloc_zeroed(self)
+    }
+
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        BlockAllocator::alloc_in_span(self, lo, hi)
+    }
+
+    fn live_snapshot(&self, out: &mut Vec<u64>) {
+        BlockAllocator::live_snapshot(self, out)
     }
 
     fn free(&self, id: BlockId) -> Result<()> {
@@ -406,6 +469,45 @@ mod tests {
                 assert_eq!(out, [i as u8; 64]);
             }
         });
+    }
+
+    #[test]
+    fn alloc_in_span_takes_lowest_in_range() {
+        let a = BlockAllocator::new(4096, 130).unwrap();
+        let all = a.alloc_many(130).unwrap();
+        // Free blocks 3, 70 and 128 (spanning three bitmap words).
+        for &i in &[3usize, 70, 128] {
+            a.free(all[i]).unwrap();
+        }
+        assert_eq!(a.alloc_in_span(0, 130).unwrap(), BlockId(3));
+        assert_eq!(a.alloc_in_span(64, 130).unwrap(), BlockId(70));
+        assert!(a.alloc_in_span(0, 128).is_err(), "3 and 70 retaken");
+        assert_eq!(a.alloc_in_span(0, 130).unwrap(), BlockId(128));
+        assert!(a.alloc_in_span(0, 130).is_err(), "pool full again");
+        assert_eq!(a.stats().allocated, 130, "span allocs must be counted");
+        for b in all {
+            if a.is_live(b) {
+                a.free(b).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn live_snapshot_matches_is_live() {
+        let a = BlockAllocator::new(4096, 70).unwrap();
+        let blocks = a.alloc_many(70).unwrap();
+        for b in blocks.iter().skip(1).step_by(3) {
+            a.free(*b).unwrap();
+        }
+        let mut snap = Vec::new();
+        a.live_snapshot(&mut snap);
+        assert_eq!(snap.len(), 2);
+        for i in 0..70u32 {
+            let bit = (snap[(i / 64) as usize] >> (i % 64)) & 1 == 1;
+            assert_eq!(bit, a.is_live(BlockId(i)), "block {i}");
+        }
+        // Bits past the capacity stay clear.
+        assert_eq!(snap[1] >> 6, 0);
     }
 
     #[test]

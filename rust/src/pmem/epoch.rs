@@ -66,6 +66,21 @@ pub struct EpochStats {
     pub reclaimed: u64,
     /// Blocks currently in limbo (retired, not yet reclaimable).
     pub limbo: usize,
+    /// Cumulative epochs reclaimed blocks waited in limbo — the
+    /// reclaim-latency counter (divide by `reclaimed` for the mean).
+    pub reclaim_lag: u64,
+}
+
+impl EpochStats {
+    /// Mean epochs a reclaimed block waited in limbo (0 when nothing
+    /// has been reclaimed yet).
+    pub fn mean_reclaim_lag(&self) -> f64 {
+        if self.reclaimed == 0 {
+            0.0
+        } else {
+            self.reclaim_lag as f64 / self.reclaimed as f64
+        }
+    }
 }
 
 /// The shared relocation epoch of one block pool. See the module docs
@@ -80,6 +95,8 @@ pub struct ArenaEpoch {
     limbo: Mutex<Vec<(BlockId, u64)>>,
     retired_total: AtomicU64,
     reclaimed_total: AtomicU64,
+    /// Sum over reclaimed blocks of (reclaim epoch - retire epoch).
+    lag_total: AtomicU64,
 }
 
 impl ArenaEpoch {
@@ -91,6 +108,7 @@ impl ArenaEpoch {
             limbo: Mutex::new(Vec::new()),
             retired_total: AtomicU64::new(0),
             reclaimed_total: AtomicU64::new(0),
+            lag_total: AtomicU64::new(0),
         }
     }
 
@@ -162,11 +180,16 @@ impl ArenaEpoch {
             return 0;
         }
         let safe = self.min_reader_epoch();
+        let now = self.current();
         let before = limbo.len();
         limbo.retain(|&(block, retire_epoch)| {
             if retire_epoch <= safe {
                 let freed = alloc.free(block);
                 debug_assert!(freed.is_ok(), "reclaiming retired block failed: {freed:?}");
+                // Reclaim latency: how many epochs the block sat in
+                // limbo before readers quiesced past it.
+                self.lag_total
+                    .fetch_add(now.saturating_sub(retire_epoch), Ordering::Relaxed);
                 false
             } else {
                 true
@@ -207,7 +230,18 @@ impl ArenaEpoch {
             retired: self.retired_total.load(Ordering::Relaxed),
             reclaimed: self.reclaimed_total.load(Ordering::Relaxed),
             limbo: self.limbo_len(),
+            reclaim_lag: self.lag_total.load(Ordering::Relaxed),
         }
+    }
+
+    /// Mirror the reclamation counters into an [`crate::pmem::AllocStats`]
+    /// (both allocators call this from `stats()` so limbo depth and
+    /// reclaim latency surface next to the allocation counters).
+    pub(crate) fn fill_alloc_stats(&self, s: &mut crate::pmem::AllocStats) {
+        s.limbo = self.limbo_len();
+        s.retired = self.retired_total.load(Ordering::Relaxed);
+        s.reclaimed = self.reclaimed_total.load(Ordering::Relaxed);
+        s.reclaim_lag = self.lag_total.load(Ordering::Relaxed);
     }
 }
 
@@ -361,6 +395,31 @@ mod tests {
         drop(r2); // deregistered
         assert_eq!(e.try_reclaim(&a), 1);
         assert_eq!(e.stats().readers, 1, "r1 still registered");
+    }
+
+    #[test]
+    fn reclaim_lag_measures_epochs_in_limbo() {
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let e = a.epoch();
+        // Immediate reclaim: retired and reclaimed at the same epoch.
+        let b1 = a.alloc().unwrap();
+        e.retire(b1, e.bump());
+        assert_eq!(e.try_reclaim(&a), 1);
+        assert_eq!(e.stats().reclaim_lag, 0);
+        // Two more relocations happen before b2 is reclaimed: lag 2.
+        let b2 = a.alloc().unwrap();
+        e.retire(b2, e.bump());
+        e.bump();
+        e.bump();
+        assert_eq!(e.try_reclaim(&a), 1);
+        let s = e.stats();
+        assert_eq!(s.reclaim_lag, 2);
+        assert!((s.mean_reclaim_lag() - 1.0).abs() < 1e-9, "2 lag / 2 reclaimed");
+        // And the allocator surfaces the same numbers in AllocStats.
+        let alloc_stats = a.stats();
+        assert_eq!(alloc_stats.reclaimed, 2);
+        assert_eq!(alloc_stats.reclaim_lag, 2);
+        assert_eq!(alloc_stats.limbo, 0);
     }
 
     #[test]

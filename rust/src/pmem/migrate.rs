@@ -156,7 +156,39 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         }
         // SAFETY: forwarded — the caller upholds the contract above,
         // which is this fn's contract with `defer_free == true`.
-        unsafe { self.relocate_leaf_impl(leaf_idx, true) }
+        unsafe { self.relocate_leaf_impl(leaf_idx, true, None) }
+    }
+
+    /// [`TreeArray::migrate_leaf_concurrent`] with a **caller-chosen
+    /// destination block** — the placement-directed form background
+    /// compaction uses ([`crate::mmd`]): the daemon allocates `dest`
+    /// low in the pool (or inside a chosen shard) via
+    /// [`crate::pmem::BlockAlloc::alloc_in_span`] and sinks the leaf
+    /// into it, which is what consolidates free space instead of just
+    /// shuffling it.
+    ///
+    /// On success ownership of `dest` transfers to the tree and the
+    /// displaced block is retired into limbo (same deferred-reclaim
+    /// protocol). On error (out-of-bounds leaf) the tree is untouched
+    /// and the caller keeps `dest` — free it or reuse it.
+    ///
+    /// # Safety
+    /// The full [`TreeArray::migrate_leaf_concurrent`] contract, plus:
+    /// `dest` is a live block exclusively owned by the caller and not
+    /// referenced by any tree.
+    pub unsafe fn migrate_leaf_concurrent_to(
+        &self,
+        leaf_idx: usize,
+        dest: BlockId,
+    ) -> Result<BlockId> {
+        if leaf_idx >= self.nleaves() {
+            return Err(Error::IndexOutOfBounds {
+                index: leaf_idx,
+                len: self.nleaves(),
+            });
+        }
+        // SAFETY: forwarded — the caller upholds the contract above.
+        unsafe { self.relocate_leaf_impl(leaf_idx, true, Some(dest)) }
     }
 
     /// [`TreeArray::migrate_leaf`] through `&self`: location metadata is
@@ -183,7 +215,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         }
         // SAFETY: forwarded verbatim — the caller upholds this fn's
         // identical contract (immediate free: no concurrent readers).
-        unsafe { self.relocate_leaf_impl(leaf_idx, false) }
+        unsafe { self.relocate_leaf_impl(leaf_idx, false, None) }
     }
 }
 
@@ -296,6 +328,46 @@ mod tests {
         assert_eq!(a.epoch().synchronize(&a), 1);
         assert_eq!(a.stats().allocated, live);
         assert!(unsafe { t.migrate_leaf_concurrent(99) }.is_err(), "oob leaf");
+    }
+
+    #[test]
+    fn migrate_leaf_concurrent_to_lands_on_the_chosen_block() {
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let n = 256 * 3;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(7919)).collect();
+        t.copy_from_slice(&data).unwrap();
+        let dest = a.alloc_in_span(0, 256).unwrap();
+        // SAFETY: no readers, no raw slices; dest freshly allocated.
+        let got = unsafe { t.migrate_leaf_concurrent_to(1, dest) }.unwrap();
+        assert_eq!(got, dest);
+        assert_eq!(t.leaf_block(1), dest, "leaf must live on the chosen block");
+        assert_eq!(t.to_vec(), data);
+        // OOB leaf: tree untouched, caller keeps dest.
+        let spare = a.alloc().unwrap();
+        assert!(unsafe { t.migrate_leaf_concurrent_to(99, spare) }.is_err());
+        assert!(a.is_live(spare), "failed migrate must not consume dest");
+        a.free(spare).unwrap();
+        a.epoch().synchronize(&a);
+    }
+
+    #[test]
+    fn tree_teardown_reclaims_limbo() {
+        // Satellite: blocks retired by migrate_leaf_concurrent used to
+        // stay in limbo until an *explicit* try_reclaim/synchronize;
+        // teardown now runs a non-blocking reclaim pass so the pool's
+        // free count returns to baseline without one.
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        assert_eq!(a.stats().allocated, 0);
+        {
+            let t: TreeArray<u32> = TreeArray::new(&a, 256 * 3).unwrap();
+            // SAFETY: no readers, no raw slices, single thread.
+            unsafe { t.migrate_leaf_concurrent(0) }.unwrap();
+            unsafe { t.migrate_leaf_concurrent(1) }.unwrap();
+            assert_eq!(a.epoch().limbo_len(), 2);
+        } // drop: frees the tree's blocks, then drains limbo
+        assert_eq!(a.epoch().limbo_len(), 0, "teardown must drain limbo");
+        assert_eq!(a.stats().allocated, 0, "free count must return to baseline");
     }
 
     #[test]

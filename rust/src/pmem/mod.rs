@@ -20,6 +20,12 @@
 //!   [`SwapPool`]) that translation caches revalidate against, plus the
 //!   quiescent-state deferred reclamation concurrent readers need (see
 //!   [`epoch`]).
+//!
+//! The [`crate::mmd`] daemon drives this layer in the background:
+//! [`BlockAlloc::live_snapshot`] / [`BlockAlloc::shard_spans`] feed its
+//! fragmentation telemetry, [`BlockAlloc::alloc_in_span`] gives its
+//! compactor placement control, and [`SwapPool::evict_deferred`] is its
+//! reader-safe eviction hook.
 
 pub mod alloc_trait;
 mod allocator;
@@ -40,4 +46,4 @@ pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;
 pub use sharded::ShardedAllocator;
-pub use swap::SwapPool;
+pub use swap::{SwapPool, SwapSlot, SwapStats};

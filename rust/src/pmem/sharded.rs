@@ -338,6 +338,70 @@ impl BlockAlloc for ShardedAllocator {
         Ok(id)
     }
 
+    /// Lowest-id free block in `[lo, hi)`: a lock-free ascending bitmap
+    /// scan (word-level CAS, same ownership-transfer ordering as the
+    /// shard paths). Ignores shard affinity by design — placement is
+    /// the point ([`BlockAlloc::alloc_in_span`]); contention met here is
+    /// not counted against any shard's counters.
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        let hi = hi.min(self.arena.capacity());
+        for w in lo / 64..hi.div_ceil(64) {
+            let first = w * 64;
+            let mask = crate::pmem::alloc_trait::span_word_mask(w, lo, hi);
+            loop {
+                let cur = self.words[w].load(Ordering::Relaxed);
+                let avail = cur & mask;
+                if avail == 0 {
+                    break;
+                }
+                let bit = avail.trailing_zeros();
+                if self.words[w]
+                    .compare_exchange_weak(
+                        cur,
+                        cur & !(1u64 << bit),
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    self.record_allocs(1);
+                    return Ok(BlockId((first + bit as usize) as u32));
+                }
+            }
+        }
+        // A full span is an expected probe miss for the compactor, not
+        // pool exhaustion — don't count a failed alloc.
+        Err(Error::OutOfMemory {
+            requested: 1,
+            free: 0,
+            capacity: self.arena.capacity(),
+        })
+    }
+
+    fn shard_spans(&self) -> Vec<(usize, usize)> {
+        let cap = self.arena.capacity();
+        self.shards
+            .iter()
+            .map(|s| (s.lo * 64, (s.hi * 64).min(cap)))
+            .collect()
+    }
+
+    fn live_snapshot(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.reserve(self.words.len());
+        let cap = self.arena.capacity();
+        for (w, word) in self.words.iter().enumerate() {
+            // `words` is the FREE bitmap; invert and mask the tail so
+            // bits past the capacity read as not-allocated.
+            let mut live = !word.load(Ordering::Acquire);
+            let first = w * 64;
+            if cap - first < 64 {
+                live &= (1u64 << (cap - first)) - 1;
+            }
+            out.push(live);
+        }
+    }
+
     fn free(&self, id: BlockId) -> Result<()> {
         let i = id.0 as usize;
         if i >= self.arena.capacity() {
@@ -389,13 +453,16 @@ impl BlockAlloc for ShardedAllocator {
     }
 
     fn stats(&self) -> AllocStats {
-        AllocStats {
+        let mut s = AllocStats {
             allocated: self.allocated.load(Ordering::Acquire),
             peak: self.peak.load(Ordering::Acquire),
             total_allocs: self.total_allocs.load(Ordering::Relaxed),
             total_frees: self.total_frees.load(Ordering::Relaxed),
             failed_allocs: self.failed_allocs.load(Ordering::Relaxed),
-        }
+            ..AllocStats::default()
+        };
+        self.epoch.fill_alloc_stats(&mut s);
+        s
     }
 
     fn contention(&self) -> ContentionStats {
@@ -596,6 +663,52 @@ mod tests {
         let _x = a.alloc().unwrap();
         assert_eq!(a.stats().peak, 5);
         assert_eq!(a.stats().allocated, 3);
+    }
+
+    #[test]
+    fn alloc_in_span_takes_lowest_in_range() {
+        let a = sharded(130, 2);
+        let all = a.alloc_many(130).unwrap();
+        // Claim order is shard-affine, not id order: free ids by value.
+        for want in [3u32, 70, 128] {
+            let b = all.iter().copied().find(|b| b.0 == want).unwrap();
+            a.free(b).unwrap();
+        }
+        assert_eq!(a.alloc_in_span(0, 130).unwrap(), BlockId(3));
+        assert_eq!(a.alloc_in_span(64, 130).unwrap(), BlockId(70));
+        assert!(a.alloc_in_span(0, 128).is_err(), "3 and 70 retaken");
+        assert_eq!(a.alloc_in_span(0, 130).unwrap(), BlockId(128));
+        assert!(a.alloc_in_span(0, 130).is_err(), "pool full again");
+        assert_eq!(a.stats().allocated, 130, "span allocs must be counted");
+    }
+
+    #[test]
+    fn shard_spans_tile_the_pool() {
+        let a = sharded(300, 3); // 5 words split 1/2/2
+        let spans = a.shard_spans();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans.first().unwrap().0, 0);
+        assert_eq!(spans.last().unwrap().1, 300, "last span clamps to capacity");
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "spans must tile without gaps");
+        }
+    }
+
+    #[test]
+    fn live_snapshot_matches_is_live() {
+        let a = sharded(70, 2);
+        let blocks = a.alloc_many(70).unwrap();
+        for b in blocks.iter().skip(1).step_by(3) {
+            a.free(*b).unwrap();
+        }
+        let mut snap = Vec::new();
+        a.live_snapshot(&mut snap);
+        assert_eq!(snap.len(), 2);
+        for i in 0..70u32 {
+            let bit = (snap[(i / 64) as usize] >> (i % 64)) & 1 == 1;
+            assert_eq!(bit, a.is_live(BlockId(i)), "block {i}");
+        }
+        assert_eq!(snap[1] >> 6, 0, "bits past capacity must read free");
     }
 
     #[test]

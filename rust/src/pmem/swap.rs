@@ -82,9 +82,10 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
         Ok(pool)
     }
 
-    /// Evict `block`: write its payload to disk, free the physical
-    /// block, return the slot handle.
-    pub fn evict(&self, block: BlockId) -> Result<SwapSlot> {
+    /// Write `block`'s payload into a (new or recycled) swap slot and
+    /// record it resident. Shared by both eviction forms; does not
+    /// dispose of the physical block.
+    fn stash(&self, block: BlockId) -> Result<u64> {
         if !self.alloc.is_live(block) {
             return Err(Error::InvalidBlock(block));
         }
@@ -97,12 +98,32 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
             g.next_slot += 1;
             s
         });
-        g.file.seek(SeekFrom::Start(slot * bs as u64))?;
-        g.file.write_all(&buf)?;
+        if let Err(e) = g
+            .file
+            .seek(SeekFrom::Start(slot * bs as u64))
+            .and_then(|_| g.file.write_all(&buf))
+        {
+            // Failure-atomic like `fault`: return the slot to the free
+            // list instead of leaking it (it is in neither `live` nor
+            // `free_slots` here), so retried evictions reuse it.
+            g.free_slots.push(slot);
+            return Err(e.into());
+        }
         g.live.insert(slot, ());
         g.stats.evictions += 1;
         g.stats.resident_slots = g.live.len();
-        drop(g);
+        Ok(slot)
+    }
+
+    /// Evict `block`: write its payload to disk, free the physical
+    /// block, return the slot handle.
+    ///
+    /// The free is immediate, so no concurrent reader may hold a cached
+    /// translation into `block` (the [`crate::trees::TreeArray::migrate_leaf`]
+    /// contract); under live epoch-registered readers use
+    /// [`SwapPool::evict_deferred`].
+    pub fn evict(&self, block: BlockId) -> Result<SwapSlot> {
+        let slot = self.stash(block)?;
         self.alloc.free(block)?;
         // Eviction is a relocation (memory -> disk): any cached
         // translation to `block` is dead, so shoot down arena-wide.
@@ -110,23 +131,65 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
         Ok(SwapSlot(slot))
     }
 
+    /// [`SwapPool::evict`] under **live concurrent readers**: the
+    /// payload goes to disk, but the physical block is *retired* into
+    /// the arena epoch's limbo list instead of freed — it returns to
+    /// the pool only once every registered reader has pinned past the
+    /// eviction ([`crate::pmem::ArenaEpoch::try_reclaim`]), so a read
+    /// already in flight through a stale cached translation still
+    /// dereferences stable bytes. This is to `evict` what
+    /// `migrate_leaf_concurrent` is to `migrate_leaf`, and the eviction
+    /// hook the [`crate::mmd`] daemon drives.
+    pub fn evict_deferred(&self, block: BlockId) -> Result<SwapSlot> {
+        let slot = self.stash(block)?;
+        // Bump first (shootdown: post-eviction readers revalidate), then
+        // park the block in limbo stamped with the post-move epoch.
+        let e = self.alloc.epoch().bump();
+        self.alloc.epoch().retire(block, e);
+        Ok(SwapSlot(slot))
+    }
+
     /// Fault `slot` back in: allocate a fresh block, read the payload,
     /// release the slot. Returns the (new) physical block.
+    ///
+    /// The block is allocated *before* the slot is consumed: if the
+    /// pool is exhausted the fault fails cleanly and the slot stays
+    /// resident (retry after freeing memory), instead of losing the
+    /// payload.
     pub fn fault(&self, slot: SwapSlot) -> Result<BlockId> {
         let bs = self.alloc.block_size();
+        {
+            // Cheap pre-check so an invalid slot errors without burning
+            // an allocation.
+            let g = self.inner.lock().unwrap();
+            if !g.live.contains_key(&slot.0) {
+                return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
+            }
+        }
+        let fresh = self.alloc.alloc()?;
         let mut buf = vec![0u8; bs];
         {
             let mut g = self.inner.lock().unwrap();
             if g.live.remove(&slot.0).is_none() {
+                // Lost a double-fault race; return the speculative block.
+                let _ = self.alloc.free(fresh);
                 return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
             }
-            g.file.seek(SeekFrom::Start(slot.0 * bs as u64))?;
-            g.file.read_exact(&mut buf)?;
+            if let Err(e) = g
+                .file
+                .seek(SeekFrom::Start(slot.0 * bs as u64))
+                .and_then(|_| g.file.read_exact(&mut buf))
+            {
+                // I/O failure: keep the slot resident, free the block.
+                g.live.insert(slot.0, ());
+                drop(g);
+                let _ = self.alloc.free(fresh);
+                return Err(e.into());
+            }
             g.free_slots.push(slot.0);
             g.stats.faults += 1;
             g.stats.resident_slots = g.live.len();
         }
-        let fresh = self.alloc.alloc()?;
         self.alloc.write(fresh, 0, &buf)?;
         // No epoch bump here: the relocation's shootdown happened at
         // evict() (that is when the old translation died); `fresh` is a
@@ -224,6 +287,136 @@ mod tests {
         }
         let g = swap.inner.lock().unwrap();
         assert!(g.next_slot <= 2, "slots must be recycled, used {}", g.next_slot);
+    }
+
+    #[test]
+    fn evict_fault_roundtrip_sharded_allocator() {
+        use crate::pmem::ShardedAllocator;
+        let a = ShardedAllocator::with_shards(4096, 8, 2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 10, b"sharded swap").unwrap();
+        let before = a.stats().allocated;
+        let slot = swap.evict(b).unwrap();
+        assert_eq!(a.stats().allocated, before - 1, "physical block freed");
+        assert!(!a.is_live(b));
+        let nb = swap.fault(slot).unwrap();
+        let mut out = [0u8; 12];
+        a.read(nb, 10, &mut out).unwrap();
+        assert_eq!(&out, b"sharded swap");
+        a.free(nb).unwrap();
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn deferred_evict_waits_for_pinned_reader() {
+        // The satellite scenario: a registered reader pinned *before*
+        // the eviction may still dereference the evicted block through
+        // a cached translation, so evict_deferred must park it in limbo
+        // until the reader quiesces — and the bytes must stay intact in
+        // the meantime.
+        let a = BlockAllocator::new(4096, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let reader = a.epoch().register();
+        reader.pin();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"cold leaf").unwrap();
+        let live = a.stats().allocated;
+        let e0 = a.epoch().current();
+        let slot = swap.evict_deferred(b).unwrap();
+        assert_eq!(a.epoch().current(), e0 + 1, "deferred evict must shoot down");
+        assert!(a.is_live(b), "block must stay allocated while the reader is stale");
+        assert_eq!(a.stats().limbo, 1);
+        assert_eq!(a.epoch().try_reclaim(&a), 0, "pinned reader blocks reclaim");
+        // The stale translation still reads stable bytes.
+        let mut out = [0u8; 9];
+        a.read(b, 0, &mut out).unwrap();
+        assert_eq!(&out, b"cold leaf");
+        // Reader quiesces: the block returns to the pool.
+        reader.pin();
+        assert_eq!(a.epoch().try_reclaim(&a), 1);
+        assert_eq!(a.stats().allocated, live - 1);
+        // The payload faults back regardless.
+        let nb = swap.fault(slot).unwrap();
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"cold leaf");
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn deferred_evict_under_sharded_allocator_and_view_reader() {
+        // End-to-end with a real revalidating reader: a TreeView holds a
+        // cached translation over one tree while an *unrelated* block in
+        // the same pool is deferred-evicted; the view pins, flushes, and
+        // keeps verifying, and the evicted block reclaims only after.
+        use crate::pmem::ShardedAllocator;
+        use crate::trees::TreeArray;
+        let a = ShardedAllocator::with_shards(1024, 64, 2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut tree: TreeArray<u32, ShardedAllocator> = TreeArray::new(&a, 256 * 2).unwrap();
+        let data: Vec<u32> = (0..512u32).collect();
+        tree.copy_from_slice(&data).unwrap();
+        let mut view = tree.view();
+        assert_eq!(view.get(5).unwrap(), data[5]); // pins + caches leaf 0
+        let cold = a.alloc().unwrap();
+        a.write(cold, 0, b"victim").unwrap();
+        let slot = swap.evict_deferred(cold).unwrap();
+        assert_eq!(a.epoch().try_reclaim(&a), 0, "view pinned pre-eviction");
+        // The view's next access pins the post-eviction epoch (flushing
+        // its TLB), unblocking the reclaim.
+        assert_eq!(view.get(5).unwrap(), data[5]);
+        assert!(view.tlb_stats().invalidations >= 1, "shootdown must flush");
+        assert_eq!(a.epoch().try_reclaim(&a), 1);
+        let nb = swap.fault(slot).unwrap();
+        let mut out = [0u8; 6];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"victim");
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn fault_on_exhausted_pool_keeps_the_slot_resident() {
+        let a = BlockAllocator::new(1024, 1).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"keep me").unwrap();
+        let slot = swap.evict(b).unwrap();
+        // Exhaust the pool, then fault: must fail without consuming the
+        // slot's payload.
+        let hog = a.alloc().unwrap();
+        assert!(matches!(swap.fault(slot), Err(Error::OutOfMemory { .. })));
+        assert_eq!(swap.stats().resident_slots, 1, "slot must survive the failed fault");
+        a.free(hog).unwrap();
+        let nb = swap.fault(slot).unwrap();
+        let mut out = [0u8; 7];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"keep me");
+    }
+
+    #[test]
+    fn prop_swap_preserves_random_contents_sharded() {
+        use crate::pmem::ShardedAllocator;
+        forall(10, |g| {
+            let a = ShardedAllocator::with_shards(1024, 8, 2).unwrap();
+            let swap = SwapPool::anonymous(&a).unwrap();
+            let n = g.usize_in(1, 8);
+            let mut pairs = Vec::new();
+            for _ in 0..n {
+                let data: Vec<u8> = g.vec(1024, |g| g.usize_in(0, 255) as u8);
+                let b = a.alloc().unwrap();
+                a.write(b, 0, &data).unwrap();
+                pairs.push((swap.evict(b).unwrap(), data));
+            }
+            g.rng().shuffle(&mut pairs);
+            for (slot, data) in pairs {
+                let b = swap.fault(slot).unwrap();
+                let mut out = vec![0u8; 1024];
+                a.read(b, 0, &mut out).unwrap();
+                assert_eq!(out, data);
+                a.free(b).unwrap();
+            }
+            assert_eq!(a.stats().allocated, 0);
+        });
     }
 
     #[test]

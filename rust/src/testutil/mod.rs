@@ -133,6 +133,53 @@ impl Rng {
     }
 }
 
+/// Build a **deliberately fragmented** pool hosting one tree: allocate
+/// the whole pool, free a strided set of blocks, land the tree's
+/// `leaves` leaf blocks (+ its root) exactly in those holes, then
+/// release the rest — live blocks end up sprinkled every
+/// `capacity / (leaves + 1)` ids, shredding free space into short runs.
+/// The shared setup of the mmd compaction tests, the
+/// `fragmentation-churn` experiment, and the `ablation_compaction`
+/// bench; `fill(i)` supplies element `i`, and the returned mirror is
+/// the reference the tree must keep matching.
+///
+/// Requirements: an empty pool, `u64` leaf capacity `block_size / 8`,
+/// `leaves + 1 <= capacity / 2` (so the stride is at least 2), and
+/// `leaves` within one interior node's fanout (depth 2). The tree is
+/// returned with its flat leaf table built (the serving configuration
+/// the concurrent experiments use).
+pub fn fragmented_tree<A: crate::pmem::BlockAlloc>(
+    a: &A,
+    leaves: usize,
+    fill: impl Fn(u64) -> u64,
+) -> (crate::trees::TreeArray<'_, u64, A>, Vec<u64>) {
+    use crate::trees::TreeArray;
+    let cap = a.capacity();
+    assert_eq!(a.stats().allocated, 0, "fragmented_tree wants an empty pool");
+    let elems = leaves * (a.block_size() / 8);
+    let all = a.alloc_many(cap).expect("fill pool");
+    let total = leaves + 1; // leaves + root (depth 2)
+    let stride = cap / total;
+    assert!(stride >= 2, "need room to perforate: {cap} blocks / {total} tree blocks");
+    let mut scratch = Vec::new();
+    for (i, b) in all.into_iter().enumerate() {
+        if i % stride == 0 && i / stride < total {
+            a.free(b).expect("perforate");
+        } else {
+            scratch.push(b);
+        }
+    }
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, elems).expect("strided tree");
+    let mirror: Vec<u64> = (0..elems as u64).map(fill).collect();
+    tree.copy_from_slice(&mirror).expect("fill tree");
+    tree.enable_flat_table();
+    let _ = tree.get(0); // build the flat table before sharing
+    for b in scratch {
+        a.free(b).expect("release scratch");
+    }
+    (tree, mirror)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

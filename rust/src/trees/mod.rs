@@ -23,18 +23,25 @@
 //!   threads read one tree with no lock on the lookup path, safely
 //!   coexisting with [`TreeArray::migrate_leaf_concurrent`]'s
 //!   epoch-deferred relocation.
+//! * [`TreeRegistry`] / [`CompactTarget`] — type-erased handles to live
+//!   trees for the background memory-management daemon ([`crate::mmd`]):
+//!   registered trees expose their parent-patch entry points so the
+//!   daemon can relocate (compact/rebalance) and evict/restore leaves
+//!   through the forwarding machinery while views keep reading.
 //! * [`TreeGeometry`] / [`TreeTraceModel`] — pure address arithmetic for
 //!   the memsim experiments, so 64 GB arrays can be *modeled* without
 //!   being materialized (§4.3's scales).
 
 mod cursor;
 mod layout;
+pub(crate) mod registry;
 mod tlb;
 mod tree_array;
 mod view;
 
 pub use cursor::Cursor;
 pub use layout::{TreeGeometry, TreeTraceModel};
+pub use registry::{CompactTarget, TreeRegistry};
 pub use tlb::{LeafTlb, TlbStats};
 pub use tree_array::{Pod, TreeArray};
 pub use view::TreeView;

@@ -1,0 +1,291 @@
+//! The live-tree registry the memory-management daemon walks.
+//!
+//! Background compaction ([`crate::mmd`]) has to relocate leaves of
+//! trees it did not create and whose element types it cannot name, so
+//! the registry holds **type-erased** handles: [`CompactTarget`]
+//! exposes exactly the three parent-patch entry points relocation
+//! needs — where a leaf lives ([`CompactTarget::leaf_block`]), move it
+//! to a chosen destination ([`CompactTarget::relocate_leaf_to`], the
+//! epoch-deferred [`TreeArray::migrate_leaf_concurrent_to`] underneath),
+//! and re-point it at a faulted-in block after eviction
+//! ([`CompactTarget::adopt_leaf_block`]).
+//!
+//! # Registration contracts (why `register*` is `unsafe`)
+//!
+//! Registering hands the daemon a standing licence to run
+//! `migrate_leaf_concurrent`-family operations on the tree at any
+//! moment, so the *caller* must uphold that function's contract for the
+//! whole registration window:
+//!
+//! * **[`TreeRegistry::register`]** (compaction + rebalancing): the
+//!   tree is accessed only through epoch-registered revalidating
+//!   readers ([`crate::trees::TreeView`]); no raw leaf slices, no data
+//!   writes, no cursors on other threads, and nobody else migrates its
+//!   leaves.
+//! * **[`TreeRegistry::register_evictable`]** (adds pressure-driven
+//!   leaf eviction): additionally **no accessor at all** — not even
+//!   views — may touch the tree while it is registered. A swapped-out
+//!   leaf's recorded translation has no live backing until the daemon
+//!   restores it, and nothing in the read path can fault it back.
+//!
+//! Deregistration synchronizes with the daemon: [`TreeRegistry`] holds
+//! one mutex over the entry list and compaction passes run under it, so
+//! once [`TreeRegistry::deregister`] returns the daemon can no longer
+//! touch the tree and it may be dropped or mutated freely.
+//! Deregistering (or dropping) a tree **with swapped-out leaves** is a
+//! bug — the tree's bookkeeping still names dead blocks — so
+//! `deregister` panics in that state; the daemon's shutdown path
+//! restores every evicted leaf first, which is the intended order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::error::Result;
+use crate::pmem::{BlockAlloc, BlockId, SwapSlot};
+use crate::trees::tree_array::{Pod, TreeArray};
+
+/// Type-erased handle to a live tree whose leaves the daemon may
+/// relocate. Implemented by [`TreeArray`] for `Sync` element types;
+/// implementable by any block-backed structure whose nodes are named by
+/// exactly one parent pointer (the paper's relocation property).
+pub trait CompactTarget: Sync {
+    /// Leaf blocks in the structure.
+    fn nleaves(&self) -> usize;
+
+    /// Current physical block of leaf `leaf`.
+    fn leaf_block(&self, leaf: usize) -> BlockId;
+
+    /// Move leaf `leaf` into `dest`, retiring the displaced block into
+    /// the pool's epoch limbo. On error the caller keeps `dest`.
+    ///
+    /// # Safety
+    /// The [`TreeArray::migrate_leaf_concurrent_to`] contract: readers
+    /// only through epoch-registered views, no raw slices, single
+    /// migrator, and `dest` live + exclusively owned by the caller.
+    unsafe fn relocate_leaf_to(&self, leaf: usize, dest: BlockId) -> Result<()>;
+
+    /// Re-point leaf `leaf` at `fresh` without copying (the old block
+    /// is already gone — eviction restore).
+    ///
+    /// # Safety
+    /// The [`TreeArray`] adopt contract: no accessor of the structure
+    /// since the eviction, `fresh` live + exclusively owned + holding
+    /// the leaf's bytes.
+    unsafe fn adopt_leaf_block(&self, leaf: usize, fresh: BlockId);
+}
+
+impl<T: Pod + Sync, A: BlockAlloc> CompactTarget for TreeArray<'_, T, A> {
+    fn nleaves(&self) -> usize {
+        TreeArray::nleaves(self)
+    }
+
+    fn leaf_block(&self, leaf: usize) -> BlockId {
+        TreeArray::leaf_block(self, leaf)
+    }
+
+    unsafe fn relocate_leaf_to(&self, leaf: usize, dest: BlockId) -> Result<()> {
+        // SAFETY: forwarded verbatim.
+        unsafe { self.migrate_leaf_concurrent_to(leaf, dest) }.map(|_| ())
+    }
+
+    unsafe fn adopt_leaf_block(&self, leaf: usize, fresh: BlockId) {
+        // SAFETY: forwarded verbatim.
+        unsafe { self.adopt_leaf_impl(leaf, fresh) }
+    }
+}
+
+/// One registered tree: the erased handle, the eviction permission, and
+/// the ledger of leaves currently parked in swap.
+pub(crate) struct RegEntry<'e> {
+    pub(crate) id: u64,
+    pub(crate) tree: &'e (dyn CompactTarget + 'e),
+    pub(crate) evictable: bool,
+    /// Leaves currently swapped out: `(leaf index, swap slot)`.
+    pub(crate) swapped: Vec<(usize, SwapSlot)>,
+}
+
+/// Registry of live trees the [`crate::mmd`] daemon keeps healthy. See
+/// the module docs for the registration contracts.
+pub struct TreeRegistry<'e> {
+    entries: Mutex<Vec<RegEntry<'e>>>,
+    next_id: AtomicU64,
+}
+
+impl<'e> TreeRegistry<'e> {
+    /// An empty registry.
+    pub fn new() -> Self {
+        TreeRegistry {
+            entries: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Register `tree` for background compaction/rebalancing. Returns
+    /// the id to [`TreeRegistry::deregister`] with.
+    ///
+    /// # Safety
+    /// For the whole registration window the tree is accessed only
+    /// through epoch-registered revalidating readers
+    /// ([`crate::trees::TreeView`]): no raw leaf slices, no data
+    /// writes, no cross-thread cursors, no other migrator (module docs).
+    pub unsafe fn register(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
+        self.insert(tree, false)
+    }
+
+    /// Register `tree` for compaction **and pressure-driven leaf
+    /// eviction**.
+    ///
+    /// # Safety
+    /// The [`TreeRegistry::register`] contract, plus: **no accessor at
+    /// all** (not even views) touches the tree while registered — a
+    /// swapped-out leaf has no live backing until restored.
+    pub unsafe fn register_evictable(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
+        self.insert(tree, true)
+    }
+
+    fn insert(&self, tree: &'e (dyn CompactTarget + 'e), evictable: bool) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.entries.lock().unwrap().push(RegEntry {
+            id,
+            tree,
+            evictable,
+            swapped: Vec::new(),
+        });
+        id
+    }
+
+    /// Remove a registration. Blocks until any in-flight compaction
+    /// pass finishes (same mutex), so on return the daemon holds no
+    /// reference to the tree. Panics if the tree still has swapped-out
+    /// leaves (restore first — daemon shutdown does this).
+    pub fn deregister(&self, id: u64) {
+        let mut g = self.entries.lock().unwrap();
+        if let Some(i) = g.iter().position(|e| e.id == id) {
+            assert!(
+                g[i].swapped.is_empty(),
+                "deregistering tree {id} with {} swapped-out leaves — restore first \
+                 (MmdHandle::shutdown restores automatically)",
+                g[i].swapped.len()
+            );
+            g.swap_remove(i);
+        }
+    }
+
+    /// Registered trees.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total leaves currently swapped out across all registrations.
+    pub fn swapped_out(&self) -> usize {
+        self.entries.lock().unwrap().iter().map(|e| e.swapped.len()).sum()
+    }
+
+    /// Resident (not yet swapped) leaves of evictable registrations —
+    /// how much eviction could still reclaim. Policies use this to stop
+    /// demanding eviction when nothing can satisfy it.
+    pub fn evictable_resident(&self) -> usize {
+        self.eviction_counts().1
+    }
+
+    /// `(swapped_out, evictable_resident)` under one lock — what the
+    /// daemon feeds its policy every tick.
+    pub fn eviction_counts(&self) -> (usize, usize) {
+        let g = self.entries.lock().unwrap();
+        let mut swapped = 0;
+        let mut resident = 0;
+        for e in g.iter() {
+            swapped += e.swapped.len();
+            if e.evictable {
+                resident += e.tree.nleaves() - e.swapped.len();
+            }
+        }
+        (swapped, resident)
+    }
+
+    /// Lock the entry list (compaction passes run under this guard; see
+    /// the deregistration note in the module docs).
+    pub(crate) fn lock(&self) -> MutexGuard<'_, Vec<RegEntry<'e>>> {
+        self.entries.lock().unwrap()
+    }
+}
+
+impl Default for TreeRegistry<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for TreeRegistry<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.entries.lock().unwrap();
+        write!(f, "TreeRegistry {{ trees: {}, swapped_out: ", g.len())?;
+        let swapped: usize = g.iter().map(|e| e.swapped.len()).sum();
+        write!(f, "{swapped} }}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+
+    #[test]
+    fn register_deregister_roundtrip() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let t1: TreeArray<u32> = TreeArray::new(&a, 256 * 2).unwrap();
+        let t2: TreeArray<u64> = TreeArray::new(&a, 128 * 3).unwrap();
+        let reg = TreeRegistry::new();
+        assert!(reg.is_empty());
+        // SAFETY: nothing accesses the trees while registered here.
+        let id1 = unsafe { reg.register(&t1) };
+        let id2 = unsafe { reg.register_evictable(&t2) };
+        assert_ne!(id1, id2);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.swapped_out(), 0);
+        {
+            let g = reg.lock();
+            assert!(!g[0].evictable);
+            assert!(g[1].evictable);
+            // The erased handles see the real trees.
+            assert_eq!(g[0].tree.nleaves(), 2);
+            assert_eq!(g[1].tree.nleaves(), 3);
+            assert_eq!(g[0].tree.leaf_block(0), t1.leaf_block(0));
+        }
+        reg.deregister(id1);
+        assert_eq!(reg.len(), 1);
+        reg.deregister(id2);
+        assert!(reg.is_empty());
+        // Deregistering an unknown id is a no-op.
+        reg.deregister(999);
+    }
+
+    #[test]
+    fn erased_relocation_moves_the_real_leaf() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 256 * 2).unwrap();
+        let data: Vec<u32> = (0..512u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        let reg = TreeRegistry::new();
+        // SAFETY: no accessors during the erased relocation below.
+        let id = unsafe { reg.register(&t) };
+        let dest = a.alloc().unwrap();
+        {
+            let g = reg.lock();
+            // SAFETY: no readers at all; dest freshly allocated.
+            unsafe { g[0].tree.relocate_leaf_to(1, dest) }.unwrap();
+        }
+        assert_eq!(t.leaf_block(1), dest);
+        assert_eq!(t.to_vec(), data);
+        reg.deregister(id);
+        drop(reg);
+        a.epoch().synchronize(&a);
+        drop(t);
+        assert_eq!(a.stats().allocated, 0);
+    }
+}

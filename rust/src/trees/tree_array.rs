@@ -370,6 +370,15 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         self.geo.nleaves()
     }
 
+    /// Current physical block of leaf `leaf_idx` (one atomic load via
+    /// the leaves-first `blocks` invariant). This is what background
+    /// compaction ([`crate::mmd`]) inspects to decide whether a leaf is
+    /// worth moving — no tree walk, no side effects.
+    pub fn leaf_block(&self, leaf_idx: usize) -> BlockId {
+        assert!(leaf_idx < self.geo.nleaves());
+        BlockId(self.blocks[leaf_idx].load(Ordering::Acquire))
+    }
+
     /// Visit every leaf in order as one contiguous slice: `visit(leaf_idx,
     /// elems)`. One translation and one slice per leaf — the bulk-access
     /// primitive `to_vec`, `copy_from_slice`, and the workloads' checksum
@@ -589,23 +598,23 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// No live leaf slice of the tree across the call; concurrent access
     /// from other threads only as permitted by the chosen disposal mode
     /// above; at most one relocation of this tree in flight at a time.
-    pub(crate) unsafe fn relocate_leaf_impl(&self, leaf_idx: usize, defer_free: bool) -> Result<BlockId> {
-        let first_elem = leaf_idx * self.geo.leaf_cap;
-        // Walk down recording the parent slot that names the leaf.
-        let mut node = self.root_block();
-        let mut parent: Option<(BlockId, usize)> = None;
-        for level in 0..self.geo.depth - 1 {
-            let slot = self.geo.child_slot(level, first_elem);
-            parent = Some((node, slot));
-            node = self.child_at(node, slot);
-        }
-        let old = node;
-        debug_assert_eq!(
-            self.blocks[leaf_idx].load(Ordering::Relaxed),
-            old.0,
-            "leaves-first blocks invariant violated"
-        );
-        let fresh = self.alloc.alloc()?;
+    /// When `dest` is `Some`, it must be a live block exclusively owned
+    /// by the caller (ownership transfers to the tree on success) and
+    /// not referenced by any tree; `None` allocates from the pool —
+    /// the destination-directed form is how compaction steers leaves
+    /// into specific pool regions ([`crate::pmem::BlockAlloc::alloc_in_span`]).
+    pub(crate) unsafe fn relocate_leaf_impl(
+        &self,
+        leaf_idx: usize,
+        defer_free: bool,
+        dest: Option<BlockId>,
+    ) -> Result<BlockId> {
+        let (parent, old) = self.leaf_parent(leaf_idx);
+        let fresh = match dest {
+            Some(d) => d,
+            None => self.alloc.alloc()?,
+        };
+        debug_assert_ne!(fresh.0, old.0, "destination must differ from the leaf's block");
         let bs = self.alloc.block_size();
         // SAFETY: both blocks live and distinct; full-block copy. A
         // concurrent reader may read `old` at the same time (read/read),
@@ -613,37 +622,9 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         unsafe {
             std::ptr::copy_nonoverlapping(self.alloc.block_ptr(old), self.alloc.block_ptr(fresh), bs);
         }
-        match parent {
-            // SAFETY: p is a live interior block, slot < fanout, and the
-            // slot address is 8-aligned (see `child_at`).
-            Some((p, slot)) => unsafe {
-                let sp = self.alloc.block_ptr(p).add(slot * 8) as *const AtomicU64;
-                (*sp).store(fresh.0 as u64, Ordering::Release);
-            },
-            None => self.root.store(fresh.0, Ordering::Release), // depth-1: the leaf is the root
-        }
-        // Leaves-first invariant: leaf `leaf_idx` lives at blocks[leaf_idx],
-        // so the bookkeeping patch is one store (the old code scanned the
-        // whole block list).
-        self.blocks[leaf_idx].store(fresh.0, Ordering::Release);
-        // Keep the flat table precise — O(1) shootdown. `get_or_init`
-        // (not `get`) closes the build/patch race: if a reader is
-        // concurrently building the table from pre-patch `blocks`
-        // values, either its build wins and this store overwrites the
-        // stale entry, or this thread's build wins (already patched —
-        // `blocks[leaf_idx]` was stored above). Either way the table
-        // ends precise.
-        if self.flat_on.load(Ordering::Relaxed) {
-            let tbl = self.flat.get_or_init(|| self.build_flat_table());
-            // SAFETY: fresh is live and ours.
-            tbl[leaf_idx].store(unsafe { self.alloc.block_ptr(fresh) }, Ordering::Release);
-        }
-        // Publish the move: same-tree caches revalidate on the
-        // generation, then every cache in the arena revalidates on the
-        // epoch (bumped second, so observing the new epoch implies
-        // observing the new generation).
-        self.generation.fetch_add(1, Ordering::Release);
-        let retire_epoch = self.alloc.epoch().bump();
+        // SAFETY: fresh is live, exclusively ours, and now holds the
+        // leaf's bytes; parent/old came from `leaf_parent` just above.
+        let retire_epoch = unsafe { self.publish_leaf(leaf_idx, parent, fresh) };
         if defer_free {
             // Concurrent readers may still hold the old translation:
             // park the block in limbo until they quiesce.
@@ -658,6 +639,104 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             debug_assert!(freed.is_ok(), "freeing the displaced leaf failed: {freed:?}");
         }
         Ok(fresh)
+    }
+
+    /// Point leaf `leaf_idx` at `fresh` **without copying** from the
+    /// currently recorded block — the restore half of leaf eviction
+    /// ([`crate::mmd`]): the leaf's payload was already written into
+    /// `fresh` by the caller (faulted from [`crate::pmem::SwapPool`]),
+    /// and the previously recorded block is long dead. Patches the
+    /// parent slot (or root), the leaves-first bookkeeping, and the
+    /// flat table, then publishes via generation + epoch bumps exactly
+    /// like a relocation.
+    ///
+    /// # Safety
+    /// * `fresh` is live, exclusively owned by the caller (ownership
+    ///   transfers to the tree), holds the leaf's bytes, and is not
+    ///   referenced by any tree.
+    /// * No accessor of this tree (cursor, view, slice, `get`/`set`)
+    ///   may have run since the eviction that killed the old block, and
+    ///   none may run concurrently with this call — between eviction
+    ///   and adoption the leaf's recorded translation has no live
+    ///   backing (the [`crate::trees::TreeRegistry`] evictable
+    ///   contract).
+    /// * At most one relocation/adoption of this tree in flight.
+    pub(crate) unsafe fn adopt_leaf_impl(&self, leaf_idx: usize, fresh: BlockId) {
+        debug_assert!(leaf_idx < self.geo.nleaves());
+        let (parent, _stale) = self.leaf_parent(leaf_idx);
+        // SAFETY: forwarded from this fn's contract (no copy needed —
+        // `fresh` already holds the bytes; the stale block is dead).
+        unsafe { self.publish_leaf(leaf_idx, parent, fresh) };
+    }
+
+    /// Walk to leaf `leaf_idx`, recording the single parent slot that
+    /// names it (`None` at depth 1: the leaf is the root). Returns the
+    /// slot and the currently recorded leaf block.
+    fn leaf_parent(&self, leaf_idx: usize) -> (Option<(BlockId, usize)>, BlockId) {
+        let first_elem = leaf_idx * self.geo.leaf_cap;
+        let mut node = self.root_block();
+        let mut parent: Option<(BlockId, usize)> = None;
+        for level in 0..self.geo.depth - 1 {
+            let slot = self.geo.child_slot(level, first_elem);
+            parent = Some((node, slot));
+            node = self.child_at(node, slot);
+        }
+        debug_assert_eq!(
+            self.blocks[leaf_idx].load(Ordering::Relaxed),
+            node.0,
+            "leaves-first blocks invariant violated"
+        );
+        (parent, node)
+    }
+
+    /// The *publication half* of every leaf move — the one copy of the
+    /// load-bearing protocol shared by relocation
+    /// ([`TreeArray::relocate_leaf_impl`]) and eviction restore
+    /// ([`TreeArray::adopt_leaf_impl`]). Patches, in order: the parent
+    /// slot (or root) atomically, the leaves-first `blocks`
+    /// bookkeeping (one store — the invariant that keeps this O(1)),
+    /// and the flat leaf table; then bumps the tree generation and
+    /// finally the arena epoch. Same-tree caches revalidate on the
+    /// generation, every cache in the arena on the epoch — bumped
+    /// second, so observing the new epoch implies observing the new
+    /// generation. Returns the post-publication epoch (the retire
+    /// stamp for a displaced block).
+    ///
+    /// Flat-table patch uses `get_or_init` (not `get`) to close the
+    /// build/patch race: if a reader is concurrently building the table
+    /// from pre-patch `blocks` values, either its build wins and this
+    /// store overwrites the stale entry, or this thread's build wins
+    /// (already patched — `blocks[leaf_idx]` was stored above). Either
+    /// way the table ends precise.
+    ///
+    /// # Safety
+    /// `fresh` is live, exclusively the caller's (ownership transfers
+    /// to the tree), and holds the leaf's bytes; `parent` came from
+    /// [`TreeArray::leaf_parent`] for this leaf; at most one
+    /// publication of this tree in flight.
+    unsafe fn publish_leaf(
+        &self,
+        leaf_idx: usize,
+        parent: Option<(BlockId, usize)>,
+        fresh: BlockId,
+    ) -> u64 {
+        match parent {
+            // SAFETY: p is a live interior block, slot < fanout, and the
+            // slot address is 8-aligned (see `child_at`).
+            Some((p, slot)) => unsafe {
+                let sp = self.alloc.block_ptr(p).add(slot * 8) as *const AtomicU64;
+                (*sp).store(fresh.0 as u64, Ordering::Release);
+            },
+            None => self.root.store(fresh.0, Ordering::Release), // depth-1: the leaf is the root
+        }
+        self.blocks[leaf_idx].store(fresh.0, Ordering::Release);
+        if self.flat_on.load(Ordering::Relaxed) {
+            let tbl = self.flat.get_or_init(|| self.build_flat_table());
+            // SAFETY: fresh is live and ours.
+            tbl[leaf_idx].store(unsafe { self.alloc.block_ptr(fresh) }, Ordering::Release);
+        }
+        self.generation.fetch_add(1, Ordering::Release);
+        self.alloc.epoch().bump()
     }
 
     /// Sequential iterator using the Figure 2 cached-leaf optimization
@@ -707,6 +786,15 @@ impl<T: Pod, A: BlockAlloc> Drop for TreeArray<'_, T, A> {
         for b in self.blocks.iter() {
             let _ = self.alloc.free(BlockId(b.load(Ordering::Relaxed)));
         }
+        // Teardown-time reclaim: blocks this tree's concurrent
+        // migrations retired may still sit in the pool's limbo — give
+        // them a non-blocking pass now that the tree is gone, so a
+        // tree that was migrated under readers does not leak its
+        // displaced blocks until someone else reclaims. Non-blocking on
+        // purpose: a registered-but-idle reader elsewhere must not hang
+        // an unrelated tree's drop (the daemon's shutdown path and
+        // explicit `synchronize` handle the blocking case).
+        self.alloc.epoch().try_reclaim(self.alloc);
     }
 }
 

@@ -27,6 +27,7 @@ fn all_experiments_dispatch_and_produce_tables() {
         "fig5",
         "concurrent-gups",
         "concurrent-probe",
+        "fragmentation-churn",
         "parallel-blackscholes",
         "batched-workloads",
         "ablation-alloc",

@@ -1,0 +1,212 @@
+//! Stress tests for the memory-management daemon: the mmd compacts a
+//! deliberately fragmented pool while reader views verify checksums
+//! against a contiguous mirror and a churn thread keeps perforating the
+//! free space — the acceptance scenario of the mmd PR.
+//!
+//! The hazard stack is everything PR 3 built plus the daemon on top: a
+//! background thread relocating leaves with placement-directed
+//! destinations, reclaiming displaced blocks through the arena epoch,
+//! while three kinds of mutation race it (view reads, allocator churn,
+//! its own reclaim). A stale or torn read anywhere shows up as a
+//! checksum mismatch; a lost or double-freed block as an allocation
+//! count mismatch at teardown.
+//!
+//! Run in `--release` too (CI does): the interesting interleavings
+//! rarely open up at debug-build speeds.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use nvm::mmd::{FragSampler, MmdConfig, MmdHandle, ThresholdPolicy};
+use nvm::pmem::{BlockAlloc, BlockAllocator, ShardedAllocator};
+use nvm::testutil::{fragmented_tree, Rng};
+use nvm::trees::TreeRegistry;
+use nvm::workloads::hashprobe;
+
+const BLOCK: usize = 1024; // u64: 128 elems/leaf, fanout 128
+const CAP: usize = 512;
+const LEAVES: usize = 96;
+
+/// Three readers verify every value against the mirror while the daemon
+/// compacts and a churn thread fragments; then the pool must end packed,
+/// intact, and leak-free.
+fn compaction_stress<A: BlockAlloc>(a: &A) {
+    let (tree, mirror) = fragmented_tree(a, LEAVES, |i| {
+        i.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1
+    });
+    let mut sampler = FragSampler::new();
+    let s0 = sampler.sample(a).score;
+    assert!(s0 > 0.5, "setup must fragment the pool: {s0}");
+
+    let registry = TreeRegistry::new();
+    // SAFETY: until deregistration the tree is read only through
+    // epoch-registered views; no writes, no raw slices; the daemon is
+    // the only migrator.
+    let reg_id = unsafe { registry.register(&tree) };
+
+    // Readers verify in *rounds* until told to stop; each computes its
+    // own per-round reference from the immutable mirror. Choreography
+    // (all polled with generous deadlines, never fixed sleeps — the
+    // overlap must hold on arbitrarily loaded CI machines):
+    //   1. readers + churn start; wait until every reader has finished
+    //      a round (its TLB holds valid entries);
+    //   2. only then spawn the daemon, and keep the readers running
+    //      until ≥ 32 relocations were published (epoch delta) — so
+    //      shootdowns provably land on warm reader TLBs;
+    //   3. stop the readers, then the churn, then let the daemon pack
+    //      the quiet pool and shut it down.
+    let ops_round: u64 = if cfg!(debug_assertions) { 20_000 } else { 100_000 };
+    let stop_readers = AtomicBool::new(false);
+    let stop_churn = AtomicBool::new(false);
+    let warm = AtomicUsize::new(0);
+    let (tree_r, mirror_r, stop_readers_r, stop_churn_r, warm_r) =
+        (&tree, &mirror, &stop_readers, &stop_churn, &warm);
+
+    let report = std::thread::scope(|s| {
+        let readers: Vec<_> = (0..3usize)
+            .map(|tid| {
+                s.spawn(move || {
+                    let mut view = tree_r.view();
+                    let mut round = 0u64;
+                    loop {
+                        let seed = 0xBEE5 ^ ((tid as u64) << 24) ^ (round << 1);
+                        let want = hashprobe::probe_read_reference(mirror_r, ops_round, seed);
+                        let got = hashprobe::probe_view(&mut view, ops_round, seed);
+                        assert_eq!(
+                            got, want,
+                            "reader {tid} observed a stale/torn value during compaction \
+                             (round {round})"
+                        );
+                        if round == 0 {
+                            warm_r.fetch_add(1, Ordering::Release);
+                        }
+                        round += 1;
+                        if stop_readers_r.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    view.tlb_stats()
+                })
+            })
+            .collect();
+        // Churn: allocate-and-scribble free blocks so a stale
+        // translation that escaped the epoch protocol would read
+        // garbage, then free them again, keeping the free space moving.
+        let churn = s.spawn(move || {
+            let mut rng = Rng::new(0x51ED);
+            let mut held = Vec::new();
+            while !stop_churn_r.load(Ordering::Relaxed) {
+                if held.len() < 24 {
+                    if let Ok(b) = a.alloc() {
+                        a.write(b, 0, &[0xA5u8; BLOCK]).unwrap();
+                        held.push(b);
+                    }
+                }
+                if held.len() >= 24 || (!held.is_empty() && rng.range(0, 3) == 0) {
+                    let i = rng.range(0, held.len());
+                    a.free(held.swap_remove(i)).unwrap();
+                }
+            }
+            for b in held {
+                a.free(b).unwrap();
+            }
+        });
+        // Per-phase deadlines: a slow early phase must not starve the
+        // later ones (each bound only limits how long a genuinely
+        // broken daemon can hang the test).
+        let mut deadline = Instant::now() + Duration::from_secs(30);
+        while warm.load(Ordering::Acquire) < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(warm.load(Ordering::Acquire), 3, "readers never warmed up");
+        let e0 = a.epoch().current();
+        let daemon = MmdHandle::spawn(
+            s,
+            a,
+            &registry,
+            ThresholdPolicy::default(),
+            MmdConfig {
+                interval: Duration::from_micros(100),
+                tokens_per_tick: 16,
+                ..MmdConfig::default()
+            },
+        );
+        deadline = Instant::now() + Duration::from_secs(30);
+        while a.epoch().current() < e0 + 32 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop_readers.store(true, Ordering::Relaxed);
+        let mut invalidations = 0u64;
+        for r in readers {
+            invalidations += r.join().unwrap().invalidations;
+        }
+        stop_churn.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        assert!(
+            invalidations > 0,
+            "readers never observed a shootdown — the stress ran vacuously"
+        );
+        // Let the daemon finish packing the quiet pool, then collect.
+        // Target = the policy's idle threshold (it stops compacting
+        // below score_hi, so a stricter target would burn the deadline).
+        deadline = Instant::now() + Duration::from_secs(30);
+        let target = ThresholdPolicy::default().score_hi;
+        let mut poll = FragSampler::new();
+        while poll.sample(a).score > target && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        daemon.shutdown()
+    });
+
+    assert!(
+        report.compact.leaves_moved > 0,
+        "daemon never compacted: {}",
+        report.summary()
+    );
+    assert_eq!(report.limbo_remaining, 0, "{}", report.summary());
+    let s1 = sampler.sample(a).score;
+    assert!(
+        s1 * 2.0 <= s0,
+        "compaction must at least halve the fragmentation score: {s0} -> {s1} ({})",
+        report.summary()
+    );
+    assert_eq!(tree.to_vec(), mirror, "compaction churn corrupted the tree");
+    registry.deregister(reg_id);
+    drop(registry);
+    a.epoch().synchronize(a);
+    drop(tree);
+    assert_eq!(a.stats().allocated, 0, "churn/compaction leaked blocks");
+}
+
+#[test]
+fn daemon_compaction_stress_mutex_allocator() {
+    let a = BlockAllocator::new(BLOCK, CAP).unwrap();
+    compaction_stress(&a);
+}
+
+#[test]
+fn daemon_compaction_stress_sharded_allocator() {
+    let a = ShardedAllocator::with_shards(BLOCK, CAP, 4).unwrap();
+    compaction_stress(&a);
+}
+
+/// The acceptance-criteria shape in one deterministic sweep: ≥ 2 views
+/// verify checksums while the daemon compacts, final score at least
+/// halved, teardown clean — via the registered experiment entry point.
+#[test]
+fn fragmentation_churn_experiment_end_to_end() {
+    use nvm::coordinator::experiments::{fragmentation_churn, ExpConfig};
+    let cfg = ExpConfig {
+        sample: 25_000,
+        threads: 2,
+        ..ExpConfig::default()
+    };
+    let t = fragmentation_churn(&cfg);
+    let off = t.cell("2T mmd=off", 2).expect("off row");
+    let on = t.cell("2T mmd=on", 2).expect("on row");
+    assert!(
+        on * 2.0 <= off + 1e-9,
+        "mmd must at least halve the final fragmentation score: off={off} on={on}"
+    );
+    assert!(t.cell("2T mmd=on", 3).unwrap() > 0.0, "no leaves moved");
+}
