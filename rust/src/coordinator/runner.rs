@@ -44,6 +44,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "N per-thread-TLB reader views over one shared tree, with live relocation",
         },
         ExperimentInfo {
+            name: "concurrent-rw",
+            description: "N view readers + M seqlock writers + mmd compaction on one shared tree",
+        },
+        ExperimentInfo {
             name: "fragmentation-churn",
             description: "mmd daemon: reader throughput + frag score under churn, off vs on",
         },
@@ -85,6 +89,7 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "fig5" => vec![experiments::fig5(cfg)],
         "concurrent-gups" | "concurrent_gups" => vec![experiments::concurrent_gups(cfg)],
         "concurrent-probe" | "concurrent_probe" => vec![experiments::concurrent_probe(cfg)],
+        "concurrent-rw" | "concurrent_rw" => vec![experiments::concurrent_rw(cfg)],
         "fragmentation-churn" | "fragmentation_churn" => {
             vec![experiments::fragmentation_churn(cfg)]
         }

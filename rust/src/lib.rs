@@ -22,7 +22,12 @@
 //!   are never read stale, batched sort-and-run accessors, and
 //!   [`trees::TreeView`] — `Send` shared read views with *per-thread*
 //!   TLBs plus arena-epoch quiescence ([`pmem::ArenaEpoch`]), so many
-//!   threads read one tree lock-free while leaves relocate under them.
+//!   threads read one tree lock-free while leaves relocate under them —
+//!   and [`trees::TreeWriter`], the concurrent write side: per-leaf
+//!   **seqlocks** let M writers, N readers, and background relocation
+//!   share one tree with no global lock (readers retry seq brackets,
+//!   relocation takes the same leaf lock, so writes are never torn or
+//!   lost).
 //! * [`mmd`] — the background memory-management daemon: fragmentation
 //!   telemetry over any [`pmem::BlockAlloc`] pool, a pluggable policy
 //!   loop, and a compactor that relocates/evicts/restores leaves of

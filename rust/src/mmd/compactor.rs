@@ -24,9 +24,15 @@
 //! underneath: displaced blocks are *retired* into the pool's epoch
 //! limbo and reclaimed only after all registered readers quiesce, so
 //! registered [`crate::trees::TreeView`] readers never stall and never
-//! see recycled memory. The registry's registration contracts carry the
-//! proof obligations; the compactor holds the registry lock for the
-//! duration of a pass, so deregistration synchronizes with it.
+//! see recycled memory. The move also acquires the leaf's **seqlock**,
+//! so compaction respects live [`crate::trees::TreeWriter`]s: a pass
+//! briefly spins on a leaf a writer holds (writer critical sections are
+//! a few stores) and a writer spins out a mid-copy move — a leaf is
+//! never simultaneously written and relocated, which is why registered
+//! trees may now be written through seqlock writers while the daemon
+//! runs. The registry's registration contracts carry the proof
+//! obligations; the compactor holds the registry lock for the duration
+//! of a pass, so deregistration synchronizes with it.
 //!
 //! [`TreeRegistry`]: crate::trees::TreeRegistry
 //! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span

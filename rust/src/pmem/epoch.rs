@@ -42,6 +42,10 @@
 //! (without dropping its slot) stalls reclamation — limbo grows but
 //! nothing is unsafe. [`crate::trees::TreeView`] pins on every access
 //! and deregisters on drop, so view-based readers always make progress.
+//! [`crate::trees::TreeWriter`] registers and pins exactly like a
+//! reader: its read paths and cached translations are covered by the
+//! same quiescence argument (its *writes* are protected by the per-leaf
+//! seqlock instead — a write only ever lands on a leaf's current block).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

@@ -135,18 +135,26 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// [`crate::pmem::ArenaEpoch::synchronize`] on the pool to drain
     /// limbo, or displaced blocks accumulate until the allocator drops.
     ///
+    /// The move takes the leaf's **seqlock** (the per-leaf sequence
+    /// word [`crate::trees::TreeWriter`] writes under): the copy waits
+    /// for an in-flight write of that leaf and vice versa, so a leaf is
+    /// never simultaneously written and moved, and writers acquiring
+    /// after the move re-translate to the fresh block.
+    ///
     /// # Safety
     /// * No [`TreeArray::leaf_slice`]-style raw slice of the tree may be
     ///   live across the call (slices cannot revalidate), on any thread.
     /// * Concurrent access from other threads is allowed **only**
-    ///   through epoch-registered revalidating readers
-    ///   ([`crate::trees::TreeView`], or a custom reader following the
-    ///   [`crate::pmem::ReaderSlot`] pin protocol). Cursors and the
-    ///   direct `get`/`set` paths do not pin the epoch and must stay on
-    ///   this thread.
-    /// * Writers: at most one migration of this tree in flight, and no
-    ///   data writes to the tree during the move (readers would race
-    ///   them; the relocation copy would tear them).
+    ///   through epoch-registered revalidating accessors:
+    ///   [`crate::trees::TreeView`] readers,
+    ///   [`crate::trees::TreeWriter`] seqlock writers, or a custom
+    ///   reader following the [`crate::pmem::ReaderSlot`] pin protocol.
+    ///   Cursors and the direct `get`/`set` paths do not pin the epoch
+    ///   (nor seq-check) and must stay on this thread.
+    /// * At most one migration of this tree in flight. Data writes
+    ///   during the move are allowed **only** through
+    ///   [`crate::trees::TreeWriter`] (the seqlock serializes them
+    ///   against the copy); any other write path would tear.
     pub unsafe fn migrate_leaf_concurrent(&self, leaf_idx: usize) -> Result<BlockId> {
         if leaf_idx >= self.nleaves() {
             return Err(Error::IndexOutOfBounds {

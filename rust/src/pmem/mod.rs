@@ -46,4 +46,4 @@ pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;
 pub use sharded::ShardedAllocator;
-pub use swap::{SwapPool, SwapSlot, SwapStats};
+pub use swap::{FileBacking, SwapBacking, SwapPool, SwapSlot, SwapStats};

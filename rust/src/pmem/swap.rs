@@ -18,6 +18,34 @@ use std::sync::Mutex;
 use crate::error::{Error, Result};
 use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 
+/// The storage a [`SwapPool`] stashes payloads into, abstracted so
+/// tests can inject I/O failures at exact points ([`crate::testutil`]'s
+/// `FailingBacking`) and prove the pool's failure-atomicity claims —
+/// the production backing is a plain [`FileBacking`]. Offsets are byte
+/// positions (`slot * block_size`); each call is one logical I/O.
+pub trait SwapBacking: Send {
+    /// Write `data` at byte offset `off` (extending the store).
+    fn write_at(&mut self, off: u64, data: &[u8]) -> std::io::Result<()>;
+
+    /// Fill `out` from byte offset `off`; short reads are errors.
+    fn read_at(&mut self, off: u64, out: &mut [u8]) -> std::io::Result<()>;
+}
+
+/// The default [`SwapBacking`]: a seek-and-IO file.
+pub struct FileBacking(File);
+
+impl SwapBacking for FileBacking {
+    fn write_at(&mut self, off: u64, data: &[u8]) -> std::io::Result<()> {
+        self.0.seek(SeekFrom::Start(off))?;
+        self.0.write_all(data)
+    }
+
+    fn read_at(&mut self, off: u64, out: &mut [u8]) -> std::io::Result<()> {
+        self.0.seek(SeekFrom::Start(off))?;
+        self.0.read_exact(out)
+    }
+}
+
 /// A stable handle for swapped-out contents.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SwapSlot(u64);
@@ -33,19 +61,20 @@ pub struct SwapStats {
     pub resident_slots: usize,
 }
 
-struct Inner {
-    file: File,
-    /// Free slot indices in the file (reused before extending).
+struct Inner<B: SwapBacking> {
+    backing: B,
+    /// Free slot indices in the backing (reused before extending).
     free_slots: Vec<u64>,
     next_slot: u64,
     live: HashMap<u64, ()>,
     stats: SwapStats,
 }
 
-/// Block-granular swap file over any [`BlockAlloc`] pool.
-pub struct SwapPool<'a, A: BlockAlloc = BlockAllocator> {
+/// Block-granular swap over any [`BlockAlloc`] pool and any
+/// [`SwapBacking`] store (a file by default).
+pub struct SwapPool<'a, A: BlockAlloc = BlockAllocator, B: SwapBacking = FileBacking> {
     alloc: &'a A,
-    inner: Mutex<Inner>,
+    inner: Mutex<Inner<B>>,
 }
 
 impl<'a, A: BlockAlloc> SwapPool<'a, A> {
@@ -57,16 +86,7 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
             .create(true)
             .truncate(true)
             .open(path)?;
-        Ok(SwapPool {
-            alloc,
-            inner: Mutex::new(Inner {
-                file,
-                free_slots: Vec::new(),
-                next_slot: 0,
-                live: HashMap::new(),
-                stats: SwapStats::default(),
-            }),
-        })
+        Ok(Self::with_backing(alloc, FileBacking(file)))
     }
 
     /// Swap pool backed by an anonymous temp file.
@@ -81,10 +101,34 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
         let _ = std::fs::remove_file(&path);
         Ok(pool)
     }
+}
+
+impl<'a, A: BlockAlloc, B: SwapBacking> SwapPool<'a, A, B> {
+    /// Swap pool over an explicit backing store (how the
+    /// fault-injection tests thread a failing double through the real
+    /// eviction/fault paths).
+    pub fn with_backing(alloc: &'a A, backing: B) -> Self {
+        SwapPool {
+            alloc,
+            inner: Mutex::new(Inner {
+                backing,
+                free_slots: Vec::new(),
+                next_slot: 0,
+                live: HashMap::new(),
+                stats: SwapStats::default(),
+            }),
+        }
+    }
 
     /// Write `block`'s payload into a (new or recycled) swap slot and
     /// record it resident. Shared by both eviction forms; does not
     /// dispose of the physical block.
+    ///
+    /// Failure-atomic: on a backing write error the picked slot returns
+    /// to the free list (it is in neither `live` nor `free_slots` at
+    /// failure time), nothing is recorded resident, no counter moves,
+    /// and the caller keeps the (untouched) physical block — a retried
+    /// eviction reuses the same slot.
     fn stash(&self, block: BlockId) -> Result<u64> {
         if !self.alloc.is_live(block) {
             return Err(Error::InvalidBlock(block));
@@ -98,11 +142,7 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
             g.next_slot += 1;
             s
         });
-        if let Err(e) = g
-            .file
-            .seek(SeekFrom::Start(slot * bs as u64))
-            .and_then(|_| g.file.write_all(&buf))
-        {
+        if let Err(e) = g.backing.write_at(slot * bs as u64, &buf) {
             // Failure-atomic like `fault`: return the slot to the free
             // list instead of leaking it (it is in neither `live` nor
             // `free_slots` here), so retried evictions reuse it.
@@ -175,11 +215,7 @@ impl<'a, A: BlockAlloc> SwapPool<'a, A> {
                 let _ = self.alloc.free(fresh);
                 return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
             }
-            if let Err(e) = g
-                .file
-                .seek(SeekFrom::Start(slot.0 * bs as u64))
-                .and_then(|_| g.file.read_exact(&mut buf))
-            {
+            if let Err(e) = g.backing.read_at(slot.0 * bs as u64, &mut buf) {
                 // I/O failure: keep the slot resident, free the block.
                 g.live.insert(slot.0, ());
                 drop(g);
@@ -413,6 +449,130 @@ mod tests {
                 let mut out = vec![0u8; 1024];
                 a.read(b, 0, &mut out).unwrap();
                 assert_eq!(out, data);
+                a.free(b).unwrap();
+            }
+            assert_eq!(a.stats().allocated, 0);
+        });
+    }
+
+    // ---- fault injection (FailingBacking) ----
+    //
+    // The happy-path tests above assume the failure-atomicity the docs
+    // claim; these inject backing I/O errors at exact points and assert
+    // it actually holds.
+
+    #[test]
+    fn failed_stash_rolls_the_slot_back() {
+        use crate::testutil::FailingBacking;
+        let a = BlockAllocator::new(1024, 4).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"precious").unwrap();
+        let e0 = a.epoch().current();
+        ctl.fail_nth(1);
+        assert!(swap.evict(b).is_err(), "injected write fault must surface");
+        // Failure-atomicity: block untouched and live, nothing resident,
+        // no counter moved, no shootdown fired.
+        assert!(a.is_live(b));
+        let mut out = [0u8; 8];
+        a.read(b, 0, &mut out).unwrap();
+        assert_eq!(&out, b"precious");
+        assert_eq!(swap.stats().evictions, 0);
+        assert_eq!(swap.stats().resident_slots, 0);
+        assert_eq!(a.epoch().current(), e0, "failed evict must not bump the epoch");
+        // Slot rollback: the retry reuses the slot instead of leaking it.
+        let slot = swap.evict(b).unwrap();
+        assert_eq!(
+            swap.inner.lock().unwrap().next_slot,
+            1,
+            "failed stash leaked its slot"
+        );
+        let nb = swap.fault(slot).unwrap();
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"precious");
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn failed_deferred_evict_retires_nothing() {
+        use crate::testutil::FailingBacking;
+        let a = BlockAllocator::new(1024, 4).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let reader = a.epoch().register();
+        reader.pin();
+        let b = a.alloc().unwrap();
+        let e0 = a.epoch().current();
+        ctl.fail_nth(1);
+        assert!(swap.evict_deferred(b).is_err());
+        assert_eq!(a.epoch().limbo_len(), 0, "failed evict must not retire the block");
+        assert_eq!(a.epoch().current(), e0, "failed evict must not shoot down");
+        assert!(a.is_live(b), "caller keeps the block on failure");
+        a.free(b).unwrap();
+    }
+
+    #[test]
+    fn failed_fault_keeps_the_slot_resident_and_frees_the_block() {
+        use crate::testutil::FailingBacking;
+        let a = BlockAllocator::new(1024, 2).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"survives").unwrap();
+        let slot = swap.evict(b).unwrap();
+        assert_eq!(a.stats().allocated, 0);
+        ctl.fail_nth(1);
+        assert!(swap.fault(slot).is_err(), "injected read fault must surface");
+        // Failure-atomicity: slot stays resident, the speculative block
+        // went back to the pool, no fault counted.
+        assert_eq!(swap.stats().resident_slots, 1);
+        assert_eq!(swap.stats().faults, 0);
+        assert_eq!(a.stats().allocated, 0, "failed fault must free its speculative block");
+        // The retry succeeds with the payload intact.
+        let nb = swap.fault(slot).unwrap();
+        let mut out = [0u8; 8];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"survives");
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn prop_random_io_faults_never_lose_payloads() {
+        use crate::testutil::FailingBacking;
+        forall(15, |g| {
+            let a = BlockAllocator::new(256, 8).unwrap();
+            let (backing, ctl) = FailingBacking::new();
+            let swap = SwapPool::with_backing(&a, backing);
+            let n = g.usize_in(1, 6);
+            let mut slots = Vec::new();
+            for _ in 0..n {
+                let data: Vec<u8> = g.vec(256, |g| g.usize_in(0, 255) as u8);
+                let b = a.alloc().unwrap();
+                a.write(b, 0, &data).unwrap();
+                if g.bool(0.5) {
+                    ctl.fail_nth(1);
+                }
+                // One injected failure at most (fail_nth disarms after
+                // firing), so a single retry must always succeed.
+                let slot = match swap.evict(b) {
+                    Ok(s) => s,
+                    Err(_) => swap.evict(b).expect("retry after injected fault"),
+                };
+                slots.push((slot, data));
+            }
+            g.rng().shuffle(&mut slots);
+            for (slot, data) in slots {
+                if g.bool(0.5) {
+                    ctl.fail_nth(1);
+                }
+                let b = match swap.fault(slot) {
+                    Ok(b) => b,
+                    Err(_) => swap.fault(slot).expect("retry after injected fault"),
+                };
+                let mut out = vec![0u8; 256];
+                a.read(b, 0, &mut out).unwrap();
+                assert_eq!(out, data, "payload corrupted across injected faults");
                 a.free(b).unwrap();
             }
             assert_eq!(a.stats().allocated, 0);

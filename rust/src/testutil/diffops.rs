@@ -1,0 +1,316 @@
+//! The differential oracle: randomized operation sequences executed
+//! against a [`TreeArray`] and a plain `Vec<u64>` mirror in lockstep.
+//!
+//! Every public access path the tree offers — scalar get/set, the
+//! batched APIs, [`crate::trees::TreeWriter`] seqlock writes,
+//! [`crate::trees::TreeView`] reads, safe and concurrent leaf
+//! migration, and swap eviction/restore through the
+//! [`crate::trees::CompactTarget`] adoption hooks — is driven by one
+//! seeded op stream while the mirror records the intended contents.
+//! Any divergence (a lost write, a stale translation, a torn copy, a
+//! restore landing on the wrong leaf) surfaces as a mismatch, and
+//! [`crate::testutil::forall`]'s shrinking re-runs the failing seed at
+//! smaller scales. Swap I/O runs over the in-memory
+//! [`FailingBacking`], with faults injected at random eviction/fault
+//! points so the error paths' failure-atomicity is part of the oracle,
+//! not a separate suite.
+//!
+//! Shared via `testutil` so the integration suite
+//! (`rust/tests/differential.rs`) can run the same cases under both
+//! allocator policies, and future structures can bolt their own ops on.
+
+use crate::pmem::{BlockAlloc, SwapPool, SwapSlot};
+use crate::testutil::fault::FailingBacking;
+use crate::testutil::proptest_lite::Gen;
+use crate::trees::{CompactTarget, TreeArray};
+
+/// What one differential case exercised — returned so suites can
+/// assert, in aggregate, that the interesting ops actually ran instead
+/// of the generator silently starving them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DiffOutcome {
+    /// Ops executed (of any kind).
+    pub ops: usize,
+    /// Elements written (all write paths).
+    pub writes: usize,
+    /// Elements written through the seqlock [`crate::trees::TreeWriter`].
+    pub writer_writes: usize,
+    /// Leaf migrations (safe + concurrent forms).
+    pub migrations: usize,
+    /// Successful leaf evictions to swap.
+    pub evictions: usize,
+    /// Successful restores (fault + adopt).
+    pub restores: usize,
+    /// Injected swap I/O faults survived (error path taken, state
+    /// verified intact).
+    pub injected_faults: usize,
+}
+
+/// Pick a leaf by residency: `parked == false` draws from the resident
+/// (not swapped out) leaves, `parked == true` from the evicted ones.
+/// Returns `None` when the requested set is empty. The one residency
+/// filter every op arm shares — access ops, relocation, and eviction
+/// must all avoid parked leaves, restore must hit one.
+fn pick_leaf(g: &mut Gen, evicted: &[Option<SwapSlot>], parked: bool) -> Option<usize> {
+    let set: Vec<usize> = (0..evicted.len())
+        .filter(|&l| evicted[l].is_some() == parked)
+        .collect();
+    if set.is_empty() {
+        None
+    } else {
+        Some(*g.choose(&set))
+    }
+}
+
+/// Pick an element index whose leaf is resident (not swapped out).
+/// Returns `None` when every leaf is evicted.
+fn resident_index(g: &mut Gen, n: usize, leaf_cap: usize, evicted: &[Option<SwapSlot>]) -> Option<usize> {
+    let leaf = pick_leaf(g, evicted, false)?;
+    let lo = leaf * leaf_cap;
+    let hi = (lo + leaf_cap).min(n);
+    Some(g.usize_in(lo, hi - 1))
+}
+
+/// Run one differential case against `a`. The case builds its own
+/// tree, mirror, and in-memory swap; on return the pool is empty again
+/// (the case asserts it).
+pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
+    let mut out = DiffOutcome::default();
+    let leaf_cap = a.block_size() / 8;
+    let n = g.usize_in(1, leaf_cap * 24);
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).expect("diff tree");
+    let mut mirror = vec![0u64; n];
+    if g.bool(0.5) {
+        tree.enable_flat_table();
+    }
+    // Seed some contents through the bulk path.
+    for slot in mirror.iter_mut() {
+        *slot = g.rng().next_u64();
+    }
+    tree.copy_from_slice(&mirror).expect("seed");
+
+    let (backing, fault_ctl) = FailingBacking::new();
+    let swap = SwapPool::with_backing(a, backing);
+    let mut evicted: Vec<Option<SwapSlot>> = vec![None; tree.nleaves()];
+
+    let nops = g.usize_in(1, 120);
+    for _ in 0..nops {
+        out.ops += 1;
+        match g.usize_in(0, 11) {
+            // -- plain scalar access --------------------------------
+            0 | 1 => {
+                if let Some(i) = resident_index(g, n, leaf_cap, &evicted) {
+                    if g.bool(0.5) {
+                        let v = g.rng().next_u64();
+                        tree.set(i, v).expect("set");
+                        mirror[i] = v;
+                        out.writes += 1;
+                    } else {
+                        assert_eq!(tree.get(i).expect("get"), mirror[i], "scalar get diverged at {i}");
+                    }
+                }
+            }
+            // -- batched access -------------------------------------
+            2 => {
+                let b = g.usize_in(1, 64);
+                let mut idxs = Vec::with_capacity(b);
+                for _ in 0..b {
+                    match resident_index(g, n, leaf_cap, &evicted) {
+                        Some(i) => idxs.push(i),
+                        None => break,
+                    }
+                }
+                if !idxs.is_empty() {
+                    let got = tree.get_batch(&idxs).expect("get_batch");
+                    for (k, &i) in idxs.iter().enumerate() {
+                        assert_eq!(got[k], mirror[i], "get_batch diverged at {i}");
+                    }
+                }
+            }
+            3 => {
+                let b = g.usize_in(1, 64);
+                let mut idxs = Vec::new();
+                let mut vals = Vec::new();
+                for _ in 0..b {
+                    match resident_index(g, n, leaf_cap, &evicted) {
+                        Some(i) => {
+                            idxs.push(i);
+                            vals.push(g.rng().next_u64());
+                        }
+                        None => break,
+                    }
+                }
+                if !idxs.is_empty() {
+                    tree.set_batch(&idxs, &vals).expect("set_batch");
+                    // Stable grouping = last-write-wins in batch order.
+                    for (k, &i) in idxs.iter().enumerate() {
+                        mirror[i] = vals[k];
+                    }
+                    out.writes += idxs.len();
+                }
+            }
+            4 => {
+                let b = g.usize_in(1, 64);
+                let mut idxs = Vec::new();
+                let mut keys = Vec::new();
+                for _ in 0..b {
+                    match resident_index(g, n, leaf_cap, &evicted) {
+                        Some(i) => {
+                            idxs.push(i);
+                            keys.push(g.rng().next_u64());
+                        }
+                        None => break,
+                    }
+                }
+                if !idxs.is_empty() {
+                    tree.update_batch(&idxs, |pos, v| *v ^= keys[pos]).expect("update_batch");
+                    for (k, &i) in idxs.iter().enumerate() {
+                        mirror[i] ^= keys[k];
+                    }
+                    out.writes += idxs.len();
+                }
+            }
+            // -- seqlock writer -------------------------------------
+            5 | 6 => {
+                // SAFETY: single thread; the writer is the only
+                // accessor until it drops at the end of this arm.
+                let mut w = unsafe { tree.writer() };
+                for _ in 0..g.usize_in(1, 24) {
+                    if let Some(i) = resident_index(g, n, leaf_cap, &evicted) {
+                        match g.usize_in(0, 2) {
+                            0 => {
+                                let v = g.rng().next_u64();
+                                w.set(i, v).expect("writer set");
+                                mirror[i] = v;
+                            }
+                            1 => {
+                                let k = g.rng().next_u64();
+                                w.update(i, |v| v.wrapping_add(k)).expect("writer update");
+                                mirror[i] = mirror[i].wrapping_add(k);
+                            }
+                            _ => {
+                                assert_eq!(
+                                    w.get(i).expect("writer get"),
+                                    mirror[i],
+                                    "writer get diverged at {i}"
+                                );
+                                continue;
+                            }
+                        }
+                        out.writes += 1;
+                        out.writer_writes += 1;
+                    }
+                }
+            }
+            // -- view reads -----------------------------------------
+            7 => {
+                let mut v = tree.view();
+                let b = g.usize_in(1, 64);
+                let mut idxs = Vec::new();
+                for _ in 0..b {
+                    match resident_index(g, n, leaf_cap, &evicted) {
+                        Some(i) => idxs.push(i),
+                        None => break,
+                    }
+                }
+                if !idxs.is_empty() {
+                    let got = v.get_batch(&idxs).expect("view get_batch");
+                    for (k, &i) in idxs.iter().enumerate() {
+                        assert_eq!(got[k], mirror[i], "view batch read diverged at {i}");
+                    }
+                    let spot = idxs[0];
+                    assert_eq!(v.get(spot).expect("view get"), mirror[spot]);
+                    assert_eq!(v.seq_retries(), 0, "no writers live: the bracket must not retry");
+                }
+            }
+            // -- relocation -----------------------------------------
+            8 => {
+                if let Some(leaf) = pick_leaf(g, &evicted, false) {
+                    if g.bool(0.5) {
+                        tree.migrate_leaf(leaf).expect("migrate_leaf");
+                    } else {
+                        // SAFETY: single thread, no raw slices live.
+                        unsafe { tree.migrate_leaf_concurrent(leaf) }.expect("migrate concurrent");
+                        if g.bool(0.5) {
+                            a.epoch().try_reclaim(a);
+                        }
+                    }
+                    out.migrations += 1;
+                }
+            }
+            // -- eviction -------------------------------------------
+            9 => {
+                if let Some(leaf) = pick_leaf(g, &evicted, false) {
+                    let block = tree.leaf_block(leaf);
+                    let inject = g.bool(0.15);
+                    if inject {
+                        fault_ctl.fail_nth(1);
+                    }
+                    match swap.evict(block) {
+                        Ok(slot) => {
+                            evicted[leaf] = Some(slot);
+                            out.evictions += 1;
+                        }
+                        Err(_) => {
+                            assert!(inject, "uninjected eviction failed");
+                            out.injected_faults += 1;
+                            // Failure-atomic: the leaf must still serve.
+                            let lo = leaf * leaf_cap;
+                            assert_eq!(tree.get(lo).expect("get after failed evict"), mirror[lo]);
+                        }
+                    }
+                }
+            }
+            // -- restore --------------------------------------------
+            _ => {
+                if let Some(leaf) = pick_leaf(g, &evicted, true) {
+                    let slot = evicted[leaf].take().expect("parked leaf has a slot");
+                    let inject = g.bool(0.15);
+                    if inject {
+                        fault_ctl.fail_nth(1);
+                    }
+                    match swap.fault(slot) {
+                        Ok(fresh) => {
+                            // SAFETY: no accessor since the eviction;
+                            // fresh holds the leaf's bytes and is ours.
+                            unsafe { CompactTarget::adopt_leaf_block(&tree, leaf, fresh) };
+                            out.restores += 1;
+                            let lo = leaf * leaf_cap;
+                            assert_eq!(
+                                tree.get(lo).expect("get after restore"),
+                                mirror[lo],
+                                "restore landed wrong bytes on leaf {leaf}"
+                            );
+                        }
+                        Err(_) => {
+                            assert!(inject, "uninjected fault failed");
+                            out.injected_faults += 1;
+                            // Failure-atomic: the payload stays parked.
+                            evicted[leaf] = Some(slot);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Drain: restore every parked leaf, then the full-contents oracle.
+    fault_ctl.disarm();
+    for leaf in 0..evicted.len() {
+        if let Some(slot) = evicted[leaf].take() {
+            let fresh = swap.fault(slot).expect("final restore");
+            // SAFETY: no accessor since the eviction.
+            unsafe { CompactTarget::adopt_leaf_block(&tree, leaf, fresh) };
+            out.restores += 1;
+        }
+    }
+    assert_eq!(tree.to_vec(), mirror, "final contents diverged from the mirror");
+    let mut view = tree.view();
+    assert_eq!(view.to_vec(), mirror, "view drain diverged from the mirror");
+    drop(view);
+    a.epoch().synchronize(a);
+    assert_eq!(a.epoch().limbo_len(), 0, "case left blocks in limbo");
+    drop(tree);
+    assert_eq!(a.stats().allocated, 0, "case leaked blocks");
+    out
+}

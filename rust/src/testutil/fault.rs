@@ -1,0 +1,140 @@
+//! Fault-injection doubles for the swap backing.
+//!
+//! [`FailingBacking`] implements [`SwapBacking`] over an in-memory
+//! byte store and fails the N-th subsequent I/O on command, so tests
+//! can hit `SwapPool`'s error paths at exact points and assert the
+//! failure-atomicity the happy-path tests merely assume: a failed
+//! `stash` must roll its slot back, a failed `fault` must keep the
+//! payload resident. (It doubles as a fast in-memory backing for
+//! high-case-count suites — the differential harness — where creating
+//! one temp file per case would dominate the runtime.)
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::pmem::SwapBacking;
+
+/// Remote control for a [`FailingBacking`] that has been moved into a
+/// `SwapPool`: arm faults and observe I/O counts from the test body.
+#[derive(Clone)]
+pub struct FailControl {
+    /// I/Os until the next injected failure; 0 = disarmed.
+    arm: Arc<AtomicU64>,
+    /// Total I/O calls observed.
+    ops: Arc<AtomicU64>,
+}
+
+impl FailControl {
+    /// Fail the `n`-th I/O from now (`1` = the very next call), then
+    /// disarm — exactly one failure per arming.
+    pub fn fail_nth(&self, n: u64) {
+        assert!(n > 0, "fail_nth counts from 1");
+        self.arm.store(n, Ordering::Relaxed);
+    }
+
+    /// Cancel a pending injected failure.
+    pub fn disarm(&self) {
+        self.arm.store(0, Ordering::Relaxed);
+    }
+
+    /// Total backing I/Os performed so far (including the failed ones).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+}
+
+/// An in-memory [`SwapBacking`] whose I/Os can be made to fail on
+/// command via the paired [`FailControl`].
+pub struct FailingBacking {
+    data: Vec<u8>,
+    arm: Arc<AtomicU64>,
+    ops: Arc<AtomicU64>,
+}
+
+impl FailingBacking {
+    /// A fresh backing (no failure armed) plus its control handle.
+    pub fn new() -> (Self, FailControl) {
+        let arm = Arc::new(AtomicU64::new(0));
+        let ops = Arc::new(AtomicU64::new(0));
+        let ctl = FailControl {
+            arm: arm.clone(),
+            ops: ops.clone(),
+        };
+        (
+            FailingBacking {
+                data: Vec::new(),
+                arm,
+                ops,
+            },
+            ctl,
+        )
+    }
+
+    /// Count one I/O; error if the armed countdown hits it.
+    fn tick(&self) -> io::Result<()> {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let a = self.arm.load(Ordering::Relaxed);
+        if a > 0 {
+            self.arm.store(a - 1, Ordering::Relaxed);
+            if a == 1 {
+                return Err(io::Error::new(io::ErrorKind::Other, "injected swap I/O fault"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SwapBacking for FailingBacking {
+    fn write_at(&mut self, off: u64, data: &[u8]) -> io::Result<()> {
+        self.tick()?;
+        let off = off as usize;
+        if self.data.len() < off + data.len() {
+            self.data.resize(off + data.len(), 0);
+        }
+        self.data[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn read_at(&mut self, off: u64, out: &mut [u8]) -> io::Result<()> {
+        self.tick()?;
+        let off = off as usize;
+        if self.data.len() < off + out.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "read past the end of the swap backing",
+            ));
+        }
+        out.copy_from_slice(&self.data[off..off + out.len()]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nth_io_fails_then_recovers() {
+        let (mut b, ctl) = FailingBacking::new();
+        b.write_at(0, &[1, 2, 3]).unwrap();
+        ctl.fail_nth(2); // next is ok, the one after fails
+        let mut out = [0u8; 3];
+        b.read_at(0, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+        assert!(b.read_at(0, &mut out).is_err(), "armed I/O must fail");
+        b.read_at(0, &mut out).unwrap(); // disarmed after one failure
+        assert_eq!(ctl.ops(), 4);
+    }
+
+    #[test]
+    fn short_reads_are_errors() {
+        let (mut b, _ctl) = FailingBacking::new();
+        b.write_at(4, &[9; 4]).unwrap();
+        let mut out = [0u8; 16];
+        assert!(b.read_at(0, &mut out).is_err());
+        let mut ok = [0u8; 8];
+        b.read_at(0, &mut ok).unwrap();
+        assert_eq!(&ok[4..], &[9; 4]);
+    }
+}

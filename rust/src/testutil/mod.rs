@@ -1,13 +1,19 @@
-//! Test utilities: a deterministic RNG and a minimal property-testing
-//! harness (`proptest_lite`).
+//! Test utilities: a deterministic RNG, a minimal property-testing
+//! harness (`proptest_lite`), the differential op oracle
+//! ([`diffops`]), and fault-injection doubles ([`fault`]).
 //!
 //! The offline build environment has no `proptest`/`rand` crates, so the
 //! crate ships its own splitmix64/xoshiro-based generator and a tiny
 //! property runner with input shrinking. Benches reuse [`Rng`] for
 //! workload generation so experiments are reproducible bit-for-bit.
+//! See `TESTING.md` for how these tiers fit together.
 
+pub mod diffops;
+pub mod fault;
 pub mod proptest_lite;
 
+pub use diffops::DiffOutcome;
+pub use fault::{FailControl, FailingBacking};
 pub use proptest_lite::{forall, Gen};
 
 /// Deterministic 64-bit RNG (splitmix64 seeded xoshiro256**).

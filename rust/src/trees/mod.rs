@@ -22,7 +22,13 @@
 //!   a *per-thread* leaf-TLB and arena-epoch registration, so N worker
 //!   threads read one tree with no lock on the lookup path, safely
 //!   coexisting with [`TreeArray::migrate_leaf_concurrent`]'s
-//!   epoch-deferred relocation.
+//!   epoch-deferred relocation — and, via per-leaf seqlock brackets,
+//!   with live [`TreeWriter`]s.
+//! * [`TreeWriter`] — the concurrent write side: a `Send` write handle
+//!   that takes a per-leaf **seqlock** for each mutation, so M writers,
+//!   N view readers, and the mmd compactor's relocation all run against
+//!   one tree with no global lock (relocation acquires the same
+//!   seqlock, so a leaf is never simultaneously written and moved).
 //! * [`TreeRegistry`] / [`CompactTarget`] — type-erased handles to live
 //!   trees for the background memory-management daemon ([`crate::mmd`]):
 //!   registered trees expose their parent-patch entry points so the
@@ -38,6 +44,7 @@ pub(crate) mod registry;
 mod tlb;
 mod tree_array;
 mod view;
+mod write;
 
 pub use cursor::Cursor;
 pub use layout::{TreeGeometry, TreeTraceModel};
@@ -45,3 +52,4 @@ pub use registry::{CompactTarget, TreeRegistry};
 pub use tlb::{LeafTlb, TlbStats};
 pub use tree_array::{Pod, TreeArray};
 pub use view::TreeView;
+pub use write::TreeWriter;

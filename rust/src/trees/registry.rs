@@ -19,8 +19,11 @@
 //!
 //! * **[`TreeRegistry::register`]** (compaction + rebalancing): the
 //!   tree is accessed only through epoch-registered revalidating
-//!   readers ([`crate::trees::TreeView`]); no raw leaf slices, no data
-//!   writes, no cursors on other threads, and nobody else migrates its
+//!   accessors — [`crate::trees::TreeView`] readers and
+//!   [`crate::trees::TreeWriter`] seqlock writers (the daemon's
+//!   relocation takes each leaf's seqlock, so writes and moves of one
+//!   leaf serialize); no raw leaf slices, no cursors on other threads,
+//!   no writes outside `TreeWriter`, and nobody else migrates its
 //!   leaves.
 //! * **[`TreeRegistry::register_evictable`]** (adds pressure-driven
 //!   leaf eviction): additionally **no accessor at all** — not even
@@ -125,9 +128,11 @@ impl<'e> TreeRegistry<'e> {
     ///
     /// # Safety
     /// For the whole registration window the tree is accessed only
-    /// through epoch-registered revalidating readers
-    /// ([`crate::trees::TreeView`]): no raw leaf slices, no data
-    /// writes, no cross-thread cursors, no other migrator (module docs).
+    /// through epoch-registered revalidating accessors
+    /// ([`crate::trees::TreeView`] readers,
+    /// [`crate::trees::TreeWriter`] seqlock writers): no raw leaf
+    /// slices, no writes outside `TreeWriter`, no cross-thread cursors,
+    /// no other migrator (module docs).
     pub unsafe fn register(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
         self.insert(tree, false)
     }
@@ -137,8 +142,9 @@ impl<'e> TreeRegistry<'e> {
     ///
     /// # Safety
     /// The [`TreeRegistry::register`] contract, plus: **no accessor at
-    /// all** (not even views) touches the tree while registered — a
-    /// swapped-out leaf has no live backing until restored.
+    /// all** (not even views or seqlock writers) touches the tree while
+    /// registered — a swapped-out leaf has no live backing until
+    /// restored, and eviction's disk stash does not take the seqlock.
     pub unsafe fn register_evictable(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
         self.insert(tree, true)
     }

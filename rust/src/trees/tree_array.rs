@@ -8,6 +8,7 @@ use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::layout::TreeGeometry;
 use crate::trees::tlb::LeafTlb;
 use crate::trees::view::TreeView;
+use crate::trees::write::TreeWriter;
 use crate::trees::Cursor;
 
 /// Plain-old-data element types storable in tree leaves.
@@ -76,6 +77,25 @@ unsafe impl Pod for usize {}
 /// threads* (same single-writer contract as [`BlockAlloc::block_ptr`]);
 /// the generation protocol makes same-thread interleavings of relocate
 /// and cached reads safe.
+///
+/// # Writers and the per-leaf seqlocks
+///
+/// Every leaf carries an atomic **sequence word** (`seq`): even = leaf
+/// stable, odd = a write or relocation is in flight. Three parties run
+/// the protocol:
+///
+/// * [`TreeWriter`] (created by the `unsafe`
+///   [`TreeArray::writer`]) acquires a leaf's seqlock (CAS even →
+///   odd), re-validates its translation under the lock, writes, and
+///   releases (store odd + 1). Writers to *different* leaves never
+///   contend; writers to the same leaf serialize on the CAS.
+/// * [`TreeView`] readers sandwich each leaf read between two sequence
+///   loads and retry on an odd or changed value, so a torn or mid-write
+///   read is never returned.
+/// * `migrate_leaf*` relocation acquires the seqlock before copying, so
+///   a leaf is never simultaneously written and moved — the copy cannot
+///   tear a write, and a writer acquiring after the move re-translates
+///   (the generation bump happens inside the locked section).
 pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     pub(crate) alloc: &'a A,
     pub(crate) geo: TreeGeometry,
@@ -92,6 +112,9 @@ pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     flat_on: AtomicBool,
     /// Lazily built leaf-pointer table (one `*mut u8` per leaf).
     flat: OnceLock<Box<[AtomicPtr<u8>]>>,
+    /// Per-leaf write sequence words (seqlocks): odd = a writer or a
+    /// relocation holds the leaf. See the type-level "Writers" docs.
+    seq: Box<[AtomicU64]>,
     _t: std::marker::PhantomData<T>,
 }
 
@@ -157,6 +180,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             generation: AtomicU64::new(0),
             flat_on: AtomicBool::new(false),
             flat: OnceLock::new(),
+            seq: (0..geo.nleaves()).map(|_| AtomicU64::new(0)).collect(),
             _t: std::marker::PhantomData,
         })
     }
@@ -377,6 +401,88 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     pub fn leaf_block(&self, leaf_idx: usize) -> BlockId {
         assert!(leaf_idx < self.geo.nleaves());
         BlockId(self.blocks[leaf_idx].load(Ordering::Acquire))
+    }
+
+    /// Current sequence word of leaf `leaf_idx`: odd = a write or a
+    /// relocation is in flight; it advances by 2 per completed
+    /// write/move. Custom readers can run the same
+    /// begin/read/validate protocol [`TreeView`] uses; tests and
+    /// benches use it to observe writer/relocation traffic.
+    #[inline]
+    pub fn leaf_seq(&self, leaf_idx: usize) -> u64 {
+        self.seq[leaf_idx].load(Ordering::Acquire)
+    }
+
+    /// The raw sequence word of leaf `leaf_idx` (crate-internal: the
+    /// read-side protocol in [`TreeView`] needs the atomic itself).
+    #[inline]
+    pub(crate) fn seq_word(&self, leaf_idx: usize) -> &AtomicU64 {
+        &self.seq[leaf_idx]
+    }
+
+    /// Acquire leaf `leaf_idx`'s seqlock: spin until the word is even,
+    /// then CAS it odd. Returns `(base, waits)` — the even value the
+    /// lock was taken at (pass to [`TreeArray::seq_release`]) and how
+    /// many attempts lost to contention (a writer/relocation holding or
+    /// stealing the lock). The acquire is an `AcqRel` RMW, so data
+    /// writes in the critical section cannot be reordered before the
+    /// odd store, and the holder observes everything the previous
+    /// holder published (in particular a relocation's generation bump —
+    /// which is why translations validated *under* the lock are always
+    /// current).
+    pub(crate) fn seq_acquire(&self, leaf_idx: usize) -> (u64, u64) {
+        let word = &self.seq[leaf_idx];
+        let mut waits = 0u64;
+        loop {
+            let s = word.load(Ordering::Relaxed);
+            if s & 1 == 0
+                && word
+                    .compare_exchange(s, s + 1, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return (s, waits);
+            }
+            waits += 1;
+            if waits & 0x3F == 0 {
+                // Long hold (a paused writer, a mid-copy relocation):
+                // donate the timeslice instead of burning it.
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    /// Release leaf `leaf_idx`'s seqlock taken at `base`: publish every
+    /// write of the critical section (Release) and land the word on the
+    /// next even value, so readers straddling the section observe a
+    /// changed sequence and retry.
+    #[inline]
+    pub(crate) fn seq_release(&self, leaf_idx: usize, base: u64) {
+        debug_assert_eq!(self.seq[leaf_idx].load(Ordering::Relaxed), base + 1);
+        self.seq[leaf_idx].store(base + 2, Ordering::Release);
+    }
+
+    /// [`TreeArray::seq_acquire`] wrapped in a drop guard: the lock is
+    /// released even if the critical section unwinds (a panicking user
+    /// closure, a failed debug assertion). Without this, an unwind
+    /// would leave the word odd forever — every reader of the leaf
+    /// would spin in its retry loop and every writer/relocation in
+    /// `seq_acquire`, turning one failed assertion into a process-wide
+    /// hang. Partial critical-section state released this way is still
+    /// seq-consistent: each element store is complete, and the +2 makes
+    /// straddling readers retry.
+    #[inline]
+    pub(crate) fn seq_lock(&self, leaf_idx: usize) -> (SeqLockGuard<'_, 'a, T, A>, u64) {
+        let (base, waits) = self.seq_acquire(leaf_idx);
+        (
+            SeqLockGuard {
+                tree: self,
+                leaf_idx,
+                base,
+            },
+            waits,
+        )
     }
 
     /// Visit every leaf in order as one contiguous slice: `visit(leaf_idx,
@@ -609,11 +715,23 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         defer_free: bool,
         dest: Option<BlockId>,
     ) -> Result<BlockId> {
-        let (parent, old) = self.leaf_parent(leaf_idx);
+        // Allocate before locking: an OOM must not be held against a
+        // leaf whose seqlock readers/writers are spinning on.
         let fresh = match dest {
             Some(d) => d,
             None => self.alloc.alloc()?,
         };
+        // Take the leaf's seqlock for the copy + publication: a
+        // concurrent TreeWriter can neither write the old block mid-copy
+        // (the copy would tear, and post-publication writes to the old
+        // block would be lost) nor translate to the old block after the
+        // move (acquiring the lock next synchronizes with the release
+        // below, so the generation bump is visible and the writer
+        // re-translates). Readers straddling this section observe an
+        // odd/changed sequence and retry. Guard form: released on drop
+        // even if a debug assertion below unwinds.
+        let (seq_guard, _) = self.seq_lock(leaf_idx);
+        let (parent, old) = self.leaf_parent(leaf_idx);
         debug_assert_ne!(fresh.0, old.0, "destination must differ from the leaf's block");
         let bs = self.alloc.block_size();
         // SAFETY: both blocks live and distinct; full-block copy. A
@@ -625,6 +743,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         // SAFETY: fresh is live, exclusively ours, and now holds the
         // leaf's bytes; parent/old came from `leaf_parent` just above.
         let retire_epoch = unsafe { self.publish_leaf(leaf_idx, parent, fresh) };
+        drop(seq_guard);
         if defer_free {
             // Concurrent readers may still hold the old translation:
             // park the block in limbo until they quiesce.
@@ -663,6 +782,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// * At most one relocation/adoption of this tree in flight.
     pub(crate) unsafe fn adopt_leaf_impl(&self, leaf_idx: usize, fresh: BlockId) {
         debug_assert!(leaf_idx < self.geo.nleaves());
+        // Belt-and-braces: adoption's contract already forbids every
+        // accessor, but taking the (necessarily uncontended) seqlock
+        // keeps the "a leaf's translation only changes under its
+        // seqlock" invariant unconditional.
+        let (_seq_guard, _) = self.seq_lock(leaf_idx);
         let (parent, _stale) = self.leaf_parent(leaf_idx);
         // SAFETY: forwarded from this fn's contract (no copy needed —
         // `fresh` already holds the bytes; the stale block is dead).
@@ -778,6 +902,60 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         T: Sync,
     {
         TreeView::new(self, LeafTlb::new(entries, ways))
+    }
+
+    /// A concurrent write handle over this tree (default TLB geometry):
+    /// writes take the target leaf's seqlock, so any number of writers
+    /// coexist with [`TreeView`] readers and with
+    /// [`TreeArray::migrate_leaf_concurrent`]-family relocation (the
+    /// mmd compactor included). See [`TreeWriter`] for the protocol and
+    /// the type-level "Writers" docs for the seqlock invariants.
+    ///
+    /// # Safety
+    /// While any writer of this tree is live, the tree may be accessed
+    /// only through seq-checked paths: [`TreeView::get`] /
+    /// [`TreeView::get_batch`], [`TreeWriter`] methods, and the
+    /// concurrent relocation forms. Everything else must not overlap
+    /// the writer's lifetime on any thread, because none of it retries
+    /// on the sequence word and could observe a torn write: no
+    /// [`TreeArray::leaf_slice`]-style raw slice, no [`Cursor`], no
+    /// direct `get`/`set`/batch/`to_vec` calls on the `TreeArray`
+    /// itself — and no **bulk view paths** either
+    /// ([`TreeView::to_vec`], [`TreeView::for_each_leaf_run`]), which
+    /// hand out whole-leaf slices un-bracketed and carry their own
+    /// no-concurrent-writers contract.
+    pub unsafe fn writer(&self) -> TreeWriter<'_, 'a, T, A>
+    where
+        T: Sync,
+    {
+        TreeWriter::new(self, LeafTlb::default_for_cursor())
+    }
+
+    /// [`TreeArray::writer`] with an explicit TLB geometry
+    /// (`entries == 0` disables the writer's translation cache).
+    ///
+    /// # Safety
+    /// The [`TreeArray::writer`] contract.
+    pub unsafe fn writer_with_tlb(&self, entries: usize, ways: usize) -> TreeWriter<'_, 'a, T, A>
+    where
+        T: Sync,
+    {
+        TreeWriter::new(self, LeafTlb::new(entries, ways))
+    }
+}
+
+/// A held per-leaf seqlock (see [`TreeArray::seq_lock`]): releases on
+/// drop, so unwinding out of a critical section cannot leave the leaf
+/// permanently odd.
+pub(crate) struct SeqLockGuard<'t, 'a, T: Pod, A: BlockAlloc> {
+    tree: &'t TreeArray<'a, T, A>,
+    leaf_idx: usize,
+    base: u64,
+}
+
+impl<T: Pod, A: BlockAlloc> Drop for SeqLockGuard<'_, '_, T, A> {
+    fn drop(&mut self) {
+        self.tree.seq_release(self.leaf_idx, self.base);
     }
 }
 

@@ -11,9 +11,9 @@
 //! tree's atomic translation metadata (root / flat leaf table /
 //! generation) and the arena epoch, all read-only in steady state.
 //!
-//! # Safety protocol (why concurrent reads + relocation are sound)
+//! # Safety protocol (reads vs relocation vs writers)
 //!
-//! Three layers, each handling one hazard:
+//! Four layers, each handling one hazard:
 //!
 //! 1. **Torn translation** — every pointer relocation patches (interior
 //!    child slots, the root, the flat leaf table) is an atomic 8-byte
@@ -35,12 +35,32 @@
 //!    points at a block that is either current or retired-but-unfreed —
 //!    and both hold identical bytes (the copy precedes publication).
 //!
-//! What stays on the caller: views are **read-only** — data writes
-//! require `&mut TreeArray`, which the borrow checker rules out while
-//! any view is alive. Relocation under live views must go through
+//! 4. **Torn data reads under live writers** — a
+//!    [`crate::trees::TreeWriter`] may mutate a leaf while a view reads
+//!    it, so [`TreeView::get`] / [`TreeView::get_batch`] bracket every
+//!    leaf read between two loads of the leaf's sequence word
+//!    (the per-leaf seqlock; see the [`TreeArray`] "Writers" docs) and
+//!    retry on an odd or changed value. A generation re-check inside
+//!    the bracket pins the translation to the *current* block, so a
+//!    pre-relocation translation can never satisfy a post-relocation
+//!    read (the stale block's bytes stop being updated the moment the
+//!    leaf moves). When no writer exists the bracket costs two
+//!    uncontended atomic loads per leaf run and never retries.
+//!
+//! What stays on the caller: data writes go through
+//! [`crate::trees::TreeWriter`] (or `&mut TreeArray` while no view is
+//! alive) — never both regimes at once with unchecked paths (the
+//! [`TreeArray::writer`] contract). The bulk slice paths
+//! ([`TreeView::for_each_leaf_run`], [`TreeView::to_vec`]) hand out
+//! whole-leaf slices without seq-checking and keep the **no concurrent
+//! writers** contract: use them only while writers are quiescent (the
+//! experiments checksum after joining their writer threads). Relocation
+//! under live views must go through
 //! [`TreeArray::migrate_leaf_concurrent`]; the immediate-free forms
 //! ([`TreeArray::migrate_leaf`] / [`TreeArray::migrate_leaf_shared`])
 //! keep their no-concurrent-access contract.
+
+use std::sync::atomic::{fence, Ordering};
 
 use crate::error::{Error, Result};
 use crate::pmem::epoch::ReaderSlot;
@@ -65,6 +85,9 @@ pub struct TreeView<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     slot: ReaderSlot<'a>,
     /// Full translations performed (TLB misses that walked/indexed).
     walks: u64,
+    /// Seq-bracket retries: reads re-run because a writer or a
+    /// relocation overlapped them (hazard 4 in the module docs).
+    seq_retries: u64,
 }
 
 // SAFETY: a TreeView is a read-only handle. Its raw pointers (inside
@@ -88,6 +111,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             epoch_seen,
             slot,
             walks: 0,
+            seq_retries: 0,
         }
     }
 
@@ -116,6 +140,10 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     ///
     /// Must run before every translation batch; everything dereferenced
     /// until the next pin is covered by this pin's epoch.
+    ///
+    /// LOCKSTEP: `TreeWriter::pin` in `write.rs` is a deliberate twin —
+    /// the flush-on-epoch-move + generation-restamp protocol must
+    /// change in both places or neither.
     #[inline]
     fn pin(&mut self) {
         let e = self.slot.pin();
@@ -143,16 +171,20 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         (p as *const T, span)
     }
 
-    /// Read element `i` under the current pin.
-    ///
-    /// # Safety
-    /// `i < self.len()`.
+    /// One lap of the reader retry path (hazard 4): count it, back off
+    /// (spin first, donate the timeslice on long waits — a mid-copy
+    /// relocation holds a leaf for a whole memcpy), and re-pin so the
+    /// next attempt revalidates against fresh generation/epoch values.
     #[inline]
-    unsafe fn read_pinned(&mut self, i: usize) -> T {
-        let shift = self.tree.geo.leaf_cap.trailing_zeros();
-        let (p, _) = self.leaf_translate(i >> shift);
-        // SAFETY: aligned per the Pod contract; in-bounds per caller.
-        unsafe { p.add(i & (self.tree.geo.leaf_cap - 1)).read() }
+    fn seq_retry(&mut self, tries: &mut u32) {
+        self.seq_retries += 1;
+        *tries += 1;
+        if *tries & 0x3F == 0 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+        self.pin();
     }
 
     /// Read element `i` (bounds-checked).
@@ -167,20 +199,49 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         Ok(unsafe { self.get_unchecked(i) })
     }
 
-    /// Read element `i` without bounds checking.
+    /// Read element `i` without bounds checking, seq-bracketed against
+    /// concurrent writers and relocation (module docs, hazard 4): the
+    /// value returned was the element's committed value at some point
+    /// inside the call, never a torn or mid-write snapshot.
     ///
     /// # Safety
     /// `i < self.len()`.
     #[inline]
     pub unsafe fn get_unchecked(&mut self, i: usize) -> T {
         self.pin();
-        // SAFETY: caller guarantees i < len.
-        unsafe { self.read_pinned(i) }
+        let shift = self.tree.geo.leaf_cap.trailing_zeros();
+        let leaf = i >> shift;
+        let off = i & (self.tree.geo.leaf_cap - 1);
+        let mut tries = 0u32;
+        loop {
+            let (p, _) = self.leaf_translate(leaf);
+            let s1 = self.tree.seq_word(leaf).load(Ordering::Acquire);
+            // The bracket vouches only for a *current* translation: the
+            // generation re-check orders "translation still current"
+            // inside [s1, s2] — a relocation completed before s1 bumped
+            // the generation under the seqlock, so it cannot pass both
+            // tests (see the TreeArray "Writers" docs).
+            if s1 & 1 == 1 || self.tree.generation() != self.gen {
+                self.seq_retry(&mut tries);
+                continue;
+            }
+            // SAFETY: in-bounds per caller; aligned per the Pod
+            // contract; volatile because the load may race a writer —
+            // a racy value never escapes (discarded below).
+            let v = unsafe { p.add(off).read_volatile() };
+            fence(Ordering::Acquire);
+            if self.tree.seq_word(leaf).load(Ordering::Relaxed) == s1 {
+                return v;
+            }
+            self.seq_retry(&mut tries);
+        }
     }
 
     /// Read many elements (`out[k]` = element `idxs[k]`), pinned once
     /// and grouped by leaf so each distinct leaf run costs one TLB
-    /// probe, exactly like [`TreeArray::get_batch`].
+    /// probe and one seq bracket, exactly like [`TreeArray::get_batch`]
+    /// plus the writer protocol: a run overlapped by a write or a
+    /// relocation of its leaf is retried wholesale.
     pub fn get_batch(&mut self, idxs: &[usize]) -> Result<Vec<T>> {
         self.tree.check_batch(idxs)?;
         self.pin();
@@ -191,13 +252,32 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         let mut k = 0;
         while k < order.len() {
             let leaf = idxs[order[k] as usize] >> shift;
-            let (base, _) = self.leaf_translate(leaf);
-            while k < order.len() && idxs[order[k] as usize] >> shift == leaf {
-                let pos = order[k] as usize;
-                // SAFETY: bounds checked above; offset < leaf span.
-                out[pos] = unsafe { base.add(idxs[pos] & mask).read() };
-                k += 1;
+            let mut e = k + 1;
+            while e < order.len() && idxs[order[e] as usize] >> shift == leaf {
+                e += 1;
             }
+            let mut tries = 0u32;
+            loop {
+                let (base, _) = self.leaf_translate(leaf);
+                let s1 = self.tree.seq_word(leaf).load(Ordering::Acquire);
+                if s1 & 1 == 1 || self.tree.generation() != self.gen {
+                    self.seq_retry(&mut tries);
+                    continue;
+                }
+                for &pos in &order[k..e] {
+                    let pos = pos as usize;
+                    // SAFETY: bounds checked above; offset < leaf span;
+                    // volatile — racy values are discarded below.
+                    out[pos] = unsafe { base.add(idxs[pos] & mask).read_volatile() };
+                }
+                fence(Ordering::Acquire);
+                if self.tree.seq_word(leaf).load(Ordering::Relaxed) == s1 {
+                    break;
+                }
+                // Rewriting out[pos] on retry is idempotent.
+                self.seq_retry(&mut tries);
+            }
+            k = e;
         }
         Ok(out)
     }
@@ -205,7 +285,9 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     /// Visit `idxs` grouped into per-leaf runs (the read-side analogue
     /// of [`TreeArray::for_each_leaf_run`]), translated through this
     /// view's TLB under one pin. The leaf slice is valid only inside
-    /// the callback — do not stash it.
+    /// the callback — do not stash it. Not seq-checked: the handed-out
+    /// slice requires that no [`crate::trees::TreeWriter`] mutates the
+    /// tree during the call (module docs).
     pub fn for_each_leaf_run<F>(&mut self, idxs: &[usize], mut visit: F) -> Result<()>
     where
         F: FnMut(usize, &[T], &[u32]),
@@ -232,6 +314,8 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     }
 
     /// Copy the whole array out, one translation + memcpy per leaf.
+    /// Not seq-checked — same no-concurrent-writers contract as
+    /// [`TreeView::for_each_leaf_run`].
     pub fn to_vec(&mut self) -> Vec<T> {
         self.pin();
         let mut out = Vec::with_capacity(self.len());
@@ -257,6 +341,12 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     /// Full translations (TLB misses) this view performed.
     pub fn walks(&self) -> u64 {
         self.walks
+    }
+
+    /// Seq-bracket retries: reads re-run because a writer or a
+    /// relocation overlapped them. 0 on writer-free workloads.
+    pub fn seq_retries(&self) -> u64 {
+        self.seq_retries
     }
 }
 

@@ -7,7 +7,7 @@
 use crate::memsim::Hierarchy;
 use crate::pmem::BlockAlloc;
 use crate::testutil::Rng;
-use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel, TreeView};
+use crate::trees::{TreeArray, TreeGeometry, TreeTraceModel, TreeView, TreeWriter};
 use crate::workloads::trace::CostModel;
 use crate::workloads::SimResult;
 
@@ -127,6 +127,87 @@ pub fn gups_read_reference(table: &[u64], ops: u64, seed: u64) -> u64 {
     acc
 }
 
+// ---- concurrent read/write GUPS (seqlock writers, PR 5) ----
+//
+// Under concurrent mutation a static reference checksum is impossible
+// (readers legitimately observe any prefix of the writers' progress),
+// so the RW variant makes every value *self-certifying*: slot `i`
+// always holds `i` in its high tag bits and a monotone update count
+// below. A torn read, a stale-block read racing a post-move write, or
+// a write landing on the wrong leaf all break the tag invariant the
+// readers assert per read — and because tagged increments commute
+// across writers, the final table is still exactly reproducible by
+// replaying every writer's seeded stream against a mirror.
+
+/// Bit position of the slot-identity tag in a concurrent-RW table
+/// value: `value >> RW_TAG_SHIFT == slot index`, update count below.
+pub const RW_TAG_SHIFT: u32 = 40;
+
+/// Initial concurrent-RW table value for slot `i` (tag up, count 0).
+/// Tables must stay below 2^24 elements so tags can't collide.
+pub fn rw_init(i: usize) -> u64 {
+    debug_assert!((i as u64) < 1 << (64 - RW_TAG_SHIFT));
+    (i as u64) << RW_TAG_SHIFT
+}
+
+/// One writer's stream: `ops` tagged increments at seeded random slots
+/// through a seqlock [`TreeWriter`]. Returns `ops` (the update count
+/// contributed). Safe under concurrent views, other writers, and
+/// `migrate_leaf_concurrent`-family relocation.
+pub fn gups_rw_write<A: BlockAlloc>(
+    w: &mut TreeWriter<'_, '_, u64, A>,
+    ops: u64,
+    seed: u64,
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = w.len() as u64;
+    for _ in 0..ops {
+        let i = (rng.next_u64() % n) as usize;
+        w.update(i, |v| v.wrapping_add(1)).expect("index in range by construction");
+    }
+    ops
+}
+
+/// Replay [`gups_rw_write`]'s stream against a contiguous mirror —
+/// apply every writer's stream (any order: increments commute) and the
+/// mirror is the exact expected final table.
+pub fn rw_apply_reference(mirror: &mut [u64], ops: u64, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let n = mirror.len() as u64;
+    for _ in 0..ops {
+        let i = (rng.next_u64() % n) as usize;
+        mirror[i] = mirror[i].wrapping_add(1);
+    }
+}
+
+/// The read side under live writers: `ops` seeded random reads through
+/// a view, each asserted against the tag invariant (`value >>
+/// RW_TAG_SHIFT == slot`) — the seq bracket must make every returned
+/// value a committed one, so a torn/stale/misdirected read panics here.
+/// Returns a fold of the observed values (kept live by callers via
+/// `black_box` so the loop cannot be elided).
+pub fn gups_rw_read<A: BlockAlloc>(
+    view: &mut TreeView<'_, '_, u64, A>,
+    ops: u64,
+    seed: u64,
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let n = view.len() as u64;
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let i = (rng.next_u64() % n) as usize;
+        // SAFETY: i < n by construction.
+        let v = unsafe { view.get_unchecked(i) };
+        assert_eq!(
+            v >> RW_TAG_SHIFT,
+            i as u64,
+            "torn or misdirected concurrent read at slot {i} (value {v:#x})"
+        );
+        acc = acc.rotate_left(7) ^ v;
+    }
+    acc
+}
+
 /// Simulated GUPS at paper scale (4–64 GB tables).
 ///
 /// Each update = one table access (read-modify-write counted once — the
@@ -236,6 +317,46 @@ mod tests {
         // SAFETY: only epoch-registered views read the tree.
         unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
         assert_eq!(gups_view_read(&mut view, 10_000, 8), want);
+        drop(view);
+        a.epoch().synchronize(&a);
+    }
+
+    #[test]
+    fn rw_writer_streams_replay_onto_the_mirror() {
+        let a = BlockAllocator::new(4096, 64).unwrap();
+        let n = 1 << 12;
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let mut mirror: Vec<u64> = (0..n).map(rw_init).collect();
+        tree.copy_from_slice(&mirror).unwrap();
+        {
+            // SAFETY: single thread; writer is the only accessor.
+            let mut w = unsafe { tree.writer() };
+            assert_eq!(gups_rw_write(&mut w, 5_000, 11), 5_000);
+            gups_rw_write(&mut w, 3_000, 22);
+        }
+        // Replay in the opposite order: increments commute.
+        rw_apply_reference(&mut mirror, 3_000, 22);
+        rw_apply_reference(&mut mirror, 5_000, 11);
+        assert_eq!(tree.to_vec(), mirror);
+    }
+
+    #[test]
+    fn rw_read_invariant_holds_across_writes_and_migration() {
+        let a = BlockAllocator::new(4096, 64).unwrap();
+        let n = 1 << 12;
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, n).unwrap();
+        let init: Vec<u64> = (0..n).map(rw_init).collect();
+        tree.copy_from_slice(&init).unwrap();
+        let mut view = tree.view();
+        std::hint::black_box(gups_rw_read(&mut view, 2_000, 7));
+        {
+            let mut w = unsafe { tree.writer() };
+            gups_rw_write(&mut w, 2_000, 9);
+            std::hint::black_box(gups_rw_read(&mut view, 2_000, 7));
+        }
+        // SAFETY: accessors are the epoch-registered view only.
+        unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
+        std::hint::black_box(gups_rw_read(&mut view, 2_000, 7));
         drop(view);
         a.epoch().synchronize(&a);
     }

@@ -1,0 +1,220 @@
+//! Seqlock interleaving stress: view readers + seqlock writers + a
+//! migrator thread (with allocate-and-scribble block recycling) all
+//! hammering one tree, under both allocator policies.
+//!
+//! This is `tests/concurrent_translation.rs` with the missing party
+//! added — *writers*. The hazards being stressed:
+//!
+//! * a reader straddling a write must retry, never return a torn or
+//!   half-committed value (every read asserts the slot-tag invariant);
+//! * a relocation must not tear or drop a concurrent write (the copy
+//!   and the write serialize on the leaf seqlock), proven by replaying
+//!   every writer's seeded stream against a mirror at the end —
+//!   bit-for-bit equality or the test fails;
+//! * a displaced block must stay unreclaimed until every registered
+//!   accessor (readers *and* writers pin the epoch) has quiesced, even
+//!   while the migrator aggressively recycles and scribbles blocks.
+//!
+//! Run in `--release` too (CI does): the interesting interleavings
+//! rarely open up at debug-build speeds.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use nvm::pmem::{BlockAlloc, BlockAllocator, ShardedAllocator};
+use nvm::testutil::Rng;
+use nvm::trees::TreeArray;
+use nvm::workloads::gups;
+
+const BLOCK: usize = 1024; // u64: leaf_cap 128, fanout 128
+
+/// `readers` tag-checking view readers + `writers` seqlock writers +
+/// one migrator doing relocate/reclaim/scribble cycles. Ends by
+/// replaying the writer streams onto a mirror and comparing the table.
+fn rw_stress<A: BlockAlloc>(a: &A, readers: usize, writers: usize, migrations: usize) {
+    let n = 128 * 24; // 24 leaves (tag invariant wants full leaves only)
+    let write_ops: u64 = 30_000;
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).unwrap();
+    let mut mirror: Vec<u64> = (0..n).map(gups::rw_init).collect();
+    tree.copy_from_slice(&mirror).unwrap();
+    tree.enable_flat_table();
+    let _ = tree.get(0); // build the flat table before sharing
+    let live_before = a.stats().allocated;
+
+    let tree = &tree;
+    let stop = AtomicBool::new(false);
+    let stop = &stop;
+    let total_retries = AtomicU64::new(0);
+    let total_retries = &total_retries;
+    let wseed = |wid: usize| 0x5EED_0000 + ((wid as u64) << 8);
+
+    std::thread::scope(|s| {
+        for tid in 0..readers {
+            s.spawn(move || {
+                let mut view = tree.view();
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Point reads assert the tag invariant internally...
+                    std::hint::black_box(gups::gups_rw_read(
+                        &mut view,
+                        512,
+                        0xAB00 + tid as u64 + reads,
+                    ));
+                    reads += 512;
+                    // ...and batch reads must uphold it too.
+                    let mut rng = Rng::new(0xCD00 + tid as u64 + reads);
+                    let idxs: Vec<usize> = (0..64).map(|_| rng.range(0, n)).collect();
+                    let got = view.get_batch(&idxs).unwrap();
+                    for (k, &i) in idxs.iter().enumerate() {
+                        assert_eq!(
+                            got[k] >> gups::RW_TAG_SHIFT,
+                            i as u64,
+                            "torn batch read at slot {i} (value {:#x})",
+                            got[k]
+                        );
+                    }
+                }
+                total_retries.fetch_add(view.seq_retries(), Ordering::Relaxed);
+            });
+        }
+        let writer_handles: Vec<_> = (0..writers)
+            .map(|wid| {
+                s.spawn(move || {
+                    // SAFETY: every concurrent accessor is a view, a
+                    // seqlock writer, or the single concurrent migrator.
+                    let mut w = unsafe { tree.writer() };
+                    gups::gups_rw_write(&mut w, write_ops, wseed(wid))
+                })
+            })
+            .collect();
+
+        // Migrator (this thread): relocate under the live readers AND
+        // writers, reclaim, then allocate-and-scribble — under a LIFO
+        // free list the scribbled block is frequently the one a stale
+        // translation would still point at.
+        let mut rng = Rng::new(0x517E);
+        let mut done = 0usize;
+        while done < migrations || !writer_handles.iter().all(|h| h.is_finished()) {
+            if done < migrations {
+                let leaf = rng.range(0, tree.nleaves());
+                // SAFETY: concurrent access is epoch-registered views +
+                // seqlock writers; no raw slices; single migrator.
+                if unsafe { tree.migrate_leaf_concurrent(leaf) }.is_ok() {
+                    done += 1;
+                } else {
+                    a.epoch().try_reclaim(a);
+                    std::thread::yield_now();
+                }
+            }
+            a.epoch().try_reclaim(a);
+            if let Ok(b) = a.alloc() {
+                a.write(b, 0, &[0xA5u8; BLOCK]).unwrap();
+                a.free(b).unwrap();
+            }
+            if done % 16 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        for h in writer_handles {
+            assert_eq!(h.join().unwrap(), write_ops);
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(done >= migrations, "migrator starved");
+    });
+
+    // Everyone is gone: limbo drains, nothing leaked.
+    a.epoch().synchronize(a);
+    assert_eq!(a.epoch().limbo_len(), 0);
+    assert_eq!(
+        a.stats().allocated,
+        live_before,
+        "relocation churn leaked or double-freed blocks"
+    );
+    // Seqlock accounting is exact: every write and every relocation
+    // cycles its leaf's word by 2, so the sum over leaves must equal
+    // 2 * (total writes + migrations) — a missed or double release
+    // anywhere shows up here deterministically.
+    let seq_sum: u64 = (0..tree.nleaves()).map(|l| tree.leaf_seq(l)).sum();
+    assert_eq!(
+        seq_sum,
+        2 * (writers as u64 * write_ops + migrations as u64),
+        "seqlock cycles do not account for every write + migration"
+    );
+    println!(
+        "rw_stress: {} reader seq-bracket retries across {readers} readers",
+        total_retries.load(Ordering::Relaxed)
+    );
+    // The oracle: replay every writer stream (increments commute) —
+    // the table must match despite writes racing relocation the whole
+    // run. A single lost or torn update diverges here.
+    for wid in 0..writers {
+        gups::rw_apply_reference(&mut mirror, write_ops, wseed(wid));
+    }
+    assert_eq!(tree.to_vec(), mirror, "writer updates lost or torn under migration churn");
+}
+
+#[test]
+fn seqlock_rw_stress_mutex_allocator() {
+    let a = BlockAllocator::new(BLOCK, 256).unwrap();
+    rw_stress(&a, 2, 2, 300);
+}
+
+#[test]
+fn seqlock_rw_stress_sharded_allocator() {
+    let a = ShardedAllocator::with_shards(BLOCK, 256, 4).unwrap();
+    rw_stress(&a, 2, 2, 300);
+}
+
+#[test]
+fn single_writer_many_readers_stress() {
+    // The bench's reader-tax shape as a correctness test: one writer,
+    // 3 readers, heavier migration.
+    let a = ShardedAllocator::with_shards(BLOCK, 256, 4).unwrap();
+    rw_stress(&a, 3, 1, 500);
+}
+
+/// Deterministic, timing-free core of the writer/relocation handoff:
+/// write, migrate, write, read — through every party — with the leaf
+/// sequence observable at each step.
+fn deterministic_rw_handoff<A: BlockAlloc>(a: &A) {
+    let n = 128 * 4;
+    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).unwrap();
+    let init: Vec<u64> = (0..n).map(gups::rw_init).collect();
+    tree.copy_from_slice(&init).unwrap();
+
+    let mut view = tree.view();
+    // SAFETY: accessors are the view + the writer below only.
+    let mut w = unsafe { tree.writer() };
+    assert_eq!(view.get(5).unwrap(), init[5]);
+    assert_eq!(view.seq_retries(), 0);
+
+    w.update(5, |v| v + 1).unwrap();
+    assert_eq!(tree.leaf_seq(0), 2);
+    assert_eq!(view.get(5).unwrap(), init[5] + 1, "view missed a committed write");
+
+    // SAFETY: accessors are the epoch-registered view + seqlock writer.
+    unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
+    assert_eq!(tree.leaf_seq(0), 4, "relocation must cycle the seqlock");
+    assert_eq!(a.epoch().try_reclaim(a), 0, "view/writer have not quiesced");
+
+    // Post-move: both sides re-translate and agree.
+    w.update(5, |v| v + 1).unwrap();
+    assert_eq!(view.get(5).unwrap(), init[5] + 2, "post-move write went to the dead block");
+    assert_eq!(w.get(5).unwrap(), init[5] + 2);
+    assert!(a.epoch().try_reclaim(a) >= 1, "quiesced accessors must unblock reclaim");
+
+    drop(w);
+    drop(view);
+    a.epoch().synchronize(a);
+}
+
+#[test]
+fn deterministic_rw_handoff_mutex_allocator() {
+    let a = BlockAllocator::new(BLOCK, 64).unwrap();
+    deterministic_rw_handoff(&a);
+}
+
+#[test]
+fn deterministic_rw_handoff_sharded_allocator() {
+    let a = ShardedAllocator::with_shards(BLOCK, 64, 2).unwrap();
+    deterministic_rw_handoff(&a);
+}

@@ -27,6 +27,7 @@ fn all_experiments_dispatch_and_produce_tables() {
         "fig5",
         "concurrent-gups",
         "concurrent-probe",
+        "concurrent-rw",
         "fragmentation-churn",
         "parallel-blackscholes",
         "batched-workloads",
