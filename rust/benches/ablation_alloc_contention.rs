@@ -1,10 +1,13 @@
 //! Bench: allocator contention — alloc/free throughput of the mutex
-//! baseline vs the sharded lock-free allocator at 1/2/4/8 threads.
+//! baseline vs the sharded allocator vs the two-level reserving
+//! allocator, swept over thread counts up to the available parallelism.
 //!
-//! This is the acceptance bench for the allocator refactor: the sharded
-//! design must beat the single mutex once threads contend (≥4 threads
-//! on real hardware; at 1 thread the mutex's uncontended fast path is
-//! competitive and may win).
+//! This is the acceptance bench for the two-level allocator: on a
+//! fragmented pool (every other block pinned live, so each allocation
+//! must find a single-block hole), the two-level design's reserved
+//! subtree must beat the sharded allocator's bitmap scan by >= 1.5x
+//! once threads contend (>= 4 threads). At 1 thread the simpler
+//! allocators' uncontended fast paths are competitive and may win.
 //!
 //! `cargo bench --bench ablation_alloc_contention`  (NVM_QUICK=1 for a
 //! fast pass)
@@ -18,20 +21,59 @@ fn main() {
     } else {
         ExpConfig::default()
     };
-    section("Ablation: allocator contention (mutex vs sharded)");
+    section("Ablation: allocator contention (mutex vs sharded vs two-level)");
     let t = ablation_alloc_contention(&cfg);
     println!("{t}");
     println!("{}", t.to_markdown());
 
-    // Verdict for CHANGES.md: sharded must exceed mutex at >= 4 threads.
-    let speed4 = t.cell("sharded/mutex", 2).unwrap();
-    let speed8 = t.cell("sharded/mutex", 3).unwrap();
+    // Legacy check: sharded must still exceed mutex under contention.
+    let contended: Vec<usize> = t
+        .columns
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.trim_end_matches('T').parse::<usize>().is_ok_and(|n| n >= 4))
+        .map(|(i, _)| i)
+        .collect();
+    if contended.is_empty() {
+        println!(
+            "VERDICT: SKIP — fewer than 4 hardware threads available \
+             (sweep: {:?}); the contention claim needs >= 4T",
+            t.columns
+        );
+        return;
+    }
+    let sharded_ok = contended
+        .iter()
+        .all(|&c| t.cell("sharded/mutex", c).unwrap() > 1.0);
     println!(
-        "sharded/mutex at 4T: {speed4:.2}x, at 8T: {speed8:.2}x  ({})",
-        if speed4 > 1.0 && speed8 > 1.0 {
-            "sharded wins under contention — refactor goal met"
+        "sharded/mutex at >=4T: {}",
+        if sharded_ok {
+            "above 1.0x — sharded still wins under contention"
         } else {
-            "SHARDED NOT FASTER — investigate (core count? shard config?)"
+            "NOT above 1.0x — regression against the mutex baseline"
+        }
+    );
+
+    // Acceptance verdict: two-level >= 1.5x sharded on the fragmented
+    // pool at every contended (>= 4T) thread count.
+    let mut pass = true;
+    for &c in &contended {
+        let r = t.cell("twolevel/sharded (fragmented)", c).unwrap();
+        println!(
+            "twolevel/sharded (fragmented) at {}: {r:.2}x (target >= 1.5x)",
+            t.columns[c]
+        );
+        if r < 1.5 {
+            pass = false;
+        }
+    }
+    println!(
+        "VERDICT: {}",
+        if pass && sharded_ok {
+            "PASS — two-level >= 1.5x sharded on the fragmented pool at >= 4 threads"
+        } else {
+            "FAIL — two-level below 1.5x sharded on the fragmented pool \
+             (reservation not engaging? core count? subtree sizing?)"
         }
     );
 }

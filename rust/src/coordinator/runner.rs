@@ -37,7 +37,7 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
         },
         ExperimentInfo {
             name: "concurrent-gups",
-            description: "Concurrent GUPS: threads sharing one sharded allocator (real execution)",
+            description: "Concurrent GUPS: threads sharing one two-level allocator (real execution)",
         },
         ExperimentInfo {
             name: "concurrent-probe",
@@ -61,7 +61,7 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
         },
         ExperimentInfo {
             name: "ablation-alloc",
-            description: "Alloc/free throughput at 1-8 threads: mutex vs sharded allocator",
+            description: "Alloc/free throughput swept over threads: mutex vs sharded vs two-level",
         },
         ExperimentInfo {
             name: "ablation-block-size",

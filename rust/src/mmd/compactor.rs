@@ -310,6 +310,58 @@ mod tests {
     }
 
     #[test]
+    fn compaction_halves_score_twolevel_allocator() {
+        let a = crate::pmem::TwoLevelAllocator::with_topology(1024, 256, 1, 2).unwrap();
+        compaction_halves_score(&a);
+    }
+
+    #[test]
+    fn rebalance_moves_leaves_between_subtrees() {
+        use crate::pmem::{TwoLevelAllocator, SUBTREE_BLOCKS};
+        // Two-subtree pool: the daemon's Rebalance action operates on
+        // the allocator's shard_spans, which for the two-level design
+        // are the 512-block subtrees.
+        let a = TwoLevelAllocator::with_topology(1024, 2 * SUBTREE_BLOCKS, 1, 2).unwrap();
+        let spans = a.shard_spans();
+        assert_eq!(spans, vec![(0, SUBTREE_BLOCKS), (SUBTREE_BLOCKS, 2 * SUBTREE_BLOCKS)]);
+        // Land the whole tree in subtree 1's range.
+        let mut held = Vec::new();
+        for _ in 0..SUBTREE_BLOCKS {
+            held.push(a.alloc_in_span(0, SUBTREE_BLOCKS).unwrap());
+        }
+        let mut tree: TreeArray<u64, TwoLevelAllocator> = TreeArray::new(&a, 128 * 6).unwrap();
+        let data: Vec<u64> = (0..128 * 6).map(|i| i as u64 ^ 0x5A).collect();
+        tree.copy_from_slice(&data).unwrap();
+        for leaf in 0..tree.nleaves() {
+            assert!(
+                tree.leaf_block(leaf).0 as usize >= SUBTREE_BLOCKS,
+                "setup: tree must start in subtree 1"
+            );
+        }
+        for b in held {
+            a.free(b).unwrap();
+        }
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors until deregistration.
+        let id = unsafe { registry.register(&tree) };
+        let mut c = Compactor::new(&a, &registry);
+        let moved = c.rebalance(usize::MAX, spans[1], spans[0]);
+        assert_eq!(moved, 6, "all six leaves migrate to subtree 0's range");
+        for leaf in 0..tree.nleaves() {
+            assert!(
+                (tree.leaf_block(leaf).0 as usize) < SUBTREE_BLOCKS,
+                "leaf {leaf} not rebalanced"
+            );
+        }
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
+        drop(registry);
+        a.epoch().synchronize(&a);
+        drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
     fn rebalance_moves_leaves_between_spans() {
         let a = ShardedAllocator::with_shards(1024, 128, 2).unwrap();
         // Land the whole tree in shard 1's range [64, 128).

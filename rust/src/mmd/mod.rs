@@ -14,11 +14,15 @@
 //! # Pieces
 //!
 //! * [`stats`] — [`FragSampler`]/[`FragSnapshot`]: free-run histogram,
-//!   fragmentation score, per-shard occupancy, limbo depth, reclaim
+//!   fragmentation score, per-span occupancy, limbo depth, reclaim
 //!   latency, free→realloc recency. One
 //!   [`BlockAlloc::live_snapshot`] per tick; allocation never stops.
+//!   Spans come from [`BlockAlloc::shard_spans`] and are
+//!   allocator-defined: shards for the sharded allocator, 512-block
+//!   subtrees for the two-level allocator — so with the latter all
+//!   telemetry is subtree-granular.
 //! * [`policy`] — [`Policy`]/[`ThresholdPolicy`]: maps a snapshot to
-//!   one [`Action`] (compact pool/shard, rebalance shards, evict,
+//!   one [`Action`] (compact pool/span, rebalance spans, evict,
 //!   restore, idle). Pluggable; the daemon is generic over it.
 //! * [`compactor`] — [`Compactor`]: walks the
 //!   [`TreeRegistry`](crate::trees::TreeRegistry) and executes actions
@@ -66,6 +70,7 @@
 //!
 //! [`ArenaEpoch`]: crate::pmem::ArenaEpoch
 //! [`BlockAlloc::live_snapshot`]: crate::pmem::BlockAlloc::live_snapshot
+//! [`BlockAlloc::shard_spans`]: crate::pmem::BlockAlloc::shard_spans
 //! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span
 //! [`TreeArray::migrate_leaf_concurrent_to`]: crate::trees::TreeArray::migrate_leaf_concurrent_to
 //! [`SwapPool::evict_deferred`]: crate::pmem::SwapPool::evict_deferred

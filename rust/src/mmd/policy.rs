@@ -14,13 +14,22 @@
 //!    the high watermark: restore them.
 //! 3. **Pool fragmentation** — score above threshold: compact the pool
 //!    (sink leaves into the lowest free blocks).
-//! 4. **Shard-local fragmentation** — the pool looks fine but one
-//!    shard's free space is shredded: compact inside that shard.
-//! 5. **Shard imbalance** — occupancy spread above threshold: migrate
-//!    leaves from the fullest shard's range into the emptiest's, so
-//!    thread-affine allocation stops degenerating into cross-shard
+//! 4. **Span-local fragmentation** — the pool looks fine but one
+//!    span's free space is shredded: compact inside that span.
+//! 5. **Span imbalance** — occupancy spread above threshold: migrate
+//!    leaves from the fullest span's range into the emptiest's, so
+//!    thread-affine allocation stops degenerating into cross-span
 //!    stealing.
 //! 6. Otherwise **idle**.
+//!
+//! "Span" is whatever [`BlockAlloc::shard_spans`] reports: lock shards
+//! for the sharded allocator, 512-block subtrees for the two-level
+//! allocator. Under the two-level allocator, `CompactShard` and
+//! `Rebalance` therefore act on subtree-granular occupancy — compacting
+//! inside one subtree, or draining an overloaded subtree into an
+//! underloaded one so CPU-local reservation finds empty subtrees again.
+//!
+//! [`BlockAlloc::shard_spans`]: crate::pmem::BlockAlloc::shard_spans
 
 use crate::mmd::stats::FragSnapshot;
 
@@ -32,13 +41,16 @@ pub enum Action {
     Idle,
     /// Sink leaves into the lowest free blocks of the whole pool.
     CompactPool,
-    /// Sink leaves into the lowest free blocks of one shard's range.
+    /// Sink leaves into the lowest free blocks of one span's range
+    /// (a lock shard, or a 512-block subtree under the two-level
+    /// allocator). The index is into the snapshot's `shard_spans`.
     CompactShard(usize),
-    /// Migrate leaves out of shard `from`'s range into shard `to`'s.
+    /// Migrate leaves out of span `from`'s range into span `to`'s
+    /// (indices into the snapshot's `shard_spans`).
     Rebalance {
-        /// Source shard (overloaded).
+        /// Source span (overloaded).
         from: usize,
-        /// Destination shard (underloaded).
+        /// Destination span (underloaded).
         to: usize,
     },
     /// Evict up to `leaves` cold leaves to swap.

@@ -14,9 +14,13 @@
 //! * **fragmentation score** — `1 - longest_free_run / free_blocks`
 //!   (0 = all free space contiguous, → 1 = maximally shredded), the
 //!   number compaction is judged by. Defined as 0 for a full pool.
-//! * **per-shard occupancy and scores** — the same metrics inside each
-//!   [`BlockAlloc::shard_spans`] range, feeding shard-imbalance and
-//!   shard-local-compaction triggers.
+//! * **per-span occupancy and scores** — the same metrics inside each
+//!   [`BlockAlloc::shard_spans`] range, feeding imbalance and
+//!   span-local-compaction triggers. The spans are allocator-defined
+//!   placement units: lock shards for the sharded allocator, 512-block
+//!   subtrees for the two-level allocator — under the latter, these
+//!   metrics (and the Rebalance/CompactShard actions they trigger) are
+//!   subtree-granular.
 //! * **limbo depth / reclaim latency** — the pool's [`EpochStats`],
 //!   i.e. how much memory deferred reclamation is currently holding
 //!   hostage and how long reclaims take in epochs.

@@ -1,13 +1,42 @@
 //! The allocator abstraction: every consumer of physical blocks (trees,
 //! stacks, regions, workloads, the coordinator) is generic over
 //! [`BlockAlloc`], so the paper's "OS memory manager" is a pluggable
-//! policy. Two implementations ship:
+//! policy. Three implementations ship:
 //!
 //! * [`crate::pmem::BlockAllocator`] — the original single-mutex LIFO
 //!   free list (simple, strictly ordered, the §3 baseline).
 //! * [`crate::pmem::ShardedAllocator`] — per-shard atomic free bitmaps
-//!   with cross-shard stealing (llfree-style), for multi-threaded
-//!   workloads where one lock would serialize the hot path.
+//!   with cross-shard stealing, for multi-threaded workloads where one
+//!   lock would serialize the hot path.
+//! * [`crate::pmem::TwoLevelAllocator`] — the llfree-style two-level
+//!   design: a lower level of 512-block subtrees with cache-line
+//!   bitfields, an upper level of packed subtree roots with CPU-local
+//!   subtree *reservation* (common path = one CAS, no search) and
+//!   NUMA-aware subtree binding.
+//!
+//! # Placement and NUMA
+//!
+//! The portable trait deliberately has **no node hint on `alloc`** —
+//! most callers (trees, stacks, workloads) don't know or care where a
+//! block lands, and a hint every implementation must ignore is worse
+//! than none. Placement enters through two narrower doors:
+//!
+//! * **Policy-directed placement** is `alloc_in_span`: the daemon
+//!   ([`crate::mmd`]) chooses *where* by choosing the span. The spans
+//!   come from `shard_spans`, which is also the **placement
+//!   granularity contract**: each reported span is the unit the
+//!   allocator places within (the whole pool for the mutex baseline,
+//!   a lock shard for the sharded allocator, a 512-block subtree for
+//!   the two-level allocator), so occupancy telemetry, compaction and
+//!   rebalancing automatically operate at the allocator's own
+//!   granularity.
+//! * **Topology-directed placement** is allocator-specific surface:
+//!   [`crate::pmem::TwoLevelAllocator::alloc_on`] /
+//!   [`TwoLevelAllocator::alloc_core_on`](crate::pmem::TwoLevelAllocator::alloc_core_on)
+//!   take a NUMA-node hint and prefer same-node subtrees (stealing
+//!   within the node before crossing it). Code that wants node-aware
+//!   placement takes the concrete type; code that doesn't stays on the
+//!   trait.
 
 use crate::error::Result;
 use crate::pmem::epoch::ArenaEpoch;
@@ -121,11 +150,13 @@ pub trait BlockAlloc: Send + Sync {
     /// the hot path.
     fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId>;
 
-    /// The block-id span `[lo, hi)` of each allocation shard.
+    /// The block-id span `[lo, hi)` of each placement unit.
     /// Single-shard designs (the mutex baseline) report one span
     /// covering the pool; [`crate::pmem::ShardedAllocator`] reports its
-    /// per-shard bitmap ranges so fragmentation telemetry and
-    /// rebalancing can reason per shard.
+    /// per-shard bitmap ranges; [`crate::pmem::TwoLevelAllocator`]
+    /// reports its 512-block subtrees — so fragmentation telemetry and
+    /// rebalancing ([`crate::mmd`]) reason at whatever granularity the
+    /// allocator actually places at.
     fn shard_spans(&self) -> Vec<(usize, usize)> {
         vec![(0, self.capacity())]
     }

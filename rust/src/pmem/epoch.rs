@@ -73,6 +73,13 @@ pub struct EpochStats {
     /// Cumulative epochs reclaimed blocks waited in limbo — the
     /// reclaim-latency counter (divide by `reclaimed` for the mean).
     pub reclaim_lag: u64,
+    /// Reader pins performed ([`ReaderSlot::pin`] calls) over the
+    /// pool's lifetime.
+    pub pins: u64,
+    /// Pins *avoided* by batched pinning: an N-access batch path pins
+    /// once and reports N-1 here ([`ReaderSlot::record_saved_pins`]).
+    /// `pins + saved_pins` is what per-access pinning would have cost.
+    pub saved_pins: u64,
 }
 
 impl EpochStats {
@@ -101,6 +108,9 @@ pub struct ArenaEpoch {
     reclaimed_total: AtomicU64,
     /// Sum over reclaimed blocks of (reclaim epoch - retire epoch).
     lag_total: AtomicU64,
+    /// Pins performed / pins amortized away by batch paths.
+    pins_total: AtomicU64,
+    saved_pins_total: AtomicU64,
 }
 
 impl ArenaEpoch {
@@ -113,6 +123,8 @@ impl ArenaEpoch {
             retired_total: AtomicU64::new(0),
             reclaimed_total: AtomicU64::new(0),
             lag_total: AtomicU64::new(0),
+            pins_total: AtomicU64::new(0),
+            saved_pins_total: AtomicU64::new(0),
         }
     }
 
@@ -235,6 +247,8 @@ impl ArenaEpoch {
             reclaimed: self.reclaimed_total.load(Ordering::Relaxed),
             limbo: self.limbo_len(),
             reclaim_lag: self.lag_total.load(Ordering::Relaxed),
+            pins: self.pins_total.load(Ordering::Relaxed),
+            saved_pins: self.saved_pins_total.load(Ordering::Relaxed),
         }
     }
 
@@ -302,12 +316,25 @@ impl ReaderSlot<'_> {
     /// patched pointers (and flushes stale cache state first).
     #[inline]
     pub fn pin(&self) -> u64 {
+        self.epoch.pins_total.fetch_add(1, Ordering::Relaxed);
         loop {
             let e = self.epoch.global.load(Ordering::SeqCst);
             self.slot.store(e, Ordering::SeqCst);
             if self.epoch.global.load(Ordering::SeqCst) == e {
                 return e;
             }
+        }
+    }
+
+    /// Credit `n` pins amortized away by a batch path: a caller that
+    /// pinned once for an N-access batch reports N-1 here, so
+    /// [`EpochStats::pins`] + [`EpochStats::saved_pins`] is the cost
+    /// per-access pinning would have paid. Pure accounting — no effect
+    /// on the reclamation protocol.
+    #[inline]
+    pub fn record_saved_pins(&self, n: u64) {
+        if n > 0 {
+            self.epoch.saved_pins_total.fetch_add(n, Ordering::Relaxed);
         }
     }
 
@@ -424,6 +451,19 @@ mod tests {
         assert_eq!(alloc_stats.reclaimed, 2);
         assert_eq!(alloc_stats.reclaim_lag, 2);
         assert_eq!(alloc_stats.limbo, 0);
+    }
+
+    #[test]
+    fn pin_accounting_tracks_batching() {
+        let e = ArenaEpoch::new();
+        let r = e.register();
+        r.pin();
+        r.pin();
+        r.record_saved_pins(7); // an 8-access batch that pinned once
+        r.record_saved_pins(0); // no-op
+        let s = e.stats();
+        assert_eq!(s.pins, 2);
+        assert_eq!(s.saved_pins, 7);
     }
 
     #[test]

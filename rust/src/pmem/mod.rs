@@ -13,6 +13,12 @@
 //!   LIFO free list.
 //! * [`ShardedAllocator`] — the scalable pool: per-shard atomic free
 //!   bitmaps with cross-shard stealing (lock-free hot path).
+//! * [`TwoLevelAllocator`] — the llfree-style two-level pool: per-subtree
+//!   cache-line bitfields under a packed array of subtree roots, with
+//!   CPU-local subtree reservation and NUMA-aware placement (see
+//!   [`twolevel`]).
+//! * [`SlabPool`] — small-object slab classes carved inside single
+//!   blocks (the `RbTree` node pool's backing; see [`slab`]).
 //! * [`Region`] — a convenience view over a *logical* sequence of blocks
 //!   (what a large `malloc` becomes in this world).
 //! * [`ArenaEpoch`] — the pool's shared relocation epoch: one counter
@@ -36,7 +42,9 @@ pub mod migrate;
 pub mod protect;
 mod region;
 mod sharded;
+pub mod slab;
 pub mod swap;
+pub mod twolevel;
 
 pub use alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
 pub use allocator::BlockAllocator;
@@ -46,4 +54,6 @@ pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;
 pub use sharded::ShardedAllocator;
+pub use slab::{SlabPool, SlabStats, SlotAddr};
+pub use twolevel::{PlacementStats, TwoLevelAllocator, SUBTREE_BLOCKS};
 pub use swap::{FileBacking, SwapBacking, SwapPool, SwapSlot, SwapStats};

@@ -36,9 +36,16 @@ thread_local! {
     static THREAD_TOKEN: usize = NEXT_THREAD_TOKEN.fetch_add(1, Ordering::Relaxed);
 }
 
+/// This thread's allocator-affinity token (shared by every concurrent
+/// allocator in the crate so a thread keeps one identity across pools).
+#[inline]
+pub(crate) fn thread_token() -> usize {
+    THREAD_TOKEN.with(|t| *t)
+}
+
 /// splitmix64 finalizer: spreads consecutive thread tokens across shards.
 #[inline]
-fn mix(mut z: u64) -> u64 {
+pub(crate) fn mix(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

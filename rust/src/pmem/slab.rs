@@ -1,0 +1,344 @@
+//! Small-object slab classes inside single blocks.
+//!
+//! The pool's minimum allocation unit is one block (32 KB in the
+//! paper's experiments) — far too coarse for the [`crate::workloads`]
+//! `RbTree`'s 32-byte nodes. [`SlabPool`] carves one power-of-two size
+//! class out of whole blocks obtained from any [`BlockAlloc`]: blocks
+//! are claimed lazily one at a time as the class grows, every slot has
+//! a stable simulated physical address (the property the paper's
+//! pointer-chasing benchmark measures), and fully-empty blocks can be
+//! returned to the block pool.
+//!
+//! This is deliberately a *host-side* metadata design: the free list
+//! and per-slot liveness live in ordinary memory, the slots themselves
+//! in arena blocks — mirroring how the paper's software memory manager
+//! keeps bookkeeping out of the managed pool.
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAlloc, BlockId};
+
+/// The supported power-of-two slab classes (bytes). 8 B is the
+/// smallest natural alignment worth a class; one full block is the
+/// point where the caller should just allocate blocks.
+pub const SLAB_CLASSES: [usize; 8] = [8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Smallest slab class holding `bytes`, if any.
+pub fn class_for(bytes: usize) -> Option<usize> {
+    SLAB_CLASSES.iter().copied().find(|&c| c >= bytes)
+}
+
+/// Handle to one live slot. The block position index is private so
+/// handles cannot be forged; the public fields locate the slot's bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotAddr {
+    /// Block holding the slot.
+    pub block: BlockId,
+    /// Slot index within the block.
+    pub slot: u32,
+    bidx: u32,
+}
+
+/// Occupancy snapshot of a slab pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlabStats {
+    /// Slot size in bytes.
+    pub slot_bytes: usize,
+    /// Slots per backing block.
+    pub slots_per_block: usize,
+    /// Blocks currently claimed from the block pool.
+    pub blocks: usize,
+    /// Live (allocated) slots.
+    pub live_slots: usize,
+    /// Free slots across all claimed blocks.
+    pub free_slots: usize,
+}
+
+struct SlabBlock {
+    /// `None` once the (empty) block was returned to the pool; the
+    /// tombstone keeps `bidx` handles stable.
+    id: Option<BlockId>,
+    /// Per-slot liveness bitmap (bit set = live) — the double-free
+    /// check the free list alone can't provide.
+    live: Vec<u64>,
+    live_count: usize,
+}
+
+struct Inner {
+    blocks: Vec<SlabBlock>,
+    /// LIFO free list of `(bidx, slot)`.
+    free: Vec<(u32, u32)>,
+}
+
+/// One size class of small objects carved from whole blocks (see the
+/// module docs).
+pub struct SlabPool<'a, A: BlockAlloc> {
+    alloc: &'a A,
+    slot_bytes: usize,
+    slots_per_block: usize,
+    inner: Mutex<Inner>,
+}
+
+impl<'a, A: BlockAlloc> SlabPool<'a, A> {
+    /// Pool for objects of `obj_bytes`, rounded up to the smallest slab
+    /// class.
+    pub fn new(alloc: &'a A, obj_bytes: usize) -> Result<Self> {
+        let class = class_for(obj_bytes).ok_or_else(|| {
+            Error::Config(format!(
+                "object size {obj_bytes} exceeds the largest slab class {}",
+                SLAB_CLASSES[SLAB_CLASSES.len() - 1]
+            ))
+        })?;
+        Self::with_slot_bytes(alloc, class)
+    }
+
+    /// Pool with an exact slot size (must be a power of two ≥ 8 and no
+    /// larger than one block, so every slot is naturally aligned inside
+    /// its block — the arena's block alignment guarantees the rest).
+    pub fn with_slot_bytes(alloc: &'a A, slot_bytes: usize) -> Result<Self> {
+        if !slot_bytes.is_power_of_two() || slot_bytes < 8 || slot_bytes > alloc.block_size() {
+            return Err(Error::Config(format!(
+                "slot_bytes {slot_bytes} must be a power of two in 8..={}",
+                alloc.block_size()
+            )));
+        }
+        Ok(SlabPool {
+            alloc,
+            slot_bytes,
+            slots_per_block: alloc.block_size() / slot_bytes,
+            inner: Mutex::new(Inner {
+                blocks: Vec::new(),
+                free: Vec::new(),
+            }),
+        })
+    }
+
+    /// Slot size in bytes.
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    /// Allocate one slot, claiming a fresh block from the block pool if
+    /// every claimed block is full.
+    pub fn alloc_slot(&self) -> Result<SlotAddr> {
+        let mut g = self.inner.lock().unwrap();
+        if g.free.is_empty() {
+            // Grow by one block (zeroed: freed slots may hold stale
+            // bytes from a prior tenant of the block).
+            let id = self.alloc.alloc_zeroed()?;
+            let bidx = g.blocks.len() as u32;
+            g.blocks.push(SlabBlock {
+                id: Some(id),
+                live: vec![0u64; self.slots_per_block.div_ceil(64)],
+                live_count: 0,
+            });
+            // Push in reverse so the LIFO hands out ascending slots.
+            for slot in (0..self.slots_per_block as u32).rev() {
+                g.free.push((bidx, slot));
+            }
+        }
+        let (bidx, slot) = g.free.pop().expect("refilled above");
+        let b = &mut g.blocks[bidx as usize];
+        b.live[slot as usize / 64] |= 1u64 << (slot % 64);
+        b.live_count += 1;
+        let block = b.id.expect("free list never points into tombstones");
+        Ok(SlotAddr { block, slot, bidx })
+    }
+
+    /// Return a slot. Double frees and forged handles are rejected.
+    pub fn free_slot(&self, s: SlotAddr) -> Result<()> {
+        if s.slot as usize >= self.slots_per_block {
+            return Err(Error::InvalidBlock(s.block));
+        }
+        let mut g = self.inner.lock().unwrap();
+        let b = g
+            .blocks
+            .get_mut(s.bidx as usize)
+            .filter(|b| b.id == Some(s.block))
+            .ok_or(Error::InvalidBlock(s.block))?;
+        let (w, bit) = (s.slot as usize / 64, 1u64 << (s.slot % 64));
+        if b.live[w] & bit == 0 {
+            return Err(Error::InvalidBlock(s.block));
+        }
+        b.live[w] &= !bit;
+        b.live_count -= 1;
+        g.free.push((s.bidx, s.slot));
+        Ok(())
+    }
+
+    /// Simulated physical address of the slot's first byte.
+    pub fn phys_addr(&self, s: SlotAddr) -> u64 {
+        s.block.phys_addr(self.alloc.block_size()) + (s.slot as usize * self.slot_bytes) as u64
+    }
+
+    /// Write up to a slot's bytes at its start (bounds-checked against
+    /// the slot, then the block).
+    pub fn write_slot(&self, s: SlotAddr, data: &[u8]) -> Result<()> {
+        if data.len() > self.slot_bytes {
+            return Err(Error::IndexOutOfBounds {
+                index: data.len(),
+                len: self.slot_bytes,
+            });
+        }
+        self.alloc
+            .write(s.block, s.slot as usize * self.slot_bytes, data)
+    }
+
+    /// Read up to a slot's bytes from its start.
+    pub fn read_slot(&self, s: SlotAddr, out: &mut [u8]) -> Result<()> {
+        if out.len() > self.slot_bytes {
+            return Err(Error::IndexOutOfBounds {
+                index: out.len(),
+                len: self.slot_bytes,
+            });
+        }
+        self.alloc
+            .read(s.block, s.slot as usize * self.slot_bytes, out)
+    }
+
+    /// Return every fully-empty claimed block to the block pool;
+    /// reports how many blocks were released. Live slots are never
+    /// moved (their physical addresses are load-bearing), so only
+    /// all-free blocks qualify.
+    pub fn release_empty_blocks(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let mut released = Vec::new();
+        for (bidx, b) in g.blocks.iter_mut().enumerate() {
+            if b.live_count == 0 {
+                if let Some(id) = b.id.take() {
+                    // Tombstone: bidx stays valid for other handles.
+                    let _ = self.alloc.free(id);
+                    released.push(bidx as u32);
+                }
+            }
+        }
+        if !released.is_empty() {
+            g.free.retain(|(bidx, _)| !released.contains(bidx));
+        }
+        released.len()
+    }
+
+    /// Occupancy snapshot.
+    pub fn stats(&self) -> SlabStats {
+        let g = self.inner.lock().unwrap();
+        let blocks = g.blocks.iter().filter(|b| b.id.is_some()).count();
+        let live: usize = g.blocks.iter().map(|b| b.live_count).sum();
+        SlabStats {
+            slot_bytes: self.slot_bytes,
+            slots_per_block: self.slots_per_block,
+            blocks,
+            live_slots: live,
+            free_slots: blocks * self.slots_per_block - live,
+        }
+    }
+}
+
+impl<A: BlockAlloc> Drop for SlabPool<'_, A> {
+    fn drop(&mut self) {
+        let g = self.inner.get_mut().unwrap();
+        for b in &mut g.blocks {
+            if let Some(id) = b.id.take() {
+                let _ = self.alloc.free(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::TwoLevelAllocator;
+
+    #[test]
+    fn class_rounding() {
+        assert_eq!(class_for(1), Some(8));
+        assert_eq!(class_for(32), Some(32));
+        assert_eq!(class_for(33), Some(64));
+        assert_eq!(class_for(4096), None);
+    }
+
+    #[test]
+    fn slots_have_distinct_stable_addresses() {
+        let a = TwoLevelAllocator::new(1024, 64).unwrap();
+        let p = SlabPool::new(&a, 32).unwrap();
+        let slots: Vec<_> = (0..100).map(|_| p.alloc_slot().unwrap()).collect();
+        let mut addrs: Vec<u64> = slots.iter().map(|&s| p.phys_addr(s)).collect();
+        addrs.sort_unstable();
+        addrs.dedup();
+        assert_eq!(addrs.len(), 100, "slot addresses must not alias");
+        // 100 slots of 32 B fit in one 1024-B block? No: 32 slots per
+        // block -> 4 blocks claimed, lazily.
+        assert_eq!(p.stats().blocks, 4);
+        assert_eq!(a.stats().allocated, 4);
+    }
+
+    #[test]
+    fn slot_data_roundtrips_and_is_zeroed() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        let p = SlabPool::new(&a, 32).unwrap();
+        let s = p.alloc_slot().unwrap();
+        let mut out = [0xFFu8; 32];
+        p.read_slot(s, &mut out).unwrap();
+        assert_eq!(out, [0u8; 32], "fresh slot must be zeroed");
+        p.write_slot(s, &[9u8; 32]).unwrap();
+        p.read_slot(s, &mut out).unwrap();
+        assert_eq!(out, [9u8; 32]);
+        assert!(p.write_slot(s, &[0u8; 33]).is_err(), "overflow rejected");
+    }
+
+    #[test]
+    fn free_and_reuse_without_growth() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        let p = SlabPool::new(&a, 64).unwrap(); // 16 slots per block
+        let slots: Vec<_> = (0..16).map(|_| p.alloc_slot().unwrap()).collect();
+        assert_eq!(p.stats().blocks, 1);
+        for s in &slots {
+            p.free_slot(*s).unwrap();
+        }
+        for _ in 0..16 {
+            p.alloc_slot().unwrap();
+        }
+        assert_eq!(p.stats().blocks, 1, "reuse must not claim new blocks");
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        let p = SlabPool::new(&a, 32).unwrap();
+        let s = p.alloc_slot().unwrap();
+        p.free_slot(s).unwrap();
+        assert!(p.free_slot(s).is_err());
+        assert_eq!(p.stats().live_slots, 0);
+    }
+
+    #[test]
+    fn empty_blocks_return_to_the_pool() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        let p = SlabPool::new(&a, 512).unwrap(); // 2 slots per block
+        let s0 = p.alloc_slot().unwrap();
+        let s1 = p.alloc_slot().unwrap();
+        let s2 = p.alloc_slot().unwrap(); // second block
+        assert_eq!(a.stats().allocated, 2);
+        p.free_slot(s0).unwrap();
+        p.free_slot(s1).unwrap();
+        assert_eq!(p.release_empty_blocks(), 1);
+        assert_eq!(a.stats().allocated, 1);
+        // The survivor's handle still works; the pool can still grow.
+        let mut out = [0u8; 8];
+        p.read_slot(s2, &mut out).unwrap();
+        let s3 = p.alloc_slot().unwrap();
+        assert_ne!(p.phys_addr(s3), p.phys_addr(s2));
+        drop(p);
+        assert_eq!(a.stats().allocated, 0, "drop returns all blocks");
+    }
+
+    #[test]
+    fn invalid_slot_sizes_rejected() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        assert!(SlabPool::with_slot_bytes(&a, 48).is_err());
+        assert!(SlabPool::with_slot_bytes(&a, 4).is_err());
+        assert!(SlabPool::with_slot_bytes(&a, 2048).is_err());
+        assert!(SlabPool::with_slot_bytes(&a, 1024).is_ok());
+    }
+}

@@ -1,0 +1,1094 @@
+//! Two-level llfree-style lock-free block allocator.
+//!
+//! The flat per-shard bitmaps of [`crate::pmem::ShardedAllocator`] scan
+//! linearly under fragmentation and have no placement policy. This
+//! module replaces them with the two-level design of llfree (LLFree:
+//! scalable and optionally-persistent page-frame allocation, ISCA '23
+//! lineage; see PAPERS.md / SNIPPETS 1–2):
+//!
+//! * the **lower allocator** owns the blocks inside one fixed-size
+//!   *subtree* of [`SUBTREE_BLOCKS`] blocks — a cache-line-aligned
+//!   bitfield (8 × `AtomicU64`, bit set = free) claimed with word-level
+//!   CAS, so one subtree's entire free state is a single cache line;
+//! * the **upper allocator** is a packed array of subtree roots, each
+//!   one `AtomicU32` holding the subtree's free-block count plus a
+//!   RESERVED flag. Each CPU slot ("core") *reserves* one
+//!   partially-filled subtree; the common allocation path is a single
+//!   CAS inside the reserved bitfield — no search, no shared cursor,
+//!   and no cache line shared with any other core.
+//!
+//! Placement is NUMA-aware at subtree granularity: subtrees are
+//! partitioned contiguously across logical nodes,
+//! [`TwoLevelAllocator::alloc_on`] takes an explicit node hint, refills
+//! prefer same-node subtrees (same-node stealing before crossing), and
+//! crossings are counted in [`PlacementStats`]. Reservation is
+//! *adaptive*: when the number of active cores grows past the number of
+//! subtrees, new reservations stop paying for themselves and the pool
+//! degrades gracefully to a shared scan with direct handoff — a core
+//! may then claim blocks inside another core's reserved subtree rather
+//! than fail.
+//!
+//! Counter discipline (the part worth auditing): bitfield bits are the
+//! ground truth of block ownership; `allocated` and the per-subtree
+//! free counts are kept conservatively consistent by ordering. A free
+//! *increments* counters before publishing the free bit, and a claim
+//! *decrements* them after clearing the bit — so a subtree count of
+//! zero proves the subtree is empty (counts never understate free
+//! space), and `allocated` never exceeds capacity. The same speculative
+//! orderings as the sharded allocator protect double frees.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use crate::error::{Error, Result};
+use crate::pmem::alloc_trait::{span_word_mask, AllocStats, BlockAlloc, ContentionStats};
+use crate::pmem::arena::Arena;
+use crate::pmem::epoch::ArenaEpoch;
+use crate::pmem::sharded::{mix, thread_token};
+use crate::pmem::BlockId;
+
+/// Blocks per subtree: 512 blocks = 8 bitmap words = one 64-byte cache
+/// line, llfree's lower-level geometry.
+pub const SUBTREE_BLOCKS: usize = 512;
+const WORDS_PER_SUBTREE: usize = SUBTREE_BLOCKS / 64;
+
+/// Upper-level root state: bit 31 flags the subtree as reserved by some
+/// core; bits 0..31 hold the free-block count.
+const RESERVED: u32 = 1 << 31;
+const COUNT_MASK: u32 = RESERVED - 1;
+
+/// One subtree's free bitmap: exactly one cache line, so the hot-path
+/// CAS of one core never contends with a neighboring subtree's.
+#[repr(C, align(64))]
+struct Bitfield {
+    words: [AtomicU64; WORDS_PER_SUBTREE],
+}
+
+/// One packed upper-level entry (deliberately *not* padded: the refill
+/// search scans many roots, so dense packing is the point).
+struct SubtreeRoot {
+    state: AtomicU32,
+}
+
+/// Per-core slot, padded to its own cache line so cores never
+/// false-share reservation state.
+#[repr(C, align(64))]
+struct Local {
+    /// Reserved subtree index + 1; 0 = no reservation.
+    reserved: AtomicUsize,
+    /// Word cursor inside the reserved subtree (resume hint).
+    cursor: AtomicUsize,
+    /// 1 once this slot has served an allocation (active-core census
+    /// for adaptive reservation).
+    touched: AtomicUsize,
+}
+
+/// Placement/reservation telemetry specific to the two-level design
+/// (the generic counters live in [`ContentionStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlacementStats {
+    /// Logical NUMA nodes the subtrees are partitioned across.
+    pub nodes: usize,
+    /// Subtree reservations installed (upper-level refills).
+    pub reservations: u64,
+    /// Allocations served by the shared fallback — outside the calling
+    /// core's reservation, possibly inside another core's.
+    pub handoffs: u64,
+    /// Allocations or reservations served off the hinted node.
+    pub cross_node: u64,
+}
+
+/// The two-level allocator (see module docs).
+pub struct TwoLevelAllocator {
+    arena: Arena,
+    /// Lower level: one cache-line bitfield per subtree (bit = free).
+    fields: Box<[Bitfield]>,
+    /// Upper level: packed free-count + RESERVED flag per subtree.
+    roots: Box<[SubtreeRoot]>,
+    /// Per-core reservation slots.
+    locals: Box<[Local]>,
+    /// Logical NUMA nodes (subtrees partitioned contiguously).
+    nodes: usize,
+    /// Distinct cores that have allocated (adaptive-reservation census).
+    active_cores: AtomicUsize,
+
+    allocated: AtomicUsize,
+    peak: AtomicUsize,
+    total_allocs: AtomicU64,
+    total_frees: AtomicU64,
+    failed_allocs: AtomicU64,
+
+    reservations: AtomicU64,
+    handoffs: AtomicU64,
+    cross_node: AtomicU64,
+    cas_retries: AtomicU64,
+
+    epoch: ArenaEpoch,
+}
+
+impl TwoLevelAllocator {
+    /// Create a pool on one logical NUMA node with one reservation slot
+    /// per available hardware thread (capped at 64).
+    pub fn new(block_size: usize, capacity_blocks: usize) -> Result<Self> {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(64);
+        Self::with_topology(block_size, capacity_blocks, 1, cores)
+    }
+
+    /// Create a pool with an explicit topology: `nodes` logical NUMA
+    /// nodes (subtrees are partitioned contiguously across them, so
+    /// each node must own at least one subtree) and `cores` reservation
+    /// slots. Threads hash onto slots; benchmarks and the daemon may
+    /// instead pass an explicit core to [`TwoLevelAllocator::alloc_core_on`].
+    pub fn with_topology(
+        block_size: usize,
+        capacity_blocks: usize,
+        nodes: usize,
+        cores: usize,
+    ) -> Result<Self> {
+        let arena = Arena::new(block_size, capacity_blocks)?;
+        let nsub = capacity_blocks.div_ceil(SUBTREE_BLOCKS);
+        if nodes == 0 || nodes > nsub {
+            return Err(Error::Config(format!(
+                "nodes {nodes} must be in 1..={nsub} (one subtree per node minimum)"
+            )));
+        }
+        if cores == 0 {
+            return Err(Error::Config("cores must be >= 1".into()));
+        }
+        let mut fields = Vec::with_capacity(nsub);
+        for s in 0..nsub {
+            let words = std::array::from_fn(|j| {
+                let first = (s * WORDS_PER_SUBTREE + j) * 64;
+                AtomicU64::new(if first + 64 <= capacity_blocks {
+                    !0u64
+                } else if first < capacity_blocks {
+                    (1u64 << (capacity_blocks - first)) - 1
+                } else {
+                    0
+                })
+            });
+            fields.push(Bitfield { words });
+        }
+        let roots = (0..nsub)
+            .map(|s| SubtreeRoot {
+                state: AtomicU32::new(
+                    (SUBTREE_BLOCKS.min(capacity_blocks - s * SUBTREE_BLOCKS)) as u32,
+                ),
+            })
+            .collect();
+        let locals = (0..cores)
+            .map(|_| Local {
+                reserved: AtomicUsize::new(0),
+                cursor: AtomicUsize::new(0),
+                touched: AtomicUsize::new(0),
+            })
+            .collect();
+        Ok(TwoLevelAllocator {
+            arena,
+            fields: fields.into_boxed_slice(),
+            roots,
+            locals,
+            nodes,
+            active_cores: AtomicUsize::new(0),
+            allocated: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            total_allocs: AtomicU64::new(0),
+            total_frees: AtomicU64::new(0),
+            failed_allocs: AtomicU64::new(0),
+            reservations: AtomicU64::new(0),
+            handoffs: AtomicU64::new(0),
+            cross_node: AtomicU64::new(0),
+            cas_retries: AtomicU64::new(0),
+            epoch: ArenaEpoch::new(),
+        })
+    }
+
+    /// Number of subtrees (upper-level entries).
+    pub fn subtree_count(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Number of reservation slots.
+    pub fn cores(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Number of logical NUMA nodes.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Logical node owning subtree `s`.
+    #[inline]
+    pub fn node_of_subtree(&self, s: usize) -> usize {
+        s * self.nodes / self.roots.len()
+    }
+
+    /// Logical node owning block `id`.
+    pub fn node_of_block(&self, id: BlockId) -> usize {
+        self.node_of_subtree(id.0 as usize / SUBTREE_BLOCKS)
+    }
+
+    /// `(live, blocks)` occupancy of subtree `s` — the signal the mmd
+    /// policy's per-shard decisions consume through `shard_spans`.
+    pub fn subtree_occupancy(&self, s: usize) -> (usize, usize) {
+        let span = self.subtree_span(s);
+        let free = (self.roots[s].state.load(Ordering::Acquire) & COUNT_MASK) as usize;
+        (span.saturating_sub(free), span)
+    }
+
+    /// The subtree currently reserved by `core`, if any.
+    pub fn reserved_subtree_of(&self, core: usize) -> Option<usize> {
+        let r = self.locals[core % self.locals.len()]
+            .reserved
+            .load(Ordering::Acquire);
+        if r == 0 {
+            None
+        } else {
+            Some(r - 1)
+        }
+    }
+
+    /// Placement/reservation telemetry.
+    pub fn placement_stats(&self) -> PlacementStats {
+        PlacementStats {
+            nodes: self.nodes,
+            reservations: self.reservations.load(Ordering::Relaxed),
+            handoffs: self.handoffs.load(Ordering::Relaxed),
+            cross_node: self.cross_node.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Allocate with an explicit node hint from the calling thread's
+    /// hashed core slot.
+    pub fn alloc_on(&self, node: usize) -> Result<BlockId> {
+        self.alloc_core_on(self.current_core(), node)
+    }
+
+    /// This thread's reservation slot (stable per thread, hashed token).
+    #[inline]
+    fn current_core(&self) -> usize {
+        (mix(thread_token() as u64) % self.locals.len() as u64) as usize
+    }
+
+    /// Home node of a core slot: slots are partitioned across nodes the
+    /// same way subtrees are.
+    #[inline]
+    fn home_node(&self, core: usize) -> usize {
+        core * self.nodes / self.locals.len()
+    }
+
+    #[inline]
+    fn subtree_span(&self, s: usize) -> usize {
+        SUBTREE_BLOCKS.min(self.arena.capacity() - s * SUBTREE_BLOCKS)
+    }
+
+    /// Subtree range `[lo, hi)` owned by logical node `n`.
+    #[inline]
+    fn node_subtrees(&self, n: usize) -> (usize, usize) {
+        let nsub = self.roots.len();
+        (n * nsub / self.nodes, (n + 1) * nsub / self.nodes)
+    }
+
+    #[inline]
+    fn word(&self, w: usize) -> &AtomicU64 {
+        &self.fields[w / WORDS_PER_SUBTREE].words[w % WORDS_PER_SUBTREE]
+    }
+
+    /// First-use census of a core slot; returns the active-core count.
+    #[inline]
+    fn note_active(&self, l: &Local) -> usize {
+        if l.touched.swap(1, Ordering::Relaxed) == 0 {
+            self.active_cores.fetch_add(1, Ordering::Relaxed) + 1
+        } else {
+            self.active_cores.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Claim one free bit inside subtree `s`, scanning its (at most 8)
+    /// words from `start_word`. Lock-free word CAS; decrements the
+    /// subtree's free count on success.
+    fn claim_one(&self, s: usize, start_word: usize) -> Option<u32> {
+        for k in 0..WORDS_PER_SUBTREE {
+            let j = (start_word + k) % WORDS_PER_SUBTREE;
+            let word = &self.fields[s].words[j];
+            let mut cur = word.load(Ordering::Relaxed);
+            while cur != 0 {
+                let bit = cur.trailing_zeros();
+                match word.compare_exchange_weak(
+                    cur,
+                    cur & !(1u64 << bit),
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        self.roots[s].state.fetch_sub(1, Ordering::AcqRel);
+                        let id = (s * WORDS_PER_SUBTREE + j) * 64 + bit as usize;
+                        return Some(id as u32);
+                    }
+                    Err(actual) => {
+                        self.cas_retries.fetch_add(1, Ordering::Relaxed);
+                        cur = actual;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Try to set the RESERVED flag on subtree `s`. Refuses subtrees
+    /// that are empty, already reserved, or (when `want_partial`) still
+    /// completely free — partially-filled subtrees are preferred so
+    /// fully-free ones stay available for bulk placement.
+    fn try_reserve(&self, s: usize, want_partial: bool) -> bool {
+        let st = &self.roots[s].state;
+        let mut cur = st.load(Ordering::Relaxed);
+        loop {
+            let free = (cur & COUNT_MASK) as usize;
+            if cur & RESERVED != 0 || free == 0 {
+                return false;
+            }
+            if want_partial && free >= self.subtree_span(s) {
+                return false;
+            }
+            match st.compare_exchange_weak(cur, cur | RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+            {
+                Ok(_) => return true,
+                Err(actual) => {
+                    self.cas_retries.fetch_add(1, Ordering::Relaxed);
+                    cur = actual;
+                }
+            }
+        }
+    }
+
+    /// Upper-level refill search: reserve a subtree for `node`,
+    /// preferring partially-filled over fully-free ones and same-node
+    /// over remote ones (same-node stealing before crossing).
+    fn find_and_reserve(&self, node: usize) -> Option<usize> {
+        for d in 0..self.nodes {
+            let n = (node + d) % self.nodes;
+            let (lo, hi) = self.node_subtrees(n);
+            for want_partial in [true, false] {
+                for s in lo..hi {
+                    if self.try_reserve(s, want_partial) {
+                        if d > 0 {
+                            self.cross_node.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Some(s);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Publish subtree `s` as `l`'s reservation, releasing whatever the
+    /// slot held before (drained subtree, or a racing install by a
+    /// thread sharing the slot — either way the old subtree returns to
+    /// the reservable pool).
+    fn install(&self, l: &Local, s: usize) {
+        let prev = l.reserved.swap(s + 1, Ordering::AcqRel);
+        if prev != 0 {
+            self.roots[prev - 1].state.fetch_and(!RESERVED, Ordering::AcqRel);
+        }
+        l.cursor.store(0, Ordering::Relaxed);
+        self.reservations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Allocate one block from an explicit core slot with an explicit
+    /// node hint (llfree's `get(core)` shape; the trait's `alloc` is
+    /// this with the thread's hashed core and its home node).
+    pub fn alloc_core_on(&self, core: usize, node: usize) -> Result<BlockId> {
+        if node >= self.nodes {
+            return Err(Error::Config(format!(
+                "node hint {node} out of range (pool has {} nodes)",
+                self.nodes
+            )));
+        }
+        let l = &self.locals[core % self.locals.len()];
+        let active = self.note_active(l);
+
+        // Fast path: one CAS inside the reserved subtree. The node hint
+        // steers *refills*; a live reservation is sticky by design
+        // (re-searching per alloc would thrash the upper level).
+        let r = l.reserved.load(Ordering::Acquire);
+        if r != 0 {
+            if let Some(id) = self.claim_one(r - 1, l.cursor.load(Ordering::Relaxed)) {
+                l.cursor.store(id as usize / 64 % WORDS_PER_SUBTREE, Ordering::Relaxed);
+                self.record_allocs(1);
+                return Ok(BlockId(id));
+            }
+        }
+
+        // Refill: reserve a fresh subtree — but only while reservation
+        // pays. Once active cores outnumber subtrees, installing more
+        // reservations just fences cores out of each other's space
+        // (adaptive reservation under thread-count growth).
+        let nsub = self.roots.len();
+        if nsub >= 2 && active <= nsub {
+            // Two rounds: a freshly reserved subtree can be drained by a
+            // handoff before our first claim lands.
+            for _ in 0..2 {
+                let Some(s) = self.find_and_reserve(node) else { break };
+                self.install(l, s);
+                if let Some(id) = self.claim_one(s, 0) {
+                    l.cursor.store(id as usize / 64 % WORDS_PER_SUBTREE, Ordering::Relaxed);
+                    self.record_allocs(1);
+                    return Ok(BlockId(id));
+                }
+            }
+        }
+
+        // Shared fallback (handoff): claim anywhere a block remains,
+        // inside other cores' reservations included — same-node
+        // subtrees first, then crossing. A zero count proves a subtree
+        // empty (frees raise counts before publishing bits), so the
+        // skip is sound.
+        for d in 0..self.nodes {
+            let n = (node + d) % self.nodes;
+            let (lo, hi) = self.node_subtrees(n);
+            for s in lo..hi {
+                let st = self.roots[s].state.load(Ordering::Acquire);
+                if st & COUNT_MASK == 0 {
+                    continue;
+                }
+                if let Some(id) = self.claim_one(s, 0) {
+                    if st & RESERVED != 0 {
+                        // A handoff proper: we claimed inside another
+                        // core's reservation.
+                        self.handoffs.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if d > 0 {
+                        self.cross_node.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.record_allocs(1);
+                    return Ok(BlockId(id));
+                }
+            }
+        }
+        self.failed_allocs.fetch_add(1, Ordering::Relaxed);
+        Err(Error::OutOfMemory {
+            requested: 1,
+            free: 0,
+            capacity: self.arena.capacity(),
+        })
+    }
+
+    /// Claim up to `want` blocks from subtree `s`, word-granular (≤ 64
+    /// blocks per CAS). Bulk path: ignores reservations by design.
+    fn claim_batch(&self, s: usize, want: usize, out: &mut Vec<u32>) -> usize {
+        let mut got = 0;
+        for j in 0..WORDS_PER_SUBTREE {
+            if got >= want {
+                break;
+            }
+            let word = &self.fields[s].words[j];
+            loop {
+                let cur = word.load(Ordering::Relaxed);
+                if cur == 0 {
+                    break;
+                }
+                let take = (cur.count_ones() as usize).min(want - got);
+                // Mask of the `take` lowest set bits of `cur`.
+                let mut mask = 0u64;
+                let mut m = cur;
+                for _ in 0..take {
+                    let b = m & m.wrapping_neg();
+                    mask |= b;
+                    m ^= b;
+                }
+                match word.compare_exchange_weak(
+                    cur,
+                    cur & !mask,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        self.roots[s].state.fetch_sub(take as u32, Ordering::AcqRel);
+                        let base = ((s * WORDS_PER_SUBTREE + j) * 64) as u32;
+                        let mut left = mask;
+                        while left != 0 {
+                            let bit = left.trailing_zeros();
+                            out.push(base + bit);
+                            left &= left - 1;
+                        }
+                        got += take;
+                        break;
+                    }
+                    Err(_) => {
+                        self.cas_retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        got
+    }
+
+    /// Return a claimed bit and its subtree count without touching
+    /// statistics (rollback path). Count first, bit second — the same
+    /// ordering as `free`, so counts never understate free space.
+    fn release_bit(&self, id: u32) {
+        let i = id as usize;
+        self.roots[i / SUBTREE_BLOCKS]
+            .state
+            .fetch_add(1, Ordering::AcqRel);
+        self.word(i / 64).fetch_or(1u64 << (i % 64), Ordering::AcqRel);
+    }
+
+    fn record_allocs(&self, n: usize) {
+        let live = self.allocated.fetch_add(n, Ordering::AcqRel) + n;
+        self.peak.fetch_max(live, Ordering::AcqRel);
+        self.total_allocs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn bounds_check(&self, id: BlockId, offset: usize, len: usize) -> Result<()> {
+        if !BlockAlloc::is_live(self, id) {
+            return Err(Error::InvalidBlock(id));
+        }
+        self.arena.check_span(offset, len)
+    }
+}
+
+impl BlockAlloc for TwoLevelAllocator {
+    fn alloc(&self) -> Result<BlockId> {
+        let core = self.current_core();
+        self.alloc_core_on(core, self.home_node(core))
+    }
+
+    fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>> {
+        let core = self.current_core();
+        let node = self.home_node(core);
+        let mut ids: Vec<u32> = Vec::with_capacity(n);
+        'scan: for d in 0..self.nodes {
+            let nd = (node + d) % self.nodes;
+            let (lo, hi) = self.node_subtrees(nd);
+            for s in lo..hi {
+                if ids.len() >= n {
+                    break 'scan;
+                }
+                if self.roots[s].state.load(Ordering::Acquire) & COUNT_MASK == 0 {
+                    continue;
+                }
+                let got = self.claim_batch(s, n - ids.len(), &mut ids);
+                if d > 0 && got > 0 {
+                    self.cross_node.fetch_add(got as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        if ids.len() < n {
+            // All-or-nothing: roll the partial claim back, leak nothing.
+            let got = ids.len();
+            for id in ids {
+                self.release_bit(id);
+            }
+            self.failed_allocs.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::OutOfMemory {
+                requested: n,
+                free: got,
+                capacity: self.arena.capacity(),
+            });
+        }
+        self.record_allocs(n);
+        Ok(ids.into_iter().map(BlockId).collect())
+    }
+
+    fn alloc_zeroed(&self) -> Result<BlockId> {
+        let id = BlockAlloc::alloc(self)?;
+        // SAFETY: id is live and exclusively ours until returned.
+        unsafe { self.arena.zero_block(id) };
+        Ok(id)
+    }
+
+    /// Lowest-id free block in `[lo, hi)`: ascending word scan with the
+    /// shared span mask, exactly the sharded allocator's placement
+    /// semantics. Bypasses reservations (placement is the point);
+    /// subtree counts are kept consistent.
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        let hi = hi.min(self.arena.capacity());
+        for w in lo / 64..hi.div_ceil(64) {
+            let first = w * 64;
+            let mask = span_word_mask(w, lo, hi);
+            let word = self.word(w);
+            loop {
+                let cur = word.load(Ordering::Relaxed);
+                let avail = cur & mask;
+                if avail == 0 {
+                    break;
+                }
+                let bit = avail.trailing_zeros();
+                if word
+                    .compare_exchange_weak(
+                        cur,
+                        cur & !(1u64 << bit),
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    self.roots[w / WORDS_PER_SUBTREE]
+                        .state
+                        .fetch_sub(1, Ordering::AcqRel);
+                    self.record_allocs(1);
+                    return Ok(BlockId((first + bit as usize) as u32));
+                }
+                self.cas_retries.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // A full span is an expected probe miss for the compactor, not
+        // pool exhaustion — don't count a failed alloc.
+        Err(Error::OutOfMemory {
+            requested: 1,
+            free: 0,
+            capacity: self.arena.capacity(),
+        })
+    }
+
+    /// One span per subtree — mmd's fragmentation telemetry and
+    /// rebalancing become subtree-granular for free, which is exactly
+    /// the occupancy signal the upper level maintains.
+    fn shard_spans(&self) -> Vec<(usize, usize)> {
+        let cap = self.arena.capacity();
+        (0..self.roots.len())
+            .map(|s| (s * SUBTREE_BLOCKS, ((s + 1) * SUBTREE_BLOCKS).min(cap)))
+            .collect()
+    }
+
+    fn live_snapshot(&self, out: &mut Vec<u64>) {
+        out.clear();
+        let cap = self.arena.capacity();
+        let nwords = cap.div_ceil(64);
+        out.reserve(nwords);
+        for w in 0..nwords {
+            // Bitfields hold the FREE bitmap; invert and mask the tail
+            // so bits past the capacity read as not-allocated.
+            let mut live = !self.word(w).load(Ordering::Acquire);
+            let first = w * 64;
+            if cap - first < 64 {
+                live &= (1u64 << (cap - first)) - 1;
+            }
+            out.push(live);
+        }
+    }
+
+    fn free(&self, id: BlockId) -> Result<()> {
+        let i = id.0 as usize;
+        if i >= self.arena.capacity() {
+            return Err(Error::InvalidBlock(id));
+        }
+        let (w, b) = (i / 64, 1u64 << (i % 64));
+        // Cheap pre-check: an already-free bit is a double free; reject
+        // without touching any state.
+        if self.word(w).load(Ordering::Acquire) & b != 0 {
+            return Err(Error::InvalidBlock(id));
+        }
+        let s = i / SUBTREE_BLOCKS;
+        // Retire from the live count BEFORE publishing the free bit
+        // (allocated must never exceed capacity), and raise the subtree
+        // count BEFORE the bit too (counts must never understate free
+        // space — a zero count is the handoff path's proof of
+        // emptiness). Both are undone if we lose a double-free race.
+        self.allocated.fetch_sub(1, Ordering::AcqRel);
+        self.roots[s].state.fetch_add(1, Ordering::AcqRel);
+        let prev = self.word(w).fetch_or(b, Ordering::AcqRel);
+        if prev & b != 0 {
+            self.roots[s].state.fetch_sub(1, Ordering::AcqRel);
+            self.allocated.fetch_add(1, Ordering::AcqRel);
+            return Err(Error::InvalidBlock(id));
+        }
+        self.total_frees.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn block_size(&self) -> usize {
+        self.arena.block_size()
+    }
+
+    fn capacity(&self) -> usize {
+        self.arena.capacity()
+    }
+
+    fn free_blocks(&self) -> usize {
+        self.arena.capacity() - self.allocated.load(Ordering::Acquire)
+    }
+
+    fn is_live(&self, id: BlockId) -> bool {
+        let i = id.0 as usize;
+        if i >= self.arena.capacity() {
+            return false;
+        }
+        self.word(i / 64).load(Ordering::Acquire) & (1u64 << (i % 64)) == 0
+    }
+
+    fn stats(&self) -> AllocStats {
+        let mut s = AllocStats {
+            allocated: self.allocated.load(Ordering::Acquire),
+            peak: self.peak.load(Ordering::Acquire),
+            total_allocs: self.total_allocs.load(Ordering::Relaxed),
+            total_frees: self.total_frees.load(Ordering::Relaxed),
+            failed_allocs: self.failed_allocs.load(Ordering::Relaxed),
+            ..AllocStats::default()
+        };
+        self.epoch.fill_alloc_stats(&mut s);
+        s
+    }
+
+    fn contention(&self) -> ContentionStats {
+        ContentionStats {
+            steals: self.handoffs.load(Ordering::Relaxed),
+            refills: self.reservations.load(Ordering::Relaxed),
+            cas_retries: self.cas_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    fn epoch(&self) -> &ArenaEpoch {
+        &self.epoch
+    }
+
+    unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
+        self.arena.block_ptr(id)
+    }
+
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        self.bounds_check(id, offset, data.len())?;
+        // SAFETY: bounds checked; caller owns the live block.
+        unsafe { self.arena.copy_in(id, offset, data) };
+        Ok(())
+    }
+
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.bounds_check(id, offset, out.len())?;
+        // SAFETY: bounds checked; caller owns the live block.
+        unsafe { self.arena.copy_out(id, offset, out) };
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for TwoLevelAllocator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TwoLevelAllocator")
+            .field("block_size", &self.arena.block_size())
+            .field("capacity", &self.arena.capacity())
+            .field("subtrees", &self.roots.len())
+            .field("nodes", &self.nodes)
+            .field("cores", &self.locals.len())
+            .field("allocated", &self.allocated.load(Ordering::Acquire))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Per-subtree free counts must match the bitfield popcounts when
+    /// the pool is quiescent — the counter discipline's ground truth.
+    fn assert_counts_exact(a: &TwoLevelAllocator) {
+        for s in 0..a.subtree_count() {
+            let pop: u32 = a.fields[s]
+                .words
+                .iter()
+                .map(|w| w.load(Ordering::Acquire).count_ones())
+                .sum();
+            let count = a.roots[s].state.load(Ordering::Acquire) & COUNT_MASK;
+            assert_eq!(count, pop, "subtree {s} count drifted from bitmap");
+        }
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let a = TwoLevelAllocator::new(1024, 640).unwrap();
+        let b = a.alloc().unwrap();
+        assert!(a.is_live(b));
+        assert_eq!(a.free_blocks(), 639);
+        a.free(b).unwrap();
+        assert!(!a.is_live(b));
+        assert_eq!(a.free_blocks(), 640);
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn exhaustion_errors_and_counts() {
+        let a = TwoLevelAllocator::new(1024, 70).unwrap();
+        let all: Vec<_> = (0..70).map(|_| a.alloc().unwrap()).collect();
+        assert!(matches!(a.alloc(), Err(Error::OutOfMemory { .. })));
+        assert_eq!(a.stats().failed_allocs, 1);
+        assert_eq!(a.free_blocks(), 0);
+        for b in all {
+            a.free(b).unwrap();
+        }
+        assert_eq!(a.free_blocks(), 70);
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let a = TwoLevelAllocator::new(1024, 64).unwrap();
+        let b = a.alloc().unwrap();
+        a.free(b).unwrap();
+        assert!(matches!(a.free(b), Err(Error::InvalidBlock(_))));
+        assert_eq!(a.free_blocks(), 64);
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn foreign_block_rejected() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        assert!(matches!(a.free(BlockId(99)), Err(Error::InvalidBlock(_))));
+        assert!(matches!(a.free(BlockId(3)), Err(Error::InvalidBlock(_))));
+    }
+
+    #[test]
+    fn alloc_many_all_or_nothing() {
+        let a = TwoLevelAllocator::new(1024, 600).unwrap();
+        let keep = a.alloc_many(590).unwrap();
+        assert!(a.alloc_many(11).is_err());
+        assert_eq!(a.free_blocks(), 10, "rollback leaked blocks");
+        assert_counts_exact(&a);
+        let rest = a.alloc_many(10).unwrap();
+        assert_eq!(rest.len(), 10);
+        for b in keep.into_iter().chain(rest) {
+            a.free(b).unwrap();
+        }
+        assert_eq!(a.free_blocks(), 600);
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn alloc_many_returns_distinct_blocks() {
+        let a = TwoLevelAllocator::new(1024, 520).unwrap();
+        let mut ids: Vec<u32> = a.alloc_many(520).unwrap().iter().map(|b| b.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 520);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let a = TwoLevelAllocator::new(1024, 16).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 11, &[7, 8, 9]).unwrap();
+        let mut out = [0u8; 3];
+        a.read(b, 11, &mut out).unwrap();
+        assert_eq!(out, [7, 8, 9]);
+        a.free(b).unwrap();
+        assert!(a.write(b, 0, &[1]).is_err(), "write to freed block");
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        assert!(TwoLevelAllocator::with_topology(1024, 64, 0, 1).is_err());
+        assert!(TwoLevelAllocator::with_topology(1024, 64, 1, 0).is_err());
+        // 600 blocks = 2 subtrees; 3 nodes cannot each own one.
+        assert!(TwoLevelAllocator::with_topology(1024, 600, 3, 4).is_err());
+        assert!(TwoLevelAllocator::with_topology(1024, 600, 2, 4).is_ok());
+    }
+
+    #[test]
+    fn capacity_not_multiple_of_64_is_exact() {
+        let a = TwoLevelAllocator::new(1024, 100).unwrap();
+        let all = a.alloc_many(100).unwrap();
+        assert!(a.alloc().is_err());
+        assert!(all.iter().all(|b| (b.0 as usize) < 100));
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn capacity_not_multiple_of_subtree_is_exact() {
+        // 600 = 512 + 88: the tail subtree is partial.
+        let a = TwoLevelAllocator::new(1024, 600).unwrap();
+        assert_eq!(a.subtree_count(), 2);
+        assert_eq!(a.subtree_occupancy(1), (0, 88));
+        let mut got = 0;
+        while a.alloc().is_ok() {
+            got += 1;
+        }
+        assert_eq!(got, 600);
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    fn fast_path_stays_in_reserved_subtree() {
+        let a = TwoLevelAllocator::with_topology(1024, 2048, 1, 2).unwrap();
+        let ids: Vec<_> = (0..100).map(|_| a.alloc_core_on(0, 0).unwrap()).collect();
+        let s0 = ids[0].0 as usize / SUBTREE_BLOCKS;
+        assert!(
+            ids.iter().all(|b| b.0 as usize / SUBTREE_BLOCKS == s0),
+            "fast path left the reserved subtree"
+        );
+        assert_eq!(a.placement_stats().reservations, 1);
+        assert_eq!(a.reserved_subtree_of(0), Some(s0));
+    }
+
+    #[test]
+    fn refill_reserves_next_subtree_on_drain() {
+        let a = TwoLevelAllocator::with_topology(1024, 1024, 1, 1).unwrap();
+        for _ in 0..SUBTREE_BLOCKS + 1 {
+            a.alloc_core_on(0, 0).unwrap();
+        }
+        let p = a.placement_stats();
+        assert_eq!(p.reservations, 2, "drain must refill the reservation");
+        assert_eq!(a.reserved_subtree_of(0), Some(1));
+        assert_eq!(p.handoffs, 0);
+    }
+
+    #[test]
+    fn numa_same_node_before_crossing() {
+        // 4 subtrees over 2 nodes: node 0 owns blocks 0..1024.
+        let a = TwoLevelAllocator::with_topology(1024, 2048, 2, 2).unwrap();
+        let ids: Vec<_> = (0..1025).map(|_| a.alloc_core_on(0, 0).unwrap()).collect();
+        assert!(
+            ids[..1024].iter().all(|b| (b.0 as usize) < 1024),
+            "crossed nodes while the home node had space"
+        );
+        assert!(ids[1024].0 as usize >= 1024);
+        let p = a.placement_stats();
+        assert!(p.cross_node > 0, "the 1025th alloc crossed nodes");
+        assert_eq!(a.node_of_block(ids[0]), 0);
+        assert_eq!(a.node_of_block(ids[1024]), 1);
+    }
+
+    #[test]
+    fn handoff_claims_inside_foreign_reservation() {
+        // Core 0 reserves subtree 0; core 1 reserves and drains subtree
+        // 1, then must hand off into core 0's reservation rather than
+        // report OOM.
+        let a = TwoLevelAllocator::with_topology(1024, 1024, 1, 2).unwrap();
+        a.alloc_core_on(0, 0).unwrap();
+        assert_eq!(a.reserved_subtree_of(0), Some(0));
+        let mut core1 = Vec::new();
+        for _ in 0..SUBTREE_BLOCKS {
+            core1.push(a.alloc_core_on(1, 0).unwrap());
+        }
+        assert!(
+            core1.iter().all(|b| b.0 as usize >= SUBTREE_BLOCKS),
+            "core 1 should have reserved the unreserved subtree"
+        );
+        let b = a.alloc_core_on(1, 0).unwrap();
+        assert!((b.0 as usize) < SUBTREE_BLOCKS, "handoff must use subtree 0");
+        let p = a.placement_stats();
+        assert!(p.handoffs > 0);
+        assert!(a.contention().steals > 0, "handoffs surface as steals");
+    }
+
+    #[test]
+    fn reservation_goes_shared_when_cores_outnumber_subtrees() {
+        // 2 subtrees, 4 cores: the 3rd and 4th active cores must not
+        // install reservations (adaptive shared mode).
+        let a = TwoLevelAllocator::with_topology(1024, 1024, 1, 4).unwrap();
+        for core in 0..4 {
+            a.alloc_core_on(core, 0).unwrap();
+        }
+        let p = a.placement_stats();
+        assert_eq!(p.reservations, 2, "only the first two cores reserve");
+        assert!(p.handoffs >= 2, "late cores go through the shared path");
+    }
+
+    #[test]
+    fn alloc_in_span_takes_lowest_in_range() {
+        let a = TwoLevelAllocator::new(1024, 640).unwrap();
+        let all = a.alloc_many(640).unwrap();
+        for b in &all {
+            if (b.0 as usize) >= 600 || (b.0 as usize) % 3 == 0 {
+                a.free(*b).unwrap();
+            }
+        }
+        let b = a.alloc_in_span(100, 200).unwrap();
+        assert_eq!(b.0, 102, "lowest free multiple of 3 in [100, 200)");
+        assert!(a.alloc_in_span(103, 105).is_err(), "full span must miss");
+        assert_eq!(a.stats().failed_allocs, 0, "span misses aren't failures");
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn shard_spans_are_subtree_granular() {
+        let a = TwoLevelAllocator::new(1024, 1100).unwrap();
+        assert_eq!(
+            a.shard_spans(),
+            vec![(0, 512), (512, 1024), (1024, 1100)]
+        );
+        let one = TwoLevelAllocator::new(1024, 96).unwrap();
+        assert_eq!(one.shard_spans(), vec![(0, 96)]);
+    }
+
+    #[test]
+    fn live_snapshot_matches_is_live() {
+        let a = TwoLevelAllocator::new(1024, 700).unwrap();
+        let mut rng = crate::testutil::Rng::new(42);
+        let mut live = Vec::new();
+        for _ in 0..400 {
+            if rng.chance(0.4) && !live.is_empty() {
+                let i = rng.range(0, live.len());
+                let b: BlockId = live.swap_remove(i);
+                a.free(b).unwrap();
+            } else if let Ok(b) = a.alloc() {
+                live.push(b);
+            }
+        }
+        let mut snap = Vec::new();
+        a.live_snapshot(&mut snap);
+        assert_eq!(snap.len(), 700usize.div_ceil(64));
+        for i in 0..700u32 {
+            let bit = snap[i as usize / 64] >> (i % 64) & 1 == 1;
+            assert_eq!(bit, a.is_live(BlockId(i)), "snapshot disagrees at {i}");
+        }
+        assert_counts_exact(&a);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let a = TwoLevelAllocator::new(1024, 64).unwrap();
+        let blocks = a.alloc_many(40).unwrap();
+        for b in &blocks[..30] {
+            a.free(*b).unwrap();
+        }
+        assert_eq!(a.stats().allocated, 10);
+        assert_eq!(a.stats().peak, 40);
+    }
+
+    #[test]
+    fn blocks_are_zeroed_via_alloc_zeroed() {
+        let a = TwoLevelAllocator::new(1024, 8).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, &[0xAB; 16]).unwrap();
+        a.free(b).unwrap();
+        let b2 = a.alloc_zeroed().unwrap();
+        let mut out = [0xFFu8; 16];
+        a.read(b2, 0, &mut out).unwrap();
+        assert_eq!(out, [0u8; 16]);
+    }
+
+    #[test]
+    fn concurrent_alloc_free_conserves() {
+        use std::sync::Arc;
+        let a = Arc::new(TwoLevelAllocator::with_topology(1024, 1024, 2, 8).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::testutil::Rng::new(t + 1);
+                let mut held = Vec::new();
+                for _ in 0..2000 {
+                    if rng.chance(0.5) && !held.is_empty() {
+                        let i = rng.range(0, held.len());
+                        let b = held.swap_remove(i);
+                        a.free(b).unwrap();
+                    } else if let Ok(b) = a.alloc() {
+                        held.push(b);
+                    }
+                }
+                for b in held {
+                    a.free(b).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.stats().allocated, 0);
+        assert_eq!(a.free_blocks(), 1024);
+        assert_counts_exact(&a);
+    }
+}

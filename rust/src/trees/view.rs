@@ -133,6 +133,13 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         self.tree.nleaves()
     }
 
+    /// Geometry metadata of the underlying tree (leaf capacity etc. —
+    /// what blocked kernels need to chunk index sets by leaf).
+    #[inline]
+    pub fn geometry(&self) -> crate::trees::TreeGeometry {
+        self.tree.geometry()
+    }
+
     /// Pin the arena epoch for the accesses that follow (hazard 3 in
     /// the module docs) and run the shootdown checks (hazard 2): flush
     /// the TLB wholesale when the epoch moved, refresh the generation
@@ -279,6 +286,10 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             }
             k = e;
         }
+        // Batched pinning: one pin covered the whole batch where
+        // per-access pinning would have paid idxs.len() (accounting
+        // only; retries re-pin and count themselves).
+        self.slot.record_saved_pins(idxs.len().saturating_sub(1) as u64);
         Ok(out)
     }
 
@@ -310,6 +321,8 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             visit(leaf, elems, &order[k..e]);
             k = e;
         }
+        // One pin for the whole run set (vs one per access).
+        self.slot.record_saved_pins(idxs.len().saturating_sub(1) as u64);
         Ok(())
     }
 
@@ -324,6 +337,9 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             // SAFETY: p valid for span elements under this pin.
             out.extend_from_slice(unsafe { std::slice::from_raw_parts(p, span) });
         }
+        // One pin for the whole copy (vs one per leaf).
+        self.slot
+            .record_saved_pins(self.nleaves().saturating_sub(1) as u64);
         out
     }
 

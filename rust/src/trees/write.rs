@@ -328,6 +328,11 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
             drop(guard);
             k = e;
         }
+        // Batched pinning: one pin covered the whole batch where
+        // per-access pinning (the scalar set/update paths) would have
+        // paid idxs.len(). `set_batch` delegates here, so it is
+        // covered too.
+        self.slot.record_saved_pins(idxs.len().saturating_sub(1) as u64);
         Ok(())
     }
 
@@ -507,6 +512,39 @@ mod tests {
             assert!(w.update_batch(&[n], |_, _| {}).is_err(), "oob batch");
         }
         assert_eq!(t.to_vec(), model);
+    }
+
+    #[test]
+    fn batch_paths_amortize_epoch_pins() {
+        // Satellite of the two-level PR: get_batch / update_batch /
+        // for_each_leaf_run pin the arena epoch once per batch; the
+        // pins they did NOT take (vs per-access pinning) surface in
+        // EpochStats::saved_pins.
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let n = 128 * 4;
+        let (t, _) = filled(&a, n);
+        let idxs: Vec<usize> = (0..n).step_by(3).collect();
+        {
+            let mut w = unsafe { t.writer() };
+            w.update_batch(&idxs, |_, v| *v = !*v).unwrap();
+        }
+        let after_write = a.epoch().stats();
+        assert!(
+            after_write.saved_pins >= idxs.len() as u64 - 1,
+            "update_batch must credit batch-amortized pins: {after_write:?}"
+        );
+        let mut v = t.view();
+        let _ = v.get_batch(&idxs).unwrap();
+        let s = a.epoch().stats();
+        assert!(
+            s.saved_pins >= after_write.saved_pins + idxs.len() as u64 - 1,
+            "get_batch must credit batch-amortized pins: {s:?}"
+        );
+        assert!(s.pins >= 2, "real pins still counted: {s:?}");
+        assert!(
+            s.pins < s.saved_pins,
+            "batching should save more pins than it spends here: {s:?}"
+        );
     }
 
     #[test]

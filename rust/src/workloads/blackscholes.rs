@@ -5,8 +5,9 @@
 //! AOT-compiled Pallas kernel executed through PJRT — proving the
 //! L3↔L1 boundary agrees end to end.
 
+use crate::error::{Error, Result};
 use crate::pmem::BlockAlloc;
-use crate::trees::TreeArray;
+use crate::trees::{TreeArray, TreeView};
 
 /// One option's market parameters.
 #[derive(Clone, Copy, Debug)]
@@ -137,6 +138,70 @@ pub fn price_tree_iter<A: BlockAlloc>(
     }
 }
 
+/// Price tree-layout arrays through *shared views*, leaf-blocked: each
+/// input array is visited via [`TreeView::for_each_leaf_run`] — one
+/// translation and one epoch pin per leaf-sized batch (vs per element
+/// in [`price_tree_naive`]) — and each leaf's contiguous slices feed
+/// the blocked kernel ([`price_contig`], the scalar twin of the Pallas
+/// blocked kernel). Unlike [`price_tree_iter`] this needs no `&`/`&mut`
+/// tree access, so it runs over shared views while mmd relocates blocks
+/// underneath (bulk-path contract: no concurrent *writers*).
+///
+/// All three inputs must have the same length; leaf geometries may
+/// differ (runs are re-chunked per array).
+pub fn price_view_blocked<A: BlockAlloc>(
+    spot: &mut TreeView<'_, '_, f32, A>,
+    strike: &mut TreeView<'_, '_, f32, A>,
+    tmat: &mut TreeView<'_, '_, f32, A>,
+    rate: f32,
+    vol: f32,
+    call: &mut [f32],
+    put: &mut [f32],
+) -> Result<()> {
+    let n = spot.len();
+    if strike.len() != n || tmat.len() != n || call.len() != n || put.len() != n {
+        return Err(Error::Config(format!(
+            "price_view_blocked: mismatched lengths (spot {n}, strike {}, tmat {}, call {}, put {})",
+            strike.len(),
+            tmat.len(),
+            call.len(),
+            put.len()
+        )));
+    }
+    let leaf_cap = spot.geometry().leaf_cap;
+    let kcap = strike.geometry().leaf_cap;
+    let tcap = tmat.geometry().leaf_cap;
+    let mut idx_buf: Vec<usize> = Vec::with_capacity(leaf_cap);
+    let mut kbuf: Vec<f32> = Vec::with_capacity(leaf_cap);
+    let mut tbuf: Vec<f32> = Vec::with_capacity(leaf_cap);
+    for leaf in 0..spot.nleaves() {
+        let lo = leaf * leaf_cap;
+        let hi = (lo + leaf_cap).min(n);
+        idx_buf.clear();
+        idx_buf.extend(lo..hi);
+        // Gather strike/tmat for this block of options. A sorted
+        // contiguous index range makes every leaf run contiguous inside
+        // its leaf, so each run is one slice copy.
+        kbuf.clear();
+        strike.for_each_leaf_run(&idx_buf, |_, elems, pos| {
+            let off = idx_buf[pos[0] as usize] % kcap;
+            kbuf.extend_from_slice(&elems[off..off + pos.len()]);
+        })?;
+        tbuf.clear();
+        tmat.for_each_leaf_run(&idx_buf, |_, elems, pos| {
+            let off = idx_buf[pos[0] as usize] % tcap;
+            tbuf.extend_from_slice(&elems[off..off + pos.len()]);
+        })?;
+        // Price straight out of spot's leaf block: the whole range is
+        // one run here (idx_buf spans exactly one spot leaf).
+        let (call_run, put_run) = (&mut call[lo..hi], &mut put[lo..hi]);
+        spot.for_each_leaf_run(&idx_buf, |_, elems, pos| {
+            price_contig(&elems[..pos.len()], &kbuf, &tbuf, rate, vol, call_run, put_run);
+        })?;
+    }
+    Ok(())
+}
+
 /// Deterministic synthetic portfolio (matches the Python tests' ranges).
 pub fn synth_portfolio(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let mut rng = crate::testutil::Rng::new(seed);
@@ -207,5 +272,47 @@ mod tests {
         price_tree_iter(&ts, &tk, &tt, RATE, VOL, &mut tc2, &mut tp2);
         assert_eq!(tc2.to_vec(), call_c);
         assert_eq!(tp2.to_vec(), put_c);
+    }
+
+    #[test]
+    fn view_blocked_pricing_matches_contig_and_amortizes_pins() {
+        let a = crate::pmem::TwoLevelAllocator::new(4096, 1 << 12).unwrap();
+        let n = 4096 / 4 * 5 + 33;
+        let (s, k, t) = synth_portfolio(n, 7);
+        let mut call_c = vec![0.0f32; n];
+        let mut put_c = vec![0.0f32; n];
+        price_contig(&s, &k, &t, RATE, VOL, &mut call_c, &mut put_c);
+
+        let ts = tree_from(&a, &s);
+        let tk = tree_from(&a, &k);
+        let tt = tree_from(&a, &t);
+        let mut vs = ts.view();
+        let mut vk = tk.view();
+        let mut vt = tt.view();
+        let mut call_v = vec![0.0f32; n];
+        let mut put_v = vec![0.0f32; n];
+        price_view_blocked(&mut vs, &mut vk, &mut vt, RATE, VOL, &mut call_v, &mut put_v)
+            .unwrap();
+        assert_eq!(call_v, call_c, "blocked view pricing diverged from contig");
+        assert_eq!(put_v, put_c);
+        let es = a.epoch().stats();
+        assert!(es.saved_pins > 0, "blocked path must amortize pins: {es:?}");
+        assert!(
+            price_view_blocked(
+                &mut vs,
+                &mut vk,
+                &mut vt,
+                RATE,
+                VOL,
+                &mut call_v[..n - 1],
+                &mut put_v
+            )
+            .is_err(),
+            "length mismatch must be rejected"
+        );
+        drop(vs);
+        drop(vk);
+        drop(vt);
+        a.epoch().synchronize(&a);
     }
 }

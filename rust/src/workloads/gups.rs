@@ -113,6 +113,47 @@ pub fn gups_view_read<A: BlockAlloc>(
     acc
 }
 
+/// The read side of GUPS through a shared view with *batched* lookups:
+/// indices are generated `batch` at a time and resolved through
+/// [`TreeView::get_batch`], which groups them by leaf (one translation
+/// per distinct leaf per batch) and pins the arena epoch once per batch
+/// instead of once per read (the pins saved surface in
+/// [`crate::pmem::EpochStats::saved_pins`]). Checksum is bit-identical
+/// to [`gups_view_read`]/[`gups_read_reference`] for the same seed: the
+/// order-sensitive fold runs over the returned values in generation
+/// order, which `get_batch` preserves (`out[pos]` = element
+/// `idxs[pos]`).
+pub fn gups_view_read_batched<A: BlockAlloc>(
+    view: &mut TreeView<'_, '_, u64, A>,
+    ops: u64,
+    seed: u64,
+    batch: usize,
+) -> u64 {
+    let batch = batch.max(1);
+    let mut rng = Rng::new(seed);
+    let n = view.len() as u64;
+    let mut idxs = Vec::with_capacity(batch);
+    let mut keys = Vec::with_capacity(batch);
+    let mut acc = 0u64;
+    let mut done = 0u64;
+    while done < ops {
+        let b = batch.min((ops - done) as usize);
+        idxs.clear();
+        keys.clear();
+        for _ in 0..b {
+            let r = rng.next_u64();
+            idxs.push((r % n) as usize);
+            keys.push(r);
+        }
+        let vals = view.get_batch(&idxs).expect("indices in range by construction");
+        for (v, k) in vals.iter().zip(&keys) {
+            acc = acc.rotate_left(7) ^ v ^ k;
+        }
+        done += b as u64;
+    }
+    acc
+}
+
 /// Reference checksum for [`gups_view_read`] over the table's contents
 /// (what every worker must produce regardless of thread count or
 /// concurrent relocation — relocation moves bytes, never changes them).
@@ -317,6 +358,36 @@ mod tests {
         // SAFETY: only epoch-registered views read the tree.
         unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
         assert_eq!(gups_view_read(&mut view, 10_000, 8), want);
+        drop(view);
+        a.epoch().synchronize(&a);
+    }
+
+    #[test]
+    fn batched_view_read_bit_identical_and_amortizes_pins() {
+        let a = crate::pmem::TwoLevelAllocator::new(4096, 4096).unwrap();
+        let n = 1 << 13;
+        let mut tree: TreeArray<u64, _> = TreeArray::new(&a, n).unwrap();
+        let mut vec_table = vec![0u64; n];
+        gups_vec(&mut vec_table, 20_000, 5);
+        tree.copy_from_slice(&vec_table).unwrap();
+        let want = gups_read_reference(&vec_table, 10_000, 17);
+        let mut view = tree.view();
+        for batch in [1usize, 7, 256, GUPS_BATCH] {
+            assert_eq!(
+                gups_view_read_batched(&mut view, 10_000, 17, batch),
+                want,
+                "batch={batch}: checksum diverged"
+            );
+        }
+        let s = a.epoch().stats();
+        assert!(
+            s.saved_pins > 0,
+            "batched reads must amortize epoch pins: {s:?}"
+        );
+        // Survives relocation under the live view, like the scalar path.
+        // SAFETY: only epoch-registered views read the tree.
+        unsafe { tree.migrate_leaf_concurrent(0) }.unwrap();
+        assert_eq!(gups_view_read_batched(&mut view, 10_000, 17, 512), want);
         drop(view);
         a.epoch().synchronize(&a);
     }

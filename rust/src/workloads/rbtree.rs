@@ -9,7 +9,7 @@
 
 use crate::error::Result;
 use crate::memsim::Hierarchy;
-use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
+use crate::pmem::{BlockAlloc, BlockAllocator, SlabPool};
 use crate::testutil::Rng;
 use crate::workloads::trace::CostModel;
 use crate::workloads::SimResult;
@@ -29,16 +29,15 @@ struct Node {
     color: u8,
 }
 
-/// A red–black tree whose nodes live in a pool carved from
-/// physically-addressed blocks.
+/// A red–black tree whose nodes live in a slab of 32-byte slots carved
+/// from physically-addressed blocks ([`SlabPool`]): blocks are claimed
+/// lazily as the tree grows instead of reserving the worst case up
+/// front, and every node keeps a stable simulated physical address.
 pub struct RbTree<'a, A: BlockAlloc = BlockAllocator> {
-    #[allow(dead_code)]
-    alloc: &'a A,
-    /// Node pool; node i lives at simulated physical address
-    /// `pool_blocks[i / per_block] * bs + (i % per_block) * NODE_BYTES`.
+    slab: SlabPool<'a, A>,
     nodes: Vec<Node>,
-    pool_blocks: Vec<BlockId>,
-    per_block: usize,
+    /// Physical address of node i's slab slot, assigned at insert.
+    addrs: Vec<u64>,
     root: u32,
     len: usize,
 }
@@ -47,16 +46,13 @@ pub struct RbTree<'a, A: BlockAlloc = BlockAllocator> {
 pub const NODE_BYTES: usize = 32;
 
 impl<'a, A: BlockAlloc> RbTree<'a, A> {
-    /// Create an empty tree with capacity for `cap` nodes.
+    /// Create an empty tree expecting about `cap` nodes (a sizing hint
+    /// for the host-side vectors; the node slab grows on demand).
     pub fn new(alloc: &'a A, cap: usize) -> Result<Self> {
-        let per_block = alloc.block_size() / NODE_BYTES;
-        let nblocks = cap.div_ceil(per_block).max(1);
-        let pool_blocks = alloc.alloc_many(nblocks)?;
         Ok(RbTree {
-            alloc,
+            slab: SlabPool::new(alloc, NODE_BYTES)?,
             nodes: Vec::with_capacity(cap),
-            pool_blocks,
-            per_block,
+            addrs: Vec::with_capacity(cap),
             root: NIL,
             len: 0,
         })
@@ -75,13 +71,14 @@ impl<'a, A: BlockAlloc> RbTree<'a, A> {
     /// Simulated physical address of node `i`.
     #[inline]
     pub fn node_addr(&self, i: u32) -> u64 {
-        let (b, o) = (i as usize / self.per_block, i as usize % self.per_block);
-        self.pool_blocks[b].phys_addr(self.alloc.block_size()) + (o * NODE_BYTES) as u64
+        self.addrs[i as usize]
     }
 
     /// Insert `key` (duplicates allowed; they go right).
     pub fn insert(&mut self, key: u64) {
         let idx = self.nodes.len() as u32;
+        let slot = self.slab.alloc_slot().expect("rbtree node pool exhausted");
+        self.addrs.push(self.slab.phys_addr(slot));
         self.nodes.push(Node {
             key,
             left: NIL,
@@ -290,14 +287,6 @@ impl<'a, A: BlockAlloc> RbTree<'a, A> {
     }
 }
 
-impl<A: BlockAlloc> Drop for RbTree<'_, A> {
-    fn drop(&mut self) {
-        for b in &self.pool_blocks {
-            let _ = self.alloc.free(*b);
-        }
-    }
-}
-
 /// Build a tree of `n` random keys, record the in-order traversal trace,
 /// and replay it through `h` — the Figure 4 (right) measurement for one
 /// address mode. Returns cycles per node visit.
@@ -335,6 +324,22 @@ mod tests {
 
     fn alloc() -> BlockAllocator {
         BlockAllocator::new(32 * 1024, 1 << 14).unwrap()
+    }
+
+    #[test]
+    fn node_pool_is_slab_backed_and_frees_on_drop() {
+        use crate::pmem::TwoLevelAllocator;
+        let a = TwoLevelAllocator::new(4096, 64).unwrap();
+        {
+            let mut t = RbTree::new(&a, 1000).unwrap();
+            for k in 0..1000u64 {
+                t.insert(k);
+            }
+            // Blocks are claimed lazily: exactly enough for 1000 nodes.
+            assert_eq!(a.stats().allocated, (1000 * NODE_BYTES).div_ceil(4096));
+            t.check_invariants().unwrap();
+        }
+        assert_eq!(a.stats().allocated, 0, "drop returns the slab's blocks");
     }
 
     #[test]

@@ -1,20 +1,27 @@
 //! Allocator-trait conformance: the same invariant suite runs against
-//! every [`BlockAlloc`] implementation (the mutex baseline and the
-//! sharded lock-free allocator), plus a multi-thread ownership stress
-//! test asserting no block is ever handed to two owners.
+//! every [`BlockAlloc`] implementation (the mutex baseline, the sharded
+//! lock-free allocator, and the two-level reserving allocator), plus a
+//! multi-thread ownership stress test asserting no block is ever handed
+//! to two owners, and two-level-specific reservation-handoff checks.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use nvm::pmem::{BlockAlloc, BlockAllocator, BlockId, ShardedAllocator};
+use nvm::pmem::{
+    BlockAlloc, BlockAllocator, BlockId, ShardedAllocator, TwoLevelAllocator, SUBTREE_BLOCKS,
+};
 use nvm::testutil::forall;
 
-/// Run `f` against both allocator implementations at the same geometry.
-fn with_both_allocators(block_size: usize, capacity: usize, f: impl Fn(&dyn Named)) {
+/// Run `f` against every allocator implementation at the same geometry.
+fn with_each_allocator(block_size: usize, capacity: usize, f: impl Fn(&dyn Named)) {
     let mutex = MutexImpl(BlockAllocator::new(block_size, capacity).unwrap());
     f(&mutex);
     let sharded = ShardedImpl(ShardedAllocator::with_shards(block_size, capacity, 4).unwrap());
     f(&sharded);
+    let nodes = capacity.div_ceil(SUBTREE_BLOCKS).min(2);
+    let twolevel =
+        TwoLevelImpl(TwoLevelAllocator::with_topology(block_size, capacity, nodes, 4).unwrap());
+    f(&twolevel);
 }
 
 /// Object-safe shim: the invariant suite only needs the safe subset of
@@ -31,10 +38,13 @@ trait Named {
     fn is_live(&self, id: BlockId) -> bool;
     fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> nvm::Result<()>;
     fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> nvm::Result<()>;
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> nvm::Result<BlockId>;
+    fn live_snapshot(&self, out: &mut Vec<u64>);
 }
 
 struct MutexImpl(BlockAllocator);
 struct ShardedImpl(ShardedAllocator);
+struct TwoLevelImpl(TwoLevelAllocator);
 
 macro_rules! forward {
     ($ty:ty, $label:literal) => {
@@ -69,18 +79,25 @@ macro_rules! forward {
             fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> nvm::Result<()> {
                 BlockAlloc::read(&self.0, id, offset, out)
             }
+            fn alloc_in_span(&self, lo: usize, hi: usize) -> nvm::Result<BlockId> {
+                BlockAlloc::alloc_in_span(&self.0, lo, hi)
+            }
+            fn live_snapshot(&self, out: &mut Vec<u64>) {
+                BlockAlloc::live_snapshot(&self.0, out)
+            }
         }
     };
 }
 
 forward!(MutexImpl, "mutex");
 forward!(ShardedImpl, "sharded");
+forward!(TwoLevelImpl, "twolevel");
 
 #[test]
 fn prop_alloc_free_roundtrip_and_conservation() {
     forall(30, |g| {
         let cap = g.usize_in(1, 96);
-        with_both_allocators(1024, cap, |a| {
+        with_each_allocator(1024, cap, |a| {
             let mut g = nvm::testutil::Rng::new(cap as u64 ^ 0xA110C);
             let mut live: Vec<BlockId> = Vec::new();
             for _ in 0..200 {
@@ -110,7 +127,7 @@ fn prop_alloc_free_roundtrip_and_conservation() {
 fn prop_double_free_rejected() {
     forall(20, |g| {
         let cap = g.usize_in(2, 64);
-        with_both_allocators(1024, cap, |a| {
+        with_each_allocator(1024, cap, |a| {
             let b = a.alloc().unwrap();
             a.free(b).unwrap();
             assert!(a.free(b).is_err(), "{}: double free accepted", a.name());
@@ -126,7 +143,7 @@ fn prop_alloc_many_rollback_leaks_nothing() {
     forall(25, |g| {
         let cap = g.usize_in(2, 80);
         let held = g.usize_in(1, cap);
-        with_both_allocators(1024, cap, |a| {
+        with_each_allocator(1024, cap, |a| {
             let keep = a.alloc_many(held).unwrap();
             // More than remains: must fail AND leak nothing.
             let want = cap - held + 1;
@@ -152,7 +169,7 @@ fn prop_alloc_many_rollback_leaks_nothing() {
 fn prop_distinct_blocks_never_alias() {
     forall(15, |g| {
         let cap = g.usize_in(2, 48);
-        with_both_allocators(1024, cap, |a| {
+        with_each_allocator(1024, cap, |a| {
             let blocks = a.alloc_many(cap).unwrap();
             for (i, b) in blocks.iter().enumerate() {
                 a.write(*b, 0, &[i as u8; 64]).unwrap();
@@ -230,6 +247,129 @@ fn stress_no_block_has_two_owners_sharded() {
         ShardedAllocator::with_shards(1024, 96, 4).unwrap(),
         "sharded",
     );
+}
+
+#[test]
+fn stress_no_block_has_two_owners_twolevel() {
+    // Tiny single-subtree pool: every thread fights over one bitfield
+    // and the reservation path collapses to the shared fallback.
+    two_owner_stress(
+        TwoLevelAllocator::with_topology(1024, 96, 1, 8).unwrap(),
+        "twolevel-small",
+    );
+    // Multi-subtree, multi-node pool: reservations, handoffs, and
+    // cross-node refills all run under the same claim-table scrutiny.
+    two_owner_stress(
+        TwoLevelAllocator::with_topology(1024, 1280, 2, 8).unwrap(),
+        "twolevel-numa",
+    );
+}
+
+#[test]
+fn prop_alloc_in_span_returns_lowest_free_in_range() {
+    forall(12, |g| {
+        let cap = g.usize_in(8, 96);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        with_each_allocator(1024, cap, |a| {
+            let _all = a.alloc_many(cap).unwrap();
+            let mut rng = nvm::testutil::Rng::new(seed ^ 0x5BA9);
+            // Fragment: free a random subset (ids are dense 0..cap).
+            let freed: Vec<usize> = (0..cap).filter(|_| rng.chance(0.4)).collect();
+            for &i in &freed {
+                a.free(BlockId(i as u32)).unwrap();
+            }
+            for _ in 0..20 {
+                let lo = rng.range(0, cap);
+                let hi = lo + 1 + rng.range(0, cap - lo);
+                let want = freed.iter().copied().find(|&i| lo <= i && i < hi);
+                match (a.alloc_in_span(lo, hi), want) {
+                    (Ok(b), Some(w)) => {
+                        assert_eq!(
+                            b.0 as usize, w,
+                            "{}: alloc_in_span({lo},{hi}) not lowest free",
+                            a.name()
+                        );
+                        a.free(b).unwrap();
+                    }
+                    (Err(_), None) => {}
+                    (got, want) => panic!(
+                        "{}: alloc_in_span({lo},{hi}) = {got:?}, expected free id {want:?}",
+                        a.name()
+                    ),
+                }
+            }
+        });
+    });
+}
+
+#[test]
+fn prop_live_snapshot_matches_is_live_under_churn() {
+    forall(10, |g| {
+        let cap = g.usize_in(4, 90);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        with_each_allocator(1024, cap, |a| {
+            let mut rng = nvm::testutil::Rng::new(seed ^ 0xB17);
+            let mut live: Vec<BlockId> = Vec::new();
+            for step in 0..150 {
+                if rng.chance(0.4) && !live.is_empty() {
+                    let i = rng.range(0, live.len());
+                    a.free(live.swap_remove(i)).unwrap();
+                } else if let Ok(b) = a.alloc() {
+                    live.push(b);
+                }
+                if step % 25 != 0 {
+                    continue;
+                }
+                let mut words = Vec::new();
+                a.live_snapshot(&mut words);
+                assert_eq!(words.len(), cap.div_ceil(64), "{}", a.name());
+                for i in 0..cap {
+                    let bit = words[i / 64] >> (i % 64) & 1 == 1;
+                    assert_eq!(
+                        bit,
+                        a.is_live(BlockId(i as u32)),
+                        "{}: snapshot bit {i} disagrees with is_live",
+                        a.name()
+                    );
+                }
+                // Bits past the capacity stay zero.
+                if cap % 64 != 0 {
+                    assert_eq!(words[cap / 64] >> (cap % 64), 0, "{}", a.name());
+                }
+            }
+        });
+    });
+}
+
+#[test]
+fn twolevel_reservation_hands_off_when_a_subtree_drains() {
+    // Two subtrees, two cores: each core's first allocation reserves a
+    // distinct subtree. Draining the whole pool through core 1 must
+    // then hand off into core 0's reservation rather than fail, and
+    // both the refills (reservations) and steals (handoffs) surface in
+    // the contention stats.
+    let cap = 2 * SUBTREE_BLOCKS;
+    let a = TwoLevelAllocator::with_topology(1024, cap, 1, 2).unwrap();
+    let b0 = a.alloc_core_on(0, 0).unwrap();
+    let b1 = a.alloc_core_on(1, 0).unwrap();
+    assert_ne!(
+        b0.0 as usize / SUBTREE_BLOCKS,
+        b1.0 as usize / SUBTREE_BLOCKS,
+        "cores must reserve distinct subtrees"
+    );
+    let mut held = vec![b0, b1];
+    while let Ok(b) = a.alloc_core_on(1, 0) {
+        held.push(b);
+    }
+    assert_eq!(held.len(), cap, "core 1 must drain the pool via handoff");
+    let c = a.contention();
+    assert!(c.refills >= 2, "each core's reservation is a refill: {c:?}");
+    assert!(c.steals > 0, "draining past the reservation implies handoffs: {c:?}");
+    for b in held {
+        a.free(b).unwrap();
+    }
+    assert_eq!(a.free_blocks(), cap);
+    assert_eq!(a.stats().allocated, 0);
 }
 
 #[test]
