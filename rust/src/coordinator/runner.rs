@@ -52,6 +52,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "mmd daemon: reader throughput + frag score under churn, off vs on",
         },
         ExperimentInfo {
+            name: "larger-than-dram",
+            description: "Software page faults: readers+writer over a tree bigger than the pool",
+        },
+        ExperimentInfo {
             name: "parallel-blackscholes",
             description: "Partitioned parallel Black-Scholes over one sharded allocator",
         },
@@ -92,6 +96,9 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "concurrent-rw" | "concurrent_rw" => vec![experiments::concurrent_rw(cfg)],
         "fragmentation-churn" | "fragmentation_churn" => {
             vec![experiments::fragmentation_churn(cfg)]
+        }
+        "larger-than-dram" | "larger_than_dram" => {
+            vec![experiments::larger_than_dram(cfg)]
         }
         "parallel-blackscholes" | "parallel_blackscholes" => {
             vec![experiments::parallel_blackscholes(cfg)]
@@ -140,8 +147,13 @@ mod tests {
             // Skip the slowest in unit tests: rbtree builds real trees;
             // fragmentation-churn runs 6 full daemon sub-runs (covered
             // by its own experiment test, the integration sweep, and
-            // the release-mode mmd_stress tier).
-            if e.name == "fig4-rbtree" || e.name == "fragmentation-churn" {
+            // the release-mode mmd_stress tier); larger-than-dram runs
+            // 3 full paging sub-runs (covered by its own e2e test in
+            // the release-mode swap_fault tier).
+            if e.name == "fig4-rbtree"
+                || e.name == "fragmentation-churn"
+                || e.name == "larger-than-dram"
+            {
                 continue;
             }
             let tables = run_experiment(e.name, &cfg).unwrap();

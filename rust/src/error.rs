@@ -61,6 +61,17 @@ pub enum Error {
     /// The block is swapped out and must be faulted in first.
     SwappedOut(crate::pmem::BlockId),
 
+    /// A swap fault-in exhausted its retries against a failing backing
+    /// store — the fault queue's permanent-failure escalation
+    /// ([`crate::pmem::FaultQueue`]). The payload is still resident in
+    /// its slot; the fault may be retried once the backing recovers.
+    SwapFaultFailed {
+        /// The swap slot whose payload could not be read back.
+        slot: u64,
+        /// I/O attempts made before giving up.
+        attempts: u32,
+    },
+
     /// An artifact file is missing or malformed.
     Artifact(String),
 
@@ -114,6 +125,10 @@ impl std::fmt::Display for Error {
                 write!(f, "protection fault: domain {domain} {verb} {block:?}")
             }
             Error::SwappedOut(b) => write!(f, "block {b:?} is swapped out"),
+            Error::SwapFaultFailed { slot, attempts } => write!(
+                f,
+                "swap fault-in of slot {slot} failed permanently after {attempts} attempts"
+            ),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

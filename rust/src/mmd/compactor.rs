@@ -38,8 +38,13 @@
 //! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span
 //! [`TreeArray::migrate_leaf_concurrent_to`]: crate::trees::TreeArray::migrate_leaf_concurrent_to
 
-use crate::pmem::{BlockAlloc, SwapPool};
+use crate::pmem::faultq::{LeafFaulter, SwapService};
+use crate::pmem::BlockAlloc;
 use crate::trees::TreeRegistry;
+
+/// Victims recorded per eviction pass are capped so a pathological
+/// burst cannot grow the report without bound.
+const VICTIM_CAP: usize = 128;
 
 /// Work counters for one [`Compactor`] (cumulative).
 #[derive(Clone, Copy, Debug, Default)]
@@ -50,8 +55,10 @@ pub struct CompactStats {
     pub bytes_compacted: u64,
     /// Leaves evicted to swap.
     pub evictions: u64,
-    /// Leaves faulted back and re-adopted.
+    /// Leaves faulted back and re-adopted (demand-independent).
     pub restores: u64,
+    /// Leaves brought back speculatively (Prefetch action).
+    pub prefetched: u64,
     /// Relocations abandoned (destination allocation failed or the
     /// move errored; the destination block was returned).
     pub skipped: u64,
@@ -62,6 +69,9 @@ pub struct Compactor<'e, A: BlockAlloc> {
     alloc: &'e A,
     registry: &'e TreeRegistry<'e>,
     stats: CompactStats,
+    /// Eviction victims `(registration id, leaf)` since the last
+    /// [`Compactor::take_victims`], capped at [`VICTIM_CAP`].
+    victims: Vec<(u64, usize)>,
 }
 
 impl<'e, A: BlockAlloc> Compactor<'e, A> {
@@ -71,12 +81,21 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
             alloc,
             registry,
             stats: CompactStats::default(),
+            victims: Vec::new(),
         }
     }
 
     /// Cumulative work counters.
     pub fn stats(&self) -> CompactStats {
         self.stats
+    }
+
+    /// Drain the eviction victims recorded since the last call —
+    /// `(registration id, leaf index)` in eviction order. The daemon
+    /// surfaces these in its report so "what did eviction choose" is
+    /// observable without tracing.
+    pub fn take_victims(&mut self) -> Vec<(u64, usize)> {
+        std::mem::take(&mut self.victims)
     }
 
     /// The shared relocation pass under compaction and rebalancing:
@@ -104,7 +123,7 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
                 if moved >= budget {
                     break 'outer;
                 }
-                if e.swapped.iter().any(|&(l, _)| l == leaf) {
+                if e.tree.leaf_swap_slot(leaf).is_some() {
                     continue; // no live backing to copy from
                 }
                 let cur = e.tree.leaf_block(leaf).0 as usize;
@@ -163,76 +182,114 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
     }
 
     /// Evict up to `budget` leaves of evictable registrations into
-    /// `swap` (which must be a pool over the same allocator). Cold
-    /// proxy: highest-indexed resident leaves first — the registry
-    /// keeps no access timestamps (ROADMAP open item), and tail leaves
-    /// are the coldest for the scan-heavy workloads shipped. The
-    /// physical blocks are retired through the epoch
-    /// ([`SwapPool::evict_deferred`]), not freed, so readers elsewhere
-    /// in the pool stay safe.
-    pub fn evict(&mut self, budget: usize, swap: &SwapPool<'_, A>) -> usize {
-        let mut entries = self.registry.lock();
-        let mut done = 0usize;
-        for e in entries.iter_mut() {
+    /// `swap` (a service over the same allocator), **coldest first**:
+    /// candidates are every resident leaf of every evictable tree,
+    /// ordered by last-touch tick ascending (never-touched leaves tie
+    /// at 0 and go in index order). The view/writer fault hooks bump
+    /// the tick on every translation miss and fault-in, so leaves the
+    /// workload is actively walking rank hot and stay resident. Each
+    /// eviction runs under the leaf's seqlock
+    /// ([`crate::trees::CompactTarget::evict_leaf`]); the physical
+    /// block is epoch-retired, not freed, so readers stay safe. Chosen
+    /// victims are recorded for [`Compactor::take_victims`].
+    pub fn evict(&mut self, budget: usize, swap: &dyn SwapService) -> usize {
+        let entries = self.registry.lock();
+        let mut cands: Vec<(u64, usize, usize)> = Vec::new(); // (touch, entry, leaf)
+        for (ei, e) in entries.iter().enumerate() {
             if !e.evictable {
                 continue;
             }
-            for leaf in (0..e.tree.nleaves()).rev() {
-                if done >= budget {
-                    return done;
+            for leaf in 0..e.tree.nleaves() {
+                if e.tree.leaf_swap_slot(leaf).is_none() {
+                    cands.push((e.tree.leaf_touch(leaf), ei, leaf));
                 }
-                if e.swapped.iter().any(|&(l, _)| l == leaf) {
-                    continue;
-                }
-                let block = e.tree.leaf_block(leaf);
-                match swap.evict_deferred(block) {
-                    Ok(slot) => {
-                        e.swapped.push((leaf, slot));
-                        done += 1;
-                        self.stats.evictions += 1;
+            }
+        }
+        cands.sort(); // coldest (smallest tick) first; stable by (entry, leaf)
+        let mut done = 0usize;
+        for &(_, ei, leaf) in cands.iter().take(budget.min(cands.len())) {
+            let e = &entries[ei];
+            // SAFETY: the evictable registration contract — accessors
+            // are fault-capable and a faulter is installed before any
+            // of them can hit this leaf.
+            match unsafe { e.tree.evict_leaf(leaf, swap) } {
+                Ok(_) => {
+                    done += 1;
+                    self.stats.evictions += 1;
+                    if self.victims.len() < VICTIM_CAP {
+                        self.victims.push((e.id, leaf));
                     }
-                    Err(_) => return done, // swap I/O trouble: stop
                 }
+                Err(_) => break, // swap I/O trouble: stop the pass
+            }
+        }
+        done
+    }
+
+    /// The shared fault-back pass: bring up to `budget` swapped-out
+    /// leaves back in through `faulter`, **hottest first** (largest
+    /// last-touch tick) — the leaves a demand miss would hit soonest.
+    /// `Ok(false)` from a restore (a demand fault won the race) costs
+    /// no budget; an error ends the pass — for a direct pool that is
+    /// OOM/I-O (caller may reclaim and retry), for a shedding prefetch
+    /// gate it is the gate saying "queue busy", which is throttling,
+    /// not failure.
+    fn fault_back(&mut self, budget: usize, faulter: &dyn LeafFaulter, prefetch: bool) -> usize {
+        let entries = self.registry.lock();
+        let mut cands: Vec<(std::cmp::Reverse<u64>, usize, usize)> = Vec::new();
+        for (ei, e) in entries.iter().enumerate() {
+            for leaf in 0..e.tree.nleaves() {
+                if e.tree.leaf_swap_slot(leaf).is_some() {
+                    cands.push((std::cmp::Reverse(e.tree.leaf_touch(leaf)), ei, leaf));
+                }
+            }
+        }
+        cands.sort();
+        let mut done = 0usize;
+        for &(_, ei, leaf) in cands.iter() {
+            if done >= budget {
+                break;
+            }
+            match entries[ei].tree.restore_leaf(leaf, faulter) {
+                Ok(true) => {
+                    done += 1;
+                    if prefetch {
+                        self.stats.prefetched += 1;
+                    } else {
+                        self.stats.restores += 1;
+                    }
+                }
+                Ok(false) => {} // demand fault won the race
+                Err(_) => break,
             }
         }
         done
     }
 
     /// Fault up to `budget` swapped-out leaves back in and re-adopt
-    /// them. Stops early if the pool cannot supply blocks (the slot
-    /// stays resident — [`SwapPool::fault`] is failure-atomic).
-    pub fn restore(&mut self, budget: usize, swap: &SwapPool<'_, A>) -> usize {
-        let mut entries = self.registry.lock();
-        let mut done = 0usize;
-        'outer: for e in entries.iter_mut() {
-            while let Some(&(leaf, slot)) = e.swapped.last() {
-                if done >= budget {
-                    break 'outer;
-                }
-                let fresh = match swap.fault(slot) {
-                    Ok(b) => b,
-                    Err(_) => break 'outer, // OOM: retry after reclaim
-                };
-                // SAFETY: the evictable registration contract (no
-                // accessors at all while registered); `fresh` holds the
-                // leaf's bytes and is exclusively ours.
-                unsafe { e.tree.adopt_leaf_block(leaf, fresh) };
-                e.swapped.pop();
-                done += 1;
-                self.stats.restores += 1;
-            }
-        }
-        done
+    /// them, hottest first. Stops early if the pool cannot supply
+    /// blocks (the slot stays resident — the swap fault is
+    /// failure-atomic).
+    pub fn restore(&mut self, budget: usize, faulter: &dyn LeafFaulter) -> usize {
+        self.fault_back(budget, faulter, false)
+    }
+
+    /// Speculatively fault up to `budget` predicted-hot swapped-out
+    /// leaves back in (the daemon's Prefetch action). Pass a
+    /// [`crate::pmem::PrefetchGate`] so speculative work sheds instead
+    /// of competing with demand faults when the queue is busy.
+    pub fn prefetch(&mut self, budget: usize, faulter: &dyn LeafFaulter) -> usize {
+        self.fault_back(budget, faulter, true)
     }
 
     /// Restore *everything*, reclaiming limbo between attempts so
     /// restores never starve on deferred frees. Used by daemon
     /// shutdown; loops until the registry has no swapped-out leaves or
     /// no progress can be made.
-    pub fn restore_all(&mut self, swap: &SwapPool<'_, A>) -> usize {
+    pub fn restore_all(&mut self, faulter: &dyn LeafFaulter) -> usize {
         let mut total = 0usize;
         loop {
-            let n = self.restore(usize::MAX, swap);
+            let n = self.restore(usize::MAX, faulter);
             total += n;
             if self.registry.swapped_out() == 0 {
                 return total;
@@ -240,7 +297,7 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
             let reclaimed = self.alloc.epoch().try_reclaim(self.alloc);
             if n == 0 && reclaimed == 0 {
                 // Wedged: pool exhausted and nothing reclaimable. The
-                // remaining ledger stays; deregistration will refuse.
+                // leaves stay in swap; deregistration will refuse.
                 return total;
             }
         }
@@ -251,7 +308,7 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
 mod tests {
     use super::*;
     use crate::mmd::stats::FragSampler;
-    use crate::pmem::{BlockAllocator, ShardedAllocator};
+    use crate::pmem::{BlockAllocator, ShardedAllocator, SwapPool};
     use crate::testutil::fragmented_tree;
     use crate::trees::TreeArray;
 
@@ -428,6 +485,69 @@ mod tests {
         a.epoch().synchronize(&a);
         drop(tree);
         assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn eviction_picks_cold_leaves_and_records_victims() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, 128 * 6).unwrap();
+        let data: Vec<u64> = (0..128 * 6).map(|i| i as u64 | 1).collect();
+        tree.copy_from_slice(&data).unwrap();
+        let registry = TreeRegistry::new();
+        // SAFETY: all accesses below are fault-capable views (and none
+        // touch a leaf while it is out).
+        let id = unsafe { registry.register_evictable(&tree) };
+        let swap = SwapPool::anonymous(&a).unwrap();
+        // Touch leaves 0 and 3: their translation misses stamp recency.
+        {
+            let mut v = tree.view();
+            let _ = v.get(0).unwrap();
+            let _ = v.get(128 * 3).unwrap();
+        }
+        let mut c = Compactor::new(&a, &registry);
+        assert_eq!(c.evict(4, &swap), 4);
+        let victims: Vec<usize> = c
+            .take_victims()
+            .into_iter()
+            .map(|(vid, l)| {
+                assert_eq!(vid, id);
+                l
+            })
+            .collect();
+        assert_eq!(victims.len(), 4);
+        assert!(
+            !victims.contains(&0) && !victims.contains(&3),
+            "touched (hot) leaves must be evicted last: {victims:?}"
+        );
+        assert!(c.take_victims().is_empty(), "take_victims drains");
+        assert_eq!(c.restore_all(&swap), 4);
+        assert_eq!(c.stats().restores, 4);
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
+    }
+
+    #[test]
+    fn prefetch_restores_hottest_swapped_leaf_first() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let data: Vec<u64> = (0..128 * 4).map(|i| i as u64 ^ 7).collect();
+        tree.copy_from_slice(&data).unwrap();
+        let registry = TreeRegistry::new();
+        // SAFETY: fault-capable accessors only.
+        let id = unsafe { registry.register_evictable(&tree) };
+        let swap = SwapPool::anonymous(&a).unwrap();
+        {
+            let mut v = tree.view();
+            let _ = v.get(128 * 2).unwrap(); // leaf 2 is the hottest
+        }
+        let mut c = Compactor::new(&a, &registry);
+        assert_eq!(c.evict(usize::MAX, &swap), 4, "evict everything");
+        assert_eq!(c.prefetch(1, &swap), 1);
+        assert_eq!(c.stats().prefetched, 1);
+        assert!(!tree.leaf_swapped(2), "prefetch must pick the hottest leaf");
+        assert_eq!(c.restore_all(&swap), 3);
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //!       -> shutdown: restore evicted leaves, drain limbo, report
 //! ```
 //!
+//! [`MmdHandle::spawn_with_swap`] runs the same loop over an
+//! application-provided [`FaultQueue`]: the daemon evicts through the
+//! queue's backing, prefetches/restores through its shedding gate, and
+//! feeds the policy live fault telemetry (demand-miss deltas, queue
+//! depth, the degraded flag) — the full software-page-fault loop with
+//! accessors faulting on demand while the daemon manages residency.
+//!
 //! The handle is scoped ([`MmdHandle::spawn`] takes a
 //! [`std::thread::Scope`]) so the daemon can serve allocator pools and
 //! trees that live on the caller's stack — the same pattern the
@@ -22,6 +29,7 @@ use std::time::Duration;
 use crate::mmd::compactor::{CompactStats, Compactor};
 use crate::mmd::policy::{Action, Policy, PolicyCtx};
 use crate::mmd::stats::FragSampler;
+use crate::pmem::faultq::{FaultQueue, FaultStats, SwapService};
 use crate::pmem::{BlockAlloc, SwapPool};
 use crate::trees::TreeRegistry;
 
@@ -68,6 +76,8 @@ pub struct ActionCounts {
     pub evict: u64,
     /// Restore ticks.
     pub restore: u64,
+    /// Prefetch ticks.
+    pub prefetch: u64,
 }
 
 /// What the daemon did over its lifetime (returned by
@@ -98,6 +108,20 @@ pub struct MmdReport {
     /// every Evict/Restore tick after that was a forced no-op. (False
     /// when eviction never fired — the backing is created lazily.)
     pub swap_unavailable: bool,
+    /// The swap path was degraded at shutdown: the fault queue had
+    /// exhausted a retry budget without a success since, or eviction
+    /// failed several consecutive ticks. While degraded the policy
+    /// skips all swap traffic (graceful degradation to a
+    /// compaction-only daemon) — this flag is how an experiment learns
+    /// that happened instead of mistaking quiet for health.
+    pub swap_degraded: bool,
+    /// Eviction victims `(registration id, leaf index)` in eviction
+    /// order (capped; see [`Compactor::take_victims`]) — the audit
+    /// trail for "did recency tracking pick cold leaves".
+    pub victims: Vec<(u64, usize)>,
+    /// Fault-queue counters at shutdown (all zero for a daemon spawned
+    /// without a queue).
+    pub fault: FaultStats,
 }
 
 impl MmdReport {
@@ -106,7 +130,7 @@ impl MmdReport {
         let mut s = format!(
             "mmd: {} ticks, moved {} leaves ({} KB), evicted {} / restored {}, \
              score {:.3} -> {:.3}, limbo high-water {}, actions \
-             idle={} pool={} shard={} rebal={} evict={} restore={}",
+             idle={} pool={} shard={} rebal={} evict={} restore={} prefetch={}",
             self.ticks,
             self.compact.leaves_moved,
             self.compact.bytes_compacted / 1024,
@@ -121,9 +145,22 @@ impl MmdReport {
             self.actions.rebalance,
             self.actions.evict,
             self.actions.restore,
+            self.actions.prefetch,
         );
+        if self.fault.demand > 0 || self.fault.retries > 0 {
+            s.push_str(&format!(
+                ", faults demand={} retries={} permanent={} mean {} us",
+                self.fault.demand,
+                self.fault.retries,
+                self.fault.permanent,
+                self.fault.mean_ns() / 1000,
+            ));
+        }
         if self.swap_unavailable {
             s.push_str(" [SWAP UNAVAILABLE: eviction was a no-op]");
+        }
+        if self.swap_degraded {
+            s.push_str(" [SWAP DEGRADED: swap traffic was suspended]");
         }
         s
     }
@@ -160,7 +197,39 @@ impl<'scope> MmdHandle<'scope> {
         P: Policy + 'env,
     {
         let (tx, rx) = channel();
-        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, rx));
+        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, None, rx));
+        MmdHandle { tx, join }
+    }
+
+    /// Spawn the daemon over an application-provided [`FaultQueue`] —
+    /// the same queue whose [`crate::pmem::LeafFaulter`] the
+    /// application installed on its trees. The daemon then:
+    ///
+    /// * evicts through the queue's [`SwapService`] (same backing the
+    ///   demand faults read from),
+    /// * restores/prefetches through the queue's shedding prefetch
+    ///   gate, so daemon swap-ins never steal I/O slots from demand
+    ///   misses,
+    /// * feeds the policy live queue telemetry: per-tick demand-fault
+    ///   deltas (prefetch trigger), current depth (eviction gate), and
+    ///   the degraded flag (suspend swap traffic).
+    ///
+    /// Shutdown still restores every evicted leaf — through the queue
+    /// itself (full retry/backoff), not the gate.
+    pub fn spawn_with_swap<'env, A, P>(
+        scope: &'scope Scope<'scope, 'env>,
+        alloc: &'env A,
+        registry: &'env TreeRegistry<'env>,
+        policy: P,
+        cfg: MmdConfig,
+        faultq: &'env FaultQueue<'env>,
+    ) -> MmdHandle<'scope>
+    where
+        A: BlockAlloc,
+        P: Policy + 'env,
+    {
+        let (tx, rx) = channel();
+        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, Some(faultq), rx));
         MmdHandle { tx, join }
     }
 
@@ -213,11 +282,16 @@ fn drain_limbo<A: BlockAlloc>(alloc: &A) -> usize {
     epoch.limbo_len()
 }
 
+/// Consecutive failed eviction ticks before the daemon declares its
+/// own swap path degraded (ext-mode queues carry their own flag).
+const EVICT_FAIL_DEGRADE: u32 = 3;
+
 fn daemon_run<'e, A, P>(
     alloc: &'e A,
     registry: &'e TreeRegistry<'e>,
     mut policy: P,
     cfg: MmdConfig,
+    ext: Option<&'e FaultQueue<'e>>,
     rx: Receiver<Ctl>,
 ) -> MmdReport
 where
@@ -242,6 +316,15 @@ where
         ..MmdReport::default()
     };
     let mut paused = cfg.start_paused;
+    // Per-tick deltas: the policy wants "what happened since last
+    // tick", the sources are monotonic counters.
+    let mut last_lock_waits = registry.lock_waits_total();
+    let mut last_demand = ext.map(|q| q.stats().demand).unwrap_or(0);
+    // Own-mode degradation: EVICT_FAIL_DEGRADE consecutive eviction
+    // ticks that moved nothing (with candidates present) mean the
+    // backing is refusing writes — stop asking.
+    let mut evict_fail_streak = 0u32;
+    let mut own_degraded = false;
     loop {
         match rx.recv_timeout(cfg.interval) {
             Ok(Ctl::Pause) => {
@@ -268,10 +351,22 @@ where
             report.score_trace.push(snap.score);
         }
         let (swapped_out, evictable_resident) = registry.eviction_counts();
+        let lw = registry.lock_waits_total();
+        let lock_waits = lw.saturating_sub(last_lock_waits);
+        last_lock_waits = lw;
+        let demand_now = ext.map(|q| q.stats().demand).unwrap_or(0);
+        let demand_faults = demand_now.saturating_sub(last_demand);
+        last_demand = demand_now;
+        let swap_degraded = own_degraded || ext.map(|q| q.degraded()).unwrap_or(false);
         let ctx = PolicyCtx {
             swapped_out,
             evictable_resident: if swap_failed { 0 } else { evictable_resident },
+            lock_waits,
+            demand_faults,
+            fault_queue_depth: ext.map(|q| q.depth()).unwrap_or(0),
+            swap_degraded,
         };
+        report.swap_degraded = swap_degraded;
         match policy.decide(&snap, &ctx) {
             Action::Idle => report.actions.idle += 1,
             Action::CompactPool => {
@@ -295,35 +390,93 @@ where
                 report.actions.rebalance += 1;
             }
             Action::Evict { leaves } => {
-                if swap.is_none() && !swap_failed {
-                    match SwapPool::anonymous(alloc) {
-                        Ok(s) => swap = Some(s),
-                        Err(_) => {
-                            swap_failed = true;
-                            report.swap_unavailable = true;
+                let svc: Option<&dyn SwapService> = match ext {
+                    Some(q) => Some(q.service()),
+                    None => {
+                        if swap.is_none() && !swap_failed {
+                            match SwapPool::anonymous(alloc) {
+                                Ok(s) => swap = Some(s),
+                                Err(_) => {
+                                    swap_failed = true;
+                                    report.swap_unavailable = true;
+                                }
+                            }
+                        }
+                        swap.as_ref().map(|s| s as &dyn SwapService)
+                    }
+                };
+                if let Some(svc) = svc {
+                    let did = compactor.evict(leaves.min(cfg.tokens_per_tick), svc);
+                    if did > 0 {
+                        evict_fail_streak = 0;
+                        own_degraded = false; // the backing writes again
+                    } else if evictable_resident > 0 {
+                        evict_fail_streak += 1;
+                        if evict_fail_streak >= EVICT_FAIL_DEGRADE {
+                            own_degraded = true;
                         }
                     }
-                }
-                if let Some(sw) = swap.as_ref() {
-                    compactor.evict(leaves.min(cfg.tokens_per_tick), sw);
                 }
                 report.actions.evict += 1;
             }
             Action::Restore { leaves } => {
-                if let Some(sw) = swap.as_ref() {
-                    compactor.restore(leaves.min(cfg.tokens_per_tick), sw);
+                // Ext mode restores through the shedding gate: a bulk
+                // restore must never occupy I/O slots a demand miss is
+                // waiting for — a shed restore just retries next tick.
+                match ext {
+                    Some(q) => {
+                        compactor.restore(leaves.min(cfg.tokens_per_tick), &q.prefetch_gate());
+                    }
+                    None => {
+                        if let Some(sw) = swap.as_ref() {
+                            compactor.restore(leaves.min(cfg.tokens_per_tick), sw);
+                        }
+                    }
                 }
                 report.actions.restore += 1;
+            }
+            Action::Prefetch { leaves } => {
+                match ext {
+                    Some(q) => {
+                        compactor.prefetch(leaves.min(cfg.tokens_per_tick), &q.prefetch_gate());
+                    }
+                    None => {
+                        // Without a queue there is no demand-fault
+                        // signal, but a custom policy may still ask:
+                        // serve it from the lazy pool when one exists.
+                        if let Some(sw) = swap.as_ref() {
+                            compactor.prefetch(leaves.min(cfg.tokens_per_tick), sw);
+                        }
+                    }
+                }
+                report.actions.prefetch += 1;
             }
         }
         alloc.epoch().try_reclaim(alloc);
         report.ticks += 1;
     }
     // Shutdown: make registered trees whole (fault every evicted leaf
-    // back — the satellite teardown contract), then drain limbo.
-    if let Some(sw) = swap.as_ref() {
-        compactor.restore_all(sw);
+    // back — the satellite teardown contract), then drain limbo. Ext
+    // mode restores through the queue itself (full retry/backoff, no
+    // shedding): at teardown, completeness beats latency.
+    match ext {
+        Some(q) => {
+            // Stats snapshot before the teardown restores so `demand`
+            // reflects accessor misses, not shutdown bulk I/O.
+            report.fault = q.stats();
+            if registry.swapped_out() > 0 {
+                compactor.restore_all(q);
+            }
+            report.swap_degraded = own_degraded || q.degraded();
+        }
+        None => {
+            if let Some(sw) = swap.as_ref() {
+                compactor.restore_all(sw);
+            }
+            report.swap_degraded = own_degraded;
+        }
     }
+    report.victims = compactor.take_victims();
     report.limbo_remaining = drain_limbo(alloc);
     report.compact = compactor.stats();
     let snap = sampler.sample(alloc);
@@ -448,6 +601,61 @@ mod tests {
         }
         a.epoch().synchronize(&a);
         drop(tree);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn daemon_over_a_fault_queue_serves_demand_misses() {
+        use crate::pmem::{FaultQueue, FaultQueueConfig, SwapPool};
+        let a = BlockAllocator::new(1024, 32).unwrap();
+        let mut tree: TreeArray<u64> = TreeArray::new(&a, 128 * 8).unwrap();
+        let data: Vec<u64> = (0..128 * 8).map(|i| i as u64 ^ 0xABCD).collect();
+        tree.copy_from_slice(&data).unwrap();
+        let scratch = a.alloc_many(22).unwrap(); // 31/32 live: pressure
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let q = FaultQueue::new(&swap, FaultQueueConfig::default());
+        // SAFETY: cleared below before `q` drops.
+        unsafe { tree.install_faulter(&q) };
+        let registry = TreeRegistry::new();
+        // SAFETY: every accessor below is a fault-capable view and the
+        // faulter is installed.
+        let id = unsafe { registry.register_evictable(&tree) };
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn_with_swap(
+                s,
+                &a,
+                &registry,
+                ThresholdPolicy::default(),
+                cfg_fast(),
+                &q,
+            );
+            wait_for(|| a.stats().retired > 0);
+            // Demand-read the whole tree while leaves are parked: the
+            // view fault hook pulls them back through the queue.
+            let mut v = tree.view();
+            for (i, &want) in data.iter().enumerate() {
+                assert_eq!(v.get(i).unwrap(), want, "demand read under eviction");
+            }
+            assert!(v.faults() > 0, "eviction must have forced demand faults");
+            drop(v);
+            d.shutdown()
+        });
+        assert!(report.actions.evict > 0, "{}", report.summary());
+        assert!(report.fault.demand > 0, "queue must have served misses: {}", report.summary());
+        assert!(!report.victims.is_empty(), "victims must be reported");
+        assert!(report.victims.iter().all(|&(vid, _)| vid == id));
+        assert!(!report.swap_degraded, "healthy backing must not degrade");
+        assert_eq!(registry.swapped_out(), 0, "shutdown restores everything");
+        assert_eq!(tree.to_vec(), data);
+        registry.deregister(id);
+        drop(registry);
+        tree.clear_faulter();
+        for b in scratch {
+            a.free(b).unwrap();
+        }
+        a.epoch().synchronize(&a);
+        drop(tree);
+        drop(swap);
         assert_eq!(a.stats().allocated, 0);
     }
 

@@ -21,9 +21,10 @@
 //!   allocator-defined: shards for the sharded allocator, 512-block
 //!   subtrees for the two-level allocator — so with the latter all
 //!   telemetry is subtree-granular.
-//! * [`policy`] — [`Policy`]/[`ThresholdPolicy`]: maps a snapshot to
-//!   one [`Action`] (compact pool/span, rebalance spans, evict,
-//!   restore, idle). Pluggable; the daemon is generic over it.
+//! * [`policy`] — [`Policy`]/[`ThresholdPolicy`]: maps a snapshot
+//!   (plus fault/contention telemetry in [`PolicyCtx`]) to one
+//!   [`Action`] (compact pool/span, rebalance spans, evict, restore,
+//!   prefetch, idle). Pluggable; the daemon is generic over it.
 //! * [`compactor`] — [`Compactor`]: walks the
 //!   [`TreeRegistry`](crate::trees::TreeRegistry) and executes actions
 //!   through the forwarding machinery
@@ -64,9 +65,14 @@
 //! Registration is the unsafe boundary: `TreeRegistry::register`
 //! (readers only through epoch-registered views, no raw slices, no
 //! writes, daemon is the sole migrator) and `register_evictable`
-//! (additionally no accessors at all). See
-//! [`crate::trees::TreeRegistry`] for the full contracts; everything
-//! downstream in this module inherits them through those two calls.
+//! (additionally: every accessor is **fault-capable** — a
+//! [`TreeView`](crate::trees::TreeView)/`TreeWriter` whose fault hook
+//! brings an evicted leaf back through the tree's installed
+//! [`LeafFaulter`](crate::pmem::LeafFaulter) — so eviction no longer
+//! demands "no accessors at all", only accessors that can take a
+//! software page fault). See [`crate::trees::TreeRegistry`] for the
+//! full contracts; everything downstream in this module inherits them
+//! through those two calls.
 //!
 //! [`ArenaEpoch`]: crate::pmem::ArenaEpoch
 //! [`BlockAlloc::live_snapshot`]: crate::pmem::BlockAlloc::live_snapshot

@@ -9,18 +9,36 @@
 //! [`ThresholdPolicy`] is the shipped implementation, priority-ordered:
 //!
 //! 1. **Swap pressure** — free ratio below the low watermark: evict
-//!    cold leaves of evictable registrations to disk.
-//! 2. **Pressure cleared** — leaves parked in swap and free ratio above
-//!    the high watermark: restore them.
-//! 3. **Pool fragmentation** — score above threshold: compact the pool
+//!    cold leaves of evictable registrations to disk. Gated on the
+//!    fault queue being shallow: a deep queue means demand faults are
+//!    already fighting for swap I/O, and evicting more would add
+//!    traffic *and* likely pick leaves about to fault straight back.
+//! 2. **Demand faulting in progress** — leaves are parked, accessors
+//!    faulted some in last tick, and there is free headroom: *prefetch*
+//!    a few predicted-hot leaves (hottest by last-touch) so the next
+//!    misses hit resident memory. Speculative: runs through a shedding
+//!    gate, never competing with demand I/O.
+//! 3. **Pressure cleared** — leaves parked in swap and free ratio above
+//!    the high watermark: restore them (bulk, hysteresis-bounded).
+//! 4. **Pool fragmentation** — score above threshold: compact the pool
 //!    (sink leaves into the lowest free blocks).
-//! 4. **Span-local fragmentation** — the pool looks fine but one
+//! 5. **Span-local fragmentation** — the pool looks fine but one
 //!    span's free space is shredded: compact inside that span.
-//! 5. **Span imbalance** — occupancy spread above threshold: migrate
+//! 6. **Span imbalance** — occupancy spread above threshold: migrate
 //!    leaves from the fullest span's range into the emptiest's, so
 //!    thread-affine allocation stops degenerating into cross-span
 //!    stealing.
-//! 6. Otherwise **idle**.
+//! 7. Otherwise **idle**.
+//!
+//! Two standing overrides: when the swap backing is **degraded**
+//! (permanent fault-in failures — [`PolicyCtx::swap_degraded`]) every
+//! swap-traffic action (evict/prefetch/restore) is skipped — the daemon
+//! degrades to a compaction-only service and *reports* the state
+//! instead of wedging on a dead device. And when writers ran **hot**
+//! last tick ([`PolicyCtx::lock_waits`] over the threshold), the
+//! compaction family defers to Idle — relocation takes the same per-leaf
+//! seqlocks the writers are already fighting over, so compacting into a
+//! write burst trades application throughput for tidiness.
 //!
 //! "Span" is whatever [`BlockAlloc::shard_spans`] reports: lock shards
 //! for the sharded allocator, 512-block subtrees for the two-level
@@ -65,6 +83,13 @@ pub enum Action {
         /// eviction band (watermark hysteresis).
         leaves: usize,
     },
+    /// Speculatively fault up to `leaves` predicted-hot swapped-out
+    /// leaves back in through the fault queue's shedding prefetch gate
+    /// (dropped, not queued, when demand traffic needs the queue).
+    Prefetch {
+        /// Prefetch budget for this tick.
+        leaves: usize,
+    },
 }
 
 /// What the daemon knows beyond the telemetry sample: the registry's
@@ -78,6 +103,17 @@ pub struct PolicyCtx {
     /// Resident leaves of evictable registrations that eviction could
     /// still take (0 when nothing is evictable or swap is unavailable).
     pub evictable_resident: usize,
+    /// Seqlock acquisitions lost to contention *since the last tick*
+    /// (writer heat — the daemon feeds the registry-wide delta).
+    pub lock_waits: u64,
+    /// Demand fault-ins served *since the last tick* (accessors hitting
+    /// evicted leaves — the signal that prefetching could help).
+    pub demand_faults: u64,
+    /// Current depth of the async fault queue (0 without a queue).
+    pub fault_queue_depth: usize,
+    /// The fault path is failing permanently (retries exhausted on the
+    /// swap backing and no success since). Swap traffic must stop.
+    pub swap_degraded: bool,
 }
 
 /// A daemon policy. `Send` so it can move onto the daemon thread;
@@ -104,6 +140,15 @@ pub struct ThresholdPolicy {
     pub restore_above_free: f64,
     /// Leaves to evict per pressure tick.
     pub evict_leaves: usize,
+    /// Defer compaction/rebalancing while per-tick lock waits exceed
+    /// this (writers are hot; relocation would fight them for the same
+    /// leaf seqlocks).
+    pub writer_waits_hi: u64,
+    /// Do not evict while the fault queue is this deep (demand faults
+    /// already saturate the swap path).
+    pub queue_depth_hi: usize,
+    /// Leaves to prefetch per demand-faulting tick.
+    pub prefetch_leaves: usize,
 }
 
 impl Default for ThresholdPolicy {
@@ -115,6 +160,9 @@ impl Default for ThresholdPolicy {
             evict_below_free: 0.08,
             restore_above_free: 0.25,
             evict_leaves: 8,
+            writer_waits_hi: 64,
+            queue_depth_hi: 4,
+            prefetch_leaves: 4,
         }
     }
 }
@@ -122,35 +170,63 @@ impl Default for ThresholdPolicy {
 impl Policy for ThresholdPolicy {
     fn decide(&mut self, s: &FragSnapshot, ctx: &PolicyCtx) -> Action {
         let free = s.free_ratio();
-        // Evict only when eviction can actually make progress —
-        // otherwise sustained pressure must fall through to compaction
-        // instead of demanding the impossible every tick. Progress
-        // needs (a) evictable resident leaves and (b) limbo that is
-        // draining: evicted blocks are *retired*, not freed, so while a
-        // stalled reader pins a backlog of at least one evict budget,
-        // more eviction only burns swap I/O and TLB shootdowns without
-        // freeing anything.
-        if free < self.evict_below_free
-            && ctx.evictable_resident > 0
-            && s.epoch.limbo < self.evict_leaves
-        {
-            return Action::Evict {
-                leaves: self.evict_leaves,
-            };
-        }
-        if ctx.swapped_out > 0 && free > self.restore_above_free {
-            // Restore only what keeps the pool clear of the eviction
-            // band, with one evict budget of margin: without the cap, a
-            // single restore tick can cross both watermarks and the
-            // evict/restore pair oscillates deterministically (each
-            // cycle costing swap I/O and arena-wide TLB shootdowns).
-            let evict_floor =
-                (self.evict_below_free * s.capacity as f64).ceil() as usize + self.evict_leaves;
-            let headroom = s.free.saturating_sub(evict_floor);
-            let leaves = headroom.min(ctx.swapped_out);
-            if leaves > 0 {
-                return Action::Restore { leaves };
+        // A degraded swap backing (permanent fault failures) makes
+        // every swap-traffic action wrong: eviction would park payloads
+        // behind a device that cannot give them back, restore/prefetch
+        // would burn the retry budget again. Skip straight to the
+        // compaction family — the daemon keeps running and *reports*
+        // the state instead of wedging.
+        if !ctx.swap_degraded {
+            // Evict only when eviction can actually make progress —
+            // otherwise sustained pressure must fall through to
+            // compaction instead of demanding the impossible every
+            // tick. Progress needs (a) evictable resident leaves,
+            // (b) limbo that is draining: evicted blocks are *retired*,
+            // not freed, so while a stalled reader pins a backlog of at
+            // least one evict budget, more eviction only burns swap I/O
+            // and TLB shootdowns without freeing anything, and (c) a
+            // shallow fault queue: deep demand-fault traffic means the
+            // workload is actively using what eviction would take.
+            if free < self.evict_below_free
+                && ctx.evictable_resident > 0
+                && s.epoch.limbo < self.evict_leaves
+                && ctx.fault_queue_depth < self.queue_depth_hi
+            {
+                return Action::Evict {
+                    leaves: self.evict_leaves,
+                };
             }
+            // Demand faults happened last tick and there is headroom:
+            // prefetch a few predicted-hot leaves before considering
+            // bulk restore. Outranks Restore because it is cheap (small
+            // budget, shedding gate) and targeted at the leaves misses
+            // will hit next.
+            if ctx.swapped_out > 0 && ctx.demand_faults > 0 && free > self.restore_above_free {
+                return Action::Prefetch {
+                    leaves: self.prefetch_leaves.min(ctx.swapped_out),
+                };
+            }
+            if ctx.swapped_out > 0 && free > self.restore_above_free {
+                // Restore only what keeps the pool clear of the
+                // eviction band, with one evict budget of margin:
+                // without the cap, a single restore tick can cross both
+                // watermarks and the evict/restore pair oscillates
+                // deterministically (each cycle costing swap I/O and
+                // arena-wide TLB shootdowns).
+                let evict_floor =
+                    (self.evict_below_free * s.capacity as f64).ceil() as usize + self.evict_leaves;
+                let headroom = s.free.saturating_sub(evict_floor);
+                let leaves = headroom.min(ctx.swapped_out);
+                if leaves > 0 {
+                    return Action::Restore { leaves };
+                }
+            }
+        }
+        // Writers hot last tick: the compaction family would contend on
+        // the same leaf seqlocks. Defer — fragmentation keeps; writer
+        // throughput does not.
+        if ctx.lock_waits > self.writer_waits_hi {
+            return Action::Idle;
         }
         if s.score > self.score_hi {
             return Action::CompactPool;
@@ -205,6 +281,7 @@ mod tests {
         PolicyCtx {
             swapped_out,
             evictable_resident,
+            ..Default::default()
         }
     }
 
@@ -291,6 +368,101 @@ mod tests {
     }
 
     #[test]
+    fn degraded_swap_skips_all_swap_traffic() {
+        let mut p = ThresholdPolicy::default();
+        // Hard pressure + evictable leaves: normally Evict…
+        let mut s = snap();
+        s.free = 4;
+        s.live = 96;
+        s.score = 0.9;
+        let mut c = ctx(5, 40);
+        c.swap_degraded = true;
+        // …but a degraded backing must fall through to compaction.
+        assert_eq!(p.decide(&s, &c), Action::CompactPool);
+        // And with pressure cleared, no restore/prefetch either.
+        let s2 = snap();
+        let mut c2 = ctx(5, 40);
+        c2.swap_degraded = true;
+        c2.demand_faults = 3;
+        assert_eq!(p.decide(&s2, &c2), Action::Idle);
+    }
+
+    #[test]
+    fn deep_fault_queue_gates_eviction() {
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.free = 4;
+        s.live = 96;
+        s.score = 0.9;
+        let mut c = ctx(0, 40);
+        c.fault_queue_depth = p.queue_depth_hi; // demand faults saturate
+        assert_eq!(p.decide(&s, &c), Action::CompactPool, "evicting into demand traffic");
+        c.fault_queue_depth = p.queue_depth_hi - 1;
+        assert_eq!(p.decide(&s, &c), Action::Evict { leaves: 8 });
+    }
+
+    #[test]
+    fn demand_faults_trigger_prefetch_before_restore() {
+        let mut p = ThresholdPolicy::default();
+        let s = snap(); // 60% free: plenty of headroom
+        let mut c = ctx(10, 30);
+        c.demand_faults = 2;
+        assert_eq!(p.decide(&s, &c), Action::Prefetch { leaves: 4 });
+        // Budget never exceeds what is actually parked.
+        let mut c2 = ctx(2, 30);
+        c2.demand_faults = 1;
+        assert_eq!(p.decide(&s, &c2), Action::Prefetch { leaves: 2 });
+        // No demand faults last tick: bulk restore as before.
+        assert_eq!(p.decide(&s, &ctx(10, 30)), Action::Restore { leaves: 10 });
+    }
+
+    #[test]
+    fn hot_writers_defer_compaction_not_swap_relief() {
+        let mut p = ThresholdPolicy::default();
+        // Fragmented pool + hot writers: defer.
+        let mut s = snap();
+        s.score = 0.9;
+        let mut c = ctx(0, 0);
+        c.lock_waits = p.writer_waits_hi + 1;
+        assert_eq!(p.decide(&s, &c), Action::Idle, "compaction must defer on hot writers");
+        // Swap pressure outranks writer heat — running out of memory is
+        // worse than a contended tick.
+        s.free = 4;
+        s.live = 96;
+        let mut c2 = ctx(0, 40);
+        c2.lock_waits = p.writer_waits_hi + 1;
+        assert_eq!(p.decide(&s, &c2), Action::Evict { leaves: 8 });
+    }
+
+    #[test]
+    fn writer_heat_sequence_defers_then_resumes_deterministically() {
+        // Satellite: the full deterministic sequence — a fragmented
+        // pool, writers hot for 3 ticks, then cooling. The policy must
+        // emit Idle exactly while the per-tick wait delta is over
+        // threshold and CompactPool on every other tick.
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.score = 0.9;
+        let heat: [u64; 6] = [0, 200, 90, 70, 10, 0];
+        let expect: Vec<Action> = heat
+            .iter()
+            .map(|&w| if w > p.writer_waits_hi { Action::Idle } else { Action::CompactPool })
+            .collect();
+        let got: Vec<Action> = heat
+            .iter()
+            .map(|&w| {
+                let mut c = ctx(0, 0);
+                c.lock_waits = w;
+                p.decide(&s, &c)
+            })
+            .collect();
+        assert_eq!(got, expect, "deferral must track the wait delta exactly");
+        assert_eq!(got[0], Action::CompactPool);
+        assert_eq!(got[1], Action::Idle);
+        assert_eq!(got[5], Action::CompactPool);
+    }
+
+    #[test]
     fn score_triggers_pool_compaction() {
         let mut p = ThresholdPolicy::default();
         let mut s = snap();
@@ -350,6 +522,7 @@ mod tests {
             let ctx = PolicyCtx {
                 swapped_out: self.swapped,
                 evictable_resident: self.evictable_resident,
+                ..Default::default()
             };
             (s, ctx)
         }

@@ -1,0 +1,637 @@
+//! The software page-fault queue: asynchronous swap I/O with bounded
+//! depth, retry with exponential backoff, and permanent-failure
+//! escalation.
+//!
+//! Without virtual memory there is no hardware page-fault mechanism to
+//! lean on (the paper's premise): when an accessor touches an evicted
+//! leaf, *software* must notice, read the payload back, and splice it
+//! into the tree — and it must do so correctly under concurrency and
+//! under I/O failure. This module is the I/O half of that story; the
+//! splice half lives in [`crate::trees`] (the view/writer fault hooks
+//! adopt the faulted block under the leaf's seqlock).
+//!
+//! # Pieces
+//!
+//! * [`SwapService`] / [`LeafFaulter`] — the type-erased swap surface.
+//!   [`SwapPool`] implements both (inline, synchronous); the daemon,
+//!   compactor, and tree fault hooks are written against the traits so
+//!   the same code runs over a bare pool or over a [`FaultQueue`].
+//! * [`FaultQueue`] — a small I/O dispatcher over any [`SwapService`].
+//!   With no workers attached it executes fault-ins **inline** on the
+//!   calling thread (still with retry/backoff/escalation — the default
+//!   for tests and single-threaded use). [`FaultQueue::attach_workers`]
+//!   adds a bounded-depth request queue drained by scoped worker
+//!   threads, so concurrent demand faults from many accessor threads
+//!   are throttled to a fixed I/O parallelism.
+//!
+//! # Failure model
+//!
+//! Each request makes up to [`FaultQueueConfig::max_retries`] attempts:
+//!
+//! * **Transient** backing errors ([`Error::Io`]) sleep an
+//!   exponentially growing backoff and retry — the underlying
+//!   [`SwapPool::fault`] is failure-atomic, so the slot's payload is
+//!   intact across a failed attempt.
+//! * **Memory pressure** ([`Error::OutOfMemory`]) runs a
+//!   [`SwapService::reclaim`] pass (evicted blocks may be sitting in
+//!   epoch limbo) and retries under the same budget.
+//! * Exhausting the budget on I/O errors **escalates**: the queue
+//!   marks itself [`FaultQueue::degraded`] and surfaces the typed
+//!   [`Error::SwapFaultFailed`] — never a panic, never a wedge; the
+//!   slot stays resident, so the fault can be retried after the
+//!   backing recovers (a later success clears the degraded flag).
+//!   Other errors (not-resident, coalesced-by-peer) pass through
+//!   unchanged.
+//!
+//! # Timeout accounting
+//!
+//! Blocking I/O cannot be cancelled, so there are no hard deadlines;
+//! instead every request's wall-clock duration is recorded
+//! ([`FaultStats::total_ns`] / [`FaultStats::max_ns`]) and requests
+//! slower than [`FaultQueueConfig::slow_fault`] are counted
+//! ([`FaultStats::slow_faults`]) — the mmd policy reads these to
+//! throttle eviction when the backing store is slow.
+//!
+//! # Bounded depth
+//!
+//! The queue never wedges on its own limit: a **demand** fault that
+//! finds the queue full runs inline on the requester's thread
+//! ([`FaultStats::shed_inline`]); a **prefetch** (speculative, via
+//! [`FaultQueue::prefetch_gate`]) is dropped instead
+//! ([`FaultStats::shed_prefetch`]) — speculation must never steal I/O
+//! slots from demand misses.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::pmem::swap::{SwapBacking, SwapPool, SwapSlot};
+use crate::pmem::{BlockAlloc, BlockId};
+
+/// The type-erased eviction surface: what the mmd compactor needs to
+/// push a leaf out. Implemented by [`SwapPool`] (over any allocator and
+/// backing), so daemon code is not generic over either.
+pub trait SwapService: Sync {
+    /// Evict `block` under live readers: payload to the backing store,
+    /// physical block retired into epoch limbo.
+    fn evict_deferred(&self, block: BlockId) -> Result<SwapSlot>;
+
+    /// Read `slot`'s payload back into a fresh block (synchronous; the
+    /// slot is released on success). Failure-atomic per
+    /// [`SwapPool::fault`].
+    fn fault(&self, slot: SwapSlot) -> Result<BlockId>;
+
+    /// One non-blocking epoch-reclaim pass (frees limbo blocks whose
+    /// readers have quiesced). Called between `OutOfMemory` retries.
+    fn reclaim(&self);
+}
+
+/// The type-erased fault-in surface: what a tree fault hook (or the
+/// daemon's restore/prefetch pass) needs to bring one slot back.
+/// Implemented by [`SwapPool`] (inline I/O on the calling thread) and
+/// by [`FaultQueue`] (queued I/O with retry/backoff/escalation).
+pub trait LeafFaulter: Sync {
+    /// Fault `slot` back in; on success the returned block holds the
+    /// payload and ownership transfers to the caller.
+    fn fault_in(&self, slot: SwapSlot) -> Result<BlockId>;
+}
+
+impl<A: BlockAlloc + Sync, B: SwapBacking> SwapService for SwapPool<'_, A, B> {
+    fn evict_deferred(&self, block: BlockId) -> Result<SwapSlot> {
+        SwapPool::evict_deferred(self, block)
+    }
+
+    fn fault(&self, slot: SwapSlot) -> Result<BlockId> {
+        SwapPool::fault(self, slot)
+    }
+
+    fn reclaim(&self) {
+        SwapPool::reclaim(self);
+    }
+}
+
+impl<A: BlockAlloc + Sync, B: SwapBacking> LeafFaulter for SwapPool<'_, A, B> {
+    fn fault_in(&self, slot: SwapSlot) -> Result<BlockId> {
+        SwapPool::fault(self, slot)
+    }
+}
+
+/// Tunables for a [`FaultQueue`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultQueueConfig {
+    /// Queued requests beyond this shed (inline for demand, dropped for
+    /// prefetch). Only meaningful with workers attached.
+    pub max_depth: usize,
+    /// I/O attempts per request (≥ 1) before permanent escalation.
+    pub max_retries: u32,
+    /// First retry's backoff sleep; doubles per retry.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Requests slower than this count as [`FaultStats::slow_faults`].
+    pub slow_fault: Duration,
+}
+
+impl Default for FaultQueueConfig {
+    fn default() -> Self {
+        FaultQueueConfig {
+            max_depth: 16,
+            max_retries: 4,
+            backoff_base: Duration::from_micros(100),
+            backoff_cap: Duration::from_millis(10),
+            slow_fault: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Counters a [`FaultQueue`] keeps (all monotonic except `depth_hw`,
+/// which is a high-water mark).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Successful fault-ins executed by the queue (demand + prefetch).
+    pub faults: u64,
+    /// Demand fault-ins requested ([`LeafFaulter::fault_in`] calls).
+    pub demand: u64,
+    /// Attempts retried after a transient error.
+    pub retries: u64,
+    /// Requests escalated to [`Error::SwapFaultFailed`].
+    pub permanent: u64,
+    /// Demand faults run on the requester's thread because the queue
+    /// was full.
+    pub shed_inline: u64,
+    /// Prefetches dropped because the queue was full or degraded.
+    pub shed_prefetch: u64,
+    /// Requests slower than [`FaultQueueConfig::slow_fault`].
+    pub slow_faults: u64,
+    /// Deepest the request queue has been.
+    pub depth_hw: usize,
+    /// Total wall-clock nanoseconds spent in fault execution.
+    pub total_ns: u64,
+    /// Slowest single request in nanoseconds.
+    pub max_ns: u64,
+}
+
+impl FaultStats {
+    /// Mean fault-in latency in nanoseconds (0 when nothing completed).
+    pub fn mean_ns(&self) -> u64 {
+        if self.faults == 0 {
+            0
+        } else {
+            self.total_ns / self.faults
+        }
+    }
+}
+
+struct QState {
+    /// Pending requests: `(request id, raw slot)`.
+    queue: VecDeque<(u64, u64)>,
+    /// Finished requests awaiting pickup by their requester.
+    completions: HashMap<u64, Result<BlockId>>,
+    next_id: u64,
+    /// Attached worker count; 0 = inline mode.
+    workers: usize,
+    shutdown: bool,
+}
+
+/// The asynchronous swap-in dispatcher. See the module docs for the
+/// execution/failure model. `'p` ties the queue to the
+/// [`SwapService`] it drains into.
+pub struct FaultQueue<'p> {
+    svc: &'p dyn SwapService,
+    cfg: FaultQueueConfig,
+    state: Mutex<QState>,
+    /// Workers park here waiting for requests.
+    work_cv: Condvar,
+    /// Requesters park here waiting for their completion.
+    done_cv: Condvar,
+    degraded: AtomicBool,
+    s_faults: AtomicU64,
+    s_demand: AtomicU64,
+    s_retries: AtomicU64,
+    s_permanent: AtomicU64,
+    s_shed_inline: AtomicU64,
+    s_shed_prefetch: AtomicU64,
+    s_slow: AtomicU64,
+    s_depth_hw: AtomicUsize,
+    s_total_ns: AtomicU64,
+    s_max_ns: AtomicU64,
+}
+
+impl<'p> FaultQueue<'p> {
+    /// A queue over `svc` with the given tunables, in **inline** mode
+    /// (no workers: every request executes on the calling thread, with
+    /// the full retry/backoff/escalation machinery).
+    pub fn new(svc: &'p dyn SwapService, cfg: FaultQueueConfig) -> Self {
+        FaultQueue {
+            svc,
+            cfg,
+            state: Mutex::new(QState {
+                queue: VecDeque::new(),
+                completions: HashMap::new(),
+                next_id: 0,
+                workers: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            degraded: AtomicBool::new(false),
+            s_faults: AtomicU64::new(0),
+            s_demand: AtomicU64::new(0),
+            s_retries: AtomicU64::new(0),
+            s_permanent: AtomicU64::new(0),
+            s_shed_inline: AtomicU64::new(0),
+            s_shed_prefetch: AtomicU64::new(0),
+            s_slow: AtomicU64::new(0),
+            s_depth_hw: AtomicUsize::new(0),
+            s_total_ns: AtomicU64::new(0),
+            s_max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// The service this queue drains into (the daemon evicts through
+    /// the same service its fault queue faults from).
+    pub fn service(&self) -> &'p dyn SwapService {
+        self.svc
+    }
+
+    /// Spawn `n` scoped worker threads draining the request queue.
+    /// Until [`FaultQueue::shutdown_workers`] runs, requests enqueue
+    /// (bounded by [`FaultQueueConfig::max_depth`]) and requesters
+    /// block on their completion — so many accessor threads share a
+    /// fixed I/O parallelism.
+    ///
+    /// Call `shutdown_workers` before the scope ends or the scope's
+    /// implicit join will wait forever on the parked workers.
+    pub fn attach_workers<'scope, 'env>(
+        &'env self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        n: usize,
+    ) {
+        self.state.lock().unwrap().workers += n;
+        for _ in 0..n {
+            scope.spawn(move || self.worker_loop());
+        }
+    }
+
+    /// Stop the workers: the queue drains outstanding requests, parked
+    /// workers exit, and subsequent requests execute inline. Idempotent.
+    pub fn shutdown_workers(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        st.workers = 0;
+        drop(st);
+        self.work_cv.notify_all();
+    }
+
+    /// Has any request exhausted its retries since the last success?
+    /// (Sticky across failures, cleared by the next successful
+    /// fault-in: the mmd policy reads this as `swap_degraded` and stops
+    /// evicting while it holds.)
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently queued (excludes in-flight executions).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            faults: self.s_faults.load(Ordering::Relaxed),
+            demand: self.s_demand.load(Ordering::Relaxed),
+            retries: self.s_retries.load(Ordering::Relaxed),
+            permanent: self.s_permanent.load(Ordering::Relaxed),
+            shed_inline: self.s_shed_inline.load(Ordering::Relaxed),
+            shed_prefetch: self.s_shed_prefetch.load(Ordering::Relaxed),
+            slow_faults: self.s_slow.load(Ordering::Relaxed),
+            depth_hw: self.s_depth_hw.load(Ordering::Relaxed),
+            total_ns: self.s_total_ns.load(Ordering::Relaxed),
+            max_ns: self.s_max_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A [`LeafFaulter`] view of this queue with **prefetch** shedding:
+    /// requests through the gate are dropped (typed error, counted)
+    /// when the queue is full or degraded, so speculative swap-ins
+    /// never compete with demand misses for I/O slots.
+    pub fn prefetch_gate(&self) -> PrefetchGate<'_, 'p> {
+        PrefetchGate(self)
+    }
+
+    /// Enqueue (or, in inline mode, execute) one fault-in request and
+    /// wait for its result.
+    fn request(&self, slot: SwapSlot) -> Result<BlockId> {
+        let id = {
+            let mut st = self.state.lock().unwrap();
+            if st.workers == 0 || st.shutdown {
+                drop(st);
+                return self.execute(slot);
+            }
+            if st.queue.len() >= self.cfg.max_depth {
+                drop(st);
+                // Bounded depth, no wedging: overflow demand runs on
+                // the requester's own thread.
+                self.s_shed_inline.fetch_add(1, Ordering::Relaxed);
+                return self.execute(slot);
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.queue.push_back((id, slot.raw()));
+            self.s_depth_hw.fetch_max(st.queue.len(), Ordering::Relaxed);
+            id
+        };
+        self.work_cv.notify_one();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(res) = st.completions.remove(&id) {
+                return res;
+            }
+            st = self.done_cv.wait(st).unwrap();
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let (id, raw) = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(req) = st.queue.pop_front() {
+                        break req;
+                    }
+                    if st.shutdown {
+                        return; // queue drained, workers released
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            };
+            let res = self.execute(SwapSlot::from_raw(raw));
+            self.state.lock().unwrap().completions.insert(id, res);
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// One request: retry loop + backoff + escalation + accounting.
+    fn execute(&self, slot: SwapSlot) -> Result<BlockId> {
+        let start = Instant::now();
+        let mut attempts = 0u32;
+        let mut backoff = self.cfg.backoff_base;
+        let budget = self.cfg.max_retries.max(1);
+        let res = loop {
+            attempts += 1;
+            match self.svc.fault(slot) {
+                Ok(b) => break Ok(b),
+                Err(e @ (Error::Io(_) | Error::OutOfMemory { .. })) => {
+                    if attempts >= budget {
+                        if matches!(e, Error::Io(_)) {
+                            // Permanent escalation: typed error, sticky
+                            // degraded flag. The slot is still resident
+                            // (fault is failure-atomic), so recovery is
+                            // a later retry, not data loss.
+                            self.degraded.store(true, Ordering::Relaxed);
+                            self.s_permanent.fetch_add(1, Ordering::Relaxed);
+                            break Err(Error::SwapFaultFailed {
+                                slot: slot.raw(),
+                                attempts,
+                            });
+                        }
+                        // OOM with no memory to reclaim is pressure,
+                        // not a backing failure: pass it through.
+                        break Err(e);
+                    }
+                    self.s_retries.fetch_add(1, Ordering::Relaxed);
+                    if matches!(e, Error::OutOfMemory { .. }) {
+                        // The arena may be full of limbo blocks whose
+                        // readers have quiesced; reclaim before the
+                        // next allocation attempt.
+                        self.svc.reclaim();
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(self.cfg.backoff_cap);
+                }
+                // Not-resident / coalesced-by-peer and friends are
+                // answers, not failures: pass through unretried.
+                Err(e) => break Err(e),
+            }
+        };
+        let dur = start.elapsed();
+        let ns = dur.as_nanos() as u64;
+        self.s_total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.s_max_ns.fetch_max(ns, Ordering::Relaxed);
+        if dur > self.cfg.slow_fault {
+            self.s_slow.fetch_add(1, Ordering::Relaxed);
+        }
+        if res.is_ok() {
+            self.s_faults.fetch_add(1, Ordering::Relaxed);
+            // Recovery: the backing is serving reads again.
+            self.degraded.store(false, Ordering::Relaxed);
+        }
+        res
+    }
+}
+
+impl LeafFaulter for FaultQueue<'_> {
+    fn fault_in(&self, slot: SwapSlot) -> Result<BlockId> {
+        self.s_demand.fetch_add(1, Ordering::Relaxed);
+        self.request(slot)
+    }
+}
+
+/// The prefetch-side [`LeafFaulter`] over a [`FaultQueue`]: sheds
+/// (typed error + counter) instead of queueing when the queue is full
+/// or degraded. See [`FaultQueue::prefetch_gate`].
+pub struct PrefetchGate<'q, 'p>(&'q FaultQueue<'p>);
+
+impl LeafFaulter for PrefetchGate<'_, '_> {
+    fn fault_in(&self, slot: SwapSlot) -> Result<BlockId> {
+        let q = self.0;
+        if q.degraded() || q.depth() >= q.cfg.max_depth {
+            q.s_shed_prefetch.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Config("fault queue busy: prefetch shed".into()));
+        }
+        q.request(slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+    use crate::testutil::FailingBacking;
+
+    fn quick_cfg() -> FaultQueueConfig {
+        FaultQueueConfig {
+            max_retries: 3,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_micros(400),
+            ..FaultQueueConfig::default()
+        }
+    }
+
+    #[test]
+    fn transient_failure_retries_and_succeeds() {
+        let a = BlockAllocator::new(1024, 4).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"retry me").unwrap();
+        let slot = swap.evict(b).unwrap();
+        let q = FaultQueue::new(&swap, quick_cfg());
+        ctl.fail_nth(1); // first read fails, retry reads clean
+        let nb = q.fault_in(slot).unwrap();
+        let mut out = [0u8; 8];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"retry me");
+        let st = q.stats();
+        assert_eq!(st.retries, 1, "one transient error, one retry");
+        assert_eq!(st.faults, 1);
+        assert_eq!(st.demand, 1);
+        assert!(!q.degraded());
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn permanent_failure_escalates_typed_and_recovers() {
+        let a = BlockAllocator::new(1024, 4).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"survive").unwrap();
+        let slot = swap.evict(b).unwrap();
+        let q = FaultQueue::new(&swap, quick_cfg());
+        ctl.fail_always();
+        match q.fault_in(slot) {
+            Err(Error::SwapFaultFailed { attempts, .. }) => {
+                assert_eq!(attempts, 3, "must burn the whole retry budget")
+            }
+            other => panic!("expected SwapFaultFailed, got {other:?}"),
+        }
+        assert!(q.degraded(), "exhausted retries must mark the queue degraded");
+        assert_eq!(q.stats().permanent, 1);
+        assert_eq!(swap.stats().resident_slots, 1, "payload must survive escalation");
+        assert_eq!(a.stats().allocated, 0, "failed fault must not leak blocks");
+        // Backing recovers: the same slot faults in and the flag clears.
+        ctl.disarm();
+        let nb = q.fault_in(slot).unwrap();
+        assert!(!q.degraded(), "a success must clear the degraded flag");
+        let mut out = [0u8; 7];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"survive");
+        a.free(nb).unwrap();
+    }
+
+    #[test]
+    fn oom_retries_after_reclaiming_limbo() {
+        // The arena is "full" only because the evicted block sits in
+        // limbo: the queue's OOM retry path reclaims and succeeds.
+        let a = BlockAllocator::new(1024, 2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"limbo").unwrap();
+        let slot = swap.evict_deferred(b).unwrap(); // b retired, still allocated
+        let hog = a.alloc().unwrap(); // pool now exhausted
+        let q = FaultQueue::new(&swap, quick_cfg());
+        let nb = q.fault_in(slot).expect("OOM retry must reclaim limbo and succeed");
+        assert!(q.stats().retries >= 1);
+        let mut out = [0u8; 5];
+        a.read(nb, 0, &mut out).unwrap();
+        assert_eq!(&out, b"limbo");
+        a.free(nb).unwrap();
+        a.free(hog).unwrap();
+    }
+
+    #[test]
+    fn workers_serve_concurrent_demand() {
+        let a = BlockAllocator::new(512, 16).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut slots = Vec::new();
+        for i in 0..6u32 {
+            let b = a.alloc().unwrap();
+            a.write(b, 0, &i.to_le_bytes()).unwrap();
+            slots.push(swap.evict(b).unwrap());
+        }
+        let q = FaultQueue::new(&swap, quick_cfg());
+        std::thread::scope(|s| {
+            q.attach_workers(s, 2);
+            let got: Vec<_> = {
+                let handles: Vec<_> = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &slot)| {
+                        let q = &q;
+                        let a = &a;
+                        s.spawn(move || {
+                            let b = q.fault_in(slot).unwrap();
+                            let mut out = [0u8; 4];
+                            a.read(b, 0, &mut out).unwrap();
+                            assert_eq!(u32::from_le_bytes(out), i as u32);
+                            b
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            };
+            for b in got {
+                a.free(b).unwrap();
+            }
+            q.shutdown_workers();
+        });
+        let st = q.stats();
+        assert_eq!(st.faults, 6);
+        assert_eq!(st.demand, 6);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn full_queue_sheds_demand_inline_and_drops_prefetch() {
+        let a = BlockAllocator::new(512, 4).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"shed").unwrap();
+        let slot = swap.evict(b).unwrap();
+        let cfg = FaultQueueConfig {
+            max_depth: 0, // always "full": deterministic shed paths
+            ..quick_cfg()
+        };
+        let q = FaultQueue::new(&swap, cfg);
+        std::thread::scope(|s| {
+            q.attach_workers(s, 1);
+            // Prefetch is dropped, not queued — and the slot survives.
+            assert!(q.prefetch_gate().fault_in(slot).is_err());
+            assert_eq!(q.stats().shed_prefetch, 1);
+            assert_eq!(swap.stats().resident_slots, 1);
+            // Demand runs inline on this thread instead of waiting.
+            let nb = q.fault_in(slot).unwrap();
+            assert_eq!(q.stats().shed_inline, 1);
+            let mut out = [0u8; 4];
+            a.read(nb, 0, &mut out).unwrap();
+            assert_eq!(&out, b"shed");
+            a.free(nb).unwrap();
+            q.shutdown_workers();
+        });
+    }
+
+    #[test]
+    fn latency_accounting_counts_slow_faults() {
+        let a = BlockAllocator::new(512, 4).unwrap();
+        let (backing, ctl) = FailingBacking::new();
+        let swap = SwapPool::with_backing(&a, backing);
+        let b = a.alloc().unwrap();
+        let slot = swap.evict(b).unwrap();
+        let cfg = FaultQueueConfig {
+            slow_fault: Duration::from_millis(2),
+            ..quick_cfg()
+        };
+        let q = FaultQueue::new(&swap, cfg);
+        ctl.delay_all(Duration::from_millis(5));
+        let nb = q.fault_in(slot).unwrap();
+        let st = q.stats();
+        assert_eq!(st.slow_faults, 1, "a 5 ms fault must count against a 2 ms threshold");
+        assert!(st.max_ns >= 2_000_000);
+        assert!(st.mean_ns() > 0);
+        a.free(nb).unwrap();
+    }
+}

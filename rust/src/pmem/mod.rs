@@ -38,6 +38,7 @@ mod allocator;
 mod arena;
 mod block;
 pub mod epoch;
+pub mod faultq;
 pub mod migrate;
 pub mod protect;
 mod region;
@@ -50,6 +51,7 @@ pub use alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
 pub use allocator::BlockAllocator;
 pub use block::BlockId;
 pub use epoch::{ArenaEpoch, EpochStats, ReaderSlot};
+pub use faultq::{FaultQueue, FaultQueueConfig, FaultStats, LeafFaulter, PrefetchGate, SwapService};
 pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;

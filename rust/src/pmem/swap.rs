@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
 use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
@@ -50,6 +50,23 @@ impl SwapBacking for FileBacking {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SwapSlot(u64);
 
+impl SwapSlot {
+    /// The raw slot index — what the per-leaf swap words and the typed
+    /// fault errors carry (crate-internal: slot handles stay opaque to
+    /// library users).
+    #[inline]
+    pub(crate) fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a handle from a raw index previously taken with
+    /// [`SwapSlot::raw`] (crate-internal).
+    #[inline]
+    pub(crate) fn from_raw(raw: u64) -> Self {
+        SwapSlot(raw)
+    }
+}
+
 /// Swap statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SwapStats {
@@ -57,16 +74,34 @@ pub struct SwapStats {
     pub evictions: u64,
     /// Blocks faulted back in.
     pub faults: u64,
+    /// Fault calls that found the slot's I/O already in flight and
+    /// waited on the peer instead of issuing a duplicate read.
+    pub coalesced: u64,
     /// Slots currently on disk.
     pub resident_slots: usize,
 }
 
-struct Inner<B: SwapBacking> {
-    backing: B,
+/// Per-slot state machine: a resident slot holds a payload on disk; a
+/// slot whose fault I/O is in flight is *claimed* — concurrent faults
+/// for it park on the pool's condvar and coalesce onto the one read
+/// (the duplicate either reports the peer's completion or, if the peer
+/// failed, inherits the claim and retries the I/O itself).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    Resident,
+    FaultInFlight,
+}
+
+/// Slot bookkeeping, deliberately separate from the backing store: the
+/// `meta` mutex is only ever held for map/counter updates, while the
+/// `io` mutex is held across actual backing reads/writes — so state
+/// transitions (and in particular the [`SlotState::FaultInFlight`]
+/// claim/park protocol) stay observable while an I/O is in flight.
+struct Meta {
     /// Free slot indices in the backing (reused before extending).
     free_slots: Vec<u64>,
     next_slot: u64,
-    live: HashMap<u64, ()>,
+    live: HashMap<u64, SlotState>,
     stats: SwapStats,
 }
 
@@ -74,7 +109,11 @@ struct Inner<B: SwapBacking> {
 /// [`SwapBacking`] store (a file by default).
 pub struct SwapPool<'a, A: BlockAlloc = BlockAllocator, B: SwapBacking = FileBacking> {
     alloc: &'a A,
-    inner: Mutex<Inner<B>>,
+    io: Mutex<B>,
+    meta: Mutex<Meta>,
+    /// Signalled on every fault completion (success or failure) so
+    /// coalesced waiters re-examine the slot.
+    cv: Condvar,
 }
 
 impl<'a, A: BlockAlloc> SwapPool<'a, A> {
@@ -110,13 +149,14 @@ impl<'a, A: BlockAlloc, B: SwapBacking> SwapPool<'a, A, B> {
     pub fn with_backing(alloc: &'a A, backing: B) -> Self {
         SwapPool {
             alloc,
-            inner: Mutex::new(Inner {
-                backing,
+            io: Mutex::new(backing),
+            meta: Mutex::new(Meta {
                 free_slots: Vec::new(),
                 next_slot: 0,
                 live: HashMap::new(),
                 stats: SwapStats::default(),
             }),
+            cv: Condvar::new(),
         }
     }
 
@@ -136,22 +176,29 @@ impl<'a, A: BlockAlloc, B: SwapBacking> SwapPool<'a, A, B> {
         let bs = self.alloc.block_size();
         let mut buf = vec![0u8; bs];
         self.alloc.read(block, 0, &mut buf)?;
-        let mut g = self.inner.lock().unwrap();
-        let slot = g.free_slots.pop().unwrap_or_else(|| {
-            let s = g.next_slot;
-            g.next_slot += 1;
-            s
-        });
-        if let Err(e) = g.backing.write_at(slot * bs as u64, &buf) {
+        // Claim a slot under `meta`, write under `io`: the slot is in
+        // neither `live` nor `free_slots` during the write, so no
+        // concurrent evict or fault can touch it, and the unpublished
+        // handle means no fault for it can arrive before we record it.
+        let slot = {
+            let mut m = self.meta.lock().unwrap();
+            m.free_slots.pop().unwrap_or_else(|| {
+                let s = m.next_slot;
+                m.next_slot += 1;
+                s
+            })
+        };
+        let wrote = self.io.lock().unwrap().write_at(slot * bs as u64, &buf);
+        if let Err(e) = wrote {
             // Failure-atomic like `fault`: return the slot to the free
-            // list instead of leaking it (it is in neither `live` nor
-            // `free_slots` here), so retried evictions reuse it.
-            g.free_slots.push(slot);
+            // list instead of leaking it, so retried evictions reuse it.
+            self.meta.lock().unwrap().free_slots.push(slot);
             return Err(e.into());
         }
-        g.live.insert(slot, ());
-        g.stats.evictions += 1;
-        g.stats.resident_slots = g.live.len();
+        let mut m = self.meta.lock().unwrap();
+        m.live.insert(slot, SlotState::Resident);
+        m.stats.evictions += 1;
+        m.stats.resident_slots = m.live.len();
         Ok(slot)
     }
 
@@ -196,36 +243,73 @@ impl<'a, A: BlockAlloc, B: SwapBacking> SwapPool<'a, A, B> {
     /// pool is exhausted the fault fails cleanly and the slot stays
     /// resident (retry after freeing memory), instead of losing the
     /// payload.
+    ///
+    /// **Coalescing**: a fault for a slot whose I/O is already in
+    /// flight ([`SlotState::FaultInFlight`]) does not issue a second
+    /// read — it parks on the pool's condvar until the peer completes.
+    /// If the peer succeeded, the duplicate returns an error (the slot
+    /// is gone; its payload now lives in the *peer's* block — callers
+    /// on the tree fault path re-check the leaf's swap word and find it
+    /// restored). If the peer failed, the waiter inherits the claim and
+    /// retries the I/O itself.
     pub fn fault(&self, slot: SwapSlot) -> Result<BlockId> {
         let bs = self.alloc.block_size();
+        // Claim the slot (or coalesce on a peer's in-flight fault).
+        let mut coalesced = false;
         {
-            // Cheap pre-check so an invalid slot errors without burning
-            // an allocation.
-            let g = self.inner.lock().unwrap();
-            if !g.live.contains_key(&slot.0) {
-                return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
+            let mut m = self.meta.lock().unwrap();
+            loop {
+                match m.live.get(&slot.0) {
+                    Some(SlotState::Resident) => {
+                        m.live.insert(slot.0, SlotState::FaultInFlight);
+                        break;
+                    }
+                    Some(SlotState::FaultInFlight) => {
+                        if !coalesced {
+                            m.stats.coalesced += 1;
+                            coalesced = true;
+                        }
+                        m = self.cv.wait(m).unwrap();
+                    }
+                    None => {
+                        return Err(Error::Artifact(if coalesced {
+                            format!("swap slot {} faulted in by a concurrent fault", slot.0)
+                        } else {
+                            format!("swap slot {} not resident", slot.0)
+                        }));
+                    }
+                }
             }
         }
-        let fresh = self.alloc.alloc()?;
+        // The claim is ours: every exit below must either complete the
+        // fault (slot removed) or revert the slot to Resident, and must
+        // notify the condvar so coalesced waiters re-examine it.
+        let fresh = match self.alloc.alloc() {
+            Ok(f) => f,
+            Err(e) => {
+                self.meta.lock().unwrap().live.insert(slot.0, SlotState::Resident);
+                self.cv.notify_all();
+                return Err(e);
+            }
+        };
         let mut buf = vec![0u8; bs];
-        {
-            let mut g = self.inner.lock().unwrap();
-            if g.live.remove(&slot.0).is_none() {
-                // Lost a double-fault race; return the speculative block.
-                let _ = self.alloc.free(fresh);
-                return Err(Error::Artifact(format!("swap slot {} not resident", slot.0)));
-            }
-            if let Err(e) = g.backing.read_at(slot.0 * bs as u64, &mut buf) {
-                // I/O failure: keep the slot resident, free the block.
-                g.live.insert(slot.0, ());
-                drop(g);
-                let _ = self.alloc.free(fresh);
-                return Err(e.into());
-            }
-            g.free_slots.push(slot.0);
-            g.stats.faults += 1;
-            g.stats.resident_slots = g.live.len();
+        let read = self.io.lock().unwrap().read_at(slot.0 * bs as u64, &mut buf);
+        if let Err(e) = read {
+            // I/O failure: keep the slot resident, free the block.
+            let _ = self.alloc.free(fresh);
+            self.meta.lock().unwrap().live.insert(slot.0, SlotState::Resident);
+            self.cv.notify_all();
+            return Err(e.into());
         }
+        {
+            let mut m = self.meta.lock().unwrap();
+            let claimed = m.live.remove(&slot.0);
+            debug_assert_eq!(claimed, Some(SlotState::FaultInFlight));
+            m.free_slots.push(slot.0);
+            m.stats.faults += 1;
+            m.stats.resident_slots = m.live.len();
+        }
+        self.cv.notify_all();
         self.alloc.write(fresh, 0, &buf)?;
         // No epoch bump here: the relocation's shootdown happened at
         // evict() (that is when the old translation died); `fresh` is a
@@ -236,7 +320,16 @@ impl<'a, A: BlockAlloc, B: SwapBacking> SwapPool<'a, A, B> {
 
     /// Statistics snapshot.
     pub fn stats(&self) -> SwapStats {
-        self.inner.lock().unwrap().stats
+        self.meta.lock().unwrap().stats
+    }
+
+    /// Run one non-blocking epoch-reclaim pass over the pool's arena.
+    /// The fault path allocates before reading; when the arena is full
+    /// of *limbo* blocks (evicted-but-unreclaimed), this is what turns
+    /// an `OutOfMemory` fault into a retryable condition — the fault
+    /// queue calls it between OOM retries.
+    pub fn reclaim(&self) -> usize {
+        self.alloc.epoch().try_reclaim(self.alloc)
     }
 }
 
@@ -288,6 +381,35 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_faults_on_one_slot_coalesce_to_one_io() {
+        // N threads race to fault the same slot: exactly one wins the
+        // payload (one I/O, one fresh block), the rest either park on
+        // the FaultInFlight claim or arrive after completion — in every
+        // interleaving they get a typed error, never a duplicate block
+        // or a lost payload.
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let b = a.alloc().unwrap();
+        a.write(b, 0, b"one copy").unwrap();
+        let slot = swap.evict(b).unwrap();
+        let wins: Vec<Option<BlockId>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| swap.fault(slot).ok()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let winners: Vec<BlockId> = wins.into_iter().flatten().collect();
+        assert_eq!(winners.len(), 1, "exactly one fault may win the slot");
+        assert_eq!(swap.stats().faults, 1);
+        assert_eq!(swap.stats().resident_slots, 0);
+        let mut out = [0u8; 8];
+        a.read(winners[0], 0, &mut out).unwrap();
+        assert_eq!(&out, b"one copy");
+        a.free(winners[0]).unwrap();
+        assert_eq!(a.stats().allocated, 0, "losing faults must not leak blocks");
+    }
+
+    #[test]
     fn eviction_extends_memory_capacity() {
         // A 4-block pool hosts 16 blocks' worth of data via swap — the
         // paper's "application-controlled" overcommit.
@@ -321,8 +443,8 @@ mod tests {
             let b2 = swap.fault(s).unwrap();
             a.free(b2).unwrap();
         }
-        let g = swap.inner.lock().unwrap();
-        assert!(g.next_slot <= 2, "slots must be recycled, used {}", g.next_slot);
+        let m = swap.meta.lock().unwrap();
+        assert!(m.next_slot <= 2, "slots must be recycled, used {}", m.next_slot);
     }
 
     #[test]
@@ -484,7 +606,7 @@ mod tests {
         // Slot rollback: the retry reuses the slot instead of leaking it.
         let slot = swap.evict(b).unwrap();
         assert_eq!(
-            swap.inner.lock().unwrap().next_slot,
+            swap.meta.lock().unwrap().next_slot,
             1,
             "failed stash leaked its slot"
         );

@@ -4,22 +4,27 @@
 //! Every public access path the tree offers — scalar get/set, the
 //! batched APIs, [`crate::trees::TreeWriter`] seqlock writes,
 //! [`crate::trees::TreeView`] reads, safe and concurrent leaf
-//! migration, and swap eviction/restore through the
-//! [`crate::trees::CompactTarget`] adoption hooks — is driven by one
-//! seeded op stream while the mirror records the intended contents.
-//! Any divergence (a lost write, a stale translation, a torn copy, a
-//! restore landing on the wrong leaf) surfaces as a mismatch, and
-//! [`crate::testutil::forall`]'s shrinking re-runs the failing seed at
-//! smaller scales. Swap I/O runs over the in-memory
-//! [`FailingBacking`], with faults injected at random eviction/fault
-//! points so the error paths' failure-atomicity is part of the oracle,
-//! not a separate suite.
+//! migration, swap eviction/restore through the
+//! [`crate::trees::CompactTarget`] entry points, and **software page
+//! faults** (view/writer accesses landing on evicted leaves, served by
+//! an installed [`FaultQueue`]) — is driven by one seeded op stream
+//! while the mirror records the intended contents. Any divergence (a
+//! lost write, a stale translation, a torn copy, a restore landing on
+//! the wrong leaf, a fault-in adopting the wrong payload) surfaces as
+//! a mismatch, and [`crate::testutil::forall`]'s shrinking re-runs the
+//! failing seed at smaller scales. Swap I/O runs over the in-memory
+//! [`FailingBacking`], with faults injected at random
+//! eviction/fault-in points so the error paths' failure-atomicity and
+//! the queue's retry path are part of the oracle, not a separate
+//! suite.
 //!
 //! Shared via `testutil` so the integration suite
 //! (`rust/tests/differential.rs`) can run the same cases under both
 //! allocator policies, and future structures can bolt their own ops on.
 
-use crate::pmem::{BlockAlloc, SwapPool, SwapSlot};
+use std::time::Duration;
+
+use crate::pmem::{BlockAlloc, FaultQueue, FaultQueueConfig, SwapPool};
 use crate::testutil::fault::FailingBacking;
 use crate::testutil::proptest_lite::Gen;
 use crate::trees::{CompactTarget, TreeArray};
@@ -39,21 +44,28 @@ pub struct DiffOutcome {
     pub migrations: usize,
     /// Successful leaf evictions to swap.
     pub evictions: usize,
-    /// Successful restores (fault + adopt).
+    /// Successful restores (fault + adopt) through the daemon-style
+    /// [`CompactTarget::restore_leaf`] path, including the final drain.
     pub restores: usize,
+    /// Leaves faulted back in by an accessor hitting them (the
+    /// view/writer software-page-fault hooks).
+    pub hook_faults: usize,
     /// Injected swap I/O faults survived (error path taken, state
-    /// verified intact).
+    /// verified intact — including transient failures the fault
+    /// queue's retry path absorbed).
     pub injected_faults: usize,
 }
 
 /// Pick a leaf by residency: `parked == false` draws from the resident
-/// (not swapped out) leaves, `parked == true` from the evicted ones.
-/// Returns `None` when the requested set is empty. The one residency
-/// filter every op arm shares — access ops, relocation, and eviction
-/// must all avoid parked leaves, restore must hit one.
-fn pick_leaf(g: &mut Gen, evicted: &[Option<SwapSlot>], parked: bool) -> Option<usize> {
-    let set: Vec<usize> = (0..evicted.len())
-        .filter(|&l| evicted[l].is_some() == parked)
+/// (not swapped out) leaves, `parked == true` from the evicted ones —
+/// read straight off the tree's swap words, the authoritative ledger.
+/// Returns `None` when the requested set is empty. The plain
+/// `TreeArray` accessors (no fault hook) must avoid parked leaves;
+/// eviction targets resident ones; restore and the demand-fault arm
+/// target parked ones.
+fn pick_leaf<A: BlockAlloc>(g: &mut Gen, tree: &TreeArray<u64, A>, parked: bool) -> Option<usize> {
+    let set: Vec<usize> = (0..tree.nleaves())
+        .filter(|&l| tree.leaf_swapped(l) == parked)
         .collect();
     if set.is_empty() {
         None
@@ -62,10 +74,16 @@ fn pick_leaf(g: &mut Gen, evicted: &[Option<SwapSlot>], parked: bool) -> Option<
     }
 }
 
-/// Pick an element index whose leaf is resident (not swapped out).
-/// Returns `None` when every leaf is evicted.
-fn resident_index(g: &mut Gen, n: usize, leaf_cap: usize, evicted: &[Option<SwapSlot>]) -> Option<usize> {
-    let leaf = pick_leaf(g, evicted, false)?;
+/// Pick an element index inside a leaf of the requested residency.
+/// Returns `None` when no such leaf exists.
+fn index_in<A: BlockAlloc>(
+    g: &mut Gen,
+    tree: &TreeArray<u64, A>,
+    n: usize,
+    leaf_cap: usize,
+    parked: bool,
+) -> Option<usize> {
+    let leaf = pick_leaf(g, tree, parked)?;
     let lo = leaf * leaf_cap;
     let hi = (lo + leaf_cap).min(n);
     Some(g.usize_in(lo, hi - 1))
@@ -91,15 +109,27 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
 
     let (backing, fault_ctl) = FailingBacking::new();
     let swap = SwapPool::with_backing(a, backing);
-    let mut evicted: Vec<Option<SwapSlot>> = vec![None; tree.nleaves()];
+    // Demand faults run through a real FaultQueue (inline mode) so the
+    // retry/backoff machinery sits inside the oracle's loop.
+    let fq = FaultQueue::new(
+        &swap,
+        FaultQueueConfig {
+            max_retries: 3,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_micros(400),
+            ..FaultQueueConfig::default()
+        },
+    );
+    // SAFETY: cleared at the end of this case, before `fq` drops.
+    unsafe { tree.install_faulter(&fq) };
 
     let nops = g.usize_in(1, 120);
     for _ in 0..nops {
         out.ops += 1;
-        match g.usize_in(0, 11) {
+        match g.usize_in(0, 12) {
             // -- plain scalar access --------------------------------
             0 | 1 => {
-                if let Some(i) = resident_index(g, n, leaf_cap, &evicted) {
+                if let Some(i) = index_in(g, &tree, n, leaf_cap, false) {
                     if g.bool(0.5) {
                         let v = g.rng().next_u64();
                         tree.set(i, v).expect("set");
@@ -115,7 +145,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                 let b = g.usize_in(1, 64);
                 let mut idxs = Vec::with_capacity(b);
                 for _ in 0..b {
-                    match resident_index(g, n, leaf_cap, &evicted) {
+                    match index_in(g, &tree, n, leaf_cap, false) {
                         Some(i) => idxs.push(i),
                         None => break,
                     }
@@ -132,7 +162,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                 let mut idxs = Vec::new();
                 let mut vals = Vec::new();
                 for _ in 0..b {
-                    match resident_index(g, n, leaf_cap, &evicted) {
+                    match index_in(g, &tree, n, leaf_cap, false) {
                         Some(i) => {
                             idxs.push(i);
                             vals.push(g.rng().next_u64());
@@ -154,7 +184,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                 let mut idxs = Vec::new();
                 let mut keys = Vec::new();
                 for _ in 0..b {
-                    match resident_index(g, n, leaf_cap, &evicted) {
+                    match index_in(g, &tree, n, leaf_cap, false) {
                         Some(i) => {
                             idxs.push(i);
                             keys.push(g.rng().next_u64());
@@ -176,7 +206,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                 // accessor until it drops at the end of this arm.
                 let mut w = unsafe { tree.writer() };
                 for _ in 0..g.usize_in(1, 24) {
-                    if let Some(i) = resident_index(g, n, leaf_cap, &evicted) {
+                    if let Some(i) = index_in(g, &tree, n, leaf_cap, false) {
                         match g.usize_in(0, 2) {
                             0 => {
                                 let v = g.rng().next_u64();
@@ -208,7 +238,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                 let b = g.usize_in(1, 64);
                 let mut idxs = Vec::new();
                 for _ in 0..b {
-                    match resident_index(g, n, leaf_cap, &evicted) {
+                    match index_in(g, &tree, n, leaf_cap, false) {
                         Some(i) => idxs.push(i),
                         None => break,
                     }
@@ -225,7 +255,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
             }
             // -- relocation -----------------------------------------
             8 => {
-                if let Some(leaf) = pick_leaf(g, &evicted, false) {
+                if let Some(leaf) = pick_leaf(g, &tree, false) {
                     if g.bool(0.5) {
                         tree.migrate_leaf(leaf).expect("migrate_leaf");
                     } else {
@@ -240,40 +270,87 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
             }
             // -- eviction -------------------------------------------
             9 => {
-                if let Some(leaf) = pick_leaf(g, &evicted, false) {
-                    let block = tree.leaf_block(leaf);
+                if let Some(leaf) = pick_leaf(g, &tree, false) {
                     let inject = g.bool(0.15);
                     if inject {
                         fault_ctl.fail_nth(1);
                     }
-                    match swap.evict(block) {
-                        Ok(slot) => {
-                            evicted[leaf] = Some(slot);
+                    // SAFETY: every accessor in this case is
+                    // fault-capable (hooked view/writer, or filtered to
+                    // resident leaves) and the faulter is installed.
+                    match unsafe { CompactTarget::evict_leaf(&tree, leaf, &swap) } {
+                        Ok(_) => {
+                            assert!(tree.leaf_swapped(leaf));
                             out.evictions += 1;
                         }
                         Err(_) => {
                             assert!(inject, "uninjected eviction failed");
                             out.injected_faults += 1;
                             // Failure-atomic: the leaf must still serve.
+                            assert!(!tree.leaf_swapped(leaf));
                             let lo = leaf * leaf_cap;
                             assert_eq!(tree.get(lo).expect("get after failed evict"), mirror[lo]);
                         }
                     }
                 }
             }
+            // -- software page fault: access a parked leaf ----------
+            10 => {
+                if let Some(i) = index_in(g, &tree, n, leaf_cap, true) {
+                    let inject = g.bool(0.3);
+                    if inject {
+                        // Transient: the queue's first read fails, the
+                        // retry serves the payload.
+                        fault_ctl.fail_nth(1);
+                        out.injected_faults += 1;
+                    }
+                    let retries0 = fq.stats().retries;
+                    match g.usize_in(0, 2) {
+                        0 => {
+                            let mut v = tree.view();
+                            assert_eq!(
+                                v.get(i).expect("view demand fault"),
+                                mirror[i],
+                                "fault-in served wrong bytes at {i}"
+                            );
+                            out.hook_faults += v.faults() as usize;
+                        }
+                        1 => {
+                            // SAFETY: single thread; sole accessor
+                            // until it drops at the end of this arm.
+                            let mut w = unsafe { tree.writer() };
+                            let val = g.rng().next_u64();
+                            w.set(i, val).expect("writer demand fault");
+                            mirror[i] = val;
+                            out.writes += 1;
+                            out.writer_writes += 1;
+                            out.hook_faults += w.faults() as usize;
+                        }
+                        _ => {
+                            // Bulk path: faults *every* parked leaf.
+                            let mut v = tree.view();
+                            assert_eq!(v.to_vec(), mirror, "to_vec fault-in diverged");
+                            out.hook_faults += v.faults() as usize;
+                        }
+                    }
+                    if inject {
+                        assert!(
+                            fq.stats().retries > retries0,
+                            "injected transient fault must go through the retry path"
+                        );
+                    }
+                }
+            }
             // -- restore --------------------------------------------
             _ => {
-                if let Some(leaf) = pick_leaf(g, &evicted, true) {
-                    let slot = evicted[leaf].take().expect("parked leaf has a slot");
+                if let Some(leaf) = pick_leaf(g, &tree, true) {
                     let inject = g.bool(0.15);
                     if inject {
                         fault_ctl.fail_nth(1);
                     }
-                    match swap.fault(slot) {
-                        Ok(fresh) => {
-                            // SAFETY: no accessor since the eviction;
-                            // fresh holds the leaf's bytes and is ours.
-                            unsafe { CompactTarget::adopt_leaf_block(&tree, leaf, fresh) };
+                    match CompactTarget::restore_leaf(&tree, leaf, &swap) {
+                        Ok(restored) => {
+                            assert!(restored, "single thread: nobody else could restore it");
                             out.restores += 1;
                             let lo = leaf * leaf_cap;
                             assert_eq!(
@@ -286,7 +363,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                             assert!(inject, "uninjected fault failed");
                             out.injected_faults += 1;
                             // Failure-atomic: the payload stays parked.
-                            evicted[leaf] = Some(slot);
+                            assert!(tree.leaf_swapped(leaf));
                         }
                     }
                 }
@@ -296,18 +373,19 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
 
     // Drain: restore every parked leaf, then the full-contents oracle.
     fault_ctl.disarm();
-    for leaf in 0..evicted.len() {
-        if let Some(slot) = evicted[leaf].take() {
-            let fresh = swap.fault(slot).expect("final restore");
-            // SAFETY: no accessor since the eviction.
-            unsafe { CompactTarget::adopt_leaf_block(&tree, leaf, fresh) };
+    for leaf in 0..tree.nleaves() {
+        if tree.leaf_swapped(leaf) {
+            let restored = CompactTarget::restore_leaf(&tree, leaf, &swap).expect("final restore");
+            assert!(restored);
             out.restores += 1;
         }
     }
+    assert_eq!(tree.swapped_leaves(), 0, "drain left parked leaves");
     assert_eq!(tree.to_vec(), mirror, "final contents diverged from the mirror");
     let mut view = tree.view();
     assert_eq!(view.to_vec(), mirror, "view drain diverged from the mirror");
     drop(view);
+    tree.clear_faulter();
     a.epoch().synchronize(a);
     assert_eq!(a.epoch().limbo_len(), 0, "case left blocks in limbo");
     drop(tree);

@@ -1,26 +1,56 @@
 //! Fault-injection doubles for the swap backing.
 //!
 //! [`FailingBacking`] implements [`SwapBacking`] over an in-memory
-//! byte store and fails the N-th subsequent I/O on command, so tests
-//! can hit `SwapPool`'s error paths at exact points and assert the
-//! failure-atomicity the happy-path tests merely assume: a failed
+//! byte store and injects failures and delays on command, so tests can
+//! hit `SwapPool`/`FaultQueue` error paths at exact points and assert
+//! the failure-atomicity the happy-path tests merely assume: a failed
 //! `stash` must roll its slot back, a failed `fault` must keep the
 //! payload resident. (It doubles as a fast in-memory backing for
 //! high-case-count suites — the differential harness — where creating
 //! one temp file per case would dominate the runtime.)
+//!
+//! # Async completion-ordering faults
+//!
+//! Four injection modes cover the fault queue's state machine:
+//!
+//! * [`FailControl::fail_nth`] — **fail-then-succeed-on-retry**: one
+//!   transient error; the queue's retry must recover the payload.
+//! * [`FailControl::fail_for`] — a burst of `n` consecutive failures
+//!   (drives multi-retry backoff sequences short of escalation).
+//! * [`FailControl::fail_always`] — **permanent failure** until
+//!   [`FailControl::disarm`]: the queue must escalate to the typed
+//!   `SwapFaultFailed` and mark itself degraded, never wedge.
+//! * [`FailControl::delay_nth`] / [`FailControl::delay_all`] —
+//!   **delay**: stall chosen I/Os. Because the pool serializes backing
+//!   calls under one I/O mutex, completions cannot literally pass each
+//!   other *inside* the backing; reordering is induced one level up
+//!   and that is where it matters — a delayed or failing-then-retried
+//!   request completes *after* requests issued later (retry backoff
+//!   reorders), which is exactly the window the coalescing and
+//!   adopt-under-seqlock protocols must survive.
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::pmem::SwapBacking;
 
 /// Remote control for a [`FailingBacking`] that has been moved into a
-/// `SwapPool`: arm faults and observe I/O counts from the test body.
+/// `SwapPool`: arm faults/delays and observe I/O counts from the test
+/// body.
 #[derive(Clone)]
 pub struct FailControl {
     /// I/Os until the next injected failure; 0 = disarmed.
     arm: Arc<AtomicU64>,
+    /// Consecutive I/Os to fail starting now (`u64::MAX` = permanent).
+    burst: Arc<AtomicU64>,
+    /// I/Os until the one-shot delay fires; 0 = disarmed.
+    delay_arm: Arc<AtomicU64>,
+    /// One-shot delay length in nanoseconds (with `delay_arm`).
+    delay_once_ns: Arc<AtomicU64>,
+    /// Delay applied to *every* I/O, in nanoseconds; 0 = none.
+    delay_all_ns: Arc<AtomicU64>,
     /// Total I/O calls observed.
     ops: Arc<AtomicU64>,
 }
@@ -33,9 +63,40 @@ impl FailControl {
         self.arm.store(n, Ordering::Relaxed);
     }
 
-    /// Cancel a pending injected failure.
+    /// Fail the next `n` I/Os (a transient burst: long enough to force
+    /// several retries, short enough to stay under an escalation
+    /// budget — or over it, the test's choice).
+    pub fn fail_for(&self, n: u64) {
+        self.burst.store(n, Ordering::Relaxed);
+    }
+
+    /// Fail every I/O until [`FailControl::disarm`] — the permanent
+    /// backing failure the escalation path is built for.
+    pub fn fail_always(&self) {
+        self.burst.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// Stall the `n`-th I/O from now by `delay` (then disarm). With a
+    /// concurrent second request this induces completion reordering:
+    /// the delayed request finishes after later-issued ones.
+    pub fn delay_nth(&self, n: u64, delay: Duration) {
+        assert!(n > 0, "delay_nth counts from 1");
+        self.delay_once_ns.store(delay.as_nanos() as u64, Ordering::Relaxed);
+        self.delay_arm.store(n, Ordering::Relaxed);
+    }
+
+    /// Stall every I/O by `delay` (a uniformly slow device) until
+    /// cleared with `delay_all(Duration::ZERO)`.
+    pub fn delay_all(&self, delay: Duration) {
+        self.delay_all_ns.store(delay.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Cancel every pending injected failure and delay.
     pub fn disarm(&self) {
         self.arm.store(0, Ordering::Relaxed);
+        self.burst.store(0, Ordering::Relaxed);
+        self.delay_arm.store(0, Ordering::Relaxed);
+        self.delay_all_ns.store(0, Ordering::Relaxed);
     }
 
     /// Total backing I/Os performed so far (including the failed ones).
@@ -44,39 +105,61 @@ impl FailControl {
     }
 }
 
-/// An in-memory [`SwapBacking`] whose I/Os can be made to fail on
-/// command via the paired [`FailControl`].
+/// An in-memory [`SwapBacking`] whose I/Os can be made to fail or
+/// stall on command via the paired [`FailControl`].
 pub struct FailingBacking {
     data: Vec<u8>,
-    arm: Arc<AtomicU64>,
-    ops: Arc<AtomicU64>,
+    ctl: FailControl,
 }
 
 impl FailingBacking {
-    /// A fresh backing (no failure armed) plus its control handle.
+    /// A fresh backing (nothing armed) plus its control handle.
     pub fn new() -> (Self, FailControl) {
-        let arm = Arc::new(AtomicU64::new(0));
-        let ops = Arc::new(AtomicU64::new(0));
         let ctl = FailControl {
-            arm: arm.clone(),
-            ops: ops.clone(),
+            arm: Arc::new(AtomicU64::new(0)),
+            burst: Arc::new(AtomicU64::new(0)),
+            delay_arm: Arc::new(AtomicU64::new(0)),
+            delay_once_ns: Arc::new(AtomicU64::new(0)),
+            delay_all_ns: Arc::new(AtomicU64::new(0)),
+            ops: Arc::new(AtomicU64::new(0)),
         };
         (
             FailingBacking {
                 data: Vec::new(),
-                arm,
-                ops,
+                ctl: ctl.clone(),
             },
             ctl,
         )
     }
 
-    /// Count one I/O; error if the armed countdown hits it.
+    /// Count one I/O; apply any armed delay, then any armed failure.
+    /// (Plain load/store countdowns are race-free in practice: the
+    /// pool's I/O mutex serializes every backing call.)
     fn tick(&self) -> io::Result<()> {
-        self.ops.fetch_add(1, Ordering::Relaxed);
-        let a = self.arm.load(Ordering::Relaxed);
+        let ctl = &self.ctl;
+        ctl.ops.fetch_add(1, Ordering::Relaxed);
+        let da = ctl.delay_arm.load(Ordering::Relaxed);
+        if da > 0 {
+            ctl.delay_arm.store(da - 1, Ordering::Relaxed);
+            if da == 1 {
+                let ns = ctl.delay_once_ns.load(Ordering::Relaxed);
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
+        }
+        let all_ns = ctl.delay_all_ns.load(Ordering::Relaxed);
+        if all_ns > 0 {
+            std::thread::sleep(Duration::from_nanos(all_ns));
+        }
+        let b = ctl.burst.load(Ordering::Relaxed);
+        if b > 0 {
+            if b != u64::MAX {
+                ctl.burst.store(b - 1, Ordering::Relaxed);
+            }
+            return Err(io::Error::new(io::ErrorKind::Other, "injected swap I/O fault (burst)"));
+        }
+        let a = ctl.arm.load(Ordering::Relaxed);
         if a > 0 {
-            self.arm.store(a - 1, Ordering::Relaxed);
+            ctl.arm.store(a - 1, Ordering::Relaxed);
             if a == 1 {
                 return Err(io::Error::new(io::ErrorKind::Other, "injected swap I/O fault"));
             }
@@ -125,6 +208,51 @@ mod tests {
         assert!(b.read_at(0, &mut out).is_err(), "armed I/O must fail");
         b.read_at(0, &mut out).unwrap(); // disarmed after one failure
         assert_eq!(ctl.ops(), 4);
+    }
+
+    #[test]
+    fn burst_fails_consecutively_then_recovers() {
+        let (mut b, ctl) = FailingBacking::new();
+        b.write_at(0, &[7; 4]).unwrap();
+        let mut out = [0u8; 4];
+        ctl.fail_for(2);
+        assert!(b.read_at(0, &mut out).is_err());
+        assert!(b.read_at(0, &mut out).is_err());
+        b.read_at(0, &mut out).unwrap();
+        assert_eq!(out, [7; 4]);
+    }
+
+    #[test]
+    fn fail_always_holds_until_disarm() {
+        let (mut b, ctl) = FailingBacking::new();
+        b.write_at(0, &[3; 2]).unwrap();
+        ctl.fail_always();
+        let mut out = [0u8; 2];
+        for _ in 0..5 {
+            assert!(b.read_at(0, &mut out).is_err());
+        }
+        ctl.disarm();
+        b.read_at(0, &mut out).unwrap();
+        assert_eq!(out, [3; 2]);
+    }
+
+    #[test]
+    fn delays_fire_and_clear() {
+        let (mut b, ctl) = FailingBacking::new();
+        b.write_at(0, &[1]).unwrap();
+        let mut out = [0u8; 1];
+        ctl.delay_nth(1, Duration::from_millis(3));
+        let t0 = std::time::Instant::now();
+        b.read_at(0, &mut out).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(3), "one-shot delay must stall");
+        let t1 = std::time::Instant::now();
+        b.read_at(0, &mut out).unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(3), "one-shot delay must disarm");
+        ctl.delay_all(Duration::from_millis(3));
+        let t2 = std::time::Instant::now();
+        b.read_at(0, &mut out).unwrap();
+        assert!(t2.elapsed() >= Duration::from_millis(3));
+        ctl.disarm();
     }
 
     #[test]

@@ -23,7 +23,12 @@
 //!   threads read one tree with no lock on the lookup path, safely
 //!   coexisting with [`TreeArray::migrate_leaf_concurrent`]'s
 //!   epoch-deferred relocation — and, via per-leaf seqlock brackets,
-//!   with live [`TreeWriter`]s.
+//!   with live [`TreeWriter`]s. Views (and writers) are
+//!   **fault-capable**: touching a leaf the daemon evicted takes a
+//!   software page fault — the payload is read back through the tree's
+//!   installed [`crate::pmem::LeafFaulter`] and re-adopted under the
+//!   leaf's seqlock, so eviction is invisible to correctness and costs
+//!   only latency.
 //! * [`TreeWriter`] — the concurrent write side: a `Send` write handle
 //!   that takes a per-leaf **seqlock** for each mutation, so M writers,
 //!   N view readers, and the mmd compactor's relocation all run against

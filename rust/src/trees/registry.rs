@@ -3,12 +3,13 @@
 //! Background compaction ([`crate::mmd`]) has to relocate leaves of
 //! trees it did not create and whose element types it cannot name, so
 //! the registry holds **type-erased** handles: [`CompactTarget`]
-//! exposes exactly the three parent-patch entry points relocation
-//! needs — where a leaf lives ([`CompactTarget::leaf_block`]), move it
-//! to a chosen destination ([`CompactTarget::relocate_leaf_to`], the
-//! epoch-deferred [`TreeArray::migrate_leaf_concurrent_to`] underneath),
-//! and re-point it at a faulted-in block after eviction
-//! ([`CompactTarget::adopt_leaf_block`]).
+//! exposes exactly the entry points the daemon needs — where a leaf
+//! lives ([`CompactTarget::leaf_block`]), move it to a chosen
+//! destination ([`CompactTarget::relocate_leaf_to`], the epoch-deferred
+//! [`TreeArray::migrate_leaf_concurrent_to`] underneath), park it in
+//! swap ([`CompactTarget::evict_leaf`]) and bring it back
+//! ([`CompactTarget::restore_leaf`]), plus the telemetry a policy wants
+//! (swap residency, per-leaf access recency, writer contention).
 //!
 //! # Registration contracts (why `register*` is `unsafe`)
 //!
@@ -26,17 +27,25 @@
 //!   no writes outside `TreeWriter`, and nobody else migrates its
 //!   leaves.
 //! * **[`TreeRegistry::register_evictable`]** (adds pressure-driven
-//!   leaf eviction): additionally **no accessor at all** — not even
-//!   views — may touch the tree while it is registered. A swapped-out
-//!   leaf's recorded translation has no live backing until the daemon
-//!   restores it, and nothing in the read path can fault it back.
+//!   leaf eviction): additionally, every accessor must be
+//!   **fault-capable** — a `TreeView` or `TreeWriter`, whose access
+//!   paths check the per-leaf swap word inside their seq
+//!   brackets/critical sections and fault an evicted leaf back in —
+//!   and a [`crate::pmem::LeafFaulter`] must be installed on the tree
+//!   ([`TreeArray::install_faulter`]) before any such access can hit an
+//!   evicted leaf. (Before the fault hooks existed this contract was
+//!   "no accessors at all"; live readers and writers over an evictable
+//!   tree are now the *point* of the subsystem.) Raw paths — leaf
+//!   slices, cursors, plain `TreeArray` calls — remain forbidden: they
+//!   check nothing and would read a retired block's stale bytes.
 //!
 //! Deregistration synchronizes with the daemon: [`TreeRegistry`] holds
 //! one mutex over the entry list and compaction passes run under it, so
 //! once [`TreeRegistry::deregister`] returns the daemon can no longer
 //! touch the tree and it may be dropped or mutated freely.
 //! Deregistering (or dropping) a tree **with swapped-out leaves** is a
-//! bug — the tree's bookkeeping still names dead blocks — so
+//! bug — the tree's bookkeeping still names a limbo-retired block whose
+//! payload lives in swap, and dropping would double-free it — so
 //! `deregister` panics in that state; the daemon's shutdown path
 //! restores every evicted leaf first, which is the intended order.
 
@@ -44,19 +53,35 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::error::Result;
+use crate::pmem::faultq::{LeafFaulter, SwapService};
 use crate::pmem::{BlockAlloc, BlockId, SwapSlot};
 use crate::trees::tree_array::{Pod, TreeArray};
 
 /// Type-erased handle to a live tree whose leaves the daemon may
-/// relocate. Implemented by [`TreeArray`] for `Sync` element types;
-/// implementable by any block-backed structure whose nodes are named by
-/// exactly one parent pointer (the paper's relocation property).
+/// relocate and evict. Implemented by [`TreeArray`] for `Sync` element
+/// types; implementable by any block-backed structure whose nodes are
+/// named by exactly one parent pointer (the paper's relocation
+/// property).
 pub trait CompactTarget: Sync {
     /// Leaf blocks in the structure.
     fn nleaves(&self) -> usize;
 
     /// Current physical block of leaf `leaf`.
     fn leaf_block(&self, leaf: usize) -> BlockId;
+
+    /// Leaves currently parked in swap.
+    fn swapped_leaves(&self) -> usize;
+
+    /// The swap slot holding leaf `leaf`'s payload, if evicted.
+    fn leaf_swap_slot(&self, leaf: usize) -> Option<SwapSlot>;
+
+    /// Leaf `leaf`'s last-touch tick (0 = never; larger = hotter).
+    /// Only comparable within one structure.
+    fn leaf_touch(&self, leaf: usize) -> u64;
+
+    /// Total seqlock acquisitions lost to contention over the
+    /// structure's lifetime (writer heat; policies watch the delta).
+    fn lock_waits(&self) -> u64;
 
     /// Move leaf `leaf` into `dest`, retiring the displaced block into
     /// the pool's epoch limbo. On error the caller keeps `dest`.
@@ -67,14 +92,20 @@ pub trait CompactTarget: Sync {
     /// migrator, and `dest` live + exclusively owned by the caller.
     unsafe fn relocate_leaf_to(&self, leaf: usize, dest: BlockId) -> Result<()>;
 
-    /// Re-point leaf `leaf` at `fresh` without copying (the old block
-    /// is already gone — eviction restore).
+    /// Park leaf `leaf` in swap through `svc` (payload stashed, block
+    /// epoch-retired, swap word published under the leaf's seqlock).
     ///
     /// # Safety
-    /// The [`TreeArray`] adopt contract: no accessor of the structure
-    /// since the eviction, `fresh` live + exclusively owned + holding
-    /// the leaf's bytes.
-    unsafe fn adopt_leaf_block(&self, leaf: usize, fresh: BlockId);
+    /// The [`TreeRegistry::register_evictable`] contract: every
+    /// accessor is fault-capable, and a faulter is installed if any of
+    /// them may touch this leaf before it is restored.
+    unsafe fn evict_leaf(&self, leaf: usize, svc: &dyn SwapService) -> Result<SwapSlot>;
+
+    /// Bring leaf `leaf` back from swap through `faulter` (the daemon's
+    /// restore/prefetch entry — accessor demand faults use the tree's
+    /// installed faulter instead). Returns `false` if the leaf was
+    /// already resident: a demand fault won the race, which is fine.
+    fn restore_leaf(&self, leaf: usize, faulter: &dyn LeafFaulter) -> Result<bool>;
 }
 
 impl<T: Pod + Sync, A: BlockAlloc> CompactTarget for TreeArray<'_, T, A> {
@@ -86,25 +117,45 @@ impl<T: Pod + Sync, A: BlockAlloc> CompactTarget for TreeArray<'_, T, A> {
         TreeArray::leaf_block(self, leaf)
     }
 
+    fn swapped_leaves(&self) -> usize {
+        TreeArray::swapped_leaves(self)
+    }
+
+    fn leaf_swap_slot(&self, leaf: usize) -> Option<SwapSlot> {
+        TreeArray::leaf_swap_slot(self, leaf)
+    }
+
+    fn leaf_touch(&self, leaf: usize) -> u64 {
+        TreeArray::leaf_touch(self, leaf)
+    }
+
+    fn lock_waits(&self) -> u64 {
+        TreeArray::lock_waits_total(self)
+    }
+
     unsafe fn relocate_leaf_to(&self, leaf: usize, dest: BlockId) -> Result<()> {
         // SAFETY: forwarded verbatim.
         unsafe { self.migrate_leaf_concurrent_to(leaf, dest) }.map(|_| ())
     }
 
-    unsafe fn adopt_leaf_block(&self, leaf: usize, fresh: BlockId) {
+    unsafe fn evict_leaf(&self, leaf: usize, svc: &dyn SwapService) -> Result<SwapSlot> {
         // SAFETY: forwarded verbatim.
-        unsafe { self.adopt_leaf_impl(leaf, fresh) }
+        unsafe { self.evict_leaf_via(leaf, svc) }
+    }
+
+    fn restore_leaf(&self, leaf: usize, faulter: &dyn LeafFaulter) -> Result<bool> {
+        self.restore_leaf_via(leaf, faulter)
     }
 }
 
-/// One registered tree: the erased handle, the eviction permission, and
-/// the ledger of leaves currently parked in swap.
+/// One registered tree: the erased handle and the eviction permission.
+/// (Swap residency lives in the tree itself — the per-leaf swap words —
+/// not here: accessors fault leaves back in without going anywhere near
+/// the registry lock.)
 pub(crate) struct RegEntry<'e> {
     pub(crate) id: u64,
     pub(crate) tree: &'e (dyn CompactTarget + 'e),
     pub(crate) evictable: bool,
-    /// Leaves currently swapped out: `(leaf index, swap slot)`.
-    pub(crate) swapped: Vec<(usize, SwapSlot)>,
 }
 
 /// Registry of live trees the [`crate::mmd`] daemon keeps healthy. See
@@ -141,37 +192,35 @@ impl<'e> TreeRegistry<'e> {
     /// eviction**.
     ///
     /// # Safety
-    /// The [`TreeRegistry::register`] contract, plus: **no accessor at
-    /// all** (not even views or seqlock writers) touches the tree while
-    /// registered — a swapped-out leaf has no live backing until
-    /// restored, and eviction's disk stash does not take the seqlock.
+    /// The [`TreeRegistry::register`] contract, plus: every accessor is
+    /// **fault-capable** (`TreeView`/`TreeWriter` — their paths check
+    /// the per-leaf swap word and fault evicted leaves back in), and a
+    /// [`crate::pmem::LeafFaulter`] is installed on the tree before any
+    /// accessor can hit an evicted leaf (module docs).
     pub unsafe fn register_evictable(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
         self.insert(tree, true)
     }
 
     fn insert(&self, tree: &'e (dyn CompactTarget + 'e), evictable: bool) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.entries.lock().unwrap().push(RegEntry {
-            id,
-            tree,
-            evictable,
-            swapped: Vec::new(),
-        });
+        self.entries.lock().unwrap().push(RegEntry { id, tree, evictable });
         id
     }
 
     /// Remove a registration. Blocks until any in-flight compaction
     /// pass finishes (same mutex), so on return the daemon holds no
     /// reference to the tree. Panics if the tree still has swapped-out
-    /// leaves (restore first — daemon shutdown does this).
+    /// leaves — its bookkeeping names a limbo-retired block whose bytes
+    /// live in swap, and dropping it would double-free the block
+    /// (restore first; daemon shutdown does this automatically).
     pub fn deregister(&self, id: u64) {
         let mut g = self.entries.lock().unwrap();
         if let Some(i) = g.iter().position(|e| e.id == id) {
+            let swapped = g[i].tree.swapped_leaves();
             assert!(
-                g[i].swapped.is_empty(),
-                "deregistering tree {id} with {} swapped-out leaves — restore first \
-                 (MmdHandle::shutdown restores automatically)",
-                g[i].swapped.len()
+                swapped == 0,
+                "deregistering tree {id} with {swapped} swapped-out leaves — restore first \
+                 (MmdHandle::shutdown restores automatically)"
             );
             g.swap_remove(i);
         }
@@ -189,7 +238,7 @@ impl<'e> TreeRegistry<'e> {
 
     /// Total leaves currently swapped out across all registrations.
     pub fn swapped_out(&self) -> usize {
-        self.entries.lock().unwrap().iter().map(|e| e.swapped.len()).sum()
+        self.entries.lock().unwrap().iter().map(|e| e.tree.swapped_leaves()).sum()
     }
 
     /// Resident (not yet swapped) leaves of evictable registrations —
@@ -206,12 +255,20 @@ impl<'e> TreeRegistry<'e> {
         let mut swapped = 0;
         let mut resident = 0;
         for e in g.iter() {
-            swapped += e.swapped.len();
+            let s = e.tree.swapped_leaves();
+            swapped += s;
             if e.evictable {
-                resident += e.tree.nleaves() - e.swapped.len();
+                resident += e.tree.nleaves() - s;
             }
         }
         (swapped, resident)
+    }
+
+    /// Total seqlock contention over all registered trees (writer heat
+    /// — the daemon watches the per-tick delta to back off compaction
+    /// while writers are hot; see `ThresholdPolicy`).
+    pub fn lock_waits_total(&self) -> u64 {
+        self.entries.lock().unwrap().iter().map(|e| e.tree.lock_waits()).sum()
     }
 
     /// Lock the entry list (compaction passes run under this guard; see
@@ -231,7 +288,7 @@ impl std::fmt::Debug for TreeRegistry<'_> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let g = self.entries.lock().unwrap();
         write!(f, "TreeRegistry {{ trees: {}, swapped_out: ", g.len())?;
-        let swapped: usize = g.iter().map(|e| e.swapped.len()).sum();
+        let swapped: usize = g.iter().map(|e| e.tree.swapped_leaves()).sum();
         write!(f, "{swapped} }}")
     }
 }
@@ -239,7 +296,7 @@ impl std::fmt::Debug for TreeRegistry<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::BlockAllocator;
+    use crate::pmem::{BlockAllocator, SwapPool};
 
     #[test]
     fn register_deregister_roundtrip() {
@@ -293,5 +350,50 @@ mod tests {
         a.epoch().synchronize(&a);
         drop(t);
         assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn erased_evict_restore_and_the_swapped_ledger() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 256 * 3).unwrap();
+        let data: Vec<u32> = (0..(256 * 3) as u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let reg = TreeRegistry::new();
+        // SAFETY: accesses below are erased evict/restore + final
+        // to_vec after everything is resident again.
+        let id = unsafe { reg.register_evictable(&t) };
+        {
+            let g = reg.lock();
+            // SAFETY: no accessor touches leaf 1 while it is out.
+            unsafe { g[0].tree.evict_leaf(1, &swap) }.unwrap();
+            assert_eq!(g[0].tree.swapped_leaves(), 1);
+            assert_eq!(g[0].tree.leaf_swap_slot(1).is_some(), true);
+        }
+        assert_eq!(reg.swapped_out(), 1);
+        assert_eq!(reg.evictable_resident(), 2);
+        {
+            let g = reg.lock();
+            assert!(g[0].tree.restore_leaf(1, &swap).unwrap());
+            assert!(!g[0].tree.restore_leaf(1, &swap).unwrap(), "second restore no-ops");
+        }
+        assert_eq!(reg.swapped_out(), 0);
+        assert_eq!(t.to_vec(), data);
+        reg.deregister(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "swapped-out leaves")]
+    fn deregistering_with_swapped_leaves_panics() {
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 256 * 2).unwrap();
+        t.copy_from_slice(&vec![0u32; 512]).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let reg = TreeRegistry::new();
+        // SAFETY: nothing accesses the tree while registered.
+        let id = unsafe { reg.register_evictable(&t) };
+        // SAFETY: no accessor touches the evicted leaf.
+        unsafe { t.evict_leaf_via(0, &swap) }.unwrap();
+        reg.deregister(id); // must panic: payload still in swap
     }
 }

@@ -1,9 +1,11 @@
 //! The arrays-as-trees data structure over allocator blocks.
 
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::pmem::faultq::{LeafFaulter, SwapService};
+use crate::pmem::swap::SwapSlot;
 use crate::pmem::{BlockAlloc, BlockAllocator, BlockId};
 use crate::trees::layout::TreeGeometry;
 use crate::trees::tlb::LeafTlb;
@@ -96,6 +98,21 @@ unsafe impl Pod for usize {}
 ///   a leaf is never simultaneously written and moved — the copy cannot
 ///   tear a write, and a writer acquiring after the move re-translates
 ///   (the generation bump happens inside the locked section).
+///
+/// # Software page faults
+///
+/// A fourth party joins the seqlock protocol when a tree is registered
+/// evictable: [`TreeArray::evict_leaf_via`] pushes a cold leaf's bytes
+/// to swap and records the slot in the leaf's *swap word* without
+/// touching any translation pointer, and accessors check that word
+/// inside their seq brackets — a hit diverts to the fault hook
+/// ([`TreeArray::fault_leaf`]), which re-reads the payload through the
+/// installed [`LeafFaulter`] and adopts the fresh block *under the
+/// leaf's seqlock*, so concurrent readers retry rather than observe a
+/// half-restored leaf and duplicate faults serialize into one I/O.
+/// There is no hardware fault handler anywhere in this path — the
+/// paper's premise made mechanism: detection is two loads in the read
+/// bracket, and resolution is ordinary library code.
 pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     pub(crate) alloc: &'a A,
     pub(crate) geo: TreeGeometry,
@@ -115,8 +132,48 @@ pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     /// Per-leaf write sequence words (seqlocks): odd = a writer or a
     /// relocation holds the leaf. See the type-level "Writers" docs.
     seq: Box<[AtomicU64]>,
+    /// Per-leaf swap state: [`SWAP_RESIDENT`] = the leaf's bytes are in
+    /// memory; anything else is the raw [`SwapSlot`] holding them. A
+    /// swap word only changes under the leaf's seqlock, and eviction
+    /// deliberately does **not** change the leaf's translation — the
+    /// parent slot / `blocks` entry / flat table keep naming the
+    /// retired block, and the swapped check inside every seq bracket is
+    /// what keeps accessors off it (see the "Software page faults"
+    /// type-level docs).
+    swap_words: Box<[AtomicU64]>,
+    /// Per-leaf last-touch tick (coarse access recency): stamped from
+    /// `touch_clock` on every translation miss and fault-in, read by
+    /// the mmd eviction policy to pick genuinely cold victims. Relaxed
+    /// everywhere — a slightly stale tick only costs victim quality.
+    touch: Box<[AtomicU64]>,
+    /// Global tick source for `touch`.
+    touch_clock: AtomicU64,
+    /// Total seqlock acquisition attempts lost to contention across all
+    /// leaves (writers, relocations, fault-ins). The mmd policy reads
+    /// the per-tick delta as writer-heat and defers compaction.
+    lock_waits_total: AtomicU64,
+    /// The installed fault handler, if any (type-erased; see
+    /// [`TreeArray::install_faulter`]). Locked only on the fault path.
+    faulter: Mutex<Option<FaulterPtr>>,
     _t: std::marker::PhantomData<T>,
 }
+
+/// The sentinel a swap word holds while the leaf is resident (slot
+/// indices start at 0, so the all-ones pattern can never be a slot).
+pub(crate) const SWAP_RESIDENT: u64 = u64::MAX;
+
+/// A type-erased, lifetime-erased pointer to the installed
+/// [`LeafFaulter`]. The erasure is confined here; the safety story is
+/// [`TreeArray::install_faulter`]'s contract (the faulter outlives its
+/// installation window).
+#[derive(Clone, Copy)]
+struct FaulterPtr(*const (dyn LeafFaulter + 'static));
+
+// SAFETY: the pointee is Sync (LeafFaulter: Sync) and the install
+// contract keeps it alive for the installation window, so sending the
+// pointer between threads adds nothing beyond what `&dyn LeafFaulter`
+// already permits.
+unsafe impl Send for FaulterPtr {}
 
 impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// Allocate a zeroed tree array of `len` elements using the paper's
@@ -181,6 +238,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             flat_on: AtomicBool::new(false),
             flat: OnceLock::new(),
             seq: (0..geo.nleaves()).map(|_| AtomicU64::new(0)).collect(),
+            swap_words: (0..geo.nleaves()).map(|_| AtomicU64::new(SWAP_RESIDENT)).collect(),
+            touch: (0..geo.nleaves()).map(|_| AtomicU64::new(0)).collect(),
+            touch_clock: AtomicU64::new(0),
+            lock_waits_total: AtomicU64::new(0),
+            faulter: Mutex::new(None),
             _t: std::marker::PhantomData,
         })
     }
@@ -440,6 +502,11 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
                     .compare_exchange(s, s + 1, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
+                if waits > 0 {
+                    // Contended acquisition: feed the tree-wide heat
+                    // counter the mmd policy backs off on.
+                    self.lock_waits_total.fetch_add(waits, Ordering::Relaxed);
+                }
                 return (s, waits);
             }
             waits += 1;
@@ -793,6 +860,217 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
         unsafe { self.publish_leaf(leaf_idx, parent, fresh) };
     }
 
+    // ---- Software page faults (evict / fault-in under the seqlock) ----
+    //
+    // The fault-capable eviction protocol. Eviction stashes a leaf's
+    // payload in swap and records the slot in the leaf's *swap word* —
+    // but leaves every translation pointer naming the retired block.
+    // Accessors notice the swap word inside their seqlock bracket (the
+    // evictor publishes it before releasing the seqlock, so a reader
+    // whose begin-load observed the post-evict sequence value observes
+    // the swap word too; a reader that raced reads committed pre-evict
+    // bytes — the block sits in epoch limbo until it quiesces — or
+    // fails its end check and retries). The faulting thread then takes
+    // the leaf's seqlock and restores under it, so duplicate faults for
+    // one leaf serialize on the seqlock and concurrent readers retry
+    // rather than observe a half-restored leaf.
+
+    /// Install `f` as this tree's fault handler: accessors that hit an
+    /// evicted leaf call it to bring the payload back. Type- and
+    /// lifetime-erased so the tree type does not grow parameters.
+    ///
+    /// # Safety
+    /// `f` must outlive the installation window: every accessor fault
+    /// and every [`TreeArray::clear_faulter`]/re-install must
+    /// happen-before `f` is dropped. (In practice: install after
+    /// creating the swap service, clear after accessor threads join.)
+    pub unsafe fn install_faulter(&self, f: &dyn LeafFaulter) {
+        // SAFETY: lifetime erasure only; the caller's contract keeps
+        // the pointee alive while the pointer is reachable.
+        let ptr = unsafe {
+            std::mem::transmute::<*const (dyn LeafFaulter + '_), *const (dyn LeafFaulter + 'static)>(
+                f as *const _,
+            )
+        };
+        *self.faulter.lock().unwrap() = Some(FaulterPtr(ptr));
+    }
+
+    /// Remove the installed fault handler. Accessors hitting an evicted
+    /// leaf afterwards get [`Error::SwappedOut`] instead of faulting.
+    pub fn clear_faulter(&self) {
+        *self.faulter.lock().unwrap() = None;
+    }
+
+    /// The installed fault handler, if any (fault path only — takes the
+    /// cell's mutex).
+    fn installed_faulter(&self) -> Option<&dyn LeafFaulter> {
+        // SAFETY: install_faulter's contract keeps the pointee alive.
+        self.faulter.lock().unwrap().map(|p| unsafe { &*p.0 })
+    }
+
+    /// Is leaf `leaf_idx` currently evicted? One relaxed load — the
+    /// load-bearing check sits *inside* accessor seq brackets with
+    /// Acquire; this form is for policy scans and tests.
+    #[inline]
+    pub fn leaf_swapped(&self, leaf_idx: usize) -> bool {
+        self.swap_words[leaf_idx].load(Ordering::Relaxed) != SWAP_RESIDENT
+    }
+
+    /// The swap slot holding leaf `leaf_idx`'s payload, if evicted.
+    pub fn leaf_swap_slot(&self, leaf_idx: usize) -> Option<SwapSlot> {
+        let raw = self.swap_words[leaf_idx].load(Ordering::Acquire);
+        (raw != SWAP_RESIDENT).then(|| SwapSlot::from_raw(raw))
+    }
+
+    /// Count of currently evicted leaves (a scan; policy-tick rate).
+    pub fn swapped_leaves(&self) -> usize {
+        (0..self.nleaves()).filter(|&l| self.leaf_swapped(l)).count()
+    }
+
+    /// The raw swap word of leaf `leaf_idx` (crate-internal: accessor
+    /// brackets load it with Acquire between their sequence loads).
+    #[inline]
+    pub(crate) fn swap_word(&self, leaf_idx: usize) -> &AtomicU64 {
+        &self.swap_words[leaf_idx]
+    }
+
+    /// Stamp leaf `leaf_idx` as just-touched (translation misses and
+    /// fault-ins call this; per-element hits deliberately do not — the
+    /// recency signal is coarse so the hot path stays two loads).
+    #[inline]
+    pub(crate) fn note_touch(&self, leaf_idx: usize) {
+        let tick = self.touch_clock.fetch_add(1, Ordering::Relaxed) + 1;
+        self.touch[leaf_idx].store(tick, Ordering::Relaxed);
+    }
+
+    /// Leaf `leaf_idx`'s last-touch tick (0 = never touched). Only
+    /// comparable within this tree.
+    #[inline]
+    pub fn leaf_touch(&self, leaf_idx: usize) -> u64 {
+        self.touch[leaf_idx].load(Ordering::Relaxed)
+    }
+
+    /// Total seqlock acquisition attempts lost to contention, summed
+    /// over all leaves since construction (writer heat; the mmd policy
+    /// watches the per-tick delta).
+    pub fn lock_waits_total(&self) -> u64 {
+        self.lock_waits_total.load(Ordering::Relaxed)
+    }
+
+    /// Evict leaf `leaf_idx` through `svc` under the leaf's seqlock:
+    /// payload to swap, physical block into epoch limbo
+    /// ([`SwapService::evict_deferred`]), slot recorded in the swap
+    /// word. Translations keep naming the retired block on purpose —
+    /// see the section comment. Fails with [`Error::SwappedOut`] if the
+    /// leaf is already evicted.
+    ///
+    /// # Safety
+    /// The tree must be operating under the fault-capable contract
+    /// ([`crate::trees::TreeRegistry::register_evictable`]): every
+    /// accessor runs a swap-checking path (seq-bracketed view/writer
+    /// APIs), and a faulter is installed if any accessor may touch this
+    /// leaf before it is restored.
+    pub unsafe fn evict_leaf_via(&self, leaf_idx: usize, svc: &dyn SwapService) -> Result<SwapSlot> {
+        assert!(leaf_idx < self.geo.nleaves());
+        let (_guard, _) = self.seq_lock(leaf_idx);
+        let block = BlockId(self.blocks[leaf_idx].load(Ordering::Acquire));
+        if self.swap_words[leaf_idx].load(Ordering::Acquire) != SWAP_RESIDENT {
+            return Err(Error::SwappedOut(block));
+        }
+        // The stash's read sees a stable leaf: we hold the seqlock, so
+        // no writer can interleave bytes into the snapshot.
+        let slot = svc.evict_deferred(block)?;
+        // Publish the swap word *before* the guard's releasing store:
+        // any accessor that observes the post-evict sequence value also
+        // observes the slot.
+        self.swap_words[leaf_idx].store(slot.raw(), Ordering::Release);
+        Ok(slot)
+    }
+
+    /// Restore leaf `leaf_idx` through `faulter` under the leaf's
+    /// seqlock: fault the payload into a fresh block, adopt it
+    /// ([`TreeArray::publish_leaf`] — translation patch + generation
+    /// bump), clear the swap word. Returns `false` if the leaf was
+    /// already resident (an accessor's demand fault won the race).
+    ///
+    /// This is the daemon's restore/prefetch entry; accessor demand
+    /// faults run the same routine via the installed faulter
+    /// ([`TreeArray::fault_leaf_locked`] from inside their own held
+    /// guard).
+    pub(crate) fn restore_leaf_via(&self, leaf_idx: usize, faulter: &dyn LeafFaulter) -> Result<bool> {
+        assert!(leaf_idx < self.geo.nleaves());
+        let (_guard, _) = self.seq_lock(leaf_idx);
+        // SAFETY: we hold the leaf's seqlock.
+        unsafe { self.fault_leaf_locked(leaf_idx, faulter) }
+    }
+
+    /// Fault leaf `leaf_idx` back in with the *installed* faulter,
+    /// taking (and releasing) the leaf's seqlock. The accessor fault
+    /// hook for readers, which never hold the seqlock themselves.
+    /// Returns `false` if the leaf turned out resident (a peer's fault
+    /// or the daemon's restore won; the caller just retries its read).
+    pub(crate) fn fault_leaf(&self, leaf_idx: usize) -> Result<bool> {
+        let (_guard, _) = self.seq_lock(leaf_idx);
+        // SAFETY: we hold the leaf's seqlock.
+        unsafe { self.fault_leaf_under_guard(leaf_idx) }
+    }
+
+    /// The write-side accessor hook: [`TreeArray::fault_leaf`] for a
+    /// caller *already holding* leaf `leaf_idx`'s seqlock (a
+    /// [`crate::trees::TreeWriter`] inside its critical section —
+    /// re-acquiring would self-deadlock).
+    ///
+    /// # Safety
+    /// The caller holds leaf `leaf_idx`'s seqlock.
+    pub(crate) unsafe fn fault_leaf_under_guard(&self, leaf_idx: usize) -> Result<bool> {
+        let faulter = match self.installed_faulter() {
+            Some(f) => f,
+            None => {
+                // Re-check under the lock: the leaf may have been
+                // restored between the caller's check and our acquire.
+                if self.swap_words[leaf_idx].load(Ordering::Acquire) == SWAP_RESIDENT {
+                    return Ok(false);
+                }
+                return Err(Error::SwappedOut(BlockId(
+                    self.blocks[leaf_idx].load(Ordering::Acquire),
+                )));
+            }
+        };
+        // SAFETY: forwarded caller contract.
+        unsafe { self.fault_leaf_locked(leaf_idx, faulter) }
+    }
+
+    /// The locked core of every fault-in: re-check the swap word, read
+    /// the payload back through `faulter`, adopt the fresh block, clear
+    /// the swap word. Duplicate faults coalesce here — only the first
+    /// claimant under the seqlock sees a non-resident swap word.
+    ///
+    /// # Safety
+    /// The caller holds leaf `leaf_idx`'s seqlock.
+    pub(crate) unsafe fn fault_leaf_locked(
+        &self,
+        leaf_idx: usize,
+        faulter: &dyn LeafFaulter,
+    ) -> Result<bool> {
+        let raw = self.swap_words[leaf_idx].load(Ordering::Acquire);
+        if raw == SWAP_RESIDENT {
+            return Ok(false);
+        }
+        let fresh = faulter.fault_in(SwapSlot::from_raw(raw))?;
+        let (parent, _stale) = self.leaf_parent(leaf_idx);
+        // SAFETY: `fresh` is live, exclusively ours (fault_in transfers
+        // ownership), and holds the leaf's bytes; `parent` is this
+        // leaf's; the held seqlock serializes publication.
+        unsafe { self.publish_leaf(leaf_idx, parent, fresh) };
+        // Clear *after* the translation patch: an accessor observing
+        // "resident" must also observe the fresh translation, which the
+        // generation bump inside publish_leaf (and the guard's eventual
+        // releasing store) guarantees for seq-bracketed readers.
+        self.swap_words[leaf_idx].store(SWAP_RESIDENT, Ordering::Release);
+        self.note_touch(leaf_idx);
+        Ok(true)
+    }
+
     /// Walk to leaf `leaf_idx`, recording the single parent slot that
     /// names it (`None` at depth 1: the leaf is the root). Returns the
     /// slot and the currently recorded leaf block.
@@ -913,17 +1191,15 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     ///
     /// # Safety
     /// While any writer of this tree is live, the tree may be accessed
-    /// only through seq-checked paths: [`TreeView::get`] /
-    /// [`TreeView::get_batch`], [`TreeWriter`] methods, and the
+    /// only through seq-checked paths: **every** [`TreeView`] method
+    /// (`get`/`get_batch`/`to_vec`/`for_each_leaf_run` — all
+    /// seq-bracketed per leaf run), [`TreeWriter`] methods, and the
     /// concurrent relocation forms. Everything else must not overlap
     /// the writer's lifetime on any thread, because none of it retries
     /// on the sequence word and could observe a torn write: no
     /// [`TreeArray::leaf_slice`]-style raw slice, no [`Cursor`], no
     /// direct `get`/`set`/batch/`to_vec` calls on the `TreeArray`
-    /// itself — and no **bulk view paths** either
-    /// ([`TreeView::to_vec`], [`TreeView::for_each_leaf_run`]), which
-    /// hand out whole-leaf slices un-bracketed and carry their own
-    /// no-concurrent-writers contract.
+    /// itself.
     pub unsafe fn writer(&self) -> TreeWriter<'_, 'a, T, A>
     where
         T: Sync,
@@ -1357,5 +1633,68 @@ mod tests {
         assert_eq!(collected[200], Pair { lo: 200, hi: !200u32 });
         let got = t.get_batch(&[0, 500, 129]).unwrap();
         assert_eq!(got[1], Pair { lo: 500, hi: !500u32 });
+    }
+
+    // ---- software page-fault primitives ----
+
+    #[test]
+    fn evict_leaf_and_restore_roundtrip() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let n = 256 * 4;
+        let mut t: TreeArray<u32> = TreeArray::new(&a, n).unwrap();
+        let data: Vec<u32> = (0..n as u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        assert!(!t.leaf_swapped(2));
+        let slot = unsafe { t.evict_leaf_via(2, &swap) }.unwrap();
+        assert!(t.leaf_swapped(2));
+        assert_eq!(t.leaf_swap_slot(2), Some(slot));
+        assert_eq!(t.swapped_leaves(), 1);
+        assert!(
+            unsafe { t.evict_leaf_via(2, &swap) }.is_err(),
+            "double eviction must be rejected"
+        );
+        // Translation still names the retired block (in limbo) — the
+        // swap word is what keeps accessors off it.
+        assert!(a.is_live(t.leaf_block(2)));
+        assert!(t.restore_leaf_via(2, &swap).unwrap());
+        assert!(!t.leaf_swapped(2));
+        assert_eq!(t.to_vec(), data, "payload must survive the roundtrip");
+        assert!(!t.restore_leaf_via(2, &swap).unwrap(), "second restore is a no-op");
+    }
+
+    #[test]
+    fn fault_without_faulter_is_a_typed_error() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut t: TreeArray<u32> = TreeArray::new(&a, 256 * 2).unwrap();
+        let data: Vec<u32> = (0..512u32).collect();
+        t.copy_from_slice(&data).unwrap();
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        assert!(
+            matches!(t.fault_leaf(1), Err(Error::SwappedOut(_))),
+            "no faulter installed: the hook must surface a typed error, not panic"
+        );
+        // SAFETY: `swap` outlives every fault below and the clear.
+        unsafe { t.install_faulter(&swap) };
+        assert!(t.fault_leaf(1).unwrap());
+        assert!(!t.fault_leaf(1).unwrap(), "resident leaf: hook must no-op");
+        t.clear_faulter();
+        assert_eq!(t.to_vec(), data);
+    }
+
+    #[test]
+    fn touch_ticks_order_by_recency() {
+        let a = small_alloc();
+        let t: TreeArray<u32> = TreeArray::new(&a, 256 * 3).unwrap();
+        assert_eq!(t.leaf_touch(0), 0, "untouched leaves read 0");
+        t.note_touch(2);
+        t.note_touch(0);
+        t.note_touch(2);
+        assert!(t.leaf_touch(2) > t.leaf_touch(0), "later touches must rank hotter");
+        assert!(t.leaf_touch(0) > t.leaf_touch(1));
+        assert_eq!(t.lock_waits_total(), 0, "uncontended trees report no waits");
     }
 }

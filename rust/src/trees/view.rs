@@ -37,27 +37,38 @@
 //!
 //! 4. **Torn data reads under live writers** — a
 //!    [`crate::trees::TreeWriter`] may mutate a leaf while a view reads
-//!    it, so [`TreeView::get`] / [`TreeView::get_batch`] bracket every
-//!    leaf read between two loads of the leaf's sequence word
-//!    (the per-leaf seqlock; see the [`TreeArray`] "Writers" docs) and
-//!    retry on an odd or changed value. A generation re-check inside
-//!    the bracket pins the translation to the *current* block, so a
-//!    pre-relocation translation can never satisfy a post-relocation
-//!    read (the stale block's bytes stop being updated the moment the
-//!    leaf moves). When no writer exists the bracket costs two
-//!    uncontended atomic loads per leaf run and never retries.
+//!    it, so **every** view read path (`get`, `get_batch`, `to_vec`,
+//!    `for_each_leaf_run`) brackets each leaf read between two loads of
+//!    the leaf's sequence word (the per-leaf seqlock; see the
+//!    [`TreeArray`] "Writers" docs) and retries on an odd or changed
+//!    value. A generation re-check inside the bracket pins the
+//!    translation to the *current* block, so a pre-relocation
+//!    translation can never satisfy a post-relocation read (the stale
+//!    block's bytes stop being updated the moment the leaf moves).
+//!    When no writer exists the bracket costs two uncontended atomic
+//!    loads per leaf run and never retries. Views are therefore always
+//!    safe under writers — one contract, every path; the bulk paths
+//!    buy it by snapshotting each leaf run into a scratch buffer
+//!    before handing it to the callback.
+//! 5. **Evicted leaves (software page faults)** — when the tree is
+//!    registered evictable, a leaf's bytes may be in swap. Each
+//!    bracket checks the leaf's swap word after its begin-load (the
+//!    evictor publishes the word before releasing the leaf seqlock, so
+//!    the bracket cannot miss it); a hit diverts to
+//!    `TreeArray::fault_leaf`, which brings the payload back through
+//!    the installed [`crate::pmem::LeafFaulter`] *under the leaf's
+//!    seqlock* and republishes the translation. The view then simply
+//!    retries. With no faulter installed the read surfaces
+//!    [`Error::SwappedOut`]; a permanently failing backing surfaces
+//!    [`Error::SwapFaultFailed`] — typed errors on the `Result` paths,
+//!    a documented panic on the `_unchecked`/`to_vec` conveniences.
 //!
 //! What stays on the caller: data writes go through
 //! [`crate::trees::TreeWriter`] (or `&mut TreeArray` while no view is
 //! alive) — never both regimes at once with unchecked paths (the
-//! [`TreeArray::writer`] contract). The bulk slice paths
-//! ([`TreeView::for_each_leaf_run`], [`TreeView::to_vec`]) hand out
-//! whole-leaf slices without seq-checking and keep the **no concurrent
-//! writers** contract: use them only while writers are quiescent (the
-//! experiments checksum after joining their writer threads). Relocation
-//! under live views must go through
-//! [`TreeArray::migrate_leaf_concurrent`]; the immediate-free forms
-//! ([`TreeArray::migrate_leaf`] / [`TreeArray::migrate_leaf_shared`])
+//! [`TreeArray::writer`] contract). Relocation under live views must go
+//! through [`TreeArray::migrate_leaf_concurrent`]; the immediate-free
+//! forms ([`TreeArray::migrate_leaf`] / [`TreeArray::migrate_leaf_shared`])
 //! keep their no-concurrent-access contract.
 
 use std::sync::atomic::{fence, Ordering};
@@ -66,7 +77,7 @@ use crate::error::{Error, Result};
 use crate::pmem::epoch::ReaderSlot;
 use crate::pmem::{BlockAlloc, BlockAllocator};
 use crate::trees::tlb::{LeafTlb, TlbStats};
-use crate::trees::tree_array::{Pod, TreeArray};
+use crate::trees::tree_array::{Pod, TreeArray, SWAP_RESIDENT};
 
 /// A `Send` shared read view over a [`TreeArray`], with a private
 /// leaf-TLB and an arena-epoch registration. Create one per worker via
@@ -88,6 +99,9 @@ pub struct TreeView<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     /// Seq-bracket retries: reads re-run because a writer or a
     /// relocation overlapped them (hazard 4 in the module docs).
     seq_retries: u64,
+    /// Software page faults this view triggered: reads that found their
+    /// leaf evicted and brought it back in (hazard 5).
+    faults: u64,
 }
 
 // SAFETY: a TreeView is a read-only handle. Its raw pointers (inside
@@ -112,6 +126,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             slot,
             walks: 0,
             seq_retries: 0,
+            faults: 0,
         }
     }
 
@@ -174,8 +189,33 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         }
         let (p, span) = self.tree.leaf_ptr(leaf_idx);
         self.walks += 1;
+        // Recency for eviction policy: a full translation means this
+        // leaf left the hot set at some point — cheap enough to stamp
+        // here, and misses are exactly the signal mmd wants (TLB hits
+        // would stamp every access and serialize the hot path on the
+        // clock).
+        self.tree.note_touch(leaf_idx);
         self.tlb.insert(leaf_idx, self.gen, p as *mut u8, span);
         (p as *const T, span)
+    }
+
+    /// Hazard-5 half of the bracket: load the leaf's swap word
+    /// (`Acquire`, so a hit happens-after the evictor's publication)
+    /// and fault the leaf back in when it is out. Returns `true` when a
+    /// fault ran (caller must re-pin and retry its bracket — the fault
+    /// republished the translation and bumped the generation).
+    #[inline]
+    fn fault_if_swapped(&mut self, leaf: usize) -> Result<bool> {
+        if self.tree.swap_word(leaf).load(Ordering::Acquire) == SWAP_RESIDENT {
+            return Ok(false);
+        }
+        self.faults += 1;
+        // fault_leaf serializes on the leaf seqlock and re-checks under
+        // it, so concurrent views racing here coalesce: one does the
+        // I/O, the rest see Ok(false) and retry into the restored leaf.
+        self.tree.fault_leaf(leaf)?;
+        self.pin();
+        Ok(true)
     }
 
     /// One lap of the reader retry path (hazard 4): count it, back off
@@ -194,7 +234,10 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         self.pin();
     }
 
-    /// Read element `i` (bounds-checked).
+    /// Read element `i` (bounds-checked). On an evictable tree this may
+    /// fault the leaf in; fault failures surface as
+    /// [`Error::SwappedOut`] (no faulter installed) or
+    /// [`Error::SwapFaultFailed`] (backing store gave up).
     pub fn get(&mut self, i: usize) -> Result<T> {
         if i >= self.len() {
             return Err(Error::IndexOutOfBounds {
@@ -203,18 +246,36 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             });
         }
         // SAFETY: bounds checked.
-        Ok(unsafe { self.get_unchecked(i) })
+        unsafe { self.try_get_unchecked(i) }
     }
 
-    /// Read element `i` without bounds checking, seq-bracketed against
-    /// concurrent writers and relocation (module docs, hazard 4): the
-    /// value returned was the element's committed value at some point
-    /// inside the call, never a torn or mid-write snapshot.
+    /// Read element `i` without bounds checking.
+    ///
+    /// Convenience wrapper over [`TreeView::try_get_unchecked`].
+    ///
+    /// # Panics
+    /// When the leaf is evicted and cannot be faulted back in (no
+    /// faulter installed, or the swap backing failed permanently). Use
+    /// the `try_` form where swap failures must be handled.
     ///
     /// # Safety
     /// `i < self.len()`.
     #[inline]
     pub unsafe fn get_unchecked(&mut self, i: usize) -> T {
+        // SAFETY: forwarded caller contract.
+        unsafe { self.try_get_unchecked(i) }.expect("swap fault-in failed in TreeView::get_unchecked")
+    }
+
+    /// Read element `i` without bounds checking, seq-bracketed against
+    /// concurrent writers and relocation (module docs, hazard 4): the
+    /// value returned was the element's committed value at some point
+    /// inside the call, never a torn or mid-write snapshot. An evicted
+    /// leaf is faulted back in transparently (hazard 5).
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    pub unsafe fn try_get_unchecked(&mut self, i: usize) -> Result<T> {
         self.pin();
         let shift = self.tree.geo.leaf_cap.trailing_zeros();
         let leaf = i >> shift;
@@ -232,13 +293,20 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
                 self.seq_retry(&mut tries);
                 continue;
             }
+            // Evicted? Fault it in and re-run the bracket. (An eviction
+            // racing past s1 is caught by the s2 compare below — the
+            // evictor holds the seqlock — so the check cannot be
+            // missed, only seen one lap late.)
+            if self.fault_if_swapped(leaf)? {
+                continue;
+            }
             // SAFETY: in-bounds per caller; aligned per the Pod
             // contract; volatile because the load may race a writer —
             // a racy value never escapes (discarded below).
             let v = unsafe { p.add(off).read_volatile() };
             fence(Ordering::Acquire);
             if self.tree.seq_word(leaf).load(Ordering::Relaxed) == s1 {
-                return v;
+                return Ok(v);
             }
             self.seq_retry(&mut tries);
         }
@@ -248,7 +316,8 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     /// and grouped by leaf so each distinct leaf run costs one TLB
     /// probe and one seq bracket, exactly like [`TreeArray::get_batch`]
     /// plus the writer protocol: a run overlapped by a write or a
-    /// relocation of its leaf is retried wholesale.
+    /// relocation of its leaf is retried wholesale. Evicted leaves are
+    /// faulted in per run (hazard 5).
     pub fn get_batch(&mut self, idxs: &[usize]) -> Result<Vec<T>> {
         self.tree.check_batch(idxs)?;
         self.pin();
@@ -269,6 +338,9 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
                 let s1 = self.tree.seq_word(leaf).load(Ordering::Acquire);
                 if s1 & 1 == 1 || self.tree.generation() != self.gen {
                     self.seq_retry(&mut tries);
+                    continue;
+                }
+                if self.fault_if_swapped(leaf)? {
                     continue;
                 }
                 for &pos in &order[k..e] {
@@ -293,12 +365,49 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         Ok(out)
     }
 
+    /// Snapshot one whole leaf into `buf` under a seq bracket: the
+    /// bytes handed back are a committed state of the leaf (no torn or
+    /// mid-write values), faulted in first if evicted. The bulk paths
+    /// ([`TreeView::for_each_leaf_run`], [`TreeView::try_to_vec`]) are
+    /// built on this — copying under the bracket is what lets them keep
+    /// the "views are always safe under writers" contract while still
+    /// handing out slices.
+    fn read_leaf_snapshot(&mut self, leaf: usize, buf: &mut Vec<T>) -> Result<usize> {
+        let mut tries = 0u32;
+        loop {
+            let (p, span) = self.leaf_translate(leaf);
+            let s1 = self.tree.seq_word(leaf).load(Ordering::Acquire);
+            if s1 & 1 == 1 || self.tree.generation() != self.gen {
+                self.seq_retry(&mut tries);
+                continue;
+            }
+            if self.fault_if_swapped(leaf)? {
+                continue;
+            }
+            buf.clear();
+            buf.resize(span, T::default());
+            for (j, slot) in buf.iter_mut().enumerate() {
+                // SAFETY: j < span, the leaf's element count; volatile
+                // — a racy value never escapes (discarded below).
+                *slot = unsafe { p.add(j).read_volatile() };
+            }
+            fence(Ordering::Acquire);
+            if self.tree.seq_word(leaf).load(Ordering::Relaxed) == s1 {
+                return Ok(span);
+            }
+            self.seq_retry(&mut tries);
+        }
+    }
+
     /// Visit `idxs` grouped into per-leaf runs (the read-side analogue
     /// of [`TreeArray::for_each_leaf_run`]), translated through this
-    /// view's TLB under one pin. The leaf slice is valid only inside
-    /// the callback — do not stash it. Not seq-checked: the handed-out
-    /// slice requires that no [`crate::trees::TreeWriter`] mutates the
-    /// tree during the call (module docs).
+    /// view's TLB under one pin. Each run's leaf is snapshotted under a
+    /// seq bracket before the callback sees it, so this is safe under
+    /// concurrent writers like every other view path — the callback
+    /// gets a committed state of the leaf, at the cost of one leaf-size
+    /// copy per run (reused buffer, no per-run allocation in steady
+    /// state). The slice is valid only inside the callback — do not
+    /// stash it.
     pub fn for_each_leaf_run<F>(&mut self, idxs: &[usize], mut visit: F) -> Result<()>
     where
         F: FnMut(usize, &[T], &[u32]),
@@ -307,6 +416,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         self.pin();
         let order = self.tree.leaf_order(idxs);
         let shift = self.tree.geo.leaf_cap.trailing_zeros();
+        let mut buf: Vec<T> = Vec::new();
         let mut k = 0;
         while k < order.len() {
             let leaf = idxs[order[k] as usize] >> shift;
@@ -314,11 +424,8 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
             while e < order.len() && idxs[order[e] as usize] >> shift == leaf {
                 e += 1;
             }
-            let (p, span) = self.leaf_translate(leaf);
-            // SAFETY: p valid for span elements; the block stays
-            // allocated for this pin (module docs, hazard 3).
-            let elems = unsafe { std::slice::from_raw_parts(p, span) };
-            visit(leaf, elems, &order[k..e]);
+            let span = self.read_leaf_snapshot(leaf, &mut buf)?;
+            visit(leaf, &buf[..span], &order[k..e]);
             k = e;
         }
         // One pin for the whole run set (vs one per access).
@@ -326,21 +433,31 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
         Ok(())
     }
 
-    /// Copy the whole array out, one translation + memcpy per leaf.
-    /// Not seq-checked — same no-concurrent-writers contract as
-    /// [`TreeView::for_each_leaf_run`].
+    /// Copy the whole array out, one seq-bracketed snapshot per leaf —
+    /// safe under concurrent writers (each leaf is a committed state;
+    /// the vec as a whole is per-leaf atomic, not globally atomic).
+    ///
+    /// # Panics
+    /// When an evicted leaf cannot be faulted back in — use
+    /// [`TreeView::try_to_vec`] where swap failures must be handled.
     pub fn to_vec(&mut self) -> Vec<T> {
+        self.try_to_vec().expect("swap fault-in failed in TreeView::to_vec")
+    }
+
+    /// [`TreeView::to_vec`] with fault failures surfaced as typed
+    /// errors instead of a panic.
+    pub fn try_to_vec(&mut self) -> Result<Vec<T>> {
         self.pin();
         let mut out = Vec::with_capacity(self.len());
+        let mut buf: Vec<T> = Vec::new();
         for leaf in 0..self.nleaves() {
-            let (p, span) = self.leaf_translate(leaf);
-            // SAFETY: p valid for span elements under this pin.
-            out.extend_from_slice(unsafe { std::slice::from_raw_parts(p, span) });
+            let span = self.read_leaf_snapshot(leaf, &mut buf)?;
+            out.extend_from_slice(&buf[..span]);
         }
         // One pin for the whole copy (vs one per leaf).
         self.slot
             .record_saved_pins(self.nleaves().saturating_sub(1) as u64);
-        out
+        Ok(out)
     }
 
     /// Go offline: reclamation stops waiting on this view until its
@@ -363,6 +480,12 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     /// relocation overlapped them. 0 on writer-free workloads.
     pub fn seq_retries(&self) -> u64 {
         self.seq_retries
+    }
+
+    /// Software page faults this view triggered (reads that found their
+    /// leaf evicted). 0 on fully-resident workloads.
+    pub fn faults(&self) -> u64 {
+        self.faults
     }
 }
 
@@ -496,6 +619,90 @@ mod tests {
         assert_eq!(a.epoch().try_reclaim(&a), 1, "parked view is offline");
         // Waking up revalidates as usual.
         assert_eq!(v.get(0).unwrap(), data[0]);
+    }
+
+    #[test]
+    fn view_faults_evicted_leaves_back_in() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 4);
+        let swap = SwapPool::anonymous(&a).unwrap();
+        // SAFETY: `swap` outlives the faulter (cleared below).
+        unsafe { t.install_faulter(&swap) };
+        let mut v = t.view();
+        assert_eq!(v.get(10).unwrap(), data[10]); // leaf 0 cached in the TLB
+        // SAFETY: accessors are fault-capable (faulter installed).
+        unsafe { t.evict_leaf_via(0, &swap) }.unwrap();
+        unsafe { t.evict_leaf_via(2, &swap) }.unwrap();
+        assert_eq!(t.swapped_leaves(), 2);
+        // Demand fault through every read path.
+        assert_eq!(v.get(10).unwrap(), data[10], "get must fault leaf 0 in");
+        assert_eq!(v.faults(), 1);
+        assert!(!t.leaf_swapped(0));
+        let idxs = [256 * 2 + 5, 256 * 2 + 9, 3];
+        let got = v.get_batch(&idxs).unwrap();
+        assert_eq!(got, idxs.iter().map(|&i| data[i]).collect::<Vec<_>>());
+        assert_eq!(v.faults(), 2, "get_batch must fault leaf 2 in");
+        assert_eq!(t.swapped_leaves(), 0);
+        // to_vec faults too (re-evict one first).
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        assert_eq!(v.to_vec(), data, "to_vec must fault leaf 1 in");
+        assert_eq!(v.faults(), 3);
+        t.clear_faulter();
+    }
+
+    #[test]
+    fn view_fault_without_faulter_is_a_typed_error() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 2);
+        let swap = SwapPool::anonymous(&a).unwrap();
+        // SAFETY: no faulter installed — that is the point: eviction
+        // only needs fault-capable accessors when accessors race it,
+        // and this test's view only reads after the typed error check.
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        let mut v = t.view();
+        assert_eq!(v.get(0).unwrap(), data[0], "resident leaf still reads");
+        assert!(
+            matches!(v.get(300), Err(Error::SwappedOut(_))),
+            "evicted leaf without a faulter must be a typed error"
+        );
+        assert!(v.try_to_vec().is_err());
+        // Install the faulter: the same read now succeeds.
+        // SAFETY: `swap` outlives the faulter (cleared below).
+        unsafe { t.install_faulter(&swap) };
+        assert_eq!(v.get(300).unwrap(), data[300]);
+        assert_eq!(v.to_vec(), data);
+        t.clear_faulter();
+    }
+
+    #[test]
+    fn bulk_paths_snapshot_under_writers() {
+        // Satellite: for_each_leaf_run/to_vec are seq-bracketed — a
+        // writer mid-flight on a leaf can no longer hand the callback a
+        // torn slice. Lock a leaf like a writer would, poke bytes, and
+        // check the bulk read retries until release (probed from a
+        // helper thread so the main thread can hold the lock).
+        let a = BlockAllocator::new(1024, 256).unwrap();
+        let (t, data) = filled(&a, 256 * 2);
+        let t = &t;
+        let guard = t.seq_lock(0).0;
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let done = &done;
+        std::thread::scope(|s| {
+            let reader = s.spawn(move || {
+                let mut v = t.view();
+                let out = v.to_vec();
+                done.store(true, Ordering::Release);
+                (out, v.seq_retries())
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(!done.load(Ordering::Acquire), "to_vec must wait out the in-flight leaf");
+            drop(guard);
+            let (out, retries) = reader.join().unwrap();
+            assert_eq!(out, data);
+            assert!(retries > 0, "the bracket must have retried");
+        });
     }
 
     #[test]

@@ -45,17 +45,28 @@
 //! are governed by the same QSBR contract as views, and pinning also
 //! keeps reclamation honest about a writer idling between bursts.
 //!
+//! # Evicted leaves (software page faults)
+//!
+//! On an evictable tree a target leaf may be in swap. Every writer
+//! path checks the leaf's swap word *after* acquiring its seqlock and,
+//! on a hit, faults the payload back in right there — via
+//! [`TreeArray::fault_leaf_under_guard`], reusing the already-held
+//! guard (re-acquiring would self-deadlock). The eviction protocol
+//! publishes the swap word before releasing the leaf's seqlock, so a
+//! writer that acquires after an eviction always sees it; a writer
+//! that acquired first blocks the eviction instead. No faulter
+//! installed surfaces [`crate::error::Error::SwappedOut`]; a dead
+//! backing surfaces [`crate::error::Error::SwapFaultFailed`].
+//!
 //! # What stays on the caller
 //!
 //! Creating a writer is `unsafe` ([`TreeArray::writer`]): for the
 //! writer's whole lifetime, every access to the tree — on any thread —
-//! must go through seq-checked paths ([`TreeView::get`] /
-//! [`TreeView::get_batch`], writer methods, concurrent relocation).
-//! Raw leaf slices, cursors, the plain
-//! `TreeArray::get`/`set`/batch/`to_vec` calls, **and the bulk view
-//! paths** ([`TreeView::to_vec`], [`TreeView::for_each_leaf_run`] —
-//! they hand out whole-leaf slices un-bracketed) do not retry on the
-//! sequence word and could observe a torn write.
+//! must go through seq-checked paths (every [`TreeView`] method —
+//! including the bulk paths, which snapshot under the bracket — writer
+//! methods, concurrent relocation). Raw leaf slices, cursors, and the
+//! plain `TreeArray::get`/`set`/batch/`to_vec` calls do not retry on
+//! the sequence word and could observe a torn write.
 //!
 //! Formal caveat, inherited by every seqlock ever shipped: a reader's
 //! speculative load of a leaf mid-write is a data race in the abstract
@@ -65,11 +76,13 @@
 //! loop) — the same pragmatics the kernel's seqlocks and crossbeam's
 //! `SeqLock` rely on.
 
+use std::sync::atomic::Ordering;
+
 use crate::error::{Error, Result};
 use crate::pmem::epoch::ReaderSlot;
 use crate::pmem::{BlockAlloc, BlockAllocator};
 use crate::trees::tlb::{LeafTlb, TlbStats};
-use crate::trees::tree_array::{Pod, SeqLockGuard, TreeArray};
+use crate::trees::tree_array::{Pod, SeqLockGuard, TreeArray, SWAP_RESIDENT};
 #[allow(unused_imports)] // rustdoc links
 use crate::trees::view::TreeView;
 
@@ -96,6 +109,9 @@ pub struct TreeWriter<'t, 'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     /// Seqlock acquisition attempts that lost to contention (another
     /// writer or a relocation holding the same leaf).
     lock_waits: u64,
+    /// Software page faults this writer triggered: accesses that found
+    /// their leaf evicted and brought it back in.
+    faults: u64,
 }
 
 // SAFETY: same argument as TreeView's — the raw pointers inside the
@@ -119,6 +135,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
             walks: 0,
             writes: 0,
             lock_waits: 0,
+            faults: 0,
         }
     }
 
@@ -190,7 +207,28 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
         guard
     }
 
-    /// Write element `i` (bounds-checked).
+    /// Software-page-fault hook for the write paths: with `leaf`'s
+    /// seqlock held (witnessed by `_guard`), fault the leaf in if it is
+    /// evicted. On `Ok` the leaf is resident and the next
+    /// [`TreeWriter::locked_base`] translates to the restored block
+    /// (the fault bumped the generation, so stale TLB entries miss).
+    /// Call *before* `locked_base` — the fault republishes the
+    /// translation.
+    #[inline]
+    fn fault_locked(&mut self, leaf: usize, _guard: &SeqLockGuard<'t, 'a, T, A>) -> Result<()> {
+        if self.tree.swap_word(leaf).load(Ordering::Acquire) == SWAP_RESIDENT {
+            return Ok(());
+        }
+        self.faults += 1;
+        // SAFETY: `_guard` is this leaf's held seqlock.
+        unsafe { self.tree.fault_leaf_under_guard(leaf)? };
+        Ok(())
+    }
+
+    /// Write element `i` (bounds-checked). On an evictable tree this
+    /// may fault the leaf in; fault failures surface as
+    /// [`Error::SwappedOut`] (no faulter installed) or
+    /// [`Error::SwapFaultFailed`] (backing store gave up).
     pub fn set(&mut self, i: usize, v: T) -> Result<()> {
         if i >= self.len() {
             return Err(Error::IndexOutOfBounds {
@@ -199,20 +237,38 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
             });
         }
         // SAFETY: bounds checked.
-        unsafe { self.set_unchecked(i, v) };
-        Ok(())
+        unsafe { self.try_set_unchecked(i, v) }
     }
 
     /// Write element `i` without bounds checking.
+    ///
+    /// Convenience wrapper over [`TreeWriter::try_set_unchecked`].
+    ///
+    /// # Panics
+    /// When the leaf is evicted and cannot be faulted back in — use the
+    /// `try_` form where swap failures must be handled.
     ///
     /// # Safety
     /// `i < self.len()`.
     #[inline]
     pub unsafe fn set_unchecked(&mut self, i: usize, v: T) {
+        // SAFETY: forwarded caller contract.
+        unsafe { self.try_set_unchecked(i, v) }
+            .expect("swap fault-in failed in TreeWriter::set_unchecked")
+    }
+
+    /// Write element `i` without bounds checking; an evicted leaf is
+    /// faulted back in under the already-held seqlock (module docs).
+    ///
+    /// # Safety
+    /// `i < self.len()`.
+    #[inline]
+    pub unsafe fn try_set_unchecked(&mut self, i: usize, v: T) -> Result<()> {
         self.pin();
         let shift = self.tree.geo.leaf_cap.trailing_zeros();
         let leaf = i >> shift;
         let guard = self.lock_leaf(leaf);
+        self.fault_locked(leaf, &guard)?;
         let p = self.locked_base(leaf);
         // SAFETY: in-bounds per caller; current block per locked_base;
         // volatile so racing seq-checked readers retry on a torn value
@@ -220,6 +276,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
         unsafe { p.add(i & (self.tree.geo.leaf_cap - 1)).write_volatile(v) };
         self.writes += 1;
         drop(guard);
+        Ok(())
     }
 
     /// Read-modify-write element `i` under its leaf's seqlock: `f` sees
@@ -238,6 +295,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
         // Guard, not a bare release: `f` is user code — if it panics,
         // the unwind must still release the seqlock.
         let guard = self.lock_leaf(leaf);
+        self.fault_locked(leaf, &guard)?;
         let p = self.locked_base(leaf);
         // SAFETY: in-bounds (checked); exclusive under the seqlock.
         let p = unsafe { p.add(i & (self.tree.geo.leaf_cap - 1)) };
@@ -264,6 +322,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
         let shift = self.tree.geo.leaf_cap.trailing_zeros();
         let leaf = i >> shift;
         let guard = self.lock_leaf(leaf);
+        self.fault_locked(leaf, &guard)?;
         let p = self.locked_base(leaf);
         // SAFETY: in-bounds (checked); exclusive under the seqlock.
         let v = unsafe { p.add(i & (self.tree.geo.leaf_cap - 1)).read() };
@@ -291,7 +350,10 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
     /// with respect to seq-checked readers and other writers of that
     /// leaf (one seqlock hold per run). Same commutativity contract as
     /// [`TreeArray::update_batch`]: calls for the same leaf happen in
-    /// batch order, calls across leaves are reordered.
+    /// batch order, calls across leaves are reordered. On a fault-in
+    /// failure mid-batch the error is returned with earlier leaf runs
+    /// already applied (each run commits atomically; the batch as a
+    /// whole is not transactional — it never was across leaves).
     pub fn update_batch<F: FnMut(usize, &mut T)>(&mut self, idxs: &[usize], mut f: F) -> Result<()> {
         self.tree.check_batch(idxs)?;
         self.pin();
@@ -310,6 +372,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
             // partially applied run is seq-consistent: every committed
             // element store is whole, and straddling readers retry).
             let guard = self.lock_leaf(leaf);
+            self.fault_locked(leaf, &guard)?;
             let p = self.locked_base(leaf);
             for &pos in &order[k..e] {
                 let pos = pos as usize;
@@ -360,6 +423,12 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeWriter<'t, 'a, T, A> {
     /// Seqlock acquisition attempts that lost to contention.
     pub fn lock_waits(&self) -> u64 {
         self.lock_waits
+    }
+
+    /// Software page faults this writer triggered (accesses that found
+    /// their leaf evicted). 0 on fully-resident workloads.
+    pub fn faults(&self) -> u64 {
+        self.faults
     }
 }
 
@@ -545,6 +614,53 @@ mod tests {
             s.pins < s.saved_pins,
             "batching should save more pins than it spends here: {s:?}"
         );
+    }
+
+    #[test]
+    fn writer_faults_evicted_leaves_back_in() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let (t, data) = filled(&a, 128 * 3);
+        let swap = SwapPool::anonymous(&a).unwrap();
+        // SAFETY: `swap` outlives the faulter (cleared below).
+        unsafe { t.install_faulter(&swap) };
+        // SAFETY: all access below goes through writer/view methods.
+        let mut w = unsafe { t.writer() };
+        // SAFETY: accessors are fault-capable (faulter installed).
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        assert!(t.leaf_swapped(1));
+        w.set(130, 7).unwrap();
+        assert_eq!(w.faults(), 1, "set must fault the leaf in");
+        assert!(!t.leaf_swapped(1));
+        assert_eq!(w.get(131).unwrap(), data[131], "neighbors survived the roundtrip");
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        assert_eq!(w.update(130, |v| v + 1).unwrap(), 8, "update must fault + RMW");
+        unsafe { t.evict_leaf_via(0, &swap) }.unwrap();
+        w.update_batch(&[0, 130], |_, v| *v = !*v).unwrap();
+        assert_eq!(w.faults(), 3, "update and update_batch each faulted once");
+        t.clear_faulter();
+        drop(w);
+        assert_eq!(t.get(131).unwrap(), data[131]);
+    }
+
+    #[test]
+    fn writer_fault_without_faulter_is_a_typed_error() {
+        use crate::pmem::SwapPool;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let (t, data) = filled(&a, 128 * 2);
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let mut w = unsafe { t.writer() };
+        // SAFETY: this test's accessors check the swap word and handle
+        // the error; nothing dereferences the evicted leaf.
+        unsafe { t.evict_leaf_via(1, &swap) }.unwrap();
+        assert!(matches!(w.set(128, 1), Err(Error::SwappedOut(_))));
+        assert!(matches!(w.get(128), Err(Error::SwappedOut(_))));
+        assert!(matches!(w.update_batch(&[128], |_, _| {}), Err(Error::SwappedOut(_))));
+        assert_eq!(w.get(0).unwrap(), data[0], "resident leaves unaffected");
+        // The daemon's restore path still works without a faulter.
+        assert!(t.restore_leaf_via(1, &swap).unwrap());
+        w.set(128, 1).unwrap();
+        assert_eq!(w.get(128).unwrap(), 1);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! The differential oracle suite — the repo's first property-style
 //! integration tier: seeded random op sequences (scalar/batch get+set,
 //! seqlock writer ops, view reads, safe + concurrent migration, swap
-//! evict/restore, injected swap I/O faults) run against a `Vec<u64>`
-//! mirror in lockstep, under BOTH allocator policies. The op model
+//! evict/restore, view/writer software page faults on evicted leaves
+//! served through a retrying fault queue, injected swap I/O faults)
+//! run against a `Vec<u64>` mirror in lockstep, under BOTH allocator
+//! policies. The op model
 //! lives in `nvm::testutil::diffops` so unit suites and future
 //! structures share it; failures shrink via `proptest_lite` (rerun
 //! with `NVM_PROPTEST_SEED=<base>` to reproduce a reported case).
@@ -32,6 +34,7 @@ where
     let migrations = AtomicU64::new(0);
     let evictions = AtomicU64::new(0);
     let restores = AtomicU64::new(0);
+    let hook_faults = AtomicU64::new(0);
     forall(CASES, |g| {
         let o = mk_case(g);
         ops.fetch_add(o.ops as u64, Ordering::Relaxed);
@@ -39,6 +42,7 @@ where
         migrations.fetch_add(o.migrations as u64, Ordering::Relaxed);
         evictions.fetch_add(o.evictions as u64, Ordering::Relaxed);
         restores.fetch_add(o.restores as u64, Ordering::Relaxed);
+        hook_faults.fetch_add(o.hook_faults as u64, Ordering::Relaxed);
     });
     assert!(ops.load(Ordering::Relaxed) > 0);
     assert!(
@@ -47,10 +51,15 @@ where
     );
     assert!(migrations.load(Ordering::Relaxed) > 0, "no case migrated a leaf");
     assert!(evictions.load(Ordering::Relaxed) > 0, "no case evicted a leaf");
+    assert!(
+        hook_faults.load(Ordering::Relaxed) > 0,
+        "no case took a software page fault through an accessor"
+    );
     assert_eq!(
         evictions.load(Ordering::Relaxed),
-        restores.load(Ordering::Relaxed),
-        "every successful eviction must be matched by a restore"
+        restores.load(Ordering::Relaxed) + hook_faults.load(Ordering::Relaxed),
+        "every successful eviction must come back exactly once \
+         (daemon-style restore or accessor demand fault)"
     );
 }
 

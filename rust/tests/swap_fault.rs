@@ -1,0 +1,408 @@
+//! Software page-fault stress: the `larger-than-DRAM` regime driven to
+//! its edges. Live readers and writers run over a tree whose leaves the
+//! mmd daemon keeps evicting under real pool pressure, every miss is
+//! served by a worker-backed [`FaultQueue`] over a fault-injected swap
+//! backing, and an injector thread arms transient I/O failures and
+//! completion-ordering delays the whole time. The contract under test
+//! (ISSUE acceptance): transient faults are retried with backoff and
+//! never observed by accessors; permanent faults surface as typed
+//! [`Error::SwapFaultFailed`] plus a degraded flag — never a panic, a
+//! wedge, or data loss.
+//!
+//! CI runs this in `--release` as well; the deadline-bounded phases
+//! simply converge faster there.
+//!
+//! [`FaultQueue`]: nvm::pmem::FaultQueue
+//! [`Error::SwapFaultFailed`]: nvm::Error::SwapFaultFailed
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use nvm::coordinator::experiments::{larger_than_dram, ExpConfig};
+use nvm::mmd::{MmdConfig, MmdHandle, ThresholdPolicy};
+use nvm::pmem::{BlockAllocator, FaultQueue, FaultQueueConfig, SwapPool};
+use nvm::testutil::{FailingBacking, Rng};
+use nvm::trees::{CompactTarget, TreeArray, TreeRegistry};
+use nvm::Error;
+
+/// 1 KB blocks keep trees multi-leaf at test sizes (u64 leaf_cap 128).
+const BLOCK: usize = 1024;
+const LEAF: usize = 128;
+
+fn cfg_fast() -> MmdConfig {
+    MmdConfig {
+        interval: Duration::from_micros(100),
+        tokens_per_tick: 16,
+        trace_every: 16,
+        ..MmdConfig::default()
+    }
+}
+
+/// Writer stripe value for element `i` after `round` full passes.
+fn wval(i: usize, round: u64) -> u64 {
+    (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ round
+}
+
+/// The headline stress: 2 verifying readers + 1 striped writer against
+/// a tree under enough pool pressure that the daemon must keep leaves
+/// evicted, while an injector arms single-shot transient I/O failures
+/// (always within the retry budget) and sub-millisecond completion
+/// delays. Readers assert every value they see; the writer's stripe is
+/// checksummed against the round counter at the end. Nothing here is
+/// allowed to observe a transient fault.
+#[test]
+fn demand_fault_stress_under_flaky_backing() {
+    let a = BlockAllocator::new(BLOCK, 64).unwrap();
+    let nleaves = 24;
+    let len = LEAF * nleaves;
+    let mut tree: TreeArray<u64> = TreeArray::new(&a, len).unwrap();
+    let data: Vec<u64> = (0..len).map(|i| (i as u64) << 8 | 0xA5).collect();
+    tree.copy_from_slice(&data).unwrap();
+    // Tree = 24 leaves + root = 25 blocks; scratch brings the pool to
+    // 59/64 live (free 7.8% < the 8% eviction trigger), so the daemon
+    // has standing pressure for the whole run.
+    let scratch = a.alloc_many(34).unwrap();
+
+    let (backing, ctl) = FailingBacking::new();
+    let swap = SwapPool::with_backing(&a, backing);
+    let q = FaultQueue::new(
+        &swap,
+        FaultQueueConfig {
+            max_depth: 8,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_millis(2),
+            ..FaultQueueConfig::default()
+        },
+    );
+    // SAFETY: cleared below before `q` drops.
+    unsafe { tree.install_faulter(&q) };
+    let registry = TreeRegistry::new();
+    // SAFETY: every accessor below is a fault-capable view/writer and
+    // the faulter is installed.
+    let id = unsafe { registry.register_evictable(&tree) };
+
+    // [0, half) is read-only ground truth; [half, len) is the writer's.
+    let half = len / 2;
+    let stop = AtomicBool::new(false);
+    let reads = AtomicU64::new(0);
+    let reader_faults = AtomicU64::new(0);
+
+    let (rounds, writer_faults, report) = std::thread::scope(|s| {
+        let tree = &tree;
+        let data = &data;
+        let stop = &stop;
+        let reads = &reads;
+        let reader_faults = &reader_faults;
+        let q = &q;
+
+        q.attach_workers(s, 2);
+        let d = MmdHandle::spawn_with_swap(
+            s,
+            &a,
+            &registry,
+            ThresholdPolicy::default(),
+            cfg_fast(),
+            q,
+        );
+
+        let mut readers = Vec::new();
+        for t in 0..2u64 {
+            readers.push(s.spawn(move || {
+                let mut v = tree.view();
+                let mut rng = Rng::new(0x51E55 + t);
+                while !stop.load(Ordering::Acquire) {
+                    let i = rng.below(half as u64) as usize;
+                    let got = v.get(i).expect("transient faults must never reach readers");
+                    assert_eq!(got, data[i], "reader saw a torn or lost value at {i}");
+                    reads.fetch_add(1, Ordering::Relaxed);
+                }
+                reader_faults.fetch_add(v.faults(), Ordering::Relaxed);
+            }));
+        }
+
+        let wr = s.spawn(move || {
+            // SAFETY: sole writer; its stripe [half, len) is disjoint
+            // from what the readers assert on, and the writer is
+            // fault-capable by construction.
+            let mut w = unsafe { tree.writer() };
+            let mut rounds = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                rounds += 1;
+                for i in half..len {
+                    w.set(i, wval(i, rounds))
+                        .expect("transient faults must never reach the writer");
+                }
+            }
+            (rounds, w.faults())
+        });
+
+        let ctl2 = ctl.clone();
+        let injector = s.spawn(move || {
+            let mut rng = Rng::new(0xFA11);
+            while !stop.load(Ordering::Acquire) {
+                // One transient failure somewhere in the next few I/Os:
+                // single-shot, so the 4-attempt retry budget always
+                // covers it.
+                ctl2.fail_nth(1 + rng.below(4));
+                if rng.chance(0.25) {
+                    // Jitter completion ordering through the workers.
+                    ctl2.delay_nth(1 + rng.below(3), Duration::from_micros(200));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            ctl2.disarm();
+        });
+
+        // Run until the queue has demonstrably served demand misses AND
+        // retried at least one injected transient; the deadline only
+        // bounds how long a genuinely broken build can hang the test.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while Instant::now() < deadline {
+            let st = q.stats();
+            if st.demand >= 40 && st.retries >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Release);
+        for r in readers {
+            r.join().unwrap();
+        }
+        let (rounds, writer_faults) = wr.join().unwrap();
+        injector.join().unwrap();
+        let report = d.shutdown();
+        q.shutdown_workers();
+        (rounds, writer_faults, report)
+    });
+
+    let st = q.stats();
+    assert!(st.demand >= 40, "eviction under pressure must force demand faults: {st:?}");
+    assert!(st.retries >= 1, "injected transients must exercise the retry path: {st:?}");
+    assert_eq!(st.permanent, 0, "single-shot transients must never escalate: {st:?}");
+    assert!(!q.degraded(), "queue must be healthy after transient-only faults");
+    assert!(report.actions.evict > 0, "pressure must trigger eviction: {}", report.summary());
+    assert_eq!(registry.swapped_out(), 0, "shutdown restores everything");
+    assert!(reads.load(Ordering::Relaxed) > 0);
+    assert!(
+        reader_faults.load(Ordering::Relaxed) + writer_faults > 0,
+        "accessors must have taken software page faults"
+    );
+
+    // Checksum against the mirror: reader half untouched, writer half
+    // at its last completed round (0 full rounds leaves the seed data).
+    let expected: Vec<u64> = (0..len)
+        .map(|i| {
+            if i < half || rounds == 0 {
+                data[i]
+            } else {
+                wval(i, rounds)
+            }
+        })
+        .collect();
+    assert_eq!(tree.to_vec(), expected, "evict/fault churn corrupted the tree");
+
+    registry.deregister(id);
+    drop(registry);
+    tree.clear_faulter();
+    for b in scratch {
+        a.free(b).unwrap();
+    }
+    a.epoch().synchronize(&a);
+    drop(tree);
+    drop(swap);
+    assert_eq!(a.stats().allocated, 0);
+}
+
+/// Permanent-failure contract: when the backing stops serving reads,
+/// demand faults burn the retry budget then surface
+/// [`Error::SwapFaultFailed`] (view and writer alike), the queue goes
+/// degraded, resident leaves keep serving, a daemon shutdown returns
+/// with the degradation reported and the parked leaves *kept parked*
+/// (never dropped) — and once the backing recovers, a plain restore
+/// brings everything back bit-exact and clears the flag.
+#[test]
+fn permanent_failure_surfaces_typed_errors_and_recovers() {
+    let a = BlockAllocator::new(BLOCK, 32).unwrap();
+    let len = LEAF * 4;
+    let mut tree: TreeArray<u64> = TreeArray::new(&a, len).unwrap();
+    let data: Vec<u64> = (0..len).map(|i| (i as u64).wrapping_mul(31) | 1).collect();
+    tree.copy_from_slice(&data).unwrap();
+
+    let (backing, ctl) = FailingBacking::new();
+    let swap = SwapPool::with_backing(&a, backing);
+    let q = FaultQueue::new(
+        &swap,
+        FaultQueueConfig {
+            max_retries: 3,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_micros(200),
+            ..FaultQueueConfig::default()
+        },
+    );
+    // SAFETY: cleared below before `q` drops.
+    unsafe { tree.install_faulter(&q) };
+    let registry = TreeRegistry::new();
+    // SAFETY: accessors below are fault-capable views/writers.
+    let id = unsafe { registry.register_evictable(&tree) };
+
+    // Park leaves 0 and 1 while the backing is healthy.
+    for leaf in 0..2 {
+        // SAFETY: the register_evictable contract holds.
+        unsafe { CompactTarget::evict_leaf(&tree, leaf, q.service()) }.unwrap();
+    }
+    assert_eq!(tree.swapped_leaves(), 2);
+
+    // From here every swap read fails permanently.
+    ctl.fail_always();
+    let mut v = tree.view();
+    match v.get(0) {
+        Err(Error::SwapFaultFailed { attempts, .. }) => {
+            assert_eq!(attempts, 3, "escalation happens exactly at the retry budget")
+        }
+        other => panic!("want SwapFaultFailed from the read hook, got {other:?}"),
+    }
+    assert!(q.degraded(), "permanent failure must mark the queue degraded");
+    let st = q.stats();
+    assert!(st.permanent >= 1, "{st:?}");
+    assert!(st.retries >= 2, "retries precede escalation: {st:?}");
+    // Resident leaves still serve — degradation is partial, not a wedge.
+    assert_eq!(v.get(2 * LEAF).unwrap(), data[2 * LEAF]);
+    // The writer hook surfaces the same typed error, and the failed set
+    // is failure-atomic (asserted via the final checksum).
+    // SAFETY: sole writer, fault-capable by construction.
+    let mut w = unsafe { tree.writer() };
+    match w.set(LEAF + 3, 7) {
+        Err(Error::SwapFaultFailed { .. }) => {}
+        other => panic!("want SwapFaultFailed from the write hook, got {other:?}"),
+    }
+    drop(w);
+    drop(v);
+
+    // A daemon shutdown over the degraded queue must return promptly
+    // (restore attempts are bounded), surface the degradation in its
+    // report, and leave the parked leaves parked rather than lose them.
+    let report = std::thread::scope(|s| {
+        let d = MmdHandle::spawn_with_swap(
+            s,
+            &a,
+            &registry,
+            ThresholdPolicy::default(),
+            cfg_fast(),
+            &q,
+        );
+        std::thread::sleep(Duration::from_millis(5));
+        d.shutdown()
+    });
+    assert!(report.swap_degraded, "report must surface the degraded backing: {}", report.summary());
+    assert_eq!(registry.swapped_out(), 2, "failed restores must keep leaves parked, not drop them");
+
+    // Backing recovers: a plain restore through the queue brings both
+    // leaves back and the first success clears the sticky flag.
+    ctl.disarm();
+    for leaf in 0..2 {
+        assert!(CompactTarget::restore_leaf(&tree, leaf, &q).unwrap());
+    }
+    assert!(!q.degraded(), "first successful fault-in clears degradation");
+    assert_eq!(tree.swapped_leaves(), 0);
+    assert_eq!(tree.to_vec(), data, "parked payloads must survive the outage bit-exact");
+
+    registry.deregister(id);
+    drop(registry);
+    tree.clear_faulter();
+    a.epoch().synchronize(&a);
+    drop(tree);
+    drop(swap);
+    assert_eq!(a.stats().allocated, 0);
+}
+
+/// The `larger-than-dram` experiment end-to-end at a quick sample: all
+/// three rows (resident / paged / paged+flaky) run their full setup,
+/// paging loop, and checksum teardown — the run functions carry their
+/// own zero-panic / zero-escalation / bit-exact assertions, so this is
+/// the experiment's whole acceptance contract in one call.
+#[test]
+fn larger_than_dram_experiment_end_to_end() {
+    let cfg = ExpConfig {
+        sample: 25_000,
+        threads: 2,
+        ..Default::default()
+    };
+    let t = larger_than_dram(&cfg);
+    let demand = t.cell("2T paged+flaky", 1).expect("paged+flaky row present");
+    assert!(demand > 0.0, "a larger-than-DRAM run must take demand faults");
+    assert!(t.cell("2T resident", 0).expect("resident row present") > 0.0);
+}
+
+/// Completion-ordering: four requester threads demand-fault disjoint
+/// leaves through two queue workers while every backing I/O carries a
+/// delay and one early I/O fails transiently — completions come back in
+/// an order unrelated to requests, and none of that is observable:
+/// every read is correct, every leaf ends resident, nothing escalates.
+#[test]
+fn worker_completions_reorder_without_loss() {
+    let a = BlockAllocator::new(BLOCK, 64).unwrap();
+    let nleaves = 8;
+    let len = LEAF * nleaves;
+    let mut tree: TreeArray<u64> = TreeArray::new(&a, len).unwrap();
+    let data: Vec<u64> = (0..len).map(|i| (i as u64) ^ 0x5A5A).collect();
+    tree.copy_from_slice(&data).unwrap();
+
+    let (backing, ctl) = FailingBacking::new();
+    let swap = SwapPool::with_backing(&a, backing);
+    let q = FaultQueue::new(&swap, FaultQueueConfig::default());
+    // SAFETY: cleared below before `q` drops.
+    unsafe { tree.install_faulter(&q) };
+    let registry = TreeRegistry::new();
+    // SAFETY: accessors below are fault-capable views.
+    let id = unsafe { registry.register_evictable(&tree) };
+    for leaf in 0..nleaves {
+        // SAFETY: the register_evictable contract holds.
+        unsafe { CompactTarget::evict_leaf(&tree, leaf, q.service()) }.unwrap();
+    }
+    assert_eq!(tree.swapped_leaves(), nleaves);
+
+    // Slow every backing read and fail one of the first few: with two
+    // workers serving four requesters the completion order diverges
+    // from request order, and the transient is retried behind the
+    // scenes.
+    ctl.delay_all(Duration::from_micros(300));
+    ctl.fail_nth(2);
+
+    let faults: u64 = std::thread::scope(|s| {
+        let tree = &tree;
+        let data = &data;
+        q.attach_workers(s, 2);
+        let mut hs = Vec::new();
+        for t in 0..4usize {
+            hs.push(s.spawn(move || {
+                let mut v = tree.view();
+                for leaf in [t, t + 4] {
+                    for i in (leaf * LEAF..(leaf + 1) * LEAF).step_by(17) {
+                        assert_eq!(v.get(i).unwrap(), data[i], "reordered completion lost data");
+                    }
+                }
+                v.faults()
+            }));
+        }
+        let faults = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        q.shutdown_workers();
+        faults
+    });
+    ctl.disarm();
+
+    assert!(faults >= nleaves as u64, "each parked leaf must fault in: {faults}");
+    assert_eq!(tree.swapped_leaves(), 0);
+    let st = q.stats();
+    assert!(st.retries >= 1, "the injected transient must have been retried: {st:?}");
+    assert_eq!(st.permanent, 0, "{st:?}");
+    assert!(!q.degraded());
+    assert_eq!(tree.to_vec(), data);
+
+    registry.deregister(id);
+    drop(registry);
+    tree.clear_faulter();
+    a.epoch().synchronize(&a);
+    drop(tree);
+    drop(swap);
+    assert_eq!(a.stats().allocated, 0);
+}
