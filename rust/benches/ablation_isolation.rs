@@ -1,0 +1,71 @@
+//! Bench: multi-tenant isolation (the PR 8 tentpole).
+//!
+//! Runs the `multi-tenant` experiment — five tenants (zipfian / scan /
+//! insert+churn / noisy over-quota / flaky-backing) on one shared pool,
+//! one worker-backed fault queue, and one mmd daemon in tenant mode —
+//! and prints the per-tenant table plus a PASS/FAIL verdict on the
+//! acceptance claim:
+//!
+//! * **misbehaviour is contained**: the well-behaved zipfian tenant's
+//!   throughput with a neighbour overrunning its quota and another
+//!   neighbour's backing dead stays >= 0.8x its throughput with the
+//!   same neighbour threads behaving. Both phases run the same thread
+//!   load, so the ratio isolates the *policy* cost (backpressure,
+//!   degraded containment, quota-pressure eviction), not scheduler
+//!   noise.
+//!
+//! The run itself asserts the containment contracts (typed errors only
+//! on the bad actors, bit-exact payloads, quotas back to zero), so a
+//! completed run is already a correctness pass; the gate here is the
+//! performance-isolation claim.
+//!
+//! `cargo bench --bench ablation_isolation`  (NVM_QUICK=1 for a fast
+//! pass)
+
+use nvm::bench_utils::section;
+use nvm::coordinator::experiments::{multi_tenant, ExpConfig};
+
+fn main() {
+    let mut cfg = if std::env::var("NVM_QUICK").is_ok() {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    cfg.threads = 4;
+
+    section("Ablation: per-tenant throughput, benign vs misbehaving neighbours");
+    let t = multi_tenant(&cfg);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+
+    section("per-tenant containment counters");
+    for tenant in ["zipfian", "scan", "insert", "noisy", "flaky"] {
+        let faults = t.cell(tenant, 1).expect("fault-ins cell");
+        let evictions = t.cell(tenant, 2).expect("evictions cell");
+        let quota = t.cell(tenant, 3).expect("quota-fails cell");
+        let seen = t.cell(tenant, 4).expect("errors-seen cell");
+        println!(
+            "{tenant}: {faults:.0} fault-ins, {evictions:.0} evictions, \
+             {quota:.0} quota fails, {seen:.0} typed errors absorbed"
+        );
+    }
+
+    section("verdict");
+    let benign = t.cell("zipfian benign", 0).expect("benign row");
+    let contended = t.cell("zipfian", 0).expect("misbehaving row");
+    let ratio = contended / benign;
+    let ok = ratio >= 0.8;
+    println!(
+        "{} well-behaved throughput under misbehaving neighbours: {contended:.2} vs \
+         {benign:.2} Mop/s ({ratio:.2}x, need >= 0.8x)",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "{}",
+        if ok {
+            "isolation goal met: one tenant's overrun or dead backing degrades that tenant only"
+        } else {
+            "ISOLATION GOAL NOT MET — investigate (debug build? < 4 cores? daemon starved?)"
+        }
+    );
+}

@@ -56,6 +56,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             description: "Software page faults: readers+writer over a tree bigger than the pool",
         },
         ExperimentInfo {
+            name: "multi-tenant",
+            description: "Multi-tenant isolation: 5 tenants on one pool/queue/daemon, benign vs misbehaving",
+        },
+        ExperimentInfo {
             name: "parallel-blackscholes",
             description: "Partitioned parallel Black-Scholes over one sharded allocator",
         },
@@ -100,6 +104,7 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "larger-than-dram" | "larger_than_dram" => {
             vec![experiments::larger_than_dram(cfg)]
         }
+        "multi-tenant" | "multi_tenant" => vec![experiments::multi_tenant(cfg)],
         "parallel-blackscholes" | "parallel_blackscholes" => {
             vec![experiments::parallel_blackscholes(cfg)]
         }
@@ -149,10 +154,13 @@ mod tests {
             // by its own experiment test, the integration sweep, and
             // the release-mode mmd_stress tier); larger-than-dram runs
             // 3 full paging sub-runs (covered by its own e2e test in
-            // the release-mode swap_fault tier).
+            // the release-mode swap_fault tier); multi-tenant runs a
+            // two-phase 5-tenant daemon run (covered by its own e2e
+            // test in the release-mode multi_tenant tier).
             if e.name == "fig4-rbtree"
                 || e.name == "fragmentation-churn"
                 || e.name == "larger-than-dram"
+                || e.name == "multi-tenant"
             {
                 continue;
             }

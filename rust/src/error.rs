@@ -61,6 +61,20 @@ pub enum Error {
     /// The block is swapped out and must be faulted in first.
     SwappedOut(crate::pmem::BlockId),
 
+    /// A tenant's allocation would exceed its hard block quota
+    /// ([`crate::pmem::QuotaAlloc`]). Backpressure, not pool
+    /// exhaustion: the arena still has free blocks, this tenant has
+    /// spent its share. The tenant can free blocks and retry; no other
+    /// tenant is affected.
+    QuotaExceeded {
+        /// The tenant whose quota is exhausted.
+        tenant: u16,
+        /// Blocks the tenant holds right now.
+        used: usize,
+        /// The tenant's hard quota in blocks.
+        quota: usize,
+    },
+
     /// A swap fault-in exhausted its retries against a failing backing
     /// store — the fault queue's permanent-failure escalation
     /// ([`crate::pmem::FaultQueue`]). The payload is still resident in
@@ -124,6 +138,10 @@ impl std::fmt::Display for Error {
                 };
                 write!(f, "protection fault: domain {domain} {verb} {block:?}")
             }
+            Error::QuotaExceeded { tenant, used, quota } => write!(
+                f,
+                "tenant {tenant} over hard quota: {used} blocks used of {quota} allowed"
+            ),
             Error::SwappedOut(b) => write!(f, "block {b:?} is swapped out"),
             Error::SwapFaultFailed { slot, attempts } => write!(
                 f,
@@ -175,6 +193,13 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains('3') && s.contains("capacity 8"), "{s}");
         assert!(Error::StackUnderflow.to_string().contains("underflow"));
+        let q = Error::QuotaExceeded {
+            tenant: 7,
+            used: 12,
+            quota: 10,
+        };
+        let s = q.to_string();
+        assert!(s.contains("tenant 7") && s.contains("12") && s.contains("10"), "{s}");
     }
 
     #[test]

@@ -38,13 +38,21 @@
 //! [`BlockAlloc::alloc_in_span`]: crate::pmem::BlockAlloc::alloc_in_span
 //! [`TreeArray::migrate_leaf_concurrent_to`]: crate::trees::TreeArray::migrate_leaf_concurrent_to
 
-use crate::pmem::faultq::{LeafFaulter, SwapService};
+use crate::error::Error;
+use crate::pmem::faultq::{FaultQueue, LeafFaulter, SwapService};
+use crate::pmem::tenant::TenantRegistry;
 use crate::pmem::BlockAlloc;
 use crate::trees::TreeRegistry;
 
 /// Victims recorded per eviction pass are capped so a pathological
 /// burst cannot grow the report without bound.
 const VICTIM_CAP: usize = 128;
+
+/// A tenant's slice of a per-tick budget: proportional to its share,
+/// never below one (a positive share always makes progress).
+fn tenant_cap(budget: usize, share: u64, share_total: u64) -> usize {
+    (((budget as u128 * share as u128) / share_total.max(1) as u128) as usize).max(1)
+}
 
 /// Work counters for one [`Compactor`] (cumulative).
 #[derive(Clone, Copy, Debug, Default)]
@@ -302,6 +310,231 @@ impl<'e, A: BlockAlloc> Compactor<'e, A> {
             }
         }
     }
+
+    // ---- tenant-aware passes ---------------------------------------
+    //
+    // The same mechanisms, with three policy twists the tenant layer
+    // needs: (1) each tree's swap traffic goes through its owning
+    // tenant's routed backing ([`FaultQueue::scoped`]), so one tenant's
+    // dead device fails only that tenant's I/O; (2) pressured tenants'
+    // cold leaves evict first (soft-quota backpressure) and the budget
+    // splits by share so a noisy tenant cannot absorb a whole pass;
+    // (3) a tenant whose I/O fails mid-pass is skipped for the rest of
+    // the pass — containment — while every other tenant's work
+    // continues.
+
+    /// Evict up to `budget` leaves across tenants: pressured tenants'
+    /// leaves first, then coldest within each rank; at most each
+    /// tenant's share of the budget per pass; degraded tenants skipped
+    /// entirely. Every eviction goes through the leaf's owning tenant's
+    /// routed backing and credits its quota
+    /// ([`TenantRegistry::evict_credited`]).
+    pub fn evict_tenants(
+        &mut self,
+        budget: usize,
+        q: &FaultQueue<'_>,
+        tenants: &TenantRegistry,
+    ) -> usize {
+        let share_total = tenants.share_total().max(1);
+        let entries = self.registry.lock();
+        // (pressure rank, last-touch, entry, leaf): rank 0 = pressured
+        // tenant, so a soft-quota overrun drains before anyone else
+        // pays; coldest-first within a rank as usual.
+        let mut cands: Vec<(u8, u64, usize, usize)> = Vec::new();
+        for (ei, e) in entries.iter().enumerate() {
+            if !e.evictable || q.degraded_for(e.tenant) {
+                continue;
+            }
+            let rank = u8::from(!tenants.pressured(e.tenant));
+            for leaf in 0..e.tree.nleaves() {
+                if e.tree.leaf_swap_slot(leaf).is_none() {
+                    cands.push((rank, e.tree.leaf_touch(leaf), ei, leaf));
+                }
+            }
+        }
+        cands.sort();
+        let mut done = 0usize;
+        let mut taken: Vec<(u16, usize)> = Vec::new();
+        let mut failed: Vec<u16> = Vec::new();
+        for &(rank, _, ei, leaf) in cands.iter() {
+            if done >= budget {
+                break;
+            }
+            let e = &entries[ei];
+            if failed.contains(&e.tenant) {
+                continue;
+            }
+            let share = tenants.get(e.tenant).map(|t| t.share() as u64).unwrap_or(1);
+            let cap = tenant_cap(budget, share, share_total);
+            let ti = match taken.iter().position(|(t, _)| *t == e.tenant) {
+                Some(i) => i,
+                None => {
+                    taken.push((e.tenant, 0));
+                    taken.len() - 1
+                }
+            };
+            // The share cap keeps one tenant from absorbing a whole
+            // pass — but a *pressured* tenant is paying down its own
+            // overrun, and every leaf taken from it is one not taken
+            // from a healthy neighbour. Rank 0 evicts uncapped.
+            if rank != 0 && taken[ti].1 >= cap {
+                continue;
+            }
+            let svc = q.scoped(e.tenant);
+            // SAFETY: the evictable registration contract — accessors
+            // are fault-capable and a faulter is installed before any
+            // of them can hit this leaf.
+            match unsafe { e.tree.evict_leaf(leaf, &svc) } {
+                Ok(_) => {
+                    taken[ti].1 += 1;
+                    done += 1;
+                    self.stats.evictions += 1;
+                    tenants.evict_credited(e.tenant);
+                    if self.victims.len() < VICTIM_CAP {
+                        self.victims.push((e.id, leaf));
+                    }
+                }
+                // This tenant's backing refuses writes: contain the
+                // failure to it, keep the pass going for the others.
+                Err(Error::Io(_)) | Err(Error::SwapFaultFailed { .. }) => failed.push(e.tenant),
+                // Pool-level trouble (no swap slots, OOM): the pass is
+                // over for everyone.
+                Err(_) => break,
+            }
+        }
+        done
+    }
+
+    /// The tenant-aware fault-back pass. `drain` is the shutdown shape:
+    /// it also restores pressured tenants (everything must come home)
+    /// and *probes* degraded tenants — one attempt per tenant per pass,
+    /// so a backing that recovered mid-drain is noticed and fully
+    /// restored, while a still-dead one costs one retry burst and is
+    /// re-skipped.
+    fn fault_back_tenants(
+        &mut self,
+        budget: usize,
+        q: &FaultQueue<'_>,
+        tenants: &TenantRegistry,
+        prefetch: bool,
+        drain: bool,
+    ) -> usize {
+        let share_total = tenants.share_total().max(1);
+        let entries = self.registry.lock();
+        let mut cands: Vec<(std::cmp::Reverse<u64>, usize, usize)> = Vec::new();
+        for (ei, e) in entries.iter().enumerate() {
+            if !drain {
+                if q.degraded_for(e.tenant) {
+                    continue; // parked: its backing cannot answer
+                }
+                if tenants.pressured(e.tenant) {
+                    // Restoring into a pressured tenant would recharge
+                    // the quota the eviction pass just relieved.
+                    continue;
+                }
+            }
+            for leaf in 0..e.tree.nleaves() {
+                if e.tree.leaf_swap_slot(leaf).is_some() {
+                    cands.push((std::cmp::Reverse(e.tree.leaf_touch(leaf)), ei, leaf));
+                }
+            }
+        }
+        cands.sort();
+        let mut done = 0usize;
+        let mut taken: Vec<(u16, usize)> = Vec::new();
+        let mut failed: Vec<u16> = Vec::new();
+        for &(_, ei, leaf) in cands.iter() {
+            if done >= budget {
+                break;
+            }
+            let e = &entries[ei];
+            if failed.contains(&e.tenant) {
+                continue;
+            }
+            let share = tenants.get(e.tenant).map(|t| t.share() as u64).unwrap_or(1);
+            let cap = tenant_cap(budget, share, share_total);
+            let ti = match taken.iter().position(|(t, _)| *t == e.tenant) {
+                Some(i) => i,
+                None => {
+                    taken.push((e.tenant, 0));
+                    taken.len() - 1
+                }
+            };
+            if taken[ti].1 >= cap {
+                continue;
+            }
+            let faulter = q.scoped(e.tenant);
+            match e.tree.restore_leaf(leaf, &faulter) {
+                Ok(true) => {
+                    taken[ti].1 += 1;
+                    done += 1;
+                    if prefetch {
+                        self.stats.prefetched += 1;
+                    } else {
+                        self.stats.restores += 1;
+                    }
+                }
+                Ok(false) => {} // demand fault won the race
+                // This tenant's backing cannot answer: contain.
+                Err(Error::SwapFaultFailed { .. }) | Err(Error::Io(_)) => failed.push(e.tenant),
+                // Pool-level trouble (OOM): over for everyone.
+                Err(_) => break,
+            }
+        }
+        done
+    }
+
+    /// Restore up to `budget` swapped-out leaves across tenants,
+    /// hottest first with per-share caps; degraded *and pressured*
+    /// tenants are skipped (a pressured tenant's leaves stay parked
+    /// until its usage drops — that is the backpressure).
+    pub fn restore_tenants(
+        &mut self,
+        budget: usize,
+        q: &FaultQueue<'_>,
+        tenants: &TenantRegistry,
+    ) -> usize {
+        self.fault_back_tenants(budget, q, tenants, false, false)
+    }
+
+    /// Speculative tenant-aware fault-back (the Prefetch action), same
+    /// skip rules as [`Compactor::restore_tenants`].
+    pub fn prefetch_tenants(
+        &mut self,
+        budget: usize,
+        q: &FaultQueue<'_>,
+        tenants: &TenantRegistry,
+    ) -> usize {
+        self.fault_back_tenants(budget, q, tenants, true, false)
+    }
+
+    /// Tenant-aware shutdown drain: restore everything restorable,
+    /// reclaiming limbo between rounds. Probes degraded tenants each
+    /// round (recovery detection); leaves whose tenant stays degraded
+    /// remain parked — the count excludes them, so a dead backing
+    /// cannot wedge shutdown.
+    pub fn restore_all_tenants(&mut self, q: &FaultQueue<'_>, tenants: &TenantRegistry) -> usize {
+        let mut total = 0usize;
+        loop {
+            let n = self.fault_back_tenants(usize::MAX, q, tenants, false, true);
+            total += n;
+            let parked: usize = {
+                let g = self.registry.lock();
+                g.iter()
+                    .filter(|e| !q.degraded_for(e.tenant))
+                    .map(|e| e.tree.swapped_leaves())
+                    .sum()
+            };
+            if parked == 0 {
+                return total;
+            }
+            let reclaimed = self.alloc.epoch().try_reclaim(self.alloc);
+            if n == 0 && reclaimed == 0 {
+                // Wedged: pool exhausted and nothing reclaimable.
+                return total;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -548,6 +781,147 @@ mod tests {
         assert_eq!(c.restore_all(&swap), 3);
         assert_eq!(tree.to_vec(), data);
         registry.deregister(id);
+    }
+
+    fn tcfg() -> crate::pmem::FaultQueueConfig {
+        crate::pmem::FaultQueueConfig {
+            max_retries: 3,
+            backoff_base: std::time::Duration::from_micros(50),
+            backoff_cap: std::time::Duration::from_micros(400),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tenant_eviction_splits_budget_by_share_and_uncaps_pressure() {
+        use crate::pmem::tenant::{TenantConfig, TenantRegistry as Tenants};
+        use crate::pmem::FaultQueue;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let tenants = Tenants::new();
+        let t1 = tenants.admit(TenantConfig {
+            soft_quota: 100,
+            hard_quota: 200,
+            share: 3,
+        });
+        let t2 = tenants.admit(TenantConfig::new(100, 100));
+        // Seed residency so eviction credits have something to credit
+        // (real flows charge through a QuotaAlloc; fault_charged is the
+        // unchecked path). Both tenants start healthy.
+        for _ in 0..5 {
+            tenants.fault_charged(t1.id());
+        }
+        for _ in 0..2 {
+            tenants.fault_charged(t2.id());
+        }
+        assert!(!t1.pressured() && !t2.pressured());
+        let mut tree1: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let mut tree2: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let d1: Vec<u64> = (0..128 * 4).map(|i| i as u64 | 1).collect();
+        let d2: Vec<u64> = (0..128 * 4).map(|i| (i as u64) << 1).collect();
+        tree1.copy_from_slice(&d1).unwrap();
+        tree2.copy_from_slice(&d2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let q = FaultQueue::with_tenants(&swap, tcfg(), &tenants);
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors touch evicted leaves in this test.
+        let id1 = unsafe { registry.register_evictable_for_tenant(&tree1, t1.id()) };
+        let id2 = unsafe { registry.register_evictable_for_tenant(&tree2, t2.id()) };
+        let mut c = Compactor::new(&a, &registry);
+        // Phase 1 — no pressure: budget 4 at shares 3:1 means t1 may
+        // take 3 and t2 may take 1; no tenant absorbs the whole pass.
+        assert_eq!(c.evict_tenants(4, &q, &tenants), 4);
+        let victims = c.take_victims();
+        let n1 = victims.iter().filter(|(id, _)| *id == id1).count();
+        let n2 = victims.iter().filter(|(id, _)| *id == id2).count();
+        assert_eq!((n1, n2), (3, 1), "share split violated: {victims:?}");
+        assert_eq!(t1.used(), 2, "evictions must credit the tenant");
+        assert_eq!(t2.used(), 1);
+        assert_eq!(t1.snapshot().evictions, 3);
+        // Bring everything home; nobody is pressured so the tick-mode
+        // restore does it all and recharges residency.
+        assert_eq!(c.restore_tenants(usize::MAX, &q, &tenants), 4);
+        assert_eq!((t1.used(), t2.used()), (5, 2));
+        // Phase 2 — t1 blows through its soft quota. Pressure exempts
+        // it from the share cap: paying down its own overrun is the
+        // point, and every leaf it gives up spares a healthy neighbour.
+        for _ in 0..145 {
+            tenants.fault_charged(t1.id());
+        }
+        assert!(t1.pressured() && !t2.pressured());
+        assert_eq!(c.evict_tenants(4, &q, &tenants), 4);
+        let victims = c.take_victims();
+        assert!(
+            victims.iter().all(|(id, _)| *id == id1),
+            "pressured tenant must absorb the pass uncapped: {victims:?}"
+        );
+        assert_eq!(t1.used(), 146);
+        assert!(t1.pressured(), "still over soft quota after the pass");
+        // Tick-mode restore skips the pressured tenant: its leaves stay
+        // parked (that IS the backpressure), and t2 has nothing parked.
+        assert_eq!(c.restore_tenants(usize::MAX, &q, &tenants), 0);
+        assert_eq!(registry.swapped_out_for(t1.id()), 4);
+        assert_eq!(registry.swapped_out_for(t2.id()), 0);
+        // Shutdown drain brings everything home, pressured or not.
+        assert_eq!(c.restore_all_tenants(&q, &tenants), 4);
+        assert_eq!(registry.swapped_out(), 0);
+        assert_eq!(tree1.to_vec(), d1);
+        assert_eq!(tree2.to_vec(), d2);
+        registry.deregister(id1);
+        registry.deregister(id2);
+    }
+
+    #[test]
+    fn tenant_restore_contains_a_dead_backing_and_probes_recovery() {
+        use crate::pmem::tenant::{TenantConfig, TenantRegistry as Tenants};
+        use crate::pmem::FaultQueue;
+        use crate::testutil::fault::FailingBacking;
+        let a = BlockAllocator::new(1024, 64).unwrap();
+        let tenants = Tenants::new();
+        let t1 = tenants.admit(TenantConfig::new(100, 100));
+        let t2 = tenants.admit(TenantConfig::new(100, 100));
+        let swap1 = SwapPool::anonymous(&a).unwrap();
+        let (fb, ctl) = FailingBacking::new();
+        let swap2 = SwapPool::with_backing(&a, fb);
+        let q = FaultQueue::with_tenants(&swap1, tcfg(), &tenants);
+        q.route_tenant(t2.id(), &swap2);
+        let mut tree1: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let mut tree2: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let d1: Vec<u64> = (0..128 * 4).map(|i| i as u64 ^ 0xA5).collect();
+        let d2: Vec<u64> = (0..128 * 4).map(|i| i as u64 ^ 0x5A).collect();
+        tree1.copy_from_slice(&d1).unwrap();
+        tree2.copy_from_slice(&d2).unwrap();
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors touch evicted leaves in this test.
+        let id1 = unsafe { registry.register_evictable_for_tenant(&tree1, t1.id()) };
+        let id2 = unsafe { registry.register_evictable_for_tenant(&tree2, t2.id()) };
+        let mut c = Compactor::new(&a, &registry);
+        assert_eq!(c.evict_tenants(usize::MAX, &q, &tenants), 8, "both trees park");
+        // t2's backing dies. The tick restore must bring t1 fully home,
+        // burn exactly one retry burst on t2, and contain the failure.
+        ctl.fail_always();
+        assert_eq!(c.restore_tenants(usize::MAX, &q, &tenants), 4);
+        assert!(q.degraded_for(t2.id()) && !q.degraded_for(t1.id()));
+        assert_eq!(registry.swapped_out_for(t1.id()), 0);
+        assert_eq!(registry.swapped_out_for(t2.id()), 4);
+        // While degraded, tick restores skip t2 entirely: no wasted I/O.
+        let ops_before = ctl.ops();
+        assert_eq!(c.restore_tenants(usize::MAX, &q, &tenants), 0);
+        assert_eq!(ctl.ops(), ops_before, "degraded tenant must not be re-probed per tick");
+        // The backing recovers: the shutdown drain's probe notices and
+        // restores everything.
+        ctl.disarm();
+        assert_eq!(c.restore_all_tenants(&q, &tenants), 4);
+        assert!(!q.degraded_for(t2.id()), "success clears the tenant's flag");
+        assert_eq!(registry.swapped_out(), 0);
+        assert_eq!(tree1.to_vec(), d1);
+        assert_eq!(tree2.to_vec(), d2);
+        registry.deregister(id1);
+        registry.deregister(id2);
+        drop(registry);
+        a.epoch().synchronize(&a);
+        drop(tree1);
+        drop(tree2);
+        assert_eq!(a.stats().allocated, 0);
     }
 
     #[test]

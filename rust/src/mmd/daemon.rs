@@ -30,6 +30,7 @@ use crate::mmd::compactor::{CompactStats, Compactor};
 use crate::mmd::policy::{Action, Policy, PolicyCtx};
 use crate::mmd::stats::FragSampler;
 use crate::pmem::faultq::{FaultQueue, FaultStats, SwapService};
+use crate::pmem::tenant::{TenantRegistry, TenantSnapshot};
 use crate::pmem::{BlockAlloc, SwapPool};
 use crate::trees::TreeRegistry;
 
@@ -122,6 +123,11 @@ pub struct MmdReport {
     /// Fault-queue counters at shutdown (all zero for a daemon spawned
     /// without a queue).
     pub fault: FaultStats,
+    /// Per-tenant rows at shutdown (empty unless spawned with
+    /// [`MmdHandle::spawn_with_tenants`]): blocks used vs. quota,
+    /// evictions, faults, pressured/degraded — the isolation audit
+    /// trail.
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl MmdReport {
@@ -162,6 +168,22 @@ impl MmdReport {
         if self.swap_degraded {
             s.push_str(" [SWAP DEGRADED: swap traffic was suspended]");
         }
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "\n  tenant {}: {}/{} blocks (soft {}, peak {}), evictions={} faults={} \
+                 quota_failures={}{}{}",
+                t.tenant,
+                t.used,
+                t.hard_quota,
+                t.soft_quota,
+                t.peak,
+                t.evictions,
+                t.faults,
+                t.quota_failures,
+                if t.pressured { " [PRESSURED]" } else { "" },
+                if t.degraded { " [DEGRADED]" } else { "" },
+            ));
+        }
         s
     }
 }
@@ -197,7 +219,7 @@ impl<'scope> MmdHandle<'scope> {
         P: Policy + 'env,
     {
         let (tx, rx) = channel();
-        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, None, rx));
+        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, None, None, rx));
         MmdHandle { tx, join }
     }
 
@@ -229,7 +251,45 @@ impl<'scope> MmdHandle<'scope> {
         P: Policy + 'env,
     {
         let (tx, rx) = channel();
-        let join = scope.spawn(move || daemon_run(alloc, registry, policy, cfg, Some(faultq), rx));
+        let join =
+            scope.spawn(move || daemon_run(alloc, registry, policy, cfg, Some(faultq), None, rx));
+        MmdHandle { tx, join }
+    }
+
+    /// [`MmdHandle::spawn_with_swap`] plus a [`TenantRegistry`]: the
+    /// full multi-tenant daemon. On top of the fault-queue loop it
+    ///
+    /// * evicts/restores through each tree's owning tenant's routed
+    ///   backing ([`FaultQueue::route_tenant`]), pressured tenants
+    ///   first, budget split by share,
+    /// * skips tenants whose backing is degraded — per-tenant
+    ///   containment instead of a global stop — and keeps ticking for
+    ///   everyone else,
+    /// * feeds the policy quota pressure
+    ///   ([`crate::mmd::PolicyCtx::pressured_tenants`]) and the
+    ///   latency-spike deltas (TLB invalidations, seq-bracket retries),
+    /// * reports per-tenant rows in [`MmdReport::tenants`].
+    ///
+    /// Shutdown drains every restorable tenant (probing degraded ones
+    /// for recovery); leaves of tenants that stay degraded remain
+    /// parked and are visible in the report.
+    pub fn spawn_with_tenants<'env, A, P>(
+        scope: &'scope Scope<'scope, 'env>,
+        alloc: &'env A,
+        registry: &'env TreeRegistry<'env>,
+        policy: P,
+        cfg: MmdConfig,
+        faultq: &'env FaultQueue<'env>,
+        tenants: &'env TenantRegistry,
+    ) -> MmdHandle<'scope>
+    where
+        A: BlockAlloc,
+        P: Policy + 'env,
+    {
+        let (tx, rx) = channel();
+        let join = scope.spawn(move || {
+            daemon_run(alloc, registry, policy, cfg, Some(faultq), Some(tenants), rx)
+        });
         MmdHandle { tx, join }
     }
 
@@ -292,6 +352,7 @@ fn daemon_run<'e, A, P>(
     mut policy: P,
     cfg: MmdConfig,
     ext: Option<&'e FaultQueue<'e>>,
+    tenants: Option<&'e TenantRegistry>,
     rx: Receiver<Ctl>,
 ) -> MmdReport
 where
@@ -320,6 +381,8 @@ where
     // tick", the sources are monotonic counters.
     let mut last_lock_waits = registry.lock_waits_total();
     let mut last_demand = ext.map(|q| q.stats().demand).unwrap_or(0);
+    let mut last_seq_retries = registry.seq_retries_total();
+    let mut last_epoch = alloc.epoch().current();
     // Own-mode degradation: EVICT_FAIL_DEGRADE consecutive eviction
     // ticks that moved nothing (with candidates present) mean the
     // backing is refusing writes — stop asking.
@@ -357,7 +420,20 @@ where
         let demand_now = ext.map(|q| q.stats().demand).unwrap_or(0);
         let demand_faults = demand_now.saturating_sub(last_demand);
         last_demand = demand_now;
-        let swap_degraded = own_degraded || ext.map(|q| q.degraded()).unwrap_or(false);
+        let sr = registry.seq_retries_total();
+        let seq_retries = sr.saturating_sub(last_seq_retries);
+        last_seq_retries = sr;
+        let tlb_invalidations = snap.epoch.epoch.saturating_sub(last_epoch);
+        last_epoch = snap.epoch.epoch;
+        // Tenant mode scopes degradation: one dead backing parks one
+        // tenant (the tenant-aware passes skip it); only every backing
+        // dead means swap traffic as a whole must stop. Without
+        // tenants the queue's aggregate flag keeps its PR-7 meaning.
+        let swap_degraded = own_degraded
+            || match tenants {
+                Some(tn) => tn.all_degraded(),
+                None => ext.map(|q| q.degraded()).unwrap_or(false),
+            };
         let ctx = PolicyCtx {
             swapped_out,
             evictable_resident: if swap_failed { 0 } else { evictable_resident },
@@ -365,6 +441,18 @@ where
             demand_faults,
             fault_queue_depth: ext.map(|q| q.depth()).unwrap_or(0),
             swap_degraded,
+            pressured_tenants: tenants.map(|tn| tn.pressured_count()).unwrap_or(0),
+            pressured_evictable: tenants
+                .map(|tn| {
+                    tn.rows()
+                        .iter()
+                        .filter(|r| r.pressured)
+                        .map(|r| registry.evictable_resident_for(r.tenant))
+                        .sum()
+                })
+                .unwrap_or(0),
+            tlb_invalidations,
+            seq_retries,
         };
         report.swap_degraded = swap_degraded;
         match policy.decide(&snap, &ctx) {
@@ -388,6 +476,33 @@ where
                     compactor.rebalance(cfg.tokens_per_tick, f, t);
                 }
                 report.actions.rebalance += 1;
+            }
+            Action::Evict { leaves } if tenants.is_some() => {
+                // Tenant mode: pressured tenants' cold leaves first,
+                // budget split by share, each tenant through its own
+                // routed backing, degraded tenants skipped.
+                let (q, tn) = (ext.expect("tenant mode requires a fault queue"), tenants.unwrap());
+                let did = compactor.evict_tenants(leaves.min(cfg.tokens_per_tick), q, tn);
+                if did > 0 {
+                    evict_fail_streak = 0;
+                    own_degraded = false;
+                } else if evictable_resident > 0 {
+                    evict_fail_streak += 1;
+                    if evict_fail_streak >= EVICT_FAIL_DEGRADE {
+                        own_degraded = true;
+                    }
+                }
+                report.actions.evict += 1;
+            }
+            Action::Restore { leaves } if tenants.is_some() => {
+                let (q, tn) = (ext.expect("tenant mode requires a fault queue"), tenants.unwrap());
+                compactor.restore_tenants(leaves.min(cfg.tokens_per_tick), q, tn);
+                report.actions.restore += 1;
+            }
+            Action::Prefetch { leaves } if tenants.is_some() => {
+                let (q, tn) = (ext.expect("tenant mode requires a fault queue"), tenants.unwrap());
+                compactor.prefetch_tenants(leaves.min(cfg.tokens_per_tick), q, tn);
+                report.actions.prefetch += 1;
             }
             Action::Evict { leaves } => {
                 let svc: Option<&dyn SwapService> = match ext {
@@ -459,17 +574,25 @@ where
     // back — the satellite teardown contract), then drain limbo. Ext
     // mode restores through the queue itself (full retry/backoff, no
     // shedding): at teardown, completeness beats latency.
-    match ext {
-        Some(q) => {
+    match (ext, tenants) {
+        (Some(q), Some(tn)) => {
             // Stats snapshot before the teardown restores so `demand`
             // reflects accessor misses, not shutdown bulk I/O.
+            report.fault = q.stats();
+            if registry.swapped_out() > 0 {
+                compactor.restore_all_tenants(q, tn);
+            }
+            report.swap_degraded = own_degraded || tn.all_degraded();
+            report.tenants = tn.rows();
+        }
+        (Some(q), None) => {
             report.fault = q.stats();
             if registry.swapped_out() > 0 {
                 compactor.restore_all(q);
             }
             report.swap_degraded = own_degraded || q.degraded();
         }
-        None => {
+        (None, _) => {
             if let Some(sw) = swap.as_ref() {
                 compactor.restore_all(sw);
             }
@@ -655,6 +778,72 @@ mod tests {
         }
         a.epoch().synchronize(&a);
         drop(tree);
+        drop(swap);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn tenant_daemon_parks_the_pressured_tenant_and_reports_rows() {
+        use crate::pmem::tenant::{TenantConfig, TenantRegistry};
+        use crate::pmem::{FaultQueue, FaultQueueConfig, SwapPool};
+        let a = BlockAllocator::new(1024, 32).unwrap();
+        let tenants = TenantRegistry::new();
+        // t1's seeded residency sits far enough over its soft quota
+        // that evicting its whole tree cannot relieve the pressure: the
+        // stable end state is "t1 fully parked", not an evict/restore
+        // oscillation.
+        let t1 = tenants.admit(TenantConfig::new(10, 100));
+        let t2 = tenants.admit(TenantConfig::new(100, 100));
+        for _ in 0..20 {
+            tenants.fault_charged(t1.id());
+        }
+        assert!(t1.pressured());
+        let mut tree1: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let mut tree2: TreeArray<u64> = TreeArray::new(&a, 128 * 4).unwrap();
+        let d1: Vec<u64> = (0..128 * 4).map(|i| i as u64 ^ 0x1111).collect();
+        let d2: Vec<u64> = (0..128 * 4).map(|i| i as u64 ^ 0x2222).collect();
+        tree1.copy_from_slice(&d1).unwrap();
+        tree2.copy_from_slice(&d2).unwrap();
+        let swap = SwapPool::anonymous(&a).unwrap();
+        let q = FaultQueue::with_tenants(&swap, FaultQueueConfig::default(), &tenants);
+        let registry = TreeRegistry::new();
+        // SAFETY: no accessors race the daemon in this test.
+        let id1 = unsafe { registry.register_evictable_for_tenant(&tree1, t1.id()) };
+        let id2 = unsafe { registry.register_evictable_for_tenant(&tree2, t2.id()) };
+        let report = std::thread::scope(|s| {
+            let d = MmdHandle::spawn_with_tenants(
+                s,
+                &a,
+                &registry,
+                ThresholdPolicy::default(),
+                cfg_fast(),
+                &q,
+                &tenants,
+            );
+            // The pool has plenty of headroom, so only quota pressure
+            // can drive these evictions.
+            wait_for(|| registry.swapped_out_for(t1.id()) == 4);
+            d.shutdown()
+        });
+        // Backpressure hit exactly the over-quota tenant.
+        assert!(report.actions.evict > 0, "{}", report.summary());
+        assert_eq!(t1.snapshot().evictions, 4, "{}", report.summary());
+        assert_eq!(t2.snapshot().evictions, 0, "healthy tenant must be untouched");
+        assert!(t1.pressured(), "still over soft quota after parking its whole tree");
+        // Shutdown drains everyone, pressured or not, and reports rows.
+        assert_eq!(registry.swapped_out(), 0, "{}", report.summary());
+        assert_eq!(report.tenants.len(), 2);
+        let r1 = report.tenants.iter().find(|r| r.tenant == t1.id()).unwrap();
+        assert!(r1.pressured && !r1.degraded);
+        assert_eq!(r1.evictions, 4);
+        assert!(!report.swap_degraded);
+        assert!(report.summary().contains("[PRESSURED]"), "{}", report.summary());
+        assert_eq!(tree1.to_vec(), d1);
+        assert_eq!(tree2.to_vec(), d2);
+        registry.deregister(id1);
+        registry.deregister(id2);
+        drop(registry);
+        drop((tree1, tree2));
         drop(swap);
         assert_eq!(a.stats().allocated, 0);
     }

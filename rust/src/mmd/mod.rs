@@ -35,7 +35,10 @@
 //!   fragmentation instead of reshuffling it.
 //! * [`daemon`] — [`MmdHandle`]: lifecycle (spawn/pause/quiesce/
 //!   shutdown), the control channel, pacing ([`MmdConfig`]), and the
-//!   [`MmdReport`] of actions taken.
+//!   [`MmdReport`] of actions taken. `spawn_with_tenants` runs the
+//!   same loop in multi-tenant mode: quota-pressure eviction, per-share
+//!   budget splits, per-tenant degraded containment, and per-tenant
+//!   report rows (see [`crate::pmem::TenantRegistry`]).
 //!
 //! # What runs where
 //!

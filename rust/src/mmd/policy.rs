@@ -30,15 +30,28 @@
 //!    stealing.
 //! 7. Otherwise **idle**.
 //!
+//! Between 1 and 2 sits **tenant quota pressure**: when any tenant is
+//! over its soft quota ([`PolicyCtx::pressured_tenants`]), evict even
+//! though the *pool* is fine — the tenant-aware eviction pass takes the
+//! pressured tenants' cold leaves first, which is what turns a soft
+//! quota into backpressure instead of a dead letter. Same limbo and
+//! queue-depth gates as pressure eviction.
+//!
 //! Two standing overrides: when the swap backing is **degraded**
 //! (permanent fault-in failures — [`PolicyCtx::swap_degraded`]) every
 //! swap-traffic action (evict/prefetch/restore) is skipped — the daemon
 //! degrades to a compaction-only service and *reports* the state
-//! instead of wedging on a dead device. And when writers ran **hot**
-//! last tick ([`PolicyCtx::lock_waits`] over the threshold), the
-//! compaction family defers to Idle — relocation takes the same per-leaf
-//! seqlocks the writers are already fighting over, so compacting into a
-//! write burst trades application throughput for tidiness.
+//! instead of wedging on a dead device. And when the application ran
+//! **hot** last tick, the compaction family defers to Idle — three
+//! heat signals, any one trips it: writer seqlock waits
+//! ([`PolicyCtx::lock_waits`] — relocation takes the same per-leaf
+//! seqlocks writers are fighting over), read-side seq-bracket retries
+//! ([`PolicyCtx::seq_retries`] — every relocation forces overlapped
+//! reads to re-run), and arena-epoch TLB invalidations
+//! ([`PolicyCtx::tlb_invalidations`] — every block move bumps the
+//! epoch and flushes every translation cache in the arena, so
+//! compacting into an invalidation storm multiplies reader walk
+//! costs). Fragmentation keeps; application latency does not.
 //!
 //! "Span" is whatever [`BlockAlloc::shard_spans`] reports: lock shards
 //! for the sharded allocator, 512-block subtrees for the two-level
@@ -112,8 +125,31 @@ pub struct PolicyCtx {
     /// Current depth of the async fault queue (0 without a queue).
     pub fault_queue_depth: usize,
     /// The fault path is failing permanently (retries exhausted on the
-    /// swap backing and no success since). Swap traffic must stop.
+    /// swap backing and no success since). Swap traffic must stop. In
+    /// tenant mode this means *every* tenant is degraded — single
+    /// dead backings are handled per-tenant inside the eviction and
+    /// restore passes, not by stopping the daemon's swap traffic.
     pub swap_degraded: bool,
+    /// Tenants currently over their soft quota
+    /// ([`crate::pmem::TenantRegistry::pressured_count`]); 0 without a
+    /// tenant registry. Nonzero triggers quota-pressure eviction even
+    /// when the pool itself has free headroom.
+    pub pressured_tenants: usize,
+    /// Resident evictable leaves owned by *pressured* tenants — what
+    /// quota-pressure eviction could actually take. The quota branch
+    /// gates on (and bounds its budget by) this, so a pressured tenant
+    /// with nothing left to evict cannot make the daemon churn healthy
+    /// tenants' leaves.
+    pub pressured_evictable: usize,
+    /// Arena-epoch TLB invalidations *since the last tick* — every
+    /// block move bumps the epoch and flushes every reader's
+    /// translation cache. A spike means compaction would multiply
+    /// reader walk costs.
+    pub tlb_invalidations: u64,
+    /// Read-side seq-bracket retries *since the last tick* (reads
+    /// re-run because a writer or relocation overlapped them). A spike
+    /// means relocation is already making readers hurt.
+    pub seq_retries: u64,
 }
 
 /// A daemon policy. `Send` so it can move onto the daemon thread;
@@ -149,6 +185,21 @@ pub struct ThresholdPolicy {
     pub queue_depth_hi: usize,
     /// Leaves to prefetch per demand-faulting tick.
     pub prefetch_leaves: usize,
+    /// Defer compaction/rebalancing while per-tick arena-epoch TLB
+    /// invalidations exceed this. The daemon's own relocations bump
+    /// the epoch once per moved leaf (≤ `tokens_per_tick`, 16 by
+    /// default), so the threshold sits well above the daemon's
+    /// self-induced rate — only application-driven invalidation storms
+    /// trip it.
+    pub tlb_inval_hi: u64,
+    /// Defer compaction/rebalancing while per-tick read-side
+    /// seq-bracket retries exceed this (readers are already being
+    /// forced to re-run; relocation would force more).
+    pub seq_retry_hi: u64,
+    /// Extra eviction budget multiplier while any tenant is pressured
+    /// (quota backpressure wants residency down *now*, before the
+    /// tenant hits its hard watermark).
+    pub pressure_evict_boost: usize,
 }
 
 impl Default for ThresholdPolicy {
@@ -163,6 +214,9 @@ impl Default for ThresholdPolicy {
             writer_waits_hi: 64,
             queue_depth_hi: 4,
             prefetch_leaves: 4,
+            tlb_inval_hi: 256,
+            seq_retry_hi: 128,
+            pressure_evict_boost: 2,
         }
     }
 }
@@ -187,13 +241,36 @@ impl Policy for ThresholdPolicy {
             // and TLB shootdowns without freeing anything, and (c) a
             // shallow fault queue: deep demand-fault traffic means the
             // workload is actively using what eviction would take.
+            // Quota pressure boosts the budget: a pressured tenant is
+            // marching toward its hard watermark, and every tick of
+            // delay converts soft backpressure into hard failures.
+            let evict_budget = if ctx.pressured_tenants > 0 {
+                self.evict_leaves * self.pressure_evict_boost.max(1)
+            } else {
+                self.evict_leaves
+            };
             if free < self.evict_below_free
                 && ctx.evictable_resident > 0
                 && s.epoch.limbo < self.evict_leaves
                 && ctx.fault_queue_depth < self.queue_depth_hi
             {
+                return Action::Evict { leaves: evict_budget };
+            }
+            // Tenant quota pressure with a healthy pool: evict anyway.
+            // The tenant-aware eviction pass takes pressured tenants'
+            // cold leaves first, so this is what actually relieves a
+            // soft-quota overrun (the pool-wide free ratio never will —
+            // the arena is fine, one tenant is not). The budget is
+            // bounded by the pressured tenants' own evictable leaves so
+            // the pass cannot spill onto healthy tenants and churn
+            // them. Same limbo and queue gates as pressure eviction.
+            if ctx.pressured_tenants > 0
+                && ctx.pressured_evictable > 0
+                && s.epoch.limbo < self.evict_leaves
+                && ctx.fault_queue_depth < self.queue_depth_hi
+            {
                 return Action::Evict {
-                    leaves: self.evict_leaves,
+                    leaves: evict_budget.min(ctx.pressured_evictable),
                 };
             }
             // Demand faults happened last tick and there is headroom:
@@ -222,10 +299,16 @@ impl Policy for ThresholdPolicy {
                 }
             }
         }
-        // Writers hot last tick: the compaction family would contend on
-        // the same leaf seqlocks. Defer — fragmentation keeps; writer
-        // throughput does not.
-        if ctx.lock_waits > self.writer_waits_hi {
+        // Application hot last tick: the compaction family would make
+        // it worse. Writers (same leaf seqlocks), readers being forced
+        // to re-run (seq-bracket retries), or an arena-wide TLB
+        // invalidation storm (every relocation bumps the epoch and
+        // flushes every translation cache) — any one defers. Defer —
+        // fragmentation keeps; application latency does not.
+        if ctx.lock_waits > self.writer_waits_hi
+            || ctx.tlb_invalidations > self.tlb_inval_hi
+            || ctx.seq_retries > self.seq_retry_hi
+        {
             return Action::Idle;
         }
         if s.score > self.score_hi {
@@ -460,6 +543,89 @@ mod tests {
         assert_eq!(got[0], Action::CompactPool);
         assert_eq!(got[1], Action::Idle);
         assert_eq!(got[5], Action::CompactPool);
+    }
+
+    #[test]
+    fn tenant_quota_pressure_evicts_with_a_healthy_pool() {
+        let mut p = ThresholdPolicy::default();
+        let s = snap(); // 60% free: no pool pressure at all
+        let mut c = ctx(0, 40);
+        c.pressured_tenants = 1;
+        c.pressured_evictable = 40;
+        // Boosted budget: the pressured tenant is marching at its hard
+        // watermark.
+        assert_eq!(p.decide(&s, &c), Action::Evict { leaves: 16 });
+        // Same gates as pressure eviction: full limbo parks it…
+        let mut s2 = snap();
+        s2.epoch.limbo = p.evict_leaves;
+        assert_eq!(p.decide(&s2, &c), Action::Idle);
+        // …and so does a deep fault queue.
+        let mut c2 = c;
+        c2.fault_queue_depth = p.queue_depth_hi;
+        assert_eq!(p.decide(&snap(), &c2), Action::Idle);
+        // Nothing evictable: quota pressure cannot conjure leaves.
+        let mut c3 = ctx(0, 0);
+        c3.pressured_tenants = 2;
+        assert_eq!(p.decide(&snap(), &c3), Action::Idle);
+        // Degraded swap kills it like every other swap action.
+        let mut c4 = ctx(0, 40);
+        c4.pressured_tenants = 1;
+        c4.pressured_evictable = 40;
+        c4.swap_degraded = true;
+        assert_eq!(p.decide(&snap(), &c4), Action::Idle);
+        // The budget is clamped to what pressured tenants actually
+        // own, so the pass cannot spill onto healthy tenants.
+        let mut c5 = ctx(0, 40);
+        c5.pressured_tenants = 1;
+        c5.pressured_evictable = 3;
+        assert_eq!(p.decide(&snap(), &c5), Action::Evict { leaves: 3 });
+    }
+
+    #[test]
+    fn latency_spike_sequence_defers_then_resumes_deterministically() {
+        // Satellite: latency-aware back-off. A fragmented pool under a
+        // storm of TLB invalidations, then seq-bracket retries, must
+        // defer compaction exactly while either per-tick rate is over
+        // threshold and resume the moment both cool.
+        let mut p = ThresholdPolicy::default();
+        let mut s = snap();
+        s.score = 0.9;
+        // (tlb_invalidations, seq_retries) per tick.
+        let ticks: [(u64, u64); 7] =
+            [(0, 0), (1000, 0), (300, 0), (256, 0), (0, 500), (0, 128), (10, 10)];
+        let expect: Vec<Action> = ticks
+            .iter()
+            .map(|&(tlb, sr)| {
+                if tlb > p.tlb_inval_hi || sr > p.seq_retry_hi {
+                    Action::Idle
+                } else {
+                    Action::CompactPool
+                }
+            })
+            .collect();
+        let got: Vec<Action> = ticks
+            .iter()
+            .map(|&(tlb, sr)| {
+                let mut c = ctx(0, 0);
+                c.tlb_invalidations = tlb;
+                c.seq_retries = sr;
+                p.decide(&s, &c)
+            })
+            .collect();
+        assert_eq!(got, expect, "deferral must track the latency deltas exactly");
+        // Thresholds are exclusive: exactly-at-threshold ticks compact.
+        assert_eq!(got[3], Action::CompactPool, "tlb == tlb_inval_hi must not defer");
+        assert_eq!(got[5], Action::CompactPool, "sr == seq_retry_hi must not defer");
+        assert_eq!(got[1], Action::Idle);
+        assert_eq!(got[4], Action::Idle);
+        // Latency heat must NOT defer swap relief, mirroring writer
+        // heat: running out of memory is worse than a slow tick.
+        s.free = 4;
+        s.live = 96;
+        let mut c = ctx(0, 40);
+        c.tlb_invalidations = 10_000;
+        c.seq_retries = 10_000;
+        assert_eq!(p.decide(&s, &c), Action::Evict { leaves: 8 });
     }
 
     #[test]

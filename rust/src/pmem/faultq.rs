@@ -36,12 +36,29 @@
 //!   [`SwapService::reclaim`] pass (evicted blocks may be sitting in
 //!   epoch limbo) and retries under the same budget.
 //! * Exhausting the budget on I/O errors **escalates**: the queue
-//!   marks itself [`FaultQueue::degraded`] and surfaces the typed
+//!   marks the requesting *tenant* degraded and surfaces the typed
 //!   [`Error::SwapFaultFailed`] — never a panic, never a wedge; the
 //!   slot stays resident, so the fault can be retried after the
-//!   backing recovers (a later success clears the degraded flag).
-//!   Other errors (not-resident, coalesced-by-peer) pass through
-//!   unchanged.
+//!   backing recovers (a later success for that tenant clears its
+//!   flag). Other errors (not-resident, coalesced-by-peer) pass
+//!   through unchanged.
+//!
+//! # Tenant scoping
+//!
+//! Degraded state is **per-tenant**, never global. Every request
+//! carries a tenant tag: tenant-unaware callers (the plain
+//! [`LeafFaulter`] impl) run as [`DEFAULT_TENANT`], and a tree that
+//! belongs to tenant `t` is armed with [`FaultQueue::scoped`]`(t)` so
+//! its demand faults carry `t`. Each tenant may also route to its own
+//! backing ([`FaultQueue::route_tenant`]) — one tenant's dead swap
+//! file parks *its* leaves behind its own sticky flag
+//! ([`FaultQueue::degraded_for`]) while every other tenant keeps
+//! faulting through the queue normally. [`FaultQueue::degraded`] is
+//! the any-tenant aggregate (what a single-tenant caller means by
+//! "degraded"). With a [`TenantRegistry`] attached
+//! ([`FaultQueue::with_tenants`]), verdicts are mirrored onto the
+//! tenants' own flags and successful fault-ins charge the faulted
+//! block back to the owning tenant's residency quota.
 //!
 //! # Timeout accounting
 //!
@@ -68,6 +85,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::pmem::swap::{SwapBacking, SwapPool, SwapSlot};
+use crate::pmem::tenant::{TenantRegistry, DEFAULT_TENANT};
 use crate::pmem::{BlockAlloc, BlockId};
 
 /// The type-erased eviction surface: what the mmd compactor needs to
@@ -185,8 +203,8 @@ impl FaultStats {
 }
 
 struct QState {
-    /// Pending requests: `(request id, raw slot)`.
-    queue: VecDeque<(u64, u64)>,
+    /// Pending requests: `(request id, raw slot, tenant)`.
+    queue: VecDeque<(u64, u64, u16)>,
     /// Finished requests awaiting pickup by their requester.
     completions: HashMap<u64, Result<BlockId>>,
     next_id: u64,
@@ -206,7 +224,16 @@ pub struct FaultQueue<'p> {
     work_cv: Condvar,
     /// Requesters park here waiting for their completion.
     done_cv: Condvar,
-    degraded: AtomicBool,
+    /// Per-tenant backing routes; tenants not listed use `svc`.
+    routes: Mutex<Vec<(u16, &'p dyn SwapService)>>,
+    /// Tenants whose last request exhausted its retries (sticky until
+    /// that tenant's next success).
+    degraded_set: Mutex<Vec<u16>>,
+    /// `!degraded_set.is_empty()`, mirrored for lock-free reads.
+    degraded_any: AtomicBool,
+    /// Optional tenant ledger: degraded verdicts are mirrored onto it
+    /// and successful fault-ins charge the owning tenant's residency.
+    tenants: Option<&'p TenantRegistry>,
     s_faults: AtomicU64,
     s_demand: AtomicU64,
     s_retries: AtomicU64,
@@ -224,6 +251,26 @@ impl<'p> FaultQueue<'p> {
     /// (no workers: every request executes on the calling thread, with
     /// the full retry/backoff/escalation machinery).
     pub fn new(svc: &'p dyn SwapService, cfg: FaultQueueConfig) -> Self {
+        Self::build(svc, cfg, None)
+    }
+
+    /// Like [`FaultQueue::new`], with a tenant ledger attached:
+    /// per-tenant degraded verdicts are mirrored onto the registry's
+    /// flags and every successful tenant fault-in charges the faulted
+    /// block back to that tenant's residency quota.
+    pub fn with_tenants(
+        svc: &'p dyn SwapService,
+        cfg: FaultQueueConfig,
+        tenants: &'p TenantRegistry,
+    ) -> Self {
+        Self::build(svc, cfg, Some(tenants))
+    }
+
+    fn build(
+        svc: &'p dyn SwapService,
+        cfg: FaultQueueConfig,
+        tenants: Option<&'p TenantRegistry>,
+    ) -> Self {
         FaultQueue {
             svc,
             cfg,
@@ -236,7 +283,10 @@ impl<'p> FaultQueue<'p> {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            degraded: AtomicBool::new(false),
+            routes: Mutex::new(Vec::new()),
+            degraded_set: Mutex::new(Vec::new()),
+            degraded_any: AtomicBool::new(false),
+            tenants,
             s_faults: AtomicU64::new(0),
             s_demand: AtomicU64::new(0),
             s_retries: AtomicU64::new(0),
@@ -250,10 +300,53 @@ impl<'p> FaultQueue<'p> {
         }
     }
 
-    /// The service this queue drains into (the daemon evicts through
-    /// the same service its fault queue faults from).
+    /// The default service this queue drains into (the daemon evicts
+    /// through the same service its fault queue faults from). Tenants
+    /// with a route of their own use theirs instead; see
+    /// [`FaultQueue::route_tenant`].
     pub fn service(&self) -> &'p dyn SwapService {
         self.svc
+    }
+
+    /// Route tenant `tenant`'s swap I/O to its own service (its own
+    /// backing file): subsequent requests tagged with that tenant
+    /// execute against `svc` instead of the default. Re-routing an
+    /// already-routed tenant replaces the route (tenant churn).
+    pub fn route_tenant(&self, tenant: u16, svc: &'p dyn SwapService) {
+        let mut routes = self.routes.lock().unwrap();
+        if let Some(r) = routes.iter_mut().find(|(t, _)| *t == tenant) {
+            r.1 = svc;
+        } else {
+            routes.push((tenant, svc));
+        }
+    }
+
+    /// Drop tenant `tenant`'s route (departure); its traffic falls back
+    /// to the default service. Idempotent.
+    pub fn unroute_tenant(&self, tenant: u16) {
+        let mut routes = self.routes.lock().unwrap();
+        routes.retain(|(t, _)| *t != tenant);
+    }
+
+    fn svc_for(&self, tenant: u16) -> &'p dyn SwapService {
+        self.routes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(t, _)| *t == tenant)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.svc)
+    }
+
+    /// A [`LeafFaulter`] (and [`SwapService`]) view of this queue tagged
+    /// with `tenant`: demand faults through it carry the tenant's
+    /// identity (degraded scoping, residency charging, per-tenant
+    /// backing route), and evictions through it land on the tenant's
+    /// routed backing. Arm a tenant's trees with this
+    /// (`tree.install_faulter(&q.scoped(t))`) instead of the bare
+    /// queue.
+    pub fn scoped(&self, tenant: u16) -> TenantFaulter<'_, 'p> {
+        TenantFaulter { q: self, tenant }
     }
 
     /// Spawn `n` scoped worker threads draining the request queue.
@@ -285,12 +378,49 @@ impl<'p> FaultQueue<'p> {
         self.work_cv.notify_all();
     }
 
-    /// Has any request exhausted its retries since the last success?
-    /// (Sticky across failures, cleared by the next successful
-    /// fault-in: the mmd policy reads this as `swap_degraded` and stops
-    /// evicting while it holds.)
+    /// Has **any** tenant's request exhausted its retries since that
+    /// tenant's last success? The aggregate view — what a
+    /// single-tenant caller means by "degraded" (sticky per tenant,
+    /// cleared by that tenant's next successful fault-in). Tenant-aware
+    /// callers want [`FaultQueue::degraded_for`].
     pub fn degraded(&self) -> bool {
-        self.degraded.load(Ordering::Relaxed)
+        self.degraded_any.load(Ordering::Relaxed)
+    }
+
+    /// Is `tenant`'s swap traffic degraded? Scoped containment: one
+    /// tenant's dead backing parks its leaves behind this flag while
+    /// other tenants keep faulting normally.
+    pub fn degraded_for(&self, tenant: u16) -> bool {
+        self.degraded_set.lock().unwrap().contains(&tenant)
+    }
+
+    fn mark_degraded(&self, tenant: u16) {
+        let mut set = self.degraded_set.lock().unwrap();
+        if !set.contains(&tenant) {
+            set.push(tenant);
+        }
+        self.degraded_any.store(true, Ordering::Relaxed);
+        drop(set);
+        if let Some(reg) = self.tenants {
+            reg.set_degraded(tenant, true);
+        }
+    }
+
+    fn clear_degraded(&self, tenant: u16) {
+        // Fast path: nothing is degraded, nothing to clear — keeps the
+        // per-success cost at one relaxed load.
+        if !self.degraded_any.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut set = self.degraded_set.lock().unwrap();
+        if let Some(p) = set.iter().position(|&t| t == tenant) {
+            set.swap_remove(p);
+        }
+        self.degraded_any.store(!set.is_empty(), Ordering::Relaxed);
+        drop(set);
+        if let Some(reg) = self.tenants {
+            reg.set_degraded(tenant, false);
+        }
     }
 
     /// Requests currently queued (excludes in-flight executions).
@@ -322,25 +452,25 @@ impl<'p> FaultQueue<'p> {
         PrefetchGate(self)
     }
 
-    /// Enqueue (or, in inline mode, execute) one fault-in request and
-    /// wait for its result.
-    fn request(&self, slot: SwapSlot) -> Result<BlockId> {
+    /// Enqueue (or, in inline mode, execute) one fault-in request on
+    /// `tenant`'s behalf and wait for its result.
+    fn request(&self, slot: SwapSlot, tenant: u16) -> Result<BlockId> {
         let id = {
             let mut st = self.state.lock().unwrap();
             if st.workers == 0 || st.shutdown {
                 drop(st);
-                return self.execute(slot);
+                return self.execute(slot, tenant);
             }
             if st.queue.len() >= self.cfg.max_depth {
                 drop(st);
                 // Bounded depth, no wedging: overflow demand runs on
                 // the requester's own thread.
                 self.s_shed_inline.fetch_add(1, Ordering::Relaxed);
-                return self.execute(slot);
+                return self.execute(slot, tenant);
             }
             let id = st.next_id;
             st.next_id += 1;
-            st.queue.push_back((id, slot.raw()));
+            st.queue.push_back((id, slot.raw(), tenant));
             self.s_depth_hw.fetch_max(st.queue.len(), Ordering::Relaxed);
             id
         };
@@ -356,7 +486,7 @@ impl<'p> FaultQueue<'p> {
 
     fn worker_loop(&self) {
         loop {
-            let (id, raw) = {
+            let (id, raw, tenant) = {
                 let mut st = self.state.lock().unwrap();
                 loop {
                     if let Some(req) = st.queue.pop_front() {
@@ -368,30 +498,34 @@ impl<'p> FaultQueue<'p> {
                     st = self.work_cv.wait(st).unwrap();
                 }
             };
-            let res = self.execute(SwapSlot::from_raw(raw));
+            let res = self.execute(SwapSlot::from_raw(raw), tenant);
             self.state.lock().unwrap().completions.insert(id, res);
             self.done_cv.notify_all();
         }
     }
 
-    /// One request: retry loop + backoff + escalation + accounting.
-    fn execute(&self, slot: SwapSlot) -> Result<BlockId> {
+    /// One request: retry loop + backoff + escalation + accounting,
+    /// against `tenant`'s routed service.
+    fn execute(&self, slot: SwapSlot, tenant: u16) -> Result<BlockId> {
+        let svc = self.svc_for(tenant);
         let start = Instant::now();
         let mut attempts = 0u32;
         let mut backoff = self.cfg.backoff_base;
         let budget = self.cfg.max_retries.max(1);
         let res = loop {
             attempts += 1;
-            match self.svc.fault(slot) {
+            match svc.fault(slot) {
                 Ok(b) => break Ok(b),
                 Err(e @ (Error::Io(_) | Error::OutOfMemory { .. })) => {
                     if attempts >= budget {
                         if matches!(e, Error::Io(_)) {
                             // Permanent escalation: typed error, sticky
-                            // degraded flag. The slot is still resident
-                            // (fault is failure-atomic), so recovery is
-                            // a later retry, not data loss.
-                            self.degraded.store(true, Ordering::Relaxed);
+                            // per-tenant degraded flag. The slot is
+                            // still resident (fault is failure-atomic),
+                            // so recovery is a later retry, not data
+                            // loss — and only THIS tenant's swap
+                            // traffic is suspended.
+                            self.mark_degraded(tenant);
                             self.s_permanent.fetch_add(1, Ordering::Relaxed);
                             break Err(Error::SwapFaultFailed {
                                 slot: slot.raw(),
@@ -407,7 +541,7 @@ impl<'p> FaultQueue<'p> {
                         // The arena may be full of limbo blocks whose
                         // readers have quiesced; reclaim before the
                         // next allocation attempt.
-                        self.svc.reclaim();
+                        svc.reclaim();
                     }
                     std::thread::sleep(backoff);
                     backoff = (backoff * 2).min(self.cfg.backoff_cap);
@@ -426,8 +560,12 @@ impl<'p> FaultQueue<'p> {
         }
         if res.is_ok() {
             self.s_faults.fetch_add(1, Ordering::Relaxed);
-            // Recovery: the backing is serving reads again.
-            self.degraded.store(false, Ordering::Relaxed);
+            // Recovery: this tenant's backing is serving reads again.
+            self.clear_degraded(tenant);
+            if let Some(reg) = self.tenants {
+                // The faulted block is resident on the tenant's behalf.
+                reg.fault_charged(tenant);
+            }
         }
         res
     }
@@ -436,7 +574,45 @@ impl<'p> FaultQueue<'p> {
 impl LeafFaulter for FaultQueue<'_> {
     fn fault_in(&self, slot: SwapSlot) -> Result<BlockId> {
         self.s_demand.fetch_add(1, Ordering::Relaxed);
-        self.request(slot)
+        self.request(slot, DEFAULT_TENANT)
+    }
+}
+
+/// A tenant-tagged view of a [`FaultQueue`]: demand faults through it
+/// carry the tenant's identity (see [`FaultQueue::scoped`]), and its
+/// [`SwapService`] face targets the tenant's routed backing — so the
+/// compactor can evict a tenant's leaf to that tenant's swap file with
+/// the same call shape it uses for the shared pool.
+pub struct TenantFaulter<'q, 'p> {
+    q: &'q FaultQueue<'p>,
+    tenant: u16,
+}
+
+impl TenantFaulter<'_, '_> {
+    /// The tenant this handle is tagged with.
+    pub fn tenant(&self) -> u16 {
+        self.tenant
+    }
+}
+
+impl LeafFaulter for TenantFaulter<'_, '_> {
+    fn fault_in(&self, slot: SwapSlot) -> Result<BlockId> {
+        self.q.s_demand.fetch_add(1, Ordering::Relaxed);
+        self.q.request(slot, self.tenant)
+    }
+}
+
+impl SwapService for TenantFaulter<'_, '_> {
+    fn evict_deferred(&self, block: BlockId) -> Result<SwapSlot> {
+        self.q.svc_for(self.tenant).evict_deferred(block)
+    }
+
+    fn fault(&self, slot: SwapSlot) -> Result<BlockId> {
+        self.q.svc_for(self.tenant).fault(slot)
+    }
+
+    fn reclaim(&self) {
+        self.q.svc_for(self.tenant).reclaim();
     }
 }
 
@@ -452,7 +628,7 @@ impl LeafFaulter for PrefetchGate<'_, '_> {
             q.s_shed_prefetch.fetch_add(1, Ordering::Relaxed);
             return Err(Error::Config("fault queue busy: prefetch shed".into()));
         }
-        q.request(slot)
+        q.request(slot, DEFAULT_TENANT)
     }
 }
 
@@ -612,6 +788,72 @@ mod tests {
             a.free(nb).unwrap();
             q.shutdown_workers();
         });
+    }
+
+    #[test]
+    fn degraded_scoping_is_per_tenant_with_routed_backings() {
+        use crate::pmem::tenant::TenantConfig;
+        let a = BlockAllocator::new(1024, 8).unwrap();
+        let (b1, ctl1) = FailingBacking::new();
+        let (b2, ctl2) = FailingBacking::new();
+        let swap1 = SwapPool::with_backing(&a, b1);
+        let swap2 = SwapPool::with_backing(&a, b2);
+        let reg = TenantRegistry::new();
+        let t1 = reg.admit(TenantConfig::new(4, 8));
+        let t2 = reg.admit(TenantConfig::new(4, 8));
+        let q = FaultQueue::with_tenants(&swap1, quick_cfg(), &reg);
+        q.route_tenant(t1.id(), &swap1);
+        q.route_tenant(t2.id(), &swap2);
+        // One parked payload per tenant, each on its own backing —
+        // evicted through the tenant-scoped SwapService face.
+        let blk1 = a.alloc().unwrap();
+        a.write(blk1, 0, b"tenant-1").unwrap();
+        let ops2_before = ctl2.ops();
+        let slot1 = q.scoped(t1.id()).evict_deferred(blk1).unwrap();
+        assert_eq!(ctl2.ops(), ops2_before, "t1 eviction must not touch t2's backing");
+        a.epoch().synchronize(&a);
+        let blk2 = a.alloc().unwrap();
+        a.write(blk2, 0, b"tenant-2").unwrap();
+        let slot2 = q.scoped(t2.id()).evict_deferred(blk2).unwrap();
+        a.epoch().synchronize(&a);
+        // Tenant 1's backing dies permanently.
+        ctl1.fail_always();
+        match q.scoped(t1.id()).fault_in(slot1) {
+            Err(Error::SwapFaultFailed { attempts: 3, .. }) => {}
+            other => panic!("expected SwapFaultFailed after 3 attempts, got {other:?}"),
+        }
+        assert!(q.degraded_for(t1.id()), "t1 must be degraded");
+        assert!(!q.degraded_for(t2.id()), "t2 must be untouched by t1's dead backing");
+        assert!(q.degraded(), "aggregate view reports any-tenant degradation");
+        assert!(t1.degraded() && !t2.degraded(), "registry mirrors the verdicts");
+        // Tenant 2 keeps faulting normally while tenant 1 is degraded.
+        let nb2 = q.scoped(t2.id()).fault_in(slot2).unwrap();
+        let mut out = [0u8; 8];
+        a.read(nb2, 0, &mut out).unwrap();
+        assert_eq!(&out, b"tenant-2");
+        assert!(q.degraded_for(t1.id()), "t2's success must not clear t1's flag");
+        assert_eq!(t2.snapshot().faults, 1, "successful fault-in is charged to t2");
+        assert_eq!(t2.used(), 1);
+        // Tenant 1's backing recovers: its next success clears ITS flag
+        // and the aggregate goes quiet.
+        ctl1.disarm();
+        let nb1 = q.scoped(t1.id()).fault_in(slot1).unwrap();
+        assert!(!q.degraded_for(t1.id()) && !q.degraded());
+        assert!(!t1.degraded());
+        a.read(nb1, 0, &mut out).unwrap();
+        assert_eq!(&out, b"tenant-1");
+        a.free(nb1).unwrap();
+        a.free(nb2).unwrap();
+        // Departure: the route drops, traffic falls back to the default.
+        q.unroute_tenant(t2.id());
+        let blk3 = a.alloc().unwrap();
+        let ops1_before = ctl1.ops();
+        let slot3 = q.scoped(t2.id()).evict_deferred(blk3).unwrap();
+        assert!(ctl1.ops() > ops1_before, "unrouted tenant must use the default backing");
+        let nb3 = q.scoped(t2.id()).fault_in(slot3).unwrap();
+        a.free(nb3).unwrap();
+        a.epoch().synchronize(&a);
+        assert_eq!(a.stats().allocated, 0);
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!   [`SwapPool`]) that translation caches revalidate against, plus the
 //!   quiescent-state deferred reclamation concurrent readers need (see
 //!   [`epoch`]).
+//! * [`TenantRegistry`] / [`QuotaAlloc`] — the multi-tenant policy
+//!   layer: per-tenant block quotas with soft-pressure / hard-failure
+//!   watermarks, charged at the allocator boundary, with per-tenant
+//!   swap routing and degraded-state scoping in [`FaultQueue`] (see
+//!   [`tenant`]).
 //!
 //! The [`crate::mmd`] daemon drives this layer in the background:
 //! [`BlockAlloc::live_snapshot`] / [`BlockAlloc::shard_spans`] feed its
@@ -45,17 +50,23 @@ mod region;
 mod sharded;
 pub mod slab;
 pub mod swap;
+pub mod tenant;
 pub mod twolevel;
 
 pub use alloc_trait::{AllocStats, BlockAlloc, ContentionStats};
 pub use allocator::BlockAllocator;
 pub use block::BlockId;
 pub use epoch::{ArenaEpoch, EpochStats, ReaderSlot};
-pub use faultq::{FaultQueue, FaultQueueConfig, FaultStats, LeafFaulter, PrefetchGate, SwapService};
+pub use faultq::{
+    FaultQueue, FaultQueueConfig, FaultStats, LeafFaulter, PrefetchGate, SwapService, TenantFaulter,
+};
 pub use migrate::Relocator;
 pub use protect::{CheckedMem, Perms, ProtectionDomain, ProtectionTable, KERNEL};
 pub use region::Region;
 pub use sharded::ShardedAllocator;
 pub use slab::{SlabPool, SlabStats, SlotAddr};
+pub use tenant::{
+    QuotaAlloc, Tenant, TenantConfig, TenantRegistry, TenantSnapshot, DEFAULT_TENANT,
+};
 pub use twolevel::{PlacementStats, TwoLevelAllocator, SUBTREE_BLOCKS};
 pub use swap::{FileBacking, SwapBacking, SwapPool, SwapSlot, SwapStats};

@@ -99,6 +99,35 @@ impl ProtectionTable {
         self.grant(block, KERNEL, Perms::NONE)
     }
 
+    /// Revoke `block` **iff** it is still owned by `domain` — one
+    /// compare-exchange, so an ownership transfer racing this call
+    /// either wins entirely (the revoke refuses with a typed
+    /// [`Error::Protection`]) or loses entirely (the block returns to
+    /// KERNEL/none). The lookup-then-revoke sequence this replaces had
+    /// a window where a stale owner's revoke could clobber a grant the
+    /// kernel made in between.
+    pub fn revoke_if_owner(&self, block: BlockId, domain: ProtectionDomain) -> Result<()> {
+        let e = self
+            .entries
+            .get(block.0 as usize)
+            .ok_or(Error::InvalidBlock(block))?;
+        let mut cur = e.load(Ordering::Acquire);
+        loop {
+            if ProtectionDomain((cur >> OWNER_SHIFT) as u16) != domain {
+                return Err(Error::Protection {
+                    block,
+                    domain: domain.0,
+                    write: true,
+                    exec: false,
+                });
+            }
+            match e.compare_exchange_weak(cur, 0, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Ok(()),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
     /// Owner and permissions of `block`.
     pub fn lookup(&self, block: BlockId) -> Result<(ProtectionDomain, Perms)> {
         let e = self
@@ -178,18 +207,17 @@ impl<'a, A: BlockAlloc> CheckedMem<'a, A> {
         Ok(b)
     }
 
-    /// Free a block (must be owned by this domain).
+    /// Free a block (must be owned by this domain). The ownership
+    /// check and the revoke are one atomic step
+    /// ([`ProtectionTable::revoke_if_owner`]), so a concurrent
+    /// ownership transfer cannot slip between them and be clobbered by
+    /// a stale free.
     pub fn free(&self, block: BlockId) -> Result<()> {
-        let (owner, _) = self.table.lookup(block)?;
-        if owner != self.domain && self.domain != KERNEL {
-            return Err(Error::Protection {
-                block,
-                domain: self.domain.0,
-                write: true,
-                exec: false,
-            });
+        if self.domain == KERNEL {
+            self.table.revoke(block)?;
+        } else {
+            self.table.revoke_if_owner(block, self.domain)?;
         }
-        self.table.revoke(block)?;
         self.alloc.free(block)
     }
 }
@@ -275,6 +303,86 @@ mod tests {
         let b = alice.alloc(Perms::RW).unwrap();
         assert!(bob.free(b).is_err());
         alice.free(b).unwrap();
+    }
+
+    #[test]
+    fn free_owner_check_is_atomic() {
+        let (a, t) = setup();
+        let alice = CheckedMem::new(&a, &t, ProtectionDomain(1));
+        let b = alice.alloc(Perms::RW).unwrap();
+        // Ownership transfers (kernel op) between alice's last access
+        // and her stale free: the conditional revoke must refuse
+        // instead of clobbering bob's grant.
+        t.grant(b, ProtectionDomain(2), Perms::RW).unwrap();
+        assert!(matches!(alice.free(b), Err(Error::Protection { .. })));
+        assert_eq!(t.lookup(b).unwrap().0, ProtectionDomain(2), "grant survived stale free");
+        let bob = CheckedMem::new(&a, &t, ProtectionDomain(2));
+        bob.free(b).unwrap();
+    }
+
+    #[test]
+    fn grant_revoke_racing_checked_access_stress() {
+        let a = BlockAllocator::new(4096, 64).unwrap();
+        let t = ProtectionTable::new(64);
+        let blocks: Vec<BlockId> = (0..4).map(|_| a.alloc().unwrap()).collect();
+        for &b in &blocks {
+            a.write(b, 0, &[0xAB; 8]).unwrap();
+        }
+        const D: ProtectionDomain = ProtectionDomain(7);
+        let live = AtomicU64::new(3);
+        let oks = AtomicU64::new(0);
+        let denies = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            // The "kernel" flips each block between granted-to-D and
+            // revoked for as long as any reader is still hammering
+            // checked accesses — the race spans the readers' whole
+            // workload.
+            s.spawn(|| {
+                let mut i = 0u64;
+                while live.load(Ordering::Acquire) > 0 {
+                    let b = blocks[((i >> 1) as usize) % blocks.len()];
+                    if i & 1 == 0 {
+                        t.grant(b, D, Perms::RW).unwrap();
+                    } else {
+                        t.revoke(b).unwrap();
+                    }
+                    i += 1;
+                }
+            });
+            for _ in 0..3 {
+                s.spawn(|| {
+                    let mem = CheckedMem::new(&a, &t, D);
+                    let mut buf = [0u8; 8];
+                    for _ in 0..2_000 {
+                        for &b in &blocks {
+                            // A racing access must land on exactly one
+                            // of the two programmed states — the packed
+                            // word moves owner and perms together.
+                            match mem.read(b, 0, &mut buf) {
+                                Ok(()) => {
+                                    assert_eq!(buf, [0xAB; 8]);
+                                    oks.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(Error::Protection { domain, .. }) => {
+                                    assert_eq!(domain, D.0);
+                                    denies.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => panic!("unexpected error under race: {e:?}"),
+                            }
+                            let (owner, perms) = t.lookup(b).unwrap();
+                            assert!(
+                                (owner == D && perms == Perms::RW)
+                                    || (owner == KERNEL && perms == Perms::NONE),
+                                "torn protection word: owner {owner:?} perms {perms:?}"
+                            );
+                        }
+                    }
+                    live.fetch_sub(1, Ordering::Release);
+                });
+            }
+        });
+        assert!(oks.load(Ordering::Relaxed) > 0, "race never saw a granted window");
+        assert!(denies.load(Ordering::Relaxed) > 0, "race never saw a revoked window");
     }
 
     #[test]

@@ -1,0 +1,656 @@
+//! Multi-tenant physical-memory policy: per-tenant block quotas with
+//! soft/hard watermarks, OOM backpressure, and the per-tenant state the
+//! fault-containment machinery keys on.
+//!
+//! The paper's premise is software-managed physical memory for
+//! *colocated* workloads; Cichlid and the Virtual Block Interface both
+//! argue that per-application policy is the point of dropping hardware
+//! translation. This module is that policy layer:
+//!
+//! * [`TenantRegistry`] — admission/departure ledger. Each tenant owns
+//!   a [`ProtectionDomain`] (the isolation boundary
+//!   [`crate::pmem::CheckedMem`] enforces), a block quota with **soft**
+//!   and **hard** watermarks, and an mmd budget *share* (its weight
+//!   when the daemon splits an eviction budget across tenants).
+//! * [`QuotaAlloc`] — wraps any [`BlockAlloc`] and charges/credits the
+//!   tenant's atomic usage counter on every alloc/free. Crossing the
+//!   soft watermark marks the tenant **pressured** (the mmd daemon
+//!   preferentially evicts that tenant's cold leaves); crossing the
+//!   hard watermark fails the allocation with the typed
+//!   [`Error::QuotaExceeded`] — backpressure on *that tenant only*,
+//!   never arena-wide failure. The pool may still be mostly free.
+//!
+//! # Quota = physical residency
+//!
+//! `used` counts the tenant's *resident* physical blocks, so eviction
+//! genuinely relieves pressure:
+//!
+//! * alloc/free through the tenant's [`QuotaAlloc`] charge/credit.
+//! * mmd **relocation** is quota-neutral (one uncharged alloc + one
+//!   uncredited free per move, ownership continuous).
+//! * **Eviction** of a tenant leaf credits the tenant
+//!   ([`TenantRegistry::evict_credited`], called by the tenant-aware
+//!   compactor pass) — the payload now lives in swap, not DRAM.
+//! * **Fault-in** charges it back ([`TenantRegistry::fault_charged`],
+//!   called by the fault queue on a successful tenant fault). A demand
+//!   fault charges *unchecked* — it may transiently push a tenant over
+//!   its hard quota, because wedging a reader that touches its own data
+//!   is worse than brief overshoot; only new allocations backpressure.
+//!
+//! # Degraded scoping
+//!
+//! Each tenant carries its own sticky `degraded` flag, mirrored by the
+//! [`crate::pmem::FaultQueue`] when that tenant's backing exhausts a
+//! retry budget (and cleared by its next successful fault-in). One
+//! tenant's dead backing parks *its* leaves; every other tenant keeps
+//! faulting normally. There is no global degraded state.
+
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::pmem::epoch::ArenaEpoch;
+use crate::pmem::protect::ProtectionDomain;
+use crate::pmem::{AllocStats, BlockAlloc, BlockId, ContentionStats};
+
+/// The implicit tenant of tenant-unaware code paths: registrations and
+/// fault requests that never name a tenant run as tenant 0 (the
+/// "kernel" tenant, matching [`crate::pmem::KERNEL`]'s domain 0).
+/// [`TenantRegistry::admit`] assigns real tenants ids from 1.
+pub const DEFAULT_TENANT: u16 = 0;
+
+/// Admission parameters for one tenant. Quotas are in blocks of the
+/// pool the tenant's [`QuotaAlloc`] wraps.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantConfig {
+    /// Soft watermark: allocations beyond this succeed but mark the
+    /// tenant *pressured* (the mmd daemon preferentially evicts its
+    /// cold leaves until usage drops back under).
+    pub soft_quota: usize,
+    /// Hard watermark: allocations that would exceed this fail with
+    /// [`Error::QuotaExceeded`]. Must be >= `soft_quota`.
+    pub hard_quota: usize,
+    /// mmd budget share: this tenant's weight when the daemon splits a
+    /// per-tick eviction budget across tenants (see
+    /// [`crate::mmd::Compactor`]'s tenant-aware passes). 0 is
+    /// normalized to 1.
+    pub share: u32,
+}
+
+impl TenantConfig {
+    /// A tenant with the given watermarks and a share of 1.
+    pub fn new(soft_quota: usize, hard_quota: usize) -> Self {
+        TenantConfig {
+            soft_quota,
+            hard_quota,
+            share: 1,
+        }
+    }
+}
+
+/// Interior state of one tenant; shared by every [`Tenant`] handle.
+struct TenantState {
+    id: u16,
+    domain: ProtectionDomain,
+    soft: usize,
+    hard: usize,
+    share: u32,
+    /// Resident physical blocks charged to this tenant.
+    used: AtomicUsize,
+    /// High-water mark of `used`.
+    peak: AtomicUsize,
+    /// Sticky over-soft-quota marker; cleared when usage drops back.
+    pressured: AtomicBool,
+    /// Sticky per-tenant swap-degraded flag (this tenant's backing
+    /// exhausted a fault retry budget; cleared by its next success).
+    degraded: AtomicBool,
+    /// Allocations rejected at the hard watermark.
+    quota_failures: AtomicU64,
+    /// Leaves of this tenant's trees evicted by the daemon.
+    evictions: AtomicU64,
+    /// Successful fault-ins on this tenant's behalf.
+    faults: AtomicU64,
+}
+
+/// A cheap cloneable handle to one admitted tenant. All state is
+/// atomic; handles stay valid after the tenant departs the registry
+/// (late frees through a surviving [`QuotaAlloc`] still credit it).
+#[derive(Clone)]
+pub struct Tenant(Arc<TenantState>);
+
+impl Tenant {
+    /// The tenant's id (assigned by [`TenantRegistry::admit`], from 1).
+    pub fn id(&self) -> u16 {
+        self.0.id
+    }
+
+    /// The protection domain this tenant's checked accesses run under.
+    pub fn domain(&self) -> ProtectionDomain {
+        self.0.domain
+    }
+
+    /// Resident blocks currently charged to the tenant.
+    pub fn used(&self) -> usize {
+        self.0.used.load(Ordering::Acquire)
+    }
+
+    /// The (soft, hard) quota watermarks in blocks.
+    pub fn quota(&self) -> (usize, usize) {
+        (self.0.soft, self.0.hard)
+    }
+
+    /// The tenant's mmd budget share.
+    pub fn share(&self) -> u32 {
+        self.0.share.max(1)
+    }
+
+    /// Is the tenant over its soft watermark (eviction preference)?
+    pub fn pressured(&self) -> bool {
+        self.0.pressured.load(Ordering::Relaxed)
+    }
+
+    /// Is the tenant's swap backing marked degraded?
+    pub fn degraded(&self) -> bool {
+        self.0.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Allocations this tenant had rejected at the hard watermark.
+    pub fn quota_failures(&self) -> u64 {
+        self.0.quota_failures.load(Ordering::Relaxed)
+    }
+
+    /// Charge `n` blocks against the quota. Over-hard fails (and rolls
+    /// the charge back); over-soft succeeds and marks the tenant
+    /// pressured.
+    fn charge(&self, n: usize) -> Result<()> {
+        let s = &*self.0;
+        let prev = s.used.fetch_add(n, Ordering::AcqRel);
+        let now = prev + n;
+        if now > s.hard {
+            s.used.fetch_sub(n, Ordering::AcqRel);
+            s.quota_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::QuotaExceeded {
+                tenant: s.id,
+                used: prev,
+                quota: s.hard,
+            });
+        }
+        s.peak.fetch_max(now, Ordering::Relaxed);
+        if now > s.soft {
+            s.pressured.store(true, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Charge without the hard-watermark check (demand fault-in of data
+    /// the tenant already owns — backpressure applies to new
+    /// allocations, never to reading back evicted state).
+    fn charge_unchecked(&self, n: usize) {
+        let s = &*self.0;
+        let now = s.used.fetch_add(n, Ordering::AcqRel) + n;
+        s.peak.fetch_max(now, Ordering::Relaxed);
+        if now > s.soft {
+            s.pressured.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Credit `n` blocks back; clears the pressured marker once usage
+    /// is back under the soft watermark.
+    fn credit(&self, n: usize) {
+        let s = &*self.0;
+        let prev = s.used.fetch_sub(n, Ordering::AcqRel);
+        debug_assert!(prev >= n, "tenant {} credit underflow", s.id);
+        if prev.saturating_sub(n) <= s.soft {
+            s.pressured.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// One row of per-tenant observability (quota, pressure, faults —
+    /// the `MmdReport` surfaces these).
+    pub fn snapshot(&self) -> TenantSnapshot {
+        let s = &*self.0;
+        TenantSnapshot {
+            tenant: s.id,
+            domain: s.domain.0,
+            used: s.used.load(Ordering::Acquire),
+            peak: s.peak.load(Ordering::Relaxed),
+            soft_quota: s.soft,
+            hard_quota: s.hard,
+            share: s.share.max(1),
+            pressured: s.pressured.load(Ordering::Relaxed),
+            degraded: s.degraded.load(Ordering::Relaxed),
+            quota_failures: s.quota_failures.load(Ordering::Relaxed),
+            evictions: s.evictions.load(Ordering::Relaxed),
+            faults: s.faults.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one tenant's counters (a `MmdReport` row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantSnapshot {
+    /// Tenant id.
+    pub tenant: u16,
+    /// The tenant's protection-domain id.
+    pub domain: u16,
+    /// Resident blocks charged right now.
+    pub used: usize,
+    /// High-water mark of `used`.
+    pub peak: usize,
+    /// Soft (pressure) watermark.
+    pub soft_quota: usize,
+    /// Hard (backpressure) watermark.
+    pub hard_quota: usize,
+    /// mmd budget share.
+    pub share: u32,
+    /// Over the soft watermark right now?
+    pub pressured: bool,
+    /// Swap backing marked degraded?
+    pub degraded: bool,
+    /// Allocations rejected at the hard watermark.
+    pub quota_failures: u64,
+    /// Daemon evictions of this tenant's leaves.
+    pub evictions: u64,
+    /// Successful fault-ins for this tenant.
+    pub faults: u64,
+}
+
+/// The tenant ledger: admission, departure, and the per-tenant lookups
+/// the allocator wrapper, fault queue, and mmd daemon share.
+pub struct TenantRegistry {
+    tenants: Mutex<Vec<Tenant>>,
+    next_id: AtomicU16,
+}
+
+impl TenantRegistry {
+    /// An empty registry. Ids are assigned from 1
+    /// ([`DEFAULT_TENANT`] = 0 stays the implicit kernel tenant).
+    pub fn new() -> Self {
+        TenantRegistry {
+            tenants: Mutex::new(Vec::new()),
+            next_id: AtomicU16::new(1),
+        }
+    }
+
+    /// Admit a tenant: assigns the next id, derives its protection
+    /// domain (`ProtectionDomain(id)` — ids start at 1, so no tenant
+    /// ever lands on [`crate::pmem::KERNEL`]), and returns its handle.
+    pub fn admit(&self, cfg: TenantConfig) -> Tenant {
+        assert!(
+            cfg.soft_quota <= cfg.hard_quota,
+            "soft quota {} must not exceed hard quota {}",
+            cfg.soft_quota,
+            cfg.hard_quota
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        assert!(id != 0, "tenant id space exhausted");
+        let t = Tenant(Arc::new(TenantState {
+            id,
+            domain: ProtectionDomain(id),
+            soft: cfg.soft_quota,
+            hard: cfg.hard_quota,
+            share: cfg.share,
+            used: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            pressured: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
+            quota_failures: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+        }));
+        self.tenants.lock().unwrap().push(t.clone());
+        t
+    }
+
+    /// Look a tenant up by id (`None` after departure or for
+    /// [`DEFAULT_TENANT`]).
+    pub fn get(&self, id: u16) -> Option<Tenant> {
+        self.tenants.lock().unwrap().iter().find(|t| t.id() == id).cloned()
+    }
+
+    /// Tenant departure: drop the registry's handle. Outstanding
+    /// [`Tenant`] handles (and any [`QuotaAlloc`] built on them) stay
+    /// valid — late frees still credit the departed tenant — but the
+    /// daemon stops budgeting for it. Returns the handle so callers can
+    /// assert the tenant left nothing behind.
+    pub fn remove(&self, id: u16) -> Option<Tenant> {
+        let mut ts = self.tenants.lock().unwrap();
+        let pos = ts.iter().position(|t| t.id() == id)?;
+        Some(ts.remove(pos))
+    }
+
+    /// Admitted tenants right now.
+    pub fn len(&self) -> usize {
+        self.tenants.lock().unwrap().len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tenants currently over their soft watermark.
+    pub fn pressured_count(&self) -> usize {
+        self.tenants.lock().unwrap().iter().filter(|t| t.pressured()).count()
+    }
+
+    /// Is `id` over its soft watermark? (Unknown ids are not.)
+    pub fn pressured(&self, id: u16) -> bool {
+        self.get(id).map(|t| t.pressured()).unwrap_or(false)
+    }
+
+    /// Is `id`'s backing marked degraded? (Unknown ids are not.)
+    pub fn degraded(&self, id: u16) -> bool {
+        self.get(id).map(|t| t.degraded()).unwrap_or(false)
+    }
+
+    /// Mirror a fault queue's per-tenant degraded verdict onto the
+    /// tenant's flag. No-op for unknown ids.
+    pub fn set_degraded(&self, id: u16, degraded: bool) {
+        if let Some(t) = self.get(id) {
+            t.0.degraded.store(degraded, Ordering::Relaxed);
+        }
+    }
+
+    /// Are *all* admitted tenants degraded (and at least one admitted)?
+    /// The daemon reads this as "swap wholly unavailable".
+    pub fn all_degraded(&self) -> bool {
+        let ts = self.tenants.lock().unwrap();
+        !ts.is_empty() && ts.iter().all(|t| t.degraded())
+    }
+
+    /// Sum of all admitted tenants' shares (>= 1 per tenant).
+    pub fn share_total(&self) -> u64 {
+        self.tenants.lock().unwrap().iter().map(|t| t.share() as u64).sum()
+    }
+
+    /// Record a successful fault-in on `id`'s behalf: counts it and
+    /// charges the faulted block unchecked (see the module docs —
+    /// reading your own data back never backpressures). No-op for
+    /// unknown ids, so tenant-unaware queues cost nothing.
+    pub fn fault_charged(&self, id: u16) {
+        if let Some(t) = self.get(id) {
+            t.0.faults.fetch_add(1, Ordering::Relaxed);
+            t.charge_unchecked(1);
+        }
+    }
+
+    /// Record a daemon eviction of one of `id`'s leaves: counts it and
+    /// credits the block back (the payload now lives in swap). No-op
+    /// for unknown ids.
+    pub fn evict_credited(&self, id: u16) {
+        if let Some(t) = self.get(id) {
+            t.0.evictions.fetch_add(1, Ordering::Relaxed);
+            t.credit(1);
+        }
+    }
+
+    /// Snapshot every admitted tenant's counters, id-ascending (the
+    /// `MmdReport`'s per-tenant rows).
+    pub fn rows(&self) -> Vec<TenantSnapshot> {
+        let mut rows: Vec<TenantSnapshot> =
+            self.tenants.lock().unwrap().iter().map(|t| t.snapshot()).collect();
+        rows.sort_by_key(|r| r.tenant);
+        rows
+    }
+}
+
+impl Default for TenantRegistry {
+    fn default() -> Self {
+        TenantRegistry::new()
+    }
+}
+
+/// A per-tenant view of a shared pool: every allocation charges the
+/// tenant's quota and every free credits it, with the backpressure
+/// semantics described in the module docs. Implements the full
+/// [`BlockAlloc`] surface, so trees/stacks/workloads built over a
+/// `QuotaAlloc` are tenant-metered without knowing it.
+pub struct QuotaAlloc<'a, A: BlockAlloc> {
+    inner: &'a A,
+    tenant: Tenant,
+}
+
+impl<'a, A: BlockAlloc> QuotaAlloc<'a, A> {
+    /// Meter `inner` against `tenant`'s quota.
+    pub fn new(inner: &'a A, tenant: Tenant) -> Self {
+        QuotaAlloc { inner, tenant }
+    }
+
+    /// The metered tenant.
+    pub fn tenant(&self) -> &Tenant {
+        &self.tenant
+    }
+
+    /// The wrapped pool.
+    pub fn inner(&self) -> &'a A {
+        self.inner
+    }
+
+    fn charged<T>(&self, n: usize, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        self.tenant.charge(n)?;
+        match f() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                // The pool refused after the quota said yes: roll the
+                // charge back so quota never exceeds real ownership.
+                self.tenant.credit(n);
+                Err(e)
+            }
+        }
+    }
+}
+
+impl<A: BlockAlloc> BlockAlloc for QuotaAlloc<'_, A> {
+    fn alloc(&self) -> Result<BlockId> {
+        self.charged(1, || self.inner.alloc())
+    }
+
+    fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>> {
+        self.charged(n, || self.inner.alloc_many(n))
+    }
+
+    fn alloc_zeroed(&self) -> Result<BlockId> {
+        self.charged(1, || self.inner.alloc_zeroed())
+    }
+
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        self.charged(1, || self.inner.alloc_in_span(lo, hi))
+    }
+
+    fn shard_spans(&self) -> Vec<(usize, usize)> {
+        self.inner.shard_spans()
+    }
+
+    fn live_snapshot(&self, out: &mut Vec<u64>) {
+        self.inner.live_snapshot(out);
+    }
+
+    fn free(&self, id: BlockId) -> Result<()> {
+        self.inner.free(id)?;
+        self.tenant.credit(1);
+        Ok(())
+    }
+
+    fn block_size(&self) -> usize {
+        self.inner.block_size()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn free_blocks(&self) -> usize {
+        self.inner.free_blocks()
+    }
+
+    fn is_live(&self, id: BlockId) -> bool {
+        self.inner.is_live(id)
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.inner.stats()
+    }
+
+    fn contention(&self) -> ContentionStats {
+        self.inner.contention()
+    }
+
+    fn epoch(&self) -> &ArenaEpoch {
+        self.inner.epoch()
+    }
+
+    unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
+        // SAFETY: forwarded verbatim; the caller's obligations are the
+        // inner allocator's.
+        unsafe { self.inner.block_ptr(id) }
+    }
+
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        self.inner.write(id, offset, data)
+    }
+
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.inner.read(id, offset, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+
+    #[test]
+    fn charge_credit_and_watermarks() {
+        let reg = TenantRegistry::new();
+        let t = reg.admit(TenantConfig::new(2, 4));
+        assert_eq!(t.id(), 1);
+        assert_eq!(t.domain(), ProtectionDomain(1));
+        t.charge(2).unwrap();
+        assert!(!t.pressured(), "at the soft watermark is not over it");
+        t.charge(1).unwrap();
+        assert!(t.pressured(), "over soft marks pressured");
+        t.charge(1).unwrap();
+        match t.charge(1) {
+            Err(Error::QuotaExceeded { tenant, used, quota }) => {
+                assert_eq!((tenant, used, quota), (1, 4, 4));
+            }
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        assert_eq!(t.used(), 4, "failed charge must roll back");
+        assert_eq!(t.quota_failures(), 1);
+        t.credit(2);
+        assert!(!t.pressured(), "credit under soft clears pressure");
+        t.credit(2);
+        assert_eq!(t.used(), 0);
+    }
+
+    #[test]
+    fn quota_alloc_meters_a_real_pool() {
+        let a = BlockAllocator::new(256, 16).unwrap();
+        let reg = TenantRegistry::new();
+        let t = reg.admit(TenantConfig::new(2, 3));
+        let qa = QuotaAlloc::new(&a, t.clone());
+        let b1 = qa.alloc().unwrap();
+        let b2 = qa.alloc_zeroed().unwrap();
+        let b3 = qa.alloc().unwrap();
+        assert_eq!(t.used(), 3);
+        assert!(t.pressured());
+        // Hard watermark: typed failure, pool untouched.
+        let live_before = a.stats().allocated;
+        assert!(matches!(qa.alloc(), Err(Error::QuotaExceeded { tenant: 1, .. })));
+        assert_eq!(a.stats().allocated, live_before, "rejected alloc must not touch the pool");
+        assert!(a.free_blocks() > 0, "backpressure, not pool exhaustion");
+        qa.free(b3).unwrap();
+        assert!(!t.pressured(), "freeing under soft clears pressure");
+        qa.free(b1).unwrap();
+        qa.free(b2).unwrap();
+        assert_eq!(t.used(), 0);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn pool_failure_rolls_the_charge_back() {
+        let a = BlockAllocator::new(256, 2).unwrap();
+        let reg = TenantRegistry::new();
+        let t = reg.admit(TenantConfig::new(8, 8));
+        let qa = QuotaAlloc::new(&a, t.clone());
+        let held = qa.alloc_many(2).unwrap();
+        assert_eq!(t.used(), 2);
+        // Quota allows it, the pool is dry: OutOfMemory surfaces and
+        // the speculative charge is credited back.
+        assert!(matches!(qa.alloc(), Err(Error::OutOfMemory { .. })));
+        assert_eq!(t.used(), 2);
+        // All-or-nothing alloc_many rolls back the same way.
+        assert!(qa.alloc_many(3).is_err());
+        assert_eq!(t.used(), 2);
+        for b in held {
+            qa.free(b).unwrap();
+        }
+        assert_eq!(t.used(), 0);
+    }
+
+    #[test]
+    fn registry_admission_departure_and_rows() {
+        let reg = TenantRegistry::new();
+        let t1 = reg.admit(TenantConfig::new(4, 8));
+        let t2 = reg.admit(TenantConfig {
+            soft_quota: 2,
+            hard_quota: 4,
+            share: 3,
+        });
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.share_total(), 4);
+        assert!(reg.get(t2.id()).is_some());
+        t1.charge(5).unwrap();
+        assert_eq!(reg.pressured_count(), 1);
+        let rows = reg.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].tenant, t1.id());
+        assert!(rows[0].pressured && rows[0].used == 5);
+        assert_eq!(rows[1].share, 3);
+        // Departure: handle stays usable, registry forgets the tenant.
+        let gone = reg.remove(t1.id()).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get(t1.id()).is_none());
+        gone.credit(5);
+        assert_eq!(gone.used(), 0);
+    }
+
+    #[test]
+    fn fault_and_evict_adjust_residency() {
+        let reg = TenantRegistry::new();
+        let t = reg.admit(TenantConfig::new(2, 2));
+        t.charge(2).unwrap();
+        // Eviction credits: pressure relief is the point.
+        reg.evict_credited(t.id());
+        assert_eq!(t.used(), 1);
+        // Fault-in charges back, unchecked even at the hard watermark.
+        reg.fault_charged(t.id());
+        reg.fault_charged(t.id());
+        assert_eq!(t.used(), 3, "demand fault-in never backpressures");
+        assert!(t.pressured());
+        let snap = t.snapshot();
+        assert_eq!((snap.evictions, snap.faults), (1, 2));
+        // Unknown ids are silent no-ops (tenant-unaware paths).
+        reg.fault_charged(99);
+        reg.evict_credited(99);
+        reg.set_degraded(99, true);
+        assert!(!reg.degraded(99));
+    }
+
+    #[test]
+    fn degraded_scoping_is_per_tenant() {
+        let reg = TenantRegistry::new();
+        let t1 = reg.admit(TenantConfig::new(4, 8));
+        let t2 = reg.admit(TenantConfig::new(4, 8));
+        reg.set_degraded(t1.id(), true);
+        assert!(reg.degraded(t1.id()));
+        assert!(!reg.degraded(t2.id()), "one tenant's dead backing is its own");
+        assert!(!reg.all_degraded());
+        reg.set_degraded(t2.id(), true);
+        assert!(reg.all_degraded());
+        reg.set_degraded(t1.id(), false);
+        assert!(!reg.all_degraded());
+    }
+}

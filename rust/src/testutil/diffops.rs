@@ -16,7 +16,11 @@
 //! [`FailingBacking`], with faults injected at random
 //! eviction/fault-in points so the error paths' failure-atomicity and
 //! the queue's retry path are part of the oracle, not a separate
-//! suite.
+//! suite. Allocation runs through a [`FailingAlloc`], and a dedicated
+//! arm injects typed [`Error::OutOfMemory`] on migration, restore, and
+//! demand-fault destination allocations — the allocator-exhaustion
+//! error paths must surface typed errors and leave the mirror intact,
+//! under the same oracle.
 //!
 //! Shared via `testutil` so the integration suite
 //! (`rust/tests/differential.rs`) can run the same cases under both
@@ -24,8 +28,9 @@
 
 use std::time::Duration;
 
+use crate::error::Error;
 use crate::pmem::{BlockAlloc, FaultQueue, FaultQueueConfig, SwapPool};
-use crate::testutil::fault::FailingBacking;
+use crate::testutil::fault::{FailingAlloc, FailingBacking};
 use crate::testutil::proptest_lite::Gen;
 use crate::trees::{CompactTarget, TreeArray};
 
@@ -54,6 +59,10 @@ pub struct DiffOutcome {
     /// verified intact — including transient failures the fault
     /// queue's retry path absorbed).
     pub injected_faults: usize,
+    /// Injected allocator OOM failures survived (typed
+    /// [`Error::OutOfMemory`] surfaced on migrate/restore/demand-fault
+    /// destination allocation; mirror verified intact).
+    pub injected_oom: usize,
 }
 
 /// Pick a leaf by residency: `parked == false` draws from the resident
@@ -96,7 +105,13 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
     let mut out = DiffOutcome::default();
     let leaf_cap = a.block_size() / 8;
     let n = g.usize_in(1, leaf_cap * 24);
-    let mut tree: TreeArray<u64, A> = TreeArray::new(a, n).expect("diff tree");
+    // Every allocation the case makes goes through the failing wrapper
+    // so the OOM-injection arm can deny exactly one chosen allocation
+    // (migration destination, restore destination, fault-in block)
+    // without draining the pool.
+    let (fa, alloc_ctl) = FailingAlloc::new(a);
+    let fa = &fa;
+    let mut tree: TreeArray<u64, FailingAlloc<A>> = TreeArray::new(fa, n).expect("diff tree");
     let mut mirror = vec![0u64; n];
     if g.bool(0.5) {
         tree.enable_flat_table();
@@ -108,7 +123,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
     tree.copy_from_slice(&mirror).expect("seed");
 
     let (backing, fault_ctl) = FailingBacking::new();
-    let swap = SwapPool::with_backing(a, backing);
+    let swap = SwapPool::with_backing(fa, backing);
     // Demand faults run through a real FaultQueue (inline mode) so the
     // retry/backoff machinery sits inside the oracle's loop.
     let fq = FaultQueue::new(
@@ -126,7 +141,7 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
     let nops = g.usize_in(1, 120);
     for _ in 0..nops {
         out.ops += 1;
-        match g.usize_in(0, 12) {
+        match g.usize_in(0, 13) {
             // -- plain scalar access --------------------------------
             0 | 1 => {
                 if let Some(i) = index_in(g, &tree, n, leaf_cap, false) {
@@ -338,6 +353,71 @@ pub fn run_case<A: BlockAlloc>(a: &A, g: &mut Gen) -> DiffOutcome {
                             fq.stats().retries > retries0,
                             "injected transient fault must go through the retry path"
                         );
+                    }
+                }
+            }
+            // -- injected allocator OOM -----------------------------
+            11 => {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        // Migration destination allocation fails: the
+                        // typed error surfaces and the leaf keeps
+                        // serving from its old block.
+                        if let Some(leaf) = pick_leaf(g, &tree, false) {
+                            alloc_ctl.fail_nth(1);
+                            let res = tree.migrate_leaf(leaf);
+                            alloc_ctl.disarm();
+                            match res {
+                                Err(Error::OutOfMemory { .. }) => {
+                                    out.injected_oom += 1;
+                                    let lo = leaf * leaf_cap;
+                                    assert_eq!(
+                                        tree.get(lo).expect("get after failed migrate"),
+                                        mirror[lo],
+                                        "failed migration corrupted leaf {leaf}"
+                                    );
+                                }
+                                other => panic!("armed migrate must fail typed: {other:?}"),
+                            }
+                        }
+                    }
+                    1 => {
+                        // Restore destination allocation fails: typed
+                        // error, the payload stays parked (the drain
+                        // brings it home later).
+                        if let Some(leaf) = pick_leaf(g, &tree, true) {
+                            alloc_ctl.fail_nth(1);
+                            let res = CompactTarget::restore_leaf(&tree, leaf, &swap);
+                            alloc_ctl.disarm();
+                            match res {
+                                Err(Error::OutOfMemory { .. }) => {
+                                    out.injected_oom += 1;
+                                    assert!(
+                                        tree.leaf_swapped(leaf),
+                                        "failed restore must leave leaf {leaf} parked"
+                                    );
+                                }
+                                other => panic!("armed restore must fail typed: {other:?}"),
+                            }
+                        }
+                    }
+                    _ => {
+                        // Demand fault with a transient OOM: the
+                        // queue's retry path reclaims and re-allocates;
+                        // the read still serves the right bytes.
+                        if let Some(i) = index_in(g, &tree, n, leaf_cap, true) {
+                            alloc_ctl.fail_nth(1);
+                            out.injected_oom += 1;
+                            let mut v = tree.view();
+                            assert_eq!(
+                                v.get(i).expect("view demand fault under OOM"),
+                                mirror[i],
+                                "OOM-retried fault-in served wrong bytes at {i}"
+                            );
+                            out.hook_faults += v.faults() as usize;
+                            drop(v);
+                            alloc_ctl.disarm();
+                        }
                     }
                 }
             }

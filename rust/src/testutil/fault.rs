@@ -1,4 +1,11 @@
-//! Fault-injection doubles for the swap backing.
+//! Fault-injection doubles for the swap backing and the allocator.
+//!
+//! [`FailingAlloc`] wraps any [`BlockAlloc`] and injects typed
+//! [`Error::OutOfMemory`] failures on the allocation paths with the
+//! same fail-nth / fail-for / fail-always vocabulary, so tests can
+//! drive allocator-exhaustion error paths (tree growth, swap fault-in
+//! destinations, slab refill) at exact call indices without actually
+//! draining a pool.
 //!
 //! [`FailingBacking`] implements [`SwapBacking`] over an in-memory
 //! byte store and injects failures and delays on command, so tests can
@@ -34,7 +41,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::pmem::SwapBacking;
+use crate::error::{Error, Result};
+use crate::pmem::epoch::ArenaEpoch;
+use crate::pmem::{AllocStats, BlockAlloc, BlockId, ContentionStats, SwapBacking};
 
 /// Remote control for a [`FailingBacking`] that has been moved into a
 /// `SwapPool`: arm faults/delays and observe I/O counts from the test
@@ -193,6 +202,193 @@ impl SwapBacking for FailingBacking {
     }
 }
 
+/// Remote control for a [`FailingAlloc`]: arm allocation failures and
+/// observe allocation-attempt counts from the test body. The same
+/// fail-nth / fail-for / fail-always vocabulary as [`FailControl`],
+/// minus delays (allocation is CPU-side; there is no device to stall).
+#[derive(Clone)]
+pub struct AllocFailControl {
+    /// Allocation calls until the next injected failure; 0 = disarmed.
+    arm: Arc<AtomicU64>,
+    /// Consecutive calls to fail starting now (`u64::MAX` = permanent).
+    burst: Arc<AtomicU64>,
+    /// Total allocation calls observed (failed ones included).
+    ops: Arc<AtomicU64>,
+}
+
+impl AllocFailControl {
+    /// Fail the `n`-th allocation from now (`1` = the very next call),
+    /// then disarm — exactly one failure per arming.
+    pub fn fail_nth(&self, n: u64) {
+        assert!(n > 0, "fail_nth counts from 1");
+        self.arm.store(n, Ordering::Relaxed);
+    }
+
+    /// Fail the next `n` allocations (a transient OOM burst — long
+    /// enough to force retry/reclaim paths, short enough to recover).
+    pub fn fail_for(&self, n: u64) {
+        self.burst.store(n, Ordering::Relaxed);
+    }
+
+    /// Fail every allocation until [`AllocFailControl::disarm`] — the
+    /// pool is "full" no matter what the caller does.
+    pub fn fail_always(&self) {
+        self.burst.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// Cancel every pending injected failure.
+    pub fn disarm(&self) {
+        self.arm.store(0, Ordering::Relaxed);
+        self.burst.store(0, Ordering::Relaxed);
+    }
+
+    /// Total allocation calls so far (including the failed ones;
+    /// `alloc_many` counts as one call).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`BlockAlloc`] wrapper whose *allocation* paths (`alloc`,
+/// `alloc_many`, `alloc_zeroed`, `alloc_in_span`) fail on command with
+/// the typed [`Error::OutOfMemory`] the real pool returns when
+/// exhausted — carrying the inner pool's true `free`/`capacity`, so an
+/// injected OOM is indistinguishable from a real one to the code under
+/// test. Everything else (free, reads, writes, telemetry, the epoch)
+/// forwards untouched: an injected failure must never corrupt pool
+/// state, only deny new blocks.
+///
+/// This is the allocator-side sibling of [`FailingBacking`]: together
+/// they let the differential oracle drive every typed error path —
+/// swap I/O faults *and* allocation failure — against one mirror.
+pub struct FailingAlloc<'a, A: BlockAlloc> {
+    inner: &'a A,
+    ctl: AllocFailControl,
+}
+
+impl<'a, A: BlockAlloc> FailingAlloc<'a, A> {
+    /// Wrap `inner` (nothing armed) and return the control handle.
+    pub fn new(inner: &'a A) -> (Self, AllocFailControl) {
+        let ctl = AllocFailControl {
+            arm: Arc::new(AtomicU64::new(0)),
+            burst: Arc::new(AtomicU64::new(0)),
+            ops: Arc::new(AtomicU64::new(0)),
+        };
+        (
+            FailingAlloc {
+                inner,
+                ctl: ctl.clone(),
+            },
+            ctl,
+        )
+    }
+
+    /// Count one allocation call; inject an armed failure. The error
+    /// mirrors [`Error::OutOfMemory`] from a genuinely empty pool.
+    fn tick(&self, requested: usize) -> Result<()> {
+        let ctl = &self.ctl;
+        ctl.ops.fetch_add(1, Ordering::Relaxed);
+        let b = ctl.burst.load(Ordering::Relaxed);
+        if b > 0 {
+            if b != u64::MAX {
+                ctl.burst.store(b - 1, Ordering::Relaxed);
+            }
+            return Err(Error::OutOfMemory {
+                requested,
+                free: self.inner.free_blocks(),
+                capacity: self.inner.capacity(),
+            });
+        }
+        let a = ctl.arm.load(Ordering::Relaxed);
+        if a > 0 {
+            ctl.arm.store(a - 1, Ordering::Relaxed);
+            if a == 1 {
+                return Err(Error::OutOfMemory {
+                    requested,
+                    free: self.inner.free_blocks(),
+                    capacity: self.inner.capacity(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<A: BlockAlloc> BlockAlloc for FailingAlloc<'_, A> {
+    fn alloc(&self) -> Result<BlockId> {
+        self.tick(1)?;
+        self.inner.alloc()
+    }
+
+    fn alloc_many(&self, n: usize) -> Result<Vec<BlockId>> {
+        self.tick(n)?;
+        self.inner.alloc_many(n)
+    }
+
+    fn alloc_zeroed(&self) -> Result<BlockId> {
+        self.tick(1)?;
+        self.inner.alloc_zeroed()
+    }
+
+    fn alloc_in_span(&self, lo: usize, hi: usize) -> Result<BlockId> {
+        self.tick(1)?;
+        self.inner.alloc_in_span(lo, hi)
+    }
+
+    fn shard_spans(&self) -> Vec<(usize, usize)> {
+        self.inner.shard_spans()
+    }
+
+    fn live_snapshot(&self, out: &mut Vec<u64>) {
+        self.inner.live_snapshot(out)
+    }
+
+    fn free(&self, id: BlockId) -> Result<()> {
+        self.inner.free(id)
+    }
+
+    fn block_size(&self) -> usize {
+        self.inner.block_size()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn free_blocks(&self) -> usize {
+        self.inner.free_blocks()
+    }
+
+    fn is_live(&self, id: BlockId) -> bool {
+        self.inner.is_live(id)
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.inner.stats()
+    }
+
+    fn contention(&self) -> ContentionStats {
+        self.inner.contention()
+    }
+
+    fn epoch(&self) -> &ArenaEpoch {
+        self.inner.epoch()
+    }
+
+    unsafe fn block_ptr(&self, id: BlockId) -> *mut u8 {
+        // SAFETY: forwarded verbatim; the wrapper adds no aliasing.
+        unsafe { self.inner.block_ptr(id) }
+    }
+
+    fn write(&self, id: BlockId, offset: usize, data: &[u8]) -> Result<()> {
+        self.inner.write(id, offset, data)
+    }
+
+    fn read(&self, id: BlockId, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.inner.read(id, offset, out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +449,50 @@ mod tests {
         b.read_at(0, &mut out).unwrap();
         assert!(t2.elapsed() >= Duration::from_millis(3));
         ctl.disarm();
+    }
+
+    #[test]
+    fn failing_alloc_injects_typed_oom_and_recovers() {
+        use crate::pmem::BlockAllocator;
+        let pool = BlockAllocator::new(1024, 8).unwrap();
+        let (a, ctl) = FailingAlloc::new(&pool);
+        let b0 = a.alloc().unwrap();
+        ctl.fail_nth(2); // next call ok, the one after fails
+        let b1 = a.alloc().unwrap();
+        match a.alloc() {
+            Err(Error::OutOfMemory {
+                requested,
+                free,
+                capacity,
+            }) => {
+                assert_eq!(requested, 1);
+                assert_eq!(capacity, 8);
+                assert_eq!(free, 6, "injected OOM must report the pool's real state");
+            }
+            other => panic!("expected injected OutOfMemory, got {other:?}"),
+        }
+        // Disarmed after one failure; pool state is uncorrupted.
+        let b2 = a.alloc_zeroed().unwrap();
+        assert_eq!(a.stats().allocated, 3);
+        ctl.fail_for(2);
+        assert!(matches!(a.alloc_many(3), Err(Error::OutOfMemory { requested: 3, .. })));
+        assert!(a.alloc_in_span(0, 8).is_err());
+        let b3 = a.alloc().unwrap(); // burst over
+        assert_eq!(ctl.ops(), 7);
+        ctl.fail_always();
+        for _ in 0..4 {
+            assert!(a.alloc().is_err());
+        }
+        ctl.disarm();
+        for b in [b0, b1, b2, b3] {
+            a.free(b).unwrap();
+        }
+        assert_eq!(pool.stats().allocated, 0);
+        assert_eq!(
+            pool.stats().failed_allocs,
+            0,
+            "injected failures must never reach the inner pool"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod fault;
 pub mod proptest_lite;
 
 pub use diffops::DiffOutcome;
-pub use fault::{FailControl, FailingBacking};
+pub use fault::{AllocFailControl, FailControl, FailingAlloc, FailingBacking};
 pub use proptest_lite::{forall, Gen};
 
 /// Deterministic 64-bit RNG (splitmix64 seeded xoshiro256**).

@@ -83,6 +83,14 @@ pub trait CompactTarget: Sync {
     /// structure's lifetime (writer heat; policies watch the delta).
     fn lock_waits(&self) -> u64;
 
+    /// Total read-side seq-bracket retries over the structure's
+    /// lifetime (reader pain; policies watch the delta and defer
+    /// compaction while it spikes). Structures without revalidating
+    /// readers report 0.
+    fn seq_retries(&self) -> u64 {
+        0
+    }
+
     /// Move leaf `leaf` into `dest`, retiring the displaced block into
     /// the pool's epoch limbo. On error the caller keeps `dest`.
     ///
@@ -133,6 +141,10 @@ impl<T: Pod + Sync, A: BlockAlloc> CompactTarget for TreeArray<'_, T, A> {
         TreeArray::lock_waits_total(self)
     }
 
+    fn seq_retries(&self) -> u64 {
+        TreeArray::seq_retries_total(self)
+    }
+
     unsafe fn relocate_leaf_to(&self, leaf: usize, dest: BlockId) -> Result<()> {
         // SAFETY: forwarded verbatim.
         unsafe { self.migrate_leaf_concurrent_to(leaf, dest) }.map(|_| ())
@@ -156,6 +168,11 @@ pub(crate) struct RegEntry<'e> {
     pub(crate) id: u64,
     pub(crate) tree: &'e (dyn CompactTarget + 'e),
     pub(crate) evictable: bool,
+    /// Owning tenant ([`crate::pmem::tenant`]); `DEFAULT_TENANT` (0)
+    /// for single-tenant registrations. The daemon's tenant-aware
+    /// passes route each entry's swap traffic through its tenant's
+    /// backing and respect its quota pressure / degraded state.
+    pub(crate) tenant: u16,
 }
 
 /// Registry of live trees the [`crate::mmd`] daemon keeps healthy. See
@@ -185,7 +202,7 @@ impl<'e> TreeRegistry<'e> {
     /// slices, no writes outside `TreeWriter`, no cross-thread cursors,
     /// no other migrator (module docs).
     pub unsafe fn register(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
-        self.insert(tree, false)
+        self.insert(tree, false, crate::pmem::tenant::DEFAULT_TENANT)
     }
 
     /// Register `tree` for compaction **and pressure-driven leaf
@@ -198,12 +215,46 @@ impl<'e> TreeRegistry<'e> {
     /// [`crate::pmem::LeafFaulter`] is installed on the tree before any
     /// accessor can hit an evicted leaf (module docs).
     pub unsafe fn register_evictable(&self, tree: &'e (dyn CompactTarget + 'e)) -> u64 {
-        self.insert(tree, true)
+        self.insert(tree, true, crate::pmem::tenant::DEFAULT_TENANT)
     }
 
-    fn insert(&self, tree: &'e (dyn CompactTarget + 'e), evictable: bool) -> u64 {
+    /// [`TreeRegistry::register`] with an owning tenant tag: the
+    /// daemon's tenant-aware passes account relocations and report rows
+    /// against `tenant`.
+    ///
+    /// # Safety
+    /// The [`TreeRegistry::register`] contract.
+    pub unsafe fn register_for_tenant(
+        &self,
+        tree: &'e (dyn CompactTarget + 'e),
+        tenant: u16,
+    ) -> u64 {
+        self.insert(tree, false, tenant)
+    }
+
+    /// [`TreeRegistry::register_evictable`] with an owning tenant tag:
+    /// evictions and restores of this tree go through the tenant's
+    /// routed swap backing ([`crate::pmem::FaultQueue::route_tenant`]),
+    /// its quota is credited/charged as leaves leave/reenter residency,
+    /// and its degraded state parks the tree instead of wedging the
+    /// whole daemon.
+    ///
+    /// # Safety
+    /// The [`TreeRegistry::register_evictable`] contract. The installed
+    /// faulter must route this tenant's traffic (a
+    /// [`crate::pmem::TenantFaulter`] from
+    /// [`crate::pmem::FaultQueue::scoped`]).
+    pub unsafe fn register_evictable_for_tenant(
+        &self,
+        tree: &'e (dyn CompactTarget + 'e),
+        tenant: u16,
+    ) -> u64 {
+        self.insert(tree, true, tenant)
+    }
+
+    fn insert(&self, tree: &'e (dyn CompactTarget + 'e), evictable: bool, tenant: u16) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.entries.lock().unwrap().push(RegEntry { id, tree, evictable });
+        self.entries.lock().unwrap().push(RegEntry { id, tree, evictable, tenant });
         id
     }
 
@@ -264,11 +315,46 @@ impl<'e> TreeRegistry<'e> {
         (swapped, resident)
     }
 
+    /// Leaves currently swapped out across registrations owned by
+    /// `tenant` (the per-tenant view of [`TreeRegistry::swapped_out`]).
+    pub fn swapped_out_for(&self, tenant: u16) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.tenant == tenant)
+            .map(|e| e.tree.swapped_leaves())
+            .sum()
+    }
+
+    /// Resident (not swapped) leaves of `tenant`'s *evictable*
+    /// registrations — what a quota-pressure eviction pass could still
+    /// take from it. The daemon feeds the sum over pressured tenants to
+    /// the policy so backpressure stops the moment a pressured tenant
+    /// has nothing left to give.
+    pub fn evictable_resident_for(&self, tenant: u16) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.evictable && e.tenant == tenant)
+            .map(|e| e.tree.nleaves() - e.tree.swapped_leaves())
+            .sum()
+    }
+
     /// Total seqlock contention over all registered trees (writer heat
     /// — the daemon watches the per-tick delta to back off compaction
     /// while writers are hot; see `ThresholdPolicy`).
     pub fn lock_waits_total(&self) -> u64 {
         self.entries.lock().unwrap().iter().map(|e| e.tree.lock_waits()).sum()
+    }
+
+    /// Total read-side seq-bracket retries over all registered trees
+    /// (reader pain — the daemon watches the per-tick delta and defers
+    /// compaction while readers are being made to re-run; see
+    /// `ThresholdPolicy`).
+    pub fn seq_retries_total(&self) -> u64 {
+        self.entries.lock().unwrap().iter().map(|e| e.tree.seq_retries()).sum()
     }
 
     /// Lock the entry list (compaction passes run under this guard; see

@@ -152,6 +152,11 @@ pub struct TreeArray<'a, T: Pod, A: BlockAlloc = BlockAllocator> {
     /// leaves (writers, relocations, fault-ins). The mmd policy reads
     /// the per-tick delta as writer-heat and defers compaction.
     lock_waits_total: AtomicU64,
+    /// Total read-side seq-bracket retries across all views of this
+    /// tree (reader pain: a retry means a writer or a relocation
+    /// overlapped a read). The mmd policy reads the per-tick delta and
+    /// backs compaction off when readers are hurting.
+    seq_retries_total: AtomicU64,
     /// The installed fault handler, if any (type-erased; see
     /// [`TreeArray::install_faulter`]). Locked only on the fault path.
     faulter: Mutex<Option<FaulterPtr>>,
@@ -242,6 +247,7 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
             touch: (0..geo.nleaves()).map(|_| AtomicU64::new(0)).collect(),
             touch_clock: AtomicU64::new(0),
             lock_waits_total: AtomicU64::new(0),
+            seq_retries_total: AtomicU64::new(0),
             faulter: Mutex::new(None),
             _t: std::marker::PhantomData,
         })
@@ -955,6 +961,20 @@ impl<'a, T: Pod, A: BlockAlloc> TreeArray<'a, T, A> {
     /// watches the per-tick delta).
     pub fn lock_waits_total(&self) -> u64 {
         self.lock_waits_total.load(Ordering::Relaxed)
+    }
+
+    /// Total read-side seq-bracket retries over all views of this tree
+    /// since construction (reader pain; the mmd policy watches the
+    /// per-tick delta and defers compaction while it spikes).
+    pub fn seq_retries_total(&self) -> u64 {
+        self.seq_retries_total.load(Ordering::Relaxed)
+    }
+
+    /// Count one read-side seq-bracket retry (called by
+    /// [`crate::trees::TreeView`] on every bracket re-run).
+    #[inline]
+    pub(crate) fn note_seq_retry(&self) {
+        self.seq_retries_total.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Evict leaf `leaf_idx` through `svc` under the leaf's seqlock:

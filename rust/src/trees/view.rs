@@ -225,6 +225,7 @@ impl<'t, 'a, T: Pod + Sync, A: BlockAlloc> TreeView<'t, 'a, T, A> {
     #[inline]
     fn seq_retry(&mut self, tries: &mut u32) {
         self.seq_retries += 1;
+        self.tree.note_seq_retry();
         *tries += 1;
         if *tries & 0x3F == 0 {
             std::thread::yield_now();

@@ -2,7 +2,8 @@
 //! integration tier: seeded random op sequences (scalar/batch get+set,
 //! seqlock writer ops, view reads, safe + concurrent migration, swap
 //! evict/restore, view/writer software page faults on evicted leaves
-//! served through a retrying fault queue, injected swap I/O faults)
+//! served through a retrying fault queue, injected swap I/O faults,
+//! injected allocator OOM on migrate/restore/fault-in destinations)
 //! run against a `Vec<u64>` mirror in lockstep, under BOTH allocator
 //! policies. The op model
 //! lives in `nvm::testutil::diffops` so unit suites and future
@@ -35,6 +36,7 @@ where
     let evictions = AtomicU64::new(0);
     let restores = AtomicU64::new(0);
     let hook_faults = AtomicU64::new(0);
+    let injected_oom = AtomicU64::new(0);
     forall(CASES, |g| {
         let o = mk_case(g);
         ops.fetch_add(o.ops as u64, Ordering::Relaxed);
@@ -43,6 +45,7 @@ where
         evictions.fetch_add(o.evictions as u64, Ordering::Relaxed);
         restores.fetch_add(o.restores as u64, Ordering::Relaxed);
         hook_faults.fetch_add(o.hook_faults as u64, Ordering::Relaxed);
+        injected_oom.fetch_add(o.injected_oom as u64, Ordering::Relaxed);
     });
     assert!(ops.load(Ordering::Relaxed) > 0);
     assert!(
@@ -54,6 +57,10 @@ where
     assert!(
         hook_faults.load(Ordering::Relaxed) > 0,
         "no case took a software page fault through an accessor"
+    );
+    assert!(
+        injected_oom.load(Ordering::Relaxed) > 0,
+        "no case injected an allocator OOM"
     );
     assert_eq!(
         evictions.load(Ordering::Relaxed),

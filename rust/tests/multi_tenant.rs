@@ -1,0 +1,293 @@
+//! Multi-tenant isolation stress (the PR 8 acceptance suite): tenants
+//! sharing one physical pool and one fault queue must not be able to
+//! hurt each other. Three contracts, each driven to its edge under
+//! real concurrency:
+//!
+//! * **Quota backpressure is scoped.** A noisy tenant that overruns its
+//!   hard watermark sees typed [`Error::QuotaExceeded`] naming itself —
+//!   its well-behaved neighbours churning the same pool never observe
+//!   an allocation failure of any kind.
+//! * **Degraded state is scoped.** A tenant whose swap backing dies
+//!   takes typed [`Error::SwapFaultFailed`] and its own degraded flag;
+//!   a live reader of another tenant keeps demand-faulting through the
+//!   same worker-backed queue the whole time, error-free.
+//! * **Data survives interference.** Every payload is checksum-verified
+//!   bit-exact after the churn, and the pool returns to empty.
+//!
+//! CI runs this suite in `--release` as well (see TESTING.md).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use nvm::coordinator::experiments::{multi_tenant, ExpConfig};
+use nvm::pmem::{
+    BlockAlloc, BlockAllocator, BlockId, FaultQueue, FaultQueueConfig, QuotaAlloc, SwapPool,
+    TenantConfig, TenantRegistry,
+};
+use nvm::testutil::{FailingBacking, Rng};
+use nvm::trees::{CompactTarget, TreeArray};
+use nvm::Error;
+
+/// 1 KB blocks keep trees multi-leaf at test sizes (u64 leaf_cap 128).
+const BLOCK: usize = 1024;
+const LEAF: usize = 128;
+
+/// Two well-behaved tenants and one noisy tenant churn one pool from
+/// six threads. The noisy pair's combined appetite (2 × 8 blocks)
+/// exceeds its hard watermark (10), so it must keep hitting typed
+/// [`Error::QuotaExceeded`]; the pool itself never runs dry (total hard
+/// quotas are well under capacity), so any error observed by a
+/// well-behaved tenant — quota or OOM — fails the test. Every held
+/// block carries a tenant-tagged payload verified on free.
+#[test]
+fn quota_backpressure_is_per_tenant_under_concurrent_churn() {
+    let a = BlockAllocator::new(BLOCK, 256).unwrap();
+    let reg = TenantRegistry::new();
+    let good = [
+        reg.admit(TenantConfig::new(48, 64)),
+        reg.admit(TenantConfig::new(48, 64)),
+    ];
+    let noisy = reg.admit(TenantConfig::new(6, 10));
+    let quota_hits = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        for (ti, t) in good.iter().enumerate() {
+            for th in 0..2u64 {
+                let qa = QuotaAlloc::new(&a, t.clone());
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xC0FFEE ^ ((ti as u64) << 8) ^ th);
+                    let mut held: Vec<(BlockId, u64)> = Vec::new();
+                    for i in 0..1500u64 {
+                        // Each thread holds at most 20 blocks, so the
+                        // tenant peaks at 40 < its hard quota of 64.
+                        if held.len() < 20 && (held.is_empty() || rng.chance(0.6)) {
+                            let b = qa.alloc().unwrap_or_else(|e| {
+                                panic!(
+                                    "well-behaved tenant {} must never see an \
+                                     allocation failure: {e:?}",
+                                    qa.tenant().id()
+                                )
+                            });
+                            let tag = ((qa.tenant().id() as u64) << 48) ^ (b.0 as u64) << 8 ^ i;
+                            qa.write(b, 0, &tag.to_le_bytes()).unwrap();
+                            held.push((b, tag));
+                        } else {
+                            let k = rng.below(held.len() as u64) as usize;
+                            let (b, tag) = held.swap_remove(k);
+                            let mut buf = [0u8; 8];
+                            qa.read(b, 0, &mut buf).unwrap();
+                            assert_eq!(
+                                u64::from_le_bytes(buf),
+                                tag,
+                                "tenant payload scribbled by a neighbour"
+                            );
+                            qa.free(b).unwrap();
+                        }
+                    }
+                    for (b, tag) in held {
+                        let mut buf = [0u8; 8];
+                        qa.read(b, 0, &mut buf).unwrap();
+                        assert_eq!(u64::from_le_bytes(buf), tag);
+                        qa.free(b).unwrap();
+                    }
+                });
+            }
+        }
+        for th in 0..2u64 {
+            let qa = QuotaAlloc::new(&a, noisy.clone());
+            let hits = &quota_hits;
+            s.spawn(move || {
+                let mut rng = Rng::new(0xBAD ^ th);
+                let mut held: Vec<BlockId> = Vec::new();
+                for _ in 0..1500 {
+                    if held.len() < 8 && (held.is_empty() || rng.chance(0.7)) {
+                        match qa.alloc() {
+                            Ok(b) => held.push(b),
+                            Err(Error::QuotaExceeded { tenant, used, quota }) => {
+                                assert_eq!(tenant, qa.tenant().id());
+                                assert_eq!(quota, 10);
+                                assert!(used <= quota, "charge must roll back: {used} > {quota}");
+                                hits.fetch_add(1, Ordering::Relaxed);
+                                if let Some(b) = held.pop() {
+                                    qa.free(b).unwrap();
+                                }
+                            }
+                            Err(other) => {
+                                panic!("noisy overrun must be QuotaExceeded, got {other:?}")
+                            }
+                        }
+                    } else if let Some(b) = held.pop() {
+                        qa.free(b).unwrap();
+                    }
+                }
+                for b in held {
+                    qa.free(b).unwrap();
+                }
+            });
+        }
+    });
+
+    assert!(
+        quota_hits.load(Ordering::Relaxed) > 0,
+        "the noisy pair never hit its hard watermark — the test lost its teeth"
+    );
+    assert_eq!(noisy.quota_failures(), quota_hits.load(Ordering::Relaxed));
+    assert_eq!(noisy.used(), 0);
+    for t in &good {
+        assert_eq!(t.quota_failures(), 0, "backpressure leaked across tenants");
+        assert_eq!(t.used(), 0);
+    }
+    assert_eq!(a.stats().allocated, 0, "churn must return the pool to empty");
+}
+
+/// One worker-backed fault queue, two tenants with routed backings. The
+/// second tenant's backing is killed and revived repeatedly while a
+/// live reader of the first tenant demand-faults through the same queue
+/// the whole time. Every outage must degrade tenant 2 alone (queue flag
+/// and registry mirror), surface as typed [`Error::SwapFaultFailed`] to
+/// tenant 2's accessor only, and clear on the first success after
+/// recovery; both payloads end bit-exact.
+#[test]
+fn dead_backing_degrades_only_its_tenant_under_live_readers() {
+    let a = BlockAllocator::new(BLOCK, 96).unwrap();
+    let tenants = TenantRegistry::new();
+    let t1 = tenants.admit(TenantConfig::new(64, 96));
+    let t2 = tenants.admit(TenantConfig::new(64, 96));
+    let swap1 = SwapPool::anonymous(&a).unwrap();
+    let (fb, ctl) = FailingBacking::new();
+    let swap2 = SwapPool::with_backing(&a, fb);
+    let q = FaultQueue::with_tenants(
+        &swap1,
+        FaultQueueConfig {
+            max_depth: 16,
+            max_retries: 3,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_micros(200),
+            ..FaultQueueConfig::default()
+        },
+        &tenants,
+    );
+    q.route_tenant(t2.id(), &swap2);
+
+    let nleaves = 8;
+    let len = LEAF * nleaves;
+    let mut tree1: TreeArray<u64> = TreeArray::new(&a, len).unwrap();
+    let mut tree2: TreeArray<u64> = TreeArray::new(&a, len).unwrap();
+    let d1: Vec<u64> = (0..len).map(|i| (i as u64).wrapping_mul(13) | 1).collect();
+    let d2: Vec<u64> = (0..len).map(|i| (i as u64).wrapping_mul(29) | 1).collect();
+    tree1.copy_from_slice(&d1).unwrap();
+    tree2.copy_from_slice(&d2).unwrap();
+    let f1 = q.scoped(t1.id());
+    let f2 = q.scoped(t2.id());
+    // SAFETY: cleared below before the scoped faulters drop.
+    unsafe { tree1.install_faulter(&f1) };
+    unsafe { tree2.install_faulter(&f2) };
+
+    let stop = AtomicBool::new(false);
+    let reads = AtomicU64::new(0);
+    let outages = 6usize;
+    std::thread::scope(|s| {
+        q.attach_workers(s, 2);
+        let (tree1_r, d1_r, stop_r, reads_r) = (&tree1, &d1, &stop, &reads);
+        let reader = s.spawn(move || {
+            let mut v = tree1_r.view();
+            let mut rng = Rng::new(0x7EA);
+            while !stop_r.load(Ordering::Acquire) {
+                let i = rng.below(len as u64) as usize;
+                match v.get(i) {
+                    Ok(x) => assert_eq!(x, d1_r[i], "healthy tenant read corrupted at {i}"),
+                    Err(e) => panic!("healthy tenant must never see a fault error: {e:?}"),
+                }
+                reads_r.fetch_add(1, Ordering::Relaxed);
+            }
+            v.faults()
+        });
+
+        let mut v2 = tree2.view();
+        for round in 0..outages {
+            // Keep the healthy tenant taking real demand faults through
+            // the shared queue for the duration of every outage.
+            for leaf in 0..nleaves {
+                if leaf % 2 == round % 2 && CompactTarget::leaf_swap_slot(&tree1, leaf).is_none() {
+                    // SAFETY: the only accessors are fault-capable views.
+                    unsafe { CompactTarget::evict_leaf(&tree1, leaf, &f1) }.unwrap();
+                }
+            }
+            // Park one t2 leaf while its backing is healthy, then kill
+            // the backing: the demand fault burns the retry budget and
+            // must surface typed — on this tenant only.
+            let leaf = round % nleaves;
+            if CompactTarget::leaf_swap_slot(&tree2, leaf).is_none() {
+                // SAFETY: as above.
+                unsafe { CompactTarget::evict_leaf(&tree2, leaf, &f2) }.unwrap();
+            }
+            ctl.fail_always();
+            match v2.get(leaf * LEAF) {
+                Err(Error::SwapFaultFailed { .. }) => {}
+                other => panic!("want SwapFaultFailed on the dead backing, got {other:?}"),
+            }
+            assert!(q.degraded_for(t2.id()));
+            assert!(t2.degraded(), "registry must mirror the queue's verdict");
+            assert!(!q.degraded_for(t1.id()), "degradation leaked across tenants");
+            assert!(!t1.degraded());
+            // Recovery: the same access succeeds and clears the flag.
+            ctl.disarm();
+            assert_eq!(v2.get(leaf * LEAF).unwrap(), d2[leaf * LEAF]);
+            assert!(!q.degraded_for(t2.id()), "first success must clear the flag");
+            assert!(!t2.degraded());
+        }
+        drop(v2);
+        stop.store(true, Ordering::Release);
+        let reader_faults = reader.join().unwrap();
+        assert!(
+            reader_faults > 0,
+            "the healthy tenant never demand-faulted — the outages ran unopposed"
+        );
+        q.shutdown_workers();
+    });
+
+    // Drain whatever is still parked (restore is a no-op on resident
+    // leaves) and verify both payloads survived the interference.
+    for leaf in 0..nleaves {
+        CompactTarget::restore_leaf(&tree1, leaf, &f1).unwrap();
+        CompactTarget::restore_leaf(&tree2, leaf, &f2).unwrap();
+    }
+    assert!(reads.load(Ordering::Relaxed) > 0);
+    let st = q.stats();
+    assert!(st.permanent >= outages as u64, "every outage escalates once: {st:?}");
+    assert!(t1.snapshot().faults > 0 && t2.snapshot().faults > 0);
+    assert_eq!(tree1.to_vec(), d1, "healthy tenant data lost to a neighbour's outage");
+    assert_eq!(tree2.to_vec(), d2, "parked payloads must survive the outage bit-exact");
+    tree1.clear_faulter();
+    tree2.clear_faulter();
+    a.epoch().synchronize(&a);
+    drop((tree1, tree2));
+    drop((swap1, swap2));
+    assert_eq!(a.stats().allocated, 0);
+}
+
+/// The `multi-tenant` experiment end-to-end at a quick sample: five
+/// tenants (zipfian / scan / insert+churn / noisy over-quota /
+/// flaky-backing) share one pool, one fault queue, and one daemon. The
+/// run function carries its own containment and bit-exactness
+/// assertions, so this is the tentpole's whole acceptance contract in
+/// one call; the spot checks below only pin the table's shape.
+#[test]
+fn multi_tenant_experiment_end_to_end() {
+    let cfg = ExpConfig {
+        sample: 20_000,
+        threads: 2,
+        ..Default::default()
+    };
+    let t = multi_tenant(&cfg);
+    assert!(t.cell("zipfian", 0).expect("zipfian row present") > 0.0);
+    assert!(t.cell("scan", 0).expect("scan row present") > 0.0);
+    assert!(
+        t.cell("noisy", 3).expect("noisy row present") > 0.0,
+        "the noisy tenant must have been backpressured"
+    );
+    assert!(
+        t.cell("flaky", 4).expect("flaky row present") > 0.0,
+        "the flaky tenant must have seen typed fault errors"
+    );
+}

@@ -7,7 +7,10 @@
 //! (ISSUE acceptance): transient faults are retried with backoff and
 //! never observed by accessors; permanent faults surface as typed
 //! [`Error::SwapFaultFailed`] plus a degraded flag — never a panic, a
-//! wedge, or data loss.
+//! wedge, or data loss. Since PR 8 the degraded flag is scoped per
+//! tenant: one tenant's dead backing must not park, degrade, or slow
+//! any other tenant, and a recovery mid-drain restores each leaf
+//! exactly once.
 //!
 //! CI runs this in `--release` as well; the deadline-bounded phases
 //! simply converge faster there.
@@ -331,6 +334,103 @@ fn larger_than_dram_experiment_end_to_end() {
     let demand = t.cell("2T paged+flaky", 1).expect("paged+flaky row present");
     assert!(demand > 0.0, "a larger-than-DRAM run must take demand faults");
     assert!(t.cell("2T resident", 0).expect("resident row present") > 0.0);
+}
+
+/// Per-tenant degraded scoping and recovery ordering (the PR 8
+/// regression for "no global degraded state"): two tenants over one
+/// fault queue, each with its own backing. A transient outage inside a
+/// tenant's drain is absorbed by the probe's retry budget; an outage
+/// past the budget degrades *only that tenant* — the healthy tenant
+/// drains fully, its scoped flag stays clear — and the next drain's
+/// probe notices the recovery, clears the flag, and brings the parked
+/// leaves home bit-exact with every leaf restored exactly once (the
+/// per-tenant fault counters are the double-restore oracle).
+#[test]
+fn tenant_backing_recovers_mid_drain_bit_exact_no_double_restore() {
+    use nvm::mmd::Compactor;
+    use nvm::pmem::{TenantConfig, TenantRegistry};
+    let a = BlockAllocator::new(BLOCK, 64).unwrap();
+    let tenants = TenantRegistry::new();
+    let t1 = tenants.admit(TenantConfig::new(100, 100));
+    let t2 = tenants.admit(TenantConfig::new(100, 100));
+    // Seed residency so eviction credits have a balance to draw down
+    // (real flows charge allocations through a QuotaAlloc).
+    for _ in 0..4 {
+        tenants.fault_charged(t1.id());
+        tenants.fault_charged(t2.id());
+    }
+    let swap1 = SwapPool::anonymous(&a).unwrap();
+    let (fb, ctl) = FailingBacking::new();
+    let swap2 = SwapPool::with_backing(&a, fb);
+    let q = FaultQueue::with_tenants(
+        &swap1,
+        FaultQueueConfig {
+            max_retries: 3,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_micros(400),
+            ..FaultQueueConfig::default()
+        },
+        &tenants,
+    );
+    q.route_tenant(t2.id(), &swap2);
+
+    let mut tree1: TreeArray<u64> = TreeArray::new(&a, LEAF * 4).unwrap();
+    let mut tree2: TreeArray<u64> = TreeArray::new(&a, LEAF * 4).unwrap();
+    let d1: Vec<u64> = (0..LEAF * 4).map(|i| (i as u64).wrapping_mul(7) ^ 0x0F0F).collect();
+    let d2: Vec<u64> = (0..LEAF * 4).map(|i| (i as u64).wrapping_mul(11) ^ 0xF0F0).collect();
+    tree1.copy_from_slice(&d1).unwrap();
+    tree2.copy_from_slice(&d2).unwrap();
+    let registry = TreeRegistry::new();
+    // SAFETY: no accessors race the compactor in this test.
+    let id1 = unsafe { registry.register_evictable_for_tenant(&tree1, t1.id()) };
+    let id2 = unsafe { registry.register_evictable_for_tenant(&tree2, t2.id()) };
+    let mut c = Compactor::new(&a, &registry);
+
+    // Phase 1 — a transient outage *inside* the drain: the burst ends
+    // within one probe's retry budget, so nothing degrades and the
+    // drain completes in one call.
+    assert_eq!(c.evict_tenants(usize::MAX, &q, &tenants), 8);
+    ctl.fail_for(2); // max_retries = 3 absorbs it
+    assert_eq!(c.restore_all_tenants(&q, &tenants), 8);
+    assert!(!q.degraded() && !q.degraded_for(t2.id()));
+    assert_eq!(registry.swapped_out(), 0);
+    assert_eq!(t1.snapshot().faults, 4, "each leaf faulted exactly once");
+    assert_eq!(t2.snapshot().faults, 4, "each leaf faulted exactly once");
+    assert_eq!(tree1.to_vec(), d1);
+    assert_eq!(tree2.to_vec(), d2);
+
+    // Phase 2 — an outage past the budget: this drain burns one probe
+    // (3 failed attempts), degrades ONLY t2, and still brings every one
+    // of t1's leaves home. The healthy tenant never sees a flag.
+    assert_eq!(c.evict_tenants(usize::MAX, &q, &tenants), 8);
+    ctl.fail_for(5); // 3 fail this drain's probe, 2 the next's — then recovered
+    assert_eq!(c.restore_all_tenants(&q, &tenants), 4, "t1 home, t2 contained");
+    assert!(q.degraded_for(t2.id()));
+    assert!(!q.degraded_for(t1.id()), "degradation must be scoped, not global");
+    assert!(q.degraded(), "the aggregate view still reports the sick tenant");
+    assert!(t2.snapshot().degraded, "registry mirrors the scoped flag");
+    assert_eq!(registry.swapped_out_for(t1.id()), 0);
+    assert_eq!(registry.swapped_out_for(t2.id()), 4);
+
+    // The next drain probes t2, the outage ends inside that probe's
+    // retry burst, the flag clears, and the rest restores — each leaf
+    // exactly once across the two drains.
+    assert_eq!(c.restore_all_tenants(&q, &tenants), 4);
+    assert!(!q.degraded() && !q.degraded_for(t2.id()));
+    assert!(!t2.snapshot().degraded);
+    assert_eq!(registry.swapped_out(), 0);
+    assert_eq!(t1.snapshot().faults, 8, "no t1 leaf restored twice");
+    assert_eq!(t2.snapshot().faults, 8, "no t2 leaf restored twice");
+    assert_eq!(tree1.to_vec(), d1);
+    assert_eq!(tree2.to_vec(), d2, "recovery mid-drain must be bit-exact");
+
+    registry.deregister(id1);
+    registry.deregister(id2);
+    drop(registry);
+    a.epoch().synchronize(&a);
+    drop((tree1, tree2));
+    drop((swap1, swap2));
+    assert_eq!(a.stats().allocated, 0);
 }
 
 /// Completion-ordering: four requester threads demand-fault disjoint
