@@ -14,9 +14,12 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{ablation_alloc_contention, ExpConfig};
+use nvm::telemetry::{results, sink};
 
 fn main() {
-    let cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_alloc_contention", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -40,6 +43,11 @@ fn main() {
              (sweep: {:?}); the contention claim needs >= 4T",
             t.columns
         );
+        sink::with(|r| t.record_into(r));
+        let mut rec = sink::take().expect("bench sink installed at main start");
+        rec.config("quick", quick);
+        rec.config("skipped", "fewer than 4 hardware threads");
+        results::write_bench_record(rec);
         return;
     }
     let sharded_ok = contended
@@ -76,4 +84,21 @@ fn main() {
              (reservation not engaging? core count? subtree sizing?)"
         }
     );
+
+    sink::verdict(
+        "sharded_beats_mutex_contended",
+        sharded_ok,
+        "sharded/mutex > 1.0x at every >= 4T column",
+    );
+    sink::verdict(
+        "twolevel_ge_1.5x_sharded_fragmented",
+        pass,
+        "twolevel/sharded (fragmented) >= 1.5x at every >= 4T column",
+    );
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

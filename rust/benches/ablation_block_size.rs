@@ -6,9 +6,12 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{ablation_block_size, ExpConfig};
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 
 fn main() {
-    let cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_block_size", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -33,4 +36,22 @@ fn main() {
             "SENSITIVE — deviates from the paper"
         }
     );
+
+    sink::metric(MetricRecord::from_value(
+        "linear_iter.spread",
+        "x",
+        Direction::Lower,
+        spread,
+    ));
+    sink::verdict(
+        "block_size_insensitive",
+        spread < 1.15,
+        &format!("linear-iter spread {spread:.3}x across 8..128 KB (need < 1.15x)"),
+    );
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

@@ -19,11 +19,14 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{fragmentation_churn, ExpConfig};
+use nvm::telemetry::{results, sink};
 
 const THREADS: [usize; 3] = [1, 2, 4];
 
 fn main() {
-    let mut cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_compaction", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let mut cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -57,6 +60,16 @@ fn main() {
              (no mmd), need >= 2x lower",
             if frag_ok { "PASS" } else { "FAIL" }
         );
+        sink::verdict(
+            &format!("{threads}t_reader_throughput_ge_0.9x"),
+            thr_ok,
+            &format!("{on_mrd:.2} vs {off_mrd:.2} Mrd/s"),
+        );
+        sink::verdict(
+            &format!("{threads}t_frag_score_2x_lower"),
+            frag_ok,
+            &format!("{on_score:.3} (mmd) vs {off_score:.3} (no mmd)"),
+        );
         all &= thr_ok && frag_ok;
     }
     println!(
@@ -67,4 +80,12 @@ fn main() {
             "MMD GOALS NOT MET — investigate (debug build? < 4 cores? tokens_per_tick too high?)"
         }
     );
+
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("threads", cfg.threads);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

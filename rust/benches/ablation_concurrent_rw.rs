@@ -25,6 +25,7 @@ use std::time::Instant;
 
 use nvm::bench_utils::section;
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::testutil::Rng;
 use nvm::trees::TreeArray;
 use nvm::workloads::gups;
@@ -45,6 +46,7 @@ fn fresh_tree<'a>(a: &'a BlockAllocator, init: &[u64]) -> TreeArray<'a, u64> {
 }
 
 fn main() {
+    sink::begin("ablation_concurrent_rw", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let (ops, reps) = if quick { (50_000usize, 2usize) } else { (400_000, 3) };
 
@@ -142,6 +144,18 @@ fn main() {
             seqlock_mups[ti],
             seqlock_mups[ti] / mutex_mups[ti]
         );
+        sink::metric(MetricRecord::from_value(
+            &format!("{threads}t.mutex_strawman"),
+            "Mupd/s",
+            Direction::Higher,
+            mutex_mups[ti],
+        ));
+        sink::metric(MetricRecord::from_value(
+            &format!("{threads}t.seqlock_writers"),
+            "Mupd/s",
+            Direction::Higher,
+            seqlock_mups[ti],
+        ));
     }
 
     // Reader tax: READERS views, 0 vs 1 concurrent writer.
@@ -227,4 +241,24 @@ fn main() {
             "CONCURRENT RW GOALS NOT MET — investigate (debug build? < 4 cores?)"
         }
     );
+
+    sink::metric(MetricRecord::from_value(
+        "readers.read_only",
+        "Mrd/s",
+        Direction::Higher,
+        base_mrd,
+    ));
+    sink::metric(MetricRecord::from_value(
+        "readers.with_writer",
+        "Mrd/s",
+        Direction::Higher,
+        rw_mrd,
+    ));
+    sink::verdict("seqlock_ge_2x_mutex_4t", vs_mutex >= 2.0, &format!("{vs_mutex:.2}x"));
+    sink::verdict("reader_tax_ge_0.8x", tax >= 0.8, &format!("{tax:.2}x"));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("ops", ops);
+    rec.config("reps", reps);
+    results::write_bench_record(rec);
 }

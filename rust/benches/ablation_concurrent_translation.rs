@@ -26,6 +26,7 @@ use std::time::Instant;
 
 use nvm::bench_utils::section;
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::testutil::Rng;
 use nvm::trees::{LeafTlb, TreeArray};
 
@@ -61,6 +62,7 @@ where
 }
 
 fn main() {
+    sink::begin("ablation_concurrent_translation", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let (ops, reps) = if quick { (100_000usize, 2usize) } else { (1_000_000, 3) };
 
@@ -153,15 +155,31 @@ fn main() {
         assert_eq!(cs_walk, cs_view, "view checksum diverged at {threads}T");
 
         let total = (threads * ops) as f64 / 1e6;
+        let rewalk_mops = total / s_walk;
         strawman_mops[ti] = total / s_straw;
         per_thread_mops[ti] = total / s_view;
         println!(
             "{:<10} {:>12.2} {:>14.2} {:>16.2}",
-            threads,
-            total / s_walk,
-            strawman_mops[ti],
-            per_thread_mops[ti]
+            threads, rewalk_mops, strawman_mops[ti], per_thread_mops[ti]
         );
+        sink::metric(MetricRecord::from_value(
+            &format!("{threads}t.rewalk"),
+            "Mreads/s",
+            Direction::Higher,
+            rewalk_mops,
+        ));
+        sink::metric(MetricRecord::from_value(
+            &format!("{threads}t.locked_tlb"),
+            "Mreads/s",
+            Direction::Higher,
+            strawman_mops[ti],
+        ));
+        sink::metric(MetricRecord::from_value(
+            &format!("{threads}t.per_thread_tlb"),
+            "Mreads/s",
+            Direction::Higher,
+            per_thread_mops[ti],
+        ));
     }
 
     section("verdict");
@@ -191,4 +209,12 @@ fn main() {
             "CONCURRENT TRANSLATION GOALS NOT MET — investigate (debug build? < 4 cores?)"
         }
     );
+
+    sink::verdict("per_thread_4t_vs_1t_ge_2x", scale >= 2.0, &format!("{scale:.2}x"));
+    sink::verdict("per_thread_vs_locked_ge_1.5x", vs_straw >= 1.5, &format!("{vs_straw:.2}x"));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("ops", ops);
+    rec.config("reps", reps);
+    results::write_bench_record(rec);
 }

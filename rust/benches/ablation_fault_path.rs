@@ -19,9 +19,12 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{larger_than_dram, ExpConfig};
+use nvm::telemetry::{results, sink};
 
 fn main() {
-    let mut cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_fault_path", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let mut cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -64,4 +67,17 @@ fn main() {
             "FAULT-PATH GOAL NOT MET — investigate (debug build? < 4 cores? queue workers starved?)"
         }
     );
+
+    sink::verdict(
+        "paged_throughput_ge_0.7x_resident",
+        ok,
+        &format!("{paged:.2} vs {resident:.2} Mrd/s ({ratio:.2}x)"),
+    );
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("threads", cfg.threads);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

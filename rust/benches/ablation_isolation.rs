@@ -24,9 +24,12 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{multi_tenant, ExpConfig};
+use nvm::telemetry::{results, sink};
 
 fn main() {
-    let mut cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_isolation", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let mut cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -68,4 +71,17 @@ fn main() {
             "ISOLATION GOAL NOT MET — investigate (debug build? < 4 cores? daemon starved?)"
         }
     );
+
+    sink::verdict(
+        "zipfian_throughput_ge_0.8x",
+        ok,
+        &format!("{contended:.2} vs {benign:.2} Mop/s ({ratio:.2}x)"),
+    );
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("threads", cfg.threads);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

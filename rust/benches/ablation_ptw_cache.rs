@@ -7,9 +7,12 @@
 
 use nvm::bench_utils::section;
 use nvm::coordinator::experiments::{ablation_ptw_cache, ExpConfig};
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 
 fn main() {
-    let cfg = if std::env::var("NVM_QUICK").is_ok() {
+    sink::begin("ablation_ptw_cache", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let cfg = if quick {
         ExpConfig::quick()
     } else {
         ExpConfig::default()
@@ -23,10 +26,29 @@ fn main() {
     let off = t.cell("tree phys, iterator off", 0).unwrap();
     let hw_on = t.cell("array VM, PTW cache on", 0).unwrap();
     let hw_off = t.cell("array VM, PTW cache off", 0).unwrap();
+    let sw_saved = (1.0 - on / off) * 100.0;
+    let hw_saved = (1.0 - hw_on / hw_off) * 100.0;
     println!(
-        "software iterator saves {:.1}% of tree access time;\n\
-         hardware PTW cache saves {:.1}% of VM array access time.",
-        (1.0 - on / off) * 100.0,
-        (1.0 - hw_on / hw_off) * 100.0
+        "software iterator saves {sw_saved:.1}% of tree access time;\n\
+         hardware PTW cache saves {hw_saved:.1}% of VM array access time."
     );
+
+    sink::metric(MetricRecord::from_value(
+        "iterator.saved_pct",
+        "%",
+        Direction::Higher,
+        sw_saved,
+    ));
+    sink::metric(MetricRecord::from_value(
+        "ptw_cache.saved_pct",
+        "%",
+        Direction::Info,
+        hw_saved,
+    ));
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

@@ -19,6 +19,7 @@
 
 use nvm::bench_utils::{bench, section};
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction};
 use nvm::testutil::Rng;
 use nvm::trees::TreeArray;
 use nvm::workloads::gups;
@@ -42,6 +43,7 @@ fn xor_all(vals: impl Iterator<Item = u32>) -> u32 {
 }
 
 fn main() {
+    sink::begin("ablation_translation", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let (warmup, iters, accesses) = if quick { (1, 3, 40_000) } else { (2, 7, 200_000) };
     let mut verdicts: Vec<(String, bool)> = Vec::new();
@@ -115,6 +117,18 @@ fn main() {
                 per(&s_flat),
                 per(&s_vec)
             );
+            for (mode, s) in [
+                ("naive", &s_naive),
+                ("cursor1", &s_c1),
+                ("tlb64x4", &s_tlb),
+                ("flat", &s_flat),
+                ("vec", &s_vec),
+            ] {
+                sink::metric(s.metric_ns(
+                    &format!("d{depth}.{pname}.{mode}"),
+                    1.0 / accesses as f64,
+                ));
+            }
 
             if pname == "random" && depth >= 2 {
                 let speedup = s_naive.mean_ns() / s_flat.mean_ns();
@@ -122,6 +136,11 @@ fn main() {
                     format!("flat vs naive, random, depth {depth}: {speedup:.2}x (need >= 3x)"),
                     speedup >= 3.0,
                 ));
+                sink::verdict(
+                    &format!("d{depth}_flat_ge_3x_naive_random"),
+                    speedup >= 3.0,
+                    &format!("{speedup:.2}x"),
+                );
             }
         }
     }
@@ -154,6 +173,10 @@ fn main() {
         format!("batched vs per-op GUPS: {g_speed:.2}x (need > 1x)"),
         g_speed > 1.0,
     ));
+    let as_mups = |ns: f64| ops as f64 / (ns / 1e9) / 1e6;
+    sink::metric(s_per_op.metric_with("gups.per_op", "Mupd/s", Direction::Higher, as_mups));
+    sink::metric(s_batched.metric_with("gups.batched", "Mupd/s", Direction::Higher, as_mups));
+    sink::verdict("gups_batched_beats_per_op", g_speed > 1.0, &format!("{g_speed:.2}x"));
 
     section("verdict");
     let mut all = true;
@@ -169,4 +192,10 @@ fn main() {
             "TRANSLATION GOALS NOT MET — investigate (debug build? tiny machine?)"
         }
     );
+
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("accesses", accesses);
+    rec.config("iters", iters);
+    results::write_bench_record(rec);
 }

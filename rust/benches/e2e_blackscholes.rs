@@ -10,6 +10,7 @@ use nvm::bench_utils::{bench, section, Sample};
 use nvm::coordinator::{BlockBatcher, batcher::BATCH_BLOCKS};
 use nvm::pmem::BlockAllocator;
 use nvm::runtime::{Engine, Input};
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::trees::TreeArray;
 use nvm::workloads::blackscholes as bs;
 use nvm::BLOCK_ELEMS_F32 as BELE;
@@ -18,11 +19,16 @@ const RATE: f32 = 0.03;
 const VOL: f32 = 0.25;
 
 fn main() {
+    sink::begin("e2e_blackscholes", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let engine = match Engine::new() {
         Ok(e) => e,
         Err(e) => {
             eprintln!("SKIP e2e bench: {e}");
+            let mut rec = sink::take().expect("bench sink installed at main start");
+            rec.config("quick", quick);
+            rec.config("skipped", format!("no PJRT engine: {e}"));
+            results::write_bench_record(rec);
             return;
         }
     };
@@ -90,10 +96,21 @@ fn main() {
         mops(&contig),
         mops(&scalar)
     );
+    let overhead = blocked.mean_ns() / contig.mean_ns();
     println!(
-        "blocked/contig layout overhead: {:.3}x (paper Fig 5: ~1.0 for iter-style blocked access)",
-        blocked.mean_ns() / contig.mean_ns()
+        "blocked/contig layout overhead: {overhead:.3}x \
+         (paper Fig 5: ~1.0 for iter-style blocked access)"
     );
+    let to_mops = |ns: f64| n as f64 / (ns * 1e-9) / 1e6;
+    for (name, s) in [("blocked", &blocked), ("contig", &contig), ("scalar", &scalar)] {
+        sink::metric(s.metric_with(name, "Mopt/s", Direction::Higher, to_mops));
+    }
+    sink::metric(MetricRecord::from_value(
+        "blocked_contig_overhead",
+        "x",
+        Direction::Lower,
+        overhead,
+    ));
 
     section("E2E request latency (single 32 KB block)");
     let spot1 = &spot[..BELE];
@@ -112,6 +129,7 @@ fn main() {
         BELE,
         BELE as f64 / lat.mean_ns() * 1e3
     );
+    sink::metric(lat.metric_with("one_block_latency", "ms", Direction::Lower, |ns| ns / 1e6));
 
     // Numerics guard: blocked output equals scalar reference.
     let call_out = tc.to_vec();
@@ -128,4 +146,16 @@ fn main() {
         );
     }
     println!("\nnumerics: blocked PJRT output matches scalar reference ✓");
+
+    sink::verdict(
+        "numerics_match_scalar",
+        true,
+        "blocked PJRT output matches the scalar reference within 1e-2",
+    );
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("n", n);
+    rec.config("iters", iters);
+    rec.config("platform", engine.platform());
+    results::write_bench_record(rec);
 }

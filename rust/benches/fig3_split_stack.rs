@@ -7,9 +7,11 @@
 use nvm::bench_utils::{bench, section};
 use nvm::coordinator::experiments::{fig3, ExpConfig};
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::workloads::fib;
 
 fn main() {
+    sink::begin("fig3_split_stack", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let cfg = if quick {
         ExpConfig::quick()
@@ -42,4 +44,26 @@ fn main() {
          allocator-backed frames), so the ratio overstates gcc's inlined 3-insn\n\
          check; the per-call cost above feeds the Figure 3 model instead."
     );
+
+    sink::metric(native.metric_with("fib.native", "ms", Direction::Lower, |ns| ns / 1e6));
+    sink::metric(split.metric_with("fib.split_stack", "ms", Direction::Lower, |ns| ns / 1e6));
+    sink::metric(MetricRecord::from_value(
+        "fib.split_native_ratio",
+        "x",
+        Direction::Lower,
+        ratio,
+    ));
+    sink::metric(MetricRecord::from_value(
+        "fib.extra_per_call",
+        "ns",
+        Direction::Lower,
+        extra_ns,
+    ));
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("fib_n", n);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

@@ -9,11 +9,13 @@
 use nvm::bench_utils::{bench_for, section, Sample};
 use nvm::coordinator::experiments::{fig4_gups, fig4_rbtree, ExpConfig};
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::trees::TreeArray;
 use nvm::workloads::gups;
 use std::time::Duration;
 
 fn main() {
+    sink::begin("fig4_gups_rbtree", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let mut cfg = if quick {
         ExpConfig::quick()
@@ -25,6 +27,7 @@ fn main() {
     let t = fig4_gups(&cfg);
     println!("{t}");
     println!("{}", t.to_markdown());
+    sink::with(|r| t.record_into(r));
 
     section("Figure 4 right: red-black tree (simulated)");
     if quick {
@@ -33,6 +36,7 @@ fn main() {
     let t = fig4_rbtree(&cfg);
     println!("{t}");
     println!("{}", t.to_markdown());
+    sink::with(|r| t.record_into(r));
 
     section("GUPS real execution (RAM scale, layout cost only)");
     let budget = if quick {
@@ -62,10 +66,26 @@ fn main() {
             per(&st),
             per(&st) / per(&sv)
         );
+        let mb = bytes >> 20;
+        sink::metric(sv.metric_ns(&format!("gups_real.{mb}mb.vec"), 1.0 / ops as f64));
+        sink::metric(st.metric_ns(&format!("gups_real.{mb}mb.tree"), 1.0 / ops as f64));
+        sink::metric(MetricRecord::from_value(
+            &format!("gups_real.{mb}mb.ratio"),
+            "x",
+            Direction::Lower,
+            per(&st) / per(&sv),
+        ));
     }
     println!(
         "\nnote: both real runs share this machine's VM; the ratio isolates the\n\
          tree's software walk cost. The simulated table above adds the\n\
          translation difference the paper measures."
     );
+
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("ops", ops);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

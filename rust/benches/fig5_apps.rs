@@ -8,6 +8,7 @@
 use nvm::bench_utils::{bench_for, section, Sample};
 use nvm::coordinator::experiments::{fig5, ExpConfig};
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::trees::TreeArray;
 use nvm::workloads::blackscholes as bs;
 use nvm::workloads::hashprobe;
@@ -17,6 +18,7 @@ const RATE: f32 = 0.03;
 const VOL: f32 = 0.25;
 
 fn main() {
+    sink::begin("fig5_apps", "bench");
     let quick = std::env::var("NVM_QUICK").is_ok();
     let cfg = if quick {
         ExpConfig::quick()
@@ -73,6 +75,15 @@ fn main() {
         per(&si),
         per(&si) / per(&sv)
     );
+    for (name, s) in [("bs_real.contig", &sv), ("bs_real.naive", &sn), ("bs_real.iter", &si)] {
+        sink::metric(s.metric_ns(name, 1.0 / n as f64));
+    }
+    sink::metric(MetricRecord::from_value(
+        "bs_real.iter_overhead",
+        "x",
+        Direction::Lower,
+        per(&si) / per(&sv),
+    ));
 
     section("deepsjeng-like hash probe real execution (RAM scale)");
     let ops = if quick { 200_000u64 } else { 1_000_000 };
@@ -90,4 +101,21 @@ fn main() {
         perp(&pt),
         perp(&pt) / perp(&pv)
     );
+    sink::metric(pv.metric_ns("probe_real.vec", 1.0 / ops as f64));
+    sink::metric(pt.metric_ns("probe_real.tree", 1.0 / ops as f64));
+    sink::metric(MetricRecord::from_value(
+        "probe_real.tree_overhead",
+        "x",
+        Direction::Lower,
+        perp(&pt) / perp(&pv),
+    ));
+
+    sink::with(|r| t.record_into(r));
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("n", n);
+    rec.config("ops", ops);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

@@ -12,6 +12,7 @@
 use nvm::bench_utils::{bench_for, section, Sample};
 use nvm::coordinator::experiments::{table2, ExpConfig};
 use nvm::pmem::BlockAllocator;
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
 use nvm::testutil::Rng;
 use nvm::workloads::{linear_scan, strided_scan};
 use std::time::Duration;
@@ -21,6 +22,7 @@ fn quick() -> bool {
 }
 
 fn main() {
+    sink::begin("table2_scans", "bench");
     let cfg = if quick() {
         ExpConfig::quick()
     } else {
@@ -31,6 +33,7 @@ fn main() {
     let t = table2(&cfg);
     println!("{t}");
     println!("{}", t.to_markdown());
+    sink::with(|r| t.record_into(r));
 
     section("Table 2 (real execution, RAM scale)");
     let budget = if quick() {
@@ -68,6 +71,23 @@ fn main() {
                 per(&sn) / per(&sv),
                 per(&si) / per(&sv),
             );
+            let kb = bytes >> 10;
+            let scale = 1.0 / elems as f64;
+            sink::metric(sv.metric_ns(&format!("real.{kb}kb.{label}.vec"), scale));
+            sink::metric(sn.metric_ns(&format!("real.{kb}kb.{label}.naive"), scale));
+            sink::metric(si.metric_ns(&format!("real.{kb}kb.{label}.iter"), scale));
+            sink::metric(MetricRecord::from_value(
+                &format!("real.{kb}kb.{label}.iter_ratio"),
+                "x",
+                Direction::Lower,
+                per(&si) / per(&sv),
+            ));
         }
     }
+
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick());
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
 }

@@ -4,6 +4,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::telemetry::{Direction, MetricRecord};
+
 /// Summary statistics for one measured benchmark.
 #[derive(Clone, Debug)]
 pub struct Sample {
@@ -17,12 +19,35 @@ pub struct Sample {
     pub min: Duration,
     /// Iterations measured (after warmup).
     pub iters: u32,
+    /// Raw per-iteration times — the fields above are derived from
+    /// these; the results pipeline records them so downstream diffs
+    /// can recompute CIs instead of trusting a point estimate.
+    pub times: Vec<Duration>,
 }
 
 impl Sample {
     /// Mean in nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         self.mean.as_secs_f64() * 1e9
+    }
+
+    /// The raw iterations as a results-schema metric, each iteration's
+    /// nanoseconds mapped through `f` (per-op ns, Mop/s, ...).
+    pub fn metric_with(
+        &self,
+        name: &str,
+        unit: &str,
+        direction: Direction,
+        f: impl Fn(f64) -> f64,
+    ) -> MetricRecord {
+        let samples = self.times.iter().map(|t| f(t.as_secs_f64() * 1e9)).collect();
+        MetricRecord::from_samples(name, unit, direction, samples)
+    }
+
+    /// Per-operation latency metric: iteration ns × `scale`
+    /// (`1.0 / ops_per_iter` for ns/op), lower is better.
+    pub fn metric_ns(&self, name: &str, scale: f64) -> MetricRecord {
+        self.metric_with(name, "ns", Direction::Lower, |ns| ns * scale)
     }
 }
 
@@ -56,7 +81,7 @@ pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -
         std::hint::black_box(f());
         times.push(t0.elapsed());
     }
-    summarize(name, &times)
+    summarize(name, times)
 }
 
 /// Adaptive variant: keeps iterating until `budget` wall time is spent
@@ -73,10 +98,10 @@ pub fn bench_for<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> S
             break;
         }
     }
-    summarize(name, &times)
+    summarize(name, times)
 }
 
-fn summarize(name: &str, times: &[Duration]) -> Sample {
+fn summarize(name: &str, times: Vec<Duration>) -> Sample {
     let n = times.len() as f64;
     let mean_s = times.iter().map(|t| t.as_secs_f64()).sum::<f64>() / n;
     let var = if times.len() > 1 {
@@ -94,6 +119,7 @@ fn summarize(name: &str, times: &[Duration]) -> Sample {
         stddev: Duration::from_secs_f64(var.sqrt()),
         min: *times.iter().min().unwrap(),
         iters: times.len() as u32,
+        times,
     }
 }
 
@@ -131,5 +157,17 @@ mod tests {
     fn bench_for_runs_at_least_three() {
         let s = bench_for("fast", Duration::from_millis(1), || 1u8);
         assert!(s.iters >= 3);
+        assert_eq!(s.times.len(), s.iters as usize);
+    }
+
+    #[test]
+    fn sample_metric_from_raw_times() {
+        let s = bench("noop", 0, 4, || 1u8);
+        assert_eq!(s.times.len(), 4);
+        let m = s.metric_ns("noop.ns", 0.5);
+        assert_eq!(m.summary.n, 4);
+        assert_eq!(m.direction, Direction::Lower);
+        assert_eq!(m.samples.len(), 4);
+        assert!((m.summary.mean - s.mean_ns() * 0.5).abs() <= s.mean_ns() * 0.5 * 1e-9);
     }
 }

@@ -1,7 +1,8 @@
 //! Minimal CLI argument parsing (clap is unreachable offline).
 //!
 //! Grammar: `nvm <command> [--flag value]...`
-//! Commands: `list`, `run <experiment>`, `serve`, `info`.
+//! Commands: `list`, `run <experiment>`, `report <file>`,
+//! `diff <old> <new>`, `merge <out> <in>...`, `serve`, `info`.
 
 use std::collections::HashMap;
 

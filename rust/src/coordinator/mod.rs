@@ -14,4 +14,4 @@ pub mod runner;
 pub use batcher::BlockBatcher;
 pub use experiments::ExpConfig;
 pub use report::Table;
-pub use runner::{list_experiments, run_experiment};
+pub use runner::{list_experiments, run_experiment, run_experiment_recorded};

@@ -1,5 +1,7 @@
 //! Paper-style result tables.
 
+use crate::telemetry::results::{slug, Direction, MetricRecord, Record};
+
 /// A formatted results table (one per paper table/figure series).
 #[derive(Clone, Debug)]
 pub struct Table {
@@ -47,6 +49,26 @@ impl Table {
             .iter()
             .find(|(l, _)| l == row)
             .and_then(|(_, v)| v.get(col).copied())
+    }
+
+    /// Flatten every cell into `record` as a metric named
+    /// `<table>.<row>.<column>` (all slugged; the table part is the
+    /// title up to its first `:`). Cells carry [`Direction::Info`] —
+    /// a table mixes ratios, throughputs, and counters, so `diff`
+    /// reports changes without judging them; experiments emit their
+    /// direction-bearing metrics through the telemetry sink. Notes
+    /// ride along as free text.
+    pub fn record_into(&self, record: &mut Record) {
+        let tslug = slug(self.title.split(':').next().unwrap_or(&self.title));
+        for (label, vals) in &self.rows {
+            for (col, v) in self.columns.iter().zip(vals) {
+                let name = format!("{tslug}.{}.{}", slug(label), slug(col));
+                record.metric(MetricRecord::from_value(&name, col, Direction::Info, *v));
+            }
+        }
+        for n in &self.notes {
+            record.notes.push(format!("[{}] {n}", self.title));
+        }
     }
 
     /// Render as GitHub-flavored markdown (EXPERIMENTS.md blocks).
@@ -157,5 +179,21 @@ mod tests {
         t.note("threads=8");
         assert!(format!("{t}").contains("threads=8"));
         assert!(t.to_markdown().contains("_threads=8_"));
+    }
+
+    #[test]
+    fn record_into_flattens_cells() {
+        let mut t = Table::new("Table 2: tree/array ratios", vec!["4KB".into(), "64 GB".into()]);
+        t.row("linear scan", vec![1.02, 1.37]);
+        t.note("threads=8");
+        let mut r = Record::new("table2", "experiment");
+        t.record_into(&mut r);
+        assert_eq!(r.metrics.len(), 2);
+        assert_eq!(r.metrics[0].name, "table_2.linear_scan.4kb");
+        assert_eq!(r.metrics[0].summary.mean, 1.02);
+        assert_eq!(r.metrics[1].name, "table_2.linear_scan.64_gb");
+        assert_eq!(r.metrics[1].unit, "64 GB");
+        assert_eq!(r.metrics[1].direction, Direction::Info);
+        assert_eq!(r.notes, vec!["[Table 2: tree/array ratios] threads=8"]);
     }
 }

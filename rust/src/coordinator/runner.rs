@@ -3,6 +3,8 @@
 use crate::coordinator::experiments::{self, ExpConfig};
 use crate::coordinator::report::Table;
 use crate::error::{Error, Result};
+use crate::telemetry::results::Record;
+use crate::telemetry::sink;
 
 /// Descriptor of a runnable experiment.
 pub struct ExperimentInfo {
@@ -131,6 +133,42 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
     Ok(tables)
 }
 
+/// Run one experiment with the telemetry sink installed, returning
+/// its tables plus one results [`Record`] per experiment: table cells
+/// flattened to metrics, anything the experiment emitted through
+/// [`sink`] (direction-bearing metrics, traces, action logs,
+/// verdicts), and the config it ran under. `"all"` yields one record
+/// per registered experiment.
+pub fn run_experiment_recorded(
+    name: &str,
+    cfg: &ExpConfig,
+) -> Result<(Vec<Table>, Vec<Record>)> {
+    if name == "all" {
+        let mut tables = Vec::new();
+        let mut records = Vec::new();
+        for e in list_experiments() {
+            let (t, r) = run_experiment_recorded(e.name, cfg)?;
+            tables.extend(t);
+            records.extend(r);
+        }
+        return Ok((tables, records));
+    }
+    sink::begin(name, "experiment");
+    let result = run_experiment(name, cfg);
+    // Always uninstall, even on error, so a failed run can't leak its
+    // sink into the next one.
+    let mut record = sink::take().unwrap_or_else(|| Record::new(name, "experiment"));
+    let tables = result?;
+    record
+        .config("sample", cfg.sample)
+        .config("threads", cfg.threads)
+        .config("seed", cfg.seed);
+    for t in &tables {
+        t.record_into(&mut record);
+    }
+    Ok((tables, vec![record]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +176,27 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("nope", &ExpConfig::quick()).is_err());
+    }
+
+    #[test]
+    fn recorded_run_flattens_tables() {
+        let _g = sink::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = ExpConfig {
+            sample: 20_000,
+            threads: 2,
+            ..ExpConfig::default()
+        };
+        let (tables, records) = run_experiment_recorded("table2", &cfg).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert_eq!(r.name, "table2");
+        assert_eq!(r.kind, "experiment");
+        assert!(!r.metrics.is_empty());
+        assert!(r.config.iter().any(|(k, v)| k == "sample" && v == "20000"));
+        // An error still clears the sink.
+        assert!(run_experiment_recorded("nope", &cfg).is_err());
+        assert!(!sink::active());
     }
 
     #[test]

@@ -52,6 +52,11 @@
 //! * [`runtime`] — the PJRT execution path: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX/Pallas) and runs them from Rust; Python is never on
 //!   the request path.
+//! * [`telemetry`] — the unified measurement surface: a streaming stat
+//!   engine with hot-path log-scale histograms, every subsystem stats
+//!   struct behind one [`telemetry::MetricSource`] trait, and the
+//!   machine-readable `BENCH_*.json` results pipeline (schema, writer,
+//!   `report`/`diff` rendering with CI-overlap regression verdicts).
 //!
 //! ## Quickstart
 //!
@@ -104,6 +109,7 @@ pub mod mmd;
 pub mod pmem;
 pub mod runtime;
 pub mod stack;
+pub mod telemetry;
 pub mod testutil;
 pub mod trees;
 pub mod workloads;

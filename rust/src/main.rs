@@ -2,9 +2,13 @@
 //! batched pricing requests through the PJRT runtime, and prints
 //! environment info.
 
+use std::path::Path;
+
 use nvm::cli::Cli;
-use nvm::coordinator::{list_experiments, run_experiment, ExpConfig};
+use nvm::coordinator::{list_experiments, run_experiment, run_experiment_recorded, ExpConfig};
 use nvm::runtime::Engine;
+use nvm::telemetry::report::{render_dat, render_results};
+use nvm::telemetry::{DiffReport, ResultsFile, ResultsWriter};
 use nvm::workloads::CostModel;
 
 fn main() {
@@ -18,6 +22,9 @@ fn main() {
     let code = match cli.command() {
         Some("list") => cmd_list(),
         Some("run") => cmd_run(&cli),
+        Some("report") => cmd_report(&cli),
+        Some("diff") => cmd_diff(&cli),
+        Some("merge") => cmd_merge(&cli),
         Some("info") => cmd_info(),
         Some("serve") => cmd_serve(&cli),
         _ => {
@@ -35,6 +42,10 @@ fn print_usage() {
          USAGE:\n\
            nvm list                          list experiments\n\
            nvm run <experiment|all> [flags]  run and print paper tables\n\
+           nvm report <results.json> [--dat] render a results file (table or gnuplot .dat)\n\
+           nvm diff <old.json> <new.json>    CI-overlap regression verdicts (nonzero exit\n\
+                                             on regression; --soft reports only)\n\
+           nvm merge <out.json> <in.json>... merge results files (--label NAME)\n\
            nvm serve [--requests N]          serve blackscholes blocks via PJRT\n\
            nvm info                          runtime/artifact info\n\
          \n\
@@ -43,7 +54,8 @@ fn print_usage() {
            --quick        200k samples (fast smoke run)\n\
            --threads N    sweep parallelism\n\
            --seed N       workload RNG seed\n\
-           --markdown     print tables as markdown"
+           --markdown     print tables as markdown\n\
+           --json PATH    also write a machine-readable results file"
     );
 }
 
@@ -76,8 +88,13 @@ fn cmd_run(cli: &Cli) -> i32 {
         cfg.threads,
         nvm::coordinator::pool::default_threads()
     );
-    match run_experiment(&name, &cfg) {
-        Ok(tables) => {
+    let json_path = cli.flag_str("json").map(str::to_string);
+    let run = match &json_path {
+        Some(_) => run_experiment_recorded(&name, &cfg),
+        None => run_experiment(&name, &cfg).map(|tables| (tables, Vec::new())),
+    };
+    match run {
+        Ok((tables, records)) => {
             for t in tables {
                 if cli.flag_bool("markdown") {
                     println!("{}", t.to_markdown());
@@ -85,6 +102,117 @@ fn cmd_run(cli: &Cli) -> i32 {
                     println!("{t}");
                 }
             }
+            if let Some(path) = json_path {
+                let mut w = ResultsWriter::new(&format!("run-{name}"));
+                for r in records {
+                    w.add(r);
+                }
+                if let Err(e) = w.save(Path::new(&path)) {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+                println!("results: wrote {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Render a results file for humans (default) or gnuplot (`--dat`).
+fn cmd_report(cli: &Cli) -> i32 {
+    let Some(path) = cli.positional.get(1) else {
+        eprintln!("error: `nvm report <results.json>`");
+        return 2;
+    };
+    match ResultsFile::load(Path::new(path)) {
+        Ok(file) => {
+            if cli.flag_bool("dat") {
+                print!("{}", render_dat(&file));
+            } else {
+                print!("{}", render_results(&file));
+            }
+            0
+        }
+        Err(e) => {
+            // Schema/parse problems are hard errors (exit 2), per the
+            // CI contract: a malformed results file must never pass.
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Compare two results files; exit 1 on regression (0 with `--soft`),
+/// 2 on schema errors.
+fn cmd_diff(cli: &Cli) -> i32 {
+    let (Some(old_path), Some(new_path)) = (cli.positional.get(1), cli.positional.get(2)) else {
+        eprintln!("error: `nvm diff <old.json> <new.json>`");
+        return 2;
+    };
+    let old = match ResultsFile::load(Path::new(old_path)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let new = match ResultsFile::load(Path::new(new_path)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let report = DiffReport::compare(&old, &new);
+    print!("{report}");
+    if report.regressions() > 0 && !cli.flag_bool("soft") {
+        1
+    } else {
+        0
+    }
+}
+
+/// Merge per-bench results files into one (CI folds the bench-suite
+/// drops into `BENCH_ci.json` this way).
+fn cmd_merge(cli: &Cli) -> i32 {
+    let Some(out_path) = cli.positional.get(1) else {
+        eprintln!("error: `nvm merge <out.json> <in.json>...`");
+        return 2;
+    };
+    let inputs = &cli.positional[2..];
+    if inputs.is_empty() {
+        eprintln!("error: `nvm merge <out.json> <in.json>...`");
+        return 2;
+    }
+    let mut parts = Vec::new();
+    for p in inputs {
+        match ResultsFile::load(Path::new(p)) {
+            Ok(f) => parts.push(f),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
+    }
+    let label = cli.flag_str("label").unwrap_or("merged");
+    let merged = match ResultsFile::merge(label, &parts) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match merged.save(Path::new(out_path)) {
+        Ok(()) => {
+            println!(
+                "merged {} record(s) from {} file(s) into {out_path}",
+                merged.records.len(),
+                parts.len()
+            );
             0
         }
         Err(e) => {

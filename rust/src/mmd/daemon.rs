@@ -102,6 +102,12 @@ pub struct MmdReport {
     pub reclaimed: u64,
     /// Fragmentation score sampled every `trace_every` ticks.
     pub score_trace: Vec<f64>,
+    /// Per-tick `(tick, action name)` rows in decision order (capped at
+    /// [`ACTION_LOG_CAP`]) — the structured companion to
+    /// [`ActionCounts`]: counts say *how often*, this says *when*. Tick
+    /// numbers are 0-based and line up with the `score_trace` sampling
+    /// index (`tick % trace_every == 0`).
+    pub action_log: Vec<(u64, &'static str)>,
     /// Blocks still in limbo at shutdown (non-zero only if a registered
     /// reader never quiesced).
     pub limbo_remaining: usize,
@@ -346,6 +352,12 @@ fn drain_limbo<A: BlockAlloc>(alloc: &A) -> usize {
 /// own swap path degraded (ext-mode queues carry their own flag).
 const EVICT_FAIL_DEGRADE: u32 = 3;
 
+/// Upper bound on [`MmdReport::action_log`] rows. Long soak runs tick
+/// millions of times; the log keeps the opening window (where policy
+/// transitions actually happen) and drops the steady-state tail rather
+/// than growing without bound.
+pub const ACTION_LOG_CAP: usize = 4096;
+
 fn daemon_run<'e, A, P>(
     alloc: &'e A,
     registry: &'e TreeRegistry<'e>,
@@ -455,7 +467,11 @@ where
             seq_retries,
         };
         report.swap_degraded = swap_degraded;
-        match policy.decide(&snap, &ctx) {
+        let action = policy.decide(&snap, &ctx);
+        if report.action_log.len() < ACTION_LOG_CAP {
+            report.action_log.push((report.ticks, action.name()));
+        }
+        match action {
             Action::Idle => report.actions.idle += 1,
             Action::CompactPool => {
                 compactor.compact_span(cfg.tokens_per_tick, 0, alloc.capacity());

@@ -90,6 +90,6 @@ pub mod policy;
 pub mod stats;
 
 pub use compactor::{CompactStats, Compactor};
-pub use daemon::{ActionCounts, MmdConfig, MmdHandle, MmdReport};
+pub use daemon::{ActionCounts, MmdConfig, MmdHandle, MmdReport, ACTION_LOG_CAP};
 pub use policy::{Action, Policy, PolicyCtx, ThresholdPolicy};
 pub use stats::{FragSampler, FragSnapshot};

@@ -105,6 +105,22 @@ pub enum Action {
     },
 }
 
+impl Action {
+    /// Stable short name for logs and the results schema's per-tick
+    /// action rows (argument-free, so rows compare across commits).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Action::Idle => "idle",
+            Action::CompactPool => "compact_pool",
+            Action::CompactShard(_) => "compact_shard",
+            Action::Rebalance { .. } => "rebalance",
+            Action::Evict { .. } => "evict",
+            Action::Restore { .. } => "restore",
+            Action::Prefetch { .. } => "prefetch",
+        }
+    }
+}
+
 /// What the daemon knows beyond the telemetry sample: the registry's
 /// eviction state. Keeps `decide` honest — a policy that cannot see
 /// that nothing is evictable would demand eviction forever under

@@ -29,6 +29,7 @@
 //!   hot the free pool is, the §3 warm-reuse signal.
 
 use crate::pmem::{BlockAlloc, EpochStats};
+use crate::telemetry::metrics::MetricSource;
 
 /// Free-run histogram buckets: run lengths `1, 2-3, 4-7, …, ≥128`.
 pub const RUN_HIST_BUCKETS: usize = 8;
@@ -87,6 +88,32 @@ impl FragSnapshot {
             (Some(&l), Some(&b)) if b > 0 => l as f64 / b as f64,
             _ => 0.0,
         }
+    }
+}
+
+impl MetricSource for FragSnapshot {
+    fn metric_prefix(&self) -> &'static str {
+        "frag"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("capacity", self.capacity as f64);
+        out("live", self.live as f64);
+        out("free", self.free as f64);
+        out("free_runs", self.free_runs as f64);
+        out("longest_free_run", self.longest_free_run as f64);
+        out("score", self.score);
+        out("shards", self.shard_spans.len() as f64);
+        out("imbalance", self.imbalance);
+        out("reuse_rate", self.reuse_rate);
+        // The pool's epoch counters ride along under their own prefix
+        // so one `record(&snap)` carries both surfaces.
+        self.epoch.emit(&mut |name, value| {
+            let mut prefixed = String::with_capacity(6 + name.len());
+            prefixed.push_str("epoch.");
+            prefixed.push_str(name);
+            out(&prefixed, value);
+        });
     }
 }
 

@@ -87,6 +87,8 @@ use crate::error::{Error, Result};
 use crate::pmem::swap::{SwapBacking, SwapPool, SwapSlot};
 use crate::pmem::tenant::{TenantRegistry, DEFAULT_TENANT};
 use crate::pmem::{BlockAlloc, BlockId};
+use crate::telemetry::metrics::MetricSource;
+use crate::telemetry::stat::LogHistogram;
 
 /// The type-erased eviction surface: what the mmd compactor needs to
 /// push a leaf out. Implemented by [`SwapPool`] (over any allocator and
@@ -202,6 +204,25 @@ impl FaultStats {
     }
 }
 
+impl MetricSource for FaultStats {
+    fn metric_prefix(&self) -> &'static str {
+        "fault"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("faults", self.faults as f64);
+        out("demand", self.demand as f64);
+        out("retries", self.retries as f64);
+        out("permanent", self.permanent as f64);
+        out("shed_inline", self.shed_inline as f64);
+        out("shed_prefetch", self.shed_prefetch as f64);
+        out("slow_faults", self.slow_faults as f64);
+        out("depth_hw", self.depth_hw as f64);
+        out("mean_us", self.mean_ns() as f64 / 1e3);
+        out("max_us", self.max_ns as f64 / 1e3);
+    }
+}
+
 struct QState {
     /// Pending requests: `(request id, raw slot, tenant)`.
     queue: VecDeque<(u64, u64, u16)>,
@@ -244,6 +265,9 @@ pub struct FaultQueue<'p> {
     s_depth_hw: AtomicUsize,
     s_total_ns: AtomicU64,
     s_max_ns: AtomicU64,
+    /// Per-request fault-in latency distribution (ns). One mutexed
+    /// record per fault — noise next to the swap I/O it measures.
+    s_lat: Mutex<LogHistogram>,
 }
 
 impl<'p> FaultQueue<'p> {
@@ -297,6 +321,7 @@ impl<'p> FaultQueue<'p> {
             s_depth_hw: AtomicUsize::new(0),
             s_total_ns: AtomicU64::new(0),
             s_max_ns: AtomicU64::new(0),
+            s_lat: Mutex::new(LogHistogram::new()),
         }
     }
 
@@ -444,6 +469,12 @@ impl<'p> FaultQueue<'p> {
         }
     }
 
+    /// The fault-in latency distribution (ns), cloned out so callers
+    /// report percentiles without holding the queue's histogram lock.
+    pub fn latency_hist(&self) -> LogHistogram {
+        self.s_lat.lock().unwrap().clone()
+    }
+
     /// A [`LeafFaulter`] view of this queue with **prefetch** shedding:
     /// requests through the gate are dropped (typed error, counted)
     /// when the queue is full or degraded, so speculative swap-ins
@@ -555,6 +586,7 @@ impl<'p> FaultQueue<'p> {
         let ns = dur.as_nanos() as u64;
         self.s_total_ns.fetch_add(ns, Ordering::Relaxed);
         self.s_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.s_lat.lock().unwrap().record(ns);
         if dur > self.cfg.slow_fault {
             self.s_slow.fetch_add(1, Ordering::Relaxed);
         }
@@ -874,6 +906,9 @@ mod tests {
         assert_eq!(st.slow_faults, 1, "a 5 ms fault must count against a 2 ms threshold");
         assert!(st.max_ns >= 2_000_000);
         assert!(st.mean_ns() > 0);
+        let hist = q.latency_hist();
+        assert_eq!(hist.count(), 1, "the fault must land in the latency histogram");
+        assert!(hist.percentile(1.0) >= 2_000_000);
         a.free(nb).unwrap();
     }
 }

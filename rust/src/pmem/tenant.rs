@@ -52,6 +52,8 @@ use crate::error::{Error, Result};
 use crate::pmem::epoch::ArenaEpoch;
 use crate::pmem::protect::ProtectionDomain;
 use crate::pmem::{AllocStats, BlockAlloc, BlockId, ContentionStats};
+use crate::telemetry::metrics::MetricSource;
+use crate::telemetry::stat::LogHistogram;
 
 /// The implicit tenant of tenant-unaware code paths: registrations and
 /// fault requests that never name a tenant run as tenant 0 (the
@@ -110,6 +112,10 @@ struct TenantState {
     evictions: AtomicU64,
     /// Successful fault-ins on this tenant's behalf.
     faults: AtomicU64,
+    /// Per-op latency histogram (ns) — the tenant's SLO surface.
+    /// Workloads feed it via [`Tenant::record_latency_ns`] (typically
+    /// sampled); `MmdReport` rows carry its p50/p99.
+    lat: Mutex<LogHistogram>,
 }
 
 /// A cheap cloneable handle to one admitted tenant. All state is
@@ -205,10 +211,31 @@ impl Tenant {
         }
     }
 
-    /// One row of per-tenant observability (quota, pressure, faults —
-    /// the `MmdReport` surfaces these).
+    /// Record one operation latency (ns) into the tenant's SLO
+    /// histogram. Callers on hot paths sample (every Nth op) — the
+    /// log-scale histogram itself is cheap, but this takes a mutex.
+    pub fn record_latency_ns(&self, ns: u64) {
+        self.0.lat.lock().unwrap().record(ns);
+    }
+
+    /// The tenant's SLO histogram, merged out (so callers can build
+    /// cross-phase aggregates without holding the lock).
+    pub fn latency_hist(&self) -> LogHistogram {
+        self.0.lat.lock().unwrap().clone()
+    }
+
+    /// One row of per-tenant observability (quota, pressure, faults,
+    /// SLO percentiles — the `MmdReport` surfaces these).
     pub fn snapshot(&self) -> TenantSnapshot {
         let s = &*self.0;
+        let (lat_ops, p50_us, p99_us) = {
+            let lat = s.lat.lock().unwrap();
+            (
+                lat.count(),
+                lat.percentile(0.50) as f64 / 1e3,
+                lat.percentile(0.99) as f64 / 1e3,
+            )
+        };
         TenantSnapshot {
             tenant: s.id,
             domain: s.domain.0,
@@ -222,6 +249,9 @@ impl Tenant {
             quota_failures: s.quota_failures.load(Ordering::Relaxed),
             evictions: s.evictions.load(Ordering::Relaxed),
             faults: s.faults.load(Ordering::Relaxed),
+            lat_ops,
+            p50_us,
+            p99_us,
         }
     }
 }
@@ -253,6 +283,34 @@ pub struct TenantSnapshot {
     pub evictions: u64,
     /// Successful fault-ins for this tenant.
     pub faults: u64,
+    /// Latencies recorded into the SLO histogram (0 = no SLO data).
+    pub lat_ops: u64,
+    /// SLO median op latency in µs (0 with no SLO data).
+    pub p50_us: f64,
+    /// SLO tail (p99) op latency in µs (0 with no SLO data).
+    pub p99_us: f64,
+}
+
+impl MetricSource for TenantSnapshot {
+    fn metric_prefix(&self) -> &'static str {
+        "tenant"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("used", self.used as f64);
+        out("peak", self.peak as f64);
+        out("soft_quota", self.soft_quota as f64);
+        out("hard_quota", self.hard_quota as f64);
+        out("share", self.share as f64);
+        out("pressured", self.pressured as u8 as f64);
+        out("degraded", self.degraded as u8 as f64);
+        out("quota_failures", self.quota_failures as f64);
+        out("evictions", self.evictions as f64);
+        out("faults", self.faults as f64);
+        out("lat_ops", self.lat_ops as f64);
+        out("p50_us", self.p50_us);
+        out("p99_us", self.p99_us);
+    }
 }
 
 /// The tenant ledger: admission, departure, and the per-tenant lookups
@@ -297,6 +355,7 @@ impl TenantRegistry {
             quota_failures: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             faults: AtomicU64::new(0),
+            lat: Mutex::new(LogHistogram::new()),
         }));
         self.tenants.lock().unwrap().push(t.clone());
         t

@@ -1,0 +1,495 @@
+//! Sample-wise comparison of two results files into per-metric
+//! regression verdicts.
+//!
+//! The reasoning is confidence-interval overlap: each side's mean
+//! carries an uncertainty margin (its t-based 95% CI when it has one;
+//! a fixed relative noise floor when it is a single observation or a
+//! histogram-derived percentile). Two metrics whose intervals overlap
+//! are *unchanged*; disjoint intervals are judged by the metric's
+//! declared direction — a worse disjoint mean is a **regression**.
+//! Verdict flips from PASS to FAIL always count as regressions.
+
+use std::fmt;
+
+use super::results::{Direction, ResultsFile, Summary};
+
+/// Relative margin used when a metric has no CI of its own (single
+/// sample, or percentiles derived from a histogram): ±5% of the mean.
+pub const NOISE_FLOOR: f64 = 0.05;
+
+/// What happened to one metric between the two files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Disjoint intervals, moved in the better direction.
+    Improved,
+    /// Disjoint intervals, moved in the worse direction.
+    Regressed,
+    /// Disjoint intervals on an [`Direction::Info`] metric.
+    Changed,
+    /// Intervals overlap — no statistically visible change.
+    Unchanged,
+    /// One side (or both) carries no data.
+    NoData,
+    /// Metric exists only in the new file.
+    Added,
+    /// Metric exists only in the old file.
+    Removed,
+}
+
+impl Outcome {
+    /// Short tag for table rendering.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Outcome::Improved => "[+]",
+            Outcome::Regressed => "[-]",
+            Outcome::Changed => "[~]",
+            Outcome::Unchanged => "[=]",
+            Outcome::NoData => "[?]",
+            Outcome::Added => "[a]",
+            Outcome::Removed => "[r]",
+        }
+    }
+}
+
+/// One metric's comparison.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    /// Owning record name.
+    pub record: String,
+    /// Metric name.
+    pub metric: String,
+    /// Unit label (from the new side when present).
+    pub unit: String,
+    /// Declared direction.
+    pub direction: Direction,
+    /// Old-side summary (zeroed when [`Outcome::Added`]).
+    pub old: Summary,
+    /// New-side summary (zeroed when [`Outcome::Removed`]).
+    pub new: Summary,
+    /// Mean delta as a fraction of the old mean (0 when undefined).
+    pub delta: f64,
+    /// The call.
+    pub outcome: Outcome,
+    /// Interval reasoning, human-readable.
+    pub detail: String,
+}
+
+/// One verdict's comparison.
+#[derive(Clone, Debug)]
+pub struct VerdictDiff {
+    /// Owning record name.
+    pub record: String,
+    /// Verdict name.
+    pub name: String,
+    /// Old pass state (`None` when the verdict is new).
+    pub old_pass: Option<bool>,
+    /// New pass state (`None` when the verdict disappeared).
+    pub new_pass: Option<bool>,
+}
+
+impl VerdictDiff {
+    /// A PASS (or absent) verdict that now FAILs.
+    pub fn regressed(&self) -> bool {
+        self.new_pass == Some(false) && self.old_pass != Some(false)
+    }
+}
+
+/// The full comparison of two results files.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// `label @ commit` of the old side.
+    pub old_id: String,
+    /// `label @ commit` of the new side.
+    pub new_id: String,
+    /// Per-metric calls, in file order.
+    pub metrics: Vec<MetricDiff>,
+    /// Per-verdict calls.
+    pub verdicts: Vec<VerdictDiff>,
+}
+
+impl DiffReport {
+    /// Compare `new` against `old`.
+    pub fn compare(old: &ResultsFile, new: &ResultsFile) -> DiffReport {
+        let mut report = DiffReport {
+            old_id: format!("{} @ {}", old.label, short(&old.commit)),
+            new_id: format!("{} @ {}", new.label, short(&new.commit)),
+            metrics: Vec::new(),
+            verdicts: Vec::new(),
+        };
+        for nr in &new.records {
+            let or = old.record(&nr.name);
+            for nm in &nr.metrics {
+                let om = or.and_then(|r| r.metrics.iter().find(|m| m.name == nm.name));
+                report.metrics.push(match om {
+                    Some(om) => compare_metric(&nr.name, &om.summary, nm),
+                    None => MetricDiff {
+                        record: nr.name.clone(),
+                        metric: nm.name.clone(),
+                        unit: nm.unit.clone(),
+                        direction: nm.direction,
+                        old: Summary::default(),
+                        new: nm.summary,
+                        delta: 0.0,
+                        outcome: Outcome::Added,
+                        detail: "no old-side metric".into(),
+                    },
+                });
+            }
+            for nv in &nr.verdicts {
+                let ov = or.and_then(|r| r.verdicts.iter().find(|v| v.name == nv.name));
+                report.verdicts.push(VerdictDiff {
+                    record: nr.name.clone(),
+                    name: nv.name.clone(),
+                    old_pass: ov.map(|v| v.pass),
+                    new_pass: Some(nv.pass),
+                });
+            }
+        }
+        // Old-side metrics/verdicts that vanished.
+        for or in &old.records {
+            let nr = new.record(&or.name);
+            for om in &or.metrics {
+                let gone = nr
+                    .map(|r| r.metrics.iter().all(|m| m.name != om.name))
+                    .unwrap_or(true);
+                if gone {
+                    report.metrics.push(MetricDiff {
+                        record: or.name.clone(),
+                        metric: om.name.clone(),
+                        unit: om.unit.clone(),
+                        direction: om.direction,
+                        old: om.summary,
+                        new: Summary::default(),
+                        delta: 0.0,
+                        outcome: Outcome::Removed,
+                        detail: "no new-side metric".into(),
+                    });
+                }
+            }
+            for ov in &or.verdicts {
+                let gone = nr
+                    .map(|r| r.verdicts.iter().all(|v| v.name != ov.name))
+                    .unwrap_or(true);
+                if gone {
+                    report.verdicts.push(VerdictDiff {
+                        record: or.name.clone(),
+                        name: ov.name.clone(),
+                        old_pass: Some(ov.pass),
+                        new_pass: None,
+                    });
+                }
+            }
+        }
+        report
+    }
+
+    /// Count of regressions: worse disjoint metrics plus PASS→FAIL
+    /// verdict flips. Nonzero means `diff` exits nonzero.
+    pub fn regressions(&self) -> usize {
+        let metric = self
+            .metrics
+            .iter()
+            .filter(|m| m.outcome == Outcome::Regressed)
+            .count();
+        let verdict = self.verdicts.iter().filter(|v| v.regressed()).count();
+        metric + verdict
+    }
+
+    /// Count of improvements (better disjoint metrics + FAIL→PASS).
+    pub fn improvements(&self) -> usize {
+        let metric = self
+            .metrics
+            .iter()
+            .filter(|m| m.outcome == Outcome::Improved)
+            .count();
+        let verdict = self
+            .verdicts
+            .iter()
+            .filter(|v| v.new_pass == Some(true) && v.old_pass == Some(false))
+            .count();
+        metric + verdict
+    }
+}
+
+fn short(commit: &str) -> &str {
+    if commit.len() >= 8 && commit.bytes().all(|b| b.is_ascii_hexdigit()) {
+        &commit[..8]
+    } else {
+        commit
+    }
+}
+
+/// The uncertainty margin around one side's mean.
+fn margin(s: &Summary) -> f64 {
+    if s.n >= 2 && s.ci95 > 0.0 {
+        s.ci95
+    } else {
+        NOISE_FLOOR * s.mean.abs()
+    }
+}
+
+fn compare_metric(record: &str, old: &Summary, new_m: &super::results::MetricRecord) -> MetricDiff {
+    let new = new_m.summary;
+    let mut d = MetricDiff {
+        record: record.to_string(),
+        metric: new_m.name.clone(),
+        unit: new_m.unit.clone(),
+        direction: new_m.direction,
+        old: *old,
+        new,
+        delta: 0.0,
+        outcome: Outcome::NoData,
+        detail: String::new(),
+    };
+    if old.n == 0 || new.n == 0 {
+        d.detail = "one side has no samples".into();
+        return d;
+    }
+    if old.mean != 0.0 {
+        d.delta = (new.mean - old.mean) / old.mean.abs();
+    }
+    let (om, nm) = (margin(old), margin(&new));
+    let overlap = (old.mean - om).max(new.mean - nm) <= (old.mean + om).min(new.mean + nm);
+    if overlap {
+        d.outcome = Outcome::Unchanged;
+        d.detail = format!(
+            "CI overlap: {:.4}±{:.4} vs {:.4}±{:.4}",
+            old.mean, om, new.mean, nm
+        );
+        return d;
+    }
+    let better = match d.direction {
+        Direction::Higher => new.mean > old.mean,
+        Direction::Lower => new.mean < old.mean,
+        Direction::Info => {
+            d.outcome = Outcome::Changed;
+            d.detail = format!("disjoint CIs on an info metric ({:+.1}%)", d.delta * 100.0);
+            return d;
+        }
+    };
+    d.outcome = if better {
+        Outcome::Improved
+    } else {
+        Outcome::Regressed
+    };
+    d.detail = format!(
+        "disjoint CIs: {:.4}±{:.4} -> {:.4}±{:.4} ({:+.1}%, {} is better)",
+        old.mean,
+        om,
+        new.mean,
+        nm,
+        d.delta * 100.0,
+        d.direction.as_str()
+    );
+    d
+}
+
+impl fmt::Display for DiffReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "diff: {}  ->  {}", self.old_id, self.new_id)?;
+        let mut current = "";
+        for m in &self.metrics {
+            if m.record != current {
+                current = &m.record;
+                writeln!(f, "\n## {current}")?;
+            }
+            writeln!(
+                f,
+                "  {} {:40} {:>12.4} -> {:>12.4} {:8} {}",
+                m.outcome.tag(),
+                m.metric,
+                m.old.mean,
+                m.new.mean,
+                m.unit,
+                m.detail
+            )?;
+        }
+        if !self.verdicts.is_empty() {
+            writeln!(f, "\n## verdicts")?;
+            for v in &self.verdicts {
+                let show = |p: Option<bool>| match p {
+                    Some(true) => "PASS",
+                    Some(false) => "FAIL",
+                    None => "absent",
+                };
+                let tag = if v.regressed() { "[-]" } else { "[=]" };
+                writeln!(
+                    f,
+                    "  {} {:40} {} -> {}",
+                    tag,
+                    format!("{}/{}", v.record, v.name),
+                    show(v.old_pass),
+                    show(v.new_pass)
+                )?;
+            }
+        }
+        writeln!(
+            f,
+            "\n{} regression(s), {} improvement(s), {} metric(s) compared",
+            self.regressions(),
+            self.improvements(),
+            self.metrics.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::results::{Direction, MetricRecord, Record, ResultsFile, SCHEMA_VERSION};
+
+    fn file_with(metrics: Vec<MetricRecord>, verdicts: Vec<(&str, bool)>) -> ResultsFile {
+        let mut r = Record::new("exp", "experiment");
+        r.metrics = metrics;
+        for (name, pass) in verdicts {
+            r.verdict(name, pass, "fixture");
+        }
+        ResultsFile {
+            schema_version: SCHEMA_VERSION,
+            commit: "0123456789abcdef".into(),
+            label: "t".into(),
+            records: vec![r],
+        }
+    }
+
+    #[test]
+    fn overlapping_cis_are_unchanged() {
+        let old = file_with(
+            vec![MetricRecord::from_samples(
+                "lat",
+                "us",
+                Direction::Lower,
+                vec![10.0, 11.0, 10.5, 10.2],
+            )],
+            vec![],
+        );
+        let new = file_with(
+            vec![MetricRecord::from_samples(
+                "lat",
+                "us",
+                Direction::Lower,
+                vec![10.3, 10.9, 10.6, 10.4],
+            )],
+            vec![],
+        );
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::Unchanged);
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn disjoint_worse_is_regression_by_direction() {
+        let old = file_with(
+            vec![MetricRecord::from_samples(
+                "lat",
+                "us",
+                Direction::Lower,
+                vec![10.0, 10.1, 9.9],
+            )],
+            vec![],
+        );
+        let new = file_with(
+            vec![MetricRecord::from_samples(
+                "lat",
+                "us",
+                Direction::Lower,
+                vec![20.0, 20.2, 19.8],
+            )],
+            vec![],
+        );
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::Regressed);
+        assert_eq!(d.regressions(), 1);
+        // Same numbers, higher-is-better: an improvement.
+        let old_h = file_with(
+            vec![MetricRecord::from_samples(
+                "tput",
+                "Mop/s",
+                Direction::Higher,
+                vec![10.0, 10.1, 9.9],
+            )],
+            vec![],
+        );
+        let new_h = file_with(
+            vec![MetricRecord::from_samples(
+                "tput",
+                "Mop/s",
+                Direction::Higher,
+                vec![20.0, 20.2, 19.8],
+            )],
+            vec![],
+        );
+        let d = DiffReport::compare(&old_h, &new_h);
+        assert_eq!(d.metrics[0].outcome, Outcome::Improved);
+        assert_eq!(d.regressions(), 0);
+        assert_eq!(d.improvements(), 1);
+    }
+
+    #[test]
+    fn single_samples_use_noise_floor() {
+        let old = file_with(
+            vec![MetricRecord::from_value("v", "", Direction::Lower, 100.0)],
+            vec![],
+        );
+        // +3% is inside the ±5% noise floor.
+        let close = file_with(
+            vec![MetricRecord::from_value("v", "", Direction::Lower, 103.0)],
+            vec![],
+        );
+        assert_eq!(
+            DiffReport::compare(&old, &close).metrics[0].outcome,
+            Outcome::Unchanged
+        );
+        // +20% is well outside it.
+        let far = file_with(
+            vec![MetricRecord::from_value("v", "", Direction::Lower, 120.0)],
+            vec![],
+        );
+        let d = DiffReport::compare(&old, &far);
+        assert_eq!(d.metrics[0].outcome, Outcome::Regressed);
+        assert!((d.metrics[0].delta - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_info_metrics_never_fail() {
+        let old = file_with(
+            vec![
+                MetricRecord::from_samples("authored", "us", Direction::Lower, vec![]),
+                MetricRecord::from_value("count", "", Direction::Info, 5.0),
+            ],
+            vec![],
+        );
+        let new = file_with(
+            vec![
+                MetricRecord::from_samples("authored", "us", Direction::Lower, vec![9.9]),
+                MetricRecord::from_value("count", "", Direction::Info, 50.0),
+            ],
+            vec![],
+        );
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::NoData);
+        assert_eq!(d.metrics[1].outcome, Outcome::Changed);
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn verdict_flip_and_added_removed() {
+        let old = file_with(
+            vec![MetricRecord::from_value("gone", "", Direction::Lower, 1.0)],
+            vec![("inv", true), ("dropped", true)],
+        );
+        let new = file_with(
+            vec![MetricRecord::from_value("fresh", "", Direction::Lower, 1.0)],
+            vec![("inv", false), ("born", true)],
+        );
+        let d = DiffReport::compare(&old, &new);
+        let by_name = |n: &str| d.metrics.iter().find(|m| m.metric == n).unwrap();
+        assert_eq!(by_name("fresh").outcome, Outcome::Added);
+        assert_eq!(by_name("gone").outcome, Outcome::Removed);
+        // inv flipped PASS -> FAIL: one regression.
+        assert_eq!(d.regressions(), 1);
+        let text = d.to_string();
+        assert!(text.contains("inv"));
+        assert!(text.contains("regression(s)"));
+    }
+}

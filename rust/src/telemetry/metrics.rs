@@ -1,0 +1,268 @@
+//! The unified metric surface: every subsystem's stats struct
+//! snapshots into one flat `name → value` map.
+//!
+//! Each stats struct (`TlbStats`, `AllocStats`, `EpochStats`,
+//! `FaultStats`, `ContentionStats`, `FragSnapshot`, tenant books)
+//! implements [`MetricSource`]; a [`Metrics`] registry collects any
+//! number of them under dotted prefixes (`tlb.hits`,
+//! `fault.mean_us`, `tenant.3.p99_us`). Experiments and benches hand
+//! the flat map to the results writer instead of hand-formatting
+//! note strings per subsystem.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::json::Json;
+use super::stat::Summary;
+use crate::pmem::{AllocStats, ContentionStats, EpochStats};
+use crate::trees::TlbStats;
+
+/// A subsystem whose counters can be snapshotted into flat
+/// `name → value` pairs.
+pub trait MetricSource {
+    /// Default dotted prefix for this source's metrics
+    /// (e.g. `"tlb"` yields `tlb.hits`).
+    fn metric_prefix(&self) -> &'static str;
+
+    /// Emit every metric as an un-prefixed `name, value` pair.
+    fn emit(&self, out: &mut dyn FnMut(&str, f64));
+}
+
+/// A flat, sorted `name → value` snapshot across subsystems.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    values: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    /// An empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Snapshot `source` under its default prefix.
+    pub fn record(&mut self, source: &dyn MetricSource) {
+        let prefix = source.metric_prefix();
+        self.record_as(prefix, source);
+    }
+
+    /// Snapshot `source` under an explicit prefix (use for multiple
+    /// instances of one source, e.g. `tenant.0`, `tenant.1`).
+    pub fn record_as(&mut self, prefix: &str, source: &dyn MetricSource) {
+        source.emit(&mut |name, value| {
+            self.values.insert(format!("{prefix}.{name}"), value);
+        });
+    }
+
+    /// Set one metric directly.
+    pub fn set(&mut self, name: &str, value: f64) {
+        self.values.insert(name.to_string(), value);
+    }
+
+    /// Look one metric up.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.get(name).copied()
+    }
+
+    /// Number of metrics recorded.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Iterate metrics in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Render as `name = value` note lines, one subsystem's worth of
+    /// hand-formatting replaced everywhere.
+    pub fn note_lines(&self) -> Vec<String> {
+        self.iter()
+            .map(|(name, value)| {
+                if value == value.trunc() && value.abs() < 1e15 {
+                    format!("{name} = {}", value as i64)
+                } else {
+                    format!("{name} = {value:.3}")
+                }
+            })
+            .collect()
+    }
+
+    /// The map as a JSON object (sorted keys).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (name, value) in self.iter() {
+            obj.set(name, Json::Num(value));
+        }
+        obj
+    }
+
+    /// Rebuild from a JSON object produced by [`Metrics::to_json`].
+    pub fn from_json(json: &Json) -> Result<Metrics, String> {
+        let Json::Obj(fields) = json else {
+            return Err("metrics: expected an object".into());
+        };
+        let mut m = Metrics::new();
+        for (name, value) in fields {
+            let v = value
+                .as_f64()
+                .ok_or_else(|| format!("metrics: {name} is not a number"))?;
+            m.set(name, v);
+        }
+        Ok(m)
+    }
+}
+
+impl fmt::Display for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for line in self.note_lines() {
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+}
+
+impl MetricSource for TlbStats {
+    fn metric_prefix(&self) -> &'static str {
+        "tlb"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("hits", self.hits as f64);
+        out("misses", self.misses as f64);
+        out("evictions", self.evictions as f64);
+        out("invalidations", self.invalidations as f64);
+        out("hit_rate", self.hit_rate());
+    }
+}
+
+impl MetricSource for AllocStats {
+    fn metric_prefix(&self) -> &'static str {
+        "alloc"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("allocated", self.allocated as f64);
+        out("peak", self.peak as f64);
+        out("total_allocs", self.total_allocs as f64);
+        out("total_frees", self.total_frees as f64);
+        out("failed_allocs", self.failed_allocs as f64);
+        out("limbo", self.limbo as f64);
+        out("retired", self.retired as f64);
+        out("reclaimed", self.reclaimed as f64);
+        out("mean_reclaim_lag", self.mean_reclaim_lag());
+    }
+}
+
+impl MetricSource for ContentionStats {
+    fn metric_prefix(&self) -> &'static str {
+        "contention"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("steals", self.steals as f64);
+        out("refills", self.refills as f64);
+        out("cas_retries", self.cas_retries as f64);
+    }
+}
+
+impl MetricSource for EpochStats {
+    fn metric_prefix(&self) -> &'static str {
+        "epoch"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("epoch", self.epoch as f64);
+        out("readers", self.readers as f64);
+        out("retired", self.retired as f64);
+        out("reclaimed", self.reclaimed as f64);
+        out("limbo", self.limbo as f64);
+        out("mean_reclaim_lag", self.mean_reclaim_lag());
+        out("pins", self.pins as f64);
+        out("saved_pins", self.saved_pins as f64);
+    }
+}
+
+impl MetricSource for Summary {
+    fn metric_prefix(&self) -> &'static str {
+        "summary"
+    }
+
+    fn emit(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("n", self.n as f64);
+        out("mean", self.mean);
+        out("stddev", self.stddev);
+        out("ci95", self.ci95);
+        out("min", self.min);
+        out("max", self.max);
+        out("p50", self.p50);
+        out("p99", self.p99);
+        out("p999", self.p999);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_prefixes_and_sorts() {
+        let tlb = TlbStats {
+            hits: 90,
+            misses: 10,
+            evictions: 3,
+            invalidations: 1,
+        };
+        let epoch = EpochStats {
+            pins: 7,
+            saved_pins: 21,
+            ..EpochStats::default()
+        };
+        let mut m = Metrics::new();
+        m.record(&tlb);
+        m.record(&epoch);
+        m.set("custom.value", 1.5);
+        assert_eq!(m.get("tlb.hits"), Some(90.0));
+        assert_eq!(m.get("tlb.hit_rate"), Some(0.9));
+        assert_eq!(m.get("epoch.saved_pins"), Some(21.0));
+        assert_eq!(m.get("custom.value"), Some(1.5));
+        let names: Vec<&str> = m.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn explicit_prefix_for_instances() {
+        let tlb = TlbStats::default();
+        let mut m = Metrics::new();
+        m.record_as("tenant.0.tlb", &tlb);
+        m.record_as("tenant.1.tlb", &tlb);
+        assert_eq!(m.get("tenant.0.tlb.hits"), Some(0.0));
+        assert_eq!(m.get("tenant.1.tlb.misses"), Some(0.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = Metrics::new();
+        m.set("a.b", 1.25);
+        m.set("c", 3.0);
+        let back = Metrics::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert!(Metrics::from_json(&Json::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn note_lines_format() {
+        let mut m = Metrics::new();
+        m.set("fault.mean_us", 12.5);
+        m.set("fault.count", 3.0);
+        let lines = m.note_lines();
+        assert_eq!(lines, vec!["fault.count = 3", "fault.mean_us = 12.500"]);
+    }
+}

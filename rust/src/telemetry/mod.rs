@@ -1,0 +1,38 @@
+//! Unified telemetry: one stat engine, one metric surface, one
+//! results pipeline.
+//!
+//! The paper's argument is a measurement claim — "the overhead of
+//! software-based memory management is surprisingly small" — and for
+//! eight PRs this repo could print that claim but not record it.
+//! This layer closes the gap:
+//!
+//! * [`stat`] — streaming mean/stddev ([`stat::Running`]), t-based
+//!   95% CIs, and p50/p99/p999 from a fixed-bucket log-scale
+//!   histogram ([`stat::LogHistogram`]) cheap enough for hot paths.
+//! * [`metrics`] — every subsystem stats struct behind one
+//!   [`metrics::MetricSource`] trait, snapshotted into a flat
+//!   `name → value` map ([`metrics::Metrics`]).
+//! * [`results`] — the machine-readable schema every experiment and
+//!   ablation bench emits (`BENCH_*.json`): config, commit, raw
+//!   samples, derived stats, PASS/FAIL verdicts, traces, action logs.
+//! * [`sink`] — the scoped global recorder experiments emit through
+//!   (their `Copy` config can't carry one).
+//! * [`report`] — render a results file as a table or gnuplot `.dat`.
+//! * [`diff`] — compare two results files sample-wise with
+//!   CI-overlap reasoning into per-metric regression verdicts.
+
+pub mod diff;
+pub mod json;
+pub mod metrics;
+pub mod report;
+pub mod results;
+pub mod sink;
+pub mod stat;
+
+pub use diff::{DiffReport, MetricDiff, Outcome, VerdictDiff};
+pub use json::Json;
+pub use metrics::{MetricSource, Metrics};
+pub use results::{
+    Direction, MetricRecord, Record, ResultsFile, ResultsWriter, Trace, Verdict, SCHEMA_VERSION,
+};
+pub use stat::{summarize, LogHistogram, Running, Summary};

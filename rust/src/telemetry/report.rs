@@ -1,0 +1,208 @@
+//! Render a results file for humans (aligned table) or for gnuplot
+//! (whitespace-separated `.dat`).
+
+use std::fmt::Write as _;
+
+use super::results::{Record, ResultsFile};
+
+/// Render the whole file as aligned text tables, one per record.
+pub fn render_results(file: &ResultsFile) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# {} @ {} (schema v{})",
+        file.label, file.commit, file.schema_version
+    );
+    for record in &file.records {
+        render_record(&mut out, record);
+    }
+    out
+}
+
+fn render_record(out: &mut String, r: &Record) {
+    let _ = writeln!(out, "\n## {} ({})", r.name, r.kind);
+    if !r.config.is_empty() {
+        let cfg: Vec<String> = r.config.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let _ = writeln!(out, "config: {}", cfg.join(" "));
+    }
+    if !r.metrics.is_empty() {
+        let _ = writeln!(
+            out,
+            "{:42} {:>6} {:>12} {:>10} {:>12} {:>12} {:>12}  {}",
+            "metric", "n", "mean", "±ci95", "p50", "p99", "p999", "unit"
+        );
+        for m in &r.metrics {
+            let s = &m.summary;
+            if m.is_empty() {
+                let _ = writeln!(out, "{:42} {:>6} (no data)", m.name, 0);
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "{:42} {:>6} {:>12.4} {:>10.4} {:>12.4} {:>12.4} {:>12.4}  {}",
+                m.name, s.n, s.mean, s.ci95, s.p50, s.p99, s.p999, m.unit
+            );
+        }
+    }
+    if !r.counters.is_empty() {
+        let _ = writeln!(out, "counters:");
+        for line in r.counters.note_lines() {
+            let _ = writeln!(out, "  {line}");
+        }
+    }
+    for v in &r.verdicts {
+        let tag = if v.pass { "PASS" } else { "FAIL" };
+        let _ = writeln!(out, "[{tag}] {}: {}", v.name, v.detail);
+    }
+    for t in &r.traces {
+        let preview: Vec<String> = t
+            .values
+            .iter()
+            .take(12)
+            .map(|v| format!("{v:.2}"))
+            .collect();
+        let more = if t.values.len() > 12 { " ..." } else { "" };
+        let _ = writeln!(
+            out,
+            "trace {} ({} points): {}{}",
+            t.name,
+            t.values.len(),
+            preview.join(" "),
+            more
+        );
+    }
+    if !r.actions.is_empty() {
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for (_, action) in &r.actions {
+            match counts.iter_mut().find(|(a, _)| a == action) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((action.clone(), 1)),
+            }
+        }
+        let summary: Vec<String> = counts
+            .iter()
+            .map(|(a, n)| format!("{a}x{n}"))
+            .collect();
+        let _ = writeln!(
+            out,
+            "actions ({} rows): {}",
+            r.actions.len(),
+            summary.join(" ")
+        );
+    }
+    for note in &r.notes {
+        let _ = writeln!(out, "note: {note}");
+    }
+}
+
+/// Render as a gnuplot-friendly `.dat`: one row per metric, columns
+/// `record metric n mean ci95 min max p50 p99 p999`, `#`-prefixed
+/// header, and traces appended as their own `# trace` blocks.
+pub fn render_dat(file: &ResultsFile) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# {} @ {}", file.label, file.commit);
+    let _ = writeln!(out, "# record metric n mean ci95 min max p50 p99 p999");
+    for r in &file.records {
+        for m in &r.metrics {
+            let s = &m.summary;
+            let _ = writeln!(
+                out,
+                "{} {} {} {} {} {} {} {} {} {}",
+                dat_word(&r.name),
+                dat_word(&m.name),
+                s.n,
+                s.mean,
+                s.ci95,
+                s.min,
+                s.max,
+                s.p50,
+                s.p99,
+                s.p999
+            );
+        }
+    }
+    for r in &file.records {
+        for t in &r.traces {
+            let _ = writeln!(out, "\n\n# trace {} {}", dat_word(&r.name), dat_word(&t.name));
+            for (tick, value) in t.ticks.iter().zip(&t.values) {
+                let _ = writeln!(out, "{tick} {value}");
+            }
+        }
+    }
+    out
+}
+
+/// `.dat` columns are whitespace-separated; squash any whitespace in
+/// a name so the row stays parseable.
+fn dat_word(s: &str) -> String {
+    s.replace(char::is_whitespace, "_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::results::{
+        Direction, MetricRecord, Record, ResultsFile, Trace, SCHEMA_VERSION,
+    };
+
+    fn fixture() -> ResultsFile {
+        let mut r = Record::new("fig4 gups", "bench");
+        r.config("sample", "1000");
+        r.metric(MetricRecord::from_samples(
+            "gups.mean_ms",
+            "ms",
+            Direction::Lower,
+            vec![1.0, 1.2, 1.1],
+        ));
+        r.metric(MetricRecord::from_samples("empty", "us", Direction::Info, vec![]));
+        r.counters.set("tlb.hits", 10.0);
+        r.verdict("fast_enough", true, "1.1 < 2.0");
+        r.traces.push(Trace {
+            name: "mmd.score".into(),
+            ticks: vec![0, 1],
+            values: vec![0.5, 0.25],
+        });
+        r.actions.push((0, "idle".into()));
+        r.actions.push((1, "evict".into()));
+        r.actions.push((2, "evict".into()));
+        ResultsFile {
+            schema_version: SCHEMA_VERSION,
+            commit: "cafebabe".into(),
+            label: "BENCH_t".into(),
+            records: vec![r],
+        }
+    }
+
+    #[test]
+    fn table_mentions_everything() {
+        let text = render_results(&fixture());
+        for needle in [
+            "BENCH_t",
+            "fig4 gups",
+            "gups.mean_ms",
+            "(no data)",
+            "tlb.hits = 10",
+            "[PASS] fast_enough",
+            "trace mmd.score (2 points)",
+            "actions (3 rows): idlex1 evictx2",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn dat_rows_are_machine_parseable() {
+        let text = render_dat(&fixture());
+        let row = text
+            .lines()
+            .find(|l| l.contains("gups.mean_ms"))
+            .expect("metric row");
+        let cols: Vec<&str> = row.split_whitespace().collect();
+        assert_eq!(cols.len(), 10);
+        assert_eq!(cols[0], "fig4_gups");
+        assert_eq!(cols[2], "3");
+        assert!(cols[3].parse::<f64>().is_ok());
+        assert!(text.contains("# trace fig4_gups mmd.score"));
+        assert!(text.contains("1 0.25"));
+    }
+}

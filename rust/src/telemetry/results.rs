@@ -1,0 +1,791 @@
+//! The machine-readable results schema and its writer.
+//!
+//! Every experiment and every ablation bench emits a [`Record`]
+//! (config, metrics with raw samples + derived stats, PASS/FAIL
+//! verdicts, score traces, action logs) into a [`ResultsFile`]
+//! stamped with the schema version and the producing commit. Files
+//! are plain JSON (`BENCH_*.json`), written atomically, and parse
+//! back identically — the `report` and `diff` CLI commands consume
+//! nothing else.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+use super::metrics::Metrics;
+use super::stat::{summarize, LogHistogram, Summary};
+
+/// Results schema version; `diff`/`report` hard-fail on mismatch.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Directory benches drop their per-binary results files into
+/// (overridable via `NVM_BENCH_JSON_DIR`).
+pub const DEFAULT_BENCH_DIR: &str = "target/bench-results";
+
+/// Which way "better" points for a metric, so `diff` can call a
+/// change a regression and not just a difference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (throughput, hit rates).
+    Higher,
+    /// Smaller is better (latency, retries, fragmentation).
+    Lower,
+    /// Informational only; `diff` reports changes but never fails.
+    Info,
+}
+
+impl Direction {
+    /// Wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Info => "info",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn parse(s: &str) -> Result<Direction, String> {
+        match s {
+            "higher" => Ok(Direction::Higher),
+            "lower" => Ok(Direction::Lower),
+            "info" => Ok(Direction::Info),
+            other => Err(format!("unknown direction {other:?}")),
+        }
+    }
+}
+
+/// One measured metric: raw samples plus derived statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricRecord {
+    /// Dotted metric name, unique within its record.
+    pub name: String,
+    /// Unit label (`"us"`, `"Mop/s"`, `"blocks"`, ...).
+    pub unit: String,
+    /// Which way better points.
+    pub direction: Direction,
+    /// Raw samples (may be empty when only derived stats exist,
+    /// e.g. histogram-backed percentiles or authored trajectory
+    /// points that were never run).
+    pub samples: Vec<f64>,
+    /// Derived statistics (`n == 0` marks a metric with no data).
+    pub summary: Summary,
+}
+
+impl MetricRecord {
+    /// Build from raw samples; the summary is derived.
+    pub fn from_samples(name: &str, unit: &str, direction: Direction, samples: Vec<f64>) -> Self {
+        let summary = summarize(&samples);
+        MetricRecord {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            direction,
+            samples,
+            summary,
+        }
+    }
+
+    /// Build from one observed value (tables hold single cells).
+    pub fn from_value(name: &str, unit: &str, direction: Direction, value: f64) -> Self {
+        MetricRecord::from_samples(name, unit, direction, vec![value])
+    }
+
+    /// Build from a hot-path histogram: percentiles without raw
+    /// samples (scaled by `scale`, e.g. `1e-3` for ns → µs).
+    pub fn from_hist(
+        name: &str,
+        unit: &str,
+        direction: Direction,
+        h: &LogHistogram,
+        scale: f64,
+    ) -> Self {
+        let summary = Summary {
+            n: h.count(),
+            mean: h.mean() * scale,
+            stddev: 0.0,
+            ci95: 0.0,
+            min: h.min_value() as f64 * scale,
+            max: h.max_value() as f64 * scale,
+            p50: h.percentile(0.50) as f64 * scale,
+            p99: h.percentile(0.99) as f64 * scale,
+            p999: h.percentile(0.999) as f64 * scale,
+        };
+        MetricRecord {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            direction,
+            samples: Vec::new(),
+            summary,
+        }
+    }
+
+    /// True when the metric carries no data at all.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty() && self.summary.n == 0
+    }
+}
+
+/// One named PASS/FAIL verdict with its threshold reasoning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    /// Verdict name (stable across commits so `diff` can match it).
+    pub name: String,
+    /// Did it pass?
+    pub pass: bool,
+    /// Human-readable threshold reasoning
+    /// (`"tlb hit rate 0.97 >= 0.90"`).
+    pub detail: String,
+}
+
+/// A named time-series (mmd score trace, occupancy trajectory).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// Series name (`"mmd.score"`).
+    pub name: String,
+    /// Tick numbers.
+    pub ticks: Vec<u64>,
+    /// One value per tick.
+    pub values: Vec<f64>,
+}
+
+/// One record: a single experiment or bench run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Record {
+    /// Experiment/bench name (`"multi-tenant"`, `"ablation_translation"`).
+    pub name: String,
+    /// `"experiment"` or `"bench"`.
+    pub kind: String,
+    /// Flat config the run was produced under.
+    pub config: Vec<(String, String)>,
+    /// Measured metrics.
+    pub metrics: Vec<MetricRecord>,
+    /// Flat subsystem counter snapshot (the unified registry).
+    pub counters: Metrics,
+    /// PASS/FAIL verdicts.
+    pub verdicts: Vec<Verdict>,
+    /// Structured time-series.
+    pub traces: Vec<Trace>,
+    /// Daemon per-tick action log as `(tick, action)` rows.
+    pub actions: Vec<(u64, String)>,
+    /// Free-text notes (kept for context, never diffed).
+    pub notes: Vec<String>,
+}
+
+impl Record {
+    /// A new empty record.
+    pub fn new(name: &str, kind: &str) -> Record {
+        Record {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            ..Record::default()
+        }
+    }
+
+    /// Append a config pair.
+    pub fn config(&mut self, key: &str, value: impl ToString) -> &mut Record {
+        self.config.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Append a metric.
+    pub fn metric(&mut self, m: MetricRecord) -> &mut Record {
+        self.metrics.push(m);
+        self
+    }
+
+    /// Append a verdict.
+    pub fn verdict(&mut self, name: &str, pass: bool, detail: &str) -> &mut Record {
+        self.verdicts.push(Verdict {
+            name: name.to_string(),
+            pass,
+            detail: detail.to_string(),
+        });
+        self
+    }
+
+    /// True when every verdict passed (vacuously true with none).
+    pub fn all_pass(&self) -> bool {
+        self.verdicts.iter().all(|v| v.pass)
+    }
+}
+
+/// A results file: schema + commit + a set of records.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResultsFile {
+    /// Schema version ([`SCHEMA_VERSION`] when produced here).
+    pub schema_version: u64,
+    /// Commit hash of the producing tree (`"unknown"` outside git).
+    pub commit: String,
+    /// Trajectory label (`"BENCH_9"`, `"BENCH_ci"`).
+    pub label: String,
+    /// The records.
+    pub records: Vec<Record>,
+}
+
+impl ResultsFile {
+    /// Look a record up by name.
+    pub fn record(&self, name: &str) -> Option<&Record> {
+        self.records.iter().find(|r| r.name == name)
+    }
+
+    /// Serialize to the on-disk JSON shape.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("schema_version", Json::Num(self.schema_version as f64));
+        root.set("commit", Json::Str(self.commit.clone()));
+        root.set("label", Json::Str(self.label.clone()));
+        let mut records = Json::arr();
+        for r in &self.records {
+            records.push(record_to_json(r));
+        }
+        root.set("records", records);
+        root
+    }
+
+    /// Parse + validate the on-disk JSON shape. Any shape violation
+    /// is an error — schema problems must hard-fail, not degrade.
+    pub fn from_json(json: &Json) -> Result<ResultsFile, String> {
+        let version = json
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or("missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} unsupported (expected {SCHEMA_VERSION})"
+            ));
+        }
+        let commit = json
+            .get("commit")
+            .and_then(Json::as_str)
+            .ok_or("missing commit")?
+            .to_string();
+        let label = json
+            .get("label")
+            .and_then(Json::as_str)
+            .ok_or("missing label")?
+            .to_string();
+        let mut records = Vec::new();
+        for (i, r) in json
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or("missing records array")?
+            .iter()
+            .enumerate()
+        {
+            records.push(record_from_json(r).map_err(|e| format!("records[{i}]: {e}"))?);
+        }
+        Ok(ResultsFile {
+            schema_version: version,
+            commit,
+            label,
+            records,
+        })
+    }
+
+    /// Write atomically (tmp + rename) as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        fs::write(&tmp, self.to_json().render())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load + parse a results file.
+    pub fn load(path: &Path) -> Result<ResultsFile, String> {
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        ResultsFile::from_json(&json).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Merge several results files into one labeled file (used by CI
+    /// to fold per-bench drops into a single `BENCH_ci.json`).
+    /// Record names must not collide.
+    pub fn merge(label: &str, parts: &[ResultsFile]) -> Result<ResultsFile, String> {
+        let mut out = ResultsFile {
+            schema_version: SCHEMA_VERSION,
+            commit: parts
+                .first()
+                .map(|p| p.commit.clone())
+                .unwrap_or_else(|| commit_hash()),
+            label: label.to_string(),
+            records: Vec::new(),
+        };
+        for part in parts {
+            for r in &part.records {
+                if out.record(&r.name).is_some() {
+                    return Err(format!("duplicate record {:?} while merging", r.name));
+                }
+                out.records.push(r.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Incrementally build + save a results file — the one write path
+/// every experiment and bench shares.
+#[derive(Clone, Debug)]
+pub struct ResultsWriter {
+    file: ResultsFile,
+}
+
+impl ResultsWriter {
+    /// Start a results file with the current commit stamped in.
+    pub fn new(label: &str) -> ResultsWriter {
+        ResultsWriter {
+            file: ResultsFile {
+                schema_version: SCHEMA_VERSION,
+                commit: commit_hash(),
+                label: label.to_string(),
+                records: Vec::new(),
+            },
+        }
+    }
+
+    /// Append a finished record.
+    pub fn add(&mut self, record: Record) -> &mut ResultsWriter {
+        self.file.records.push(record);
+        self
+    }
+
+    /// The file built so far.
+    pub fn file(&self) -> &ResultsFile {
+        &self.file
+    }
+
+    /// Save to `path` and return the finished file.
+    pub fn save(self, path: &Path) -> Result<ResultsFile, String> {
+        self.file.save(path)?;
+        Ok(self.file)
+    }
+}
+
+/// Where bench binaries drop their results files.
+pub fn bench_results_dir() -> PathBuf {
+    std::env::var("NVM_BENCH_JSON_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(DEFAULT_BENCH_DIR))
+}
+
+/// Write one bench's record as `<dir>/<name>.json` — called by every
+/// `ablation_*`/`fig*` binary after printing its human tables.
+/// Failures are reported to stderr, never panicked: a bench must not
+/// fail because the results dir is unwritable.
+pub fn write_bench_record(record: Record) {
+    let name = record.name.clone();
+    let path = bench_results_dir().join(format!("{name}.json"));
+    let mut w = ResultsWriter::new(&name);
+    w.add(record);
+    match w.save(&path) {
+        Ok(_) => eprintln!("results: wrote {}", path.display()),
+        Err(e) => eprintln!("results: {e}"),
+    }
+}
+
+/// The producing commit: `NVM_COMMIT` env override, else `.git/HEAD`
+/// (one level of ref indirection), else `"unknown"`.
+pub fn commit_hash() -> String {
+    if let Ok(c) = std::env::var("NVM_COMMIT") {
+        if !c.is_empty() {
+            return c;
+        }
+    }
+    let head = match fs::read_to_string(".git/HEAD") {
+        Ok(h) => h.trim().to_string(),
+        Err(_) => return "unknown".to_string(),
+    };
+    if let Some(refname) = head.strip_prefix("ref: ") {
+        if let Ok(hash) = fs::read_to_string(Path::new(".git").join(refname.trim())) {
+            return hash.trim().to_string();
+        }
+        // Packed refs fall back to the ref name itself.
+        return refname.trim().to_string();
+    }
+    head
+}
+
+/// Lower-case a label into a dotted-name-safe slug
+/// (`"Mop/s (total)"` → `"mop_s_total"`).
+pub fn slug(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut last_sep = true;
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+            last_sep = false;
+        } else if !last_sep {
+            out.push('_');
+            last_sep = true;
+        }
+    }
+    while out.ends_with('_') {
+        out.pop();
+    }
+    out
+}
+
+fn summary_to_json(s: &Summary) -> Json {
+    let mut o = Json::obj();
+    o.set("n", Json::Num(s.n as f64));
+    o.set("mean", Json::Num(s.mean));
+    o.set("stddev", Json::Num(s.stddev));
+    o.set("ci95", Json::Num(s.ci95));
+    o.set("min", Json::Num(s.min));
+    o.set("max", Json::Num(s.max));
+    o.set("p50", Json::Num(s.p50));
+    o.set("p99", Json::Num(s.p99));
+    o.set("p999", Json::Num(s.p999));
+    o
+}
+
+fn summary_from_json(json: &Json) -> Result<Summary, String> {
+    let field = |name: &str| {
+        json.get(name)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("summary missing {name}"))
+    };
+    Ok(Summary {
+        n: json
+            .get("n")
+            .and_then(Json::as_u64)
+            .ok_or("summary missing n")?,
+        mean: field("mean")?,
+        stddev: field("stddev")?,
+        ci95: field("ci95")?,
+        min: field("min")?,
+        max: field("max")?,
+        p50: field("p50")?,
+        p99: field("p99")?,
+        p999: field("p999")?,
+    })
+}
+
+fn record_to_json(r: &Record) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(r.name.clone()));
+    o.set("kind", Json::Str(r.kind.clone()));
+    let mut cfg = Json::obj();
+    for (k, v) in &r.config {
+        cfg.set(k, Json::Str(v.clone()));
+    }
+    o.set("config", cfg);
+    let mut metrics = Json::arr();
+    for m in &r.metrics {
+        let mut mo = Json::obj();
+        mo.set("name", Json::Str(m.name.clone()));
+        mo.set("unit", Json::Str(m.unit.clone()));
+        mo.set("direction", Json::Str(m.direction.as_str().to_string()));
+        mo.set(
+            "samples",
+            Json::Arr(m.samples.iter().map(|v| Json::Num(*v)).collect()),
+        );
+        mo.set("summary", summary_to_json(&m.summary));
+        metrics.push(mo);
+    }
+    o.set("metrics", metrics);
+    o.set("counters", r.counters.to_json());
+    let mut verdicts = Json::arr();
+    for v in &r.verdicts {
+        let mut vo = Json::obj();
+        vo.set("name", Json::Str(v.name.clone()));
+        vo.set("pass", Json::Bool(v.pass));
+        vo.set("detail", Json::Str(v.detail.clone()));
+        verdicts.push(vo);
+    }
+    o.set("verdicts", verdicts);
+    let mut traces = Json::arr();
+    for t in &r.traces {
+        let mut to = Json::obj();
+        to.set("name", Json::Str(t.name.clone()));
+        to.set(
+            "ticks",
+            Json::Arr(t.ticks.iter().map(|v| Json::Num(*v as f64)).collect()),
+        );
+        to.set(
+            "values",
+            Json::Arr(t.values.iter().map(|v| Json::Num(*v)).collect()),
+        );
+        traces.push(to);
+    }
+    o.set("traces", traces);
+    let mut actions = Json::arr();
+    for (tick, action) in &r.actions {
+        let mut ao = Json::obj();
+        ao.set("tick", Json::Num(*tick as f64));
+        ao.set("action", Json::Str(action.clone()));
+        actions.push(ao);
+    }
+    o.set("actions", actions);
+    o.set(
+        "notes",
+        Json::Arr(r.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+    );
+    o
+}
+
+fn record_from_json(json: &Json) -> Result<Record, String> {
+    let str_field = |name: &str| {
+        json.get(name)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing {name}"))
+    };
+    let mut r = Record::new(&str_field("name")?, &str_field("kind")?);
+    match json.get("config") {
+        Some(Json::Obj(fields)) => {
+            for (k, v) in fields {
+                let v = v.as_str().ok_or_else(|| format!("config.{k} not a string"))?;
+                r.config.push((k.clone(), v.to_string()));
+            }
+        }
+        _ => return Err("missing config object".into()),
+    }
+    for (i, m) in json
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .ok_or("missing metrics array")?
+        .iter()
+        .enumerate()
+    {
+        let ctx = |e: String| format!("metrics[{i}]: {e}");
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("missing name".into()))?;
+        let unit = m
+            .get("unit")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("missing unit".into()))?;
+        let direction = Direction::parse(
+            m.get("direction")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ctx("missing direction".into()))?,
+        )
+        .map_err(ctx)?;
+        let mut samples = Vec::new();
+        for s in m
+            .get("samples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ctx("missing samples".into()))?
+        {
+            samples.push(s.as_f64().ok_or_else(|| ctx("non-numeric sample".into()))?);
+        }
+        let summary = summary_from_json(
+            m.get("summary").ok_or_else(|| ctx("missing summary".into()))?,
+        )
+        .map_err(ctx)?;
+        r.metrics.push(MetricRecord {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            direction,
+            samples,
+            summary,
+        });
+    }
+    r.counters = Metrics::from_json(json.get("counters").ok_or("missing counters")?)?;
+    for (i, v) in json
+        .get("verdicts")
+        .and_then(Json::as_arr)
+        .ok_or("missing verdicts array")?
+        .iter()
+        .enumerate()
+    {
+        r.verdicts.push(Verdict {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("verdicts[{i}]: missing name"))?
+                .to_string(),
+            pass: v
+                .get("pass")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("verdicts[{i}]: missing pass"))?,
+            detail: v
+                .get("detail")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("verdicts[{i}]: missing detail"))?
+                .to_string(),
+        });
+    }
+    for (i, t) in json
+        .get("traces")
+        .and_then(Json::as_arr)
+        .ok_or("missing traces array")?
+        .iter()
+        .enumerate()
+    {
+        let ctx = format!("traces[{i}]");
+        let mut trace = Trace {
+            name: t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{ctx}: missing name"))?
+                .to_string(),
+            ..Trace::default()
+        };
+        for v in t
+            .get("ticks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{ctx}: missing ticks"))?
+        {
+            trace
+                .ticks
+                .push(v.as_u64().ok_or_else(|| format!("{ctx}: bad tick"))?);
+        }
+        for v in t
+            .get("values")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{ctx}: missing values"))?
+        {
+            trace
+                .values
+                .push(v.as_f64().ok_or_else(|| format!("{ctx}: bad value"))?);
+        }
+        if trace.ticks.len() != trace.values.len() {
+            return Err(format!("{ctx}: ticks/values length mismatch"));
+        }
+        r.traces.push(trace);
+    }
+    for (i, a) in json
+        .get("actions")
+        .and_then(Json::as_arr)
+        .ok_or("missing actions array")?
+        .iter()
+        .enumerate()
+    {
+        let tick = a
+            .get("tick")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("actions[{i}]: missing tick"))?;
+        let action = a
+            .get("action")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("actions[{i}]: missing action"))?;
+        r.actions.push((tick, action.to_string()));
+    }
+    for (i, n) in json
+        .get("notes")
+        .and_then(Json::as_arr)
+        .ok_or("missing notes array")?
+        .iter()
+        .enumerate()
+    {
+        r.notes.push(
+            n.as_str()
+                .ok_or_else(|| format!("notes[{i}]: not a string"))?
+                .to_string(),
+        );
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> ResultsFile {
+        let mut r = Record::new("multi-tenant", "experiment");
+        r.config("sample", 200_000u64).config("threads", 4u64);
+        r.metric(MetricRecord::from_samples(
+            "zipfian.mop_s",
+            "Mop/s",
+            Direction::Higher,
+            vec![10.5, 11.0, 10.75],
+        ));
+        r.metric(MetricRecord::from_value(
+            "scan.evictions",
+            "count",
+            Direction::Info,
+            42.0,
+        ));
+        r.counters.set("tlb.hit_rate", 0.97);
+        r.counters.set("epoch.saved_pins", 1234.0);
+        r.verdict("isolation_holds", true, "zipfian mrd < 1.10x baseline");
+        r.verdict("flaky_contained", false, "errors leaked to benign tenant");
+        r.traces.push(Trace {
+            name: "mmd.score".into(),
+            ticks: vec![0, 8, 16],
+            values: vec![0.1, 0.35, 0.2],
+        });
+        r.actions.push((8, "compact_shard".into()));
+        r.actions.push((16, "evict".into()));
+        r.notes.push("quick mode".into());
+        ResultsFile {
+            schema_version: SCHEMA_VERSION,
+            commit: "deadbeef".into(),
+            label: "BENCH_test".into(),
+            records: vec![r],
+        }
+    }
+
+    #[test]
+    fn roundtrip_identical() {
+        let f = fixture();
+        let back = ResultsFile::from_json(&Json::parse(&f.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let f = fixture();
+        let dir = std::env::temp_dir().join("nvm_results_test");
+        let path = dir.join("BENCH_test.json");
+        f.save(&path).unwrap();
+        let back = ResultsFile::load(&path).unwrap();
+        assert_eq!(back, f);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_violations_hard_fail() {
+        let f = fixture();
+        let mut wrong_version = f.to_json();
+        if let Json::Obj(fields) = &mut wrong_version {
+            fields[0].1 = Json::Num(99.0);
+        }
+        assert!(ResultsFile::from_json(&wrong_version)
+            .unwrap_err()
+            .contains("schema_version"));
+        let missing = Json::parse(r#"{"schema_version": 1, "commit": "x"}"#).unwrap();
+        assert!(ResultsFile::from_json(&missing).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_duplicates() {
+        let f = fixture();
+        let merged = ResultsFile::merge("BENCH_ci", &[f.clone()]).unwrap();
+        assert_eq!(merged.label, "BENCH_ci");
+        assert_eq!(merged.records.len(), 1);
+        assert!(ResultsFile::merge("x", &[f.clone(), f]).is_err());
+    }
+
+    #[test]
+    fn slug_flattens_labels() {
+        assert_eq!(slug("Mop/s (total)"), "mop_s_total");
+        assert_eq!(slug("  paged+flaky  "), "paged_flaky");
+        assert_eq!(slug("p99 µs"), "p99_s");
+        assert_eq!(slug("resident"), "resident");
+    }
+
+    #[test]
+    fn verdict_helpers() {
+        let f = fixture();
+        assert!(!f.records[0].all_pass());
+        assert!(Record::new("x", "bench").all_pass());
+    }
+
+    #[test]
+    fn direction_wire_names() {
+        for d in [Direction::Higher, Direction::Lower, Direction::Info] {
+            assert_eq!(Direction::parse(d.as_str()).unwrap(), d);
+        }
+        assert!(Direction::parse("sideways").is_err());
+    }
+}

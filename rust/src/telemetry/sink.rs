@@ -1,0 +1,122 @@
+//! A scoped, process-global results sink.
+//!
+//! `ExpConfig` is `Copy` and threads through every experiment closure
+//! by value, so a recorder cannot ride inside it. Instead the runner
+//! installs a [`Record`] here before dispatching an experiment;
+//! experiment code emits structured metrics/traces unconditionally
+//! through these free functions, which are no-ops when no sink is
+//! installed (the normal table-printing path pays one relaxed atomic
+//! load).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::results::{MetricRecord, Record, Trace};
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Record>> = Mutex::new(None);
+
+/// Serializes unit tests that install a sink (the sink is global;
+/// the harness runs tests on parallel threads).
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Install a fresh record, replacing (and discarding) any prior one.
+pub fn begin(name: &str, kind: &str) {
+    let mut sink = SINK.lock().unwrap();
+    *sink = Some(Record::new(name, kind));
+    ACTIVE.store(true, Ordering::Release);
+}
+
+/// Is a sink installed right now?
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Run `f` against the installed record; no-op without one.
+pub fn with(f: impl FnOnce(&mut Record)) {
+    if !active() {
+        return;
+    }
+    let mut sink = SINK.lock().unwrap();
+    if let Some(record) = sink.as_mut() {
+        f(record);
+    }
+}
+
+/// Append a metric to the installed record.
+pub fn metric(m: MetricRecord) {
+    with(|r| {
+        r.metrics.push(m);
+    });
+}
+
+/// Append a time-series trace.
+pub fn trace(t: Trace) {
+    with(|r| {
+        r.traces.push(t);
+    });
+}
+
+/// Append `(tick, action)` rows to the action log.
+pub fn actions(rows: impl IntoIterator<Item = (u64, String)>) {
+    with(|r| {
+        r.actions.extend(rows);
+    });
+}
+
+/// Append a PASS/FAIL verdict.
+pub fn verdict(name: &str, pass: bool, detail: &str) {
+    with(|r| {
+        r.verdict(name, pass, detail);
+    });
+}
+
+/// Uninstall and return the record (ends the scope).
+pub fn take() -> Option<Record> {
+    let mut sink = SINK.lock().unwrap();
+    ACTIVE.store(false, Ordering::Release);
+    sink.take()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::results::Direction;
+
+    // One test exercises the whole lifecycle, under TEST_LOCK: the
+    // sink is global, so parallel installs would race.
+    #[test]
+    fn sink_lifecycle() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // Inactive: emissions are dropped, not buffered.
+        assert!(take().is_none());
+        metric(MetricRecord::from_value("lost", "", Direction::Info, 1.0));
+        assert!(!active());
+        assert!(take().is_none());
+
+        begin("exp", "experiment");
+        assert!(active());
+        metric(MetricRecord::from_value("kept", "us", Direction::Lower, 2.0));
+        verdict("ok", true, "2 < 3");
+        trace(Trace {
+            name: "score".into(),
+            ticks: vec![0, 1],
+            values: vec![0.5, 0.25],
+        });
+        actions([(1, "evict".to_string())]);
+        let r = take().expect("record installed");
+        assert!(!active());
+        assert_eq!(r.name, "exp");
+        assert!(r.metrics.iter().any(|m| m.name == "kept"));
+        assert!(r.metrics.iter().all(|m| m.name != "lost"));
+        assert!(r.verdicts.iter().any(|v| v.name == "ok"));
+        assert!(r.traces.iter().any(|t| t.name == "score"));
+        assert!(r.actions.contains(&(1, "evict".to_string())));
+
+        // begin replaces any stale record.
+        begin("a", "experiment");
+        begin("b", "experiment");
+        assert_eq!(take().unwrap().name, "b");
+    }
+}

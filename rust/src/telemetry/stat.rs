@@ -1,0 +1,497 @@
+//! The stat engine behind the results pipeline: streaming moments,
+//! t-based confidence intervals, and a fixed-bucket log-scale
+//! histogram cheap enough for hot paths.
+//!
+//! Everything here is deterministic and allocation-light:
+//!
+//! * [`Running`] — Welford's streaming mean/variance, O(1) per sample,
+//!   no stored samples. The building block for throughput counters.
+//! * [`summarize`] / [`Summary`] — one pass over a sample vector into
+//!   the record the results schema stores: n, mean, sample stddev, a
+//!   t-based 95% confidence half-width, min/max, and nearest-rank
+//!   p50/p99/p999.
+//! * [`LogHistogram`] — an HDR-style histogram with power-of-two
+//!   groups and [`HIST_SUBBUCKETS`] linear sub-buckets per group:
+//!   `record` is a handful of integer ops (no floats, no allocation
+//!   after construction), relative quantile error is bounded by
+//!   `1/HIST_SUBBUCKETS` (6.25%), and histograms merge losslessly —
+//!   per-thread recording with a merge at the end is the intended
+//!   hot-path pattern.
+
+/// Linear sub-buckets per power-of-two group of a [`LogHistogram`].
+/// Bounds the relative error of a reported quantile to `1/16`.
+pub const HIST_SUBBUCKETS: u64 = 16;
+
+/// Bucket count: group 0 covers values `0..16` exactly; groups `1..=60`
+/// cover `[16 << (g-1), 16 << g)` with 16 sub-buckets each, enough for
+/// any `u64` value.
+const HIST_BUCKETS: usize = 16 + 60 * 16;
+
+/// Welford's streaming mean/variance accumulator (O(1) per sample, no
+/// stored samples).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    /// An empty accumulator.
+    pub fn new() -> Self {
+        Running::default()
+    }
+
+    /// Add one sample.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        if self.n == 1 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Samples pushed so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean of the samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n−1 denominator; 0 for fewer than 2 samples).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Derived statistics of one metric's samples — what the results
+/// schema stores next to the raw sample vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    /// Sample count.
+    pub n: u64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Sample standard deviation (n−1; 0 below 2 samples).
+    pub stddev: f64,
+    /// Half-width of the t-based 95% confidence interval of the mean
+    /// (0 below 2 samples). The interval is `mean ± ci95`.
+    pub ci95: f64,
+    /// Smallest sample.
+    pub min: f64,
+    /// Largest sample.
+    pub max: f64,
+    /// Median (nearest rank).
+    pub p50: f64,
+    /// 99th percentile (nearest rank).
+    pub p99: f64,
+    /// 99.9th percentile (nearest rank).
+    pub p999: f64,
+}
+
+/// Two-sided 97.5% Student-t quantile for `df` degrees of freedom —
+/// the multiplier of a 95% confidence interval. Exact table through
+/// df 30, the normal limit above (the error is < 2% there).
+pub fn t975(df: u64) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => 0.0,
+        d if d <= 30 => TABLE[(d - 1) as usize],
+        _ => 1.96,
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice: the smallest
+/// element with at least `p` of the mass at or below it.
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Summarize a sample vector. Empty input summarizes to all zeros
+/// (`n == 0` marks it as no-data); one sample reports itself as every
+/// location statistic with zero spread.
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut r = Running::new();
+    for &x in samples {
+        r.push(x);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let stddev = r.stddev();
+    let ci95 = if r.count() < 2 {
+        0.0
+    } else {
+        t975(r.count() - 1) * stddev / (r.count() as f64).sqrt()
+    };
+    Summary {
+        n: r.count(),
+        mean: r.mean(),
+        stddev,
+        ci95,
+        min: r.min(),
+        max: r.max(),
+        p50: nearest_rank(&sorted, 0.50),
+        p99: nearest_rank(&sorted, 0.99),
+        p999: nearest_rank(&sorted, 0.999),
+    }
+}
+
+/// Fixed-bucket log-scale histogram over `u64` values (latencies in
+/// nanoseconds, counts, sizes). See the module docs for the layout and
+/// error bound. `record` is branch + shift + increment — hot-path
+/// safe; keep one per thread and [`LogHistogram::merge`] at the end.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64; HIST_BUCKETS]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+/// Bucket index of value `v`.
+fn bucket_index(v: u64) -> usize {
+    if v < HIST_SUBBUCKETS {
+        v as usize
+    } else {
+        // v >= 16: floor log2 is >= 4; the 4 bits after the leading
+        // one select the sub-bucket.
+        let k = 63 - v.leading_zeros() as u64; // k >= 4
+        let group = (k - 3) as usize; // 1..=60
+        let sub = ((v >> (k - 4)) - HIST_SUBBUCKETS) as usize; // 0..16
+        16 + (group - 1) * 16 + sub
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (the value every member of the
+/// bucket is >= to).
+fn bucket_low(i: usize) -> u64 {
+    if i < 16 {
+        i as u64
+    } else {
+        let group = (i - 16) / 16 + 1;
+        let sub = ((i - 16) % 16) as u64;
+        (HIST_SUBBUCKETS + sub) << (group - 1)
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram (~8 KB, fixed).
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: Box::new([0u64; HIST_BUCKETS]),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.wrapping_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Values recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact smallest recorded value (0 when empty).
+    pub fn min_value(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded value.
+    pub fn max_value(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile, reported as the lower bound of the
+    /// bucket holding the rank (within 6.25% of the true value; exact
+    /// below 16). `p` in `[0, 1]`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Clamp to the exact max so p100 never over-reports.
+                return bucket_low(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (lossless).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Occupied buckets as `(lower_bound, count)` pairs — the compact
+    /// export the results schema stores.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_low(i), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        // 2, 4, 4, 4, 5, 5, 7, 9: mean 5, population stddev 2,
+        // sample variance 32/7.
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for x in xs {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_closed_form() {
+        // 1..=5: mean 3, sample stddev sqrt(2.5),
+        // ci95 = 2.776 * sqrt(2.5/5).
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.stddev - 2.5f64.sqrt()).abs() < 1e-12);
+        let want_ci = 2.776 * (2.5f64 / 5.0).sqrt();
+        assert!((s.ci95 - want_ci).abs() < 1e-9, "{} vs {want_ci}", s.ci95);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_edge_cases() {
+        let empty = summarize(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.mean, 0.0);
+        assert_eq!(empty.ci95, 0.0);
+
+        let one = summarize(&[7.5]);
+        assert_eq!(one.n, 1);
+        assert_eq!(one.mean, 7.5);
+        assert_eq!(one.stddev, 0.0);
+        assert_eq!(one.ci95, 0.0, "one sample has no spread estimate");
+        assert_eq!(one.p50, 7.5);
+        assert_eq!(one.p999, 7.5);
+
+        let flat = summarize(&[4.0; 32]);
+        assert_eq!(flat.n, 32);
+        assert_eq!(flat.mean, 4.0);
+        assert_eq!(flat.stddev, 0.0);
+        assert_eq!(flat.ci95, 0.0, "a constant series is certain");
+        assert_eq!(flat.p50, 4.0);
+        assert_eq!(flat.p99, 4.0);
+    }
+
+    #[test]
+    fn t_table_monotone_toward_normal() {
+        assert!((t975(1) - 12.706).abs() < 1e-9);
+        assert!((t975(30) - 2.042).abs() < 1e-9);
+        assert_eq!(t975(31), 1.96);
+        assert_eq!(t975(1_000_000), 1.96);
+        for df in 1..30 {
+            assert!(t975(df) > t975(df + 1), "t must shrink with df");
+        }
+    }
+
+    #[test]
+    fn hist_small_values_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.min_value(), 0);
+        assert_eq!(h.max_value(), 15);
+        // Below 16 every value has its own bucket: percentiles exact.
+        assert_eq!(h.percentile(0.5), 7);
+        assert_eq!(h.percentile(1.0), 15);
+        assert_eq!(h.mean(), 7.5);
+    }
+
+    #[test]
+    fn hist_bucket_boundaries() {
+        // Group boundaries: 15 | 16 | 31 | 32 must land in distinct,
+        // ordered buckets; within-bucket neighbors must share.
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+        assert_eq!(bucket_index(33), 32, "32 and 33 share a width-2 bucket");
+        assert_eq!(bucket_index(34), 33);
+        // Lower bounds invert the index mapping.
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 100, 1000, 4096, 65535, 1 << 40, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(bucket_low(i) <= v, "low({i}) > {v}");
+            if i + 1 < HIST_BUCKETS {
+                assert!(bucket_low(i + 1) > v, "next bucket must start above {v}");
+            }
+        }
+        // Relative error bound: lower bound within 1/16 of the value.
+        for v in [100u64, 999, 12_345, 7_777_777, 1 << 50] {
+            let lo = bucket_low(bucket_index(v));
+            assert!((v - lo) as f64 / v as f64 <= 1.0 / 16.0 + 1e-12, "{v} -> {lo}");
+        }
+    }
+
+    #[test]
+    fn hist_percentiles_and_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for _ in 0..99 {
+            a.record(100);
+        }
+        b.record(10_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.percentile(0.50), bucket_low(bucket_index(100)));
+        assert_eq!(a.percentile(0.99), bucket_low(bucket_index(100)));
+        // The single outlier holds the p100 rank; it reports its
+        // bucket's lower bound (within the 1/16 error bound).
+        assert_eq!(a.percentile(1.0), bucket_low(bucket_index(10_000)));
+        assert!(a.percentile(1.0) <= a.max_value());
+        assert_eq!(a.max_value(), 10_000);
+        let mean = a.mean();
+        assert!((mean - (99.0 * 100.0 + 10_000.0) / 100.0).abs() < 1e-9, "{mean}");
+    }
+
+    #[test]
+    fn hist_buckets_export_roundtrip() {
+        let mut h = LogHistogram::new();
+        for v in [3u64, 3, 17, 40_000] {
+            h.record(v);
+        }
+        let buckets = h.buckets();
+        assert_eq!(buckets.iter().map(|&(_, c)| c).sum::<u64>(), 4);
+        assert_eq!(buckets[0], (3, 2));
+        // Rebuild by replaying lower bounds: counts and order survive.
+        let mut r = LogHistogram::new();
+        for &(lo, c) in &buckets {
+            for _ in 0..c {
+                r.record(lo);
+            }
+        }
+        assert_eq!(r.count(), 4);
+        assert_eq!(r.buckets(), buckets);
+    }
+}

@@ -1,0 +1,184 @@
+//! Integration: the full telemetry pipeline — experiment run →
+//! results record → JSON file → report rendering → regression diff —
+//! plus cross-checks between the streaming and batch stat engines.
+//!
+//! Only `end_to_end_pipeline` touches the global sink (tests in one
+//! binary run concurrently; the sink is process-global, so exactly one
+//! test here may use it).
+
+use std::path::PathBuf;
+
+use nvm::coordinator::experiments::ExpConfig;
+use nvm::coordinator::runner::run_experiment_recorded;
+use nvm::telemetry::diff::DiffReport;
+use nvm::telemetry::report::{render_dat, render_results};
+use nvm::telemetry::{
+    summarize, Direction, Json, LogHistogram, MetricRecord, Record, ResultsFile, ResultsWriter,
+    Running, SCHEMA_VERSION,
+};
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("nvm-telemetry-test-{}-{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn end_to_end_pipeline() {
+    // Run a real (quick) experiment through the recorded path.
+    let cfg = ExpConfig {
+        sample: 20_000,
+        threads: 2,
+        ..ExpConfig::default()
+    };
+    let (tables, records) = run_experiment_recorded("table2", &cfg).unwrap();
+    assert!(!tables.is_empty());
+    assert_eq!(records.len(), 1);
+    assert!(!records[0].metrics.is_empty(), "table cells must flatten into metrics");
+
+    // Write it, read it back: the round trip must be lossless.
+    let mut w = ResultsWriter::new("itest");
+    for r in records {
+        w.add(r);
+    }
+    let path = tmp_path("roundtrip.json");
+    let saved = w.save(&path).unwrap();
+    let loaded = ResultsFile::load(&path).unwrap();
+    assert_eq!(saved, loaded);
+    assert_eq!(loaded.schema_version, SCHEMA_VERSION);
+    assert_eq!(loaded.label, "itest");
+
+    // Both renderers accept the file.
+    let table = render_results(&loaded);
+    assert!(table.contains("table2"));
+    let dat = render_dat(&loaded);
+    assert!(dat.contains("table2"));
+
+    // A file diffed against itself reports nothing.
+    let d = DiffReport::compare(&saved, &loaded);
+    assert_eq!(d.regressions(), 0, "self-diff found regressions:\n{d}");
+    assert_eq!(d.improvements(), 0);
+
+    // Table cells flatten as Info metrics, which never fail a diff;
+    // plant one directed metric on both sides and worsen the new copy
+    // 10x — diff must flag exactly that regression.
+    let mut base = loaded.clone();
+    base.records[0].metrics.push(MetricRecord::from_value(
+        "synthetic.latency",
+        "us",
+        Direction::Lower,
+        10.0,
+    ));
+    let mut worse = base.clone();
+    {
+        let m = worse.records[0].metrics.last_mut().unwrap();
+        m.summary.mean *= 10.0;
+        for s in &mut m.samples {
+            *s *= 10.0;
+        }
+    }
+    assert_eq!(DiffReport::compare(&base, &base).regressions(), 0);
+    let d = DiffReport::compare(&base, &worse);
+    assert_eq!(d.regressions(), 1, "10x-worse metric not flagged:\n{d}");
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn schema_violations_hard_fail() {
+    let good = ResultsFile {
+        schema_version: SCHEMA_VERSION,
+        commit: "deadbeef".into(),
+        label: "x".into(),
+        records: vec![Record::new("r", "bench")],
+    };
+    assert!(ResultsFile::from_json(&good.to_json()).is_ok());
+
+    // Wrong version.
+    let mut wrong = good.clone();
+    wrong.schema_version = SCHEMA_VERSION + 999;
+    assert!(ResultsFile::from_json(&wrong.to_json()).is_err());
+
+    // Missing commit key.
+    let text = good.to_json().render().replace("\"commit\"", "\"commitx\"");
+    let json = Json::parse(&text).unwrap();
+    assert!(ResultsFile::from_json(&json).is_err());
+
+    // Junk on disk.
+    let path = tmp_path("junk.json");
+    std::fs::write(&path, "{ not json").unwrap();
+    assert!(ResultsFile::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn verdict_flip_is_a_regression() {
+    let mut old = ResultsFile {
+        schema_version: SCHEMA_VERSION,
+        commit: "c".into(),
+        label: "old".into(),
+        records: vec![Record::new("b", "bench")],
+    };
+    let mut new = old.clone();
+    new.label = "new".into();
+    old.records[0].verdict("gate", true, "ok");
+    new.records[0].verdict("gate", false, "broke");
+    let d = DiffReport::compare(&old, &new);
+    assert_eq!(d.regressions(), 1);
+    assert!(d.verdicts[0].regressed());
+}
+
+#[test]
+fn running_matches_batch_summary() {
+    // Streaming moments must agree with the batch path on the same data.
+    let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 * 0.5 + 3.0).collect();
+    let mut r = Running::new();
+    for &x in &xs {
+        r.push(x);
+    }
+    let s = summarize(&xs);
+    assert_eq!(r.count(), s.n);
+    assert!((r.mean() - s.mean).abs() < 1e-9);
+    assert!((r.stddev() - s.stddev).abs() < 1e-9);
+    assert_eq!(r.min(), s.min);
+    assert_eq!(r.max(), s.max);
+}
+
+#[test]
+fn histogram_percentiles_bound_batch_percentiles() {
+    // Log-bucket percentiles are bucket lower bounds: never above the
+    // exact order statistic, within one sub-bucket (6.25%) below it,
+    // and monotone in p.
+    let mut h = LogHistogram::new();
+    let vals: Vec<u64> = (1..=10_000u64).map(|i| (i * i) % 65_536 + 1).collect();
+    for &v in &vals {
+        h.record(v);
+    }
+    assert_eq!(h.count(), vals.len() as u64);
+    let mut sorted = vals.clone();
+    sorted.sort_unstable();
+    let mut last = 0;
+    for &(p, idx) in &[(0.50, 4_999usize), (0.99, 9_899), (0.999, 9_989)] {
+        let est = h.percentile(p);
+        let exact = sorted[idx];
+        assert!(est <= exact, "p{p}: bucket lower bound {est} above exact {exact}");
+        assert!(
+            (exact - est) as f64 <= exact as f64 * 0.0625 + 1.0,
+            "p{p}: estimate {est} too far below exact {exact}"
+        );
+        assert!(est >= last, "percentiles must be monotone");
+        last = est;
+    }
+}
+
+#[test]
+fn merge_rejects_duplicate_records() {
+    let part = ResultsFile {
+        schema_version: SCHEMA_VERSION,
+        commit: "c".into(),
+        label: "p".into(),
+        records: vec![Record::new("same", "bench")],
+    };
+    assert!(ResultsFile::merge("out", &[part.clone()]).is_ok());
+    assert!(ResultsFile::merge("out", &[part.clone(), part]).is_err());
+}
