@@ -1,0 +1,89 @@
+//! Bench: pallas-kv tail latency under memory-management churn.
+//!
+//! Runs the read-heavy zipfian kv workload twice through the open-loop
+//! load generator — once fully resident (quiescent baseline) and once
+//! with mmd eviction + software paging underneath (a quarter of the
+//! leaves parked up front, pinned scratch keeping full residency
+//! impossible) — and gates the acceptance claim:
+//!
+//! * **churn costs bounded tail, not collapse**: p99 arrival-to-response
+//!   latency with mmd churn stays ≤ 2× the quiescent p99.
+//!
+//! Latency is measured from *scheduled* arrival (no coordinated
+//! omission), so a stalled server shows up in the tail instead of
+//! thinning the load. The full mix table lives in `nvm run kv-serve`;
+//! this bench isolates the one number the SLO claim is about.
+//!
+//! `cargo bench --bench ablation_kv_tail`  (NVM_QUICK=1 for a fast
+//! pass)
+
+use nvm::bench_utils::section;
+use nvm::coordinator::experiments::{kv_tail_run, ExpConfig};
+use nvm::telemetry::{results, sink, Direction, MetricRecord};
+
+fn main() {
+    sink::begin("ablation_kv_tail", "bench");
+    let quick = std::env::var("NVM_QUICK").is_ok();
+    let cfg = if quick {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+
+    section("pallas-kv tail latency: quiescent vs mmd churn (read-heavy zipfian)");
+    let quiet = kv_tail_run(&cfg, false);
+    let churn = kv_tail_run(&cfg, true);
+    for (name, h) in [("quiescent", &quiet), ("churn", &churn)] {
+        println!(
+            "{name:10} {} ops: p50 {:.1} µs  p99 {:.1} µs  p999 {:.1} µs  max {:.1} µs",
+            h.count(),
+            h.percentile(0.50) as f64 / 1e3,
+            h.percentile(0.99) as f64 / 1e3,
+            h.percentile(0.999) as f64 / 1e3,
+            h.max_value() as f64 / 1e3,
+        );
+        sink::metric(MetricRecord::from_hist(
+            &format!("{name}.latency"),
+            "us",
+            Direction::Lower,
+            h,
+            1e-3,
+        ));
+    }
+
+    section("verdict");
+    let p99_quiet = quiet.percentile(0.99).max(1);
+    let p99_churn = churn.percentile(0.99);
+    let ratio = p99_churn as f64 / p99_quiet as f64;
+    let ok = ratio <= 2.0;
+    println!(
+        "{} p99 under churn: {:.1} vs {:.1} µs quiescent ({ratio:.2}x, need <= 2.0x)",
+        if ok { "PASS" } else { "FAIL" },
+        p99_churn as f64 / 1e3,
+        p99_quiet as f64 / 1e3,
+    );
+    println!(
+        "{}",
+        if ok {
+            "kv tail goal met: eviction + software paging under the service keeps p99 within 2x"
+        } else {
+            "KV TAIL GOAL NOT MET — investigate (debug build? overloaded arrival rate? fault \
+             workers starved?)"
+        }
+    );
+
+    sink::verdict(
+        "kv_p99_churn_le_2x_quiescent",
+        ok,
+        &format!(
+            "{:.1} vs {:.1} µs ({ratio:.2}x)",
+            p99_churn as f64 / 1e3,
+            p99_quiet as f64 / 1e3
+        ),
+    );
+    let mut rec = sink::take().expect("bench sink installed at main start");
+    rec.config("quick", quick);
+    rec.config("sample", cfg.sample);
+    rec.config("seed", cfg.seed);
+    results::write_bench_record(rec);
+}

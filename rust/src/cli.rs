@@ -54,6 +54,16 @@ impl Cli {
         }
     }
 
+    /// Typed float flag lookup with default.
+    pub fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} wants a number, got {v:?}"))),
+        }
+    }
+
     /// Boolean flag (present = true).
     pub fn flag_bool(&self, key: &str) -> bool {
         self.flags.contains_key(key)
@@ -102,6 +112,15 @@ mod tests {
     fn bad_int_flag_errors() {
         let c = parse("run --sample abc");
         assert!(c.flag_u64("sample", 1).is_err());
+    }
+
+    #[test]
+    fn float_flag_parses_with_default() {
+        let c = parse("run kv-serve --kv-rate 12500.5");
+        assert_eq!(c.flag_f64("kv-rate", 25_000.0).unwrap(), 12500.5);
+        assert_eq!(c.flag_f64("missing", 25_000.0).unwrap(), 25_000.0);
+        let bad = parse("run --kv-rate abc");
+        assert!(bad.flag_f64("kv-rate", 1.0).is_err());
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub fn list_experiments() -> Vec<ExperimentInfo> {
             name: "energy",
             description: "S2 claim: translation's share of memory-system energy",
         },
+        ExperimentInfo {
+            name: "kv-serve",
+            description: "pallas-kv: open-loop KV service tail latency under mmd churn + paging",
+        },
     ]
 }
 
@@ -117,6 +121,7 @@ pub fn run_experiment(name: &str, cfg: &ExpConfig) -> Result<Vec<Table>> {
         "ablation-block-size" => vec![experiments::ablation_block_size(cfg)],
         "ablation-ptw" => vec![experiments::ablation_ptw_cache(cfg)],
         "energy" => vec![experiments::energy(cfg)],
+        "kv-serve" | "kv_serve" => vec![experiments::kv_serve(cfg)],
         "all" => {
             let mut all = Vec::new();
             for e in list_experiments() {

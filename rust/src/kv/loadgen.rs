@@ -1,0 +1,491 @@
+//! Open-loop load generator for pallas-kv.
+//!
+//! The generator precomputes a deterministic schedule — one
+//! [`OpSpec`] per operation, each with a fixed arrival time at the
+//! configured rate — then replays it through any [`Transport`].
+//! Latency is measured from the *scheduled* arrival, not from when the
+//! client got around to sending, so a stalled server inflates the tail
+//! instead of silently thinning the arrival stream (no coordinated
+//! omission). Keys follow either a uniform or a YCSB-style scrambled
+//! zipfian distribution; values are a pure function of the key
+//! ([`value_for`]), which lets every read be verified against the
+//! expected bytes with no shared oracle state.
+
+use std::time::{Duration, Instant};
+
+use super::transport::{Request, Response, Transport};
+use crate::telemetry::LogHistogram;
+use crate::testutil::Rng;
+
+/// Key popularity distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    /// Every key equally likely.
+    Uniform,
+    /// YCSB-style scrambled zipfian with the given theta (clamped to
+    /// `(0.01, 0.99)`); hot ranks are scattered over the keyspace so
+    /// popularity is not correlated with key order.
+    Zipfian(f64),
+}
+
+/// Operation mix as integer weights (need not sum to 100).
+#[derive(Clone, Copy, Debug)]
+pub struct MixConfig {
+    /// Label used in reports (e.g. `"read-heavy"`).
+    pub name: &'static str,
+    /// Weight of point gets.
+    pub get_w: u32,
+    /// Weight of puts.
+    pub put_w: u32,
+    /// Weight of range scans.
+    pub scan_w: u32,
+}
+
+/// Full load-generator configuration. Copyable so experiments can
+/// derive per-mix variants from one base.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenConfig {
+    /// Total operations across all clients.
+    pub ops: usize,
+    /// Open-loop arrival rate in ops/sec (`<= 0` = as fast as possible).
+    pub rate: f64,
+    /// Size of the key universe; keys are `0..nkeys` as big-endian
+    /// `u64` bytes (order-preserving on the wire).
+    pub nkeys: u64,
+    /// Value length written by puts and expected by verification.
+    pub val_len: usize,
+    /// Keys per scan (`Range` limit and span).
+    pub scan_len: usize,
+    /// Key distribution.
+    pub dist: KeyDist,
+    /// Operation mix.
+    pub mix: MixConfig,
+    /// Schedule seed; equal seeds yield identical schedules.
+    pub seed: u64,
+    /// When true, every key is expected to exist (the store was
+    /// prefilled), so a get miss counts as a verification failure.
+    pub prefilled: bool,
+}
+
+/// What a scheduled operation does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Point read.
+    Get,
+    /// Overwrite with [`value_for`] bytes.
+    Put,
+    /// Range scan of [`LoadgenConfig::scan_len`] keys.
+    Scan,
+}
+
+/// One precomputed operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpSpec {
+    /// Operation kind.
+    pub kind: OpKind,
+    /// Target key in `0..nkeys`.
+    pub key: u64,
+    /// Scheduled arrival, nanoseconds from the run epoch.
+    pub arrival_ns: u64,
+}
+
+/// Aggregated result of a [`run`].
+#[derive(Debug)]
+pub struct LoadgenOutcome {
+    /// Per-op latency (ns) from scheduled arrival to response.
+    pub hist: LogHistogram,
+    /// Operations completed (should equal `cfg.ops`).
+    pub ops_done: u64,
+    /// Responses that were [`Response::Error`].
+    pub errors: u64,
+    /// Responses whose payload did not match the [`value_for`] oracle.
+    pub verify_failures: u64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// `ops_done / wall_secs`.
+    pub achieved_rate: f64,
+}
+
+/// splitmix64 finalizer: a cheap stateless bijective scramble.
+#[inline]
+fn scramble(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Wire encoding of a key: big-endian `u64`, so byte order matches
+/// numeric order and range scans work.
+#[inline]
+pub fn key_bytes(key: u64) -> [u8; 8] {
+    key.to_be_bytes()
+}
+
+/// The value oracle: `len` bytes derived deterministically from the
+/// key. Puts write this, reads verify against it — so correctness
+/// checking needs no shared mirror.
+pub fn value_for(key: u64, len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(len);
+    let mut state = key ^ 0xD1B5_4A32_D192_ED03;
+    while out.len() < len {
+        state = scramble(state);
+        let chunk = state.to_le_bytes();
+        let take = chunk.len().min(len - out.len());
+        out.extend_from_slice(&chunk[..take]);
+    }
+    out
+}
+
+/// YCSB zipfian rank generator (Gray et al. rejection-free form).
+struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+}
+
+impl Zipf {
+    fn new(n: u64, theta: f64) -> Self {
+        let theta = theta.clamp(0.01, 0.99);
+        let mut zetan = 0.0;
+        for i in 1..=n.max(1) {
+            zetan += 1.0 / (i as f64).powf(theta);
+        }
+        let zeta2 = 1.0 + 0.5f64.powf(theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n.max(2) as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta }
+    }
+
+    /// Map uniform `u in [0,1)` to a rank in `0..n`; rank 0 is hottest.
+    fn rank(&self, u: f64) -> u64 {
+        if self.n <= 1 {
+            return 0;
+        }
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        r.min(self.n - 1)
+    }
+}
+
+/// Build the deterministic operation schedule for `cfg`.
+pub fn schedule(cfg: &LoadgenConfig) -> Vec<OpSpec> {
+    let mut rng = Rng::new(cfg.seed);
+    let zipf = match cfg.dist {
+        KeyDist::Zipfian(theta) => Some(Zipf::new(cfg.nkeys, theta)),
+        KeyDist::Uniform => None,
+    };
+    let total_w = (cfg.mix.get_w + cfg.mix.put_w + cfg.mix.scan_w).max(1) as u64;
+    let ns_per_op = if cfg.rate > 0.0 { 1e9 / cfg.rate } else { 0.0 };
+    (0..cfg.ops)
+        .map(|i| {
+            let pick = rng.below(total_w) as u32;
+            let kind = if pick < cfg.mix.get_w {
+                OpKind::Get
+            } else if pick < cfg.mix.get_w + cfg.mix.put_w {
+                OpKind::Put
+            } else {
+                OpKind::Scan
+            };
+            let key = match &zipf {
+                Some(z) => scramble(z.rank(rng.f64())) % cfg.nkeys.max(1),
+                None => rng.below(cfg.nkeys.max(1)),
+            };
+            OpSpec { kind, key, arrival_ns: (i as f64 * ns_per_op) as u64 }
+        })
+        .collect()
+}
+
+fn request_for(cfg: &LoadgenConfig, spec: &OpSpec) -> Request {
+    match spec.kind {
+        OpKind::Get => Request::Get { key: key_bytes(spec.key).to_vec() },
+        OpKind::Put => Request::Put {
+            key: key_bytes(spec.key).to_vec(),
+            value: value_for(spec.key, cfg.val_len),
+        },
+        OpKind::Scan => Request::Range {
+            start: key_bytes(spec.key).to_vec(),
+            end: key_bytes(spec.key.saturating_add(cfg.scan_len as u64)).to_vec(),
+            limit: cfg.scan_len as u32,
+        },
+    }
+}
+
+struct ClientTally {
+    hist: LogHistogram,
+    ops: u64,
+    errors: u64,
+    verify_failures: u64,
+}
+
+fn check(cfg: &LoadgenConfig, spec: &OpSpec, resp: &Response, t: &mut ClientTally) {
+    match (spec.kind, resp) {
+        (_, Response::Error { .. }) => t.errors += 1,
+        (OpKind::Get, Response::Value { value, .. }) => match value {
+            Some(v) => {
+                if *v != value_for(spec.key, cfg.val_len) {
+                    t.verify_failures += 1;
+                }
+            }
+            None => {
+                if cfg.prefilled {
+                    t.verify_failures += 1;
+                }
+            }
+        },
+        (OpKind::Put, Response::Committed { rev }) => {
+            if *rev == 0 {
+                t.verify_failures += 1;
+            }
+        }
+        (OpKind::Scan, Response::Entries { entries }) => {
+            for (k, v, _rev) in entries {
+                let ok = k.len() == 8
+                    && *v == value_for(u64::from_be_bytes(k[..8].try_into().unwrap()), cfg.val_len);
+                if !ok {
+                    t.verify_failures += 1;
+                }
+            }
+        }
+        // Any other (kind, response) pairing is a protocol violation.
+        _ => t.verify_failures += 1,
+    }
+}
+
+/// Replay the schedule for `cfg` through the given transports — one
+/// client thread per transport, each taking every `transports.len()`-th
+/// op — pacing sends to the scheduled arrival times and recording
+/// arrival-to-response latency.
+pub fn run<T: Transport>(cfg: &LoadgenConfig, transports: Vec<T>) -> LoadgenOutcome {
+    assert!(!transports.is_empty(), "loadgen needs at least one transport");
+    let sched = schedule(cfg);
+    let clients = transports.len();
+    let epoch = Instant::now();
+    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = transports
+            .into_iter()
+            .enumerate()
+            .map(|(ci, mut transport)| {
+                let sched = &sched;
+                s.spawn(move || {
+                    let mut tally = ClientTally {
+                        hist: LogHistogram::new(),
+                        ops: 0,
+                        errors: 0,
+                        verify_failures: 0,
+                    };
+                    for spec in sched.iter().skip(ci).step_by(clients) {
+                        // Open-loop pacing: wait for the scheduled
+                        // arrival, coarse sleep then spin for the
+                        // final stretch.
+                        loop {
+                            let now = epoch.elapsed().as_nanos() as u64;
+                            if now >= spec.arrival_ns {
+                                break;
+                            }
+                            let wait = spec.arrival_ns - now;
+                            if wait > 500_000 {
+                                std::thread::sleep(Duration::from_nanos(wait - 300_000));
+                            } else {
+                                std::hint::spin_loop();
+                            }
+                        }
+                        let resp = transport.call(request_for(cfg, spec));
+                        let now = epoch.elapsed().as_nanos() as u64;
+                        tally.hist.record(now.saturating_sub(spec.arrival_ns));
+                        tally.ops += 1;
+                        check(cfg, spec, &resp, &mut tally);
+                    }
+                    tally
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall_secs = epoch.elapsed().as_secs_f64().max(1e-9);
+    let mut hist = LogHistogram::new();
+    let (mut ops_done, mut errors, mut verify_failures) = (0, 0, 0);
+    for t in &tallies {
+        hist.merge(&t.hist);
+        ops_done += t.ops;
+        errors += t.errors;
+        verify_failures += t.verify_failures;
+    }
+    LoadgenOutcome {
+        hist,
+        ops_done,
+        errors,
+        verify_failures,
+        wall_secs,
+        achieved_rate: ops_done as f64 / wall_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
+
+    fn base_cfg() -> LoadgenConfig {
+        LoadgenConfig {
+            ops: 20_000,
+            rate: 1e6,
+            nkeys: 1024,
+            val_len: 32,
+            scan_len: 8,
+            dist: KeyDist::Zipfian(0.99),
+            mix: MixConfig { name: "mixed", get_w: 80, put_w: 15, scan_w: 5 },
+            seed: 42,
+            prefilled: false,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_the_seed() {
+        let cfg = base_cfg();
+        assert_eq!(schedule(&cfg), schedule(&cfg));
+        let mut other = cfg;
+        other.seed = 43;
+        assert_ne!(schedule(&cfg), schedule(&other));
+    }
+
+    #[test]
+    fn arrivals_follow_the_configured_rate() {
+        let cfg = base_cfg(); // 1e6 ops/s = 1000 ns spacing
+        let sched = schedule(&cfg);
+        for (i, s) in sched.iter().enumerate() {
+            assert_eq!(s.arrival_ns, i as u64 * 1000);
+        }
+        let mut unpaced = cfg;
+        unpaced.rate = 0.0;
+        assert!(schedule(&unpaced).iter().all(|s| s.arrival_ns == 0));
+    }
+
+    #[test]
+    fn zipfian_is_skewed_and_uniform_is_not() {
+        let count_hottest = |dist: KeyDist| {
+            let mut cfg = base_cfg();
+            cfg.dist = dist;
+            let mut counts = std::collections::HashMap::new();
+            for s in schedule(&cfg) {
+                *counts.entry(s.key).or_insert(0u64) += 1;
+            }
+            counts.values().copied().max().unwrap()
+        };
+        let zipf_hot = count_hottest(KeyDist::Zipfian(0.99));
+        let uni_hot = count_hottest(KeyDist::Uniform);
+        // 20k ops over 1024 keys: uniform hottest ~ a few dozen;
+        // zipfian theta=0.99 puts ~10% of mass on the hottest key.
+        assert!(
+            zipf_hot > 3 * uni_hot,
+            "zipf hottest {zipf_hot} vs uniform hottest {uni_hot}"
+        );
+    }
+
+    #[test]
+    fn mix_weights_are_respected() {
+        let mut cfg = base_cfg();
+        cfg.mix = MixConfig { name: "reads", get_w: 100, put_w: 0, scan_w: 0 };
+        assert!(schedule(&cfg).iter().all(|s| s.kind == OpKind::Get));
+        cfg.mix = MixConfig { name: "writes", get_w: 0, put_w: 1, scan_w: 0 };
+        assert!(schedule(&cfg).iter().all(|s| s.kind == OpKind::Put));
+    }
+
+    #[test]
+    fn value_oracle_is_deterministic_and_length_exact() {
+        for len in [0, 1, 7, 8, 9, 128] {
+            let v = value_for(7, len);
+            assert_eq!(v.len(), len);
+            assert_eq!(v, value_for(7, len));
+        }
+        assert_ne!(value_for(1, 32), value_for(2, 32));
+    }
+
+    /// An honest in-memory server: the oracle should report zero
+    /// failures against it.
+    struct MockTransport {
+        map: Arc<Mutex<BTreeMap<Vec<u8>, Vec<u8>>>>,
+    }
+
+    impl Transport for MockTransport {
+        fn call(&mut self, req: Request) -> Response {
+            let mut map = self.map.lock().unwrap();
+            match req {
+                Request::Get { key } => Response::Value {
+                    value: map.get(&key).cloned(),
+                    rev: 1,
+                },
+                Request::Put { key, value } => {
+                    map.insert(key, value);
+                    Response::Committed { rev: 1 }
+                }
+                Request::Delete { key } => Response::Deleted {
+                    rev: map.remove(&key).map(|_| 1),
+                },
+                Request::Range { start, end, limit } => {
+                    let entries = map
+                        .range(start..end)
+                        .take(if limit == 0 { usize::MAX } else { limit as usize })
+                        .map(|(k, v)| (k.clone(), v.clone(), 1))
+                        .collect();
+                    Response::Entries { entries }
+                }
+                Request::Watch { .. } => Response::Events {
+                    events: Vec::new(),
+                    first_seq_available: 0,
+                    next_seq: 0,
+                },
+            }
+        }
+    }
+
+    #[test]
+    fn run_verifies_cleanly_against_an_honest_server() {
+        let mut cfg = base_cfg();
+        cfg.ops = 2_000;
+        cfg.rate = 0.0; // max speed; keep the test fast
+        let map = Arc::new(Mutex::new(BTreeMap::new()));
+        let transports: Vec<_> = (0..2)
+            .map(|_| MockTransport { map: Arc::clone(&map) })
+            .collect();
+        let out = run(&cfg, transports);
+        assert_eq!(out.ops_done, 2_000);
+        assert_eq!(out.errors, 0);
+        assert_eq!(out.verify_failures, 0);
+        assert_eq!(out.hist.count(), 2_000);
+        assert!(out.achieved_rate > 0.0);
+    }
+
+    /// A server that answers gets with garbage: every get must be
+    /// flagged by the oracle.
+    struct LyingTransport;
+
+    impl Transport for LyingTransport {
+        fn call(&mut self, req: Request) -> Response {
+            match req {
+                Request::Get { .. } => Response::Value { value: Some(vec![0xAB]), rev: 1 },
+                _ => Response::Committed { rev: 1 },
+            }
+        }
+    }
+
+    #[test]
+    fn run_flags_wrong_values() {
+        let mut cfg = base_cfg();
+        cfg.ops = 500;
+        cfg.rate = 0.0;
+        cfg.mix = MixConfig { name: "reads", get_w: 1, put_w: 0, scan_w: 0 };
+        let out = run(&cfg, vec![LyingTransport]);
+        assert_eq!(out.verify_failures, 500);
+        assert_eq!(out.errors, 0);
+    }
+}

@@ -1,0 +1,51 @@
+//! # pallas-kv — a networked key-value front-end over the no-VM stack.
+//!
+//! The paper's case rests on server-shaped workloads: what does
+//! software-managed physical memory cost when a *service* — not a
+//! microbenchmark — runs on top of it? This module is that service: an
+//! etcd-like keyspace whose values live in fixed-size cells of a
+//! [`crate::trees::TreeArray`], with mmd compaction, eviction, and
+//! software page faults running underneath while clients hold it to a
+//! tail-latency SLO.
+//!
+//! ## Layout
+//!
+//! * [`store`] — [`store::KvStore`]: the keyspace itself. A
+//!   `BTreeMap` index (key → cell/revision) under one mutex, values
+//!   packed into `cell_words`-sized runs of `u64` tree words. Every
+//!   put commits **out of place**: reserve a fresh cell + globally
+//!   unique revision under the index lock, write the cell through the
+//!   seqlock writer *outside* the lock (this is where write faults on
+//!   evicted leaves happen), then commit and free the old cell.
+//!   Readers validate the cell's revision stamp after a seqlock-atomic
+//!   batch read and retry on mismatch, so index and data need no
+//!   common lock.
+//! * [`transport`] — [`transport::Request`]/[`transport::Response`],
+//!   the [`Transport`] trait, and the in-process channel
+//!   implementation ([`transport::KvServer`]) every offline run uses.
+//! * [`wire`] — a length-prefixed binary codec for the request and
+//!   response types, shared by the TCP transport and usable for replay
+//!   logs; decoding never panics on truncated input.
+//! * [`net`] — the TCP transport + blocking accept-loop server, behind
+//!   the `net` feature flag so default builds stay network-free.
+//! * [`loadgen`] — the open-loop load generator: a deterministic
+//!   fixed-rate arrival schedule (zipfian or uniform keys, mixed
+//!   get/put/scan ratios) measured from *scheduled* arrival time into
+//!   a [`crate::telemetry::LogHistogram`], so queueing delay is part
+//!   of the recorded latency (no coordinated omission).
+//!
+//! The `kv-serve` experiment (`nvm run kv-serve`) wires all of this
+//! over a pool too small for full residency, and the
+//! `ablation_kv_tail` bench gates p99-under-churn against quiescent
+//! p99.
+
+pub mod loadgen;
+#[cfg(feature = "net")]
+pub mod net;
+pub mod store;
+pub mod transport;
+pub mod wire;
+
+pub use loadgen::{KeyDist, LoadgenConfig, LoadgenOutcome, MixConfig, OpKind, OpSpec};
+pub use store::{EventKind, KvCounters, KvEvent, KvHandler, KvStore, WatchBatch};
+pub use transport::{ChannelTransport, KvServer, KvWorker, Request, Response, Transport};

@@ -1,0 +1,184 @@
+//! TCP transport for pallas-kv (behind the `net` feature).
+//!
+//! Frames are `u32`-LE length prefix + one [`super::wire`] message.
+//! The server is deliberately simple — one blocking thread per
+//! connection, driven by [`serve_conn`] — because the point of this
+//! repo is the memory stack under the service, not connection
+//! scaling. Default builds (and CI) never compile this module; the
+//! offline experiments use the in-process channel transport.
+//!
+//! ```no_run
+//! use nvm::kv::net::TcpTransport;
+//! use nvm::kv::{Request, Transport};
+//!
+//! let mut t = TcpTransport::connect("127.0.0.1:2379").unwrap();
+//! let resp = t.call(Request::Get { key: b"k".to_vec() });
+//! ```
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+use super::transport::{KvServer, Request, Response, Transport};
+use super::wire;
+
+/// Largest accepted frame (16 MiB) — rejects hostile length prefixes
+/// before allocating.
+pub const MAX_FRAME: u32 = 16 << 20;
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Client side: one blocking TCP connection speaking framed
+/// [`super::wire`] messages.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Connect to a pallas-kv server.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream })
+    }
+
+    fn call_io(&mut self, req: &Request) -> io::Result<Response> {
+        write_frame(&mut self.stream, &wire::encode_request(req))?;
+        let frame = read_frame(&mut self.stream)?;
+        wire::decode_response(&frame)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn call(&mut self, req: Request) -> Response {
+        match self.call_io(&req) {
+            Ok(resp) => resp,
+            Err(e) => Response::Error { message: format!("kv net: {e}") },
+        }
+    }
+}
+
+/// Serve one accepted connection: read framed requests, forward each
+/// through `forward`, write the framed response. Returns when the
+/// peer closes the connection (Ok) or on an I/O / codec error.
+pub fn serve_conn(
+    stream: &mut TcpStream,
+    mut forward: impl FnMut(Request) -> Response,
+) -> io::Result<u64> {
+    stream.set_nodelay(true)?;
+    let mut served = 0u64;
+    loop {
+        let frame = match read_frame(stream) {
+            Ok(f) => f,
+            // Clean shutdown: peer closed between frames.
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(served),
+            Err(e) => return Err(e),
+        };
+        let resp = match wire::decode_request(&frame) {
+            Ok(req) => forward(req),
+            Err(e) => Response::Error { message: format!("kv net: bad request: {e}") },
+        };
+        write_frame(stream, &wire::encode_response(&resp))?;
+        served += 1;
+    }
+}
+
+/// Blocking accept loop: forwards every decoded request into the
+/// in-process [`KvServer`] queue (where [`super::transport::KvWorker`]s
+/// drain it), one thread per connection, until `max_conns` connections
+/// have come and gone (`None` = run forever). Takes the server by
+/// value: clone workers off it first; when the loop returns, the
+/// queue's sender drops and idle workers exit.
+pub fn serve(listener: TcpListener, server: KvServer, max_conns: Option<usize>) -> io::Result<()> {
+    std::thread::scope(|s| {
+        let server = &server;
+        let mut accepted = 0usize;
+        for conn in listener.incoming() {
+            let mut stream = conn?;
+            s.spawn(move || {
+                let mut transport = server.connect();
+                let _ = serve_conn(&mut stream, |req| transport.call(req));
+            });
+            accepted += 1;
+            if let Some(max) = max_conns {
+                if accepted >= max {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::store::KvStore;
+    use crate::pmem::BlockAllocator;
+    use crate::trees::TreeArray;
+
+    #[test]
+    fn tcp_end_to_end() {
+        let alloc = BlockAllocator::with_capacity_bytes(1 << 22).unwrap();
+        let tree: TreeArray<u64> = TreeArray::new(&alloc, 8 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, 16, 64).unwrap() };
+        let server = KvServer::new();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        std::thread::scope(|s| {
+            let worker = server.worker();
+            let wh = s.spawn(|| {
+                let mut h = store.handler();
+                worker.run(&mut h)
+            });
+            // serve() owns the queue: once its single connection ends
+            // it returns, the sender drops, and the worker exits.
+            s.spawn(move || serve(listener, server, Some(1)).unwrap());
+
+            let mut t = TcpTransport::connect(addr).unwrap();
+            assert_eq!(
+                t.call(Request::Put { key: b"net".to_vec(), value: b"hello".to_vec() }),
+                Response::Committed { rev: 1 }
+            );
+            assert_eq!(
+                t.call(Request::Get { key: b"net".to_vec() }),
+                Response::Value { value: Some(b"hello".to_vec()), rev: 1 }
+            );
+            assert_eq!(
+                t.call(Request::Get { key: b"miss".to_vec() }),
+                Response::Value { value: None, rev: 0 }
+            );
+            drop(t);
+            assert_eq!(wh.join().unwrap(), 3);
+        });
+    }
+
+    #[test]
+    fn oversized_frames_rejected() {
+        let mut buf: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF];
+        assert!(read_frame(&mut buf).is_err());
+        let mut out = Vec::new();
+        let big = vec![0u8; MAX_FRAME as usize + 1];
+        assert!(write_frame(&mut out, &big).is_err());
+    }
+}

@@ -1,0 +1,740 @@
+//! The keyspace: a `BTreeMap` index over revision-stamped value cells
+//! in a [`TreeArray`].
+//!
+//! ## Cell protocol
+//!
+//! The tree is carved into fixed `cell_words` runs of `u64` words, one
+//! value per cell, never straddling a leaf (`leaf_cap % cell_words ==
+//! 0` is enforced). Word 0 is the **revision stamp**, word 1 the value
+//! length in bytes, the rest the LE-packed payload. A cell is always
+//! written by exactly one `set_batch` call, and [`TreeWriter`] commits
+//! a same-leaf batch under one seqlock hold, so a concurrent
+//! [`TreeView::get_batch`] over the cell's indices returns either the
+//! cell's old contents or its new contents — never a mix.
+//!
+//! ## Out-of-place commit
+//!
+//! Every put goes to a *fresh* cell:
+//!
+//! 1. under the index lock: pop a free cell, take a globally unique
+//!    revision;
+//! 2. outside the lock: write stamp + length + payload through the
+//!    seqlock writer — this is where write faults on evicted leaves
+//!    are taken, off the index's critical path;
+//! 3. under the index lock again: point the key at the new cell and
+//!    return the old cell (if any) to the free list.
+//!
+//! Readers snapshot the key's `(cell, rev)` under the lock, read the
+//! cell lock-free, and accept the value only when the stamp equals the
+//! snapshotted revision; a mismatch means the cell was recycled by a
+//! later put, so the reader re-resolves. Revisions are never reused,
+//! which makes the stamp ABA-proof: a stale-but-matching stamp can
+//! only mean the cell still holds exactly the snapshotted value.
+//!
+//! Two concurrent puts to the same key each write their own cell and
+//! race only on commit order: the last phase-3 lock holder wins, even
+//! if its revision is numerically older. Within one client connection
+//! operations are strictly ordered, which is the consistency pallas-kv
+//! promises (per-key last-committer-wins, reads linearize at their
+//! index snapshot).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Bound;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::pmem::{BlockAlloc, BlockAllocator};
+use crate::trees::{TreeArray, TreeView, TreeWriter};
+
+/// Reserved words per cell ahead of the payload: revision stamp +
+/// byte length.
+const CELL_HEADER_WORDS: usize = 2;
+
+/// What happened, for watchers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A key was created or overwritten.
+    Put,
+    /// A key was removed.
+    Delete,
+}
+
+/// One entry in the watch ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvEvent {
+    /// Position in the global event sequence (dense, starts at 0).
+    pub seq: u64,
+    /// Put or delete.
+    pub kind: EventKind,
+    /// The key.
+    pub key: Vec<u8>,
+    /// The revision the mutation committed (for a delete: the fresh
+    /// revision of the deletion itself, not the dead entry's).
+    pub rev: u64,
+}
+
+/// One `watch` reply: the retained events at or after the requested
+/// sequence number.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WatchBatch {
+    /// Matching events in sequence order (bounded by the caller's
+    /// `max`).
+    pub events: Vec<KvEvent>,
+    /// Oldest sequence number still in the ring. When this is greater
+    /// than the requested `from_seq`, the ring overflowed and the
+    /// watcher missed events — it must re-sync with a full range scan.
+    pub first_seq_available: u64,
+    /// Where to resume: one past the last returned event, or the end
+    /// of the ring when nothing matched.
+    pub next_seq: u64,
+}
+
+/// Bounded, oldest-dropped event ring (the "watch-lite" half of etcd's
+/// watch: replay within a window, detectable loss beyond it).
+struct EventRing {
+    buf: VecDeque<KvEvent>,
+    cap: usize,
+    /// Sequence number the next pushed event receives.
+    next_seq: u64,
+    /// Sequence number of the oldest retained event (== `next_seq`
+    /// when empty).
+    first_seq: u64,
+}
+
+impl EventRing {
+    fn new(cap: usize) -> Self {
+        EventRing { buf: VecDeque::new(), cap, next_seq: 0, first_seq: 0 }
+    }
+
+    fn push(&mut self, kind: EventKind, key: &[u8], rev: u64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if self.cap == 0 {
+            self.first_seq = self.next_seq;
+            return;
+        }
+        self.buf.push_back(KvEvent { seq, kind, key: key.to_vec(), rev });
+        if self.buf.len() > self.cap {
+            self.buf.pop_front();
+        }
+        self.first_seq = self.buf.front().map(|e| e.seq).unwrap_or(self.next_seq);
+    }
+}
+
+/// Index entry: where the key's current value lives.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    /// Cell number (tree words `cell * cell_words ..`).
+    cell: u32,
+    /// Revision stamped into the cell's word 0.
+    rev: u64,
+    /// Value length in bytes (duplicated in the cell's word 1).
+    len: u32,
+}
+
+/// The mutex-protected half: key index, cell free list, revision
+/// counter, event ring.
+struct KvIndex {
+    map: BTreeMap<Vec<u8>, Slot>,
+    free: Vec<u32>,
+    /// Next revision to hand out. Starts at 1 so 0 (the zero-filled
+    /// tree's stamp) never matches a real revision.
+    next_rev: u64,
+    events: EventRing,
+}
+
+/// Operation counters, all monotonically increasing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvCounters {
+    /// Committed puts.
+    pub puts: u64,
+    /// Point reads (hit or miss).
+    pub gets: u64,
+    /// Deletes that removed a key.
+    pub deletes: u64,
+    /// Range scans.
+    pub scans: u64,
+    /// Stamp-mismatch retries on the read path (a reader raced a cell
+    /// recycle and re-resolved).
+    pub read_retries: u64,
+}
+
+/// The shared keyspace. Create with [`KvStore::new`], then give each
+/// serving thread its own [`KvHandler`] via [`KvStore::handler`].
+pub struct KvStore<'t, 'a, A: BlockAlloc = BlockAllocator> {
+    tree: &'t TreeArray<'a, u64, A>,
+    cell_words: usize,
+    ncells: usize,
+    max_val: usize,
+    index: Mutex<KvIndex>,
+    puts: AtomicU64,
+    gets: AtomicU64,
+    deletes: AtomicU64,
+    scans: AtomicU64,
+    read_retries: AtomicU64,
+}
+
+impl<'t, 'a, A: BlockAlloc> KvStore<'t, 'a, A> {
+    /// Wrap `tree` as a keyspace of `tree.len() / cell_words` cells,
+    /// retaining up to `event_cap` watch events.
+    ///
+    /// `cell_words` must be at least `CELL_HEADER_WORDS + 1` and must
+    /// divide the tree's leaf capacity, so no cell straddles a leaf
+    /// (the seqlock-atomicity argument above needs that). The tree
+    /// must be freshly zero-filled ([`TreeArray::new`] guarantees it)
+    /// so no stale stamp can collide with a real revision.
+    ///
+    /// # Safety
+    ///
+    /// While the store exists, the tree may only be accessed through
+    /// this store's handlers (plus read-only views and the mmd
+    /// relocation/eviction machinery, which coordinate through leaf
+    /// seqlocks). The store hands each [`KvHandler`] a seqlock
+    /// [`TreeWriter`] under the [`TreeArray::writer`] contract; cell
+    /// reservation through the index is what keeps those writers from
+    /// ever racing on the same words.
+    pub unsafe fn new(
+        tree: &'t TreeArray<'a, u64, A>,
+        cell_words: usize,
+        event_cap: usize,
+    ) -> Result<Self> {
+        if cell_words < CELL_HEADER_WORDS + 1 {
+            return Err(Error::Config(format!(
+                "kv: cell_words {cell_words} leaves no payload room (need >= {})",
+                CELL_HEADER_WORDS + 1
+            )));
+        }
+        let leaf_cap = tree.geo.leaf_cap;
+        if leaf_cap % cell_words != 0 {
+            return Err(Error::Config(format!(
+                "kv: cell_words {cell_words} must divide the leaf capacity {leaf_cap} \
+                 so cells never straddle leaves"
+            )));
+        }
+        let ncells = tree.len() / cell_words;
+        if ncells == 0 {
+            return Err(Error::Config("kv: tree too small for a single cell".into()));
+        }
+        // Pop from the back: cells are handed out lowest-first, which
+        // keeps a lightly-loaded keyspace dense in the low leaves.
+        let free: Vec<u32> = (0..ncells as u32).rev().collect();
+        Ok(KvStore {
+            tree,
+            cell_words,
+            ncells,
+            max_val: (cell_words - CELL_HEADER_WORDS) * 8,
+            index: Mutex::new(KvIndex {
+                map: BTreeMap::new(),
+                free,
+                next_rev: 1,
+                events: EventRing::new(event_cap),
+            }),
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            scans: AtomicU64::new(0),
+            read_retries: AtomicU64::new(0),
+        })
+    }
+
+    /// A per-thread serving handle (own [`TreeView`] + [`TreeWriter`],
+    /// own translation caches).
+    pub fn handler<'s>(&'s self) -> KvHandler<'s, 't, 'a, A> {
+        KvHandler {
+            store: self,
+            view: self.tree.view(),
+            // SAFETY: the KvStore::new contract — all mutation goes
+            // through handlers, and the index's cell reservation keeps
+            // concurrent writers on disjoint words.
+            writer: unsafe { self.tree.writer() },
+            idxs: Vec::with_capacity(self.cell_words),
+            vals: Vec::with_capacity(self.cell_words),
+        }
+    }
+
+    /// Largest value (in bytes) a cell can hold.
+    pub fn max_value_len(&self) -> usize {
+        self.max_val
+    }
+
+    /// Total cell capacity (the keyspace can hold at most this many
+    /// live keys, minus cells transiently reserved by in-flight puts).
+    pub fn capacity(&self) -> usize {
+        self.ncells
+    }
+
+    /// Live key count.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().map.len()
+    }
+
+    /// True when no keys are live.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the operation counters.
+    pub fn counters(&self) -> KvCounters {
+        KvCounters {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            scans: self.scans.load(Ordering::Relaxed),
+            read_retries: self.read_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Retained events at or after `from_seq`, up to `max` of them.
+    /// Pure index operation, so it lives on the store (any thread may
+    /// call it without a handler).
+    pub fn watch(&self, from_seq: u64, max: usize) -> WatchBatch {
+        let ix = self.index.lock().unwrap();
+        let events: Vec<KvEvent> = ix
+            .events
+            .buf
+            .iter()
+            .filter(|e| e.seq >= from_seq)
+            .take(max)
+            .cloned()
+            .collect();
+        let next_seq = events
+            .last()
+            .map(|e| e.seq + 1)
+            .unwrap_or_else(|| from_seq.max(ix.events.next_seq));
+        WatchBatch {
+            events,
+            first_seq_available: ix.events.first_seq,
+            next_seq,
+        }
+    }
+}
+
+/// A serving handle: the store plus thread-local tree accessors. Not
+/// `Sync` — create one per serving thread with [`KvStore::handler`].
+pub struct KvHandler<'s, 't, 'a, A: BlockAlloc> {
+    store: &'s KvStore<'t, 'a, A>,
+    view: TreeView<'t, 'a, u64, A>,
+    writer: TreeWriter<'t, 'a, u64, A>,
+    /// Scratch: the current cell's word indices.
+    idxs: Vec<usize>,
+    /// Scratch: the current cell's outgoing words.
+    vals: Vec<u64>,
+}
+
+impl<'s, 't, 'a, A: BlockAlloc> KvHandler<'s, 't, 'a, A> {
+    /// The store this handler serves.
+    pub fn store(&self) -> &'s KvStore<'t, 'a, A> {
+        self.store
+    }
+
+    /// Unpin this handler's epoch slots. Call before blocking (e.g. on
+    /// an empty request queue) so reclamation never waits on an idle
+    /// handler; the next operation re-pins automatically.
+    pub fn park(&self) {
+        self.view.park();
+        self.writer.park();
+    }
+
+    /// Demand faults this handler's accessors took (evicted leaves
+    /// paged back in on its read/write path).
+    pub fn faults(&self) -> u64 {
+        self.view.faults() + self.writer.faults()
+    }
+
+    fn fill_idxs(&mut self, cell: u32) {
+        let base = cell as usize * self.store.cell_words;
+        self.idxs.clear();
+        self.idxs.extend(base..base + self.store.cell_words);
+    }
+
+    /// Read `cell`'s words seqlock-atomically (the whole cell is one
+    /// leaf run, so the bracket covers it).
+    fn read_cell(&mut self, cell: u32) -> Result<Vec<u64>> {
+        self.fill_idxs(cell);
+        self.view.get_batch(&self.idxs)
+    }
+
+    /// Stamp + write `cell` in one seqlock-held batch.
+    fn write_cell(&mut self, cell: u32, rev: u64, value: &[u8]) -> Result<()> {
+        self.fill_idxs(cell);
+        self.vals.clear();
+        self.vals.push(rev);
+        self.vals.push(value.len() as u64);
+        for chunk in value.chunks(8) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            self.vals.push(u64::from_le_bytes(b));
+        }
+        // Zero-pad so recycled cells never leak a previous value's
+        // tail bytes into a longer successor.
+        self.vals.resize(self.store.cell_words, 0);
+        let (idxs, vals) = (&self.idxs, &self.vals);
+        self.writer.set_batch(idxs, vals)
+    }
+
+    /// Point read: the value and its revision, or `None` for a missing
+    /// key.
+    pub fn get(&mut self, key: &[u8]) -> Result<Option<(Vec<u8>, u64)>> {
+        self.store.gets.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let slot = {
+                let ix = self.store.index.lock().unwrap();
+                match ix.map.get(key) {
+                    None => return Ok(None),
+                    Some(s) => *s,
+                }
+            };
+            let words = self.read_cell(slot.cell)?;
+            if words[0] == slot.rev && words[1] == slot.len as u64 {
+                return Ok(Some((unpack(&words[CELL_HEADER_WORDS..], slot.len as usize), slot.rev)));
+            }
+            // The cell was recycled by a later put between our index
+            // snapshot and the read; re-resolve from the index.
+            self.store.read_retries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Create or overwrite `key`, returning the committed revision.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> Result<u64> {
+        if key.is_empty() {
+            return Err(Error::Config("kv: empty key".into()));
+        }
+        if value.len() > self.store.max_val {
+            return Err(Error::Config(format!(
+                "kv: value of {} bytes exceeds the {}-byte cell payload",
+                value.len(),
+                self.store.max_val
+            )));
+        }
+        // Phase 1: reserve a fresh cell and revision.
+        let (cell, rev) = {
+            let mut ix = self.store.index.lock().unwrap();
+            let cell = ix.free.pop().ok_or_else(|| {
+                Error::Config(format!("kv: keyspace full ({} cells)", self.store.ncells))
+            })?;
+            let rev = ix.next_rev;
+            ix.next_rev += 1;
+            (cell, rev)
+        };
+        // Phase 2: write the cell outside the lock (write faults on an
+        // evicted leaf land here, off the index's critical path).
+        if let Err(e) = self.write_cell(cell, rev, value) {
+            // Roll the reservation back; the failed cell's contents
+            // are unreferenced garbage either way.
+            self.store.index.lock().unwrap().free.push(cell);
+            return Err(e);
+        }
+        // Phase 3: commit.
+        let mut ix = self.store.index.lock().unwrap();
+        let old = ix.map.insert(
+            key.to_vec(),
+            Slot { cell, rev, len: value.len() as u32 },
+        );
+        if let Some(o) = old {
+            ix.free.push(o.cell);
+        }
+        ix.events.push(EventKind::Put, key, rev);
+        drop(ix);
+        self.store.puts.fetch_add(1, Ordering::Relaxed);
+        Ok(rev)
+    }
+
+    /// Remove `key`, returning the revision of the entry it removed
+    /// (or `None` when the key was absent).
+    pub fn delete(&mut self, key: &[u8]) -> Result<Option<u64>> {
+        let mut ix = self.store.index.lock().unwrap();
+        match ix.map.remove(key) {
+            None => Ok(None),
+            Some(s) => {
+                ix.free.push(s.cell);
+                let rev = ix.next_rev;
+                ix.next_rev += 1;
+                ix.events.push(EventKind::Delete, key, rev);
+                drop(ix);
+                self.store.deletes.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(s.rev))
+            }
+        }
+    }
+
+    /// Keys in `[start, end)` (all keys from `start` when `end` is
+    /// empty), at most `limit` of them (unlimited when 0), as
+    /// `(key, value, rev)` triples in key order.
+    ///
+    /// The key set is snapshotted under the index lock; values are
+    /// then read lock-free with per-entry stamp validation. Entries
+    /// deleted between snapshot and read are dropped, so fewer than
+    /// `limit` rows can come back even when more keys matched.
+    pub fn range(
+        &mut self,
+        start: &[u8],
+        end: &[u8],
+        limit: usize,
+    ) -> Result<Vec<(Vec<u8>, Vec<u8>, u64)>> {
+        self.store.scans.fetch_add(1, Ordering::Relaxed);
+        if !end.is_empty() && end <= start {
+            return Ok(Vec::new());
+        }
+        let snap: Vec<(Vec<u8>, Slot)> = {
+            let ix = self.store.index.lock().unwrap();
+            let upper = if end.is_empty() {
+                Bound::Unbounded
+            } else {
+                Bound::Excluded(end.to_vec())
+            };
+            let iter = ix
+                .map
+                .range((Bound::Included(start.to_vec()), upper))
+                .map(|(k, s)| (k.clone(), *s));
+            if limit == 0 {
+                iter.collect()
+            } else {
+                iter.take(limit).collect()
+            }
+        };
+        let mut out = Vec::with_capacity(snap.len());
+        for (key, mut slot) in snap {
+            loop {
+                let words = self.read_cell(slot.cell)?;
+                if words[0] == slot.rev && words[1] == slot.len as u64 {
+                    out.push((
+                        key,
+                        unpack(&words[CELL_HEADER_WORDS..], slot.len as usize),
+                        slot.rev,
+                    ));
+                    break;
+                }
+                self.store.read_retries.fetch_add(1, Ordering::Relaxed);
+                match self.store.index.lock().unwrap().map.get(&key) {
+                    // Deleted since the snapshot: drop the row.
+                    None => break,
+                    Some(s) => slot = *s,
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Unpack `len` bytes from LE-packed words.
+fn unpack(words: &[u64], len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(words.len() * 8);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::BlockAllocator;
+
+    /// 4 KB blocks → 512 u64 per leaf; 16-word cells → 32 cells/leaf.
+    fn harness() -> (BlockAllocator, usize) {
+        (BlockAllocator::new(4096, 64).unwrap(), 16)
+    }
+
+    #[test]
+    fn crud_roundtrip() {
+        let (alloc, cw) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 4 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, cw, 64) }.unwrap();
+        let mut h = store.handler();
+
+        assert_eq!(h.get(b"missing").unwrap(), None);
+        let r1 = h.put(b"alpha", b"one").unwrap();
+        let r2 = h.put(b"beta", b"two-two").unwrap();
+        assert!(r2 > r1);
+        assert_eq!(h.get(b"alpha").unwrap(), Some((b"one".to_vec(), r1)));
+        assert_eq!(h.get(b"beta").unwrap(), Some((b"two-two".to_vec(), r2)));
+
+        // Overwrite bumps the revision and frees the old cell.
+        let r3 = h.put(b"alpha", b"ONE!").unwrap();
+        assert!(r3 > r2);
+        assert_eq!(h.get(b"alpha").unwrap(), Some((b"ONE!".to_vec(), r3)));
+
+        assert_eq!(h.delete(b"alpha").unwrap(), Some(r3));
+        assert_eq!(h.delete(b"alpha").unwrap(), None);
+        assert_eq!(h.get(b"alpha").unwrap(), None);
+        assert_eq!(store.len(), 1);
+
+        let c = store.counters();
+        assert_eq!(c.puts, 3);
+        assert_eq!(c.deletes, 1);
+        assert_eq!(c.read_retries, 0);
+    }
+
+    #[test]
+    fn empty_and_max_len_values() {
+        let (alloc, cw) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 2 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, cw, 8) }.unwrap();
+        let mut h = store.handler();
+        assert_eq!(store.max_value_len(), (cw - 2) * 8);
+
+        h.put(b"empty", b"").unwrap();
+        assert_eq!(h.get(b"empty").unwrap().unwrap().0, b"".to_vec());
+
+        let fat = vec![0xA5u8; store.max_value_len()];
+        h.put(b"fat", &fat).unwrap();
+        assert_eq!(h.get(b"fat").unwrap().unwrap().0, fat);
+
+        let too_fat = vec![0u8; store.max_value_len() + 1];
+        assert!(h.put(b"nope", &too_fat).is_err());
+        assert!(h.put(b"", b"x").is_err());
+    }
+
+    #[test]
+    fn recycled_cells_do_not_leak_previous_tails() {
+        let (alloc, cw) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, cw, 8) }.unwrap();
+        let mut h = store.handler();
+        // Long value, delete, then a short value likely reuses the cell.
+        h.put(b"k", &vec![0xFFu8; store.max_value_len()]).unwrap();
+        h.delete(b"k").unwrap();
+        h.put(b"k", b"ab").unwrap();
+        assert_eq!(h.get(b"k").unwrap().unwrap().0, b"ab".to_vec());
+    }
+
+    #[test]
+    fn keyspace_full_is_typed_and_recoverable() {
+        let (alloc, _) = harness();
+        // One leaf of 512 words at 128-word cells: exactly 4 cells.
+        let tree = TreeArray::<u64, _>::new(&alloc, 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, 128, 8) }.unwrap();
+        assert_eq!(store.capacity(), 4);
+        let mut h = store.handler();
+        for i in 0..4u8 {
+            h.put(&[i + 1], b"v").unwrap();
+        }
+        assert!(matches!(h.put(b"overflow", b"v"), Err(Error::Config(_))));
+        // Deleting frees a cell and the keyspace accepts writes again.
+        h.delete(&[1]).unwrap();
+        h.put(b"overflow", b"v").unwrap();
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn range_bounds_and_limit() {
+        let (alloc, cw) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 2 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, cw, 8) }.unwrap();
+        let mut h = store.handler();
+        for k in [b"a", b"b", b"c", b"d", b"e"] {
+            h.put(k, k).unwrap();
+        }
+        let rows = h.range(b"b", b"e", 0).unwrap();
+        assert_eq!(
+            rows.iter().map(|(k, _, _)| k.clone()).collect::<Vec<_>>(),
+            vec![b"b".to_vec(), b"c".to_vec(), b"d".to_vec()]
+        );
+        for (k, v, _) in &rows {
+            assert_eq!(k, v);
+        }
+        // Limit truncates in key order.
+        let rows = h.range(b"a", b"", 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, b"a".to_vec());
+        // Inverted or empty window: no rows, no error.
+        assert!(h.range(b"e", b"b", 0).unwrap().is_empty());
+        assert!(h.range(b"c", b"c", 0).unwrap().is_empty());
+        // Open upper bound reaches the last key.
+        assert_eq!(h.range(b"e", b"", 0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn watch_ring_replays_and_drops_oldest() {
+        let (alloc, cw) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 2 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, cw, 4) }.unwrap();
+        let mut h = store.handler();
+        h.put(b"a", b"1").unwrap(); // seq 0
+        h.put(b"b", b"2").unwrap(); // seq 1
+        h.delete(b"a").unwrap(); // seq 2
+
+        let w = store.watch(0, 100);
+        assert_eq!(w.first_seq_available, 0);
+        assert_eq!(w.next_seq, 3);
+        assert_eq!(w.events.len(), 3);
+        assert_eq!(w.events[0].kind, EventKind::Put);
+        assert_eq!(w.events[2].kind, EventKind::Delete);
+        assert_eq!(w.events[2].key, b"a".to_vec());
+        // Revisions in the stream are strictly increasing.
+        assert!(w.events.windows(2).all(|p| p[1].rev > p[0].rev));
+
+        // Overflow the 4-slot ring: oldest events fall off and the
+        // loss is detectable via first_seq_available.
+        for i in 0..6u8 {
+            h.put(&[b'x', i], b"v").unwrap(); // seqs 3..=8
+        }
+        let w = store.watch(0, 100);
+        assert!(w.first_seq_available > 0, "ring must have dropped seq 0");
+        assert_eq!(w.events.len(), 4);
+        assert_eq!(w.events.last().unwrap().seq, 8);
+        assert_eq!(w.next_seq, 9);
+
+        // max bounds the batch; next_seq resumes mid-ring.
+        let w1 = store.watch(w.first_seq_available, 2);
+        assert_eq!(w1.events.len(), 2);
+        let w2 = store.watch(w1.next_seq, 100);
+        assert_eq!(w2.events.len(), 2);
+        // Asking beyond the end returns an empty batch, not an error.
+        let w3 = store.watch(w2.next_seq, 100);
+        assert!(w3.events.is_empty());
+        assert_eq!(w3.next_seq, w2.next_seq);
+    }
+
+    #[test]
+    fn config_errors_are_typed() {
+        let (alloc, _) = harness();
+        let tree = TreeArray::<u64, _>::new(&alloc, 512).unwrap();
+        // 7 does not divide 512.
+        assert!(unsafe { KvStore::new(&tree, 7, 8) }.is_err());
+        // No payload room.
+        assert!(unsafe { KvStore::new(&tree, 2, 8) }.is_err());
+    }
+
+    #[test]
+    fn concurrent_handlers_share_the_store() {
+        let alloc = BlockAllocator::new(4096, 64).unwrap();
+        // 32 leaves -> 1024 cells, comfortably above the ~408 distinct
+        // keys the four threads write.
+        let tree = TreeArray::<u64, _>::new(&alloc, 32 * 512).unwrap();
+        let store = unsafe { KvStore::new(&tree, 16, 1024) }.unwrap();
+        let commits = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let (store, commits) = (&store, &commits);
+                s.spawn(move || {
+                    let mut h = store.handler();
+                    for i in 0..200u64 {
+                        // Half the keys are shared across threads, so
+                        // same-key put races and read-retries happen.
+                        let k = if i % 2 == 0 { i % 16 } else { t * 1000 + i };
+                        let key = k.to_be_bytes();
+                        let rev = h.put(&key, &k.to_le_bytes()).unwrap();
+                        commits.fetch_add((rev > 0) as u64, Ordering::Relaxed);
+                        let (v, _) = h.get(&key).unwrap().expect("just wrote it");
+                        // Shared keys always hold SOME thread's write of
+                        // the same k, and k determines the value.
+                        assert_eq!(v, k.to_le_bytes().to_vec());
+                    }
+                    h.park();
+                });
+            }
+        });
+        assert_eq!(commits.load(Ordering::Relaxed), 4 * 200);
+        // Every key readable at the end; free list + live cells add up.
+        let mut h = store.handler();
+        let rows = h.range(b"", b"", 0).unwrap();
+        assert_eq!(rows.len(), store.len());
+        drop(h);
+        drop(store);
+        drop(tree);
+        assert_eq!(alloc.stats().allocated, 0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Length-prefixed binary codec for [`Request`]/[`Response`].
+//!
+//! One tag byte, little-endian fixed-width integers, `u32`
+//! length-prefixed byte strings. Decoding is a checked cursor: any
+//! truncation, unknown tag, or trailing garbage is a typed `Err` —
+//! never a panic and never a partial value — so a server can feed it
+//! hostile bytes. The TCP transport ([`super::net`]) frames these
+//! encodings; they also make deterministic replay logs.
+
+use super::store::{EventKind, KvEvent};
+use super::transport::{Request, Response};
+
+/// Codec result: the error is a human-readable reason.
+pub type WireResult<T> = std::result::Result<T, String>;
+
+const REQ_GET: u8 = 1;
+const REQ_PUT: u8 = 2;
+const REQ_DELETE: u8 = 3;
+const REQ_RANGE: u8 = 4;
+const REQ_WATCH: u8 = 5;
+
+const RESP_VALUE: u8 = 1;
+const RESP_COMMITTED: u8 = 2;
+const RESP_DELETED: u8 = 3;
+const RESP_ENTRIES: u8 = 4;
+const RESP_EVENTS: u8 = 5;
+const RESP_ERROR: u8 = 6;
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => out.push(0),
+        Some(v) => {
+            out.push(1);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Encode a request.
+pub fn encode_request(r: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match r {
+        Request::Get { key } => {
+            out.push(REQ_GET);
+            put_bytes(&mut out, key);
+        }
+        Request::Put { key, value } => {
+            out.push(REQ_PUT);
+            put_bytes(&mut out, key);
+            put_bytes(&mut out, value);
+        }
+        Request::Delete { key } => {
+            out.push(REQ_DELETE);
+            put_bytes(&mut out, key);
+        }
+        Request::Range { start, end, limit } => {
+            out.push(REQ_RANGE);
+            put_bytes(&mut out, start);
+            put_bytes(&mut out, end);
+            out.extend_from_slice(&limit.to_le_bytes());
+        }
+        Request::Watch { from_seq, max } => {
+            out.push(REQ_WATCH);
+            out.extend_from_slice(&from_seq.to_le_bytes());
+            out.extend_from_slice(&max.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Encode a response.
+pub fn encode_response(r: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match r {
+        Response::Value { value, rev } => {
+            out.push(RESP_VALUE);
+            match value {
+                None => out.push(0),
+                Some(v) => {
+                    out.push(1);
+                    put_bytes(&mut out, v);
+                }
+            }
+            out.extend_from_slice(&rev.to_le_bytes());
+        }
+        Response::Committed { rev } => {
+            out.push(RESP_COMMITTED);
+            out.extend_from_slice(&rev.to_le_bytes());
+        }
+        Response::Deleted { rev } => {
+            out.push(RESP_DELETED);
+            put_opt_u64(&mut out, *rev);
+        }
+        Response::Entries { entries } => {
+            out.push(RESP_ENTRIES);
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for (k, v, rev) in entries {
+                put_bytes(&mut out, k);
+                put_bytes(&mut out, v);
+                out.extend_from_slice(&rev.to_le_bytes());
+            }
+        }
+        Response::Events { events, first_seq_available, next_seq } => {
+            out.push(RESP_EVENTS);
+            out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+            for e in events {
+                out.extend_from_slice(&e.seq.to_le_bytes());
+                out.push(match e.kind {
+                    EventKind::Put => 0,
+                    EventKind::Delete => 1,
+                });
+                put_bytes(&mut out, &e.key);
+                out.extend_from_slice(&e.rev.to_le_bytes());
+            }
+            out.extend_from_slice(&first_seq_available.to_le_bytes());
+            out.extend_from_slice(&next_seq.to_le_bytes());
+        }
+        Response::Error { message } => {
+            out.push(RESP_ERROR);
+            put_bytes(&mut out, message.as_bytes());
+        }
+    }
+    out
+}
+
+/// Bounds-checked read cursor over untrusted bytes.
+struct Cursor<'b> {
+    b: &'b [u8],
+    i: usize,
+}
+
+impl<'b> Cursor<'b> {
+    fn new(b: &'b [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> WireResult<&'b [u8]> {
+        let end = self.i.checked_add(n).ok_or("length overflow")?;
+        let s = self.b.get(self.i..end).ok_or("truncated message")?;
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> WireResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> WireResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> WireResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> WireResult<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn opt_u64(&mut self) -> WireResult<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            f => Err(format!("bad option flag {f}")),
+        }
+    }
+
+    fn done(&self) -> WireResult<()> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes", self.b.len() - self.i))
+        }
+    }
+}
+
+/// Decode a request; rejects truncation, unknown tags, and trailing
+/// bytes.
+pub fn decode_request(b: &[u8]) -> WireResult<Request> {
+    let mut c = Cursor::new(b);
+    let req = match c.u8()? {
+        REQ_GET => Request::Get { key: c.bytes()? },
+        REQ_PUT => Request::Put { key: c.bytes()?, value: c.bytes()? },
+        REQ_DELETE => Request::Delete { key: c.bytes()? },
+        REQ_RANGE => Request::Range { start: c.bytes()?, end: c.bytes()?, limit: c.u32()? },
+        REQ_WATCH => Request::Watch { from_seq: c.u64()?, max: c.u32()? },
+        t => return Err(format!("unknown request tag {t}")),
+    };
+    c.done()?;
+    Ok(req)
+}
+
+/// Decode a response; same guarantees as [`decode_request`].
+pub fn decode_response(b: &[u8]) -> WireResult<Response> {
+    let mut c = Cursor::new(b);
+    let resp = match c.u8()? {
+        RESP_VALUE => {
+            let value = match c.u8()? {
+                0 => None,
+                1 => Some(c.bytes()?),
+                f => Err(format!("bad option flag {f}"))?,
+            };
+            Response::Value { value, rev: c.u64()? }
+        }
+        RESP_COMMITTED => Response::Committed { rev: c.u64()? },
+        RESP_DELETED => Response::Deleted { rev: c.opt_u64()? },
+        RESP_ENTRIES => {
+            let n = c.u32()?;
+            let mut entries = Vec::new();
+            for _ in 0..n {
+                let k = c.bytes()?;
+                let v = c.bytes()?;
+                let rev = c.u64()?;
+                entries.push((k, v, rev));
+            }
+            Response::Entries { entries }
+        }
+        RESP_EVENTS => {
+            let n = c.u32()?;
+            let mut events = Vec::new();
+            for _ in 0..n {
+                let seq = c.u64()?;
+                let kind = match c.u8()? {
+                    0 => EventKind::Put,
+                    1 => EventKind::Delete,
+                    k => return Err(format!("bad event kind {k}")),
+                };
+                let key = c.bytes()?;
+                let rev = c.u64()?;
+                events.push(KvEvent { seq, kind, key, rev });
+            }
+            Response::Events {
+                events,
+                first_seq_available: c.u64()?,
+                next_seq: c.u64()?,
+            }
+        }
+        RESP_ERROR => Response::Error {
+            message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+        },
+        t => return Err(format!("unknown response tag {t}")),
+    };
+    c.done()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_requests() -> Vec<Request> {
+        vec![
+            Request::Get { key: b"k".to_vec() },
+            Request::Get { key: Vec::new() },
+            Request::Put { key: b"key".to_vec(), value: vec![0, 1, 2, 255] },
+            Request::Put { key: b"k".to_vec(), value: Vec::new() },
+            Request::Delete { key: b"gone".to_vec() },
+            Request::Range { start: b"a".to_vec(), end: b"z".to_vec(), limit: 100 },
+            Request::Range { start: Vec::new(), end: Vec::new(), limit: 0 },
+            Request::Watch { from_seq: u64::MAX, max: 1 },
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::Value { value: Some(vec![9, 8, 7]), rev: 42 },
+            Response::Value { value: None, rev: 0 },
+            Response::Committed { rev: u64::MAX },
+            Response::Deleted { rev: Some(7) },
+            Response::Deleted { rev: None },
+            Response::Entries {
+                entries: vec![
+                    (b"a".to_vec(), b"1".to_vec(), 1),
+                    (b"b".to_vec(), Vec::new(), 2),
+                ],
+            },
+            Response::Entries { entries: Vec::new() },
+            Response::Events {
+                events: vec![
+                    KvEvent { seq: 0, kind: EventKind::Put, key: b"x".to_vec(), rev: 1 },
+                    KvEvent { seq: 1, kind: EventKind::Delete, key: b"x".to_vec(), rev: 2 },
+                ],
+                first_seq_available: 0,
+                next_seq: 2,
+            },
+            Response::Error { message: "kv: keyspace full (64 cells)".into() },
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for r in sample_requests() {
+            let enc = encode_request(&r);
+            assert_eq!(decode_request(&enc).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for r in sample_responses() {
+            let enc = encode_response(&r);
+            assert_eq!(decode_response(&enc).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        for r in sample_requests() {
+            let enc = encode_request(&r);
+            for cut in 0..enc.len() {
+                assert!(decode_request(&enc[..cut]).is_err(), "{r:?} cut at {cut}");
+            }
+        }
+        for r in sample_responses() {
+            let enc = encode_response(&r);
+            for cut in 0..enc.len() {
+                assert!(decode_response(&enc[..cut]).is_err(), "{r:?} cut at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        // Unknown tags.
+        assert!(decode_request(&[99]).is_err());
+        assert!(decode_response(&[99]).is_err());
+        // Trailing bytes after a well-formed message.
+        let mut enc = encode_request(&Request::Get { key: b"k".to_vec() });
+        enc.push(0);
+        assert!(decode_request(&enc).is_err());
+        // Bad option flag / event kind.
+        let mut enc = encode_response(&Response::Deleted { rev: None });
+        enc[1] = 7;
+        assert!(decode_response(&enc).is_err());
+        // A length prefix far beyond the buffer.
+        let mut enc = encode_request(&Request::Delete { key: b"abc".to_vec() });
+        enc[1] = 0xFF;
+        enc[2] = 0xFF;
+        assert!(decode_request(&enc).is_err());
+        // Empty input.
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_response(&[]).is_err());
+    }
+}

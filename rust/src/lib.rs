@@ -44,6 +44,15 @@
 //!   GUPS, red–black tree, Black-Scholes, a deepsjeng-like hash probe,
 //!   and the recursive-Fibonacci stack microbenchmark. All tree-layout
 //!   variants accept any [`pmem::BlockAlloc`] implementation.
+//! * [`kv`] — **pallas-kv**, the first end-to-end service consumer of
+//!   the stack: an etcd-like keyspace (get/put/delete/range plus a
+//!   bounded watch event ring) whose values live in [`trees::TreeArray`]
+//!   cells behind seqlock-stamped out-of-place commits, served over a
+//!   pluggable [`kv::Transport`] (in-process channels by default, TCP
+//!   behind the `net` feature) and driven by an open-loop load
+//!   generator with zipfian/uniform key mixes recording per-op latency
+//!   into [`telemetry::LogHistogram`] — mmd compaction, eviction, and
+//!   software page faults all running underneath one latency SLO.
 //! * [`coordinator`] — experiment registry, runner, thread pool, block
 //!   batcher, and paper-style report formatting. Includes the
 //!   multi-threaded experiments the sharded allocator enables
@@ -104,6 +113,7 @@ pub mod bench_utils;
 pub mod cli;
 pub mod coordinator;
 pub mod error;
+pub mod kv;
 pub mod memsim;
 pub mod mmd;
 pub mod pmem;

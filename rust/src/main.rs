@@ -55,7 +55,8 @@ fn print_usage() {
            --threads N    sweep parallelism\n\
            --seed N       workload RNG seed\n\
            --markdown     print tables as markdown\n\
-           --json PATH    also write a machine-readable results file"
+           --json PATH    also write a machine-readable results file\n\
+           --kv-rate R    kv-serve open-loop arrival rate in ops/s (default 25000)"
     );
 }
 
@@ -83,6 +84,14 @@ fn cmd_run(cli: &Cli) -> i32 {
     cfg.threads = cli.flag_u64("threads", cfg.threads as u64).unwrap_or(8) as usize;
     cfg.seed = cli.flag_u64("seed", cfg.seed).unwrap_or(cfg.seed);
     cfg.model = CostModel::default();
+    match cli.flag_f64("kv-rate", 0.0) {
+        Ok(rate) if rate > 0.0 => std::env::set_var("NVM_KV_RATE", format!("{rate}")),
+        Ok(_) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    }
     println!(
         "threads: {} (default would be {}: available cores, fallback 4, capped at 8)",
         cfg.threads,

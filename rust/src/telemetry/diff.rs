@@ -8,14 +8,30 @@
 //! are *unchanged*; disjoint intervals are judged by the metric's
 //! declared direction — a worse disjoint mean is a **regression**.
 //! Verdict flips from PASS to FAIL always count as regressions.
+//!
+//! Histogram-backed metrics additionally export their bucket arrays,
+//! and overlapping means are re-examined at the bucket level: a
+//! reconstructed quantile (p50/p90/p99/p999) that moved by more than
+//! [`DIST_SHIFT_FLOOR`] flags a **distribution shift** even when the
+//! means agree — a handful of 10x-slower ops in a hundred thousand
+//! barely moves a mean but is exactly what a tail-latency gate exists
+//! to catch.
 
 use std::fmt;
 
-use super::results::{Direction, ResultsFile, Summary};
+use super::results::{Direction, MetricRecord, ResultsFile, Summary};
+use super::stat::percentile_rank;
 
 /// Relative margin used when a metric has no CI of its own (single
 /// sample, or percentiles derived from a histogram): ±5% of the mean.
 pub const NOISE_FLOOR: f64 = 0.05;
+
+/// Minimum relative shift of a reconstructed quantile before a
+/// bucket-level comparison calls a distribution change. Log-histogram
+/// buckets carry up to ~6.25% quantization error per side; 25% keeps
+/// plenty of headroom above the combined worst case while still
+/// catching a tail that moved a bucket decade.
+pub const DIST_SHIFT_FLOOR: f64 = 0.25;
 
 /// What happened to one metric between the two files.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,7 +137,7 @@ impl DiffReport {
             for nm in &nr.metrics {
                 let om = or.and_then(|r| r.metrics.iter().find(|m| m.name == nm.name));
                 report.metrics.push(match om {
-                    Some(om) => compare_metric(&nr.name, &om.summary, nm),
+                    Some(om) => compare_metric(&nr.name, om, nm),
                     None => MetricDiff {
                         record: nr.name.clone(),
                         metric: nm.name.clone(),
@@ -228,7 +244,55 @@ fn margin(s: &Summary) -> f64 {
     }
 }
 
-fn compare_metric(record: &str, old: &Summary, new_m: &super::results::MetricRecord) -> MetricDiff {
+/// A reconstructed quantile that moved beyond [`DIST_SHIFT_FLOOR`].
+struct Shift {
+    quantile: &'static str,
+    old: u64,
+    new: u64,
+    rel: f64,
+}
+
+/// Nearest-rank quantile over exported `(bucket_low, count)` pairs
+/// (ascending bucket order, as `LogHistogram::buckets` emits them).
+fn bucket_quantile(buckets: &[(u64, u64)], p: f64) -> u64 {
+    let total: u64 = buckets.iter().map(|&(_, c)| c).sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = percentile_rank(p, total);
+    let mut seen = 0u64;
+    for &(lo, c) in buckets {
+        seen += c;
+        if seen >= rank {
+            return lo;
+        }
+    }
+    buckets.last().map(|&(lo, _)| lo).unwrap_or(0)
+}
+
+/// The largest relative quantile shift between two bucket exports, if
+/// any quantile moved beyond the floor. Means can agree to within the
+/// noise floor while the tail moves an order of magnitude — this is
+/// the comparison summary scalars cannot make.
+fn distribution_shift(old: &[(u64, u64)], new: &[(u64, u64)]) -> Option<Shift> {
+    if old.is_empty() || new.is_empty() {
+        return None;
+    }
+    let mut worst: Option<Shift> = None;
+    for (quantile, p) in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99), ("p999", 0.999)] {
+        let (o, n) = (bucket_quantile(old, p), bucket_quantile(new, p));
+        let rel = (n as f64 - o as f64) / (o.max(1) as f64);
+        if rel.abs() > DIST_SHIFT_FLOOR
+            && worst.as_ref().map_or(true, |w| rel.abs() > w.rel.abs())
+        {
+            worst = Some(Shift { quantile, old: o, new: n, rel });
+        }
+    }
+    worst
+}
+
+fn compare_metric(record: &str, old_m: &MetricRecord, new_m: &MetricRecord) -> MetricDiff {
+    let old = &old_m.summary;
     let new = new_m.summary;
     let mut d = MetricDiff {
         record: record.to_string(),
@@ -251,6 +315,26 @@ fn compare_metric(record: &str, old: &Summary, new_m: &super::results::MetricRec
     let (om, nm) = (margin(old), margin(&new));
     let overlap = (old.mean - om).max(new.mean - nm) <= (old.mean + om).min(new.mean + nm);
     if overlap {
+        // Means agree — but when both sides exported histogram
+        // buckets, a quantile can still have moved decades (100 slow
+        // ops in 100k barely dent the mean). Judge the shape too.
+        if let Some(shift) = distribution_shift(&old_m.buckets, &new_m.buckets) {
+            d.outcome = match d.direction {
+                Direction::Info => Outcome::Changed,
+                Direction::Higher if shift.rel < 0.0 => Outcome::Regressed,
+                Direction::Higher => Outcome::Improved,
+                Direction::Lower if shift.rel > 0.0 => Outcome::Regressed,
+                Direction::Lower => Outcome::Improved,
+            };
+            d.detail = format!(
+                "means overlap but distribution shifted: {} {} -> {} raw ({:+.0}%)",
+                shift.quantile,
+                shift.old,
+                shift.new,
+                shift.rel * 100.0
+            );
+            return d;
+        }
         d.outcome = Outcome::Unchanged;
         d.detail = format!(
             "CI overlap: {:.4}±{:.4} vs {:.4}±{:.4}",
@@ -470,6 +554,71 @@ mod tests {
         assert_eq!(d.metrics[0].outcome, Outcome::NoData);
         assert_eq!(d.metrics[1].outcome, Outcome::Changed);
         assert_eq!(d.regressions(), 0);
+    }
+
+    fn hist_of(base: u64, outliers: u64) -> MetricRecord {
+        // 99_900 ops at ~base, 200 at ~outliers: the outliers own the
+        // top ~0.2% of the mass, so p999 sits in their bucket while
+        // the mean barely notices them.
+        let mut h = crate::telemetry::LogHistogram::new();
+        for _ in 0..99_900u64 {
+            h.record(base);
+        }
+        for _ in 0..200u64 {
+            h.record(outliers);
+        }
+        MetricRecord::from_hist("op.latency", "us", Direction::Lower, &h, 1e-3)
+    }
+
+    #[test]
+    fn overlapping_means_but_shifted_tail_is_flagged() {
+        let old = file_with(vec![hist_of(100, 200)], vec![]);
+        let new = file_with(vec![hist_of(100, 4_000)], vec![]);
+        // Means overlap under the ±5% noise floor...
+        let om = old.records[0].metrics[0].summary.mean;
+        let nm = new.records[0].metrics[0].summary.mean;
+        assert!((nm - om) / om < 2.0 * NOISE_FLOOR, "fixture: means must overlap");
+        // ...but the bucket-level comparison sees the p999 move.
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::Regressed);
+        assert!(d.metrics[0].detail.contains("distribution shifted"), "{}", d.metrics[0].detail);
+        assert_eq!(d.regressions(), 1);
+        // The reverse direction is an improvement, not a regression.
+        let d = DiffReport::compare(&new, &old);
+        assert_eq!(d.metrics[0].outcome, Outcome::Improved);
+    }
+
+    #[test]
+    fn identical_buckets_stay_unchanged() {
+        let old = file_with(vec![hist_of(100, 200)], vec![]);
+        let new = file_with(vec![hist_of(100, 200)], vec![]);
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::Unchanged);
+    }
+
+    #[test]
+    fn info_distribution_shift_is_changed_not_regressed() {
+        let mk = |outliers| {
+            let mut m = hist_of(100, outliers);
+            m.direction = Direction::Info;
+            m
+        };
+        let old = file_with(vec![mk(200)], vec![]);
+        let new = file_with(vec![mk(4_000)], vec![]);
+        let d = DiffReport::compare(&old, &new);
+        assert_eq!(d.metrics[0].outcome, Outcome::Changed);
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn bucket_quantile_walks_cumulative_counts() {
+        let buckets = [(10u64, 50u64), (20, 30), (40, 20)];
+        assert_eq!(bucket_quantile(&buckets, 0.25), 10);
+        assert_eq!(bucket_quantile(&buckets, 0.50), 10);
+        assert_eq!(bucket_quantile(&buckets, 0.79), 20);
+        assert_eq!(bucket_quantile(&buckets, 0.81), 40);
+        assert_eq!(bucket_quantile(&buckets, 1.0), 40);
+        assert_eq!(bucket_quantile(&[], 0.5), 0);
     }
 
     #[test]

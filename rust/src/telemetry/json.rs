@@ -348,17 +348,28 @@ impl Parser<'_> {
                         b'u' => {
                             let hi = self.hex4()?;
                             let cp = if (0xD800..0xDC00).contains(&hi) {
-                                // Surrogate pair.
+                                // High surrogate: a low surrogate escape
+                                // MUST follow, and its value must land in
+                                // the low-surrogate range — anything else
+                                // is a malformed pair, not U+FFFD.
                                 if self.eat(b'\\') && self.eat(b'u') {
                                     let lo = self.hex4()?;
-                                    0x10000 + ((hi - 0xD800) << 10) + (lo.wrapping_sub(0xDC00))
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(self.err("unpaired high surrogate"));
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
                                 } else {
                                     return Err(self.err("lone high surrogate"));
                                 }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(self.err("lone low surrogate"));
                             } else {
                                 hi
                             };
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            s.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| self.err("bad \\u escape"))?,
+                            );
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -507,5 +518,36 @@ mod tests {
         assert_eq!(Json::Num(3.0).as_u64(), Some(3));
         assert_eq!(Json::Num(3.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // External producers (python -c 'json.dumps("😀")', jq) emit
+        // astral characters as \u pairs: they must decode to ONE code
+        // point, not replacement chars.
+        let v = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        let v = Json::parse(r#""x😀y""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "x😀y");
+        // First astral code point (U+10000) and a BMP escape alongside.
+        let v = Json::parse(r#""𐀀 µs""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{10000} µs");
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        // Regression: a lone LOW surrogate used to silently decode to
+        // U+FFFD instead of failing the parse.
+        assert!(Json::parse(r#""\udc00""#).is_err());
+        assert!(Json::parse(r#""\udfff x""#).is_err());
+        // Regression: a high surrogate whose following \u escape is not
+        // a low surrogate used to wrap around in u32 arithmetic (debug
+        // overflow panic) instead of erroring. BMP follower:
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+        // ... and a second high surrogate as the follower:
+        assert!(Json::parse("\"\\ud83d\\ud83d\"").is_err());
+        // High surrogate at end of string / not followed by \u at all.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        assert!(Json::parse("\"\\ud83dA\"").is_err());
     }
 }

@@ -70,6 +70,12 @@ pub struct MetricRecord {
     pub samples: Vec<f64>,
     /// Derived statistics (`n == 0` marks a metric with no data).
     pub summary: Summary,
+    /// Log-histogram buckets as `(bucket_low, count)` pairs, present
+    /// only for histogram-backed metrics. Summary scalars alone cannot
+    /// reveal tail-shape shifts; `diff` reconstructs quantiles from
+    /// these. Optional on the wire (absent parses as empty) so files
+    /// written before this field still load.
+    pub buckets: Vec<(u64, u64)>,
 }
 
 impl MetricRecord {
@@ -82,6 +88,7 @@ impl MetricRecord {
             direction,
             samples,
             summary,
+            buckets: Vec::new(),
         }
     }
 
@@ -116,6 +123,7 @@ impl MetricRecord {
             direction,
             samples: Vec::new(),
             summary,
+            buckets: h.buckets(),
         }
     }
 
@@ -487,6 +495,22 @@ fn record_to_json(r: &Record) -> Json {
             Json::Arr(m.samples.iter().map(|v| Json::Num(*v)).collect()),
         );
         mo.set("summary", summary_to_json(&m.summary));
+        if !m.buckets.is_empty() {
+            // Histogram shape rides along as [bucket_low, count] pairs;
+            // omitted entirely for sample-backed metrics so pre-existing
+            // files and records stay byte-identical.
+            mo.set(
+                "buckets",
+                Json::Arr(
+                    m.buckets
+                        .iter()
+                        .map(|&(lo, c)| {
+                            Json::Arr(vec![Json::Num(lo as f64), Json::Num(c as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+        }
         metrics.push(mo);
     }
     o.set("metrics", metrics);
@@ -581,12 +605,31 @@ fn record_from_json(json: &Json) -> Result<Record, String> {
             m.get("summary").ok_or_else(|| ctx("missing summary".into()))?,
         )
         .map_err(ctx)?;
+        // Optional: files written before buckets existed simply lack
+        // the field, which parses as an empty bucket list.
+        let mut buckets = Vec::new();
+        if let Some(b) = m.get("buckets") {
+            for pair in b.as_arr().ok_or_else(|| ctx("buckets not an array".into()))? {
+                let pair = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| ctx("bucket not a [low, count] pair".into()))?;
+                let lo = pair[0]
+                    .as_u64()
+                    .ok_or_else(|| ctx("bucket low not a u64".into()))?;
+                let c = pair[1]
+                    .as_u64()
+                    .ok_or_else(|| ctx("bucket count not a u64".into()))?;
+                buckets.push((lo, c));
+            }
+        }
         r.metrics.push(MetricRecord {
             name: name.to_string(),
             unit: unit.to_string(),
             direction,
             samples,
             summary,
+            buckets,
         });
     }
     r.counters = Metrics::from_json(json.get("counters").ok_or("missing counters")?)?;
@@ -705,6 +748,17 @@ mod tests {
             Direction::Info,
             42.0,
         ));
+        let mut h = LogHistogram::new();
+        for v in [120u64, 130, 140, 9_000] {
+            h.record(v);
+        }
+        r.metric(MetricRecord::from_hist(
+            "fault.latency",
+            "us",
+            Direction::Lower,
+            &h,
+            1e-3,
+        ));
         r.counters.set("tlb.hit_rate", 0.97);
         r.counters.set("epoch.saved_pins", 1234.0);
         r.verdict("isolation_holds", true, "zipfian mrd < 1.10x baseline");
@@ -779,6 +833,31 @@ mod tests {
         let f = fixture();
         assert!(!f.records[0].all_pass());
         assert!(Record::new("x", "bench").all_pass());
+    }
+
+    #[test]
+    fn buckets_survive_roundtrip() {
+        let f = fixture();
+        let hist_metric = &f.records[0].metrics[2];
+        assert!(!hist_metric.buckets.is_empty(), "fixture must carry buckets");
+        let back = ResultsFile::from_json(&Json::parse(&f.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back.records[0].metrics[2].buckets, hist_metric.buckets);
+        // Sample-backed metrics never grow a buckets field on the wire.
+        let text = f.to_json().render();
+        assert_eq!(text.matches("\"buckets\"").count(), 1);
+    }
+
+    #[test]
+    fn metrics_without_buckets_still_parse() {
+        // Files written before the buckets field existed must load
+        // unchanged (the committed BENCH_*.json trajectory).
+        let mut f = fixture();
+        f.records[0].metrics.remove(2);
+        let json = f.to_json().render();
+        assert!(!json.contains("\"buckets\""));
+        let back = ResultsFile::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, f);
+        assert!(back.records[0].metrics.iter().all(|m| m.buckets.is_empty()));
     }
 
     #[test]

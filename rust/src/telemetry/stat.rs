@@ -147,14 +147,48 @@ pub fn t975(df: u64) -> f64 {
     }
 }
 
+/// Nearest-rank of percentile `p` over `n` samples, 1-based: the
+/// smallest rank whose element has at least `p` of the mass at or
+/// below it. One function so [`nearest_rank`] and
+/// [`LogHistogram::percentile`] share the same edge convention:
+/// `p <= 0` is the minimum (rank 1), `p >= 1` the maximum (rank n).
+///
+/// The naive `(p * n).ceil()` misindexes whenever the product lands
+/// one ULP above an exact integer — `0.07 * 100.0` evaluates to
+/// `7.000000000000001`, so `ceil` inflates the rank to 8 and the p7
+/// of `1..=100` reports 8 instead of 7. The fix snaps to the nearest
+/// integer when the product is within a few ULPs of one before
+/// ceiling.
+pub(crate) fn percentile_rank(p: f64, n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    if p <= 0.0 {
+        return 1;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    let exact = p * n as f64;
+    let nearest = exact.round();
+    // `p` carries up to 1/2 ULP of representation error and the
+    // multiply adds another 1/2 ULP; 4 ULPs of slack covers both with
+    // margin while staying far below the 1-unit gap between ranks.
+    let rank = if (exact - nearest).abs() <= 4.0 * f64::EPSILON * exact {
+        nearest
+    } else {
+        exact.ceil()
+    };
+    (rank as u64).clamp(1, n)
+}
+
 /// Nearest-rank percentile of an ascending-sorted slice: the smallest
 /// element with at least `p` of the mass at or below it.
 fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let rank = (p * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+    sorted[(percentile_rank(p, sorted.len() as u64) - 1) as usize]
 }
 
 /// Summarize a sample vector. Empty input summarizes to all zeros
@@ -308,7 +342,7 @@ impl LogHistogram {
         if self.count == 0 {
             return 0;
         }
-        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let rank = percentile_rank(p, self.count);
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -493,5 +527,50 @@ mod tests {
         }
         assert_eq!(r.count(), 4);
         assert_eq!(r.buckets(), buckets);
+    }
+
+    #[test]
+    fn percentile_rank_exact_boundaries() {
+        // Regression: `(p * n).ceil()` inflates the rank whenever the
+        // product lands one ULP above an exact integer (0.07 * 100 =
+        // 7.000000000000001 -> rank 8). Every k/100 percentile of
+        // 1.0..=100.0 must return exactly k.
+        let data: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        for k in 1..=100u32 {
+            let p = k as f64 / 100.0;
+            assert_eq!(nearest_rank(&data, p), k as f64, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_rank_edges() {
+        assert_eq!(percentile_rank(0.0, 5), 1);
+        assert_eq!(percentile_rank(-1.0, 5), 1);
+        assert_eq!(percentile_rank(1.0, 5), 5);
+        assert_eq!(percentile_rank(2.0, 5), 5);
+        assert_eq!(percentile_rank(0.5, 1), 1);
+        assert_eq!(percentile_rank(0.5, 0), 0);
+        let data = [42.0];
+        assert_eq!(nearest_rank(&data, 0.0), 42.0);
+        assert_eq!(nearest_rank(&data, 1.0), 42.0);
+    }
+
+    #[test]
+    fn hist_percentile_boundary_agrees_with_exact() {
+        // Same ULP edge inside LogHistogram::percentile: with seven 1s
+        // and ninety-three 2s, p7 must be the 7th smallest sample (1),
+        // not the 8th (2).
+        let mut h = LogHistogram::new();
+        for _ in 0..7 {
+            h.record(1);
+        }
+        for _ in 0..93 {
+            h.record(2);
+        }
+        assert_eq!(h.percentile(0.07), 1);
+        assert_eq!(h.percentile(0.08), 2);
+        // Edge convention matches nearest_rank: p<=0 -> min, p>=1 -> max.
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(1.0), 2);
     }
 }

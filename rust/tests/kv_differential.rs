@@ -1,0 +1,326 @@
+//! pallas-kv differential oracle: the store vs a plain `BTreeMap`
+//! mirror, under mmd churn and injected transient swap faults.
+//!
+//! One deterministic op thread drives put/get/delete/range against a
+//! [`KvStore`] and a `BTreeMap<key, (value, rev)>` mirror side by side,
+//! comparing every result exactly — while the mmd daemon evicts and
+//! restores the leaves underneath, a chaos reader hammers the same
+//! keyspace through its own handler, and an injector arms single-shot
+//! transient swap faults (always within the retry budget) plus
+//! completion-ordering delays. Because the op thread is the only
+//! writer, the store's visible state is a pure function of the op
+//! sequence — any divergence from the mirror is a bug in the cell
+//! protocol, the fault path, or eviction, not test noise.
+//!
+//! The watch ring is sized to hold the whole history, so replaying it
+//! from sequence 0 must reconstruct exactly the mirror's final keyset
+//! and revisions.
+//!
+//! Runs against both allocator policies. Seeds come from a fixed base
+//! (override with `NVM_PROPTEST_SEED=<n>` to reproduce a reported
+//! case).
+//!
+//! [`KvStore`]: nvm::kv::KvStore
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use nvm::kv::loadgen::{self, KeyDist, LoadgenConfig, MixConfig};
+use nvm::kv::{EventKind, KvServer, KvStore, Request, Response, Transport};
+use nvm::mmd::{MmdConfig, MmdHandle, ThresholdPolicy};
+use nvm::pmem::{BlockAlloc, BlockAllocator, FaultQueue, FaultQueueConfig, ShardedAllocator, SwapPool};
+use nvm::testutil::{FailingBacking, Rng};
+use nvm::trees::{CompactTarget, TreeArray, TreeRegistry};
+
+/// 1 KB blocks keep trees multi-leaf at test sizes (u64 leaf_cap 128).
+const BLOCK: usize = 1024;
+/// 8 cells per 128-word leaf; 112-byte max value.
+const CELL_WORDS: usize = 16;
+/// 24 leaves + root = 25 tree blocks, 192 cells.
+const LEAVES: usize = 24;
+/// Pool budget: tree 25 + scratch 18 = 43 > 40, so with churn active
+/// at least 3 leaves stay parked in swap at all times.
+const CAP: usize = 40;
+const PARKED: usize = 8;
+const SCRATCH: usize = 18;
+/// Key universe — half the cell count, so the freelist never empties
+/// even with an in-flight out-of-place put per handler.
+const NKEYS: u64 = 96;
+const OPS: usize = 4_000;
+
+fn base_seed() -> u64 {
+    std::env::var("NVM_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x4B56) // "KV"
+}
+
+/// The differential run: deterministic ops vs the mirror under churn
+/// and transient swap-fault injection.
+fn run_case<A: BlockAlloc + Sync>(alloc: &A, seed: u64) {
+    let tree = TreeArray::<u64, _>::new(alloc, LEAVES * (BLOCK / 8)).expect("kv diff tree");
+    let registry = TreeRegistry::new();
+    let (backing, ctl) = FailingBacking::new();
+    let swap = SwapPool::with_backing(alloc, backing);
+    let q = FaultQueue::new(
+        &swap,
+        FaultQueueConfig {
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_millis(2),
+            ..FaultQueueConfig::default()
+        },
+    );
+    // SAFETY: cleared below before `q` drops.
+    unsafe { tree.install_faulter(&q) };
+    // SAFETY: all accessors are fault-capable store handlers.
+    let reg_id = unsafe { registry.register_evictable(&tree) };
+
+    // Ring cap covers every put/delete the run can emit, so the final
+    // watch replay sees the complete history.
+    let store = unsafe { KvStore::new(&tree, CELL_WORDS, 2 * OPS) }.expect("kv diff store");
+    let mut mirror: BTreeMap<u64, (Vec<u8>, u64)> = BTreeMap::new();
+
+    // Prefill half the keyspace before parking, so reads fault from
+    // the very first op.
+    {
+        let mut h = store.handler();
+        let mut rng = Rng::new(seed ^ 0xF111);
+        for key in (0..NKEYS).step_by(2) {
+            let val = loadgen::value_for(rng.next_u64(), 48);
+            let rev = h.put(&loadgen::key_bytes(key), &val).expect("prefill put");
+            mirror.insert(key, (val, rev));
+        }
+    }
+    for leaf in 0..PARKED {
+        // SAFETY: the register_evictable contract holds.
+        unsafe { CompactTarget::evict_leaf(&tree, leaf, q.service()) }.expect("park leaf");
+    }
+    alloc.epoch().synchronize(alloc);
+    let scratch = alloc.alloc_many(SCRATCH).expect("resident-budget scratch");
+
+    let stop = AtomicBool::new(false);
+    let st = std::thread::scope(|s| {
+        let (store_r, stop_r, ctl_r) = (&store, &stop, &ctl);
+        q.attach_workers(s, 2);
+        let daemon = MmdHandle::spawn_with_swap(
+            s,
+            alloc,
+            &registry,
+            ThresholdPolicy::default(),
+            MmdConfig {
+                interval: Duration::from_micros(200),
+                tokens_per_tick: 16,
+                ..MmdConfig::default()
+            },
+            &q,
+        );
+        // Chaos reader: non-asserting traffic through its own handler
+        // and translation caches — it must never observe an error or a
+        // panic, but its results are unordered relative to the op
+        // thread, so values are not compared.
+        let chaos = s.spawn(move || {
+            let mut h = store_r.handler();
+            let mut rng = Rng::new(seed ^ 0xC4A0);
+            let mut reads = 0u64;
+            while !stop_r.load(Ordering::Relaxed) {
+                let key = rng.below(NKEYS);
+                if rng.chance(0.85) {
+                    h.get(&loadgen::key_bytes(key)).expect("chaos get errored");
+                } else {
+                    h.range(&loadgen::key_bytes(key), &[], 5).expect("chaos range errored");
+                }
+                reads += 1;
+            }
+            reads
+        });
+        // Transient-fault injector, always within the retry budget.
+        let injector = s.spawn(move || {
+            let mut rng = Rng::new(seed ^ 0xF1A7);
+            while !stop_r.load(Ordering::Relaxed) {
+                ctl_r.fail_nth(1 + rng.below(4));
+                if rng.chance(0.25) {
+                    ctl_r.delay_nth(1 + rng.below(3), Duration::from_micros(200));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            ctl_r.disarm();
+        });
+
+        // The deterministic op thread: this scope's main thread.
+        let mut h = store.handler();
+        let mut rng = Rng::new(seed);
+        for opno in 0..OPS {
+            let key = rng.below(NKEYS);
+            let kb = loadgen::key_bytes(key);
+            match rng.below(100) {
+                // 45% put
+                0..=44 => {
+                    let vlen = rng.below((store.max_value_len() + 1) as u64) as usize;
+                    let mut val = vec![0u8; vlen];
+                    for b in &mut val {
+                        *b = rng.next_u64() as u8;
+                    }
+                    let rev = h.put(&kb, &val).expect("put failed");
+                    if let Some((_, old_rev)) = mirror.get(&key) {
+                        assert!(rev > *old_rev, "op {opno}: rev must advance");
+                    }
+                    mirror.insert(key, (val, rev));
+                }
+                // 35% get
+                45..=79 => {
+                    let got = h.get(&kb).expect("get failed");
+                    let want = mirror.get(&key).map(|(v, r)| (v.clone(), *r));
+                    assert_eq!(got, want, "op {opno}: get({key}) diverged from mirror");
+                }
+                // 10% delete
+                80..=89 => {
+                    let got = h.delete(&kb).expect("delete failed");
+                    let want = mirror.remove(&key).map(|(_, r)| r);
+                    assert_eq!(got, want, "op {opno}: delete({key}) diverged from mirror");
+                }
+                // 10% bounded range
+                _ => {
+                    let span = 1 + rng.below(16);
+                    let limit = rng.below(8) as usize;
+                    let end = loadgen::key_bytes(key.saturating_add(span));
+                    let got = h.range(&kb, &end, limit).expect("range failed");
+                    let want: Vec<(Vec<u8>, Vec<u8>, u64)> = mirror
+                        .range(key..key.saturating_add(span))
+                        .take(if limit == 0 { usize::MAX } else { limit })
+                        .map(|(k, (v, r))| (loadgen::key_bytes(*k).to_vec(), v.clone(), *r))
+                        .collect();
+                    assert_eq!(got, want, "op {opno}: range({key}, +{span}) diverged");
+                }
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        let chaos_reads = chaos.join().unwrap();
+        assert!(chaos_reads > 0, "chaos reader never ran");
+        injector.join().unwrap();
+
+        // Snapshot before shutdown: demand stays accessor-only.
+        let st = q.stats();
+        for b in scratch {
+            alloc.free(b).expect("free scratch");
+        }
+        daemon.shutdown();
+        q.shutdown_workers();
+        st
+    });
+
+    assert_eq!(st.permanent, 0, "transient-only injection must never escalate: {st:?}");
+    assert!(!q.degraded(), "backing is healthy by the end of the run");
+    assert_eq!(registry.swapped_out(), 0, "shutdown must restore every parked leaf");
+    assert!(st.demand > 0, "a churn differential run must take demand faults");
+
+    // Final full-range sweep must equal the mirror exactly.
+    {
+        let mut h = store.handler();
+        let got = h.range(&[], &[], 0).expect("final range");
+        let want: Vec<(Vec<u8>, Vec<u8>, u64)> = mirror
+            .iter()
+            .map(|(k, (v, r))| (loadgen::key_bytes(*k).to_vec(), v.clone(), *r))
+            .collect();
+        assert_eq!(got, want, "final keyspace diverged from mirror");
+    }
+    // Watch replay from sequence 0 must reconstruct the final keyset
+    // and revisions (the ring held the whole history).
+    {
+        let batch = store.watch(0, usize::MAX);
+        assert_eq!(batch.first_seq_available, 0, "ring dropped history");
+        let mut replay: BTreeMap<Vec<u8>, u64> = BTreeMap::new();
+        for e in &batch.events {
+            match e.kind {
+                EventKind::Put => {
+                    replay.insert(e.key.clone(), e.rev);
+                }
+                EventKind::Delete => {
+                    replay.remove(&e.key);
+                }
+            }
+        }
+        let want: BTreeMap<Vec<u8>, u64> = mirror
+            .iter()
+            .map(|(k, (_, r))| (loadgen::key_bytes(*k).to_vec(), *r))
+            .collect();
+        assert_eq!(replay, want, "watch replay diverged from mirror");
+    }
+
+    drop(store);
+    registry.deregister(reg_id);
+    drop(registry);
+    tree.clear_faulter();
+    alloc.epoch().synchronize(alloc);
+    drop(tree);
+    drop(swap);
+    assert_eq!(alloc.stats().allocated, 0, "kv differential leaked blocks");
+}
+
+#[test]
+fn kv_differential_mutex_allocator() {
+    let alloc = BlockAllocator::new(BLOCK, CAP).unwrap();
+    run_case(&alloc, base_seed());
+}
+
+#[test]
+fn kv_differential_sharded_allocator() {
+    let alloc = ShardedAllocator::with_shards(BLOCK, CAP, 2).unwrap();
+    run_case(&alloc, base_seed() ^ 0x5AD);
+}
+
+/// Replaying the same loadgen schedule against two fresh stores must
+/// produce byte-identical final keyspaces (values *and* revisions):
+/// the generator, the transport, and the put path are all
+/// deterministic when there is a single client and a single worker.
+#[test]
+fn loadgen_replay_is_deterministic() {
+    fn serve_once(seed: u64) -> Vec<(Vec<u8>, Vec<u8>, u64)> {
+        let alloc = BlockAllocator::new(BLOCK, 64).unwrap();
+        let tree = TreeArray::<u64, _>::new(&alloc, LEAVES * (BLOCK / 8)).unwrap();
+        let store = unsafe { KvStore::new(&tree, CELL_WORDS, 2 * OPS) }.unwrap();
+        let cfg = LoadgenConfig {
+            ops: 2_000,
+            rate: 0.0,
+            nkeys: NKEYS,
+            val_len: 64,
+            scan_len: 4,
+            dist: KeyDist::Zipfian(0.9),
+            mix: MixConfig { name: "det", get_w: 40, put_w: 50, scan_w: 10 },
+            seed,
+            prefilled: false,
+        };
+        let server = KvServer::new();
+        let entries = std::thread::scope(|s| {
+            let worker = server.worker();
+            let store_r = &store;
+            let wh = s.spawn(move || {
+                let mut h = store_r.handler();
+                worker.run(&mut h)
+            });
+            let out = loadgen::run(&cfg, vec![server.connect()]);
+            assert_eq!(out.errors, 0);
+            assert_eq!(out.verify_failures, 0);
+            let mut t = server.connect();
+            let entries = match t.call(Request::Range { start: vec![], end: vec![], limit: 0 }) {
+                Response::Entries { entries } => entries,
+                other => panic!("unexpected response {other:?}"),
+            };
+            drop(t);
+            drop(server);
+            wh.join().unwrap();
+            entries
+        });
+        drop(store);
+        drop(tree);
+        assert_eq!(alloc.stats().allocated, 0);
+        entries
+    }
+
+    let a = serve_once(7);
+    let b = serve_once(7);
+    assert_eq!(a, b, "same seed must replay to an identical keyspace");
+    assert!(!a.is_empty(), "schedule with 50% puts left the store empty");
+    let c = serve_once(8);
+    assert_ne!(a, c, "different seeds should diverge");
+}
